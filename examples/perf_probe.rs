@@ -1,0 +1,44 @@
+//! §Perf probe: CD epoch consumption + quality vs tolerance. Feeds
+//! EXPERIMENTS.md §Perf.
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::linalg::stats::l2_loss;
+use sqlsq::quant::{lasso, refit, unique::UniqueDecomp, vmatrix::VBasis};
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let data: Vec<f64> = (0..640).map(|_| rng.normal_with(0.0, 0.15)).collect();
+    let u = UniqueDecomp::new(&data).unwrap();
+    let b = VBasis::new(&u.values);
+
+    println!("== tolerance sweep (m=640) ==");
+    for lambda in [1e-4, 1e-3, 1e-2] {
+        // Reference: very tight tolerance, big budget.
+        let tight = lasso::LassoConfig {
+            lambda1: lambda,
+            tol: 1e-13,
+            max_epochs: 20_000,
+            support_patience: 0, // true norm-convergence reference
+            ..Default::default()
+        };
+        let ref_sol = lasso::solve(&b, &u.values, &tight, None).unwrap();
+        let ref_refit = refit::refit_fast(&b, &u.values, &ref_sol.support(), None).unwrap();
+        let ref_loss = l2_loss(&ref_refit.reconstruction, &u.values);
+
+        for tol in [1e-6f64, 1e-7, 1e-8, 1e-10] {
+            let cfg = lasso::LassoConfig { lambda1: lambda, tol, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let sol = lasso::solve(&b, &u.values, &cfg, None).unwrap();
+            let dt = t0.elapsed();
+            let re = refit::refit_fast(&b, &u.values, &sol.support(), None).unwrap();
+            let loss = l2_loss(&re.reconstruction, &u.values);
+            println!(
+                "λ={lambda:.0e} tol={tol:.0e}: epochs={:<5} nnz={:<4} (ref {:<4}) \
+                 refit_loss={loss:.6e} (ref {ref_loss:.6e}) time={dt:?}",
+                sol.epochs,
+                sol.nnz(),
+                ref_sol.nnz()
+            );
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! §Perf probe 2: k-means cost breakdown on large-m inputs (the
+//! nn_compression burst bottleneck).
+
+use sqlsq::cluster::kmeans::{kmeans_1d, KMeansConfig};
+use sqlsq::data::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let mut data: Vec<f64> = (0..200_000).map(|_| rng.normal_with(0.0, 0.1)).collect();
+    // The quantize() path always clusters sorted unique values; do the same.
+    data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (label, tol, restarts) in [
+        ("tol=1e-10,T=10", 1e-10, 10usize),
+        ("tol=1e-6, T=10", 1e-6, 10),
+        ("tol=1e-5, T=10", 1e-5, 10),
+        ("tol=1e-5, T=3", 1e-5, 3),
+    ] {
+        let t0 = std::time::Instant::now();
+        let r = kmeans_1d(
+            &data,
+            None,
+            &KMeansConfig { k: 16, tol, restarts, ..Default::default() },
+        )
+        .unwrap();
+        println!(
+            "{label}: iters={} inertia={:.6} time={:?}",
+            r.iterations,
+            r.inertia,
+            t0.elapsed()
+        );
+    }
+}

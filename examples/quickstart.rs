@@ -1,0 +1,67 @@
+//! Quickstart: quantize one vector with every method in the library and
+//! compare information loss, achieved value counts, and runtime.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::linalg::stats;
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // A vector with visible cluster structure: 4 value groups + repeats.
+    let mut rng = Pcg32::seeded(42);
+    let mut data = Vec::new();
+    for center in [0.1f64, 0.35, 0.6, 0.9] {
+        for _ in 0..60 {
+            data.push(center + rng.normal_with(0.0, 0.015));
+        }
+    }
+    println!(
+        "input: {} values, {} distinct, range [{:.3}, {:.3}]\n",
+        data.len(),
+        stats::distinct_count_exact(&data),
+        stats::min(&data),
+        stats::max(&data)
+    );
+
+    println!(
+        "{:<16} {:>9} {:>9} {:>12} {:>10}",
+        "method", "requested", "achieved", "l2_loss", "time"
+    );
+    println!("{}", "-".repeat(62));
+    for method in QuantMethod::ALL {
+        let opts = QuantOptions {
+            target_values: 4,
+            lambda1: 0.05,       // used by the λ-taking methods
+            lambda2: 2e-4,       // used by l1_l2
+            seed: 7,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = quant::quantize(&data, method, &opts)?;
+        let dt = t0.elapsed();
+        println!(
+            "{:<16} {:>9} {:>9} {:>12.6} {:>10.2?}",
+            method.id(),
+            if method.takes_target_count() { "4".to_string() } else { format!("λ={}", opts.lambda1) },
+            out.distinct_values(),
+            out.l2_loss,
+            dt
+        );
+    }
+
+    // The headline API in three lines:
+    let out = quant::quantize(
+        &data,
+        QuantMethod::ClusterLs,
+        &QuantOptions { target_values: 4, ..Default::default() },
+    )?;
+    println!(
+        "\ncluster_ls levels: {:?}",
+        out.levels.iter().map(|v| (v * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
+    Ok(())
+}

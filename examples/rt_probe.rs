@@ -1,0 +1,20 @@
+use sqlsq::runtime::Executor;
+use sqlsq::data::rng::Pcg32;
+
+fn main() {
+    let mut ex = Executor::open(std::path::Path::new("artifacts")).unwrap();
+    let mut rng = Pcg32::seeded(1);
+    for n in [50usize, 200, 600] {
+        let mut v: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+        let mut d = vec![v[0]];
+        for i in 1..v.len() { d.push(v[i] - v[i-1]); }
+        // warm (compile)
+        let _ = ex.lasso_solve(&v, &d, 0.02, 0.0, 1, 0.0).unwrap();
+        let t0 = std::time::Instant::now();
+        let sol = ex.lasso_solve(&v, &d, 0.02, 0.0, 125, 1e-6).unwrap();
+        println!("n={n}: calls={} converged={} total={:?} per_call={:?}",
+            sol.calls, sol.converged, t0.elapsed(), t0.elapsed()/sol.calls as u32);
+    }
+}

@@ -1,0 +1,102 @@
+//! Serving demo: the coordinator under load — batching, backpressure
+//! (bounded queue + load shedding), the runtime lane, and the metrics
+//! surface.
+//!
+//! ```bash
+//! cargo run --release --example serve_quant
+//! ```
+
+use sqlsq::config::{Config, Engine};
+use sqlsq::coordinator::Coordinator;
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{QuantMethod, QuantOptions};
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let engine = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Engine::Auto
+    } else {
+        Engine::Native
+    };
+
+    // --- steady-state load through the blocking API ---------------------
+    let cfg = Config { engine, workers: 4, max_batch: 16, ..Default::default() };
+    println!("coordinator: {} workers, engine {:?}", cfg.workers, cfg.engine);
+    let coord = Coordinator::start(cfg)?;
+
+    let mut rng = Pcg32::seeded(1);
+    let n_jobs = 300;
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_jobs {
+        let n = [50usize, 200, 600][i % 3];
+        let data: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let method = [
+            QuantMethod::L1LeastSquare,
+            QuantMethod::KMeans,
+            QuantMethod::ClusterLs,
+            QuantMethod::Gmm,
+        ][i % 4];
+        let (_, rx) = coord.submit(
+            data,
+            method,
+            QuantOptions { target_values: 8, lambda1: 0.02, seed: i as u64, ..Default::default() },
+        )?;
+        rxs.push(rx);
+    }
+    let mut ok = 0usize;
+    let mut native = 0usize;
+    let mut runtime = 0usize;
+    for rx in rxs {
+        let r = rx.recv()?;
+        if r.is_ok() {
+            ok += 1;
+        }
+        match r.served_by {
+            sqlsq::coordinator::ServedBy::Native => native += 1,
+            sqlsq::coordinator::ServedBy::Runtime => runtime += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "steady state: {ok}/{n_jobs} ok in {wall:.2?} ({:.1} jobs/s; {native} native, {runtime} runtime)",
+        n_jobs as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", coord.metrics().summary());
+    coord.shutdown();
+
+    // --- overload: tiny queue + try_submit = load shedding ---------------
+    println!("\noverload demo: queue_capacity=4, non-blocking submits");
+    let coord = Coordinator::start(Config {
+        engine: Engine::Native,
+        workers: 1,
+        queue_capacity: 4,
+        max_batch: 2,
+        ..Default::default()
+    })?;
+    let mut accepted = 0usize;
+    let mut shed = 0usize;
+    let mut rxs = Vec::new();
+    for i in 0..200 {
+        let data: Vec<f64> = (0..400).map(|_| rng.uniform(0.0, 1.0)).collect();
+        match coord.try_submit(
+            data,
+            QuantMethod::IterativeL1,
+            QuantOptions { target_values: 4, lambda1: 1e-4, seed: i, ..Default::default() },
+        ) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => shed += 1,
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let snap = coord.shutdown();
+    println!("accepted {accepted}, shed {shed} (rejected={})", snap.rejected);
+    println!("metrics: {}", snap.summary());
+    assert_eq!(snap.rejected as usize, shed);
+    Ok(())
+}

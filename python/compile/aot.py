@@ -1,0 +1,130 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + write the manifest.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` via serialized
+protos) is the interchange format: jax ≥ 0.5 emits HloModuleProtos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs one ``<name>.hlo.txt`` per (graph, shape-bucket) plus
+``manifest.json`` describing shapes/dtypes — the Rust runtime
+(rust/src/runtime/artifact.rs) loads artifacts strictly through the
+manifest.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+#: Shape buckets for the data-dependent dimension m = |unique(w)|
+#: (padded like batch/sequence dims in a serving system; DESIGN §3).
+LASSO_BUCKETS = [64, 256, 1024]
+KMEANS_BUCKETS = [(256, 8), (256, 32), (1024, 8), (1024, 64)]
+GMM_BUCKETS = [(256, 8), (1024, 32)]
+MLP_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(s):
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def build_entries():
+    """(name, jitted fn, example args) for every artifact."""
+    entries = []
+    for m in LASSO_BUCKETS:
+        entries.append(
+            (
+                f"lasso_cd_m{m}",
+                model.lasso_cd_epochs,
+                model.lasso_example_args(m),
+                {"kind": "lasso_cd", "m": m, "epochs_per_call": model.EPOCHS_PER_CALL},
+            )
+        )
+    for m, k in KMEANS_BUCKETS:
+        entries.append(
+            (
+                f"kmeans_m{m}_k{k}",
+                model.kmeans_lloyd,
+                model.kmeans_example_args(m, k),
+                {
+                    "kind": "kmeans",
+                    "m": m,
+                    "k": k,
+                    "iters_per_call": model.LLOYD_ITERS_PER_CALL,
+                },
+            )
+        )
+    for m, k in GMM_BUCKETS:
+        entries.append(
+            (
+                f"gmm_m{m}_k{k}",
+                model.gmm_em,
+                model.gmm_example_args(m, k),
+                {
+                    "kind": "gmm",
+                    "m": m,
+                    "k": k,
+                    "iters_per_call": model.EM_ITERS_PER_CALL,
+                },
+            )
+        )
+    entries.append(
+        (
+            f"mlp_fwd_b{MLP_BATCH}",
+            model.mlp_forward,
+            model.mlp_example_args(MLP_BATCH),
+            {"kind": "mlp_fwd", "batch": MLP_BATCH, "dims": model.MLP_DIMS},
+        )
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower only artifacts whose name contains this")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    for name, fn, example_args, meta in build_entries():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_spec(s) for s in example_args],
+                "meta": meta,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

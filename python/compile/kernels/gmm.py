@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: fused GMM E+M accumulation (one EM step).
+
+The paper's second baseline (soft weight-sharing, refs [15][16]) has the
+same hot-loop shape as k-means: an O(m·k) responsibility computation.
+The kernel tiles points into VMEM blocks, computes log-space
+responsibilities against the (tiny, fully VMEM-resident) component
+parameters, and accumulates the M-step sufficient statistics
+(Σr, Σr·x, Σr·x²) per component; the cheap O(k) M-step finalization
+(divide, variance floor, renormalize, sort) happens in the L2 graph.
+
+Padding: weight-0 points contribute nothing. Lowered with
+``interpret=True`` (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+LOG2PI = 1.8378770664093453
+
+
+def _estep_body(p_ref, cw_ref, mu_ref, var_ref, pi_ref, n_ref, sx_ref, sxx_ref):
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+
+    x = p_ref[...]          # [B]
+    cw = cw_ref[...]        # [B]
+    mu = mu_ref[...]        # [k]
+    var = var_ref[...]      # [k]
+    pi = pi_ref[...]        # [k]
+
+    # log N(x | mu_c, var_c) + log pi_c, broadcast [B, k].
+    d = x[:, None] - mu[None, :]
+    logp = (
+        -0.5 * (d * d / var[None, :] + jnp.log(var)[None, :] + LOG2PI)
+        + jnp.log(jnp.maximum(pi, 1e-30))[None, :]
+    )
+    lse = jax.scipy.special.logsumexp(logp, axis=1, keepdims=True)
+    r = jnp.exp(logp - lse) * cw[:, None]  # weighted responsibilities [B, k]
+
+    n_ref[...] += jnp.sum(r, axis=0)
+    sx_ref[...] += jnp.sum(r * x[:, None], axis=0)
+    sxx_ref[...] += jnp.sum(r * (x * x)[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gmm_accumulate(points, cw, means, variances, weights):
+    """Fused E-step + sufficient-statistic accumulation.
+
+    Args:
+      points:    f32[m] data (m divisible by BLOCK after bucketing).
+      cw:        f32[m] multiplicities (0 = padding).
+      means:     f32[k] component means.
+      variances: f32[k] component variances (> 0).
+      weights:   f32[k] mixing weights.
+
+    Returns:
+      (n f32[k], sx f32[k], sxx f32[k]) — Σr, Σr·x, Σr·x².
+    """
+    m = points.shape[0]
+    k = means.shape[0]
+    block = min(BLOCK, m)
+    assert m % block == 0, f"m={m} must be a multiple of {block}"
+    return pl.pallas_call(
+        _estep_body,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, cw, means, variances, weights)
+
+
+def gmm_em_step(points, cw, means, variances, weights, var_floor):
+    """One full EM step: kernel accumulation + M-step finalization.
+
+    Components whose responsibility mass underflows keep their parameters
+    (the Rust side repairs/collapses as needed). Means are kept sorted
+    with their variances/weights permuted alongside.
+    """
+    n, sx, sxx = gmm_accumulate(points, cw, means, variances, weights)
+    total = jnp.sum(n)
+    ok = n > 1e-12 * jnp.maximum(total, 1e-30)
+    safe_n = jnp.where(ok, n, 1.0)
+    new_mu = jnp.where(ok, sx / safe_n, means)
+    new_var = jnp.where(ok, jnp.maximum(sxx / safe_n - new_mu * new_mu, var_floor), variances)
+    new_pi = jnp.where(ok, n / jnp.maximum(total, 1e-30), weights)
+    new_pi = new_pi / jnp.sum(new_pi)
+    order = jnp.argsort(new_mu)
+    return new_mu[order], new_var[order], new_pi[order]

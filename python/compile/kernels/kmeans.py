@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: fused k-means assign + accumulate (one Lloyd step).
+
+The paper's baseline hot loop is the O(m·k) assignment.  The kernel tiles
+the points into VMEM blocks (`BLOCK` points per grid step) while the
+centroid vector — tiny for scalar quantization — stays wholly
+VMEM-resident; each grid step computes the point×centroid distance
+matrix by broadcast (a VPU kernel: 1-d data has no MXU work), takes the
+argmin, and accumulates per-centroid weighted sums and weights into the
+output accumulators.  This is the TPU re-think of what a CUDA port would
+do with threadblocks + shared-memory reductions (DESIGN §7).
+
+Padding: points with weight 0 fall out of every accumulator, so shape
+buckets are exact.  The division (and empty-cluster handling) happens in
+the L2 graph, not here.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _step_body(p_ref, cw_ref, c_ref, sum_ref, wsum_ref):
+    first = pl.program_id(0) == 0
+
+    @pl.when(first)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        wsum_ref[...] = jnp.zeros_like(wsum_ref)
+
+    pts = p_ref[...]            # [BLOCK]
+    cw = cw_ref[...]            # [BLOCK]
+    cen = c_ref[...]            # [k]
+    # [BLOCK, k] squared distances by broadcast; argmin over k.
+    diff = pts[:, None] - cen[None, :]
+    a = jnp.argmin(diff * diff, axis=1)  # [BLOCK]
+    onehot = (a[:, None] == jnp.arange(cen.shape[0])[None, :]).astype(jnp.float32)
+    sum_ref[...] += jnp.sum(onehot * (cw * pts)[:, None], axis=0)
+    wsum_ref[...] += jnp.sum(onehot * cw[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kmeans_accumulate(points, cw, centroids):
+    """Fused assign+accumulate over all points.
+
+    Args:
+      points:    f32[m]  data (m divisible by BLOCK after bucketing).
+      cw:        f32[m]  per-point weights (0 = padding).
+      centroids: f32[k]  current centroids.
+
+    Returns:
+      (sums f32[k], wsums f32[k]) — per-centroid Σ w·x and Σ w.
+    """
+    m = points.shape[0]
+    k = centroids.shape[0]
+    block = min(BLOCK, m)
+    assert m % block == 0, f"m={m} must be a multiple of {block}"
+    grid = (m // block,)
+    return pl.pallas_call(
+        _step_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, cw, centroids)
+
+
+def kmeans_step(points, cw, centroids):
+    """One full Lloyd step: accumulate via the kernel, then update +
+    re-sort centroids (empty clusters keep their position)."""
+    sums, wsums = kmeans_accumulate(points, cw, centroids)
+    new = jnp.where(wsums > 0.0, sums / jnp.where(wsums > 0.0, wsums, 1.0), centroids)
+    return jnp.sort(new)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused dense + bias + ReLU layer.
+
+Used by the L2 MLP forward graph (§4.1 accuracy evaluation on the
+serving path).  The matmul is tiled with `BlockSpec` for the 128×128 MXU
+shape: grid over (batch tiles × output tiles), the full contraction
+dimension resident per step — for the paper's 784-256-128-64-10 network
+every K fits VMEM (784·128·4 B ≈ 0.4 MiB per operand tile).  On a real
+TPU this kernel would run in bf16 on the MXU; interpret mode validates
+the numerics on CPU (DESIGN §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 32
+TILE_N = 64
+
+
+def _dense_body(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]          # [TM, K]
+    w = w_ref[...]          # [K, TN]
+    b = b_ref[...]          # [TN]
+    z = jnp.dot(x, w) + b[None, :]
+    if relu:
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def dense(x, w, b, relu=True):
+    """Fused y = relu?(x @ w + b) with MXU-shaped tiling.
+
+    Args:
+      x: f32[M, K] activations (M divisible by TILE_M after bucketing).
+      w: f32[K, N] weights (N divisible by TILE_N, or smaller than it).
+      b: f32[N]    bias.
+      relu: apply ReLU (static).
+
+    Returns:
+      f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tm = TILE_M if m % TILE_M == 0 else m
+    tn = TILE_N if n % TILE_N == 0 else n
+    grid = (m // tm, n // tn)
+    kernel = functools.partial(_dense_body, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

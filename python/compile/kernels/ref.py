@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the contract: pytest (+hypothesis) asserts the kernels match
+them with ``assert_allclose``.  They are written for clarity over speed
+— the sequential CD semantics in particular are spelled out coordinate
+by coordinate.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lasso_cd_epoch_ref(w, d, cw, lam, alpha):
+    """Reference weighted Gauss-Seidel CD epoch (descending order).
+
+    Mirrors rust/src/quant/lasso.rs::solve exactly: the residual is
+    maintained explicitly (O(m) per coordinate, O(m²) per epoch) so any
+    disagreement with the O(m) lazy-scalar kernel is a kernel bug.
+    """
+    w = jnp.asarray(w)
+    d = jnp.asarray(d)
+    cw = jnp.asarray(cw)
+    alpha = jnp.asarray(alpha)
+    lam1, lam2 = lam[0], lam[1]
+    m = w.shape[0]
+    rec = jnp.cumsum(d * alpha)
+    r = w - rec
+
+    def body(jj, carry):
+        alpha, r = carry
+        j = m - 1 - jj
+        dj = d[j]
+        # Column norm over rows ≥ j with row weights.
+        mask = jnp.arange(m) >= j
+        cj = dj * dj * jnp.sum(jnp.where(mask, cw, 0.0))
+        rho = dj * jnp.sum(jnp.where(mask, cw * r, 0.0)) + cj * alpha[j]
+        denom = cj - 2.0 * lam2
+        denom = jnp.where(denom > 0.0, denom, cj)  # per-coordinate l1 fallback
+        shrunk = jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam1, 0.0)
+        new = shrunk / jnp.where(denom > 0.0, denom, 1.0)
+        ok = cj > 0.0
+        new = jnp.where(ok, new, alpha[j])
+        delta = new - alpha[j]
+        r = r - jnp.where(mask, dj * delta, 0.0)
+        alpha = alpha.at[j].set(new)
+        return alpha, r
+
+    alpha, _ = jax.lax.fori_loop(0, m, body, (alpha, r))
+    return alpha
+
+
+def kmeans_accumulate_ref(points, cw, centroids):
+    """Reference assign + accumulate."""
+    d2 = (points[:, None] - centroids[None, :]) ** 2
+    a = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    onehot = (a[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    sums = jnp.sum(onehot * (cw * points)[:, None], axis=0)
+    wsums = jnp.sum(onehot * cw[:, None], axis=0)
+    return sums, wsums
+
+
+def kmeans_step_ref(points, cw, centroids):
+    """Reference full Lloyd step with empty-cluster hold + sort."""
+    sums, wsums = kmeans_accumulate_ref(points, cw, centroids)
+    new = jnp.where(wsums > 0.0, sums / jnp.where(wsums > 0.0, wsums, 1.0), centroids)
+    return jnp.sort(new)
+
+
+def gmm_accumulate_ref(points, cw, means, variances, weights):
+    """Reference E-step sufficient statistics (log-space)."""
+    x = jnp.asarray(points)
+    d = x[:, None] - jnp.asarray(means)[None, :]
+    var = jnp.asarray(variances)
+    logp = (
+        -0.5 * (d * d / var[None, :] + jnp.log(var)[None, :]
+                + jnp.log(2.0 * jnp.pi))
+        + jnp.log(jnp.maximum(jnp.asarray(weights), 1e-30))[None, :]
+    )
+    lse = jax.scipy.special.logsumexp(logp, axis=1, keepdims=True)
+    r = jnp.exp(logp - lse) * jnp.asarray(cw)[:, None]
+    return jnp.sum(r, axis=0), jnp.sum(r * x[:, None], axis=0), jnp.sum(r * (x * x)[:, None], axis=0)
+
+
+def dense_ref(x, w, b, relu=True):
+    """Reference fused dense layer."""
+    z = x @ w + b[None, :]
+    return jnp.maximum(z, 0.0) if relu else z
+
+
+def mlp_forward_ref(x, params):
+    """Reference MLP forward over [(w, b), ...] with ReLU on all but last."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = dense_ref(h, w, b, relu=(i + 1 < len(params)))
+    return h

@@ -1,0 +1,109 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernels.
+
+Three graphs are AOT-lowered per shape bucket (see aot.py):
+
+* ``lasso_cd_epochs``  — `EPOCHS_PER_CALL` CD epochs over the difference
+  basis (eq 6/13); the Rust coordinator chains calls and owns the
+  convergence test, so one artifact serves every λ and every warm start.
+* ``kmeans_lloyd``     — `LLOYD_ITERS_PER_CALL` fused Lloyd steps.
+* ``mlp_forward``      — the 784-256-128-64-10 forward pass for the
+  §4.1 post-quantization accuracy evaluation (batched).
+
+Performance notes (DESIGN §9): epochs are chained with
+``lax.fori_loop`` so nothing is rematerialized between epochs; all
+weights are passed as arguments (no constants baked in) so one compiled
+executable serves every model/λ; everything is f32.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gmm, lasso_cd, kmeans, mlp as mlp_kernels
+
+# Iterations fused into one executable call. Chosen so PJRT dispatch
+# overhead amortizes without making the artifact's unrolled loop huge —
+# the §Perf sweep in EXPERIMENTS.md justifies the values.
+EPOCHS_PER_CALL = 8
+LLOYD_ITERS_PER_CALL = 4
+EM_ITERS_PER_CALL = 4
+
+#: The paper's architecture (§4.1).
+MLP_DIMS = [784, 256, 128, 64, 10]
+
+
+def lasso_cd_epochs(w, d, cw, lam, alpha):
+    """EPOCHS_PER_CALL structured CD epochs (kernel-backed)."""
+
+    def body(_, a):
+        return lasso_cd.lasso_cd_epoch(w, d, cw, lam, a)
+
+    return jax.lax.fori_loop(0, EPOCHS_PER_CALL, body, alpha)
+
+
+def kmeans_lloyd(points, cw, centroids):
+    """LLOYD_ITERS_PER_CALL fused Lloyd steps (kernel-backed)."""
+
+    def body(_, c):
+        return kmeans.kmeans_step(points, cw, c)
+
+    return jax.lax.fori_loop(0, LLOYD_ITERS_PER_CALL, body, centroids)
+
+
+def gmm_em(points, cw, means, variances, weights, var_floor):
+    """EM_ITERS_PER_CALL fused EM steps (kernel-backed)."""
+
+    def body(_, state):
+        mu, var, pi = state
+        return gmm.gmm_em_step(points, cw, mu, var, pi, var_floor)
+
+    return jax.lax.fori_loop(
+        0, EM_ITERS_PER_CALL, body, (means, variances, weights)
+    )
+
+
+def gmm_example_args(m, k):
+    """ShapeDtypeStructs for one gmm_em lowering."""
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((k,), f32),
+        jax.ShapeDtypeStruct((k,), f32),
+        jax.ShapeDtypeStruct((k,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+
+
+def mlp_forward(x, w1, b1, w2, b2, w3, b3, w4, b4):
+    """Forward pass of the paper's MLP (kernel-backed, logits out)."""
+    h = mlp_kernels.dense(x, w1, b1, relu=True)
+    h = mlp_kernels.dense(h, w2, b2, relu=True)
+    h = mlp_kernels.dense(h, w3, b3, relu=True)
+    return mlp_kernels.dense(h, w4, b4, relu=False)
+
+
+def mlp_example_args(batch):
+    """ShapeDtypeStructs for one mlp_forward lowering."""
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct((batch, MLP_DIMS[0]), f32)]
+    for i in range(4):
+        args.append(jax.ShapeDtypeStruct((MLP_DIMS[i], MLP_DIMS[i + 1]), f32))
+        args.append(jax.ShapeDtypeStruct((MLP_DIMS[i + 1],), f32))
+    return args
+
+
+def lasso_example_args(m):
+    """ShapeDtypeStructs for one lasso_cd_epochs lowering."""
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((m,), f32)
+    return [vec, vec, vec, jax.ShapeDtypeStruct((2,), f32), vec]
+
+
+def kmeans_example_args(m, k):
+    """ShapeDtypeStructs for one kmeans_lloyd lowering."""
+    f32 = jnp.float32
+    return [
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((k,), f32),
+    ]

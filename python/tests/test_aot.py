@@ -1,0 +1,87 @@
+"""AOT pipeline tests: lowering works, manifest is complete and honest."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_build_entries_cover_all_kinds():
+    entries = aot.build_entries()
+    names = [e[0] for e in entries]
+    kinds = {e[3]["kind"] for e in entries}
+    assert kinds == {"lasso_cd", "kmeans", "gmm", "mlp_fwd"}
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    for m in aot.LASSO_BUCKETS:
+        assert f"lasso_cd_m{m}" in names
+    for m, k in aot.KMEANS_BUCKETS:
+        assert f"kmeans_m{m}_k{k}" in names
+    for m, k in aot.GMM_BUCKETS:
+        assert f"gmm_m{m}_k{k}" in names
+
+
+def test_lower_smallest_lasso_to_hlo_text():
+    lowered = jax.jit(model.lasso_cd_epochs).lower(*model.lasso_example_args(64))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 1000
+
+
+def test_manifest_written(tmp_path):
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path), "--only", "lasso_cd_m64"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) == 1
+    a = arts[0]
+    assert a["name"] == "lasso_cd_m64"
+    assert os.path.exists(tmp_path / a["file"])
+    assert [i["shape"] for i in a["inputs"]] == [[64], [64], [64], [2], [64]]
+    assert all(i["dtype"] == "float32" for i in a["inputs"])
+    assert a["meta"]["epochs_per_call"] == model.EPOCHS_PER_CALL
+
+
+def test_lasso_epochs_progress_like_single_epochs():
+    """The fused EPOCHS_PER_CALL graph equals calling the kernel that many
+    times."""
+    from compile.kernels import lasso_cd
+
+    rng = np.random.default_rng(0)
+    v = np.sort(np.unique(rng.uniform(0, 1, 48))).astype(np.float32)
+    m = 64
+    w = np.concatenate([v, np.full(m - len(v), v[-1])]).astype(np.float32)
+    d = np.concatenate([[v[0]], np.diff(v), np.zeros(m - len(v))]).astype(np.float32)
+    cw = np.concatenate([np.ones(len(v)), np.zeros(m - len(v))]).astype(np.float32)
+    lam = np.array([0.05, 0.0], dtype=np.float32)
+    alpha = np.ones(m, dtype=np.float32)
+
+    fused = np.asarray(model.lasso_cd_epochs(w, d, cw, lam, alpha))
+    manual = alpha
+    for _ in range(model.EPOCHS_PER_CALL):
+        manual = lasso_cd.lasso_cd_epoch(w, d, cw, lam, manual)
+    np.testing.assert_allclose(fused, np.asarray(manual), rtol=1e-5, atol=1e-6)
+
+
+def test_real_manifest_if_present():
+    here = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    path = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    manifest = json.loads(open(path).read())
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {f"lasso_cd_m{m}" for m in aot.LASSO_BUCKETS} <= names
+    for a in manifest["artifacts"]:
+        f = os.path.join(here, "artifacts", a["file"])
+        assert os.path.exists(f), f"missing {f}"
+        assert "HloModule" in open(f).read(200)

@@ -1,0 +1,97 @@
+"""Pallas GMM E-step kernel vs the pure-jnp oracle + EM-step behavior."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import gmm, ref
+
+
+def make_problem(m, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0.0, 100.0, size=m).astype(np.float32)
+    cw = np.ones(m, dtype=np.float32)
+    mu = np.sort(rng.uniform(0.0, 100.0, size=k)).astype(np.float32)
+    var = rng.uniform(4.0, 50.0, size=k).astype(np.float32)
+    pi = np.full(k, 1.0 / k, dtype=np.float32)
+    return pts, cw, mu, var, pi
+
+
+@pytest.mark.parametrize("m,k", [(256, 4), (256, 8), (512, 16), (1024, 32)])
+def test_accumulate_matches_ref(m, k):
+    pts, cw, mu, var, pi = make_problem(m, k, seed=m + k)
+    n_k, sx_k, sxx_k = gmm.gmm_accumulate(pts, cw, mu, var, pi)
+    n_r, sx_r, sxx_r = ref.gmm_accumulate_ref(pts, cw, mu, var, pi)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_r), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sx_k), np.asarray(sx_r), rtol=1e-4, atol=1e-1)
+    np.testing.assert_allclose(np.asarray(sxx_k), np.asarray(sxx_r), rtol=1e-3, atol=1e1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    k=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_accumulate_hypothesis(blocks, k, seed):
+    m = gmm.BLOCK * blocks
+    pts, cw, mu, var, pi = make_problem(m, k, seed=seed)
+    n_k, sx_k, _ = gmm.gmm_accumulate(pts, cw, mu, var, pi)
+    n_r, sx_r, _ = ref.gmm_accumulate_ref(pts, cw, mu, var, pi)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_r), rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(sx_k), np.asarray(sx_r), rtol=1e-3, atol=1.0)
+
+
+def test_responsibilities_sum_to_total_weight():
+    pts, cw, mu, var, pi = make_problem(512, 8, seed=1)
+    n, _, _ = gmm.gmm_accumulate(pts, cw, mu, var, pi)
+    assert abs(float(np.sum(np.asarray(n))) - 512.0) < 1e-2
+
+
+def test_padding_weights_are_inert():
+    pts, cw, mu, var, pi = make_problem(512, 8, seed=2)
+    cw_pad = cw.copy()
+    cw_pad[256:] = 0.0
+    n_a, sx_a, _ = gmm.gmm_accumulate(pts[:256], cw[:256], mu, var, pi)
+    n_b, sx_b, _ = gmm.gmm_accumulate(pts, cw_pad, mu, var, pi)
+    np.testing.assert_allclose(np.asarray(n_b), np.asarray(n_a), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sx_b), np.asarray(sx_a), rtol=1e-5, atol=1e-2)
+
+
+def test_em_converges_on_separated_modes():
+    rng = np.random.default_rng(3)
+    pts = np.concatenate(
+        [rng.normal(10, 1.0, 128), rng.normal(90, 1.0, 128)]
+    ).astype(np.float32)
+    cw = np.ones(256, dtype=np.float32)
+    mu = np.array([30.0, 60.0], dtype=np.float32)
+    var = np.array([100.0, 100.0], dtype=np.float32)
+    pi = np.array([0.5, 0.5], dtype=np.float32)
+    floor = np.float32(1e-4)
+    for _ in range(10):
+        mu, var, pi = gmm.gmm_em_step(pts, cw, mu, var, pi, floor)
+    mu = np.asarray(mu)
+    np.testing.assert_allclose(mu, [10.0, 90.0], atol=1.0)
+    assert np.all(np.asarray(var) < 5.0)
+    np.testing.assert_allclose(np.asarray(pi), [0.5, 0.5], atol=0.05)
+
+
+def test_em_step_keeps_simplex_and_order():
+    pts, cw, mu, var, pi = make_problem(256, 8, seed=4)
+    mu2, var2, pi2 = gmm.gmm_em_step(pts, cw, mu, var, pi, np.float32(1e-4))
+    mu2, var2, pi2 = map(np.asarray, (mu2, var2, pi2))
+    assert abs(float(pi2.sum()) - 1.0) < 1e-5
+    assert np.all(np.diff(mu2) >= 0), "means must stay sorted"
+    assert np.all(var2 >= 1e-4 - 1e-7), "variance floor must hold"
+
+
+def test_fused_em_graph_matches_manual_steps():
+    pts, cw, mu, var, pi = make_problem(256, 8, seed=5)
+    floor = np.float32(1e-4)
+    fused = model.gmm_em(pts, cw, mu, var, pi, floor)
+    manual = (mu, var, pi)
+    for _ in range(model.EM_ITERS_PER_CALL):
+        manual = gmm.gmm_em_step(pts, cw, *manual, floor)
+    for a, b in zip(fused, manual):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=1e-2)

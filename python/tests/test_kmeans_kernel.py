@@ -1,0 +1,78 @@
+"""Pallas kmeans kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans, ref
+
+
+def make_problem(m, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0.0, 100.0, size=m).astype(np.float32)
+    cw = np.ones(m, dtype=np.float32)
+    cen = np.sort(rng.uniform(0.0, 100.0, size=k)).astype(np.float32)
+    return pts, cw, cen
+
+
+@pytest.mark.parametrize("m,k", [(256, 4), (256, 16), (512, 8), (1024, 32)])
+def test_accumulate_matches_ref(m, k):
+    pts, cw, cen = make_problem(m, k, seed=m + k)
+    s_k, w_k = kmeans.kmeans_accumulate(pts, cw, cen)
+    s_r, w_r = ref.kmeans_accumulate_ref(pts, cw, cen)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    k=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_accumulate_hypothesis(blocks, k, seed):
+    m = kmeans.BLOCK * blocks
+    pts, cw, cen = make_problem(m, k, seed=seed)
+    s_k, w_k = kmeans.kmeans_accumulate(pts, cw, cen)
+    s_r, w_r = ref.kmeans_accumulate_ref(pts, cw, cen)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), rtol=1e-6, atol=1e-6)
+
+
+def test_step_matches_ref():
+    pts, cw, cen = make_problem(512, 8, seed=1)
+    new_k = np.asarray(kmeans.kmeans_step(pts, cw, cen))
+    new_r = np.asarray(ref.kmeans_step_ref(pts, cw, cen))
+    np.testing.assert_allclose(new_k, new_r, rtol=1e-5, atol=1e-4)
+    assert np.all(np.diff(new_k) >= 0), "centroids must stay sorted"
+
+
+def test_padding_weights_are_inert():
+    pts, cw, cen = make_problem(512, 8, seed=2)
+    cw_padded = cw.copy()
+    cw_padded[256:] = 0.0
+    s_full, w_full = kmeans.kmeans_accumulate(pts[:256], cw[:256], cen)
+    s_pad, w_pad = kmeans.kmeans_accumulate(pts, cw_padded, cen)
+    np.testing.assert_allclose(np.asarray(s_pad), np.asarray(s_full), rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(w_pad), np.asarray(w_full), rtol=1e-6, atol=1e-6)
+
+
+def test_empty_cluster_keeps_centroid():
+    pts = np.full(256, 10.0, dtype=np.float32)
+    cw = np.ones(256, dtype=np.float32)
+    cen = np.array([10.0, 99.0], dtype=np.float32)  # nobody picks 99
+    new = np.asarray(kmeans.kmeans_step(pts, cw, cen))
+    assert 99.0 in new, f"empty cluster must hold its position, got {new}"
+
+
+def test_lloyd_converges_on_separated_data():
+    rng = np.random.default_rng(3)
+    pts = np.concatenate(
+        [rng.normal(10, 0.2, 128), rng.normal(50, 0.2, 64), rng.normal(90, 0.2, 64)]
+    ).astype(np.float32)
+    cw = np.ones(256, dtype=np.float32)
+    cen = np.array([20.0, 40.0, 80.0], dtype=np.float32)
+    for _ in range(10):
+        cen = kmeans.kmeans_step(pts, cw, cen)
+    cen = np.asarray(cen)
+    np.testing.assert_allclose(cen, [10.0, 50.0, 90.0], atol=0.5)

@@ -1,0 +1,96 @@
+"""Pallas lasso_cd kernel vs the pure-jnp oracle — the core correctness
+signal for L1, with hypothesis sweeping shapes and parameter ranges."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lasso_cd, ref
+
+
+def make_problem(m, seed, lam1=0.05, lam2=0.0, pad=0):
+    rng = np.random.default_rng(seed)
+    v = np.sort(rng.uniform(-2.0, 2.0, size=m - pad))
+    v = np.unique(v)
+    mm = len(v)
+    w = np.concatenate([v, np.full(m - mm, v[-1])]).astype(np.float32)
+    d = np.concatenate([[v[0]], np.diff(v), np.zeros(m - mm)]).astype(np.float32)
+    cw = np.concatenate([np.ones(mm), np.zeros(m - mm)]).astype(np.float32)
+    lam = np.array([lam1, lam2], dtype=np.float32)
+    alpha = np.ones(m, dtype=np.float32)
+    return w, d, cw, lam, alpha
+
+
+@pytest.mark.parametrize("m", [8, 32, 64, 256])
+def test_kernel_matches_ref(m):
+    w, d, cw, lam, alpha = make_problem(m, seed=m)
+    out_k = np.asarray(lasso_cd.lasso_cd_epoch(w, d, cw, lam, alpha))
+    out_r = np.asarray(ref.lasso_cd_epoch_ref(w, d, cw, lam, alpha))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=4, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+    lam1=st.floats(min_value=0.0, max_value=2.0),
+)
+def test_kernel_matches_ref_hypothesis(m, seed, lam1):
+    w, d, cw, lam, alpha = make_problem(m, seed=seed, lam1=lam1)
+    out_k = np.asarray(lasso_cd.lasso_cd_epoch(w, d, cw, lam, alpha))
+    out_r = np.asarray(ref.lasso_cd_epoch_ref(w, d, cw, lam, alpha))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-3, atol=1e-4)
+
+
+def test_padding_is_inert():
+    """Padded rows (cw=0, d=0) must not change real coordinates."""
+    w, d, cw, lam, alpha = make_problem(32, seed=7)
+    out_real = np.asarray(lasso_cd.lasso_cd_epoch(w, d, cw, lam, alpha))
+    wp, dp, cwp, _, alphap = make_problem(64, seed=7, pad=32)
+    # Same real prefix by construction.
+    np.testing.assert_allclose(wp[:32], w)
+    out_pad = np.asarray(lasso_cd.lasso_cd_epoch(wp, dp, cwp, lam, alphap))
+    np.testing.assert_allclose(out_pad[:32], out_real, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_lambda_keeps_exact_start():
+    """λ=0 from α=1 (zero loss) must be a fixed point."""
+    w, d, cw, lam, alpha = make_problem(48, seed=3, lam1=0.0)
+    out = np.asarray(lasso_cd.lasso_cd_epoch(w, d, cw, lam, alpha))
+    np.testing.assert_allclose(out, alpha, rtol=1e-5, atol=1e-6)
+
+
+def test_epoch_reduces_objective():
+    w, d, cw, lam, alpha = make_problem(64, seed=9, lam1=0.3)
+
+    def objective(a):
+        rec = np.cumsum(d * a)
+        return 0.5 * np.sum(cw * (w - rec) ** 2) + lam[0] * np.sum(np.abs(a))
+
+    out = np.asarray(lasso_cd.lasso_cd_epoch(w, d, cw, lam, alpha))
+    assert objective(out) <= objective(alpha) + 1e-6
+
+
+def test_repeated_epochs_sparsify():
+    w, d, cw, lam, alpha = make_problem(64, seed=11, lam1=0.8)
+    a = jnp.asarray(alpha)
+    for _ in range(50):
+        a = lasso_cd.lasso_cd_epoch(w, d, cw, lam, a)
+    a = np.asarray(a)
+    nnz = np.count_nonzero(np.abs(a) > 1e-7)
+    assert nnz < 64, "strong lambda must produce sparsity"
+
+
+def test_negative_l2_increases_sparsity():
+    w, d, cw, _, alpha = make_problem(64, seed=13)
+    cmin = np.min(np.where(d[:64] != 0, d * d, np.inf)) * 1.0  # scale guard
+
+    def run(lam2):
+        lam = np.array([0.4, lam2], dtype=np.float32)
+        a = jnp.asarray(alpha)
+        for _ in range(60):
+            a = lasso_cd.lasso_cd_epoch(w, d, cw, lam, a)
+        return np.count_nonzero(np.abs(np.asarray(a)) > 1e-7)
+
+    assert run(0.2 * cmin) <= run(0.0)

@@ -1,0 +1,73 @@
+"""Pallas dense/MLP kernel vs oracle + L2 model shape checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import mlp, ref
+
+
+def make_layer(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(scale=0.2, size=(k, n)).astype(np.float32)
+    b = rng.normal(scale=0.1, size=n).astype(np.float32)
+    return x, w, b
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 784, 256), (64, 256, 128), (32, 64, 10), (7, 5, 3)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_dense_matches_ref(m, k, n, relu):
+    x, w, b = make_layer(m, k, n, seed=m + n)
+    out_k = np.asarray(mlp.dense(x, w, b, relu=relu))
+    out_r = np.asarray(ref.dense_ref(x, w, b, relu=relu))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dense_hypothesis(m, k, n, seed):
+    x, w, b = make_layer(m, k, n, seed=seed)
+    out_k = np.asarray(mlp.dense(x, w, b, relu=True))
+    out_r = np.asarray(ref.dense_ref(x, w, b, relu=True))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-3, atol=1e-3)
+
+
+def _mlp_params(seed=0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(4):
+        din, dout = model.MLP_DIMS[i], model.MLP_DIMS[i + 1]
+        params.append(
+            (
+                rng.normal(scale=(2.0 / din) ** 0.5, size=(din, dout)).astype(np.float32),
+                np.zeros(dout, dtype=np.float32),
+            )
+        )
+    return params
+
+
+def test_mlp_forward_matches_ref():
+    params = _mlp_params()
+    rng = np.random.default_rng(1)
+    x = rng.uniform(size=(model.MLP_DIMS[0],)).astype(np.float32)
+    xb = np.tile(x, (64, 1))
+    flat = [a for wb in params for a in wb]
+    out_k = np.asarray(model.mlp_forward(xb, *flat))
+    out_r = np.asarray(ref.mlp_forward_ref(xb, params))
+    assert out_k.shape == (64, 10)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-3, atol=1e-3)
+
+
+def test_mlp_example_args_shapes():
+    args = model.mlp_example_args(64)
+    assert args[0].shape == (64, 784)
+    assert args[1].shape == (784, 256)
+    assert args[-1].shape == (10,)
+    assert len(args) == 9

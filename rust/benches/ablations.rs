@@ -1,0 +1,69 @@
+//! Ablation benches (DESIGN §5): the design choices the paper leaves
+//! implicit, measured.
+//!
+//! * Lloyd+restarts vs exact DP k-means — is the heuristic the bottleneck?
+//! * fuzzy c-means vs k-means — the Wen & Celebi "slower, not better"
+//!   claim the paper cites to exclude FCM.
+//! * CD-LASSO vs the exact fused-lasso DP at equal λ.
+//! * k-means++ vs naive init (quality via restarts is Fig-1 territory;
+//!   here we measure the cost).
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::cluster::fuzzy_cmeans::{fuzzy_cmeans_1d, FcmConfig};
+use sqlsq::cluster::kmeans::{kmeans_1d, KMeansConfig, KMeansInit};
+use sqlsq::cluster::kmeans_dp::kmeans_dp;
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{lasso, tv_exact, unique::UniqueDecomp, vmatrix::VBasis};
+
+fn main() {
+    let mut suite = Suite::with_config("Ablations", active_config());
+    let mut rng = Pcg32::seeded(11);
+    let data: Vec<f64> = (0..1000).map(|_| rng.uniform(0.0, 100.0)).collect();
+
+    for &k in &[8usize, 64] {
+        suite.case(&format!("kmeans_lloyd10/k={k}"), || {
+            black_box(
+                kmeans_1d(&data, None, &KMeansConfig { k, ..Default::default() }).unwrap(),
+            );
+        });
+        suite.case(&format!("kmeans_exact_dp/k={k}"), || {
+            black_box(kmeans_dp(&data, None, k).unwrap());
+        });
+        suite.case(&format!("fuzzy_cmeans/k={k}"), || {
+            black_box(
+                fuzzy_cmeans_1d(&data, None, &FcmConfig { k, ..Default::default() }).unwrap(),
+            );
+        });
+        suite.case(&format!("kmeans_naive_init1/k={k}"), || {
+            black_box(
+                kmeans_1d(
+                    &data,
+                    None,
+                    &KMeansConfig {
+                        k,
+                        restarts: 1,
+                        init: KMeansInit::RandomValues,
+                        repair_empty: false,
+                        ..Default::default()
+                    },
+                )
+                .unwrap(),
+            );
+        });
+    }
+
+    // CD vs exact DP on eq 6.
+    let u = UniqueDecomp::new(&data).unwrap();
+    let basis = VBasis::new(&u.values);
+    for lambda in [0.5f64, 5.0] {
+        let cfg = lasso::LassoConfig { lambda1: lambda, ..Default::default() };
+        suite.case(&format!("lasso_cd/λ={lambda}"), || {
+            black_box(lasso::solve(&basis, &u.values, &cfg, None).unwrap());
+        });
+        suite.case(&format!("tv_exact_dp/λ={lambda}"), || {
+            black_box(tv_exact::solve_tv_exact(&basis, &u.values, lambda).unwrap());
+        });
+    }
+
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

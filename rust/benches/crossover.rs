@@ -1,0 +1,29 @@
+//! Bench E9 (§3.6): the runtime crossover between k-means
+//! (O(t·k·T·m)) and structured CD-LASSO (O(t·m)) as k approaches m.
+//!
+//! Reproduction target: with k ∈ Θ(m) ("high-resolution quantization"),
+//! the proposed method wins by a growing factor as m scales.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::data::rng::Pcg32;
+use sqlsq::eval::figures;
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+
+fn main() {
+    let mut suite = Suite::with_config("Crossover kmeans vs l1 (k in Θ(m))", active_config());
+    let mut rng = Pcg32::seeded(5);
+    for &m in &[256usize, 512, 1024, 2048] {
+        let data: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let k = m / 2;
+        let opts_k = QuantOptions { target_values: k, seed: 1, ..Default::default() };
+        suite.case(&format!("kmeans/m={m}/k={k}"), || {
+            black_box(quant::quantize(&data, QuantMethod::KMeans, &opts_k).unwrap());
+        });
+        let lambda = figures::lambda_for_count(&data, k);
+        let opts_l = QuantOptions { lambda1: lambda, ..Default::default() };
+        suite.case(&format!("l1_ls/m={m}/k≈{k}"), || {
+            black_box(quant::quantize(&data, QuantMethod::L1LeastSquare, &opts_l).unwrap());
+        });
+    }
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

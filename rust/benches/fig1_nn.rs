@@ -1,0 +1,37 @@
+//! Bench E1 (Figure 1, runtime panel): quantization wall-time on the MLP
+//! last-layer weights for every method, across value counts.
+//!
+//! Reproduction target (paper §4.1): the l1 family runs well below the
+//! k-means family; cluster-LS adds negligible time over k-means.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::eval::{figures, workloads};
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+
+fn main() {
+    let nn = workloads::nn_workload(None).expect("workload");
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut suite = Suite::with_config("Fig1 NN last-layer quantization time", active_config());
+
+    for &k in &[8usize, 32, 128] {
+        for method in [
+            QuantMethod::KMeans,
+            QuantMethod::ClusterLs,
+            QuantMethod::Gmm,
+            QuantMethod::DataTransform,
+        ] {
+            let opts = QuantOptions { target_values: k, seed: 1, ..Default::default() };
+            suite.case(&format!("{}/k={k}", method.id()), || {
+                black_box(quant::quantize(&weights, method, &opts).unwrap());
+            });
+        }
+        let lambda = figures::lambda_for_count(&weights, k);
+        for method in [QuantMethod::L1, QuantMethod::L1LeastSquare] {
+            let opts = QuantOptions { lambda1: lambda, ..Default::default() };
+            suite.case(&format!("{}/k≈{k}", method.id()), || {
+                black_box(quant::quantize(&weights, method, &opts).unwrap());
+            });
+        }
+    }
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

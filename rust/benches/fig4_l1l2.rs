@@ -1,0 +1,28 @@
+//! Bench E4 (Figure 4): solver cost of sole-l1 vs l1+negative-l2 across
+//! λ₁ (λ₂ = 4e-3·λ₁, the paper's coupling), on the NN last layer.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::eval::workloads;
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+
+fn main() {
+    let nn = workloads::nn_workload(None).expect("workload");
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut suite = Suite::with_config("Fig4 l1 vs l1+l2 solve time", active_config());
+    for &lambda in &[1e-3f64, 1e-2, 1e-1] {
+        let l1 = QuantOptions { lambda1: lambda, refit: false, ..Default::default() };
+        suite.case(&format!("l1/λ={lambda:.0e}"), || {
+            black_box(quant::quantize(&weights, QuantMethod::L1, &l1).unwrap());
+        });
+        let l1l2 = QuantOptions {
+            lambda1: lambda,
+            lambda2: 4e-3 * lambda,
+            refit: false,
+            ..Default::default()
+        };
+        suite.case(&format!("l1_l2/λ={lambda:.0e}"), || {
+            black_box(quant::quantize(&weights, QuantMethod::L1L2, &l1l2).unwrap());
+        });
+    }
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

@@ -1,0 +1,38 @@
+//! Bench E5 (Figure 5): digit-image quantization wall-time per method/k.
+//!
+//! Reproduction target (paper §4.2): the l1-based approaches provide a
+//! significant runtime advantage over the k-means family; cluster-LS costs
+//! ≈ k-means.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::eval::{figures, workloads};
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+
+fn main() {
+    let image = workloads::digit_image();
+    let mut suite = Suite::with_config("Fig5 image quantization time", active_config());
+    for &k in &[4usize, 16, 64] {
+        for method in [QuantMethod::KMeans, QuantMethod::ClusterLs, QuantMethod::IterativeL1] {
+            let opts = QuantOptions {
+                target_values: k,
+                lambda1: 1e-4,
+                clamp: Some((0.0, 1.0)),
+                seed: 1,
+                ..Default::default()
+            };
+            suite.case(&format!("{}/k={k}", method.id()), || {
+                black_box(quant::quantize(&image, method, &opts).unwrap());
+            });
+        }
+        let lambda = figures::lambda_for_count(&image, k);
+        let opts = QuantOptions {
+            lambda1: lambda,
+            clamp: Some((0.0, 1.0)),
+            ..Default::default()
+        };
+        suite.case(&format!("l1_ls/k≈{k}"), || {
+            black_box(quant::quantize(&image, QuantMethod::L1LeastSquare, &opts).unwrap());
+        });
+    }
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

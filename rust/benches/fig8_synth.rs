@@ -1,0 +1,34 @@
+//! Bench E8 (Figure 8, runtime panels): quantization wall-time on the
+//! three §4.3 synthetic datasets.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::eval::workloads;
+use sqlsq::quant::{self, QuantMethod, QuantOptions};
+
+fn main() {
+    let mut suite = Suite::with_config("Fig8 synthetic-data quantization time", active_config());
+    for (kind, data) in workloads::synth_datasets(1) {
+        for &k in &[8usize, 32] {
+            for method in [
+                QuantMethod::KMeans,
+                QuantMethod::ClusterLs,
+                QuantMethod::Gmm,
+                QuantMethod::DataTransform,
+                QuantMethod::IterativeL1,
+                QuantMethod::L1LeastSquare,
+            ] {
+                let opts = QuantOptions {
+                    target_values: k,
+                    lambda1: 0.05,
+                    clamp: Some((0.0, 100.0)),
+                    seed: 2,
+                    ..Default::default()
+                };
+                suite.case(&format!("{}/{}/k={k}", kind.label(), method.id()), || {
+                    black_box(quant::quantize(&data, method, &opts).unwrap());
+                });
+            }
+        }
+    }
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

@@ -1,0 +1,120 @@
+//! §Perf hot-path microbenchmarks (DESIGN §9): the before/after evidence
+//! for every optimization EXPERIMENTS.md records.
+//!
+//! * structured O(m)/epoch CD vs the dense O(m²)/epoch oracle;
+//! * O(m) segment-mean refit vs the eq-9 normal-equation solve;
+//! * structured V ops vs dense matvec;
+//! * 1-d bisection assignment vs linear-scan k-means;
+//! * coordinator queue round-trip overhead.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::cluster::kmeans::assign_sorted;
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{lasso, refit, unique::UniqueDecomp, vmatrix::VBasis};
+
+fn sorted_values(m: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut v: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    v
+}
+
+fn main() {
+    let mut suite = Suite::with_config("Hot paths", active_config());
+
+    // --- CD epochs: structured vs dense --------------------------------
+    for &m in &[256usize, 1024] {
+        let v = sorted_values(m, 1);
+        let basis = VBasis::new(&v);
+        let cfg = lasso::LassoConfig {
+            lambda1: 0.02,
+            max_epochs: 10,
+            tol: 0.0,
+            ..Default::default()
+        };
+        suite.case(&format!("lasso_structured/m={m}/10ep"), || {
+            black_box(lasso::solve(&basis, &v, &cfg, None).unwrap());
+        });
+        suite.case(&format!("lasso_dense/m={m}/10ep"), || {
+            black_box(lasso::solve_dense(&basis, &v, &cfg, None).unwrap());
+        });
+    }
+
+    // --- refit: segment means vs normal equations ----------------------
+    let v = sorted_values(1024, 2);
+    let basis = VBasis::new(&v);
+    let support: Vec<usize> = (0..basis.m()).step_by(4).collect();
+    suite.case("refit_fast/m=1024/h=256", || {
+        black_box(refit::refit_fast(&basis, &v, &support, None).unwrap());
+    });
+    suite.case("refit_normal_eq/m=1024/h=256", || {
+        black_box(refit::refit_normal_eq(&basis, &v, &support).unwrap());
+    });
+
+    // --- V ops: structured vs dense -------------------------------------
+    let alpha: Vec<f64> = (0..basis.m()).map(|i| (i % 7) as f64 * 0.1).collect();
+    let dense = basis.dense();
+    suite.case("v_apply_structured/m=1024", || {
+        black_box(basis.apply(&alpha));
+    });
+    suite.case("v_apply_dense/m=1024", || {
+        black_box(dense.matvec(&alpha).unwrap());
+    });
+
+    // --- k-means assignment: bisection vs linear scan -------------------
+    let cents = sorted_values(64, 3);
+    let pts = sorted_values(4096, 4);
+    suite.case("assign_bisect/m=4096/k=64", || {
+        let mut acc = 0usize;
+        for &p in &pts {
+            acc += assign_sorted(p, &cents);
+        }
+        black_box(acc);
+    });
+    suite.case("assign_linear/m=4096/k=64", || {
+        let mut acc = 0usize;
+        for &p in &pts {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, &cv) in cents.iter().enumerate() {
+                let d = (p - cv).abs();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            acc += best;
+        }
+        black_box(acc);
+    });
+
+    // --- unique decomposition -------------------------------------------
+    let mut rng = Pcg32::seeded(6);
+    let raw: Vec<f64> = (0..8192).map(|_| (rng.uniform(0.0, 1.0) * 500.0).round() / 500.0).collect();
+    suite.case("unique_decomp/n=8192", || {
+        black_box(UniqueDecomp::new(&raw).unwrap());
+    });
+
+    // --- coordinator round trip ------------------------------------------
+    let coord = sqlsq::coordinator::Coordinator::start(sqlsq::config::Config {
+        workers: 2,
+        engine: sqlsq::config::Engine::Native,
+        ..Default::default()
+    })
+    .unwrap();
+    let small: Vec<f64> = sorted_values(64, 7);
+    suite.case("coordinator_roundtrip/kmeans/m=64", || {
+        let r = coord
+            .quantize_blocking(
+                small.clone(),
+                sqlsq::quant::QuantMethod::KMeans,
+                sqlsq::quant::QuantOptions { target_values: 4, ..Default::default() },
+            )
+            .unwrap();
+        black_box(r.is_ok());
+    });
+    coord.shutdown();
+
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

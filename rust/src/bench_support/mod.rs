@@ -1,0 +1,248 @@
+//! Benchmark harness (S21) — the offline substitute for criterion
+//! (DESIGN §2).
+//!
+//! Criterion-like measurement loop: warmup, timed samples, robust stats
+//! (median/mean/stddev/min), per-iteration auto-scaling so fast closures
+//! are timed in batches, and a `black_box` to defeat dead-code
+//! elimination. Bench binaries (`rust/benches/*.rs`, `harness = false`)
+//! print one table row per case and can dump CSV for EXPERIMENTS.md.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported black box for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Measurement configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Target wall-clock per sample (iterations auto-scale to reach it).
+    pub sample_target: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            sample_target: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Summary statistics for one benchmark case (all in seconds/iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    /// Case label.
+    pub name: String,
+    /// Median time per iteration.
+    pub median: f64,
+    /// Mean time per iteration.
+    pub mean: f64,
+    /// Standard deviation across samples.
+    pub stddev: f64,
+    /// Fastest sample.
+    pub min: f64,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+}
+
+impl Stats {
+    /// Human row: `name  median  ±stddev  (min)`.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} ±{:>10} (min {:>12}) x{}",
+            self.name,
+            fmt_time(self.median),
+            fmt_time(self.stddev),
+            fmt_time(self.min),
+            self.iters_per_sample
+        )
+    }
+
+    /// CSV row: `name,median_s,mean_s,stddev_s,min_s`.
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{:.9},{:.9},{:.9},{:.9}",
+            self.name, self.median, self.mean, self.stddev, self.min
+        )
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run one benchmark case.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> Stats {
+    // Warmup + iteration calibration.
+    let warm_start = Instant::now();
+    let mut calib_iters = 0u64;
+    while warm_start.elapsed() < cfg.warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = cfg.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+    let iters_per_sample =
+        ((cfg.sample_target.as_secs_f64() / per_iter.max(1e-12)).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var =
+        samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+    Stats {
+        name: name.to_string(),
+        median,
+        mean,
+        stddev: var.sqrt(),
+        min: samples[0],
+        iters_per_sample,
+    }
+}
+
+/// A suite accumulates rows, prints them, and optionally writes CSV.
+pub struct Suite {
+    title: String,
+    cfg: BenchConfig,
+    rows: Vec<Stats>,
+}
+
+impl Suite {
+    /// New suite with the default config.
+    pub fn new(title: &str) -> Suite {
+        Self::with_config(title, BenchConfig::default())
+    }
+
+    /// New suite with a custom config.
+    pub fn with_config(title: &str, cfg: BenchConfig) -> Suite {
+        println!("\n== {title} ==");
+        Suite { title: title.to_string(), cfg, rows: Vec::new() }
+    }
+
+    /// Run and record one case.
+    pub fn case<F: FnMut()>(&mut self, name: &str, f: F) -> &Stats {
+        let stats = bench(name, &self.cfg, f);
+        println!("{}", stats.row());
+        self.rows.push(stats);
+        self.rows.last().unwrap()
+    }
+
+    /// All recorded rows.
+    pub fn rows(&self) -> &[Stats] {
+        &self.rows
+    }
+
+    /// Write `reports/bench_<slug>.csv`.
+    pub fn write_csv(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = dir.join(format!("bench_{slug}.csv"));
+        let mut text = String::from("name,median_s,mean_s,stddev_s,min_s\n");
+        for r in &self.rows {
+            text.push_str(&r.csv());
+            text.push('\n');
+        }
+        std::fs::write(&path, text)?;
+        Ok(path)
+    }
+}
+
+/// Fast config for CI / smoke runs (used by `cargo bench -- --quick` via
+/// env var `SQLSQ_BENCH_QUICK=1`).
+pub fn active_config() -> BenchConfig {
+    if std::env::var("SQLSQ_BENCH_QUICK").is_ok() {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            samples: 5,
+            sample_target: Duration::from_millis(2),
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            sample_target: Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let s = bench("noop-ish", &quick(), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median);
+        assert!(s.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let cfg = quick();
+        let fast = bench("fast", &cfg, || {
+            black_box((0..10u64).sum::<u64>());
+        });
+        let slow = bench("slow", &cfg, || {
+            black_box((0..100_000u64).map(|x| x.wrapping_mul(x)).sum::<u64>());
+        });
+        assert!(slow.median > fast.median * 5.0, "fast={} slow={}", fast.median, slow.median);
+    }
+
+    #[test]
+    fn rows_and_csv() {
+        let mut suite = Suite::with_config("Test Suite", quick());
+        suite.case("a", || {
+            black_box(1 + 1);
+        });
+        assert_eq!(suite.rows().len(), 1);
+        let dir = std::env::temp_dir().join("sqlsq_bench_test");
+        let path = suite.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("name,median_s"));
+        assert!(text.lines().count() == 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

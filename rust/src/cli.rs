@@ -1,0 +1,405 @@
+//! Command-line interface (S23). Hand-rolled argument parsing (clap is
+//! unavailable offline — DESIGN §2).
+//!
+//! ```text
+//! sqlsq quantize  --method l1_ls --values 8 [--lambda1 x] [--input f | --demo]
+//! sqlsq train     [--cache path]
+//! sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
+//! sqlsq serve     --jobs 200 [--engine native|runtime|auto] [--workers N]
+//! sqlsq selfcheck [--artifacts dir]
+//! sqlsq version | help
+//! ```
+
+use crate::config::{Config, Engine};
+use crate::coordinator::Coordinator;
+use crate::eval::{figures, workloads};
+use crate::quant::{self, QuantMethod, QuantOptions};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional (the subcommand).
+    pub command: String,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+    /// `--key value` flags.
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Parse raw args (excluding argv[0]).
+pub fn parse_args(raw: &[String]) -> Result<Args> {
+    let mut args = Args::default();
+    let mut it = raw.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(), // boolean flag
+            };
+            args.flags.insert(key.to_string(), value);
+        } else if args.command.is_empty() {
+            args.command = a.clone();
+        } else {
+            args.positionals.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn flag_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number '{v}'"))),
+        }
+    }
+
+    fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: bad number '{v}'"))),
+        }
+    }
+}
+
+const HELP: &str = "\
+sqlsq — Scalar Quantization as Sparse Least Square Optimization (full-system repro)
+
+USAGE:
+  sqlsq quantize  --method <id> [--values K] [--lambda1 X] [--lambda2 Y]
+                  [--input FILE | --demo] [--clamp lo,hi] [--seed N]
+  sqlsq train     [--cache PATH]
+  sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
+                  [--report-dir DIR]
+  sqlsq serve     [--jobs N] [--engine native|runtime|auto] [--workers N]
+                  [--artifacts DIR]
+  sqlsq selfcheck [--artifacts DIR]
+  sqlsq version | help
+
+METHODS: l1, l1_ls, l1_l2, l0, iter_l1, cluster_ls, kmeans, kmeans_exact,
+         gmm, data_transform";
+
+/// CLI entry (returns the process exit code).
+pub fn run() -> i32 {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+/// Testable dispatcher.
+pub fn dispatch(raw: &[String]) -> Result<()> {
+    let args = parse_args(raw)?;
+    match args.command.as_str() {
+        "" | "help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "version" => {
+            println!("sqlsq {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "quantize" => cmd_quantize(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        other => Err(Error::Config(format!("unknown command '{other}' (try help)"))),
+    }
+}
+
+fn load_input(args: &Args) -> Result<Vec<f64>> {
+    if let Some(path) = args.flag("input") {
+        let text = std::fs::read_to_string(path)?;
+        let mut data = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            for tok in t.split([',', ' ', '\t']).filter(|s| !s.is_empty()) {
+                data.push(tok.parse().map_err(|_| {
+                    Error::InvalidInput(format!("{path}:{}: bad number '{tok}'", ln + 1))
+                })?);
+            }
+        }
+        Ok(data)
+    } else {
+        // --demo (default): the Figure-5 digit image.
+        Ok(workloads::digit_image())
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let method_id = args.flag("method").unwrap_or("l1_ls");
+    let method = QuantMethod::from_id(method_id)
+        .ok_or_else(|| Error::Config(format!("unknown method '{method_id}'")))?;
+    let data = load_input(args)?;
+    let clamp = match args.flag("clamp") {
+        None => None,
+        Some(v) => {
+            let (a, b) = v
+                .split_once(',')
+                .ok_or_else(|| Error::Config("--clamp wants lo,hi".into()))?;
+            Some((
+                a.parse().map_err(|_| Error::Config("bad clamp lo".into()))?,
+                b.parse().map_err(|_| Error::Config("bad clamp hi".into()))?,
+            ))
+        }
+    };
+    let opts = QuantOptions {
+        lambda1: args.flag_f64("lambda1", 1e-2)?,
+        lambda2: args.flag_f64("lambda2", 0.0)?,
+        target_values: args.flag_usize("values", 16)?,
+        seed: args.flag_usize("seed", 0)? as u64,
+        clamp,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let out = quant::quantize(&data, method, &opts)?;
+    let dt = t0.elapsed();
+    println!("method            : {}", method.id());
+    println!("input length      : {}", data.len());
+    println!("distinct in       : {}", crate::linalg::stats::distinct_count_exact(&data));
+    println!("distinct out      : {}", out.distinct_values());
+    println!("l2 loss           : {:.6e}", out.l2_loss);
+    println!("clamped values    : {}", out.clamped);
+    println!("iterations        : {}", out.diag.iterations);
+    println!("nnz / lambda1     : {} / {:.3e}", out.diag.nnz, out.diag.lambda1);
+    println!("time              : {:?}", dt);
+    if let Some(path) = args.flag("output") {
+        let text: String = out.values.iter().map(|v| format!("{v}\n")).collect();
+        std::fs::write(path, text)?;
+        println!("wrote             : {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cache = args.flag("cache").map(PathBuf::from);
+    let nn = workloads::nn_workload(cache.as_deref())?;
+    println!("architecture      : 784-256-128-64-10 ({} params)", nn.mlp.param_count());
+    println!("train accuracy    : {:.4}", nn.train_acc);
+    println!("test accuracy     : {:.4}", nn.test_acc);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let report_dir = PathBuf::from(args.flag("report-dir").unwrap_or("reports"));
+    let needs_nn = matches!(which, "fig1" | "fig2" | "fig3" | "fig4" | "bitwidth" | "all");
+    let nn = if needs_nn { Some(workloads::nn_workload(None)?) } else { None };
+
+    let run = |name: &str| -> Result<()> {
+        let rep = match name {
+            "fig1" => figures::fig1(nn.as_ref().unwrap())?,
+            "fig2" => figures::fig2(nn.as_ref().unwrap())?,
+            "fig3" => figures::fig3(nn.as_ref().unwrap())?,
+            "fig4" => figures::fig4(nn.as_ref().unwrap())?,
+            "fig5" => figures::fig5(Some(&report_dir))?,
+            "fig6" => figures::fig6()?,
+            "fig7" => figures::fig7()?,
+            "fig8" => figures::fig8()?,
+            "crossover" => figures::crossover()?,
+            "ablations" => figures::ablations()?,
+            "bitwidth" => figures::bitwidth(nn.as_ref().unwrap())?,
+            "oor" => figures::out_of_range()?,
+            other => return Err(Error::Config(format!("unknown experiment '{other}'"))),
+        };
+        rep.print();
+        rep.write(&report_dir, name)?;
+        println!("\n[written to {}/{name}.txt + CSVs]", report_dir.display());
+        Ok(())
+    };
+
+    if which == "all" {
+        for name in [
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "crossover",
+            "ablations", "bitwidth", "oor",
+        ] {
+            run(name)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.flag_usize("jobs", 200)?;
+    let engine = Engine::parse(args.flag("engine").unwrap_or("auto"))?;
+    let cfg = Config {
+        workers: args.flag_usize("workers", Config::default().workers)?,
+        engine,
+        artifacts_dir: PathBuf::from(args.flag("artifacts").unwrap_or("artifacts")),
+        ..Default::default()
+    };
+    println!("starting coordinator: {} workers, engine {:?}", cfg.workers, cfg.engine);
+    let coord = Coordinator::start(cfg)?;
+
+    // Synthetic job mix: three data shapes × four methods.
+    let mut rng = crate::data::rng::Pcg32::seeded(args.flag_usize("seed", 1)? as u64);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let n = [64usize, 256, 640][i % 3];
+        let data: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let method = [
+            QuantMethod::L1LeastSquare,
+            QuantMethod::KMeans,
+            QuantMethod::ClusterLs,
+            QuantMethod::L1,
+        ][i % 4];
+        let opts = QuantOptions {
+            lambda1: 0.01,
+            target_values: 16,
+            seed: i as u64,
+            ..Default::default()
+        };
+        let (_, rx) = coord.submit(data, method, opts)?;
+        rxs.push(rx);
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx
+            .recv()
+            .map_err(|_| Error::Coordinator("worker dropped job".into()))?
+            .is_ok()
+        {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.shutdown();
+    println!("jobs              : {jobs} submitted, {ok} ok");
+    println!("wall time         : {wall:?}");
+    println!(
+        "throughput        : {:.1} jobs/s",
+        jobs as f64 / wall.as_secs_f64()
+    );
+    println!("metrics           : {}", snap.summary());
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    check_artifacts(&dir)
+}
+
+/// Self-check used by the CLI and smoke tests: every artifact loads,
+/// compiles, and the runtime agrees with the native engines.
+pub fn check_artifacts(dir: &Path) -> Result<()> {
+    use crate::coordinator::router::check_lasso_equivalence;
+    let mut ex = crate::runtime::Executor::open(dir)?;
+    println!("platform          : {}", ex.platform());
+    println!("max lasso bucket  : m={}", ex.max_lasso_m());
+    let mut rng = crate::data::rng::Pcg32::seeded(17);
+    let data: Vec<f64> = (0..300).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let (native, runtime) = check_lasso_equivalence(&mut ex, &data, 0.01)?;
+    let rel = (native - runtime).abs() / native.abs().max(1e-12);
+    println!("lasso loss        : native {native:.6e} vs runtime {runtime:.6e} (rel {rel:.2e})");
+    if rel > 0.20 {
+        return Err(Error::Runtime(format!(
+            "runtime/native divergence too large: {rel:.3}"
+        )));
+    }
+    println!("selfcheck OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_command_and_flags() {
+        let a = parse_args(&s(&["eval", "fig7", "--report-dir", "/tmp/r", "--quick"])).unwrap();
+        assert_eq!(a.command, "eval");
+        assert_eq!(a.positionals, vec!["fig7"]);
+        assert_eq!(a.flag("report-dir"), Some("/tmp/r"));
+        assert_eq!(a.flag("quick"), Some("true"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_and_version_run() {
+        dispatch(&s(&[])).unwrap();
+        dispatch(&s(&["help"])).unwrap();
+        dispatch(&s(&["version"])).unwrap();
+    }
+
+    #[test]
+    fn quantize_demo_runs() {
+        dispatch(&s(&["quantize", "--method", "kmeans", "--values", "8", "--clamp", "0,1"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn quantize_rejects_bad_method() {
+        assert!(dispatch(&s(&["quantize", "--method", "nope"])).is_err());
+    }
+
+    #[test]
+    fn quantize_from_file() {
+        let dir = std::env::temp_dir().join("sqlsq_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("in.txt");
+        std::fs::write(&input, "# data\n1.0, 1.1\n5.0 5.1\n9.0\n").unwrap();
+        let out = dir.join("out.txt");
+        dispatch(&s(&[
+            "quantize",
+            "--method",
+            "cluster_ls",
+            "--values",
+            "3",
+            "--input",
+            input.to_str().unwrap(),
+            "--output",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(out).unwrap();
+        assert_eq!(text.lines().count(), 5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn eval_fig7_writes_report() {
+        let dir = std::env::temp_dir().join("sqlsq_cli_eval_test");
+        dispatch(&s(&["eval", "fig7", "--report-dir", dir.to_str().unwrap()])).unwrap();
+        assert!(dir.join("fig7.txt").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn serve_small_native_run() {
+        dispatch(&s(&["serve", "--jobs", "12", "--engine", "native", "--workers", "2"])).unwrap();
+    }
+}

@@ -1,0 +1,129 @@
+//! Agglomerative 1-d quantization (paper ref [11]: Xiang & Joy 1994 used
+//! agglomerative clustering for color quantization).
+//!
+//! Classic bottom-up scheme on the value axis: start with every distinct
+//! value as its own cluster and repeatedly merge the adjacent pair with the
+//! minimal Ward cost `W₁W₂/(W₁+W₂)·(μ₁−μ₂)²` until `k` clusters remain.
+//! In 1-d only adjacent merges can be optimal, so the pair scan is exact.
+//! Deterministic — no seeds, no restarts — which makes it a useful contrast
+//! to the randomness-dependence the paper critiques in k-means.
+//!
+//! Implementation delegates the merge loop to
+//! [`crate::quant::merge::merge_to_target`] over the sorted values.
+
+use crate::quant::merge::merge_to_target;
+use crate::{Error, Result};
+
+/// Agglomerative result.
+#[derive(Debug, Clone)]
+pub struct AgglomResult {
+    /// Final cluster representatives (sorted, weighted means).
+    pub centroids: Vec<f64>,
+    /// Cluster index per input point (original order).
+    pub assignment: Vec<usize>,
+    /// Weighted within-cluster sum of squares.
+    pub inertia: f64,
+}
+
+/// Weighted agglomerative clustering of 1-d data down to `k` clusters.
+pub fn agglomerative_1d(data: &[f64], weights: Option<&[f64]>, k: usize) -> Result<AgglomResult> {
+    if data.is_empty() {
+        return Err(Error::InvalidInput("agglomerative: empty data".into()));
+    }
+    if k == 0 {
+        return Err(Error::InvalidParam("agglomerative: k must be ≥ 1".into()));
+    }
+    if let Some(w) = weights {
+        if w.len() != data.len() {
+            return Err(Error::InvalidInput("agglomerative: weights length mismatch".into()));
+        }
+    }
+    let n = data.len();
+    // Sort once; merge_to_target works on a piecewise-constant vector over
+    // the sorted axis, which "all-distinct" trivially is.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| data[a].partial_cmp(&data[b]).unwrap());
+    let sorted: Vec<f64> = order.iter().map(|&i| data[i]).collect();
+    let sorted_w: Option<Vec<f64>> = weights.map(|w| order.iter().map(|&i| w[i]).collect());
+
+    let merged = merge_to_target(&sorted, sorted_w.as_deref(), k);
+
+    // Extract centroids + assignment.
+    let mut centroids: Vec<f64> = merged.clone();
+    centroids.dedup();
+    let mut assignment = vec![0usize; n];
+    for (pos, &orig) in order.iter().enumerate() {
+        let c = centroids
+            .binary_search_by(|p| p.partial_cmp(&merged[pos]).unwrap())
+            .unwrap_or_else(|e| e.min(centroids.len() - 1));
+        assignment[orig] = c;
+    }
+    let mut inertia = 0.0;
+    for i in 0..n {
+        let w = weights.map_or(1.0, |ws| ws[i]);
+        inertia += w * (data[i] - centroids[assignment[i]]).powi(2);
+    }
+    Ok(AgglomResult { centroids, assignment, inertia })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kmeans::{kmeans_1d, KMeansConfig};
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn merges_tight_groups_first() {
+        let data = vec![1.0, 1.01, 5.0, 9.0, 9.02];
+        let r = agglomerative_1d(&data, None, 3).unwrap();
+        assert_eq!(r.centroids.len(), 3);
+        assert!((r.centroids[0] - 1.005).abs() < 1e-9);
+        assert!((r.centroids[1] - 5.0).abs() < 1e-9);
+        assert!((r.centroids[2] - 9.01).abs() < 1e-9);
+        assert_eq!(r.assignment, vec![0, 0, 1, 2, 2]);
+    }
+
+    #[test]
+    fn deterministic_no_seed_dependence() {
+        let mut rng = Pcg32::seeded(1);
+        let data: Vec<f64> = (0..200).map(|_| rng.uniform(0.0, 50.0)).collect();
+        let a = agglomerative_1d(&data, None, 8).unwrap();
+        let b = agglomerative_1d(&data, None, 8).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn competitive_with_kmeans() {
+        let mut rng = Pcg32::seeded(2);
+        let data: Vec<f64> = (0..300)
+            .map(|i| rng.normal_with((i % 4) as f64 * 10.0, 0.6))
+            .collect();
+        let ag = agglomerative_1d(&data, None, 4).unwrap();
+        let km = kmeans_1d(&data, None, &KMeansConfig { k: 4, ..Default::default() }).unwrap();
+        assert!(ag.inertia <= km.inertia * 2.0, "ag {} vs km {}", ag.inertia, km.inertia);
+    }
+
+    #[test]
+    fn weighted_merging() {
+        let data = vec![0.0, 1.0, 10.0];
+        let r = agglomerative_1d(&data, Some(&[100.0, 1.0, 1.0]), 2).unwrap();
+        // 0 and 1 merge (closest); mean pulled hard toward 0.
+        assert!(r.centroids[0] < 0.05, "{:?}", r.centroids);
+        assert_eq!(r.centroids.len(), 2);
+    }
+
+    #[test]
+    fn k_geq_distinct_is_lossless() {
+        let data = vec![3.0, 1.0, 2.0, 1.0];
+        let r = agglomerative_1d(&data, None, 5).unwrap();
+        assert!(r.inertia < 1e-12);
+        assert_eq!(r.centroids.len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(agglomerative_1d(&[], None, 2).is_err());
+        assert!(agglomerative_1d(&[1.0], None, 0).is_err());
+        assert!(agglomerative_1d(&[1.0], Some(&[1.0, 2.0]), 1).is_err());
+    }
+}

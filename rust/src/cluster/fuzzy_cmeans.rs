@@ -1,0 +1,233 @@
+//! Fuzzy c-means clustering (paper §2 discussion, refs [13][14]).
+//!
+//! The paper excludes fuzzy c-means from its experiments, citing Wen &
+//! Celebi 2011: "it will take longer time than k-means (hard c-means), yet
+//! the performance [is] not significantly better." We implement it anyway
+//! as an ablation so that claim is *measured* here rather than assumed —
+//! see `benches/ablations.rs`.
+//!
+//! Standard FCM with fuzzifier `f`: memberships
+//! `u_ic = 1 / Σ_j (|x_i − v_c| / |x_i − v_j|)^{2/(f−1)}`, centroids
+//! `v_c = Σ_i w_i u_ic^f x_i / Σ_i w_i u_ic^f`. Hard assignment at the end
+//! by argmax membership ("the membership should be computed by taking
+//! argmax", §2).
+
+use crate::data::rng::Pcg32;
+use crate::{Error, Result};
+
+/// Configuration for [`fuzzy_cmeans_1d`].
+#[derive(Debug, Clone)]
+pub struct FcmConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Fuzzifier `f > 1` (2.0 is the universal default).
+    pub fuzzifier: f64,
+    /// Iteration budget.
+    pub max_iters: usize,
+    /// Convergence threshold on the largest centroid move.
+    pub tol: f64,
+    /// RNG seed for initialization.
+    pub seed: u64,
+}
+
+impl Default for FcmConfig {
+    fn default() -> Self {
+        FcmConfig { k: 8, fuzzifier: 2.0, max_iters: 300, tol: 1e-9, seed: 0 }
+    }
+}
+
+/// FCM result.
+#[derive(Debug, Clone)]
+pub struct FcmResult {
+    /// Final centroids (sorted ascending).
+    pub centroids: Vec<f64>,
+    /// Argmax-membership assignment per point.
+    pub assignment: Vec<usize>,
+    /// Weighted hard inertia (against argmax assignment).
+    pub inertia: f64,
+    /// Iterations consumed.
+    pub iterations: usize,
+    /// Converged within budget?
+    pub converged: bool,
+}
+
+/// Weighted 1-d fuzzy c-means.
+pub fn fuzzy_cmeans_1d(data: &[f64], weights: Option<&[f64]>, cfg: &FcmConfig) -> Result<FcmResult> {
+    if data.is_empty() {
+        return Err(Error::InvalidInput("fcm: empty data".into()));
+    }
+    if cfg.k == 0 {
+        return Err(Error::InvalidParam("fcm: k must be ≥ 1".into()));
+    }
+    if cfg.fuzzifier <= 1.0 {
+        return Err(Error::InvalidParam("fcm: fuzzifier must be > 1".into()));
+    }
+    let n = data.len();
+    let ones;
+    let pw: &[f64] = match weights {
+        Some(w) => {
+            if w.len() != n {
+                return Err(Error::InvalidInput("fcm: weights length mismatch".into()));
+            }
+            w
+        }
+        None => {
+            ones = vec![1.0; n];
+            &ones
+        }
+    };
+    let k = cfg.k.min(n);
+    let exp = 2.0 / (cfg.fuzzifier - 1.0);
+
+    // k-means++-style spread init (deterministic per seed).
+    let mut rng = Pcg32::new(cfg.seed, 404);
+    let mut centroids = {
+        let first = rng.weighted_index(pw).unwrap_or(0);
+        let mut cs = vec![data[first]];
+        let mut d2: Vec<f64> = data.iter().map(|&x| (x - data[first]).powi(2)).collect();
+        while cs.len() < k {
+            let idx = rng.weighted_index(&d2).unwrap_or_else(|| rng.gen_range(n));
+            cs.push(data[idx]);
+            for i in 0..n {
+                d2[i] = d2[i].min((data[i] - data[idx]).powi(2));
+            }
+        }
+        cs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        cs
+    };
+
+    let mut u = vec![0.0f64; n * k];
+    let mut iterations = 0usize;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        // Membership update.
+        for i in 0..n {
+            // Exact-hit handling: membership 1 on the coincident centroid.
+            if let Some(hit) = centroids.iter().position(|&c| (data[i] - c).abs() < 1e-300) {
+                for c in 0..k {
+                    u[i * k + c] = if c == hit { 1.0 } else { 0.0 };
+                }
+                continue;
+            }
+            let inv: Vec<f64> = (0..k)
+                .map(|c| 1.0 / (data[i] - centroids[c]).abs().powf(exp))
+                .collect();
+            let s: f64 = inv.iter().sum();
+            for c in 0..k {
+                u[i * k + c] = inv[c] / s;
+            }
+        }
+        // Centroid update.
+        let mut max_move = 0.0f64;
+        for c in 0..k {
+            let (mut num, mut den) = (0.0, 0.0);
+            for i in 0..n {
+                let uf = u[i * k + c].powf(cfg.fuzzifier) * pw[i];
+                num += uf * data[i];
+                den += uf;
+            }
+            if den > 0.0 {
+                let nc = num / den;
+                max_move = max_move.max((nc - centroids[c]).abs());
+                centroids[c] = nc;
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if max_move < cfg.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // Hard assignment by nearest centroid (≡ argmax membership for FCM).
+    let mut assignment = vec![0usize; n];
+    let mut inertia = 0.0;
+    for i in 0..n {
+        let a = crate::cluster::kmeans::assign_sorted(data[i], &centroids);
+        assignment[i] = a;
+        inertia += pw[i] * (data[i] - centroids[a]).powi(2);
+    }
+    Ok(FcmResult { centroids, assignment, inertia, iterations, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kmeans::{kmeans_1d, KMeansConfig};
+
+    fn three_groups(seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut v = Vec::new();
+        for c in [1.0, 5.0, 9.0] {
+            for _ in 0..40 {
+                v.push(c + rng.normal_with(0.0, 0.2));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn finds_separated_clusters() {
+        let data = three_groups(1);
+        let r = fuzzy_cmeans_1d(&data, None, &FcmConfig { k: 3, ..Default::default() }).unwrap();
+        assert!((r.centroids[0] - 1.0).abs() < 0.2, "{:?}", r.centroids);
+        assert!((r.centroids[1] - 5.0).abs() < 0.2);
+        assert!((r.centroids[2] - 9.0).abs() < 0.2);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn comparable_to_kmeans_not_better() {
+        // The Wen & Celebi claim the paper leans on: inertia ≈ k-means.
+        let data = three_groups(2);
+        let fcm = fuzzy_cmeans_1d(&data, None, &FcmConfig { k: 3, ..Default::default() }).unwrap();
+        let km = kmeans_1d(&data, None, &KMeansConfig { k: 3, ..Default::default() }).unwrap();
+        assert!(fcm.inertia <= km.inertia * 1.5, "fcm {} vs km {}", fcm.inertia, km.inertia);
+        assert!(km.inertia <= fcm.inertia * 1.5);
+    }
+
+    #[test]
+    fn exact_centroid_hit_is_stable() {
+        let data = vec![1.0, 1.0, 1.0, 5.0];
+        let r = fuzzy_cmeans_1d(&data, None, &FcmConfig { k: 2, ..Default::default() }).unwrap();
+        assert!(r.centroids.iter().all(|c| c.is_finite()));
+        assert!((r.centroids[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_shifts_centroids() {
+        let data = vec![0.0, 10.0];
+        let r = fuzzy_cmeans_1d(
+            &data,
+            Some(&[99.0, 1.0]),
+            &FcmConfig { k: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(r.centroids[0] < 1.0, "heavy point should dominate: {:?}", r.centroids);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(fuzzy_cmeans_1d(&[], None, &FcmConfig::default()).is_err());
+        assert!(
+            fuzzy_cmeans_1d(&[1.0], None, &FcmConfig { k: 0, ..Default::default() }).is_err()
+        );
+        assert!(fuzzy_cmeans_1d(
+            &[1.0],
+            None,
+            &FcmConfig { fuzzifier: 1.0, ..Default::default() }
+        )
+        .is_err());
+        assert!(fuzzy_cmeans_1d(&[1.0], Some(&[1.0, 2.0]), &FcmConfig::default()).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let data = three_groups(3);
+        let cfg = FcmConfig { k: 4, seed: 9, ..Default::default() };
+        let a = fuzzy_cmeans_1d(&data, None, &cfg).unwrap();
+        let b = fuzzy_cmeans_1d(&data, None, &cfg).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

@@ -1,0 +1,334 @@
+//! Mixture-of-Gaussians (EM) quantization — the paper's second baseline.
+//!
+//! Follows the soft weight-sharing lineage the paper cites ([15] Nowlan &
+//! Hinton 1992, [16] Ullrich et al. 2017): fit a k-component 1-d GMM to the
+//! values by EM, then quantize each value to the mean of its
+//! maximum-responsibility component ("the membership should be computed by
+//! taking argmax").
+//!
+//! Numerically careful: responsibilities in log-space, variance floors, and
+//! component-collapse repair (a component whose weight underflows is
+//! re-seeded at the point with the worst likelihood).
+
+use crate::data::rng::Pcg32;
+use crate::{Error, Result};
+
+/// Configuration for [`gmm_1d`].
+#[derive(Debug, Clone)]
+pub struct GmmConfig {
+    /// Number of mixture components.
+    pub k: usize,
+    /// EM iteration budget.
+    pub max_iters: usize,
+    /// Convergence threshold on mean log-likelihood improvement.
+    pub tol: f64,
+    /// RNG seed (initialization).
+    pub seed: u64,
+}
+
+impl Default for GmmConfig {
+    fn default() -> Self {
+        GmmConfig { k: 8, max_iters: 200, tol: 1e-9, seed: 0 }
+    }
+}
+
+/// Fitted mixture + hard assignments.
+#[derive(Debug, Clone)]
+pub struct GmmResult {
+    /// Component means (sorted ascending).
+    pub means: Vec<f64>,
+    /// Component standard deviations (aligned with `means`).
+    pub stds: Vec<f64>,
+    /// Mixing weights (aligned, sum to 1).
+    pub weights: Vec<f64>,
+    /// Argmax-responsibility component per input point.
+    pub assignment: Vec<usize>,
+    /// Final mean log-likelihood.
+    pub log_likelihood: f64,
+    /// EM iterations consumed.
+    pub iterations: usize,
+    /// Converged within budget?
+    pub converged: bool,
+}
+
+#[inline]
+fn log_gauss(x: f64, mean: f64, var: f64) -> f64 {
+    let d = x - mean;
+    -0.5 * (d * d / var + var.ln() + (2.0 * std::f64::consts::PI).ln())
+}
+
+#[inline]
+fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m.is_infinite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// Fit a weighted 1-d GMM by EM. `point_weights` carries value
+/// multiplicities (same convention as k-means).
+pub fn gmm_1d(data: &[f64], point_weights: Option<&[f64]>, cfg: &GmmConfig) -> Result<GmmResult> {
+    if data.is_empty() {
+        return Err(Error::InvalidInput("gmm: empty data".into()));
+    }
+    if cfg.k == 0 {
+        return Err(Error::InvalidParam("gmm: k must be ≥ 1".into()));
+    }
+    let n = data.len();
+    let ones;
+    let pw: &[f64] = match point_weights {
+        Some(w) => {
+            if w.len() != n {
+                return Err(Error::InvalidInput("gmm: weights length mismatch".into()));
+            }
+            w
+        }
+        None => {
+            ones = vec![1.0; n];
+            &ones
+        }
+    };
+    let total_w: f64 = pw.iter().sum();
+    let k = cfg.k.min(n);
+
+    // Initialization: k-means++-style spread means, global variance.
+    let mut rng = Pcg32::new(cfg.seed, 77);
+    let gmean = data.iter().zip(pw).map(|(x, w)| x * w).sum::<f64>() / total_w;
+    let gvar = data
+        .iter()
+        .zip(pw)
+        .map(|(x, w)| w * (x - gmean) * (x - gmean))
+        .sum::<f64>()
+        / total_w;
+    let span = crate::linalg::stats::max(data) - crate::linalg::stats::min(data);
+    let var_floor = (1e-6 * span * span).max(1e-12);
+
+    let mut means: Vec<f64> = {
+        let first = rng.weighted_index(pw).unwrap_or(0);
+        let mut ms = vec![data[first]];
+        let mut d2: Vec<f64> = data.iter().map(|&x| (x - data[first]).powi(2)).collect();
+        while ms.len() < k {
+            let idx = rng.weighted_index(&d2).unwrap_or_else(|| rng.gen_range(n));
+            ms.push(data[idx]);
+            for i in 0..n {
+                d2[i] = d2[i].min((data[i] - data[idx]).powi(2));
+            }
+        }
+        ms
+    };
+    let mut vars = vec![gvar.max(var_floor); k];
+    let mut mix = vec![1.0 / k as f64; k];
+
+    let mut resp = vec![0.0f64; n * k]; // responsibilities, row-major [n][k]
+    let mut prev_ll = f64::NEG_INFINITY;
+    let mut iterations = 0usize;
+    let mut converged = false;
+    let mut logp = vec![0.0f64; k];
+
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        // E-step (log-space).
+        let mut ll = 0.0;
+        for i in 0..n {
+            for c in 0..k {
+                logp[c] = mix[c].max(1e-300).ln() + log_gauss(data[i], means[c], vars[c]);
+            }
+            let lse = log_sum_exp(&logp);
+            ll += pw[i] * lse;
+            for c in 0..k {
+                resp[i * k + c] = (logp[c] - lse).exp();
+            }
+        }
+        ll /= total_w;
+
+        // M-step (weighted by point multiplicities).
+        for c in 0..k {
+            let mut nk = 0.0;
+            let mut sx = 0.0;
+            for i in 0..n {
+                let r = pw[i] * resp[i * k + c];
+                nk += r;
+                sx += r * data[i];
+            }
+            if nk < 1e-12 * total_w {
+                // Collapse repair: re-seed at the point worst explained.
+                let worst = (0..n)
+                    .max_by(|&a, &b| {
+                        let la = (0..k)
+                            .map(|cc| mix[cc].max(1e-300).ln() + log_gauss(data[a], means[cc], vars[cc]))
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        let lb = (0..k)
+                            .map(|cc| mix[cc].max(1e-300).ln() + log_gauss(data[b], means[cc], vars[cc]))
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        lb.partial_cmp(&la).unwrap() // min likelihood = max badness
+                    })
+                    .unwrap_or(0);
+                means[c] = data[worst];
+                vars[c] = gvar.max(var_floor);
+                mix[c] = 1.0 / k as f64;
+                continue;
+            }
+            means[c] = sx / nk;
+            let mut sv = 0.0;
+            for i in 0..n {
+                let r = pw[i] * resp[i * k + c];
+                sv += r * (data[i] - means[c]) * (data[i] - means[c]);
+            }
+            vars[c] = (sv / nk).max(var_floor);
+            mix[c] = nk / total_w;
+        }
+        // Renormalize mixing weights (repair may have broken the simplex).
+        let ms: f64 = mix.iter().sum();
+        for m in &mut mix {
+            *m /= ms;
+        }
+
+        if (ll - prev_ll).abs() < cfg.tol {
+            prev_ll = ll;
+            converged = true;
+            break;
+        }
+        prev_ll = ll;
+    }
+
+    // Hard assignment by argmax responsibility against final params.
+    let mut assignment = vec![0usize; n];
+    for i in 0..n {
+        let mut best = f64::NEG_INFINITY;
+        for c in 0..k {
+            let lp = mix[c].max(1e-300).ln() + log_gauss(data[i], means[c], vars[c]);
+            if lp > best {
+                best = lp;
+                assignment[i] = c;
+            }
+        }
+    }
+
+    // Sort components by mean, remapping everything.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| means[a].partial_cmp(&means[b]).unwrap());
+    let inv: Vec<usize> = {
+        let mut inv = vec![0; k];
+        for (new, &old) in order.iter().enumerate() {
+            inv[old] = new;
+        }
+        inv
+    };
+    let means_s: Vec<f64> = order.iter().map(|&i| means[i]).collect();
+    let stds_s: Vec<f64> = order.iter().map(|&i| vars[i].sqrt()).collect();
+    let mix_s: Vec<f64> = order.iter().map(|&i| mix[i]).collect();
+    for a in &mut assignment {
+        *a = inv[*a];
+    }
+
+    Ok(GmmResult {
+        means: means_s,
+        stds: stds_s,
+        weights: mix_s,
+        assignment,
+        log_likelihood: prev_ll,
+        iterations,
+        converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bimodal(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    rng.normal_with(0.0, 0.5)
+                } else {
+                    rng.normal_with(10.0, 0.5)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_two_modes() {
+        let data = bimodal(400, 1);
+        let r = gmm_1d(&data, None, &GmmConfig { k: 2, ..Default::default() }).unwrap();
+        assert!((r.means[0] - 0.0).abs() < 0.3, "means={:?}", r.means);
+        assert!((r.means[1] - 10.0).abs() < 0.3);
+        assert!((r.weights[0] - 0.5).abs() < 0.1);
+        assert!(r.stds[0] < 1.0 && r.stds[1] < 1.0);
+    }
+
+    #[test]
+    fn assignment_separates_modes() {
+        let data = bimodal(200, 2);
+        let r = gmm_1d(&data, None, &GmmConfig { k: 2, ..Default::default() }).unwrap();
+        for (i, &x) in data.iter().enumerate() {
+            if x < 5.0 {
+                assert_eq!(r.assignment[i], 0, "x={x}");
+            } else {
+                assert_eq!(r.assignment[i], 1, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn means_sorted_weights_normalized() {
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<f64> = (0..300).map(|_| rng.uniform(0.0, 50.0)).collect();
+        let r = gmm_1d(&data, None, &GmmConfig { k: 6, ..Default::default() }).unwrap();
+        assert!(r.means.windows(2).all(|p| p[0] <= p[1]));
+        assert!((r.weights.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r.assignment.iter().all(|&a| a < r.means.len()));
+    }
+
+    #[test]
+    fn weighted_pulls_means() {
+        let vals = [0.0, 1.0, 9.0, 10.0];
+        let heavy_low = gmm_1d(
+            &vals,
+            Some(&[50.0, 50.0, 1.0, 1.0]),
+            &GmmConfig { k: 2, ..Default::default() },
+        )
+        .unwrap();
+        // Low cluster dominates the mixture weight.
+        assert!(heavy_low.weights[0] > 0.8, "weights={:?}", heavy_low.weights);
+    }
+
+    #[test]
+    fn loglik_non_decreasing_overall() {
+        let data = bimodal(100, 4);
+        let short = gmm_1d(&data, None, &GmmConfig { k: 3, max_iters: 2, ..Default::default() })
+            .unwrap();
+        let long = gmm_1d(&data, None, &GmmConfig { k: 3, max_iters: 100, ..Default::default() })
+            .unwrap();
+        assert!(long.log_likelihood >= short.log_likelihood - 1e-6);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let data = bimodal(100, 5);
+        let cfg = GmmConfig { k: 3, seed: 9, ..Default::default() };
+        let a = gmm_1d(&data, None, &cfg).unwrap();
+        let b = gmm_1d(&data, None, &cfg).unwrap();
+        assert_eq!(a.means, b.means);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(gmm_1d(&[], None, &GmmConfig::default()).is_err());
+        assert!(gmm_1d(&[1.0], None, &GmmConfig { k: 0, ..Default::default() }).is_err());
+        assert!(gmm_1d(&[1.0], Some(&[1.0, 2.0]), &GmmConfig::default()).is_err());
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let r = gmm_1d(&[2.0; 20], None, &GmmConfig { k: 3, ..Default::default() }).unwrap();
+        // All means collapse to 2.0; must not NaN.
+        for m in &r.means {
+            assert!((m - 2.0).abs() < 1e-6);
+            assert!(m.is_finite());
+        }
+    }
+}

@@ -1,0 +1,470 @@
+//! 1-d k-means (Lloyd's algorithm) — the paper's primary baseline.
+//!
+//! Deliberately faithful to the practice the paper critiques (§1, §4):
+//! k-means++ initialization, `T` restarts with different seeds keeping the
+//! best inertia ("usually 5 to 10 times"), heuristic Lloyd iterations, and
+//! *observable* pathologies — empty-cluster events are counted and surfaced
+//! so the evaluation harness can reproduce the paper's claim that bad
+//! initializations produce empty/out-of-range clusters.
+//!
+//! Supports per-point multiplicity weights so quantization can cluster the
+//! unique values `ŵ` weighted by their counts (equivalent to clustering the
+//! full vector, at `O(m)` instead of `O(n)`).
+
+use crate::data::rng::Pcg32;
+use crate::{Error, Result};
+
+/// Initialization strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KMeansInit {
+    /// k-means++ D² sampling (the robust default).
+    #[default]
+    KMeansPP,
+    /// Classic naive init: centroids drawn uniformly from
+    /// `[μ − 2.5σ, μ + 2.5σ]` of the data. This is the "bad random
+    /// initialization" the paper's claim 1 critiques — it can place
+    /// centroids outside the data range, and with repair disabled an empty
+    /// cluster keeps its out-of-range value (§4.2's observation).
+    RandomValues,
+}
+
+/// Configuration for [`kmeans_1d`].
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    /// Number of clusters `k ≥ 1`.
+    pub k: usize,
+    /// Restarts with fresh init seeds; best inertia wins.
+    pub restarts: usize,
+    /// Lloyd iteration budget per restart.
+    pub max_iters: usize,
+    /// Convergence threshold on the largest centroid move.
+    pub tol: f64,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Initialization strategy.
+    pub init: KMeansInit,
+    /// Repair empty clusters by re-seeding at the farthest point. Disable
+    /// to reproduce the paper's empty/out-of-range-cluster pathology.
+    pub repair_empty: bool,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig {
+            k: 8,
+            restarts: 10,
+            max_iters: 300,
+            tol: 1e-10,
+            seed: 0,
+            init: KMeansInit::KMeansPP,
+            repair_empty: true,
+        }
+    }
+}
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Final centroids, sorted ascending.
+    pub centroids: Vec<f64>,
+    /// Cluster index per input point (into `centroids`).
+    pub assignment: Vec<usize>,
+    /// Weighted within-cluster sum of squares.
+    pub inertia: f64,
+    /// Total Lloyd iterations across all restarts.
+    pub iterations: usize,
+    /// Empty-cluster repair events across all restarts (paper claim 1).
+    pub empty_cluster_events: usize,
+    /// Whether the winning restart converged within budget.
+    pub converged: bool,
+}
+
+/// Assign each point to the nearest of the *sorted* centroids via midpoint
+/// bisection — O(log k) per point instead of O(k).
+#[inline]
+pub fn assign_sorted(x: f64, centroids: &[f64]) -> usize {
+    debug_assert!(!centroids.is_empty());
+    // partition_point gives the first centroid > x; nearest is it or the
+    // previous one.
+    let i = centroids.partition_point(|&c| c < x);
+    if i == 0 {
+        0
+    } else if i == centroids.len() {
+        centroids.len() - 1
+    } else if (x - centroids[i - 1]) <= (centroids[i] - x) {
+        i - 1
+    } else {
+        i
+    }
+}
+
+/// k-means++ seeding (weighted D² sampling).
+fn kmeanspp_init(data: &[f64], weights: &[f64], k: usize, rng: &mut Pcg32) -> Vec<f64> {
+    let n = data.len();
+    let first = rng.weighted_index(weights).unwrap_or(0);
+    let mut centroids = vec![data[first]];
+    let mut d2: Vec<f64> = data
+        .iter()
+        .zip(weights)
+        .map(|(&x, &w)| w * (x - data[first]) * (x - data[first]))
+        .collect();
+    while centroids.len() < k {
+        let idx = match rng.weighted_index(&d2) {
+            Some(i) => i,
+            // All remaining distances zero (fewer distinct points than k):
+            // duplicate an arbitrary point; Lloyd will report empties.
+            None => rng.gen_range(n),
+        };
+        let c = data[idx];
+        centroids.push(c);
+        for i in 0..n {
+            let nd = weights[i] * (data[i] - c) * (data[i] - c);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centroids
+}
+
+/// Merge-pass assignment for SORTED data against sorted centroids:
+/// O(m + k) instead of O(m log k). Fills `assignment` and the per-cluster
+/// accumulators; returns the weighted inertia of this assignment.
+#[allow(clippy::too_many_arguments)]
+fn assign_sorted_merge(
+    data: &[f64],
+    weights: &[f64],
+    centroids: &[f64],
+    assignment: &mut [usize],
+    sums: &mut [f64],
+    wsum: &mut [f64],
+) -> f64 {
+    let k = centroids.len();
+    let mut c = 0usize;
+    let mut inertia = 0.0;
+    for (i, (&x, &w)) in data.iter().zip(weights).enumerate() {
+        // Advance the centroid cursor while the next centroid is closer.
+        while c + 1 < k && (x - centroids[c + 1]).abs() <= (x - centroids[c]).abs() {
+            c += 1;
+        }
+        assignment[i] = c;
+        sums[c] += w * x;
+        wsum[c] += w;
+        let d = x - centroids[c];
+        inertia += w * d * d;
+    }
+    inertia
+}
+
+struct LloydOutcome {
+    centroids: Vec<f64>,
+    assignment: Vec<usize>,
+    inertia: f64,
+    iterations: usize,
+    empty_events: usize,
+    converged: bool,
+}
+
+fn lloyd(
+    data: &[f64],
+    weights: &[f64],
+    mut centroids: Vec<f64>,
+    cfg: &KMeansConfig,
+    data_sorted: bool,
+) -> LloydOutcome {
+    let n = data.len();
+    let k = centroids.len();
+    let mut assignment = vec![0usize; n];
+    let mut sums = vec![0.0f64; k];
+    let mut wsum = vec![0.0f64; k];
+    let mut empty_events = 0usize;
+    let mut iterations = 0usize;
+    let mut converged = false;
+    let mut prev_inertia = f64::INFINITY;
+
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        // Assignment step (centroids kept sorted). Sorted inputs take the
+        // O(m + k) merge pass (§Perf) which also yields the inertia for
+        // the relative-improvement stop.
+        sums.fill(0.0);
+        wsum.fill(0.0);
+        let iter_inertia = if data_sorted {
+            assign_sorted_merge(data, weights, &centroids, &mut assignment, &mut sums, &mut wsum)
+        } else {
+            let mut acc = 0.0;
+            for i in 0..n {
+                let a = assign_sorted(data[i], &centroids);
+                assignment[i] = a;
+                sums[a] += weights[i] * data[i];
+                wsum[a] += weights[i];
+                let d = data[i] - centroids[a];
+                acc += weights[i] * d * d;
+            }
+            acc
+        };
+        // Update step + (optional) empty-cluster repair.
+        let mut max_move = 0.0f64;
+        for c in 0..k {
+            if wsum[c] > 0.0 {
+                let nc = sums[c] / wsum[c];
+                max_move = max_move.max((nc - centroids[c]).abs());
+                centroids[c] = nc;
+            } else {
+                empty_events += 1;
+                if !cfg.repair_empty {
+                    // Paper pathology: the empty cluster keeps whatever
+                    // (possibly out-of-range) value init gave it.
+                    continue;
+                }
+                // Repair: move to the point farthest from its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = weights[a] * (data[a] - centroids[assignment[a]]).powi(2);
+                        let db = weights[b] * (data[b] - centroids[assignment[b]]).powi(2);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap_or(0);
+                max_move = f64::INFINITY; // force another iteration
+                centroids[c] = data[far];
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if max_move < cfg.tol {
+            converged = true;
+            break;
+        }
+        // Relative-inertia stop (sklearn-style): Lloyd's tail oscillation
+        // can keep centroid moves above any absolute tol long after the
+        // objective has converged (§Perf).
+        if max_move.is_finite()
+            && (prev_inertia - iter_inertia).abs() <= 1e-6 * iter_inertia.max(1e-300)
+        {
+            converged = true;
+            break;
+        }
+        prev_inertia = iter_inertia;
+    }
+
+    // Final assignment + inertia against the final centroids.
+    let mut inertia = 0.0;
+    for i in 0..n {
+        let a = assign_sorted(data[i], &centroids);
+        assignment[i] = a;
+        inertia += weights[i] * (data[i] - centroids[a]) * (data[i] - centroids[a]);
+    }
+    LloydOutcome { centroids, assignment, inertia, iterations, empty_events, converged }
+}
+
+/// Weighted 1-d k-means with k-means++ init and multi-restart.
+pub fn kmeans_1d(data: &[f64], weights: Option<&[f64]>, cfg: &KMeansConfig) -> Result<KMeansResult> {
+    if data.is_empty() {
+        return Err(Error::InvalidInput("kmeans: empty data".into()));
+    }
+    if cfg.k == 0 {
+        return Err(Error::InvalidParam("kmeans: k must be ≥ 1".into()));
+    }
+    if cfg.restarts == 0 {
+        return Err(Error::InvalidParam("kmeans: restarts must be ≥ 1".into()));
+    }
+    let ones;
+    let weights = match weights {
+        Some(w) => {
+            if w.len() != data.len() {
+                return Err(Error::InvalidInput("kmeans: weights length mismatch".into()));
+            }
+            w
+        }
+        None => {
+            ones = vec![1.0; data.len()];
+            &ones
+        }
+    };
+    let k = cfg.k.min(data.len());
+    let data_sorted = data.windows(2).all(|p| p[0] <= p[1]);
+
+    let mut best: Option<LloydOutcome> = None;
+    let mut total_iters = 0usize;
+    let mut total_empty = 0usize;
+    for t in 0..cfg.restarts {
+        let mut rng = Pcg32::new(cfg.seed, 1000 + t as u64);
+        let init = match cfg.init {
+            KMeansInit::KMeansPP => kmeanspp_init(data, weights, k, &mut rng),
+            KMeansInit::RandomValues => {
+                let mean = crate::linalg::stats::weighted_mean(data, weights);
+                let var = data
+                    .iter()
+                    .zip(weights)
+                    .map(|(&x, &w)| w * (x - mean) * (x - mean))
+                    .sum::<f64>()
+                    / weights.iter().sum::<f64>().max(1e-300);
+                let s = var.sqrt();
+                let mut c: Vec<f64> =
+                    (0..k).map(|_| rng.uniform(mean - 2.5 * s, mean + 2.5 * s)).collect();
+                c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                c
+            }
+        };
+        let out = lloyd(data, weights, init, cfg, data_sorted);
+        total_iters += out.iterations;
+        total_empty += out.empty_events;
+        if best.as_ref().map_or(true, |b| out.inertia < b.inertia) {
+            best = Some(out);
+        }
+    }
+    let best = best.unwrap();
+    Ok(KMeansResult {
+        centroids: best.centroids,
+        assignment: best.assignment,
+        inertia: best.inertia,
+        iterations: total_iters,
+        empty_cluster_events: total_empty,
+        converged: best.converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_sorted_correct() {
+        let c = [0.0, 1.0, 10.0];
+        assert_eq!(assign_sorted(-5.0, &c), 0);
+        assert_eq!(assign_sorted(0.4, &c), 0);
+        assert_eq!(assign_sorted(0.6, &c), 1);
+        assert_eq!(assign_sorted(5.0, &c), 1);
+        assert_eq!(assign_sorted(6.0, &c), 2);
+        assert_eq!(assign_sorted(99.0, &c), 2);
+    }
+
+    #[test]
+    fn assign_matches_linear_scan() {
+        let mut rng = Pcg32::seeded(1);
+        let mut c: Vec<f64> = (0..7).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for _ in 0..500 {
+            let x = rng.uniform(-6.0, 6.0);
+            let fast = assign_sorted(x, &c);
+            let slow = (0..c.len())
+                .min_by(|&a, &b| {
+                    ((x - c[a]).abs()).partial_cmp(&(x - c[b]).abs()).unwrap()
+                })
+                .unwrap();
+            assert!(
+                ((x - c[fast]).abs() - (x - c[slow]).abs()).abs() < 1e-12,
+                "x={x} fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn three_obvious_clusters() {
+        let data: Vec<f64> = vec![0.9, 1.0, 1.1, 4.9, 5.0, 5.1, 9.0, 9.1, 8.9];
+        let r = kmeans_1d(&data, None, &KMeansConfig { k: 3, ..Default::default() }).unwrap();
+        assert_eq!(r.centroids.len(), 3);
+        assert!((r.centroids[0] - 1.0).abs() < 1e-6);
+        assert!((r.centroids[1] - 5.0).abs() < 1e-6);
+        assert!((r.centroids[2] - 9.0).abs() < 1e-6);
+        assert!(r.inertia < 0.1);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn centroids_sorted_and_assignment_valid() {
+        let mut rng = Pcg32::seeded(2);
+        let data: Vec<f64> = (0..200).map(|_| rng.normal_with(0.0, 3.0)).collect();
+        let r = kmeans_1d(&data, None, &KMeansConfig { k: 8, ..Default::default() }).unwrap();
+        assert!(r.centroids.windows(2).all(|p| p[0] <= p[1]));
+        assert!(r.assignment.iter().all(|&a| a < r.centroids.len()));
+        assert_eq!(r.assignment.len(), data.len());
+    }
+
+    #[test]
+    fn weighted_equals_expanded() {
+        // Clustering values with multiplicity weights must match clustering
+        // the expanded vector.
+        let vals = [1.0, 2.0, 10.0, 11.0];
+        let w = [3.0, 1.0, 1.0, 3.0];
+        let mut expanded = Vec::new();
+        for (v, c) in vals.iter().zip(&w) {
+            for _ in 0..(*c as usize) {
+                expanded.push(*v);
+            }
+        }
+        let cfg = KMeansConfig { k: 2, ..Default::default() };
+        let a = kmeans_1d(&vals, Some(&w), &cfg).unwrap();
+        let b = kmeans_1d(&expanded, None, &cfg).unwrap();
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert!((a.inertia - b.inertia).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_clamped_to_distinct_points() {
+        let data = [1.0, 1.0, 2.0];
+        let r = kmeans_1d(&data, None, &KMeansConfig { k: 10, ..Default::default() }).unwrap();
+        assert!(r.centroids.len() <= 10);
+        assert!(r.inertia < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<f64> = (0..100).map(|_| rng.next_f64() * 10.0).collect();
+        let cfg = KMeansConfig { k: 5, seed: 7, ..Default::default() };
+        let a = kmeans_1d(&data, None, &cfg).unwrap();
+        let b = kmeans_1d(&data, None, &cfg).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn more_restarts_never_worse() {
+        let mut rng = Pcg32::seeded(4);
+        let data: Vec<f64> = (0..300)
+            .map(|i| rng.normal_with((i % 5) as f64 * 8.0, 0.4))
+            .collect();
+        let one = kmeans_1d(
+            &data,
+            None,
+            &KMeansConfig { k: 5, restarts: 1, seed: 11, ..Default::default() },
+        )
+        .unwrap();
+        let ten = kmeans_1d(
+            &data,
+            None,
+            &KMeansConfig { k: 5, restarts: 10, seed: 11, ..Default::default() },
+        )
+        .unwrap();
+        assert!(ten.inertia <= one.inertia + 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        assert!(kmeans_1d(&[], None, &KMeansConfig::default()).is_err());
+        assert!(kmeans_1d(&[1.0], None, &KMeansConfig { k: 0, ..Default::default() }).is_err());
+        assert!(
+            kmeans_1d(&[1.0], Some(&[1.0, 2.0]), &KMeansConfig::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Pcg32::seeded(5);
+        let data: Vec<f64> = (0..200).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let mut prev = f64::INFINITY;
+        for k in [2, 4, 8, 16, 32] {
+            let r = kmeans_1d(
+                &data,
+                None,
+                &KMeansConfig { k, seed: 3, ..Default::default() },
+            )
+            .unwrap();
+            assert!(r.inertia <= prev + 1e-9, "k={k}: inertia rose");
+            prev = r.inertia;
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Exact 1-d k-means by dynamic programming (ablation upper bound).
+//!
+//! 1-d k-means is not NP-hard: optimal clusters are contiguous intervals of
+//! the sorted data, so the global optimum is computable by DP over segment
+//! boundaries. We use the divide-and-conquer optimization (the row-minimum
+//! argmins of the DP layer are monotone), giving O(k·n·log n).
+//!
+//! This is *not* in the paper — it is the ablation DESIGN §5/E-index calls
+//! for: it bounds how much of k-means' loss gap vs the proposed methods is
+//! due to Lloyd's heuristic rather than the clustering objective itself.
+
+use crate::{Error, Result};
+
+/// Exact weighted 1-d k-means result.
+#[derive(Debug, Clone)]
+pub struct DpKMeansResult {
+    /// Optimal centroids (sorted ascending — contiguity makes this natural).
+    pub centroids: Vec<f64>,
+    /// Cluster index per input point (original order).
+    pub assignment: Vec<usize>,
+    /// Globally optimal weighted within-cluster sum of squares.
+    pub inertia: f64,
+}
+
+struct Prefix {
+    /// prefix weight sums
+    w: Vec<f64>,
+    /// prefix Σ w·x
+    wx: Vec<f64>,
+    /// prefix Σ w·x²
+    wxx: Vec<f64>,
+}
+
+impl Prefix {
+    fn new(xs: &[f64], ws: &[f64]) -> Self {
+        let n = xs.len();
+        let (mut w, mut wx, mut wxx) =
+            (Vec::with_capacity(n + 1), Vec::with_capacity(n + 1), Vec::with_capacity(n + 1));
+        w.push(0.0);
+        wx.push(0.0);
+        wxx.push(0.0);
+        for i in 0..n {
+            w.push(w[i] + ws[i]);
+            wx.push(wx[i] + ws[i] * xs[i]);
+            wxx.push(wxx[i] + ws[i] * xs[i] * xs[i]);
+        }
+        Prefix { w, wx, wxx }
+    }
+
+    /// Weighted SSE of the segment [i, j] (inclusive, 0-based).
+    #[inline]
+    fn cost(&self, i: usize, j: usize) -> f64 {
+        let w = self.w[j + 1] - self.w[i];
+        if w <= 0.0 {
+            return 0.0;
+        }
+        let wx = self.wx[j + 1] - self.wx[i];
+        let wxx = self.wxx[j + 1] - self.wxx[i];
+        // Σw x² − (Σw x)²/Σw, clamped against round-off.
+        (wxx - wx * wx / w).max(0.0)
+    }
+
+    /// Weighted mean of [i, j].
+    #[inline]
+    fn mean(&self, i: usize, j: usize) -> f64 {
+        let w = self.w[j + 1] - self.w[i];
+        if w <= 0.0 {
+            0.0
+        } else {
+            (self.wx[j + 1] - self.wx[i]) / w
+        }
+    }
+}
+
+/// Fill one DP layer with divide & conquer over the monotone argmin.
+/// `cur[i] = min_{j ≤ i} prev[j−1] + cost(j, i)` for i in [lo, hi],
+/// with the optimal j known to lie in [opt_lo, opt_hi].
+#[allow(clippy::too_many_arguments)]
+fn dnc(
+    prefix: &Prefix,
+    prev: &[f64],
+    cur: &mut [f64],
+    cut: &mut [usize],
+    lo: usize,
+    hi: usize,
+    opt_lo: usize,
+    opt_hi: usize,
+) {
+    if lo > hi {
+        return;
+    }
+    let mid = (lo + hi) / 2;
+    let mut best = f64::INFINITY;
+    let mut best_j = opt_lo;
+    let j_hi = opt_hi.min(mid);
+    for j in opt_lo..=j_hi {
+        let base = if j == 0 { f64::INFINITY } else { prev[j - 1] };
+        // j == 0 means "no previous cluster", only valid in layer 1 which is
+        // handled separately; guard with INFINITY here.
+        let c = if j == 0 { f64::INFINITY } else { base + prefix.cost(j, mid) };
+        if c < best {
+            best = c;
+            best_j = j;
+        }
+    }
+    cur[mid] = best;
+    cut[mid] = best_j;
+    if mid > lo {
+        dnc(prefix, prev, cur, cut, lo, mid - 1, opt_lo, best_j);
+    }
+    if mid < hi {
+        dnc(prefix, prev, cur, cut, mid + 1, hi, best_j, opt_hi);
+    }
+}
+
+/// Globally optimal weighted 1-d k-means.
+pub fn kmeans_dp(data: &[f64], weights: Option<&[f64]>, k: usize) -> Result<DpKMeansResult> {
+    if data.is_empty() {
+        return Err(Error::InvalidInput("kmeans_dp: empty data".into()));
+    }
+    if k == 0 {
+        return Err(Error::InvalidParam("kmeans_dp: k must be ≥ 1".into()));
+    }
+    let n = data.len();
+    let ones;
+    let ws: &[f64] = match weights {
+        Some(w) => {
+            if w.len() != n {
+                return Err(Error::InvalidInput("kmeans_dp: weights length mismatch".into()));
+            }
+            w
+        }
+        None => {
+            ones = vec![1.0; n];
+            &ones
+        }
+    };
+
+    // Sort by value, remembering original positions.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| data[a].partial_cmp(&data[b]).unwrap());
+    let xs: Vec<f64> = order.iter().map(|&i| data[i]).collect();
+    let sw: Vec<f64> = order.iter().map(|&i| ws[i]).collect();
+    let k = k.min(n);
+
+    let prefix = Prefix::new(&xs, &sw);
+
+    // Layer 1: one cluster covering [0, i].
+    let mut prev: Vec<f64> = (0..n).map(|i| prefix.cost(0, i)).collect();
+    // cuts[t][i]: start index of the last cluster in the optimal t+1-cluster
+    // solution of [0, i].
+    let mut cuts: Vec<Vec<usize>> = vec![vec![0; n]];
+
+    for _t in 2..=k {
+        let mut cur = vec![f64::INFINITY; n];
+        let mut cut = vec![0usize; n];
+        dnc(&prefix, &prev, &mut cur, &mut cut, 0, n - 1, 1, n - 1);
+        cuts.push(cut);
+        prev = cur;
+    }
+
+    // Backtrack segment boundaries.
+    let mut boundaries = Vec::with_capacity(k);
+    let mut end = n - 1;
+    for t in (0..k).rev() {
+        let start = cuts[t][end];
+        boundaries.push((start, end));
+        if start == 0 {
+            break;
+        }
+        end = start - 1;
+    }
+    boundaries.reverse();
+
+    let centroids: Vec<f64> = boundaries.iter().map(|&(s, e)| prefix.mean(s, e)).collect();
+    let inertia = prev[n - 1].min(prefix.cost(0, n - 1)); // k=1 edge
+    // Assignment back in original order.
+    let mut assignment = vec![0usize; n];
+    for (c, &(s, e)) in boundaries.iter().enumerate() {
+        for idx in s..=e {
+            assignment[order[idx]] = c;
+        }
+    }
+    Ok(DpKMeansResult { centroids, assignment, inertia })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kmeans::{kmeans_1d, KMeansConfig};
+    use crate::data::rng::Pcg32;
+
+    #[test]
+    fn trivial_cases() {
+        let r = kmeans_dp(&[5.0], None, 1).unwrap();
+        assert_eq!(r.centroids, vec![5.0]);
+        assert_eq!(r.inertia, 0.0);
+
+        let r = kmeans_dp(&[1.0, 2.0], None, 2).unwrap();
+        assert_eq!(r.centroids.len(), 2);
+        assert!(r.inertia < 1e-12);
+    }
+
+    #[test]
+    fn separated_clusters_exact() {
+        let data = [0.0, 0.1, 10.0, 10.1, 20.0, 20.1];
+        let r = kmeans_dp(&data, None, 3).unwrap();
+        assert!((r.centroids[0] - 0.05).abs() < 1e-9);
+        assert!((r.centroids[1] - 10.05).abs() < 1e-9);
+        assert!((r.centroids[2] - 20.05).abs() < 1e-9);
+        assert!((r.inertia - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_worse_than_lloyd() {
+        let mut rng = Pcg32::seeded(10);
+        for k in [2usize, 4, 8, 13] {
+            let data: Vec<f64> = (0..150).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let dp = kmeans_dp(&data, None, k).unwrap();
+            let ll = kmeans_1d(
+                &data,
+                None,
+                &KMeansConfig { k, restarts: 10, seed: 1, ..Default::default() },
+            )
+            .unwrap();
+            assert!(
+                dp.inertia <= ll.inertia + 1e-6,
+                "k={k}: DP {} > Lloyd {}",
+                dp.inertia,
+                ll.inertia
+            );
+        }
+    }
+
+    #[test]
+    fn assignment_respects_original_order() {
+        let data = [9.0, 1.0, 8.5, 1.2];
+        let r = kmeans_dp(&data, None, 2).unwrap();
+        assert_eq!(r.assignment[0], r.assignment[2]); // 9.0, 8.5 together
+        assert_eq!(r.assignment[1], r.assignment[3]); // 1.0, 1.2 together
+        assert_ne!(r.assignment[0], r.assignment[1]);
+    }
+
+    #[test]
+    fn weighted_matches_expanded() {
+        let vals = [1.0, 2.0, 8.0];
+        let w = [4.0, 1.0, 2.0];
+        let mut expanded = Vec::new();
+        for (v, c) in vals.iter().zip(&w) {
+            for _ in 0..(*c as usize) {
+                expanded.push(*v);
+            }
+        }
+        let a = kmeans_dp(&vals, Some(&w), 2).unwrap();
+        let b = kmeans_dp(&expanded, None, 2).unwrap();
+        assert!((a.inertia - b.inertia).abs() < 1e-9);
+        for (x, y) in a.centroids.iter().zip(&b.centroids) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_small() {
+        // Exhaustive check on all 2-cluster splits of a small sorted array.
+        let data = [0.3, 1.1, 1.4, 4.0, 4.2, 9.9];
+        let dp = kmeans_dp(&data, None, 2).unwrap();
+        let mut best = f64::INFINITY;
+        for split in 1..data.len() {
+            let sse = |xs: &[f64]| {
+                let m = xs.iter().sum::<f64>() / xs.len() as f64;
+                xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            };
+            best = best.min(sse(&data[..split]) + sse(&data[split..]));
+        }
+        assert!((dp.inertia - best).abs() < 1e-9, "dp={} brute={}", dp.inertia, best);
+    }
+
+    #[test]
+    fn k_geq_n_zero_loss() {
+        let data = [3.0, 1.0, 2.0];
+        let r = kmeans_dp(&data, None, 10).unwrap();
+        assert!(r.inertia < 1e-12);
+        assert_eq!(r.centroids.len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(kmeans_dp(&[], None, 2).is_err());
+        assert!(kmeans_dp(&[1.0], None, 0).is_err());
+        assert!(kmeans_dp(&[1.0], Some(&[1.0, 2.0]), 1).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Clustering substrates (S10–S13): the baselines the paper compares
+//! against, plus the exact 1-d DP k-means ablation.
+
+pub mod agglomerative;
+pub mod data_transform;
+pub mod fuzzy_cmeans;
+pub mod gmm;
+pub mod kmeans;
+pub mod kmeans_dp;

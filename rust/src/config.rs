@@ -1,0 +1,238 @@
+//! Configuration system (S23).
+//!
+//! A deliberately small key=value config format (TOML-subset; serde is not
+//! available offline — DESIGN §2). Files look like:
+//!
+//! ```text
+//! # comment
+//! workers = 4
+//! queue_capacity = 256
+//! artifacts_dir = "artifacts"
+//! engine = "native"        # native | runtime | auto
+//! seed = 42
+//! ```
+//!
+//! Values are overridable via `SQLSQ_*` environment variables
+//! (`SQLSQ_WORKERS=8`) and `--key value` CLI flags; precedence is
+//! CLI > env > file > default.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which engine the coordinator routes jobs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Pure-Rust engines only.
+    #[default]
+    Native,
+    /// AOT/PJRT runtime only (errors if the artifact is missing).
+    Runtime,
+    /// Runtime where a bucket fits, native fallback otherwise.
+    Auto,
+}
+
+impl Engine {
+    /// Parse from the config string.
+    pub fn parse(s: &str) -> Result<Engine> {
+        match s {
+            "native" => Ok(Engine::Native),
+            "runtime" => Ok(Engine::Runtime),
+            "auto" => Ok(Engine::Auto),
+            _ => Err(Error::Config(format!("unknown engine '{s}'"))),
+        }
+    }
+}
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Runtime-lane threads (each owns a PJRT client + executable cache).
+    pub runtime_lanes: usize,
+    /// Bounded job-queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Max jobs per batch drained at once.
+    pub max_batch: usize,
+    /// Max microseconds the batcher waits to fill a batch.
+    pub batch_wait_us: u64,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts_dir: PathBuf,
+    /// Engine routing policy.
+    pub engine: Engine,
+    /// Global RNG seed.
+    pub seed: u64,
+    /// Directory for experiment reports.
+    pub report_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: std::thread::available_parallelism().map_or(4, |n| n.get().min(8)),
+            runtime_lanes: 2,
+            queue_capacity: 1024,
+            max_batch: 32,
+            batch_wait_us: 200,
+            artifacts_dir: PathBuf::from("artifacts"),
+            engine: Engine::Native,
+            seed: 0,
+            report_dir: PathBuf::from("reports"),
+        }
+    }
+}
+
+impl Config {
+    /// Parse the key=value file format.
+    pub fn parse_str(text: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", ln + 1))
+            })?;
+            map.insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        let mut cfg = Config::default();
+        cfg.apply_map(&map)?;
+        Ok(cfg)
+    }
+
+    /// Load from a file, then apply `SQLSQ_*` env overrides.
+    pub fn load(path: Option<&Path>) -> Result<Config> {
+        let mut cfg = match path {
+            Some(p) => Self::parse_str(&std::fs::read_to_string(p)?)?,
+            None => Config::default(),
+        };
+        cfg.apply_env()?;
+        Ok(cfg)
+    }
+
+    /// Apply one key.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let parse_usize = |v: &str| -> Result<usize> {
+            v.parse().map_err(|_| Error::Config(format!("bad number '{v}' for {key}")))
+        };
+        match key {
+            "workers" => {
+                self.workers = parse_usize(value)?;
+                if self.workers == 0 {
+                    return Err(Error::Config("workers must be ≥ 1".into()));
+                }
+            }
+            "runtime_lanes" => {
+                self.runtime_lanes = parse_usize(value)?.max(1);
+            }
+            "queue_capacity" => {
+                self.queue_capacity = parse_usize(value)?;
+                if self.queue_capacity == 0 {
+                    return Err(Error::Config("queue_capacity must be ≥ 1".into()));
+                }
+            }
+            "max_batch" => {
+                self.max_batch = parse_usize(value)?.max(1);
+            }
+            "batch_wait_us" => {
+                self.batch_wait_us = parse_usize(value)? as u64;
+            }
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "report_dir" => self.report_dir = PathBuf::from(value),
+            "engine" => self.engine = Engine::parse(value)?,
+            "seed" => {
+                self.seed = value
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad seed '{value}'")))?;
+            }
+            _ => return Err(Error::Config(format!("unknown config key '{key}'"))),
+        }
+        Ok(())
+    }
+
+    fn apply_map(&mut self, map: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in map {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    fn apply_env(&mut self) -> Result<()> {
+        for key in [
+            "workers",
+            "runtime_lanes",
+            "queue_capacity",
+            "max_batch",
+            "batch_wait_us",
+            "artifacts_dir",
+            "report_dir",
+            "engine",
+            "seed",
+        ] {
+            let env_key = format!("SQLSQ_{}", key.to_uppercase());
+            if let Ok(v) = std::env::var(&env_key) {
+                self.set(key, &v)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.workers >= 1);
+        assert!(c.queue_capacity >= 1);
+        assert_eq!(c.engine, Engine::Native);
+    }
+
+    #[test]
+    fn parses_file_format() {
+        let c = Config::parse_str(
+            r#"
+            # comment
+            workers = 3
+            engine = "auto"   # inline comment
+            artifacts_dir = "custom/dir"
+            seed = 99
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.engine, Engine::Auto);
+        assert_eq!(c.artifacts_dir, PathBuf::from("custom/dir"));
+        assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Config::parse_str("workers").is_err());
+        assert!(Config::parse_str("workers = zero").is_err());
+        assert!(Config::parse_str("workers = 0").is_err());
+        assert!(Config::parse_str("nonsense = 1").is_err());
+        assert!(Engine::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn runtime_lanes_parse_and_floor() {
+        let c = Config::parse_str("runtime_lanes = 3").unwrap();
+        assert_eq!(c.runtime_lanes, 3);
+        let c0 = Config::parse_str("runtime_lanes = 0").unwrap();
+        assert_eq!(c0.runtime_lanes, 1, "floored to 1");
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::default();
+        c.set("engine", "runtime").unwrap();
+        assert_eq!(c.engine, Engine::Runtime);
+        c.set("queue_capacity", "7").unwrap();
+        assert_eq!(c.queue_capacity, 7);
+    }
+}

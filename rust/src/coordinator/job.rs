@@ -1,0 +1,75 @@
+//! Job types flowing through the coordinator.
+
+use crate::quant::{QuantMethod, QuantOptions, QuantOutput};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Monotonically increasing job identifier.
+pub type JobId = u64;
+
+/// Which engine actually served a job (reported in results/metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServedBy {
+    /// Pure-Rust native engine.
+    Native,
+    /// AOT artifact on the PJRT runtime.
+    Runtime,
+}
+
+impl ServedBy {
+    /// Stable label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            ServedBy::Native => "native",
+            ServedBy::Runtime => "runtime",
+        }
+    }
+}
+
+/// A quantization request.
+#[derive(Debug)]
+pub struct Job {
+    /// Unique id.
+    pub id: JobId,
+    /// The vector to quantize.
+    pub data: Vec<f64>,
+    /// Algorithm to run.
+    pub method: QuantMethod,
+    /// Algorithm options.
+    pub opts: QuantOptions,
+    /// Submission timestamp (for queue + service latency).
+    pub submitted: Instant,
+    /// Response channel (capacity 1).
+    pub respond: mpsc::Sender<JobResult>,
+}
+
+/// A completed (or failed) job.
+#[derive(Debug)]
+pub struct JobResult {
+    /// The job id.
+    pub id: JobId,
+    /// Quantization output or error text.
+    pub outcome: Result<QuantOutput, String>,
+    /// Submit-to-complete latency.
+    pub latency: Duration,
+    /// Engine that served the job.
+    pub served_by: ServedBy,
+}
+
+impl JobResult {
+    /// True when the job succeeded.
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn served_by_labels() {
+        assert_eq!(ServedBy::Native.label(), "native");
+        assert_eq!(ServedBy::Runtime.label(), "runtime");
+    }
+}

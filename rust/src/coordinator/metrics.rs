@@ -1,0 +1,226 @@
+//! Coordinator metrics: lock-free counters + a log₂ latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKETS: usize = 32; // 1µs … ~4000s in powers of two
+
+/// Shared metrics sink. All methods are thread-safe and wait-free.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    served_native: AtomicU64,
+    served_runtime: AtomicU64,
+    batches: AtomicU64,
+    batch_jobs: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Jobs accepted into the queue.
+    pub submitted: u64,
+    /// Jobs completed successfully.
+    pub completed: u64,
+    /// Jobs that returned an error.
+    pub failed: u64,
+    /// Jobs refused at admission (queue full, non-blocking submit).
+    pub rejected: u64,
+    /// Jobs served by the native engine.
+    pub served_native: u64,
+    /// Jobs served by the PJRT runtime.
+    pub served_runtime: u64,
+    /// Batches drained by workers.
+    pub batches: u64,
+    /// Mean batch size.
+    pub mean_batch: f64,
+    /// Mean latency (µs).
+    pub mean_latency_us: f64,
+    /// Approximate latency percentiles (µs): p50, p95, p99.
+    pub p50_us: u64,
+    /// p95.
+    pub p95_us: u64,
+    /// p99.
+    pub p99_us: u64,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count an admission.
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a refused admission.
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a drained batch of `n` jobs.
+    pub fn on_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_jobs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count a completion with its latency and serving engine.
+    pub fn on_complete(&self, ok: bool, latency: Duration, runtime: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        if runtime {
+            self.served_runtime.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.served_native.fetch_add(1, Ordering::Relaxed);
+        }
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile from the histogram (upper bucket bound).
+    fn percentile(&self, counts: &[u64; BUCKETS], total: u64, p: f64) -> u64 {
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BUCKETS
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut counts = [0u64; BUCKETS];
+        let mut total = 0u64;
+        for (c, a) in counts.iter_mut().zip(&self.latency_us) {
+            *c = a.load(Ordering::Relaxed);
+            total += *c;
+        }
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batch_jobs = self.batch_jobs.load(Ordering::Relaxed);
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            served_native: self.served_native.load(Ordering::Relaxed),
+            served_runtime: self.served_runtime.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches > 0 { batch_jobs as f64 / batches as f64 } else { 0.0 },
+            mean_latency_us: if total > 0 {
+                self.latency_sum_us.load(Ordering::Relaxed) as f64 / total as f64
+            } else {
+                0.0
+            },
+            p50_us: self.percentile(&counts, total, 0.50),
+            p95_us: self.percentile(&counts, total, 0.95),
+            p99_us: self.percentile(&counts, total, 0.99),
+        }
+    }
+}
+
+impl Snapshot {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} rejected={} native={} runtime={} \
+             batches={} mean_batch={:.1} lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{}",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.rejected,
+            self.served_native,
+            self.served_runtime,
+            self.batches,
+            self.mean_batch,
+            self.mean_latency_us,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(2);
+        m.on_complete(true, Duration::from_micros(100), false);
+        m.on_complete(false, Duration::from_micros(300), true);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.served_native, 1);
+        assert_eq!(s.served_runtime, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-12);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let m = Metrics::new();
+        for i in 0..1000u64 {
+            m.on_complete(true, Duration::from_micros(i + 1), false);
+        }
+        let s = m.snapshot();
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert!(s.p50_us >= 256 && s.p50_us <= 1024, "p50={}", s.p50_us);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_us, 0);
+        assert_eq!(s.mean_latency_us, 0.0);
+        assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.on_submit();
+                        m.on_complete(true, Duration::from_micros(50), false);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 8000);
+        assert_eq!(s.completed, 8000);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator (S19): job admission with backpressure, batching worker
+//! pool, native/runtime routing, metrics. See `server.rs` for the
+//! topology diagram.
+
+pub mod job;
+pub mod metrics;
+pub mod queue;
+pub mod router;
+pub mod server;
+
+pub use job::{Job, JobId, JobResult, ServedBy};
+pub use metrics::{Metrics, Snapshot};
+pub use router::Router;
+pub use server::Coordinator;

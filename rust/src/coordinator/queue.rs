@@ -1,0 +1,233 @@
+//! Bounded MPMC job queue with blocking backpressure and batch drain.
+//!
+//! tokio is unavailable offline (DESIGN §2); this is the std-only
+//! equivalent the coordinator needs: a `Mutex<VecDeque>` + two `Condvar`s.
+//! `push` blocks when full (backpressure), `try_push` refuses instead,
+//! `pop_batch` waits for the first item then drains up to `max` — the
+//! batcher in one primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Result of a non-blocking push.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPush<T> {
+    /// Accepted.
+    Ok,
+    /// Queue full — value returned to the caller.
+    Full(T),
+    /// Queue closed — value returned to the caller.
+    Closed(T),
+}
+
+struct Inner<T> {
+    deque: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+/// Bounded blocking queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with the given capacity (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        BoundedQueue {
+            inner: Mutex::new(Inner { deque: VecDeque::new(), capacity, closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.deque.len() < g.capacity {
+                g.deque.push_back(item);
+                self.not_empty.notify_one();
+                return true;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push.
+    pub fn try_push(&self, item: T) -> TryPush<T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return TryPush::Closed(item);
+        }
+        if g.deque.len() >= g.capacity {
+            return TryPush::Full(item);
+        }
+        g.deque.push_back(item);
+        self.not_empty.notify_one();
+        TryPush::Ok
+    }
+
+    /// Wait (bounded by `first_wait`) for at least one item, then drain up
+    /// to `max` items, waiting at most `fill_wait` more for stragglers.
+    /// Returns `None` once the queue is closed *and* empty.
+    pub fn pop_batch(
+        &self,
+        max: usize,
+        first_wait: Duration,
+        fill_wait: Duration,
+    ) -> Option<Vec<T>> {
+        let mut g = self.inner.lock().unwrap();
+        // Phase 1: wait for the first item.
+        while g.deque.is_empty() {
+            if g.closed {
+                return None;
+            }
+            let (ng, timeout) = self.not_empty.wait_timeout(g, first_wait).unwrap();
+            g = ng;
+            if timeout.timed_out() && g.deque.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                // Spurious/empty timeout: keep waiting (callers loop).
+                continue;
+            }
+        }
+        // Phase 2: optionally linger to fill the batch.
+        if g.deque.len() < max && !fill_wait.is_zero() && !g.closed {
+            let (ng, _) = self.not_empty.wait_timeout(g, fill_wait).unwrap();
+            g = ng;
+        }
+        let take = g.deque.len().min(max);
+        let batch: Vec<T> = g.deque.drain(..take).collect();
+        if !batch.is_empty() {
+            self.not_full.notify_all();
+        }
+        Some(batch)
+    }
+
+    /// Current depth (diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().deque.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: producers fail fast, consumers drain what remains.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    const SHORT: Duration = Duration::from_millis(20);
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        let batch = q.pop_batch(10, SHORT, Duration::ZERO).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(1);
+        assert_eq!(q.try_push(1), TryPush::Ok);
+        assert_eq!(q.try_push(2), TryPush::Full(2));
+    }
+
+    #[test]
+    fn close_rejects_producers_drains_consumers() {
+        let q = BoundedQueue::new(4);
+        q.push(1);
+        q.close();
+        assert!(!q.push(2));
+        assert_eq!(q.try_push(3), TryPush::Closed(3));
+        assert_eq!(q.pop_batch(10, SHORT, Duration::ZERO), Some(vec![1]));
+        assert_eq!(q.pop_batch(10, SHORT, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn batch_respects_max() {
+        let q = BoundedQueue::new(10);
+        for i in 0..7 {
+            q.push(i);
+        }
+        let b = q.pop_batch(3, SHORT, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0);
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            let start = Instant::now();
+            assert!(q2.push(1)); // blocks until the consumer drains
+            start.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let b = q.pop_batch(1, SHORT, Duration::ZERO).unwrap();
+        assert_eq!(b, vec![0]);
+        let waited = t.join().unwrap();
+        assert!(waited >= Duration::from_millis(20), "push did not block ({waited:?})");
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_preserve_items() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        assert!(q.push(p * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) =
+                    q.pop_batch(16, Duration::from_millis(100), Duration::ZERO)
+                {
+                    seen.extend(batch);
+                }
+                seen
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), 400);
+        seen.dedup();
+        assert_eq!(seen.len(), 400, "duplicate or lost items");
+    }
+}

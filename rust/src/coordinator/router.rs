@@ -1,0 +1,398 @@
+//! Engine routing: native Rust engines vs the AOT/PJRT runtime lane.
+//!
+//! Policy ([`crate::config::Engine`]):
+//! * `Native`  — everything runs on the pure-Rust engines.
+//! * `Runtime` — runtime-capable methods *must* run on the runtime
+//!   (missing bucket ⇒ the job fails, surfacing artifact gaps loudly);
+//! * `Auto`    — runtime when a bucket fits, native fallback otherwise
+//!   (the serving default).
+//!
+//! PJRT handles are `Rc`-based and **not Send**, so the [`Router`] itself
+//! never holds an [`Executor`]: it only routes using bucket metadata parsed
+//! from the manifest. The single runtime-lane thread constructs its own
+//! Executor at startup ([`super::server`]) and calls [`dispatch_runtime`].
+//!
+//! Runtime-capable methods: `L1`/`L1LeastSquare` (artifact CD epochs +
+//! native refit), `KMeans` (artifact Lloyd steps + native seeding) and
+//! `Gmm` (artifact EM steps + native max-posterior assignment).
+//! Everything else always runs natively — their inner loops are
+//! data-dependent control flow the AOT graph cannot express.
+
+use crate::config::Engine;
+use crate::quant::{
+    self, refit, types, unique::UniqueDecomp, vmatrix::VBasis, QuantDiag, QuantMethod,
+    QuantOptions, QuantOutput,
+};
+use crate::runtime::artifact;
+use crate::runtime::Executor;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Bucket metadata probed from the manifest (no PJRT client involved).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeInfo {
+    /// Largest lasso `m` bucket.
+    pub max_lasso_m: usize,
+    /// Available (m, k) kmeans buckets.
+    pub kmeans_buckets: Vec<(usize, usize)>,
+    /// Available (m, k) gmm buckets.
+    pub gmm_buckets: Vec<(usize, usize)>,
+}
+
+impl RuntimeInfo {
+    /// Probe a manifest on disk.
+    pub fn probe(dir: &Path) -> Result<RuntimeInfo> {
+        let specs = artifact::load_manifest(dir)?;
+        let max_lasso_m = specs
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some("lasso_cd"))
+            .filter_map(|s| s.meta_usize("m"))
+            .max()
+            .unwrap_or(0);
+        let kmeans_buckets = specs
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some("kmeans"))
+            .filter_map(|s| Some((s.meta_usize("m")?, s.meta_usize("k")?)))
+            .collect();
+        let gmm_buckets = specs
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some("gmm"))
+            .filter_map(|s| Some((s.meta_usize("m")?, s.meta_usize("k")?)))
+            .collect();
+        Ok(RuntimeInfo { max_lasso_m, kmeans_buckets, gmm_buckets })
+    }
+
+    /// Does any bucket fit this (method, m, k) request?
+    pub fn fits(&self, method: QuantMethod, m: usize, k: usize) -> bool {
+        match method {
+            QuantMethod::L1 | QuantMethod::L1LeastSquare => m <= self.max_lasso_m,
+            QuantMethod::KMeans => self
+                .kmeans_buckets
+                .iter()
+                .any(|&(bm, bk)| m <= bm && k <= bk),
+            QuantMethod::Gmm => self
+                .gmm_buckets
+                .iter()
+                .any(|&(bm, bk)| m <= bm && k <= bk),
+            _ => false,
+        }
+    }
+}
+
+/// Send-safe routing state shared by all workers.
+pub struct Router {
+    policy: Engine,
+    info: Option<RuntimeInfo>,
+}
+
+impl Router {
+    /// Build a router; probes the manifest unless the policy is Native.
+    pub fn new(policy: Engine, artifacts_dir: &Path) -> Result<Router> {
+        let info = match policy {
+            Engine::Native => None,
+            Engine::Runtime => Some(RuntimeInfo::probe(artifacts_dir)?),
+            Engine::Auto => match RuntimeInfo::probe(artifacts_dir) {
+                Ok(i) => Some(i),
+                Err(e) => {
+                    eprintln!("router: runtime unavailable, auto-falling back to native: {e}");
+                    None
+                }
+            },
+        };
+        Ok(Router { policy, info })
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> Engine {
+        self.policy
+    }
+
+    /// Can this method run on the runtime at all?
+    pub fn runtime_capable(method: QuantMethod) -> bool {
+        matches!(
+            method,
+            QuantMethod::L1
+                | QuantMethod::L1LeastSquare
+                | QuantMethod::KMeans
+                | QuantMethod::Gmm
+        )
+    }
+
+    /// Should this job go to the runtime lane? `m` may be an upper bound
+    /// (vector length) at admission time.
+    pub fn routes_to_runtime(&self, method: QuantMethod, m: usize, k: usize) -> bool {
+        if self.policy == Engine::Native || !Self::runtime_capable(method) {
+            return false;
+        }
+        match (&self.info, self.policy) {
+            (Some(_), Engine::Runtime) => true, // must try; fails loudly if unfit
+            (Some(info), Engine::Auto) => info.fits(method, m, k),
+            _ => false,
+        }
+    }
+
+    /// Serve a job on the native engines.
+    pub fn dispatch_native(
+        &self,
+        data: &[f64],
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) -> Result<QuantOutput> {
+        quant::quantize(data, method, opts)
+    }
+}
+
+/// Runtime-lane dispatch (called only from the lane thread that owns the
+/// executor).
+pub fn dispatch_runtime(
+    ex: &mut Executor,
+    data: &[f64],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<QuantOutput> {
+    match method {
+        QuantMethod::L1 | QuantMethod::L1LeastSquare => runtime_lasso(
+            ex,
+            data,
+            opts,
+            matches!(method, QuantMethod::L1LeastSquare),
+        ),
+        QuantMethod::KMeans => runtime_kmeans(ex, data, opts),
+        QuantMethod::Gmm => runtime_gmm(ex, data, opts),
+        other => Err(Error::Runtime(format!(
+            "method {:?} is not runtime-capable",
+            other
+        ))),
+    }
+}
+
+/// L1 on the runtime: artifact CD epochs (f32) + native f64 refit/recovery.
+fn runtime_lasso(
+    ex: &mut Executor,
+    data: &[f64],
+    opts: &QuantOptions,
+    with_refit: bool,
+) -> Result<QuantOutput> {
+    let u = UniqueDecomp::new(data)?;
+    let basis = VBasis::new(&u.values);
+    let w32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
+    let d32: Vec<f32> = basis.diffs().iter().map(|&x| x as f32).collect();
+    let epochs_per_call = ex.lasso_epochs_per_call();
+    let max_calls = (opts.max_epochs / epochs_per_call.max(1)).max(1);
+    // f32 tolerance floor: the artifact computes in single precision.
+    let tol = (opts.tol as f32).max(1e-6);
+    let sol = ex.lasso_solve(&w32, &d32, opts.lambda1 as f32, opts.lambda2 as f32, max_calls, tol)?;
+
+    // Support extraction with an f32-scale threshold; null columns
+    // (d_j = 0, possible at j = 0 when v_0 = 0) are never support.
+    let support: Vec<usize> = sol
+        .alpha
+        .iter()
+        .enumerate()
+        .filter(|&(i, &a)| a.abs() > 1e-7 && d32[i] != 0.0)
+        .map(|(i, _)| i)
+        .collect();
+    let diag = QuantDiag {
+        iterations: sol.calls * epochs_per_call,
+        converged: sol.converged,
+        lambda1: opts.lambda1,
+        nnz: support.len(),
+        unstable: false,
+        empty_cluster_events: 0,
+    };
+    let levels = if with_refit {
+        refit::refit_fast(&basis, &u.values, &support, None)?.reconstruction
+    } else {
+        // Reconstruct from the runtime α in f64.
+        let alpha64: Vec<f64> = sol.alpha.iter().map(|&a| a as f64).collect();
+        basis.apply(&alpha64)
+    };
+    let full = u.recover(&levels)?;
+    Ok(types::finalize(data, full, opts.clamp, diag))
+}
+
+/// k-means on the runtime: deterministic quantile seeding, artifact Lloyd
+/// steps, native assignment.
+fn runtime_kmeans(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Result<QuantOutput> {
+    let u = UniqueDecomp::new(data)?;
+    let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
+    let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
+    let k = opts.target_values.min(u.m()).max(1);
+    let mut cen: Vec<f32> = (0..k)
+        .map(|i| {
+            let pos = (i as f64 + 0.5) / k as f64 * (u.m() as f64 - 1.0);
+            u.values[pos.round() as usize] as f32
+        })
+        .collect();
+    cen.dedup();
+    while cen.len() < k {
+        let last = *cen.last().unwrap();
+        cen.push(last + 1e-3);
+    }
+    let calls = (opts.max_iters / 4).max(1).min(50);
+    let cen = ex.kmeans_lloyd(&pts32, &cw32, &cen, calls)?;
+    let cen64: Vec<f64> = cen.iter().map(|&c| c as f64).collect();
+    let levels: Vec<f64> = u
+        .values
+        .iter()
+        .map(|&v| cen64[crate::cluster::kmeans::assign_sorted(v, &cen64)])
+        .collect();
+    let diag = QuantDiag {
+        iterations: calls * 4,
+        converged: true,
+        lambda1: 0.0,
+        nnz: k,
+        unstable: false,
+        empty_cluster_events: 0,
+    };
+    let full = u.recover(&levels)?;
+    Ok(types::finalize(data, full, opts.clamp, diag))
+}
+
+/// GMM on the runtime: deterministic quantile seeding, artifact EM steps,
+/// native max-posterior assignment.
+fn runtime_gmm(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Result<QuantOutput> {
+    let u = UniqueDecomp::new(data)?;
+    let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
+    let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
+    let k = opts.target_values.min(u.m()).max(1);
+    let mut mu: Vec<f32> = (0..k)
+        .map(|i| {
+            let pos = (i as f64 + 0.5) / k as f64 * (u.m() as f64 - 1.0);
+            u.values[pos.round() as usize] as f32
+        })
+        .collect();
+    mu.dedup();
+    while mu.len() < k {
+        let last = *mu.last().unwrap();
+        mu.push(last + 1e-3);
+    }
+    let gmean = crate::linalg::stats::weighted_mean(&u.values, &u.weights());
+    let gvar: f64 = u
+        .values
+        .iter()
+        .zip(&u.counts)
+        .map(|(&x, &c)| c as f64 * (x - gmean) * (x - gmean))
+        .sum::<f64>()
+        / u.counts.iter().sum::<usize>().max(1) as f64;
+    let span = crate::linalg::stats::max(&u.values) - crate::linalg::stats::min(&u.values);
+    let var_floor = ((1e-6 * span * span).max(1e-12)) as f32;
+    let var = vec![(gvar.max(var_floor as f64)) as f32; k];
+    let pi = vec![1.0 / k as f32; k];
+    let calls = (opts.max_iters / 4).max(1).min(50);
+    let (mu, var, pi) = ex.gmm_em(&pts32, &cw32, &mu, &var, &pi, var_floor, calls)?;
+
+    // Native max-posterior hard assignment over the unique values.
+    let levels: Vec<f64> = u
+        .values
+        .iter()
+        .map(|&x| {
+            let mut best = 0usize;
+            let mut best_lp = f64::NEG_INFINITY;
+            for c in 0..k {
+                let m = mu[c] as f64;
+                let v = (var[c] as f64).max(1e-12);
+                let p = (pi[c] as f64).max(1e-30);
+                let d = x - m;
+                let lp = p.ln() - 0.5 * (d * d / v + v.ln());
+                if lp > best_lp {
+                    best_lp = lp;
+                    best = c;
+                }
+            }
+            mu[best] as f64
+        })
+        .collect();
+    let diag = QuantDiag {
+        iterations: calls * 4,
+        converged: true,
+        lambda1: 0.0,
+        nnz: k,
+        unstable: false,
+        empty_cluster_events: 0,
+    };
+    let full = u.recover(&levels)?;
+    Ok(types::finalize(data, full, opts.clamp, diag))
+}
+
+/// Equivalence check used by integration tests and the self-check CLI:
+/// native vs runtime Algorithm 1 on the same data. Returns (native loss,
+/// runtime loss).
+pub fn check_lasso_equivalence(
+    ex: &mut Executor,
+    data: &[f64],
+    lambda1: f64,
+) -> Result<(f64, f64)> {
+    let opts = QuantOptions { lambda1, ..Default::default() };
+    let rt = runtime_lasso(ex, data, &opts, true)?;
+    let nat = quant::quantize(data, QuantMethod::L1LeastSquare, &opts)?;
+    Ok((nat.l2_loss, rt.l2_loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_policy_never_routes_runtime() {
+        let r = Router::new(Engine::Native, Path::new("/nonexistent")).unwrap();
+        assert!(!r.routes_to_runtime(QuantMethod::L1, 10, 4));
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        let out = r
+            .dispatch_native(
+                &data,
+                QuantMethod::KMeans,
+                &QuantOptions { target_values: 2, ..Default::default() },
+            )
+            .unwrap();
+        assert!(out.distinct_values() <= 2);
+    }
+
+    #[test]
+    fn runtime_capability_table() {
+        assert!(Router::runtime_capable(QuantMethod::L1));
+        assert!(Router::runtime_capable(QuantMethod::L1LeastSquare));
+        assert!(Router::runtime_capable(QuantMethod::KMeans));
+        assert!(Router::runtime_capable(QuantMethod::Gmm));
+        assert!(!Router::runtime_capable(QuantMethod::L0));
+        assert!(!Router::runtime_capable(QuantMethod::ClusterLs));
+    }
+
+    #[test]
+    fn auto_policy_with_missing_artifacts_falls_back() {
+        let r = Router::new(Engine::Auto, Path::new("/nonexistent")).unwrap();
+        assert!(!r.routes_to_runtime(QuantMethod::L1, 10, 4));
+    }
+
+    #[test]
+    fn runtime_policy_with_missing_artifacts_errors_at_open() {
+        assert!(Router::new(Engine::Runtime, Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn runtime_info_fit_logic() {
+        let info = RuntimeInfo {
+            max_lasso_m: 256,
+            kmeans_buckets: vec![(256, 8), (1024, 64)],
+            gmm_buckets: vec![(256, 8)],
+        };
+        assert!(info.fits(QuantMethod::L1, 256, 0));
+        assert!(!info.fits(QuantMethod::L1, 257, 0));
+        assert!(info.fits(QuantMethod::KMeans, 300, 32));
+        assert!(!info.fits(QuantMethod::KMeans, 2000, 8));
+        assert!(!info.fits(QuantMethod::KMeans, 100, 100));
+        assert!(info.fits(QuantMethod::Gmm, 100, 8));
+        assert!(!info.fits(QuantMethod::Gmm, 1000, 8));
+        assert!(!info.fits(QuantMethod::ClusterLs, 10, 2));
+    }
+
+    #[test]
+    fn probe_real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let info = RuntimeInfo::probe(&dir).unwrap();
+            assert!(info.max_lasso_m >= 1024);
+            assert!(!info.kmeans_buckets.is_empty());
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! The coordinator: admission, batching, worker pool, runtime lane,
+//! metrics, graceful shutdown (S19).
+//!
+//! Topology:
+//!
+//! ```text
+//!            submit()/try_submit()
+//!                   │  (bounded queue = backpressure)
+//!        ┌──────────┴───────────┐
+//!   native queue           runtime queue        (router decides per job)
+//!        │                      │
+//!   N worker threads       R runtime-lane threads (each owns a PJRT
+//!        │                      │                   client + exe cache)
+//!        └──────────┬───────────┘
+//!              respond channels + metrics
+//! ```
+//!
+//! Runtime lanes each own their Executor because PJRT handles are
+//! `Rc`-based (not Send); per-lane executable caches keep lanes
+//! independent (§Perf row 7: 2 lanes ≈ 2.2× mixed-burst throughput).
+//! Workers drain *batches* from the queue (`max_batch`, `batch_wait_us`)
+//! so bursts of small jobs pay one wakeup.
+
+use super::job::{Job, JobId, JobResult, ServedBy};
+use super::metrics::{Metrics, Snapshot};
+use super::queue::{BoundedQueue, TryPush};
+use super::router::Router;
+use crate::config::{Config, Engine};
+use crate::quant::{QuantMethod, QuantOptions};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    native_q: Arc<BoundedQueue<Job>>,
+    runtime_q: Arc<BoundedQueue<Job>>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    cfg: Config,
+}
+
+fn finish(metrics: &Metrics, job: Job, outcome: Result<crate::quant::QuantOutput>, served_by: ServedBy) {
+    let latency = job.submitted.elapsed();
+    let outcome = outcome.map_err(|e| e.to_string());
+    metrics.on_complete(outcome.is_ok(), latency, served_by == ServedBy::Runtime);
+    // Receiver may have hung up (fire-and-forget submit); ignore.
+    let _ = job.respond.send(JobResult { id: job.id, outcome, latency, served_by });
+}
+
+fn serve_batch_native(router: &Router, metrics: &Metrics, batch: Vec<Job>) {
+    metrics.on_batch(batch.len());
+    for job in batch {
+        let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
+        finish(metrics, job, outcome, ServedBy::Native);
+    }
+}
+
+/// Runtime-lane batch service: the lane thread owns the executor (PJRT
+/// handles are not Send). `Auto` falls back to native per job on runtime
+/// errors; `Runtime` propagates them.
+fn serve_batch_runtime(
+    executor: &mut Option<crate::runtime::Executor>,
+    router: &Router,
+    metrics: &Metrics,
+    batch: Vec<Job>,
+) {
+    metrics.on_batch(batch.len());
+    for job in batch {
+        let rt_outcome = match executor.as_mut() {
+            Some(ex) => super::router::dispatch_runtime(ex, &job.data, job.method, &job.opts),
+            None => Err(Error::Runtime("runtime lane has no executor".into())),
+        };
+        match rt_outcome {
+            Ok(out) => finish(metrics, job, Ok(out), ServedBy::Runtime),
+            Err(e) => {
+                if router.policy() == Engine::Auto {
+                    let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
+                    finish(metrics, job, outcome, ServedBy::Native);
+                } else {
+                    finish(metrics, job, Err(e), ServedBy::Runtime);
+                }
+            }
+        }
+    }
+}
+
+impl Coordinator {
+    /// Start workers per `cfg`.
+    pub fn start(cfg: Config) -> Result<Coordinator> {
+        let router = Arc::new(Router::new(cfg.engine, &cfg.artifacts_dir)?);
+        let metrics = Arc::new(Metrics::new());
+        let native_q = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+        let runtime_q = Arc::new(BoundedQueue::new(cfg.queue_capacity));
+
+        let mut workers = Vec::new();
+        let batch_wait = Duration::from_micros(cfg.batch_wait_us);
+        for wi in 0..cfg.workers {
+            let q = Arc::clone(&native_q);
+            let r = Arc::clone(&router);
+            let m = Arc::clone(&metrics);
+            let max_batch = cfg.max_batch;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sqlsq-worker-{wi}"))
+                    .spawn(move || {
+                        while let Some(batch) =
+                            q.pop_batch(max_batch, Duration::from_millis(50), batch_wait)
+                        {
+                            serve_batch_native(&r, &m, batch);
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        // Runtime lanes (only when the policy can ever use them). Each
+        // lane constructs its own Executor: PJRT handles are not Send, and
+        // per-lane executable caches let lanes scale independently.
+        if cfg.engine != Engine::Native {
+            for li in 0..cfg.runtime_lanes.max(1) {
+                let q = Arc::clone(&runtime_q);
+                let r = Arc::clone(&router);
+                let m = Arc::clone(&metrics);
+                let max_batch = cfg.max_batch;
+                let dir = cfg.artifacts_dir.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("sqlsq-runtime-lane-{li}"))
+                        .spawn(move || {
+                            let mut executor = match crate::runtime::Executor::open(&dir) {
+                                Ok(ex) => Some(ex),
+                                Err(e) => {
+                                    eprintln!("runtime lane {li}: executor unavailable: {e}");
+                                    None
+                                }
+                            };
+                            while let Some(batch) =
+                                q.pop_batch(max_batch, Duration::from_millis(50), batch_wait)
+                            {
+                                serve_batch_runtime(&mut executor, &r, &m, batch);
+                            }
+                        })
+                        .expect("spawn runtime lane"),
+                );
+            }
+        }
+
+        Ok(Coordinator {
+            native_q,
+            runtime_q,
+            router,
+            metrics,
+            next_id: AtomicU64::new(1),
+            workers,
+            cfg,
+        })
+    }
+
+    fn make_job(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> (Job, mpsc::Receiver<JobResult>, bool) {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Route by distinct-count upper bound (len) — cheap admission-time
+        // heuristic; the lane falls back per job under Auto when unfit.
+        let to_runtime = self.cfg.engine != Engine::Native
+            && self
+                .router
+                .routes_to_runtime(method, data.len().max(1), opts.target_values);
+        (
+            Job { id, data, method, opts, submitted: Instant::now(), respond: tx },
+            rx,
+            to_runtime,
+        )
+    }
+
+    /// Blocking submit (applies backpressure). Returns the job id and the
+    /// result receiver.
+    pub fn submit(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        let (job, rx, to_runtime) = self.make_job(data, method, opts);
+        let id = job.id;
+        let q = if to_runtime { &self.runtime_q } else { &self.native_q };
+        if !q.push(job) {
+            return Err(Error::Coordinator("queue closed".into()));
+        }
+        self.metrics.on_submit();
+        Ok((id, rx))
+    }
+
+    /// Non-blocking submit; `Err` when the queue is full (load shedding).
+    pub fn try_submit(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        let (job, rx, to_runtime) = self.make_job(data, method, opts);
+        let id = job.id;
+        let q = if to_runtime { &self.runtime_q } else { &self.native_q };
+        match q.try_push(job) {
+            TryPush::Ok => {
+                self.metrics.on_submit();
+                Ok((id, rx))
+            }
+            TryPush::Full(_) => {
+                self.metrics.on_reject();
+                Err(Error::Coordinator("queue full".into()))
+            }
+            TryPush::Closed(_) => Err(Error::Coordinator("queue closed".into())),
+        }
+    }
+
+    /// Submit and wait for the result (convenience).
+    pub fn quantize_blocking(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<JobResult> {
+        let (_, rx) = self.submit(data, method, opts)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("worker dropped the job".into()))
+    }
+
+    /// Current metrics snapshot.
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Current queue depths (native, runtime).
+    pub fn queue_depths(&self) -> (usize, usize) {
+        (self.native_q.len(), self.runtime_q.len())
+    }
+
+    /// Graceful shutdown: close queues, drain, join workers.
+    pub fn shutdown(mut self) -> Snapshot {
+        self.native_q.close();
+        self.runtime_q.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.native_q.close();
+        self.runtime_q.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> Config {
+        Config {
+            workers: 2,
+            queue_capacity: 64,
+            max_batch: 8,
+            batch_wait_us: 100,
+            engine: Engine::Native,
+            ..Default::default()
+        }
+    }
+
+    fn sample(seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::Pcg32::seeded(seed);
+        (0..50).map(|_| rng.uniform(0.0, 10.0)).collect()
+    }
+
+    #[test]
+    fn submit_and_receive() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let res = c
+            .quantize_blocking(
+                sample(1),
+                QuantMethod::KMeans,
+                QuantOptions { target_values: 4, ..Default::default() },
+            )
+            .unwrap();
+        assert!(res.is_ok());
+        let out = res.outcome.unwrap();
+        assert!(out.distinct_values() <= 4);
+        let snap = c.shutdown();
+        assert_eq!(snap.submitted, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..40 {
+            let method = match i % 4 {
+                0 => QuantMethod::KMeans,
+                1 => QuantMethod::L1,
+                2 => QuantMethod::ClusterLs,
+                _ => QuantMethod::L1LeastSquare,
+            };
+            let (_, rx) = c
+                .submit(
+                    sample(i),
+                    method,
+                    QuantOptions { target_values: 5, lambda1: 0.05, ..Default::default() },
+                )
+                .unwrap();
+            rxs.push(rx);
+        }
+        let mut ok = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            if r.is_ok() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 40);
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 40);
+        assert_eq!(snap.failed, 0);
+        assert!(snap.batches <= 40, "batching should group at least sometimes");
+    }
+
+    #[test]
+    fn invalid_jobs_fail_cleanly() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let res = c
+            .quantize_blocking(vec![], QuantMethod::KMeans, QuantOptions::default())
+            .unwrap();
+        assert!(!res.is_ok());
+        let res2 = c
+            .quantize_blocking(vec![f64::NAN, 1.0], QuantMethod::L1, QuantOptions::default())
+            .unwrap();
+        assert!(!res2.is_ok());
+        let snap = c.shutdown();
+        assert_eq!(snap.failed, 2);
+    }
+
+    #[test]
+    fn try_submit_sheds_load_when_full() {
+        // 1 slow-ish worker, capacity 2 ⇒ some rejects under a burst.
+        let cfg = Config {
+            workers: 1,
+            queue_capacity: 2,
+            max_batch: 1,
+            batch_wait_us: 0,
+            engine: Engine::Native,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg).unwrap();
+        let mut accepted = 0;
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..50 {
+            match c.try_submit(
+                sample(i),
+                QuantMethod::IterativeL1,
+                QuantOptions { target_values: 3, lambda1: 1e-4, ..Default::default() },
+            ) {
+                Ok((_, rx)) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(accepted > 0);
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.submitted, accepted);
+        assert_eq!(snap.rejected, rejected);
+        assert_eq!(snap.completed + snap.failed, accepted);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_jobs() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let (_, rx) = c
+                .submit(
+                    sample(100 + i),
+                    QuantMethod::KMeans,
+                    QuantOptions { target_values: 3, ..Default::default() },
+                )
+                .unwrap();
+            rxs.push(rx);
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.completed + snap.failed, 10, "shutdown must drain the queue");
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn results_match_direct_engine_calls() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(7);
+        let opts = QuantOptions { target_values: 4, seed: 3, ..Default::default() };
+        let via_coord = c
+            .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+            .unwrap()
+            .outcome
+            .unwrap();
+        let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+        assert_eq!(via_coord.values, direct.values);
+        c.shutdown();
+    }
+}

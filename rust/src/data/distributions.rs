@@ -1,0 +1,195 @@
+//! Synthetic 1-d data generators for the paper's §4.3 experiments.
+//!
+//! Three distributions, 500 samples each, constrained to `[0, 100]`
+//! (Figure 7): a Mixture of Gaussians, a Uniform, and a single Gaussian.
+//! "In practice, these three types of distributions could describe most
+//! cases of 1-d data characteristics."
+
+use super::rng::Pcg32;
+
+/// The three §4.3 source distributions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SynthKind {
+    /// Mixture of Gaussians (three well-separated modes).
+    MixtureOfGaussians,
+    /// Uniform over the full range.
+    Uniform,
+    /// Single mid-range Gaussian.
+    SingleGaussian,
+}
+
+impl SynthKind {
+    /// All three kinds, in the order Figure 7/8 plots them.
+    pub const ALL: [SynthKind; 3] = [
+        SynthKind::MixtureOfGaussians,
+        SynthKind::Uniform,
+        SynthKind::SingleGaussian,
+    ];
+
+    /// Human-readable label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            SynthKind::MixtureOfGaussians => "mixture-of-gaussians",
+            SynthKind::Uniform => "uniform",
+            SynthKind::SingleGaussian => "single-gaussian",
+        }
+    }
+}
+
+/// A component of a 1-d Gaussian mixture.
+#[derive(Debug, Clone, Copy)]
+pub struct MixComponent {
+    /// Component mean.
+    pub mean: f64,
+    /// Component standard deviation.
+    pub std: f64,
+    /// Mixing weight (need not be normalized).
+    pub weight: f64,
+}
+
+/// Parameters for the synthetic generators. Defaults follow Figure 7:
+/// range `[0, 100]`, 500 samples.
+#[derive(Debug, Clone)]
+pub struct SynthParams {
+    /// Inclusive lower bound of the value range.
+    pub lo: f64,
+    /// Inclusive upper bound of the value range.
+    pub hi: f64,
+    /// Number of samples to draw.
+    pub n: usize,
+    /// Mixture components (MixtureOfGaussians only).
+    pub components: Vec<MixComponent>,
+    /// Mean/std of the single Gaussian, as fractions of the range.
+    pub gaussian_mean_frac: f64,
+    /// Std of the single Gaussian as a fraction of the range width.
+    pub gaussian_std_frac: f64,
+}
+
+impl Default for SynthParams {
+    fn default() -> Self {
+        SynthParams {
+            lo: 0.0,
+            hi: 100.0,
+            n: 500,
+            components: vec![
+                MixComponent { mean: 15.0, std: 5.0, weight: 0.4 },
+                MixComponent { mean: 50.0, std: 7.0, weight: 0.3 },
+                MixComponent { mean: 85.0, std: 4.0, weight: 0.3 },
+            ],
+            gaussian_mean_frac: 0.5,
+            gaussian_std_frac: 0.15,
+        }
+    }
+}
+
+/// Draw `params.n` samples of the given kind, clamped into
+/// `[params.lo, params.hi]` by resampling (rejection), so the constraint
+/// "samples are constrained in the range [0, 100]" holds without the
+/// boundary atoms a hard clamp would create.
+pub fn sample(kind: SynthKind, params: &SynthParams, rng: &mut Pcg32) -> Vec<f64> {
+    let mut out = Vec::with_capacity(params.n);
+    let weights: Vec<f64> = params.components.iter().map(|c| c.weight).collect();
+    while out.len() < params.n {
+        let x = match kind {
+            SynthKind::Uniform => rng.uniform(params.lo, params.hi),
+            SynthKind::SingleGaussian => {
+                let mean = params.lo + params.gaussian_mean_frac * (params.hi - params.lo);
+                let std = params.gaussian_std_frac * (params.hi - params.lo);
+                rng.normal_with(mean, std)
+            }
+            SynthKind::MixtureOfGaussians => {
+                let c = rng
+                    .weighted_index(&weights)
+                    .expect("mixture must have positive weights");
+                let comp = params.components[c];
+                rng.normal_with(comp.mean, comp.std)
+            }
+        };
+        if x >= params.lo && x <= params.hi {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Histogram of `data` with `bins` equal-width bins over `[lo, hi]`.
+/// Used to render Figure 7.
+pub fn histogram(data: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in data {
+        if x < lo || x > hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(kind: SynthKind) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(7);
+        sample(kind, &SynthParams::default(), &mut rng)
+    }
+
+    #[test]
+    fn sample_counts_and_range() {
+        for kind in SynthKind::ALL {
+            let xs = gen(kind);
+            assert_eq!(xs.len(), 500);
+            assert!(xs.iter().all(|&x| (0.0..=100.0).contains(&x)), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let xs = gen(SynthKind::Uniform);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < 10.0 && hi > 90.0, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn single_gaussian_concentrated() {
+        let xs = gen(SynthKind::SingleGaussian);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 50.0).abs() < 3.0, "mean={mean}");
+        let frac_mid = xs.iter().filter(|&&x| (20.0..=80.0).contains(&x)).count() as f64
+            / xs.len() as f64;
+        assert!(frac_mid > 0.9);
+    }
+
+    #[test]
+    fn mixture_is_multimodal() {
+        let xs = gen(SynthKind::MixtureOfGaussians);
+        let h = histogram(&xs, 0.0, 100.0, 10);
+        // Modes near bins 1, 5, 8; the valley bins must be sparse relative
+        // to the mode bins.
+        assert!(h[1] > h[3], "hist={h:?}");
+        assert!(h[5] > h[3] || h[4] > h[3], "hist={h:?}");
+        assert!(h[8] > h[6], "hist={h:?}");
+    }
+
+    #[test]
+    fn histogram_sums_to_len() {
+        let xs = gen(SynthKind::Uniform);
+        let h = histogram(&xs, 0.0, 100.0, 17);
+        assert_eq!(h.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Pcg32::seeded(9);
+        let mut r2 = Pcg32::seeded(9);
+        let p = SynthParams::default();
+        assert_eq!(
+            sample(SynthKind::MixtureOfGaussians, &p, &mut r1),
+            sample(SynthKind::MixtureOfGaussians, &p, &mut r2)
+        );
+    }
+}

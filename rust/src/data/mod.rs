@@ -1,0 +1,7 @@
+//! Data substrates (S15–S16): deterministic RNG, the paper's synthetic 1-d
+//! distributions (§4.3), and the procedural digit-image corpus substituted
+//! for MNIST (DESIGN §2).
+
+pub mod distributions;
+pub mod rng;
+pub mod synth_digits;

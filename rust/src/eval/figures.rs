@@ -1,0 +1,774 @@
+//! Figure/table regeneration (deliverable d): one function per experiment
+//! in DESIGN §5's index (E1–E10). Each returns a [`Report`] that the CLI
+//! prints and persists under the report dir.
+//!
+//! The absolute numbers differ from the paper's 2018 testbed; the
+//! *orderings, curve shapes and crossovers* are the reproduction targets —
+//! see EXPERIMENTS.md for the paper-vs-measured comparison.
+
+use super::report::{f, secs, Report, Table};
+use super::workloads::{self, NnWorkload};
+use crate::data::distributions::histogram;
+use crate::data::rng::Pcg32;
+use crate::data::synth_digits;
+use crate::linalg::stats;
+use crate::quant::{self, QuantMethod, QuantOptions, QuantOutput};
+use crate::Result;
+use std::time::Instant;
+
+/// Quantize with wall-clock measurement.
+pub fn timed(data: &[f64], method: QuantMethod, opts: &QuantOptions) -> Result<(QuantOutput, f64)> {
+    let t0 = Instant::now();
+    let out = quant::quantize(data, method, opts)?;
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+/// λ₁ grid used wherever the l1 family is swept against value counts.
+pub fn lambda_grid() -> Vec<f64> {
+    // Log-spaced 1e-4 … 2.0; dense enough to cover the count range of a
+    // 640-value weight matrix.
+    let mut v = Vec::new();
+    let mut x = 1e-4;
+    while x <= 2.0 {
+        v.push(x);
+        x *= 2.3;
+    }
+    v
+}
+
+/// Count grid for the count-taking methods (Fig 1/5/8 x-axes).
+pub fn count_grid(max: usize) -> Vec<usize> {
+    [2usize, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128]
+        .into_iter()
+        .filter(|&k| k <= max)
+        .collect()
+}
+
+const FIG1_COUNT_METHODS: [QuantMethod; 4] = [
+    QuantMethod::KMeans,
+    QuantMethod::ClusterLs,
+    QuantMethod::Gmm,
+    QuantMethod::DataTransform,
+];
+
+/// E1 / Figure 1 — post-quantization accuracy + runtime vs value count on
+/// the MLP last layer (64×10).
+pub fn fig1(nn: &NnWorkload) -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text(format!(
+        "Figure 1 — last-layer (64x10) quantization. Baseline accuracy: train {:.4}, test {:.4}.",
+        nn.train_acc, nn.test_acc
+    ));
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut table = Table::new(
+        "Fig1 accuracy and runtime",
+        &["method", "requested", "achieved", "train_acc", "test_acc", "seconds"],
+    );
+
+    // Count-taking methods on the k grid.
+    for method in FIG1_COUNT_METHODS {
+        for &k in &count_grid(256) {
+            let opts = QuantOptions { target_values: k, seed: 42, ..Default::default() };
+            let (out, dt) = timed(&weights, method, &opts)?;
+            let (tr, te) =
+                workloads::accuracy_with_layer(&nn.mlp, 3, &out.values, &nn.train, &nn.test)?;
+            table.row(vec![
+                method.id().into(),
+                k.to_string(),
+                out.distinct_values().to_string(),
+                f(tr),
+                f(te),
+                secs(dt),
+            ]);
+        }
+    }
+    // λ-swept l1 family (the paper's own protocol: the achieved count is
+    // whatever the λ produces).
+    for method in [QuantMethod::L1, QuantMethod::L1LeastSquare] {
+        for &lambda in &lambda_grid() {
+            let opts = QuantOptions { lambda1: lambda, seed: 42, ..Default::default() };
+            let (out, dt) = timed(&weights, method, &opts)?;
+            let (tr, te) =
+                workloads::accuracy_with_layer(&nn.mlp, 3, &out.values, &nn.train, &nn.test)?;
+            table.row(vec![
+                method.id().into(),
+                format!("λ={lambda:.2e}"),
+                out.distinct_values().to_string(),
+                f(tr),
+                f(te),
+                secs(dt),
+            ]);
+        }
+    }
+    rep.table(table);
+    rep.text(
+        "Expected shape (paper §4.1): accuracy is flat until the count gets small; \
+         l1_ls ≈ kmeans ≈ cluster_ls in accuracy with cluster_ls best near the cliff; \
+         gmm slightly worse; l1-family runtimes well below the kmeans family.",
+    );
+    Ok(rep)
+}
+
+/// E2 / Figure 2 — zoom on the accuracy cliff (small counts, step 1).
+pub fn fig2(nn: &NnWorkload) -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 2 — zoom on the accuracy-drop region (k = 2..16).");
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut table = Table::new(
+        "Fig2 accuracy zoom",
+        &["method", "k", "achieved", "train_acc", "test_acc"],
+    );
+    for method in [QuantMethod::KMeans, QuantMethod::ClusterLs, QuantMethod::IterativeL1] {
+        for k in 2..=16usize {
+            let opts = QuantOptions {
+                target_values: k,
+                lambda1: 1e-3,
+                seed: 42,
+                ..Default::default()
+            };
+            let (out, _) = timed(&weights, method, &opts)?;
+            let (tr, te) =
+                workloads::accuracy_with_layer(&nn.mlp, 3, &out.values, &nn.train, &nn.test)?;
+            table.row(vec![
+                method.id().into(),
+                k.to_string(),
+                out.distinct_values().to_string(),
+                f(tr),
+                f(te),
+            ]);
+        }
+    }
+    rep.table(table);
+    Ok(rep)
+}
+
+/// E3 / Figure 3 — the α-vector distributions for four solver variants.
+pub fn fig3(nn: &NnWorkload) -> Result<Report> {
+    use crate::quant::{lasso, refit, unique::UniqueDecomp, vmatrix::VBasis};
+    let mut rep = Report::new();
+    rep.text(
+        "Figure 3 — α distributions on the last-layer weights: least square without \
+         sparsity, l1 without LS, l1 with LS, and the cluster-LS equivalent dense form.",
+    );
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let u = UniqueDecomp::new(&weights)?;
+    let basis = VBasis::new(&u.values);
+    let m = u.m();
+
+    // (a) LS with the full support — exactly 𝟙 (paper's left plot).
+    let full: Vec<usize> = (0..m).collect();
+    let ls_alpha = refit::refit_fast(&basis, &u.values, &full, None)?.alpha;
+
+    // (b)/(c) l1 at a λ that lands in the hundreds of values.
+    let cfg = lasso::LassoConfig { lambda1: 5e-3, ..Default::default() };
+    let sol = lasso::solve(&basis, &u.values, &cfg, None)?;
+    let l1_alpha = sol.alpha.clone();
+    let l1ls_alpha = refit::refit_fast(&basis, &u.values, &sol.support(), None)?.alpha;
+
+    // (d) cluster-LS: dense equivalent — level deltas placed at segment
+    // starts (the paper's "starting index of each batch" trick).
+    let cls = crate::quant::cluster_ls::solve_cluster_ls(
+        &basis,
+        &u.values,
+        Some(&u.weights()),
+        &crate::quant::cluster_ls::ClusterLsConfig { l: sol.nnz().max(2), ..Default::default() },
+    )?;
+    let mut cls_alpha = vec![0.0; m];
+    let mut prev = 0.0;
+    for (c, &start) in cls.boundaries.iter().enumerate() {
+        let d = basis.diffs()[start];
+        if d != 0.0 {
+            cls_alpha[start] = (cls.levels[c] - prev) / d;
+        }
+        prev = cls.levels[c];
+    }
+
+    let mut table = Table::new(
+        "Fig3 alpha vectors",
+        &["index", "ls_full", "l1", "l1_ls", "cluster_ls"],
+    );
+    for i in 0..m {
+        table.row(vec![
+            i.to_string(),
+            f(ls_alpha[i]),
+            f(l1_alpha[i]),
+            f(l1ls_alpha[i]),
+            f(cls_alpha[i]),
+        ]);
+    }
+    rep.table(table);
+
+    // Summary stats the paper narrates: positivity and the central zero
+    // region.
+    let pos = l1_alpha.iter().filter(|&&a| a > 0.0).count();
+    let neg = l1_alpha.iter().filter(|&&a| a < 0.0).count();
+    rep.text(format!(
+        "l1 α signs: {pos} positive vs {neg} negative (paper: almost all positive — \
+         consistent with shrinkage + the V configuration). nnz={} of m={}.",
+        sol.nnz(),
+        m
+    ));
+    Ok(rep)
+}
+
+/// E4 / Figure 4 — l1 vs l1+negative-l2 across λ₁ (λ₂ = 4e-3·λ₁).
+pub fn fig4(nn: &NnWorkload) -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 4 — sole l1 vs l1+(negative)l2, λ2 = 4e-3·λ1, no LS refit (paper setup).");
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut table = Table::new(
+        "Fig4 l1 vs l1+l2",
+        &["lambda1", "variant", "achieved", "l2_loss", "train_acc", "test_acc"],
+    );
+    for &lambda in &lambda_grid() {
+        for (variant, lambda2) in [("l1", 0.0), ("l1_l2", 4e-3 * lambda)] {
+            let opts = QuantOptions {
+                lambda1: lambda,
+                lambda2,
+                refit: false,
+                seed: 42,
+                ..Default::default()
+            };
+            let (out, _) = timed(&weights, QuantMethod::L1L2, &opts)?;
+            let (tr, te) =
+                workloads::accuracy_with_layer(&nn.mlp, 3, &out.values, &nn.train, &nn.test)?;
+            table.row(vec![
+                format!("{lambda:.3e}"),
+                variant.into(),
+                out.distinct_values().to_string(),
+                f(out.l2_loss),
+                f(tr),
+                f(te),
+            ]);
+        }
+    }
+    rep.table(table);
+    rep.text(
+        "Expected shape (paper §3.3/Fig 4): at equal λ1 the l1+l2 variant yields fewer \
+         distinct values and a smaller l2 loss; large λ2 is numerically unstable.",
+    );
+    Ok(rep)
+}
+
+const FIG5_METHODS: [QuantMethod; 4] = [
+    QuantMethod::IterativeL1,
+    QuantMethod::KMeans,
+    QuantMethod::ClusterLs,
+    QuantMethod::L1LeastSquare,
+];
+
+/// E5 / Figure 5 — digit-image quantization: loss + runtime (+ rendered
+/// images in the text report, PGM files beside the CSVs).
+pub fn fig5(report_dir: Option<&std::path::Path>) -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 5 — digit-image quantization (hard-sigmoid clamped to [0,1]).");
+    let image = workloads::digit_image();
+    let mut table = Table::new(
+        "Fig5 image quantization",
+        &["method", "requested", "achieved", "l2_loss", "clamped", "seconds"],
+    );
+    for method in FIG5_METHODS {
+        for &k in &[2usize, 4, 8, 16, 32, 64] {
+            let opts = QuantOptions {
+                target_values: k,
+                lambda1: if method == QuantMethod::L1LeastSquare {
+                    // λ chosen per-k by a short inner sweep for the
+                    // λ-taking method.
+                    lambda_for_count(&image, k)
+                } else {
+                    1e-4
+                },
+                clamp: Some((0.0, 1.0)),
+                seed: 42,
+                ..Default::default()
+            };
+            let (out, dt) = timed(&image, method, &opts)?;
+            table.row(vec![
+                method.id().into(),
+                k.to_string(),
+                out.distinct_values().to_string(),
+                f(out.l2_loss),
+                out.clamped.to_string(),
+                secs(dt),
+            ]);
+            if k == 8 {
+                rep.text(format!(
+                    "{} @ k=8 (achieved {}):\n{}",
+                    method.id(),
+                    out.distinct_values(),
+                    synth_digits::to_ascii(&out.values)
+                ));
+                if let Some(dir) = report_dir {
+                    std::fs::create_dir_all(dir)?;
+                    std::fs::write(
+                        dir.join(format!("fig5_{}_k8.pgm", method.id())),
+                        synth_digits::to_pgm(&out.values),
+                    )?;
+                }
+            }
+        }
+    }
+    rep.table(table);
+    Ok(rep)
+}
+
+/// Pick a λ₁ that yields roughly `k` distinct values on `data` (short
+/// bisection; used where the paper sweeps λ to hit counts).
+pub fn lambda_for_count(data: &[f64], k: usize) -> f64 {
+    // Bracket scaled to the data: λ = ½‖w‖² kills every coordinate.
+    let wsq: f64 = data.iter().map(|x| x * x).sum();
+    let mut lo = 1e-9 * wsq.max(1e-6);
+    let mut hi = wsq.max(10.0);
+    for _ in 0..18 {
+        let mid = (lo * hi).sqrt();
+        let opts = QuantOptions { lambda1: mid, ..Default::default() };
+        match quant::quantize(data, QuantMethod::L1, &opts) {
+            Ok(out) if out.distinct_values() > k => lo = mid,
+            Ok(_) => hi = mid,
+            Err(_) => hi = mid,
+        }
+    }
+    (lo * hi).sqrt()
+}
+
+/// E6 / Figure 6 — the l0 method on the digit image: achieved counts,
+/// losses, and the failure modes.
+pub fn fig6() -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 6 — l0 best-subset on the digit image (non-universality on display).");
+    let image = workloads::digit_image();
+    let mut table = Table::new(
+        "Fig6 l0 image quantization",
+        &["requested_l", "achieved", "l2_loss", "unstable", "seconds"],
+    );
+    for &l in &[2usize, 4, 8, 16, 32, 64, 101, 128] {
+        let opts = QuantOptions {
+            target_values: l,
+            clamp: Some((0.0, 1.0)),
+            ..Default::default()
+        };
+        let (out, dt) = timed(&image, QuantMethod::L0, &opts)?;
+        table.row(vec![
+            l.to_string(),
+            out.distinct_values().to_string(),
+            f(out.l2_loss),
+            out.diag.unstable.to_string(),
+            secs(dt),
+        ]);
+    }
+    rep.table(table);
+    rep.text(
+        "Expected (paper §4.2/Fig 6): good loss where it succeeds, achieved counts \
+         often below the request (non-universal), failure beyond the package's l≤100 \
+         limit and at large l.",
+    );
+    Ok(rep)
+}
+
+/// E7 / Figure 7 — the three synthetic source distributions as histograms.
+pub fn fig7() -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 7 — artificially-generated data distributions (500 samples, [0,100]).");
+    for (kind, data) in workloads::synth_datasets(1) {
+        let h = histogram(&data, 0.0, 100.0, 20);
+        let max = h.iter().copied().max().unwrap_or(1).max(1);
+        let mut text = format!("\n{} (mean {:.1}, std {:.1})\n", kind.label(),
+            stats::mean(&data), stats::std_dev(&data));
+        for (b, &c) in h.iter().enumerate() {
+            let bar = "#".repeat(c * 50 / max);
+            text.push_str(&format!("{:>3}-{:<3} {:>3} {}\n", b * 5, (b + 1) * 5, c, bar));
+        }
+        rep.text(text);
+        let mut t = Table::new(
+            &format!("Fig7 histogram {}", kind.label()),
+            &["bin_lo", "bin_hi", "count"],
+        );
+        for (b, &c) in h.iter().enumerate() {
+            t.row(vec![(b * 5).to_string(), ((b + 1) * 5).to_string(), c.to_string()]);
+        }
+        rep.table(t);
+    }
+    Ok(rep)
+}
+
+const FIG8_METHODS: [QuantMethod; 6] = [
+    QuantMethod::IterativeL1,
+    QuantMethod::L1LeastSquare,
+    QuantMethod::KMeans,
+    QuantMethod::ClusterLs,
+    QuantMethod::Gmm,
+    QuantMethod::DataTransform,
+];
+
+/// E8 / Figure 8 — loss + runtime on the three synthetic datasets.
+pub fn fig8() -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text("Figure 8 — synthetic-data quantization: clamped l2 loss and runtime.");
+    for (kind, data) in workloads::synth_datasets(1) {
+        let mut table = Table::new(
+            &format!("Fig8 {}", kind.label()),
+            &["method", "requested", "achieved", "l2_loss", "seconds"],
+        );
+        for method in FIG8_METHODS {
+            for &k in &[2usize, 4, 8, 16, 32, 64] {
+                let opts = QuantOptions {
+                    target_values: k,
+                    lambda1: if method == QuantMethod::L1LeastSquare {
+                        lambda_for_count(&data, k)
+                    } else {
+                        1e-3
+                    },
+                    clamp: Some((0.0, 100.0)),
+                    seed: 7,
+                    ..Default::default()
+                };
+                let (out, dt) = timed(&data, method, &opts)?;
+                table.row(vec![
+                    method.id().into(),
+                    k.to_string(),
+                    out.distinct_values().to_string(),
+                    f(out.l2_loss),
+                    secs(dt),
+                ]);
+            }
+        }
+        rep.table(table);
+    }
+    rep.text(
+        "Expected (paper §4.3/Fig 8): l1 alone loses more here than on NN/MNIST data \
+         but is fast; with LS refit the loss gap to kmeans nearly closes; cluster_ls \
+         edges out kmeans; data_transform trails on these skewed/multimodal sets.",
+    );
+    Ok(rep)
+}
+
+/// E9 / §3.6 — runtime crossover: CD-LASSO vs k-means as k approaches m.
+pub fn crossover() -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text(
+        "§3.6 complexity crossover — k-means O(t·k·T·m) vs structured CD O(t·m) per the \
+         paper's asymptotic argument; high-resolution quantization (k ∈ Θ(m)) favors l1.",
+    );
+    let mut table = Table::new(
+        "Crossover kmeans vs l1",
+        &["m", "k", "kmeans_s", "l1_ls_s", "ratio_kmeans_over_l1"],
+    );
+    let mut rng = Pcg32::seeded(9);
+    for &m in &[256usize, 512, 1024, 2048] {
+        let data: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+        for frac in [4usize, 2] {
+            let k = m / frac;
+            let opts_k = QuantOptions { target_values: k, seed: 1, ..Default::default() };
+            let (_, t_kmeans) = timed(&data, QuantMethod::KMeans, &opts_k)?;
+            let lambda = lambda_for_count(&data, k);
+            let opts_l = QuantOptions { lambda1: lambda, ..Default::default() };
+            let (_, t_l1) = timed(&data, QuantMethod::L1LeastSquare, &opts_l)?;
+            table.row(vec![
+                m.to_string(),
+                k.to_string(),
+                secs(t_kmeans),
+                secs(t_l1),
+                f(t_kmeans / t_l1.max(1e-12)),
+            ]);
+        }
+    }
+    rep.table(table);
+    Ok(rep)
+}
+
+/// E10 / §4 claim 6 — out-of-range incidence: naively-initialized k-means
+/// (the practice the paper critiques) vs the hardened k-means++ baseline
+/// vs the LS methods, across seeds on the [0,1] digit image.
+pub fn out_of_range() -> Result<Report> {
+    use crate::cluster::kmeans::{kmeans_1d, KMeansConfig, KMeansInit};
+    use crate::quant::unique::UniqueDecomp;
+
+    let mut rep = Report::new();
+    rep.text(
+        "Out-of-range incidence — §4.2: 'K-means methods sometimes provide out-of-range \
+         values when the number of clusters is large', attributed to bad random \
+         initialization (empty clusters keep their init value). LS methods cannot \
+         produce out-of-range values. Our default kmeans hardens init (k-means++ + \
+         empty-cluster repair), so the pathology is reproduced with the classic naive \
+         init the paper's baseline practice corresponds to.",
+    );
+    let image = workloads::digit_image();
+    let u = UniqueDecomp::new(&image)?;
+    let counts = u.weights();
+    let mut table = Table::new(
+        "Out-of-range incidence",
+        &["method", "k", "seeds_with_oor", "max_oor_values", "empty_cluster_events"],
+    );
+
+    // (a) naive-init k-means, no repair — the critiqued practice.
+    // (b) hardened k-means++ (our default).
+    for (label, init, repair) in [
+        ("kmeans_naive_init", KMeansInit::RandomValues, false),
+        ("kmeans_plus_plus", KMeansInit::KMeansPP, true),
+    ] {
+        for &k in &[32usize, 64, 128] {
+            let mut seeds_oor = 0usize;
+            let mut max_oor = 0usize;
+            let mut empties = 0usize;
+            for seed in 0..20u64 {
+                let km = kmeans_1d(
+                    &u.values,
+                    Some(&counts),
+                    &KMeansConfig {
+                        k,
+                        restarts: 1,
+                        seed,
+                        init,
+                        repair_empty: repair,
+                        ..Default::default()
+                    },
+                )?;
+                let quantized: Vec<f64> = u
+                    .values
+                    .iter()
+                    .map(|&v| {
+                        km.centroids[crate::cluster::kmeans::assign_sorted(v, &km.centroids)]
+                    })
+                    .collect();
+                // An out-of-range *centroid* only harms if some value maps
+                // to it OR it survives as a reported level; count levels.
+                let oor_levels = km
+                    .centroids
+                    .iter()
+                    .filter(|&&c| !(0.0..=1.0).contains(&c))
+                    .count();
+                let _ = quantized;
+                if oor_levels > 0 {
+                    seeds_oor += 1;
+                }
+                max_oor = max_oor.max(oor_levels);
+                empties += km.empty_cluster_events;
+            }
+            table.row(vec![
+                label.into(),
+                k.to_string(),
+                seeds_oor.to_string(),
+                max_oor.to_string(),
+                empties.to_string(),
+            ]);
+        }
+    }
+    // (c) the LS methods for contrast.
+    for method in [QuantMethod::ClusterLs, QuantMethod::L1LeastSquare] {
+        for &k in &[32usize, 64, 128] {
+            let mut seeds_oor = 0usize;
+            let mut max_oor = 0usize;
+            for seed in 0..10u64 {
+                let opts = QuantOptions {
+                    target_values: k,
+                    lambda1: lambda_for_count(&image, k),
+                    seed,
+                    kmeans_restarts: 1,
+                    clamp: None,
+                    ..Default::default()
+                };
+                let out = quant::quantize(&image, method, &opts)?;
+                let oor = crate::quant::hard_sigmoid::count_out_of_range(&out.levels, 0.0, 1.0);
+                if oor > 0 {
+                    seeds_oor += 1;
+                }
+                max_oor = max_oor.max(oor);
+            }
+            table.row(vec![
+                method.id().into(),
+                k.to_string(),
+                seeds_oor.to_string(),
+                max_oor.to_string(),
+                "0".into(),
+            ]);
+        }
+    }
+    rep.table(table);
+    Ok(rep)
+}
+
+/// Ablations (DESIGN §5 extension row): exact solvers vs the heuristics
+/// the paper (and this repo) use, plus the baselines the paper discussed
+/// but excluded (§2: fuzzy c-means; ref [11]: agglomerative).
+pub fn ablations() -> Result<Report> {
+    let mut rep = Report::new();
+    rep.text(
+        "Ablations — how much loss is the heuristic vs the objective: Lloyd vs exact DP \
+         k-means; CD-LASSO (Alg 1) vs the exact fused-lasso DP on eq 6; and the \
+         discussed-but-excluded baselines (fuzzy c-means §2, agglomerative [11]).",
+    );
+    let mut table = Table::new(
+        "Ablations exact vs heuristic",
+        &["dataset", "method", "k_or_λ", "achieved", "l2_loss", "seconds"],
+    );
+    for (kind, data) in workloads::synth_datasets(1) {
+        for &k in &[8usize, 32] {
+            for method in [
+                QuantMethod::KMeans,
+                QuantMethod::KMeansExact,
+                QuantMethod::FuzzyCMeans,
+                QuantMethod::Agglomerative,
+                QuantMethod::ClusterLs,
+            ] {
+                let opts = QuantOptions { target_values: k, seed: 3, ..Default::default() };
+                let (out, dt) = timed(&data, method, &opts)?;
+                table.row(vec![
+                    kind.label().into(),
+                    method.id().into(),
+                    k.to_string(),
+                    out.distinct_values().to_string(),
+                    f(out.l2_loss),
+                    secs(dt),
+                ]);
+            }
+        }
+        // CD vs exact TV at matched λ.
+        for lambda in [0.5f64, 5.0] {
+            for method in [QuantMethod::L1, QuantMethod::L1LeastSquare, QuantMethod::TvExact] {
+                let opts = QuantOptions { lambda1: lambda, refit: false, ..Default::default() };
+                let (out, dt) = timed(&data, method, &opts)?;
+                table.row(vec![
+                    kind.label().into(),
+                    method.id().into(),
+                    format!("λ={lambda}"),
+                    out.distinct_values().to_string(),
+                    f(out.l2_loss),
+                    secs(dt),
+                ]);
+            }
+        }
+    }
+    rep.table(table);
+    rep.text(
+        "Expected: kmeans_exact ≤ kmeans (how much Lloyd leaves on the table); \
+         tv_exact ≤ l1 at equal λ (CD truncation cost), with l1_ls recovering most of \
+         the gap via the refit; fcm ≈ kmeans but slower (the Wen & Celebi claim the \
+         paper cites); agglom deterministic and competitive.",
+    );
+    Ok(rep)
+}
+
+/// Bit-width experiment (the paper's intro motivation: "reduce the number
+/// of distinct values to the nearest 2^k to reduce memory cost yet
+/// preserve most of the information"): accuracy + compression at
+/// power-of-two codebook sizes on the NN last layer.
+pub fn bitwidth(nn: &super::workloads::NnWorkload) -> Result<Report> {
+    use crate::quant::codebook::Codebook;
+    let mut rep = Report::new();
+    rep.text(format!(
+        "Bit-width sweep — last layer to 2^b values (baseline train {:.4} / test {:.4}).",
+        nn.train_acc, nn.test_acc
+    ));
+    let weights = nn.mlp.layer_weights(3).to_vec();
+    let mut table = Table::new(
+        "Bitwidth sweep",
+        &[
+            "bits",
+            "values",
+            "method",
+            "test_acc",
+            "bits_per_weight",
+            "index_entropy",
+            "compression_vs_f32",
+        ],
+    );
+    for bits in 1..=7u32 {
+        let k = 1usize << bits;
+        for method in [QuantMethod::KMeans, QuantMethod::ClusterLs, QuantMethod::IterativeL1] {
+            let opts = QuantOptions {
+                target_values: k,
+                lambda1: 1e-3,
+                seed: 42,
+                ..Default::default()
+            };
+            let out = quant::quantize(&weights, method, &opts)?;
+            let (_, te) =
+                workloads::accuracy_with_layer(&nn.mlp, 3, &out.values, &nn.train, &nn.test)?;
+            let cb = Codebook::from_output(&out)?;
+            table.row(vec![
+                bits.to_string(),
+                cb.k().to_string(),
+                method.id().into(),
+                f(te),
+                cb.bits_per_index().to_string(),
+                f(cb.index_entropy()),
+                format!("{:.1}x", cb.compression_ratio_f32()),
+            ]);
+        }
+    }
+    rep.table(table);
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_are_sane() {
+        assert!(lambda_grid().len() >= 8);
+        assert!(count_grid(640).contains(&128));
+        assert!(!count_grid(10).contains(&128));
+    }
+
+    #[test]
+    fn lambda_for_count_brackets() {
+        let mut rng = Pcg32::seeded(3);
+        let data: Vec<f64> = (0..100).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let lam = lambda_for_count(&data, 8);
+        let out = quant::quantize(
+            &data,
+            QuantMethod::L1,
+            &QuantOptions { lambda1: lam, ..Default::default() },
+        )
+        .unwrap();
+        // Bisection is approximate; within a small factor is fine.
+        assert!(
+            out.distinct_values() >= 2 && out.distinct_values() <= 32,
+            "got {}",
+            out.distinct_values()
+        );
+    }
+
+    #[test]
+    fn fig7_runs() {
+        let rep = fig7().unwrap();
+        let dir = std::env::temp_dir().join("sqlsq_fig7_test");
+        rep.write(&dir, "fig7").unwrap();
+        assert!(dir.join("fig7.txt").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fig6_runs_and_shows_failure_mode() {
+        let rep = fig6().unwrap();
+        // The l>100 row must be flagged unstable.
+        let table_text = rep
+            .write(&std::env::temp_dir().join("sqlsq_fig6_test"), "fig6")
+            .map(|_| {
+                std::fs::read_to_string(
+                    std::env::temp_dir().join("sqlsq_fig6_test").join("fig6.txt"),
+                )
+                .unwrap()
+            })
+            .unwrap();
+        assert!(table_text.contains("101"));
+        assert!(table_text.contains("true"));
+        std::fs::remove_dir_all(std::env::temp_dir().join("sqlsq_fig6_test")).ok();
+    }
+
+    #[test]
+    fn out_of_range_runs_smoke() {
+        // Full E10 is slow; smoke-test the core loop on one config.
+        let image = workloads::digit_image();
+        let opts = QuantOptions {
+            target_values: 64,
+            seed: 3,
+            kmeans_restarts: 1,
+            clamp: None,
+            ..Default::default()
+        };
+        let out = quant::quantize(&image, QuantMethod::KMeans, &opts).unwrap();
+        let _ = crate::quant::hard_sigmoid::count_out_of_range(&out.values, 0.0, 1.0);
+    }
+}

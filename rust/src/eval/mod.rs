@@ -1,0 +1,6 @@
+//! Evaluation harness (S20): workloads, figure regeneration, and report
+//! plumbing for every experiment in DESIGN §5.
+
+pub mod figures;
+pub mod report;
+pub mod workloads;

@@ -1,0 +1,205 @@
+//! Experiment report plumbing: aligned text tables + CSV files.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A labeled table of results.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Table title (also the CSV file slug).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Data rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (panics on arity mismatch — a test bug, not user
+    /// input).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table '{}' arity", self.title);
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV text.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write `<dir>/<slug>.csv` and return the path.
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// A figure report: prose + tables, printed and persisted together.
+#[derive(Debug, Default)]
+pub struct Report {
+    sections: Vec<String>,
+    tables: Vec<Table>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Add a prose section.
+    pub fn text(&mut self, s: impl Into<String>) {
+        self.sections.push(s.into());
+    }
+
+    /// Add a table (also rendered inline at this position).
+    pub fn table(&mut self, t: Table) {
+        self.sections.push(t.render());
+        self.tables.push(t);
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        for s in &self.sections {
+            println!("{s}");
+        }
+    }
+
+    /// Persist: text to `<dir>/<name>.txt`, every table to CSV.
+    pub fn write(&self, dir: &Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{name}.txt")))?;
+        for s in &self.sections {
+            writeln!(f, "{s}")?;
+        }
+        for t in &self.tables {
+            t.write_csv(dir)?;
+        }
+        Ok(())
+    }
+}
+
+/// Format a float for tables.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Format a duration in seconds for tables.
+pub fn secs(s: f64) -> String {
+    format!("{s:.5}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["k", "loss"]);
+        t.row(vec!["2".into(), "0.5".into()]);
+        t.row(vec!["16".into(), "0.0125".into()]);
+        let r = t.render();
+        assert!(r.contains("### Demo"));
+        assert!(r.contains("loss"));
+        assert_eq!(r.lines().count(), 6);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("X", &["a"]);
+        t.row(vec!["with,comma".into()]);
+        assert!(t.to_csv().contains("\"with,comma\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("X", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let dir = std::env::temp_dir().join("sqlsq_report_test");
+        let mut r = Report::new();
+        r.text("hello");
+        let mut t = Table::new("Fig X", &["a"]);
+        t.row(vec!["1".into()]);
+        r.table(t);
+        r.write(&dir, "fig_x").unwrap();
+        assert!(dir.join("fig_x.txt").exists());
+        assert!(dir.join("fig_x.csv").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(0.0), "0");
+        assert!(f(12345.0).contains('e'));
+        assert_eq!(f(0.5), "0.5000");
+        assert_eq!(secs(0.123456), "0.12346");
+    }
+}

@@ -1,0 +1,142 @@
+//! Shared experiment workloads (§4): the trained MLP, the digit image,
+//! and the three synthetic datasets. Heavyweight artifacts (the trained
+//! network) are cached on disk so figure harnesses don't retrain.
+
+use crate::data::distributions::{sample, SynthKind, SynthParams};
+use crate::data::rng::Pcg32;
+use crate::data::synth_digits::{self, DigitDataset};
+use crate::nn::mlp::Mlp;
+use crate::nn::train::{self, TrainConfig};
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Sizes for the §4.1 corpus. Chosen so training takes ~tens of seconds
+/// while leaving the accuracy-vs-quantization curves well-resolved.
+pub const TRAIN_N: usize = 2000;
+/// Held-out set size.
+pub const TEST_N: usize = 500;
+/// Seed for the corpus (train and test use different streams).
+pub const CORPUS_SEED: u64 = 20180724;
+
+/// Everything the NN experiments need.
+pub struct NnWorkload {
+    /// The trained 784-256-128-64-10 network.
+    pub mlp: Mlp,
+    /// Training set.
+    pub train: DigitDataset,
+    /// Held-out set.
+    pub test: DigitDataset,
+    /// Baseline train accuracy (unquantized).
+    pub train_acc: f64,
+    /// Baseline test accuracy (unquantized).
+    pub test_acc: f64,
+}
+
+/// Default weight-cache location (gitignored, next to artifacts).
+pub fn default_cache() -> PathBuf {
+    PathBuf::from("artifacts").join("cache").join("mlp_weights.txt")
+}
+
+/// Load-or-train the paper's MLP. The corpus is regenerated (cheap,
+/// deterministic); only the weights are cached.
+pub fn nn_workload(cache: Option<&Path>) -> Result<NnWorkload> {
+    let train_ds = synth_digits::generate(TRAIN_N, CORPUS_SEED);
+    let test_ds = synth_digits::generate(TEST_N, CORPUS_SEED + 1);
+
+    let cache_path = cache.map(Path::to_path_buf).unwrap_or_else(default_cache);
+    let mlp = match train::load_weights(&cache_path) {
+        Ok(m) if m.in_dim() == 784 && m.out_dim() == 10 => m,
+        _ => {
+            eprintln!("training MLP ({} images, arch 784-256-128-64-10)...", TRAIN_N);
+            let mut m = Mlp::paper_arch(7);
+            let report = train::train(
+                &mut m,
+                &train_ds,
+                &TrainConfig { epochs: 14, lr: 0.08, momentum: 0.9, batch: 64, seed: 1, log_every: 0 },
+            )?;
+            eprintln!(
+                "trained: final loss {:.4}, train acc {:.4}",
+                report.final_loss, report.train_accuracy
+            );
+            train::save_weights(&m, &cache_path)?;
+            m
+        }
+    };
+    let train_acc = train::evaluate(&mlp, &train_ds)?;
+    let test_acc = train::evaluate(&mlp, &test_ds)?;
+    Ok(NnWorkload { mlp, train: train_ds, test: test_ds, train_acc, test_acc })
+}
+
+/// Accuracy of `mlp` with one layer's weights replaced by `quantized`.
+/// Restores nothing — callers pass a clone or re-set afterwards.
+pub fn accuracy_with_layer(
+    mlp: &Mlp,
+    layer: usize,
+    quantized: &[f64],
+    train_ds: &DigitDataset,
+    test_ds: &DigitDataset,
+) -> Result<(f64, f64)> {
+    let mut m = mlp.clone();
+    m.set_layer_weights(layer, quantized)?;
+    Ok((train::evaluate(&m, train_ds)?, train::evaluate(&m, test_ds)?))
+}
+
+/// The §4.2 image workload: a canonical rendered digit in `[0,1]`.
+pub fn digit_image() -> Vec<f64> {
+    synth_digits::canonical_digit(5).pixels
+}
+
+/// The §4.3 synthetic datasets (500 samples each in [0, 100]).
+pub fn synth_datasets(seed: u64) -> Vec<(SynthKind, Vec<f64>)> {
+    let params = SynthParams::default();
+    SynthKind::ALL
+        .iter()
+        .map(|&kind| {
+            let mut rng = Pcg32::new(seed, kind as u64 + 1);
+            (kind, sample(kind, &params, &mut rng))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digit_image_in_unit_range() {
+        let img = digit_image();
+        assert_eq!(img.len(), 784);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(img.iter().any(|&v| v > 0.5));
+    }
+
+    #[test]
+    fn synth_datasets_deterministic() {
+        let a = synth_datasets(1);
+        let b = synth_datasets(1);
+        assert_eq!(a.len(), 3);
+        for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(va, vb);
+            assert_eq!(va.len(), 500);
+        }
+    }
+
+    #[test]
+    fn accuracy_with_layer_swaps_cleanly() {
+        // Tiny net to keep the test fast; semantic check only.
+        let ds = synth_digits::generate(60, 3);
+        let mut mlp = Mlp::new(&[784, 16, 10], 1);
+        train::train(&mut mlp, &ds, &TrainConfig { epochs: 2, ..Default::default() }).unwrap();
+        let w = mlp.layer_weights(1).to_vec();
+        let (tr, te) = accuracy_with_layer(&mlp, 1, &w, &ds, &ds).unwrap();
+        // Identity replacement must not change accuracy.
+        let base = train::evaluate(&mlp, &ds).unwrap();
+        assert!((tr - base).abs() < 1e-12);
+        assert!((te - base).abs() < 1e-12);
+        // Zeroing the layer wrecks it.
+        let zeros = vec![0.0; w.len()];
+        let (trz, _) = accuracy_with_layer(&mlp, 1, &zeros, &ds, &ds).unwrap();
+        assert!(trz <= base);
+    }
+}

@@ -1,0 +1,73 @@
+//! # sqlsq — Scalar Quantization as Sparse Least Square Optimization
+//!
+//! Full-system reproduction of Wang et al., *"Scalar Quantization as Sparse
+//! Least Square Optimization"* (2018). The library recasts scalar
+//! quantization — replacing the `m` distinct values of a vector with `p ≤ m`
+//! shared values — as sparse least-square optimization over a structured
+//! lower-triangular difference basis `V`, and implements:
+//!
+//! * the paper's algorithms: `l1` LASSO quantization (eq 6), `l1` + exact
+//!   least-square refit (Algorithm 1), `l1 + negative-l2` relaxation
+//!   (eq 13/15), `l0` best-subset quantization (eq 16), iterative-`λ`
+//!   quantization to a target value count (Algorithm 2), and cluster-based
+//!   least-square quantization (Algorithm 3);
+//! * every baseline the paper compares against: k-means (Lloyd + k-means++ +
+//!   restarts), Mixture-of-Gaussians (EM) quantization, and the
+//!   data-transformation clustering of Azimi et al. (2017);
+//! * every substrate the experiments need: a dense-linalg kernel set, a
+//!   deterministic RNG + the paper's three synthetic data distributions, a
+//!   procedural digit-image corpus (MNIST substitute), and a from-scratch
+//!   MLP (784-256-128-64-10) with an SGD trainer;
+//! * the serving layer: a PJRT runtime that loads AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and a thread-pool coordinator with batching,
+//!   routing, backpressure and metrics;
+//! * the evaluation harness regenerating every figure of the paper (§4).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench_support;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod jsonio;
+pub mod linalg;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Input vector was empty or otherwise unusable.
+    #[error("invalid input: {0}")]
+    InvalidInput(String),
+    /// An algorithm parameter was out of its valid domain.
+    #[error("invalid parameter: {0}")]
+    InvalidParam(String),
+    /// An iterative solver failed to converge within its budget.
+    #[error("no convergence: {0}")]
+    NoConvergence(String),
+    /// A linear system was singular / not positive definite.
+    #[error("linear algebra failure: {0}")]
+    Linalg(String),
+    /// PJRT / artifact runtime failure.
+    #[error("runtime failure: {0}")]
+    Runtime(String),
+    /// Coordinator failure (queue closed, worker panicked, ...).
+    #[error("coordinator failure: {0}")]
+    Coordinator(String),
+    /// Configuration / CLI parsing failure.
+    #[error("config error: {0}")]
+    Config(String),
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,204 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! The least-square refits (paper eq 9 and eq 20) are solved through the
+//! normal equations `(XᵀX) β = Xᵀw`. `XᵀX` is symmetric positive
+//! (semi-)definite, so Cholesky is the right tool; a tiny diagonal jitter
+//! retry handles the semi-definite edge cases that arise when the support
+//! selects nearly-identical columns.
+
+use super::matrix::Matrix;
+use crate::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix.
+    pub fn factor(a: &Matrix) -> Result<Self> {
+        if a.rows() != a.cols() {
+            return Err(Error::Linalg(format!(
+                "cholesky needs a square matrix, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return Err(Error::Linalg(format!(
+                            "matrix not positive definite at pivot {i} (s={s})"
+                        )));
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower-triangular factor.
+    pub fn l(&self) -> &Matrix {
+        &self.l
+    }
+
+    /// Solve `A x = b` via forward + backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.l.rows();
+        if b.len() != n {
+            return Err(Error::Linalg(format!(
+                "solve dimension mismatch: {} vs {}",
+                b.len(),
+                n
+            )));
+        }
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[(i, k)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        Ok(x)
+    }
+}
+
+/// Solve the SPD system `A x = b`, retrying with growing diagonal jitter if
+/// `A` is only positive semi-definite (rank-deficient supports).
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    match Cholesky::factor(a) {
+        Ok(ch) => ch.solve(b),
+        Err(_) => {
+            // Jitter scaled to the matrix magnitude.
+            let scale = (0..a.rows()).map(|i| a[(i, i)].abs()).fold(0.0, f64::max).max(1e-12);
+            let mut jitter = 1e-12 * scale;
+            for _ in 0..8 {
+                let mut aj = a.clone();
+                for i in 0..a.rows() {
+                    aj[(i, i)] += jitter;
+                }
+                if let Ok(ch) = Cholesky::factor(&aj) {
+                    return ch.solve(b);
+                }
+                jitter *= 100.0;
+            }
+            Err(Error::Linalg(
+                "solve_spd: matrix not PD even after jitter".into(),
+            ))
+        }
+    }
+}
+
+/// Solve the least-square problem `min ‖w − X β‖²` through the normal
+/// equations. `x` is `m × h` with `h ≤ m`.
+pub fn least_squares(x: &Matrix, w: &[f64]) -> Result<Vec<f64>> {
+    if w.len() != x.rows() {
+        return Err(Error::Linalg(format!(
+            "least_squares: {} rows vs {} targets",
+            x.rows(),
+            w.len()
+        )));
+    }
+    let gram = x.gram();
+    let rhs = x.t_matvec(w)?;
+    solve_spd(&gram, &rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Matrix {
+        // A = B Bᵀ + n·I is SPD for any B.
+        let b = Matrix::from_fn(n, n, |i, j| ((i * 7 + j * 3) as f64).sin());
+        let mut a = b.matmul(&b.transpose()).unwrap();
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(6);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l().matmul(&ch.l().transpose()).unwrap();
+        assert!(a.max_abs_diff(&rec) < 1e-9);
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = spd(8);
+        let x_true: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let b = a.matvec(&x_true).unwrap();
+        let x = Cholesky::factor(&a).unwrap().solve(&b).unwrap();
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-8, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_pd() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Cholesky::factor(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn solve_spd_handles_semidefinite() {
+        // Rank-1 PSD matrix.
+        let a = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let x = solve_spd(&a, &[2.0, 2.0]).unwrap();
+        // Any solution with x0 + x1 ≈ 2 is acceptable.
+        assert!((x[0] + x[1] - 2.0).abs() < 1e-3, "x={x:?}");
+    }
+
+    #[test]
+    fn least_squares_exact_fit() {
+        // Overdetermined but consistent system.
+        let x = Matrix::from_vec(4, 2, vec![1.0, 0.0, 1.0, 1.0, 1.0, 2.0, 1.0, 3.0]).unwrap();
+        let beta_true = [0.5, 2.0];
+        let w: Vec<f64> = (0..4).map(|i| beta_true[0] + beta_true[1] * i as f64).collect();
+        let beta = least_squares(&x, &w).unwrap();
+        assert!((beta[0] - 0.5).abs() < 1e-9);
+        assert!((beta[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_regression_line() {
+        // Noisy line: slope must be near 1 with intercept near 0.
+        let n = 50;
+        let x = Matrix::from_fn(n, 2, |i, j| if j == 0 { 1.0 } else { i as f64 });
+        let w: Vec<f64> = (0..n)
+            .map(|i| i as f64 + if i % 2 == 0 { 0.1 } else { -0.1 })
+            .collect();
+        let beta = least_squares(&x, &w).unwrap();
+        assert!((beta[1] - 1.0).abs() < 1e-3, "slope {}", beta[1]);
+    }
+}

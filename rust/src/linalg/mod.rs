@@ -1,0 +1,6 @@
+//! Dense linear-algebra substrate (S14): matrices, Cholesky/SPD solves,
+//! and the scalar statistics used across solvers and the eval harness.
+
+pub mod cholesky;
+pub mod matrix;
+pub mod stats;

@@ -1,0 +1,139 @@
+//! Scalar statistics helpers shared by solvers, baselines and the
+//! evaluation harness (information-loss metrics of §4).
+
+/// Arithmetic mean. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Weighted mean with non-negative weights. Returns 0.0 if total weight is 0.
+pub fn weighted_mean(xs: &[f64], ws: &[f64]) -> f64 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let tw: f64 = ws.iter().sum();
+    if tw <= 0.0 {
+        return 0.0;
+    }
+    xs.iter().zip(ws).map(|(x, w)| x * w).sum::<f64>() / tw
+}
+
+/// Population variance. Returns 0.0 for slices shorter than 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Standard deviation (population).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Squared l2 norm of the difference — the paper's information-loss metric
+/// (`‖w − w*‖₂²`).
+pub fn l2_loss(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// l2 norm of the difference.
+pub fn l2_dist(a: &[f64], b: &[f64]) -> f64 {
+    l2_loss(a, b).sqrt()
+}
+
+/// Minimum of a slice (NaN-free input assumed). Panics on empty.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Maximum of a slice (NaN-free input assumed). Panics on empty.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Count of distinct values after rounding to `decimals` (used to report
+/// achieved quantization amounts in the presence of f64 round-off).
+pub fn distinct_count(xs: &[f64], decimals: i32) -> usize {
+    let scale = 10f64.powi(decimals);
+    let mut keys: Vec<i64> = xs.iter().map(|&x| (x * scale).round() as i64).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys.len()
+}
+
+/// Exact distinct count via bit pattern (treats -0.0 == 0.0, folds NaNs).
+pub fn distinct_count_exact(xs: &[f64]) -> usize {
+    let mut keys: Vec<u64> = xs
+        .iter()
+        .map(|&x| if x == 0.0 { 0u64 } else { x.to_bits() })
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys.len()
+}
+
+/// Simple percentile (nearest-rank) on unsorted data; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((std_dev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn weighted_mean_works() {
+        assert_eq!(weighted_mean(&[1.0, 3.0], &[1.0, 3.0]), 2.5);
+        assert_eq!(weighted_mean(&[1.0, 3.0], &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn l2_loss_works() {
+        assert_eq!(l2_loss(&[1.0, 2.0], &[1.0, 0.0]), 4.0);
+        assert_eq!(l2_dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn min_max_work() {
+        let xs = [3.0, -1.0, 2.0];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 3.0);
+    }
+
+    #[test]
+    fn distinct_counts() {
+        let xs = [1.0, 1.0 + 1e-12, 2.0, 2.0, -0.0, 0.0];
+        assert_eq!(distinct_count(&xs, 6), 3);
+        assert_eq!(distinct_count_exact(&xs), 4);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

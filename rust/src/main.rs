@@ -1,0 +1,4 @@
+//! sqlsq CLI entry point. See `cli.rs` for the command surface.
+fn main() {
+    std::process::exit(sqlsq::cli::run());
+}

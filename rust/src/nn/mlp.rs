@@ -1,0 +1,341 @@
+//! From-scratch MLP (S17): the paper's 784-256-128-64-10 fully-connected
+//! network (§4.1), with manual backprop. f64 throughout — the quantization
+//! experiments care about weight-value distributions, not training speed.
+
+use crate::data::rng::Pcg32;
+use crate::linalg::matrix::Matrix;
+use crate::{Error, Result};
+
+/// One dense layer `y = x W + b` with optional ReLU.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    /// Weights, `in_dim × out_dim`.
+    pub w: Matrix,
+    /// Bias, `out_dim`.
+    pub b: Vec<f64>,
+    /// Apply ReLU after the affine map?
+    pub relu: bool,
+}
+
+impl Dense {
+    /// He-initialized layer.
+    pub fn new(in_dim: usize, out_dim: usize, relu: bool, rng: &mut Pcg32) -> Dense {
+        let std = (2.0 / in_dim as f64).sqrt();
+        let w = Matrix::from_fn(in_dim, out_dim, |_, _| rng.normal_with(0.0, std));
+        Dense { w, b: vec![0.0; out_dim], relu }
+    }
+}
+
+/// A feed-forward network.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    /// The layers, input to output.
+    pub layers: Vec<Dense>,
+}
+
+/// Cached activations from a forward pass (for backprop).
+pub struct ForwardCache {
+    /// `acts[0]` is the input batch; `acts[i+1]` the output of layer i
+    /// (post-ReLU where applicable).
+    pub acts: Vec<Matrix>,
+    /// Pre-activation outputs per layer (for the ReLU mask).
+    pub pre: Vec<Matrix>,
+}
+
+/// Per-layer gradients.
+pub struct Gradients {
+    /// dL/dW per layer.
+    pub dw: Vec<Matrix>,
+    /// dL/db per layer.
+    pub db: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// Build the paper's 784-256-128-64-10 network.
+    pub fn paper_arch(seed: u64) -> Mlp {
+        Mlp::new(&[784, 256, 128, 64, 10], seed)
+    }
+
+    /// Build an MLP with the given layer dims (ReLU on all but the last).
+    pub fn new(dims: &[usize], seed: u64) -> Mlp {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        let mut rng = Pcg32::new(seed, 5150);
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, d)| Dense::new(d[0], d[1], i + 2 < dims.len(), &mut rng))
+            .collect();
+        Mlp { layers }
+    }
+
+    /// Input dimension.
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.w.rows())
+    }
+
+    /// Output dimension (number of classes).
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.w.cols())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.rows() * l.w.cols() + l.b.len())
+            .sum()
+    }
+
+    /// Forward pass over a batch `x` (`B × in_dim`), returning logits and
+    /// the activation cache.
+    pub fn forward(&self, x: &Matrix) -> Result<(Matrix, ForwardCache)> {
+        if x.cols() != self.in_dim() {
+            return Err(Error::InvalidInput(format!(
+                "mlp: input dim {} vs expected {}",
+                x.cols(),
+                self.in_dim()
+            )));
+        }
+        let mut acts = vec![x.clone()];
+        let mut pre = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            let mut z = acts.last().unwrap().matmul(&layer.w)?;
+            for i in 0..z.rows() {
+                let row = z.row_mut(i);
+                for (zj, bj) in row.iter_mut().zip(&layer.b) {
+                    *zj += bj;
+                }
+            }
+            pre.push(z.clone());
+            if layer.relu {
+                for v in z.data_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        let logits = acts.last().unwrap().clone();
+        Ok((logits, ForwardCache { acts, pre }))
+    }
+
+    /// Forward without caching (inference).
+    pub fn infer(&self, x: &Matrix) -> Result<Matrix> {
+        Ok(self.forward(x)?.0)
+    }
+
+    /// Softmax cross-entropy loss + gradients for integer labels.
+    /// Returns (mean loss, gradients).
+    pub fn loss_and_grad(
+        &self,
+        cache: &ForwardCache,
+        logits: &Matrix,
+        labels: &[usize],
+    ) -> Result<(f64, Gradients)> {
+        let b = logits.rows();
+        let c = logits.cols();
+        if labels.len() != b {
+            return Err(Error::InvalidInput("mlp: labels/batch mismatch".into()));
+        }
+        // Softmax + CE, numerically stable.
+        let mut delta = Matrix::zeros(b, c); // dL/dlogits
+        let mut loss = 0.0;
+        for i in 0..b {
+            let row = logits.row(i);
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = row.iter().map(|&z| (z - mx).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            let y = labels[i];
+            if y >= c {
+                return Err(Error::InvalidInput(format!("mlp: label {y} out of range")));
+            }
+            loss += -(exps[y] / sum).max(1e-300).ln();
+            let drow = delta.row_mut(i);
+            for j in 0..c {
+                drow[j] = (exps[j] / sum - if j == y { 1.0 } else { 0.0 }) / b as f64;
+            }
+        }
+        loss /= b as f64;
+
+        // Backprop.
+        let n_layers = self.layers.len();
+        let mut dw = Vec::with_capacity(n_layers);
+        let mut db = Vec::with_capacity(n_layers);
+        let mut grad = delta; // dL/d(post-activation of current layer)
+        for li in (0..n_layers).rev() {
+            let layer = &self.layers[li];
+            if layer.relu {
+                // Mask by pre-activation sign.
+                let pre = &cache.pre[li];
+                for (g, p) in grad.data_mut().iter_mut().zip(pre.data()) {
+                    if *p <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+            let a_in = &cache.acts[li];
+            // dW = a_inᵀ grad; db = column sums of grad.
+            let dwi = a_in.transpose().matmul(&grad)?;
+            let mut dbi = vec![0.0; layer.w.cols()];
+            for i in 0..grad.rows() {
+                for (s, g) in dbi.iter_mut().zip(grad.row(i)) {
+                    *s += g;
+                }
+            }
+            // Propagate: grad_prev = grad Wᵀ.
+            if li > 0 {
+                grad = grad.matmul(&layer.w.transpose())?;
+            }
+            dw.push(dwi);
+            db.push(dbi);
+        }
+        dw.reverse();
+        db.reverse();
+        Ok((loss, Gradients { dw, db }))
+    }
+
+    /// Classification accuracy over a batch.
+    pub fn accuracy(&self, x: &Matrix, labels: &[usize]) -> Result<f64> {
+        let logits = self.infer(x)?;
+        let mut correct = 0usize;
+        for i in 0..logits.rows() {
+            let row = logits.row(i);
+            let pred = (0..row.len())
+                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap();
+            if pred == labels[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / logits.rows().max(1) as f64)
+    }
+
+    /// Flattened copy of one layer's weight matrix (for quantization).
+    pub fn layer_weights(&self, li: usize) -> &[f64] {
+        self.layers[li].w.data()
+    }
+
+    /// Replace one layer's weights from a flattened vector (the paper's
+    /// "weights are replaced by the post-quantization matrix").
+    pub fn set_layer_weights(&mut self, li: usize, flat: &[f64]) -> Result<()> {
+        let w = &mut self.layers[li].w;
+        if flat.len() != w.rows() * w.cols() {
+            return Err(Error::InvalidInput(format!(
+                "set_layer_weights: {} values for {}x{}",
+                flat.len(),
+                w.rows(),
+                w.cols()
+            )));
+        }
+        w.data_mut().copy_from_slice(flat);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Mlp {
+        Mlp::new(&[4, 8, 3], 1)
+    }
+
+    #[test]
+    fn shapes_and_counts() {
+        let m = Mlp::paper_arch(0);
+        assert_eq!(m.in_dim(), 784);
+        assert_eq!(m.out_dim(), 10);
+        assert_eq!(
+            m.param_count(),
+            784 * 256 + 256 + 256 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
+        );
+        assert!(m.layers[0].relu && !m.layers[3].relu);
+    }
+
+    #[test]
+    fn forward_shape() {
+        let m = tiny();
+        let x = Matrix::from_fn(5, 4, |i, j| (i + j) as f64 * 0.1);
+        let (logits, cache) = m.forward(&x).unwrap();
+        assert_eq!((logits.rows(), logits.cols()), (5, 3));
+        assert_eq!(cache.acts.len(), 3);
+    }
+
+    #[test]
+    fn rejects_wrong_input_dim() {
+        let m = tiny();
+        assert!(m.forward(&Matrix::zeros(2, 5)).is_err());
+    }
+
+    #[test]
+    fn loss_decreases_with_manual_sgd_step() {
+        let m0 = tiny();
+        let x = Matrix::from_fn(8, 4, |i, j| ((i * 3 + j) as f64).sin());
+        let labels: Vec<usize> = (0..8).map(|i| i % 3).collect();
+        let (logits, cache) = m0.forward(&x).unwrap();
+        let (loss0, g) = m0.loss_and_grad(&cache, &logits, &labels).unwrap();
+        let mut m1 = m0.clone();
+        let lr = 0.5;
+        for (li, layer) in m1.layers.iter_mut().enumerate() {
+            for (w, dw) in layer.w.data_mut().iter_mut().zip(g.dw[li].data()) {
+                *w -= lr * dw;
+            }
+            for (b, db) in layer.b.iter_mut().zip(&g.db[li]) {
+                *b -= lr * db;
+            }
+        }
+        let (logits1, cache1) = m1.forward(&x).unwrap();
+        let (loss1, _) = m1.loss_and_grad(&cache1, &logits1, &labels).unwrap();
+        assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let m = Mlp::new(&[3, 4, 2], 7);
+        let x = Matrix::from_fn(4, 3, |i, j| ((i + 2 * j) as f64).cos());
+        let labels = vec![0usize, 1, 0, 1];
+        let (logits, cache) = m.forward(&x).unwrap();
+        let (_, g) = m.loss_and_grad(&cache, &logits, &labels).unwrap();
+
+        let eps = 1e-6;
+        let mut m2 = m.clone();
+        // Probe a handful of weights in each layer.
+        for li in 0..m.layers.len() {
+            for &idx in &[0usize, 3, 5] {
+                let orig = m.layers[li].w.data()[idx];
+                m2.layers[li].w.data_mut()[idx] = orig + eps;
+                let (l_p, c_p) = m2.forward(&x).unwrap();
+                let (lp, _) = m2.loss_and_grad(&c_p, &l_p, &labels).unwrap();
+                m2.layers[li].w.data_mut()[idx] = orig - eps;
+                let (l_m, c_m) = m2.forward(&x).unwrap();
+                let (lm, _) = m2.loss_and_grad(&c_m, &l_m, &labels).unwrap();
+                m2.layers[li].w.data_mut()[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = g.dw[li].data()[idx];
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "layer {li} idx {idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_bounds() {
+        let m = tiny();
+        let x = Matrix::from_fn(6, 4, |i, j| (i * j) as f64 * 0.01);
+        let labels = vec![0usize; 6];
+        let acc = m.accuracy(&x, &labels).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn set_layer_weights_roundtrip() {
+        let mut m = tiny();
+        let flat: Vec<f64> = (0..4 * 8).map(|i| i as f64).collect();
+        m.set_layer_weights(0, &flat).unwrap();
+        assert_eq!(m.layer_weights(0), flat.as_slice());
+        assert!(m.set_layer_weights(0, &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Neural-network substrate (S17): the paper's 784-256-128-64-10 MLP with
+//! manual backprop and a momentum-SGD trainer, used by the §4.1
+//! quantization-accuracy experiments and the end-to-end example.
+
+pub mod mlp;
+pub mod train;

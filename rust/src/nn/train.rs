@@ -1,0 +1,287 @@
+//! SGD trainer for the MLP + dataset plumbing + weight persistence.
+//!
+//! The §4.1 experiment trains the 784-256-128-64-10 network, quantizes the
+//! last (64×10) layer, and measures accuracy vs the number of quantization
+//! values. Training here is momentum-SGD with minibatches over the
+//! procedural digit corpus; the trained model is cached on disk so the
+//! figure harnesses don't retrain per sweep point.
+
+use super::mlp::Mlp;
+use crate::data::rng::Pcg32;
+use crate::data::synth_digits::{DigitDataset, PIXELS};
+use crate::linalg::matrix::Matrix;
+use crate::{Error, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Training hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Learning rate.
+    pub lr: f64,
+    /// Momentum coefficient.
+    pub momentum: f64,
+    /// Minibatch size.
+    pub batch: usize,
+    /// Number of full passes over the training set.
+    pub epochs: usize,
+    /// Shuffle seed.
+    pub seed: u64,
+    /// Print progress every this many steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 0.08, momentum: 0.9, batch: 64, epochs: 12, seed: 0, log_every: 0 }
+    }
+}
+
+/// Training result.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Final mean loss over the last epoch.
+    pub final_loss: f64,
+    /// Per-epoch mean losses (the loss curve).
+    pub loss_curve: Vec<f64>,
+    /// Training-set accuracy after training.
+    pub train_accuracy: f64,
+    /// Steps executed.
+    pub steps: usize,
+}
+
+/// Stack a dataset into a design matrix + label vector.
+pub fn to_matrix(ds: &DigitDataset) -> (Matrix, Vec<usize>) {
+    let n = ds.len();
+    let mut x = Matrix::zeros(n, PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for (i, img) in ds.images.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&img.pixels);
+        labels.push(img.label);
+    }
+    (x, labels)
+}
+
+/// Train in place with momentum SGD.
+pub fn train(mlp: &mut Mlp, ds: &DigitDataset, cfg: &TrainConfig) -> Result<TrainReport> {
+    if ds.is_empty() {
+        return Err(Error::InvalidInput("train: empty dataset".into()));
+    }
+    if cfg.batch == 0 {
+        return Err(Error::InvalidParam("train: batch must be ≥ 1".into()));
+    }
+    let (x, labels) = to_matrix(ds);
+    let n = ds.len();
+    let mut rng = Pcg32::new(cfg.seed, 8080);
+    let mut order: Vec<usize> = (0..n).collect();
+
+    // Momentum buffers.
+    let mut vel_w: Vec<Matrix> = mlp
+        .layers
+        .iter()
+        .map(|l| Matrix::zeros(l.w.rows(), l.w.cols()))
+        .collect();
+    let mut vel_b: Vec<Vec<f64>> = mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut steps = 0usize;
+    for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        let mut batches = 0usize;
+        for chunk in order.chunks(cfg.batch) {
+            // Gather the batch.
+            let mut xb = Matrix::zeros(chunk.len(), PIXELS);
+            let mut yb = Vec::with_capacity(chunk.len());
+            for (bi, &i) in chunk.iter().enumerate() {
+                xb.row_mut(bi).copy_from_slice(x.row(i));
+                yb.push(labels[i]);
+            }
+            let (logits, cache) = mlp.forward(&xb)?;
+            let (loss, grads) = mlp.loss_and_grad(&cache, &logits, &yb)?;
+            epoch_loss += loss;
+            batches += 1;
+            steps += 1;
+
+            for (li, layer) in mlp.layers.iter_mut().enumerate() {
+                let vw = &mut vel_w[li];
+                for ((v, w), g) in vw
+                    .data_mut()
+                    .iter_mut()
+                    .zip(layer.w.data_mut())
+                    .zip(grads.dw[li].data())
+                {
+                    *v = cfg.momentum * *v - cfg.lr * g;
+                    *w += *v;
+                }
+                for ((v, b), g) in vel_b[li].iter_mut().zip(&mut layer.b).zip(&grads.db[li]) {
+                    *v = cfg.momentum * *v - cfg.lr * g;
+                    *b += *v;
+                }
+            }
+            if cfg.log_every > 0 && steps % cfg.log_every == 0 {
+                eprintln!("epoch {epoch} step {steps}: loss {loss:.4}");
+            }
+        }
+        loss_curve.push(epoch_loss / batches.max(1) as f64);
+    }
+
+    let train_accuracy = mlp.accuracy(&x, &labels)?;
+    Ok(TrainReport {
+        final_loss: *loss_curve.last().unwrap_or(&f64::NAN),
+        loss_curve,
+        train_accuracy,
+        steps,
+    })
+}
+
+/// Evaluate accuracy on a dataset.
+pub fn evaluate(mlp: &Mlp, ds: &DigitDataset) -> Result<f64> {
+    let (x, labels) = to_matrix(ds);
+    mlp.accuracy(&x, &labels)
+}
+
+/// Persist weights to a simple line-oriented text format (layer dims +
+/// values). Human-greppable and dependency-free.
+pub fn save_weights(mlp: &Mlp, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "sqlsq-mlp-v1 {}", mlp.layers.len())?;
+    for l in &mlp.layers {
+        writeln!(f, "layer {} {} {}", l.w.rows(), l.w.cols(), if l.relu { 1 } else { 0 })?;
+        for v in l.w.data() {
+            writeln!(f, "{:e}", v)?;
+        }
+        for v in &l.b {
+            writeln!(f, "{:e}", v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Load weights saved by [`save_weights`].
+pub fn load_weights(path: &Path) -> Result<Mlp> {
+    let f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut lines = f.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::InvalidInput("empty weight file".into()))??;
+    let mut hp = header.split_whitespace();
+    if hp.next() != Some("sqlsq-mlp-v1") {
+        return Err(Error::InvalidInput("bad weight file magic".into()));
+    }
+    let n_layers: usize = hp
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::InvalidInput("bad layer count".into()))?;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    let next_val = |lines: &mut dyn Iterator<Item = std::io::Result<String>>| -> Result<f64> {
+        let line = lines
+            .next()
+            .ok_or_else(|| Error::InvalidInput("truncated weight file".into()))??;
+        line.trim()
+            .parse()
+            .map_err(|e| Error::InvalidInput(format!("bad float: {e}")))
+    };
+    for _ in 0..n_layers {
+        let meta = lines
+            .next()
+            .ok_or_else(|| Error::InvalidInput("truncated weight file".into()))??;
+        let mut mp = meta.split_whitespace();
+        if mp.next() != Some("layer") {
+            return Err(Error::InvalidInput("expected layer header".into()));
+        }
+        let rows: usize = mp.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        let cols: usize = mp.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        let relu = mp.next() == Some("1");
+        if rows == 0 || cols == 0 {
+            return Err(Error::InvalidInput("bad layer dims".into()));
+        }
+        let mut w = Matrix::zeros(rows, cols);
+        for i in 0..rows * cols {
+            w.data_mut()[i] = next_val(&mut lines)?;
+        }
+        let mut b = vec![0.0; cols];
+        for bi in b.iter_mut() {
+            *bi = next_val(&mut lines)?;
+        }
+        layers.push(super::mlp::Dense { w, b, relu });
+    }
+    Ok(Mlp { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_digits::{generate, CLASSES};
+
+    #[test]
+    fn training_learns_digits() {
+        // Small net + small corpus: must clearly beat chance quickly.
+        let ds = generate(300, 1);
+        let mut mlp = Mlp::new(&[PIXELS, 32, CLASSES], 2);
+        let report = train(
+            &mut mlp,
+            &ds,
+            &TrainConfig { epochs: 6, lr: 0.1, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            report.train_accuracy > 0.7,
+            "train accuracy too low: {}",
+            report.train_accuracy
+        );
+        // Loss curve trends down.
+        assert!(report.loss_curve.last().unwrap() < &report.loss_curve[0]);
+        // Generalizes to a held-out jittered set.
+        let test = generate(100, 99);
+        let acc = evaluate(&mlp, &test).unwrap();
+        assert!(acc > 0.5, "test accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut mlp = Mlp::new(&[PIXELS, 16, CLASSES], 3);
+        let ds = generate(50, 4);
+        train(&mut mlp, &ds, &TrainConfig { epochs: 1, ..Default::default() }).unwrap();
+        let dir = std::env::temp_dir().join("sqlsq_test_weights");
+        let path = dir.join("mlp.txt");
+        save_weights(&mlp, &path).unwrap();
+        let loaded = load_weights(&path).unwrap();
+        assert_eq!(loaded.layers.len(), mlp.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&mlp.layers) {
+            assert_eq!(a.relu, b.relu);
+            assert!(a.w.max_abs_diff(&b.w) < 1e-12);
+            for (x, y) in a.b.iter().zip(&b.b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("sqlsq_test_badweights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "not a weight file\n").unwrap();
+        assert!(load_weights(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let ds = generate(10, 5);
+        let mut mlp = Mlp::new(&[PIXELS, 4, CLASSES], 6);
+        assert!(train(
+            &mut mlp,
+            &ds,
+            &TrainConfig { batch: 0, ..Default::default() }
+        )
+        .is_err());
+        assert!(train(&mut mlp, &DigitDataset::default(), &TrainConfig::default()).is_err());
+    }
+}

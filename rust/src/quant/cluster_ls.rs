@@ -1,0 +1,337 @@
+//! Cluster-based least-square quantization (paper Algorithm 3, eq 17–20).
+//!
+//! The general target (eq 17) jointly optimizes a one-hot membership matrix
+//! `E` and per-cluster values. The paper's approximation: obtain `E` by
+//! k-means on the unique values, then solve the remaining least squares for
+//! the values analytically (eq 19–20) over the cumulative matrix `V̂*`
+//! filled with the base value `v = mean(ŵ)`.
+//!
+//! "From the perspective of clustering methods, algorithm 3 could be viewed
+//! as an improvement of k-means clustering quantization … it alternatively
+//! computes the value of the cluster that produces the smallest least
+//! square distance from the original" — i.e. the cluster representative is
+//! the LS-optimal level for the chosen partition, instead of whatever the
+//! final Lloyd centroid happened to be.
+//!
+//! Two solver paths are provided and cross-checked:
+//!
+//! * [`solve_cluster_ls`] — O(m) fast path: 1-d clusters of sorted values
+//!   are contiguous segments, so the LS values are (weighted) segment
+//!   means;
+//! * [`solve_cluster_ls_normal_eq`] — the paper's literal eq 20
+//!   `α = (V̂*ᵀV̂*)⁻¹ V̂*ᵀ ŵ` over the materialized cumulative matrix.
+
+use super::vmatrix::VBasis;
+use crate::cluster::kmeans::{assign_sorted, kmeans_1d, KMeansConfig};
+use crate::linalg::cholesky::least_squares;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::stats;
+use crate::{Error, Result};
+
+/// Configuration for Algorithm 3.
+#[derive(Debug, Clone)]
+pub struct ClusterLsConfig {
+    /// Desired number of distinct values `l`.
+    pub l: usize,
+    /// Inner k-means settings.
+    pub kmeans: KMeansConfig,
+    /// Weight the LS by value multiplicities (extension; the paper's eq 19
+    /// is unweighted over ŵ, which `false` reproduces).
+    pub weighted: bool,
+}
+
+impl Default for ClusterLsConfig {
+    fn default() -> Self {
+        ClusterLsConfig { l: 16, kmeans: KMeansConfig::default(), weighted: false }
+    }
+}
+
+/// Output of Algorithm 3.
+#[derive(Debug, Clone)]
+pub struct ClusterLsSolution {
+    /// Per-level reconstruction (length m, piecewise constant over the
+    /// cluster segments).
+    pub reconstruction: Vec<f64>,
+    /// The LS-optimal cluster values (sorted ascending).
+    pub levels: Vec<f64>,
+    /// Segment boundaries: `boundaries[c]` is the first level index of
+    /// cluster `c` (ascending, `boundaries[0] == 0`).
+    pub boundaries: Vec<usize>,
+    /// Lloyd iterations consumed by the inner k-means.
+    pub iterations: usize,
+    /// Empty-cluster repair events in the inner k-means.
+    pub empty_cluster_events: usize,
+}
+
+/// Derive contiguous segment boundaries on the *sorted* unique values from
+/// a k-means model: the midpoints between adjacent sorted centroids cut the
+/// value axis into `k` intervals.
+fn boundaries_from_centroids(values: &[f64], centroids: &[f64]) -> Vec<usize> {
+    let mut boundaries = vec![0usize];
+    let mut prev = 0usize;
+    for c in 1..centroids.len() {
+        let mid = 0.5 * (centroids[c - 1] + centroids[c]);
+        // First index with value >= mid.
+        let idx = values.partition_point(|&v| v < mid).max(prev);
+        if idx > prev && idx < values.len() {
+            boundaries.push(idx);
+            prev = idx;
+        }
+    }
+    boundaries
+}
+
+/// Fast-path Algorithm 3.
+pub fn solve_cluster_ls(
+    basis: &VBasis,
+    w: &[f64],
+    counts: Option<&[f64]>,
+    cfg: &ClusterLsConfig,
+) -> Result<ClusterLsSolution> {
+    let m = basis.m();
+    if w.len() != m {
+        return Err(Error::InvalidInput(format!(
+            "cluster_ls: basis dim {m} vs target dim {}",
+            w.len()
+        )));
+    }
+    if cfg.l == 0 {
+        return Err(Error::InvalidParam("cluster_ls: l must be ≥ 1".into()));
+    }
+
+    // Step 2: k-means with l clusters on the unique values.
+    let km_cfg = KMeansConfig { k: cfg.l.min(m), ..cfg.kmeans.clone() };
+    let km = kmeans_1d(basis.values(), if cfg.weighted { counts } else { None }, &km_cfg)?;
+
+    // Steps 3–4: membership matrix E, expressed as contiguous segments of
+    // the sorted values.
+    let boundaries = boundaries_from_centroids(basis.values(), &km.centroids);
+
+    // Step 5: LS-optimal value per cluster = (weighted) segment mean.
+    let mut levels = Vec::with_capacity(boundaries.len());
+    let mut reconstruction = vec![0.0; m];
+    for (c, &start) in boundaries.iter().enumerate() {
+        let end = boundaries.get(c + 1).copied().unwrap_or(m);
+        let (mut num, mut den) = (0.0, 0.0);
+        for i in start..end {
+            let wt = if cfg.weighted { counts.map_or(1.0, |cs| cs[i]) } else { 1.0 };
+            num += wt * w[i];
+            den += wt;
+        }
+        let level = if den > 0.0 { num / den } else { 0.0 };
+        levels.push(level);
+        for r in &mut reconstruction[start..end] {
+            *r = level;
+        }
+    }
+
+    Ok(ClusterLsSolution {
+        reconstruction,
+        levels,
+        boundaries,
+        iterations: km.iterations,
+        empty_cluster_events: km.empty_cluster_events,
+    })
+}
+
+/// Paper-literal eq 19–20: build `V̂*` (cumulative one-hot columns filled
+/// with `v = mean(ŵ)`) and solve the normal equations. Oracle for the fast
+/// path; O(m·l²).
+pub fn solve_cluster_ls_normal_eq(
+    basis: &VBasis,
+    w: &[f64],
+    cfg: &ClusterLsConfig,
+) -> Result<ClusterLsSolution> {
+    let m = basis.m();
+    if w.len() != m {
+        return Err(Error::InvalidInput("cluster_ls: dim mismatch".into()));
+    }
+    let km_cfg = KMeansConfig { k: cfg.l.min(m), ..cfg.kmeans.clone() };
+    let km = kmeans_1d(basis.values(), None, &km_cfg)?;
+    let boundaries = boundaries_from_centroids(basis.values(), &km.centroids);
+    let l = boundaries.len();
+
+    // Cluster index per level (E of eq 18, via the contiguous segments).
+    let cluster_of = |i: usize| -> usize {
+        match boundaries.binary_search(&i) {
+            Ok(c) => c,
+            Err(c) => c - 1,
+        }
+    };
+
+    // V̂*: row i has `v` in columns 0..=cluster_of(i) (the paper's
+    // cumulative lower-staircase with base value v = mean(ŵ)).
+    let v_base = stats::mean(w);
+    let vh = Matrix::from_fn(m, l, |i, j| if j <= cluster_of(i) { v_base } else { 0.0 });
+    let alpha = least_squares(&vh, w)?;
+
+    // w* = V̂* α (eq at Algorithm 3 step 6).
+    let reconstruction = vh.matvec(&alpha)?;
+    let mut levels: Vec<f64> = boundaries
+        .iter()
+        .map(|&s| reconstruction[s])
+        .collect();
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    Ok(ClusterLsSolution {
+        reconstruction,
+        levels,
+        boundaries,
+        iterations: km.iterations,
+        empty_cluster_events: km.empty_cluster_events,
+    })
+}
+
+/// Plain k-means quantization of the unique values (the baseline Algorithm
+/// 3 improves on): each level is replaced by its cluster's *centroid*
+/// (weighted by multiplicities, as conventional quantizers cluster the full
+/// vector).
+pub fn kmeans_quantize_levels(
+    basis: &VBasis,
+    counts: Option<&[f64]>,
+    cfg: &KMeansConfig,
+) -> Result<(Vec<f64>, usize, usize)> {
+    let km = kmeans_1d(basis.values(), counts, cfg)?;
+    let rec: Vec<f64> = basis
+        .values()
+        .iter()
+        .map(|&v| km.centroids[assign_sorted(v, &km.centroids)])
+        .collect();
+    Ok((rec, km.iterations, km.empty_cluster_events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::linalg::stats::l2_loss;
+
+    fn random_basis(m: usize, seed: u64) -> (VBasis, Vec<f64>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut v: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 100.0)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        let b = VBasis::new(&v);
+        (b, v)
+    }
+
+    #[test]
+    fn produces_exactly_l_levels_for_separated_data() {
+        let v = vec![1.0, 1.1, 5.0, 5.1, 9.0, 9.1];
+        let b = VBasis::new(&v);
+        let sol = solve_cluster_ls(&b, &v, None, &ClusterLsConfig { l: 3, ..Default::default() })
+            .unwrap();
+        assert_eq!(sol.levels.len(), 3);
+        assert!((sol.levels[0] - 1.05).abs() < 1e-9);
+        assert!((sol.levels[2] - 9.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_matches_normal_eq() {
+        for seed in [1u64, 2, 3] {
+            let (b, v) = random_basis(40, seed);
+            let cfg = ClusterLsConfig {
+                l: 7,
+                kmeans: KMeansConfig { seed, ..Default::default() },
+                ..Default::default()
+            };
+            let fast = solve_cluster_ls(&b, &v, None, &cfg).unwrap();
+            let slow = solve_cluster_ls_normal_eq(&b, &v, &cfg).unwrap();
+            assert_eq!(fast.boundaries, slow.boundaries);
+            for (f, s) in fast.reconstruction.iter().zip(&slow.reconstruction) {
+                assert!((f - s).abs() < 1e-6, "{f} vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_worse_than_kmeans_on_unique_values() {
+        // The paper's headline for Algorithm 3: LS values are optimal for
+        // the chosen partition, so (unweighted) loss over ŵ can only match
+        // or beat plain unweighted k-means quantization with the same
+        // partition source.
+        for seed in [4u64, 5, 6, 7] {
+            let (b, v) = random_basis(64, seed);
+            let km_cfg = KMeansConfig { k: 9, seed, ..Default::default() };
+            let cls = solve_cluster_ls(
+                &b,
+                &v,
+                None,
+                &ClusterLsConfig { l: 9, kmeans: km_cfg.clone(), ..Default::default() },
+            )
+            .unwrap();
+            let (km_rec, _, _) = kmeans_quantize_levels(&b, None, &km_cfg).unwrap();
+            let ls_loss = l2_loss(&cls.reconstruction, &v);
+            let km_loss = l2_loss(&km_rec, &v);
+            assert!(
+                ls_loss <= km_loss + 1e-9,
+                "seed={seed}: cluster_ls {ls_loss} > kmeans {km_loss}"
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruction_piecewise_constant_on_segments() {
+        let (b, v) = random_basis(32, 8);
+        let sol = solve_cluster_ls(&b, &v, None, &ClusterLsConfig { l: 5, ..Default::default() })
+            .unwrap();
+        for (c, &start) in sol.boundaries.iter().enumerate() {
+            let end = sol.boundaries.get(c + 1).copied().unwrap_or(b.m());
+            for i in start..end {
+                assert_eq!(sol.reconstruction[i], sol.reconstruction[start]);
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_mode_shifts_levels() {
+        let v = vec![0.0, 1.0, 2.0];
+        let b = VBasis::new(&v);
+        let counts = vec![1.0, 1.0, 100.0];
+        let cfg1 = ClusterLsConfig { l: 1, ..Default::default() };
+        let unweighted = solve_cluster_ls(&b, &v, Some(&counts), &cfg1).unwrap();
+        let cfgw = ClusterLsConfig { l: 1, weighted: true, ..Default::default() };
+        let weighted = solve_cluster_ls(&b, &v, Some(&counts), &cfgw).unwrap();
+        assert!((unweighted.levels[0] - 1.0).abs() < 1e-9);
+        assert!(weighted.levels[0] > 1.8, "weighted level {}", weighted.levels[0]);
+    }
+
+    #[test]
+    fn boundaries_start_at_zero_and_ascend() {
+        let (b, v) = random_basis(50, 9);
+        let sol = solve_cluster_ls(&b, &v, None, &ClusterLsConfig { l: 8, ..Default::default() })
+            .unwrap();
+        assert_eq!(sol.boundaries[0], 0);
+        assert!(sol.boundaries.windows(2).all(|p| p[0] < p[1]));
+        assert!(*sol.boundaries.last().unwrap() < b.m());
+    }
+
+    #[test]
+    fn l_geq_m_is_lossless() {
+        let (b, v) = random_basis(12, 10);
+        let sol = solve_cluster_ls(
+            &b,
+            &v,
+            None,
+            &ClusterLsConfig { l: 100, ..Default::default() },
+        )
+        .unwrap();
+        assert!(l2_loss(&sol.reconstruction, &v) < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (b, v) = random_basis(8, 11);
+        assert!(
+            solve_cluster_ls(&b, &v, None, &ClusterLsConfig { l: 0, ..Default::default() })
+                .is_err()
+        );
+        assert!(solve_cluster_ls(
+            &b,
+            &v[..3],
+            None,
+            &ClusterLsConfig::default()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Codebook encoding utilities — the engineering payoff the paper's
+//! introduction motivates ("reduce the number of distinct values to the
+//! nearest 2^k to reduce memory cost").
+//!
+//! A quantized vector is stored as a small codebook of levels plus one
+//! index per element; this module measures and performs that encoding:
+//! bits/value, total compressed size, index entropy (the Huffman-coding
+//! bound Deep Compression exploits), and lossless round-tripping.
+
+use crate::quant::QuantOutput;
+use crate::{Error, Result};
+
+/// Codebook + per-element indices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Codebook {
+    /// The distinct levels, sorted ascending.
+    pub levels: Vec<f64>,
+    /// Index into `levels` per original element.
+    pub indices: Vec<u32>,
+}
+
+impl Codebook {
+    /// Build from a quantized vector (exact value matching).
+    pub fn from_values(values: &[f64]) -> Result<Codebook> {
+        if values.is_empty() {
+            return Err(Error::InvalidInput("codebook: empty input".into()));
+        }
+        let mut levels: Vec<f64> = values.to_vec();
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        if levels.len() > u32::MAX as usize {
+            return Err(Error::InvalidInput("codebook: too many levels".into()));
+        }
+        let indices = values
+            .iter()
+            .map(|v| {
+                levels
+                    .binary_search_by(|l| l.partial_cmp(v).unwrap())
+                    .map(|i| i as u32)
+                    .map_err(|_| Error::InvalidInput("codebook: value not a level".into()))
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        Ok(Codebook { levels, indices })
+    }
+
+    /// Build from a [`QuantOutput`].
+    pub fn from_output(out: &QuantOutput) -> Result<Codebook> {
+        Self::from_values(&out.values)
+    }
+
+    /// Number of levels.
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Fixed-width bits per index (`⌈log₂ k⌉`, minimum 1).
+    pub fn bits_per_index(&self) -> u32 {
+        (usize::BITS - (self.k() - 1).leading_zeros()).max(1)
+    }
+
+    /// Total compressed bytes: fixed-width indices + f32 codebook.
+    pub fn compressed_bytes(&self) -> usize {
+        let idx_bits = self.indices.len() * self.bits_per_index() as usize;
+        idx_bits.div_ceil(8) + self.k() * 4
+    }
+
+    /// Compression ratio vs dense f32 storage.
+    pub fn compression_ratio_f32(&self) -> f64 {
+        (self.indices.len() * 4) as f64 / self.compressed_bytes() as f64
+    }
+
+    /// Shannon entropy of the index stream (bits/index) — the Huffman
+    /// bound on variable-length coding.
+    pub fn index_entropy(&self) -> f64 {
+        let mut counts = vec![0usize; self.k()];
+        for &i in &self.indices {
+            counts[i as usize] += 1;
+        }
+        let n = self.indices.len() as f64;
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.log2()
+            })
+            .sum()
+    }
+
+    /// Reconstruct the full vector.
+    pub fn decode(&self) -> Vec<f64> {
+        self.indices.iter().map(|&i| self.levels[i as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, QuantMethod, QuantOptions};
+
+    #[test]
+    fn roundtrip_exact() {
+        let values = vec![0.5, 0.5, 1.0, -2.0, 1.0, 0.5];
+        let cb = Codebook::from_values(&values).unwrap();
+        assert_eq!(cb.k(), 3);
+        assert_eq!(cb.decode(), values);
+        assert_eq!(cb.levels, vec![-2.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn bits_per_index_steps() {
+        let mk = |k: usize| {
+            let values: Vec<f64> = (0..k).map(|i| i as f64).collect();
+            Codebook::from_values(&values).unwrap().bits_per_index()
+        };
+        assert_eq!(mk(1), 1);
+        assert_eq!(mk(2), 1);
+        assert_eq!(mk(3), 2);
+        assert_eq!(mk(4), 2);
+        assert_eq!(mk(5), 3);
+        assert_eq!(mk(16), 4);
+        assert_eq!(mk(17), 5);
+    }
+
+    #[test]
+    fn compression_ratio_grows_with_fewer_levels() {
+        let n = 10_000;
+        let mk = |k: usize| {
+            let values: Vec<f64> = (0..n).map(|i| (i % k) as f64).collect();
+            Codebook::from_values(&values).unwrap().compression_ratio_f32()
+        };
+        assert!(mk(4) > mk(64));
+        assert!(mk(4) > 10.0, "4 levels over 10k values should beat 10x");
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        // Uniform over 4 levels → exactly 2 bits.
+        let values: Vec<f64> = (0..1000).map(|i| (i % 4) as f64).collect();
+        let cb = Codebook::from_values(&values).unwrap();
+        assert!((cb.index_entropy() - 2.0).abs() < 1e-9);
+        // Heavily skewed → far below the fixed-width 2 bits.
+        let mut skewed = vec![0.0; 990];
+        skewed.extend([1.0, 2.0, 3.0].iter().cycle().take(10).cloned());
+        let cb2 = Codebook::from_values(&skewed).unwrap();
+        assert!(cb2.index_entropy() < 0.2, "entropy {}", cb2.index_entropy());
+    }
+
+    #[test]
+    fn end_to_end_with_quantizer() {
+        let data: Vec<f64> = (0..500).map(|i| ((i % 17) as f64).sin()).collect();
+        let out = quant::quantize(
+            &data,
+            QuantMethod::KMeans,
+            &QuantOptions { target_values: 8, ..Default::default() },
+        )
+        .unwrap();
+        let cb = Codebook::from_output(&out).unwrap();
+        assert!(cb.k() <= 8);
+        assert_eq!(cb.decode(), out.values);
+        assert!(cb.compression_ratio_f32() > 5.0);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Codebook::from_values(&[]).is_err());
+    }
+}

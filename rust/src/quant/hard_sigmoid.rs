@@ -1,0 +1,68 @@
+//! The paper's hard-sigmoid range clamp (eq 21).
+//!
+//! Post-quantization outputs are clamped into a valid range before the l2
+//! information loss is computed: "MNIST quantization values must be in
+//! [0,1] … applying the function could avoid out-of-range values that might
+//! reduce the l2 loss in a prohibited way." The same clamp exposes the
+//! paper's claim 6: k-means with bad initializations can emit out-of-range
+//! centroids, while the least-square methods do not.
+
+/// `H(x, a, b)` of eq 21.
+#[inline]
+pub fn hard_sigmoid(x: f64, a: f64, b: f64) -> f64 {
+    debug_assert!(a <= b);
+    if x <= a {
+        a
+    } else if x >= b {
+        b
+    } else {
+        x
+    }
+}
+
+/// Apply the clamp in place; returns how many values were out of range
+/// (the §4 out-of-range incidence metric).
+pub fn clamp_slice(xs: &mut [f64], a: f64, b: f64) -> usize {
+    let mut clipped = 0;
+    for x in xs.iter_mut() {
+        let h = hard_sigmoid(*x, a, b);
+        if h != *x {
+            clipped += 1;
+            *x = h;
+        }
+    }
+    clipped
+}
+
+/// Count out-of-range values without modifying.
+pub fn count_out_of_range(xs: &[f64], a: f64, b: f64) -> usize {
+    xs.iter().filter(|&&x| x < a || x > b).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_at_boundaries() {
+        assert_eq!(hard_sigmoid(-0.5, 0.0, 1.0), 0.0);
+        assert_eq!(hard_sigmoid(1.5, 0.0, 1.0), 1.0);
+        assert_eq!(hard_sigmoid(0.3, 0.0, 1.0), 0.3);
+        assert_eq!(hard_sigmoid(0.0, 0.0, 1.0), 0.0);
+        assert_eq!(hard_sigmoid(1.0, 0.0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn clamp_slice_counts() {
+        let mut xs = vec![-1.0, 0.5, 2.0, 0.0];
+        let n = clamp_slice(&mut xs, 0.0, 1.0);
+        assert_eq!(n, 2);
+        assert_eq!(xs, vec![0.0, 0.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn count_matches_clamp() {
+        let xs = vec![-1.0, 0.5, 2.0];
+        assert_eq!(count_out_of_range(&xs, 0.0, 1.0), 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Greedy level merging (Ward-style agglomeration on the level axis).
+//!
+//! Used as the documented fallback when Algorithm 2's λ path cannot land
+//! on the requested count (the paper acknowledges it "might fail to
+//! optimize to exact l values"): adjacent levels of the piecewise-constant
+//! reconstruction are merged — cheapest weighted-SSE increase first —
+//! until the count bound holds. Also exposed as a standalone agglomerative
+//! quantizer building block (cf. Xiang & Joy 1994, the paper's ref [11]).
+
+/// Merge the levels of a piecewise-constant reconstruction (over sorted
+/// unique values) down to at most `target` distinct levels. `weights` are
+/// per-position multiplicities (None = 1 each). Returns the new
+/// reconstruction.
+pub fn merge_to_target(
+    reconstruction: &[f64],
+    weights: Option<&[f64]>,
+    target: usize,
+) -> Vec<f64> {
+    assert!(target >= 1);
+    let m = reconstruction.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    // Segment list: (start, end_exclusive, weight, weighted mean).
+    let mut segs: Vec<(usize, usize, f64, f64)> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=m {
+        if i == m || reconstruction[i] != reconstruction[start] {
+            let (mut wsum, mut xsum) = (0.0, 0.0);
+            for j in start..i {
+                let w = weights.map_or(1.0, |ws| ws[j]);
+                wsum += w;
+                xsum += w * reconstruction[j];
+            }
+            let mean = if wsum > 0.0 { xsum / wsum } else { reconstruction[start] };
+            segs.push((start, i, wsum, mean));
+            start = i;
+        }
+    }
+
+    // Greedy adjacent merges: Ward cost = W1·W2/(W1+W2)·(m1−m2)².
+    while segs.len() > target {
+        let mut best = 0usize;
+        let mut best_cost = f64::INFINITY;
+        for i in 0..segs.len() - 1 {
+            let (_, _, w1, m1) = segs[i];
+            let (_, _, w2, m2) = segs[i + 1];
+            let denom = w1 + w2;
+            let cost = if denom > 0.0 { w1 * w2 / denom * (m1 - m2) * (m1 - m2) } else { 0.0 };
+            if cost < best_cost {
+                best_cost = cost;
+                best = i;
+            }
+        }
+        let (s1, _, w1, m1) = segs[best];
+        let (_, e2, w2, m2) = segs[best + 1];
+        let w = w1 + w2;
+        let mean = if w > 0.0 { (w1 * m1 + w2 * m2) / w } else { m1 };
+        segs[best] = (s1, e2, w, mean);
+        segs.remove(best + 1);
+    }
+
+    let mut out = vec![0.0; m];
+    for &(s, e, _, mean) in &segs {
+        for o in &mut out[s..e] {
+            *o = mean;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::stats::distinct_count_exact;
+
+    #[test]
+    fn already_under_target_is_identity() {
+        let rec = vec![1.0, 1.0, 2.0, 2.0];
+        assert_eq!(merge_to_target(&rec, None, 2), rec);
+        assert_eq!(merge_to_target(&rec, None, 5), rec);
+    }
+
+    #[test]
+    fn merges_to_exact_count() {
+        let rec = vec![0.0, 1.0, 1.1, 5.0, 9.0];
+        for target in [1usize, 2, 3, 4] {
+            let merged = merge_to_target(&rec, None, target);
+            assert!(distinct_count_exact(&merged) <= target, "target {target}");
+            assert_eq!(merged.len(), rec.len());
+        }
+    }
+
+    #[test]
+    fn merges_closest_pair_first() {
+        let rec = vec![0.0, 1.0, 1.05, 10.0];
+        let merged = merge_to_target(&rec, None, 3);
+        // 1.0 and 1.05 merge; 0.0 and 10.0 survive.
+        assert_eq!(merged[0], 0.0);
+        assert_eq!(merged[3], 10.0);
+        assert!((merged[1] - 1.025).abs() < 1e-12);
+        assert_eq!(merged[1], merged[2]);
+    }
+
+    #[test]
+    fn respects_weights() {
+        // Heavily weighted level pulls the merged mean.
+        let rec = vec![0.0, 10.0];
+        let merged = merge_to_target(&rec, Some(&[99.0, 1.0]), 1);
+        assert!(merged[0] < 0.2, "mean should sit near the heavy level, got {}", merged[0]);
+    }
+
+    #[test]
+    fn target_one_gives_global_mean() {
+        let rec = vec![1.0, 2.0, 3.0, 6.0];
+        let merged = merge_to_target(&rec, None, 1);
+        for v in &merged {
+            assert!((v - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(merge_to_target(&[], None, 3).is_empty());
+    }
+}

@@ -1,0 +1,252 @@
+//! Least-square refit on the LASSO support (paper eq 7–10).
+//!
+//! After the l1 stage selects a support `S = {j : α_j ≠ 0}`, Algorithm 1
+//! re-solves the unpenalized least squares restricted to the support
+//! columns `V*` (eq 8), analytically via the normal equations (eq 9), and
+//! scatters the result back into a full-length α* (eq 10).
+//!
+//! ## The O(m) fast path
+//!
+//! `V_S β` is a piecewise-constant vector whose level can only change at
+//! support indices. Minimizing `‖ŵ − V_S β‖²` over β is therefore exactly
+//! the problem of choosing one constant per segment:
+//!
+//! * segment `[0, s_0)` is pinned at level 0 (no column covers it),
+//! * each segment `[s_t, s_{t+1})` takes its free level — optimally the
+//!   (weighted) mean of `ŵ` over the segment.
+//!
+//! This closed form costs O(m) and is algebraically identical to the
+//! normal-equation solve; [`refit_normal_eq`] keeps the paper's explicit
+//! eq 9 path as the oracle, and the two are cross-checked in tests and in
+//! the property suite.
+
+use super::vmatrix::VBasis;
+use crate::linalg::cholesky::least_squares;
+use crate::{Error, Result};
+
+/// Result of a support refit.
+#[derive(Debug, Clone)]
+pub struct Refit {
+    /// Full-length α* (eq 10): optimal coefficients scattered onto the
+    /// support, zeros elsewhere.
+    pub alpha: Vec<f64>,
+    /// The reconstruction `w* = V α*` (eq 11) at unique-value level.
+    pub reconstruction: Vec<f64>,
+}
+
+fn validate_support(support: &[usize], basis: &VBasis) -> Result<()> {
+    let m = basis.m();
+    if support.windows(2).any(|p| p[0] >= p[1]) {
+        return Err(Error::InvalidInput("refit: support must be sorted strictly ascending".into()));
+    }
+    if let Some(&last) = support.last() {
+        if last >= m {
+            return Err(Error::InvalidInput(format!(
+                "refit: support index {last} out of range (m={m})"
+            )));
+        }
+    }
+    if let Some(&z) = support.iter().find(|&&j| basis.diffs()[j] == 0.0) {
+        return Err(Error::InvalidInput(format!(
+            "refit: support index {z} has zero diff (null column)"
+        )));
+    }
+    Ok(())
+}
+
+/// O(m) segment-mean refit. `weights` optionally weights each unique value
+/// by its multiplicity (exact LS on the *full* vector rather than the
+/// unique one — the paper's eq 8 uses unweighted ŵ, so `None` reproduces
+/// the paper).
+pub fn refit_fast(
+    basis: &VBasis,
+    w: &[f64],
+    support: &[usize],
+    weights: Option<&[f64]>,
+) -> Result<Refit> {
+    let m = basis.m();
+    if w.len() != m {
+        return Err(Error::InvalidInput(format!(
+            "refit: basis dim {m} vs target dim {}",
+            w.len()
+        )));
+    }
+    validate_support(support, basis)?;
+    if let Some(ws) = weights {
+        if ws.len() != m {
+            return Err(Error::InvalidInput("refit: weights length mismatch".into()));
+        }
+    }
+
+    let mut alpha = vec![0.0; m];
+    let mut reconstruction = vec![0.0; m];
+    if support.is_empty() {
+        // No columns: reconstruction is identically zero.
+        return Ok(Refit { alpha, reconstruction });
+    }
+
+    let d = basis.diffs();
+    let mut prev_level = 0.0;
+    for (t, &s) in support.iter().enumerate() {
+        let seg_end = support.get(t + 1).copied().unwrap_or(m);
+        // Optimal level on [s, seg_end): (weighted) mean of ŵ there.
+        let (mut num, mut den) = (0.0, 0.0);
+        for i in s..seg_end {
+            let c = weights.map_or(1.0, |ws| ws[i]);
+            num += c * w[i];
+            den += c;
+        }
+        let level = if den > 0.0 { num / den } else { prev_level };
+        debug_assert!(d[s] != 0.0, "support column with zero diff");
+        alpha[s] = (level - prev_level) / d[s];
+        for r in &mut reconstruction[s..seg_end] {
+            *r = level;
+        }
+        prev_level = level;
+    }
+    Ok(Refit { alpha, reconstruction })
+}
+
+/// Explicit normal-equation refit (paper eq 9):
+/// `α̂* = (V*ᵀV*)⁻¹ V*ᵀ ŵ` via Cholesky. O(m·h + h³). Oracle for
+/// [`refit_fast`].
+pub fn refit_normal_eq(basis: &VBasis, w: &[f64], support: &[usize]) -> Result<Refit> {
+    let m = basis.m();
+    if w.len() != m {
+        return Err(Error::InvalidInput(format!(
+            "refit: basis dim {m} vs target dim {}",
+            w.len()
+        )));
+    }
+    validate_support(support, basis)?;
+    let mut alpha = vec![0.0; m];
+    if support.is_empty() {
+        return Ok(Refit { alpha, reconstruction: vec![0.0; m] });
+    }
+    let vs = basis.dense_support(support);
+    let beta = least_squares(&vs, w)?;
+    for (&s, &b) in support.iter().zip(&beta) {
+        alpha[s] = b;
+    }
+    let reconstruction = basis.apply_support(support, &beta);
+    Ok(Refit { alpha, reconstruction })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::linalg::stats::l2_loss;
+
+    fn random_basis(m: usize, seed: u64) -> (VBasis, Vec<f64>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut v: Vec<f64> = (0..m).map(|_| rng.uniform(-2.0, 6.0)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+        let basis = VBasis::new(&v);
+        (basis, v)
+    }
+
+    #[test]
+    fn full_support_is_exact() {
+        let (b, v) = random_basis(24, 1);
+        let support: Vec<usize> = (0..b.m()).collect();
+        let r = refit_fast(&b, &v, &support, None).unwrap();
+        assert!(l2_loss(&r.reconstruction, &v) < 1e-18);
+        for a in &r.alpha {
+            assert!((a - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fast_matches_normal_eq() {
+        for seed in [2u64, 3, 4, 5] {
+            let (b, v) = random_basis(40, seed);
+            let mut rng = Pcg32::seeded(seed + 100);
+            let support: Vec<usize> =
+                (0..b.m()).filter(|_| rng.next_f64() < 0.3).collect();
+            if support.is_empty() {
+                continue;
+            }
+            let fast = refit_fast(&b, &v, &support, None).unwrap();
+            let slow = refit_normal_eq(&b, &v, &support).unwrap();
+            for (f, s) in fast.reconstruction.iter().zip(&slow.reconstruction) {
+                assert!((f - s).abs() < 1e-7, "{f} vs {s}");
+            }
+            for (f, s) in fast.alpha.iter().zip(&slow.alpha) {
+                assert!((f - s).abs() < 1e-6, "{f} vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn refit_never_increases_loss() {
+        // eq 8 optimality: the refit reconstruction must beat (or tie) any
+        // other reconstruction with the same support, in particular the raw
+        // LASSO one.
+        let (b, v) = random_basis(64, 6);
+        let cfg = crate::quant::lasso::LassoConfig { lambda1: 1.0, ..Default::default() };
+        let sol = crate::quant::lasso::solve(&b, &v, &cfg, None).unwrap();
+        let support = sol.support();
+        if support.is_empty() {
+            return;
+        }
+        let raw_loss = l2_loss(&b.apply(&sol.alpha), &v);
+        let refit = refit_fast(&b, &v, &support, None).unwrap();
+        let refit_loss = l2_loss(&refit.reconstruction, &v);
+        assert!(refit_loss <= raw_loss + 1e-12, "{refit_loss} > {raw_loss}");
+    }
+
+    #[test]
+    fn empty_support_reconstructs_zero() {
+        let (b, v) = random_basis(8, 7);
+        let r = refit_fast(&b, &v, &[], None).unwrap();
+        assert!(r.reconstruction.iter().all(|&x| x == 0.0));
+        let r2 = refit_normal_eq(&b, &v, &[]).unwrap();
+        assert!(r2.reconstruction.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prefix_before_first_support_is_zero() {
+        let (b, v) = random_basis(10, 8);
+        let r = refit_fast(&b, &v, &[3, 7], None).unwrap();
+        for i in 0..3 {
+            assert_eq!(r.reconstruction[i], 0.0);
+        }
+        // Distinct levels: {0, seg1, seg2} at most.
+        let distinct = crate::linalg::stats::distinct_count_exact(&r.reconstruction);
+        assert!(distinct <= 3);
+    }
+
+    #[test]
+    fn weighted_refit_uses_multiplicities() {
+        let b = VBasis::new(&[1.0, 2.0, 10.0]);
+        let w = [1.0, 2.0, 10.0];
+        // One segment covering everything; weights concentrate on the last.
+        let unweighted = refit_fast(&b, &w, &[0], None).unwrap();
+        let weighted = refit_fast(&b, &w, &[0], Some(&[1.0, 1.0, 98.0])).unwrap();
+        let u_level = unweighted.reconstruction[0];
+        let w_level = weighted.reconstruction[0];
+        assert!((u_level - 13.0 / 3.0).abs() < 1e-12);
+        assert!(w_level > 9.0, "weighted level should pull toward 10, got {w_level}");
+    }
+
+    #[test]
+    fn rejects_bad_support() {
+        let (b, v) = random_basis(8, 9);
+        assert!(refit_fast(&b, &v, &[2, 2], None).is_err());
+        assert!(refit_fast(&b, &v, &[3, 1], None).is_err());
+        assert!(refit_fast(&b, &v, &[b.m()], None).is_err());
+    }
+
+    #[test]
+    fn reconstruction_matches_v_alpha() {
+        // eq 11 consistency: reconstruction == V α*.
+        let (b, v) = random_basis(20, 10);
+        let r = refit_fast(&b, &v, &[0, 4, 11], None).unwrap();
+        let via_alpha = b.apply(&r.alpha);
+        for (x, y) in r.reconstruction.iter().zip(&via_alpha) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Public types for the quantization API.
+
+use crate::linalg::stats;
+
+/// Which quantization algorithm to run. These are exactly the methods the
+/// paper's §4 experiments compare.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    /// eq 6: plain l1 LASSO over the difference basis ("l1 w/o LS").
+    L1,
+    /// Algorithm 1: l1 then exact least-square refit on the support.
+    L1LeastSquare,
+    /// eq 13: l1 + negative-l2 relaxation (no refit, as in Fig 4).
+    L1L2,
+    /// eq 16: l0 best-subset (upper-bounded value count).
+    L0,
+    /// Algorithm 2: iterative l1 with growing λ₁ to hit a target count.
+    IterativeL1,
+    /// Algorithm 3: k-means partition + exact least-square values.
+    ClusterLs,
+    /// Baseline: k-means (Lloyd, k-means++ init, multi-restart).
+    KMeans,
+    /// Baseline: Mixture-of-Gaussians (EM) quantization.
+    Gmm,
+    /// Baseline: data-transformation clustering (Azimi et al. 2017).
+    DataTransform,
+    /// Extension/ablation: exact 1-d k-means by dynamic programming.
+    KMeansExact,
+    /// Extension/ablation: exact eq-6 optimum by fused-lasso DP.
+    TvExact,
+    /// Extension baseline: agglomerative (Ward) quantization [11].
+    Agglomerative,
+    /// Extension baseline: fuzzy c-means [13][14].
+    FuzzyCMeans,
+}
+
+impl QuantMethod {
+    /// Stable string id (CLI, manifests, reports).
+    pub fn id(self) -> &'static str {
+        match self {
+            QuantMethod::L1 => "l1",
+            QuantMethod::L1LeastSquare => "l1_ls",
+            QuantMethod::L1L2 => "l1_l2",
+            QuantMethod::L0 => "l0",
+            QuantMethod::IterativeL1 => "iter_l1",
+            QuantMethod::ClusterLs => "cluster_ls",
+            QuantMethod::KMeans => "kmeans",
+            QuantMethod::Gmm => "gmm",
+            QuantMethod::DataTransform => "data_transform",
+            QuantMethod::KMeansExact => "kmeans_exact",
+            QuantMethod::TvExact => "tv_exact",
+            QuantMethod::Agglomerative => "agglom",
+            QuantMethod::FuzzyCMeans => "fcm",
+        }
+    }
+
+    /// Parse from the stable id.
+    pub fn from_id(s: &str) -> Option<Self> {
+        Some(match s {
+            "l1" => QuantMethod::L1,
+            "l1_ls" => QuantMethod::L1LeastSquare,
+            "l1_l2" => QuantMethod::L1L2,
+            "l0" => QuantMethod::L0,
+            "iter_l1" => QuantMethod::IterativeL1,
+            "cluster_ls" => QuantMethod::ClusterLs,
+            "kmeans" => QuantMethod::KMeans,
+            "gmm" => QuantMethod::Gmm,
+            "data_transform" => QuantMethod::DataTransform,
+            "kmeans_exact" => QuantMethod::KMeansExact,
+            "tv_exact" => QuantMethod::TvExact,
+            "agglom" => QuantMethod::Agglomerative,
+            "fcm" => QuantMethod::FuzzyCMeans,
+            _ => return None,
+        })
+    }
+
+    /// Methods that take a target value count `l` (as opposed to a λ).
+    pub fn takes_target_count(self) -> bool {
+        matches!(
+            self,
+            QuantMethod::L0
+                | QuantMethod::IterativeL1
+                | QuantMethod::ClusterLs
+                | QuantMethod::KMeans
+                | QuantMethod::Gmm
+                | QuantMethod::DataTransform
+                | QuantMethod::KMeansExact
+                | QuantMethod::Agglomerative
+                | QuantMethod::FuzzyCMeans
+        )
+    }
+
+    /// All methods, for sweep harnesses.
+    pub const ALL: [QuantMethod; 13] = [
+        QuantMethod::L1,
+        QuantMethod::L1LeastSquare,
+        QuantMethod::L1L2,
+        QuantMethod::L0,
+        QuantMethod::IterativeL1,
+        QuantMethod::ClusterLs,
+        QuantMethod::KMeans,
+        QuantMethod::Gmm,
+        QuantMethod::DataTransform,
+        QuantMethod::KMeansExact,
+        QuantMethod::TvExact,
+        QuantMethod::Agglomerative,
+        QuantMethod::FuzzyCMeans,
+    ];
+}
+
+/// Options shared by all methods; method-specific fields are ignored by
+/// methods that do not use them.
+#[derive(Debug, Clone)]
+pub struct QuantOptions {
+    /// l1 penalty λ₁ (L1 / L1LeastSquare / L1L2 / IterativeL1 start).
+    pub lambda1: f64,
+    /// Negative-l2 coefficient λ₂ (L1L2). The paper's Fig 4 ties it to λ₁
+    /// as |λ₂| = 4e-3·λ₁; callers can do the same.
+    pub lambda2: f64,
+    /// Target number of distinct values `l` (count-taking methods).
+    pub target_values: usize,
+    /// Epoch budget for coordinate-descent solvers.
+    pub max_epochs: usize,
+    /// CD convergence tolerance.
+    pub tol: f64,
+    /// k-means: number of restarts (the paper's "5 to 10 times"; sklearn
+    /// default 10).
+    pub kmeans_restarts: usize,
+    /// k-means / GMM / EM iteration budget.
+    pub max_iters: usize,
+    /// RNG seed for the randomized baselines.
+    pub seed: u64,
+    /// Apply the LS refit after L1 (Algorithm 1 vs bare eq 6) — already
+    /// encoded in the method enum, but IterativeL1 also refits internally
+    /// per the paper; this gates it.
+    pub refit: bool,
+    /// Iterative-l1 (Algorithm 2): maximum λ-growth iterations.
+    pub max_lambda_steps: usize,
+    /// Optional hard-sigmoid clamp range applied to the output (eq 21).
+    pub clamp: Option<(f64, f64)>,
+}
+
+impl Default for QuantOptions {
+    fn default() -> Self {
+        QuantOptions {
+            lambda1: 1e-2,
+            lambda2: 0.0,
+            target_values: 16,
+            max_epochs: 1000,
+            tol: 1e-10,
+            kmeans_restarts: 10,
+            max_iters: 300,
+            seed: 0,
+            refit: true,
+            max_lambda_steps: 5000,
+            clamp: None,
+        }
+    }
+}
+
+/// Output of a quantization run.
+#[derive(Debug, Clone)]
+pub struct QuantOutput {
+    /// Quantized vector, same length/order as the input.
+    pub values: Vec<f64>,
+    /// The distinct levels used (sorted ascending).
+    pub levels: Vec<f64>,
+    /// Squared-l2 information loss vs the input (after clamping if any).
+    pub l2_loss: f64,
+    /// Number of values clamped by the hard sigmoid (out-of-range count).
+    pub clamped: usize,
+    /// Method-specific diagnostics.
+    pub diag: QuantDiag,
+}
+
+impl QuantOutput {
+    /// Achieved number of distinct values.
+    pub fn distinct_values(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Solver diagnostics surfaced to the evaluation harness.
+#[derive(Debug, Clone, Default)]
+pub struct QuantDiag {
+    /// CD epochs / EM iterations / Lloyd iterations consumed (total).
+    pub iterations: usize,
+    /// Converged within budget?
+    pub converged: bool,
+    /// λ₁ actually used (IterativeL1 reports the final λ).
+    pub lambda1: f64,
+    /// ‖α‖₀ of the sparse solution (l1/l0 family).
+    pub nnz: usize,
+    /// Numerical-instability flag (λ₂ too large, l0 failure, ...).
+    pub unstable: bool,
+    /// k-means restarts that produced empty clusters (paper's claim 1).
+    pub empty_cluster_events: usize,
+}
+
+/// Compute levels + loss bookkeeping for a reconstructed full vector.
+pub(crate) fn finalize(
+    original: &[f64],
+    mut values: Vec<f64>,
+    clamp: Option<(f64, f64)>,
+    diag: QuantDiag,
+) -> QuantOutput {
+    let clamped = match clamp {
+        Some((a, b)) => super::hard_sigmoid::clamp_slice(&mut values, a, b),
+        None => 0,
+    };
+    let mut levels: Vec<f64> = values.clone();
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    levels.dedup();
+    let l2_loss = stats::l2_loss(original, &values);
+    QuantOutput { values, levels, l2_loss, clamped, diag }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_id_roundtrip() {
+        for m in QuantMethod::ALL {
+            assert_eq!(QuantMethod::from_id(m.id()), Some(m));
+        }
+        assert_eq!(QuantMethod::from_id("nope"), None);
+    }
+
+    #[test]
+    fn finalize_computes_levels_and_loss() {
+        let out = finalize(&[1.0, 2.0, 3.0], vec![1.5, 1.5, 3.0], None, QuantDiag::default());
+        assert_eq!(out.levels, vec![1.5, 3.0]);
+        assert_eq!(out.distinct_values(), 2);
+        assert!((out.l2_loss - 0.5).abs() < 1e-12);
+        assert_eq!(out.clamped, 0);
+    }
+
+    #[test]
+    fn finalize_clamps() {
+        let out = finalize(
+            &[0.0, 1.0],
+            vec![-0.5, 1.5],
+            Some((0.0, 1.0)),
+            QuantDiag::default(),
+        );
+        assert_eq!(out.values, vec![0.0, 1.0]);
+        assert_eq!(out.clamped, 2);
+        assert_eq!(out.l2_loss, 0.0);
+    }
+}

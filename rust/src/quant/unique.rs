@@ -1,0 +1,161 @@
+//! Unique-value decomposition (paper §3.2 pre-processing).
+//!
+//! Every algorithm in the paper first computes `ŵ = unique(w)` and operates
+//! on the sorted distinct values, recovering the full vector by indexing at
+//! the end. This module provides that decomposition plus the inverse map,
+//! and keeps per-value multiplicities so weighted variants (exact LS on the
+//! full vector rather than the unique one) are possible.
+
+use crate::{Error, Result};
+
+/// Sorted unique decomposition of a vector.
+#[derive(Debug, Clone)]
+pub struct UniqueDecomp {
+    /// Sorted distinct values `ŵ` (ascending).
+    pub values: Vec<f64>,
+    /// For each element of the original vector, its index into `values`.
+    pub inverse: Vec<usize>,
+    /// Multiplicity of each distinct value in the original vector.
+    pub counts: Vec<usize>,
+}
+
+impl UniqueDecomp {
+    /// Decompose `w` into sorted distinct values + inverse index.
+    ///
+    /// Rejects empty input and non-finite values — quantizing NaN/Inf is
+    /// meaningless and k-means baselines would silently corrupt on them.
+    pub fn new(w: &[f64]) -> Result<Self> {
+        if w.is_empty() {
+            return Err(Error::InvalidInput("cannot quantize an empty vector".into()));
+        }
+        if let Some(bad) = w.iter().find(|x| !x.is_finite()) {
+            return Err(Error::InvalidInput(format!(
+                "non-finite value in input: {bad}"
+            )));
+        }
+        // Sort index pairs by value; ties broken by original index for
+        // determinism.
+        let mut order: Vec<usize> = (0..w.len()).collect();
+        order.sort_by(|&a, &b| w[a].partial_cmp(&w[b]).unwrap().then(a.cmp(&b)));
+
+        let mut values = Vec::new();
+        let mut counts = Vec::new();
+        let mut inverse = vec![0usize; w.len()];
+        for &idx in &order {
+            let x = w[idx];
+            // Normalize -0.0 to 0.0 so the two collapse to one level.
+            let x = if x == 0.0 { 0.0 } else { x };
+            if values.last().map_or(true, |&last: &f64| last != x) {
+                values.push(x);
+                counts.push(0);
+            }
+            let level = values.len() - 1;
+            inverse[idx] = level;
+            counts[level] += 1;
+        }
+        Ok(UniqueDecomp { values, inverse, counts })
+    }
+
+    /// Number of distinct values `m`.
+    pub fn m(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Length of the original vector.
+    pub fn len(&self) -> usize {
+        self.inverse.len()
+    }
+
+    /// True if the original vector was empty (cannot happen post-`new`).
+    pub fn is_empty(&self) -> bool {
+        self.inverse.is_empty()
+    }
+
+    /// Reconstruct a full-length vector from per-level values.
+    ///
+    /// `level_values` assigns a (possibly shared) value to each of the `m`
+    /// levels; the output has the original vector's length and ordering.
+    pub fn recover(&self, level_values: &[f64]) -> Result<Vec<f64>> {
+        if level_values.len() != self.m() {
+            return Err(Error::InvalidInput(format!(
+                "recover: expected {} level values, got {}",
+                self.m(),
+                level_values.len()
+            )));
+        }
+        Ok(self.inverse.iter().map(|&i| level_values[i]).collect())
+    }
+
+    /// Multiplicities as f64 weights (for weighted least squares).
+    pub fn weights(&self) -> Vec<f64> {
+        self.counts.iter().map(|&c| c as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_decomposition() {
+        let w = [3.0, 1.0, 2.0, 1.0, 3.0];
+        let u = UniqueDecomp::new(&w).unwrap();
+        assert_eq!(u.values, vec![1.0, 2.0, 3.0]);
+        assert_eq!(u.counts, vec![2, 1, 2]);
+        assert_eq!(u.inverse, vec![2, 0, 1, 0, 2]);
+        assert_eq!(u.m(), 3);
+        assert_eq!(u.len(), 5);
+    }
+
+    #[test]
+    fn recover_identity() {
+        let w = [0.5, -1.25, 3.0, 0.5, 0.0, 3.0];
+        let u = UniqueDecomp::new(&w).unwrap();
+        let rec = u.recover(&u.values).unwrap();
+        assert_eq!(rec, w.to_vec());
+    }
+
+    #[test]
+    fn recover_with_shared_values() {
+        let w = [1.0, 2.0, 3.0];
+        let u = UniqueDecomp::new(&w).unwrap();
+        let rec = u.recover(&[1.5, 1.5, 3.0]).unwrap();
+        assert_eq!(rec, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn recover_wrong_len_rejected() {
+        let u = UniqueDecomp::new(&[1.0, 2.0]).unwrap();
+        assert!(u.recover(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_nonfinite() {
+        assert!(UniqueDecomp::new(&[]).is_err());
+        assert!(UniqueDecomp::new(&[1.0, f64::NAN]).is_err());
+        assert!(UniqueDecomp::new(&[f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn negative_zero_folds() {
+        let u = UniqueDecomp::new(&[-0.0, 0.0]).unwrap();
+        assert_eq!(u.m(), 1);
+    }
+
+    #[test]
+    fn values_sorted_ascending() {
+        let w = [5.0, -2.0, 7.5, 0.0, -2.0, 5.0, 1.0];
+        let u = UniqueDecomp::new(&w).unwrap();
+        for pair in u.values.windows(2) {
+            assert!(pair[0] < pair[1]);
+        }
+        assert_eq!(u.counts.iter().sum::<usize>(), w.len());
+    }
+
+    #[test]
+    fn single_value_vector() {
+        let u = UniqueDecomp::new(&[2.0; 10]).unwrap();
+        assert_eq!(u.m(), 1);
+        assert_eq!(u.recover(&[9.0]).unwrap(), vec![9.0; 10]);
+    }
+}

@@ -1,0 +1,276 @@
+//! The structured difference basis `V` (paper §3.2).
+//!
+//! For sorted distinct values `v_0 < v_1 < … < v_{m−1}` the paper defines
+//! the lower-triangular matrix (0-indexed here; `v_{-1} := 0`):
+//!
+//! ```text
+//! V[i][j] = d_j  for j ≤ i,  0 otherwise,   where  d_j = v_j − v_{j−1}
+//! ```
+//!
+//! so `(Vα)_i = Σ_{j≤i} d_j α_j` is a prefix sum: reconstruction is a
+//! *piecewise-constant* vector whose level only changes at indices `j` with
+//! `α_j ≠ 0` — sparsity of `α` is exactly value sharing. Setting `α = 𝟙`
+//! reproduces `v` with zero loss, which is the paper's preferred CD starting
+//! point (§3.2.1).
+//!
+//! **The key performance fact** (DESIGN §3): `V` never needs to be
+//! materialized. All the solver primitives have closed forms:
+//!
+//! * `Vα`          — O(m) prefix sum of `d ⊙ α`;
+//! * `Vᵀr`         — O(m) suffix sums: `(Vᵀr)_j = d_j · Σ_{i≥j} r_i`;
+//! * `(VᵀV)_{jk}`  — `d_j d_k · (m − max(j,k))` (the paper's eq 12);
+//! * `‖V_{·j}‖²`   — `d_j² · (m − j)`.
+//!
+//! The dense counterparts live here too and are used (a) to cross-check the
+//! structured forms in tests and (b) as the "naïve" baseline the §Perf
+//! benchmarks compare against.
+
+use crate::linalg::matrix::Matrix;
+
+/// Structured representation of the difference basis for a sorted value
+/// vector.
+#[derive(Debug, Clone)]
+pub struct VBasis {
+    /// The sorted distinct values `v` (ascending).
+    v: Vec<f64>,
+    /// First differences `d_j = v_j − v_{j−1}` with `d_0 = v_0`.
+    d: Vec<f64>,
+}
+
+impl VBasis {
+    /// Build from sorted distinct values. Debug-asserts strict ascending
+    /// order (guaranteed by [`crate::quant::unique::UniqueDecomp`]).
+    pub fn new(values: &[f64]) -> Self {
+        debug_assert!(values.windows(2).all(|p| p[0] < p[1]), "values must be sorted strictly ascending");
+        let mut d = Vec::with_capacity(values.len());
+        let mut prev = 0.0;
+        for &x in values {
+            d.push(x - prev);
+            prev = x;
+        }
+        VBasis { v: values.to_vec(), d }
+    }
+
+    /// Dimension `m`.
+    pub fn m(&self) -> usize {
+        self.v.len()
+    }
+
+    /// The original sorted values.
+    pub fn values(&self) -> &[f64] {
+        &self.v
+    }
+
+    /// First differences `d` (`d_0 = v_0`).
+    pub fn diffs(&self) -> &[f64] {
+        &self.d
+    }
+
+    /// `Vα` — O(m) prefix-sum reconstruction.
+    pub fn apply(&self, alpha: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(alpha.len(), self.m());
+        let mut out = Vec::with_capacity(self.m());
+        let mut acc = 0.0;
+        for (dj, aj) in self.d.iter().zip(alpha) {
+            acc += dj * aj;
+            out.push(acc);
+        }
+        out
+    }
+
+    /// `Vα` written into a caller-provided buffer (hot-path variant).
+    pub fn apply_into(&self, alpha: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(alpha.len(), self.m());
+        debug_assert_eq!(out.len(), self.m());
+        let mut acc = 0.0;
+        for ((o, dj), aj) in out.iter_mut().zip(&self.d).zip(alpha) {
+            acc += dj * aj;
+            *o = acc;
+        }
+    }
+
+    /// `Vᵀ r` — O(m) via suffix sums.
+    pub fn t_apply(&self, r: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(r.len(), self.m());
+        let mut out = vec![0.0; self.m()];
+        let mut suffix = 0.0;
+        for j in (0..self.m()).rev() {
+            suffix += r[j];
+            out[j] = self.d[j] * suffix;
+        }
+        out
+    }
+
+    /// Gram entry `(VᵀV)_{jk} = d_j d_k (m − max(j,k))` — paper eq 12.
+    #[inline]
+    pub fn gram_entry(&self, j: usize, k: usize) -> f64 {
+        let m = self.m();
+        self.d[j] * self.d[k] * (m - j.max(k)) as f64
+    }
+
+    /// Squared column norm `‖V_{·j}‖² = d_j² (m − j)`.
+    #[inline]
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let m = self.m();
+        self.d[j] * self.d[j] * (m - j) as f64
+    }
+
+    /// Weighted squared column norm `Σ_{i≥j} c_i d_j²` for per-row weights
+    /// `c` (multiplicity-weighted variants).
+    pub fn col_norm_sq_weighted(&self, j: usize, suffix_weight: &[f64]) -> f64 {
+        self.d[j] * self.d[j] * suffix_weight[j]
+    }
+
+    /// Materialize the dense `m × m` matrix. For tests and the naïve
+    /// baseline only — O(m²) memory.
+    pub fn dense(&self) -> Matrix {
+        let m = self.m();
+        Matrix::from_fn(m, m, |i, j| if j <= i { self.d[j] } else { 0.0 })
+    }
+
+    /// Reconstruction from a sparse support: `V_{·S} β` where `support` is
+    /// sorted ascending. O(m + |S|).
+    pub fn apply_support(&self, support: &[usize], beta: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(support.len(), beta.len());
+        debug_assert!(support.windows(2).all(|p| p[0] < p[1]));
+        let m = self.m();
+        let mut out = vec![0.0; m];
+        let mut acc = 0.0;
+        let mut s = 0;
+        for (i, o) in out.iter_mut().enumerate() {
+            if s < support.len() && support[s] == i {
+                acc += self.d[support[s]] * beta[s];
+                s += 1;
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Dense `m × h` sub-matrix of the support columns (eq 7's `V*`), for
+    /// the naïve refit path and tests.
+    pub fn dense_support(&self, support: &[usize]) -> Matrix {
+        let m = self.m();
+        Matrix::from_fn(m, support.len(), |i, jj| {
+            let j = support[jj];
+            if j <= i {
+                self.d[j]
+            } else {
+                0.0
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn basis() -> VBasis {
+        VBasis::new(&[-1.5, 0.25, 1.0, 4.0, 9.5])
+    }
+
+    #[test]
+    fn diffs_match_definition() {
+        let b = basis();
+        assert_eq!(b.diffs()[0], -1.5);
+        assert!((b.diffs()[1] - 1.75).abs() < 1e-15);
+        assert!((b.diffs()[4] - 5.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn all_ones_reconstructs_values() {
+        let b = basis();
+        let rec = b.apply(&vec![1.0; b.m()]);
+        for (r, v) in rec.iter().zip(b.values()) {
+            assert!((r - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let b = basis();
+        let alpha = [0.3, -1.0, 0.0, 2.0, 0.7];
+        let fast = b.apply(&alpha);
+        let slow = b.dense().matvec(&alpha).unwrap();
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((f - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apply_into_matches_apply() {
+        let b = basis();
+        let alpha = [1.0, 0.5, 0.0, -2.0, 3.0];
+        let mut buf = vec![0.0; b.m()];
+        b.apply_into(&alpha, &mut buf);
+        assert_eq!(buf, b.apply(&alpha));
+    }
+
+    #[test]
+    fn t_apply_matches_dense() {
+        let b = basis();
+        let r = [0.1, -0.4, 2.0, 0.0, 1.0];
+        let fast = b.t_apply(&r);
+        let slow = b.dense().t_matvec(&r).unwrap();
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((f - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_matches_dense() {
+        let b = basis();
+        let g = b.dense().gram();
+        for j in 0..b.m() {
+            for k in 0..b.m() {
+                assert!(
+                    (b.gram_entry(j, k) - g[(j, k)]).abs() < 1e-12,
+                    "gram mismatch at ({j},{k})"
+                );
+            }
+            assert!((b.col_norm_sq(j) - g[(j, j)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparsity_is_value_sharing() {
+        let b = basis();
+        // Zero out α_2: levels 1 and 2 must share a value.
+        let mut alpha = vec![1.0; b.m()];
+        alpha[2] = 0.0;
+        let rec = b.apply(&alpha);
+        assert_eq!(rec[1], rec[2]);
+        assert_ne!(rec[0], rec[1]);
+        assert_ne!(rec[2], rec[3]);
+    }
+
+    #[test]
+    fn apply_support_matches_dense_support() {
+        let b = basis();
+        let support = [0usize, 2, 4];
+        let beta = [1.2, -0.5, 0.9];
+        let fast = b.apply_support(&support, &beta);
+        let slow = b.dense_support(&support).matvec(&beta).unwrap();
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((f - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn support_excluding_zero_starts_at_zero() {
+        let b = basis();
+        let rec = b.apply_support(&[2, 3], &[1.0, 1.0]);
+        assert_eq!(rec[0], 0.0);
+        assert_eq!(rec[1], 0.0);
+        assert_ne!(rec[2], 0.0);
+    }
+
+    #[test]
+    fn negative_values_handled() {
+        let b = VBasis::new(&[-5.0, -2.0, -1.0]);
+        let rec = b.apply(&[1.0, 1.0, 1.0]);
+        assert!((rec[0] + 5.0).abs() < 1e-12);
+        assert!((rec[2] + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,319 @@
+//! Artifact registry: manifest parsing + lazy compile + executable cache.
+//!
+//! The Python AOT pipeline writes `artifacts/manifest.json` describing each
+//! lowered graph (name, HLO file, input shapes/dtypes, semantic metadata).
+//! The registry loads the manifest, validates it, and compiles executables
+//! on first use — compile once, execute many (DESIGN §9).
+
+use crate::jsonio::{self, Json};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor input declared in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions (row-major).
+    pub shape: Vec<usize>,
+    /// Dtype name (currently always "float32").
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Stable name, e.g. `lasso_cd_m256`.
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Semantic metadata (kind, bucket dims, iters per call).
+    pub meta: HashMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    /// Metadata field as usize.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|j| j.as_usize())
+    }
+
+    /// Metadata field as str.
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.as_str())
+    }
+}
+
+/// Parsed manifest + compiled-executable cache.
+pub struct Registry {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Registry {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT cpu client: {e}")))?;
+        Ok(Registry { dir: dir.to_path_buf(), specs, client, cache: HashMap::new() })
+    }
+
+    /// All artifact specs.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Find a spec by name.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Names of artifacts of a given kind, with their `m` bucket.
+    pub fn buckets_of_kind(&self, kind: &str) -> Vec<(String, usize)> {
+        self.specs
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some(kind))
+            .filter_map(|s| s.meta_usize("m").map(|m| (s.name.clone(), m)))
+            .collect()
+    }
+
+    /// The PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling + caching on first use) the executable for `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .spec(name)
+                .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` with f32 vector inputs shaped per the
+    /// manifest. Returns the flattened f32 outputs (tuple elements in
+    /// order).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self
+            .spec(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs given, manifest declares {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, ts) in inputs.iter().zip(&spec.inputs) {
+            if data.len() != ts.elements() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input has {} elements, spec {:?} needs {}",
+                    data.len(),
+                    ts.shape,
+                    ts.elements()
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("{name}: reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("{name}: execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{name}: to_literal: {e}")))?;
+        // Lowered with return_tuple=True: unwrap the tuple.
+        let elems = out
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("{name}: tuple: {e}")))?;
+        elems
+            .into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("{name}: to_vec: {e}")))
+            })
+            .collect()
+    }
+}
+
+/// Load and parse `manifest.json` from an artifact directory without
+/// creating a PJRT client (cheap capability probing; Send-safe).
+pub fn load_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        Error::Runtime(format!(
+            "cannot read {} (run `make artifacts` first): {e}",
+            manifest_path.display()
+        ))
+    })?;
+    parse_manifest(&text)
+}
+
+/// Parse `manifest.json` text into artifact specs.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let j = jsonio::parse(text)?;
+    let version = j
+        .get("version")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| Error::Runtime("manifest: missing version".into()))?;
+    if version != 1 {
+        return Err(Error::Runtime(format!("manifest: unsupported version {version}")));
+    }
+    let arts = j
+        .get("artifacts")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| Error::Runtime("manifest: missing artifacts".into()))?;
+    let mut specs = Vec::with_capacity(arts.len());
+    for a in arts {
+        let name = a
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Runtime("manifest: artifact missing name".into()))?
+            .to_string();
+        let file = a
+            .get("file")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| Error::Runtime(format!("manifest: {name} missing file")))?
+            .to_string();
+        if file.contains("..") || file.starts_with('/') {
+            return Err(Error::Runtime(format!("manifest: {name}: suspicious path {file}")));
+        }
+        let inputs = a
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Runtime(format!("manifest: {name} missing inputs")))?
+            .iter()
+            .map(|i| -> Result<TensorSpec> {
+                let shape = i
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| Error::Runtime(format!("manifest: {name}: bad shape")))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize()
+                            .ok_or_else(|| Error::Runtime(format!("manifest: {name}: bad dim")))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = i
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string();
+                if dtype != "float32" {
+                    return Err(Error::Runtime(format!(
+                        "manifest: {name}: unsupported dtype {dtype}"
+                    )));
+                }
+                Ok(TensorSpec { shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = match a.get("meta") {
+            Some(Json::Obj(m)) => m.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            _ => HashMap::new(),
+        };
+        specs.push(ArtifactSpec { name, file, inputs, meta });
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lasso_cd_m64", "file": "lasso_cd_m64.hlo.txt",
+         "inputs": [
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [2], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"}],
+         "meta": {"kind": "lasso_cd", "m": 64, "epochs_per_call": 8}},
+        {"name": "kmeans_m256_k8", "file": "kmeans_m256_k8.hlo.txt",
+         "inputs": [
+            {"shape": [256], "dtype": "float32"},
+            {"shape": [256], "dtype": "float32"},
+            {"shape": [8], "dtype": "float32"}],
+         "meta": {"kind": "kmeans", "m": 256, "k": 8, "iters_per_call": 4}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let specs = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "lasso_cd_m64");
+        assert_eq!(specs[0].inputs.len(), 5);
+        assert_eq!(specs[0].inputs[3].shape, vec![2]);
+        assert_eq!(specs[0].meta_usize("epochs_per_call"), Some(8));
+        assert_eq!(specs[1].meta_str("kind"), Some("kmeans"));
+        assert_eq!(specs[1].inputs[2].elements(), 8);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest(r#"{"version": 2, "artifacts": []}"#).is_err());
+        assert!(parse_manifest(
+            r#"{"version": 1, "artifacts": [{"name": "x", "file": "../evil", "inputs": []}]}"#
+        )
+        .is_err());
+        assert!(parse_manifest(
+            r#"{"version": 1, "artifacts": [{"name": "x", "file": "f",
+                "inputs": [{"shape": [4], "dtype": "int8"}]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Written by `make artifacts`; validate when available.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let specs = parse_manifest(&text).unwrap();
+            assert!(specs.iter().any(|s| s.name.starts_with("lasso_cd_m")));
+            assert!(specs.iter().any(|s| s.name.starts_with("kmeans_m")));
+            assert!(specs.iter().any(|s| s.name.starts_with("mlp_fwd_b")));
+        }
+    }
+}

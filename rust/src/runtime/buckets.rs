@@ -1,0 +1,80 @@
+//! Shape-bucket selection.
+//!
+//! AOT executables are compiled for fixed shapes; a request of size `m`
+//! runs on the smallest bucket that fits, padded with inert rows. This is
+//! the same trick serving systems use for batch/sequence dims.
+
+/// Pick the smallest bucket ≥ `m`. Returns `None` if `m` exceeds all
+/// buckets (caller falls back to the native engine).
+pub fn pick(buckets: &[usize], m: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= m).min()
+}
+
+/// Pad `xs` to `len` with `fill`.
+pub fn pad(xs: &[f32], len: usize, fill: f32) -> Vec<f32> {
+    debug_assert!(xs.len() <= len);
+    let mut out = Vec::with_capacity(len);
+    out.extend_from_slice(xs);
+    out.resize(len, fill);
+    out
+}
+
+/// Padding plan for the lasso artifact: rows repeat the last value with
+/// zero weight, coordinates get zero diff so they can never activate.
+pub struct LassoPadding {
+    /// Padded `w` (last value repeated).
+    pub w: Vec<f32>,
+    /// Padded diffs (0 in the pad region).
+    pub d: Vec<f32>,
+    /// Row weights (1 real, 0 pad).
+    pub cw: Vec<f32>,
+    /// Padded α (0 in the pad region).
+    pub alpha: Vec<f32>,
+}
+
+/// Build the lasso padding plan.
+pub fn pad_lasso(w: &[f32], d: &[f32], alpha: &[f32], bucket: usize) -> LassoPadding {
+    let last = *w.last().expect("non-empty w");
+    let m = w.len();
+    LassoPadding {
+        w: pad(w, bucket, last),
+        d: pad(d, bucket, 0.0),
+        cw: {
+            let mut cw = vec![1.0f32; m];
+            cw.resize(bucket, 0.0);
+            cw
+        },
+        alpha: pad(alpha, bucket, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let b = [64usize, 256, 1024];
+        assert_eq!(pick(&b, 1), Some(64));
+        assert_eq!(pick(&b, 64), Some(64));
+        assert_eq!(pick(&b, 65), Some(256));
+        assert_eq!(pick(&b, 1024), Some(1024));
+        assert_eq!(pick(&b, 1025), None);
+        assert_eq!(pick(&[], 1), None);
+    }
+
+    #[test]
+    fn pad_preserves_prefix() {
+        let p = pad(&[1.0, 2.0], 4, 9.0);
+        assert_eq!(p, vec![1.0, 2.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn lasso_padding_plan() {
+        let p = pad_lasso(&[1.0, 3.0], &[1.0, 2.0], &[1.0, 1.0], 4);
+        assert_eq!(p.w, vec![1.0, 3.0, 3.0, 3.0]);
+        assert_eq!(p.d, vec![1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(p.cw, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(p.alpha, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

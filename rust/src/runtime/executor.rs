@@ -1,0 +1,331 @@
+//! Typed execution layer over the artifact registry.
+//!
+//! The executor owns the registry and exposes the three kernel families as
+//! typed calls with automatic shape-bucketing, padding and unpadding. The
+//! Rust side drives convergence (one artifact call = a fixed number of
+//! inner iterations, see `model.py`), so a single compiled executable
+//! serves every λ, warm start and iteration budget.
+
+use super::artifact::Registry;
+use super::buckets;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Typed runtime front-end.
+pub struct Executor {
+    registry: Registry,
+    lasso_buckets: Vec<(String, usize)>,
+    kmeans_buckets: Vec<(String, usize, usize)>, // (name, m, k)
+    gmm_buckets: Vec<(String, usize, usize)>,    // (name, m, k)
+    mlp_batch: Option<(String, usize)>,
+}
+
+/// Result of a runtime LASSO solve.
+#[derive(Debug, Clone)]
+pub struct RuntimeLasso {
+    /// Final coefficients (unpadded, length = original m).
+    pub alpha: Vec<f32>,
+    /// Artifact calls made (each = `epochs_per_call` CD epochs).
+    pub calls: usize,
+    /// Converged before the call budget?
+    pub converged: bool,
+}
+
+impl Executor {
+    /// Open the artifact directory and index the buckets.
+    pub fn open(dir: &Path) -> Result<Executor> {
+        let registry = Registry::open(dir)?;
+        let mut lasso_buckets = registry.buckets_of_kind("lasso_cd");
+        lasso_buckets.sort_by_key(|&(_, m)| m);
+        let mut kmeans_buckets: Vec<(String, usize, usize)> = registry
+            .specs()
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some("kmeans"))
+            .filter_map(|s| {
+                Some((s.name.clone(), s.meta_usize("m")?, s.meta_usize("k")?))
+            })
+            .collect();
+        kmeans_buckets.sort_by_key(|&(_, m, k)| (m, k));
+        let mut gmm_buckets: Vec<(String, usize, usize)> = registry
+            .specs()
+            .iter()
+            .filter(|s| s.meta_str("kind") == Some("gmm"))
+            .filter_map(|s| {
+                Some((s.name.clone(), s.meta_usize("m")?, s.meta_usize("k")?))
+            })
+            .collect();
+        gmm_buckets.sort_by_key(|&(_, m, k)| (m, k));
+        let mlp_batch = registry
+            .specs()
+            .iter()
+            .find(|s| s.meta_str("kind") == Some("mlp_fwd"))
+            .and_then(|s| Some((s.name.clone(), s.meta_usize("batch")?)));
+        Ok(Executor { registry, lasso_buckets, kmeans_buckets, gmm_buckets, mlp_batch })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.registry.platform()
+    }
+
+    /// Largest lasso bucket available (capability probe).
+    pub fn max_lasso_m(&self) -> usize {
+        self.lasso_buckets.iter().map(|&(_, m)| m).max().unwrap_or(0)
+    }
+
+    /// Epochs fused into one lasso artifact call.
+    pub fn lasso_epochs_per_call(&self) -> usize {
+        self.lasso_buckets
+            .first()
+            .and_then(|(n, _)| self.registry.spec(n))
+            .and_then(|s| s.meta_usize("epochs_per_call"))
+            .unwrap_or(1)
+    }
+
+    /// Run CD-LASSO on the runtime until convergence: repeated artifact
+    /// calls, each `epochs_per_call` epochs, until the max α move falls
+    /// under `tol` or `max_calls` is exhausted.
+    pub fn lasso_solve(
+        &mut self,
+        w: &[f32],
+        d: &[f32],
+        lambda1: f32,
+        lambda2: f32,
+        max_calls: usize,
+        tol: f32,
+    ) -> Result<RuntimeLasso> {
+        let m = w.len();
+        if m == 0 || d.len() != m {
+            return Err(Error::InvalidInput("lasso_solve: bad dims".into()));
+        }
+        let (name, bucket) = self
+            .lasso_buckets
+            .iter()
+            .find(|&&(_, b)| b >= m)
+            .cloned()
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no lasso bucket fits m={m} (max {})",
+                    self.max_lasso_m()
+                ))
+            })?;
+        let alpha0 = vec![1.0f32; m];
+        let pad = buckets::pad_lasso(w, d, &alpha0, bucket);
+        let lam = [lambda1, lambda2];
+        let mut alpha = pad.alpha;
+        let mut calls = 0usize;
+        let mut converged = false;
+        // Support-stability early stop, mirroring the native solver
+        // (§Perf): only the zero pattern matters downstream.
+        let mut last_sig = 0u64;
+        let mut stable = 0usize;
+        while calls < max_calls {
+            calls += 1;
+            let out = self.registry.execute_f32(
+                &name,
+                &[&pad.w, &pad.d, &pad.cw, &lam, &alpha],
+            )?;
+            let new_alpha = out
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::Runtime("lasso artifact returned no output".into()))?;
+            let max_move = alpha
+                .iter()
+                .zip(&new_alpha)
+                .zip(&pad.d)
+                .map(|((a, b), dd)| ((a - b) * dd).abs())
+                .fold(0.0f32, f32::max);
+            alpha = new_alpha;
+            if max_move < tol {
+                converged = true;
+                break;
+            }
+            let mut sig = 0xcbf29ce484222325u64;
+            for (i, &a) in alpha.iter().enumerate() {
+                if a.abs() > 1e-7 {
+                    sig = (sig ^ i as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            if sig == last_sig {
+                stable += 1;
+                // Each call is epochs_per_call epochs; 2 stable calls ≈ the
+                // native patience.
+                if stable >= 2 {
+                    converged = true;
+                    break;
+                }
+            } else {
+                last_sig = sig;
+                stable = 0;
+            }
+        }
+        alpha.truncate(m);
+        Ok(RuntimeLasso { alpha, calls, converged })
+    }
+
+    /// Run `iters` Lloyd iterations on the runtime. `centroids` length must
+    /// match an available k bucket after padding points to an m bucket.
+    pub fn kmeans_lloyd(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+        min_calls: usize,
+    ) -> Result<Vec<f32>> {
+        let m = points.len();
+        let k = centroids.len();
+        if weights.len() != m {
+            return Err(Error::InvalidInput("kmeans_lloyd: weights mismatch".into()));
+        }
+        let (name, bm, bk) = self
+            .kmeans_buckets
+            .iter()
+            .find(|&&(_, bm, bk)| bm >= m && bk >= k)
+            .cloned()
+            .ok_or_else(|| Error::Runtime(format!("no kmeans bucket fits m={m}, k={k}")))?;
+        // Pad points with weight 0; pad centroids far above the data range
+        // so no real point selects them and sorting keeps them last.
+        let pts = buckets::pad(points, bm, 0.0);
+        let cw = {
+            let mut cw = vec![1.0f32; m];
+            // Real weights can be multiplicities.
+            cw.copy_from_slice(weights);
+            cw.resize(bm, 0.0);
+            cw
+        };
+        let span = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+            - points.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let sentinel = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+            + span.max(1.0) * 10.0;
+        let mut cen = buckets::pad(centroids, bk, sentinel);
+        for call in 0..min_calls.max(1) {
+            // Sentinel spacing: keep pads distinct so sort order is stable.
+            for (i, c) in cen.iter_mut().enumerate().skip(k) {
+                if !c.is_finite() || *c < sentinel {
+                    *c = sentinel + (i - k) as f32;
+                }
+            }
+            let out = self.registry.execute_f32(&name, &[&pts, &cw, &cen])?;
+            cen = out
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::Runtime("kmeans artifact returned no output".into()))?;
+            let _ = call;
+        }
+        // Real centroids are the k smallest (sentinels sort last).
+        cen.truncate(k);
+        Ok(cen)
+    }
+
+    /// Run `calls × EM_ITERS_PER_CALL` EM iterations on the runtime.
+    /// Returns (means, variances, weights) truncated to the real k.
+    pub fn gmm_em(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        means: &[f32],
+        variances: &[f32],
+        mix: &[f32],
+        var_floor: f32,
+        calls: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = points.len();
+        let k = means.len();
+        if weights.len() != m || variances.len() != k || mix.len() != k {
+            return Err(Error::InvalidInput("gmm_em: dim mismatch".into()));
+        }
+        let (name, bm, bk) = self
+            .gmm_buckets
+            .iter()
+            .find(|&&(_, bm, bk)| bm >= m && bk >= k)
+            .cloned()
+            .ok_or_else(|| Error::Runtime(format!("no gmm bucket fits m={m}, k={k}")))?;
+        // Pad points with weight 0; pad components with zero mixing weight
+        // and a far-away sentinel mean so sorting keeps them last.
+        let pts = buckets::pad(points, bm, 0.0);
+        let cw = {
+            let mut c = weights.to_vec();
+            c.resize(bm, 0.0);
+            c
+        };
+        let span = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+            - points.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        let sentinel = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+            + span.max(1.0) * 10.0;
+        let mut mu = means.to_vec();
+        let mut var = variances.to_vec();
+        let mut pi = mix.to_vec();
+        for i in k..bk {
+            mu.push(sentinel + (i - k) as f32);
+            var.push(1.0);
+            pi.push(0.0);
+        }
+        let floor = [var_floor];
+        for _ in 0..calls.max(1) {
+            let out = self
+                .registry
+                .execute_f32(&name, &[&pts, &cw, &mu, &var, &pi, &floor])?;
+            let mut it = out.into_iter();
+            mu = it.next().ok_or_else(|| Error::Runtime("gmm: no means".into()))?;
+            var = it.next().ok_or_else(|| Error::Runtime("gmm: no vars".into()))?;
+            pi = it.next().ok_or_else(|| Error::Runtime("gmm: no weights".into()))?;
+        }
+        mu.truncate(k);
+        var.truncate(k);
+        pi.truncate(k);
+        // Renormalize over the real components (pads carried ≈0 mass).
+        let total: f32 = pi.iter().sum();
+        if total > 0.0 {
+            for p in &mut pi {
+                *p /= total;
+            }
+        }
+        Ok((mu, var, pi))
+    }
+
+    /// Forward a batch through the MLP artifact. `x` is row-major
+    /// `rows × in_dim`; `params` are (w, b) pairs. Rows are chunked/padded
+    /// to the artifact batch.
+    pub fn mlp_forward(
+        &mut self,
+        x: &[f32],
+        rows: usize,
+        in_dim: usize,
+        out_dim: usize,
+        params: &[(&[f32], &[f32])],
+    ) -> Result<Vec<f32>> {
+        let (name, batch) = self
+            .mlp_batch
+            .clone()
+            .ok_or_else(|| Error::Runtime("no mlp artifact in manifest".into()))?;
+        if x.len() != rows * in_dim {
+            return Err(Error::InvalidInput("mlp_forward: x dims".into()));
+        }
+        if params.len() != 4 {
+            return Err(Error::InvalidInput("mlp_forward: need 4 layers".into()));
+        }
+        let mut logits = Vec::with_capacity(rows * out_dim);
+        let mut row = 0usize;
+        while row < rows {
+            let take = (rows - row).min(batch);
+            let mut xb = vec![0.0f32; batch * in_dim];
+            xb[..take * in_dim].copy_from_slice(&x[row * in_dim..(row + take) * in_dim]);
+            let inputs: Vec<&[f32]> = {
+                let mut v: Vec<&[f32]> = vec![&xb];
+                for (w, b) in params {
+                    v.push(w);
+                    v.push(b);
+                }
+                v
+            };
+            let out = self.registry.execute_f32(&name, &inputs)?;
+            let out0 = out
+                .into_iter()
+                .next()
+                .ok_or_else(|| Error::Runtime("mlp artifact returned no output".into()))?;
+            logits.extend_from_slice(&out0[..take * out_dim]);
+            row += take;
+        }
+        Ok(logits)
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime (S18): load AOT-compiled JAX/Pallas artifacts and execute
+//! them from the Rust request path.
+//!
+//! The flow mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Python runs once at `make artifacts`; after that the binary is
+//! self-contained. Because `m = |unique(w)|` is data-dependent, executables
+//! are compiled per **shape bucket** ([`buckets`]) and inputs are padded
+//! with provably-inert rows (weight 0 / diff 0 — see the kernel docs and
+//! the padding tests on both sides of the language boundary).
+
+pub mod artifact;
+pub mod buckets;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Registry};
+pub use executor::Executor;

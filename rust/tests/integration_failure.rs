@@ -1,0 +1,187 @@
+//! Failure injection: corrupted artifacts, bad manifests, and overload
+//! must degrade loudly-but-cleanly — errors, fallbacks, and load shedding
+//! rather than panics or wrong numbers.
+
+use sqlsq::config::{Config, Engine};
+use sqlsq::coordinator::Coordinator;
+use sqlsq::quant::{QuantMethod, QuantOptions};
+use sqlsq::runtime::{artifact, Executor};
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sqlsq_failtest_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_errors_cleanly() {
+    let dir = tmpdir("missing");
+    let err = match Executor::open(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("opening an empty artifact dir must fail"),
+    };
+    assert!(err.to_string().contains("make artifacts"), "err: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn corrupt_manifest_json_errors() {
+    let dir = tmpdir("badjson");
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(artifact::load_manifest(&dir).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn manifest_with_missing_hlo_file_fails_at_execute() {
+    let dir = tmpdir("missing_hlo");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+            {"name": "lasso_cd_m64", "file": "nonexistent.hlo.txt",
+             "inputs": [
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [2], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"}],
+             "meta": {"kind": "lasso_cd", "m": 64, "epochs_per_call": 8}}
+        ]}"#,
+    )
+    .unwrap();
+    let mut ex = Executor::open(&dir).unwrap(); // opening is lazy
+    let w = vec![0.5f32; 8];
+    let d = vec![0.1f32; 8];
+    let err = ex.lasso_solve(&w, &d, 0.01, 0.0, 2, 1e-6).unwrap_err();
+    assert!(err.to_string().contains("nonexistent"), "err: {err}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn truncated_hlo_text_fails_to_parse() {
+    let dir = tmpdir("truncated");
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule garbage {{{").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+            {"name": "lasso_cd_m64", "file": "broken.hlo.txt",
+             "inputs": [
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"},
+                {"shape": [2], "dtype": "float32"},
+                {"shape": [64], "dtype": "float32"}],
+             "meta": {"kind": "lasso_cd", "m": 64, "epochs_per_call": 8}}
+        ]}"#,
+    )
+    .unwrap();
+    let mut ex = Executor::open(&dir).unwrap();
+    let w = vec![0.5f32; 8];
+    let d = vec![0.1f32; 8];
+    assert!(ex.lasso_solve(&w, &d, 0.01, 0.0, 2, 1e-6).is_err());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn auto_coordinator_with_broken_artifacts_falls_back_to_native() {
+    // Manifest advertises a bucket, but the HLO is broken: the runtime
+    // lane must fail per job and Auto must still serve natively.
+    let dir = tmpdir("auto_fallback");
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule nope").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+            {"name": "lasso_cd_m1024", "file": "broken.hlo.txt",
+             "inputs": [
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [2], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"}],
+             "meta": {"kind": "lasso_cd", "m": 1024, "epochs_per_call": 8}}
+        ]}"#,
+    )
+    .unwrap();
+    let coord = Coordinator::start(Config {
+        workers: 1,
+        runtime_lanes: 1,
+        engine: Engine::Auto,
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let data: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin()).collect();
+    let res = coord
+        .quantize_blocking(
+            data.clone(),
+            QuantMethod::L1LeastSquare,
+            QuantOptions { lambda1: 0.01, ..Default::default() },
+        )
+        .unwrap();
+    let out = res.outcome.expect("auto fallback must succeed");
+    assert_eq!(out.values.len(), data.len());
+    assert_eq!(res.served_by.label(), "native");
+    coord.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn runtime_policy_with_broken_artifacts_fails_jobs_loudly() {
+    let dir = tmpdir("strict_runtime");
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule nope").unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+            {"name": "lasso_cd_m1024", "file": "broken.hlo.txt",
+             "inputs": [
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"},
+                {"shape": [2], "dtype": "float32"},
+                {"shape": [1024], "dtype": "float32"}],
+             "meta": {"kind": "lasso_cd", "m": 1024, "epochs_per_call": 8}}
+        ]}"#,
+    )
+    .unwrap();
+    let coord = Coordinator::start(Config {
+        workers: 1,
+        runtime_lanes: 1,
+        engine: Engine::Runtime,
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let data: Vec<f64> = (0..50).map(|i| i as f64).collect();
+    let res = coord
+        .quantize_blocking(
+            data,
+            QuantMethod::L1LeastSquare,
+            QuantOptions { lambda1: 0.01, ..Default::default() },
+        )
+        .unwrap();
+    assert!(!res.is_ok(), "strict runtime policy must surface the failure");
+    let snap = coord.shutdown();
+    assert_eq!(snap.failed, 1);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn wrong_input_shape_rejected_by_registry() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let mut reg = sqlsq::runtime::Registry::open(&dir).unwrap();
+    // lasso_cd_m64 wants five inputs with [64]-shapes; feed garbage.
+    let bad = vec![0.0f32; 3];
+    let err = reg
+        .execute_f32("lasso_cd_m64", &[&bad, &bad, &bad, &bad, &bad])
+        .unwrap_err();
+    assert!(err.to_string().contains("elements"), "err: {err}");
+    let err2 = reg.execute_f32("lasso_cd_m64", &[&bad]).unwrap_err();
+    assert!(err2.to_string().contains("inputs"), "err: {err2}");
+    assert!(reg.execute_f32("no_such_artifact", &[]).is_err());
+}

@@ -1,0 +1,242 @@
+//! Property tests (testkit) over the core library invariants — the
+//! DESIGN §8 list.
+
+use sqlsq::linalg::stats::{distinct_count_exact, l2_loss};
+use sqlsq::quant::{
+    self, lasso, refit, unique::UniqueDecomp, vmatrix::VBasis, QuantMethod, QuantOptions,
+};
+use sqlsq::testkit::{check, gens};
+
+const CASES: usize = 40;
+
+fn decomp(data: &[f64]) -> (UniqueDecomp, VBasis) {
+    let u = UniqueDecomp::new(data).unwrap();
+    let b = VBasis::new(&u.values);
+    (u, b)
+}
+
+#[test]
+fn prop_recover_unique_is_identity() {
+    check("recover∘unique = id", CASES, gens::vec_f64(1..=200, -50.0, 50.0), |xs| {
+        let u = UniqueDecomp::new(xs).map_err(|e| e.to_string())?;
+        let rec = u.recover(&u.values).map_err(|e| e.to_string())?;
+        if rec == *xs {
+            Ok(())
+        } else {
+            Err("reconstruction differs".into())
+        }
+    });
+}
+
+#[test]
+fn prop_structured_v_ops_match_dense() {
+    check("V ops ≡ dense", CASES, gens::vec_f64(2..=100, -10.0, 10.0), |xs| {
+        let (u, b) = decomp(xs);
+        let alpha: Vec<f64> = (0..u.m()).map(|i| ((i * 7 % 5) as f64) - 2.0).collect();
+        let fast = b.apply(&alpha);
+        let slow = b.dense().matvec(&alpha).unwrap();
+        for (f, s) in fast.iter().zip(&slow) {
+            if (f - s).abs() > 1e-8 {
+                return Err(format!("apply mismatch {f} vs {s}"));
+            }
+        }
+        let r: Vec<f64> = u.values.iter().map(|v| v.sin()).collect();
+        let fast_t = b.t_apply(&r);
+        let slow_t = b.dense().t_matvec(&r).unwrap();
+        for (f, s) in fast_t.iter().zip(&slow_t) {
+            if (f - s).abs() > 1e-8 {
+                return Err(format!("t_apply mismatch {f} vs {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cd_objective_never_increases() {
+    check("CD objective monotone", CASES, gens::vec_f64(2..=80, -5.0, 5.0), |xs| {
+        let (u, b) = decomp(xs);
+        let cfg = lasso::LassoConfig { lambda1: 0.1, max_epochs: 1, tol: 0.0, ..Default::default() };
+        let mut alpha: Option<Vec<f64>> = None;
+        let mut prev = f64::INFINITY;
+        for _ in 0..5 {
+            let sol = lasso::solve(&b, &u.values, &cfg, alpha.as_deref())
+                .map_err(|e| e.to_string())?;
+            if sol.objective > prev + 1e-9 {
+                return Err(format!("objective rose {prev} -> {}", sol.objective));
+            }
+            prev = sol.objective;
+            alpha = Some(sol.alpha);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refit_never_increases_loss() {
+    check("refit ≤ raw l1 loss", CASES, gens::vec_clustered(4..=120, 5), |xs| {
+        let (u, b) = decomp(xs);
+        let cfg = lasso::LassoConfig { lambda1: 0.3, ..Default::default() };
+        let sol = lasso::solve(&b, &u.values, &cfg, None).map_err(|e| e.to_string())?;
+        let support = sol.support();
+        if support.is_empty() {
+            return Ok(());
+        }
+        let raw = l2_loss(&b.apply(&sol.alpha), &u.values);
+        let re = refit::refit_fast(&b, &u.values, &support, None).map_err(|e| e.to_string())?;
+        let refit_loss = l2_loss(&re.reconstruction, &u.values);
+        if refit_loss <= raw + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("refit {refit_loss} > raw {raw}"))
+        }
+    });
+}
+
+#[test]
+fn prop_count_methods_respect_target() {
+    check(
+        "count methods ≤ target",
+        CASES,
+        gens::vec_with_target(2..=150, 12),
+        |(xs, t)| {
+            for method in [
+                QuantMethod::KMeans,
+                QuantMethod::ClusterLs,
+                QuantMethod::KMeansExact,
+                QuantMethod::Gmm,
+                QuantMethod::L0,
+                QuantMethod::IterativeL1,
+            ] {
+                let opts = QuantOptions {
+                    target_values: *t,
+                    lambda1: 1e-3,
+                    ..Default::default()
+                };
+                let out = quant::quantize(xs, method, &opts).map_err(|e| e.to_string())?;
+                if out.distinct_values() > *t {
+                    return Err(format!(
+                        "{} produced {} > target {t}",
+                        method.id(),
+                        out.distinct_values()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantized_distinct_never_exceeds_input() {
+    check(
+        "output distinct ≤ input distinct",
+        CASES,
+        gens::vec_clustered(2..=100, 4),
+        |xs| {
+            let m_in = distinct_count_exact(xs);
+            for method in [QuantMethod::L1, QuantMethod::L1LeastSquare, QuantMethod::KMeans] {
+                let opts = QuantOptions { lambda1: 0.05, target_values: 6, ..Default::default() };
+                let out = quant::quantize(xs, method, &opts).map_err(|e| e.to_string())?;
+                if out.distinct_values() > m_in {
+                    return Err(format!(
+                        "{}: {} distinct out of {m_in} in",
+                        method.id(),
+                        out.distinct_values()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_equal_inputs_map_to_equal_outputs() {
+    check("ties preserved", CASES, gens::vec_clustered(2..=60, 3), |xs| {
+        // Duplicate the vector so every value has multiplicity ≥ 2.
+        let mut doubled = xs.clone();
+        doubled.extend_from_slice(xs);
+        let opts = QuantOptions { target_values: 4, lambda1: 0.1, ..Default::default() };
+        for method in [QuantMethod::KMeans, QuantMethod::L1LeastSquare, QuantMethod::ClusterLs] {
+            let out = quant::quantize(&doubled, method, &opts).map_err(|e| e.to_string())?;
+            let n = xs.len();
+            for i in 0..n {
+                if out.values[i] != out.values[i + n] {
+                    return Err(format!("{}: tie broken at {i}", method.id()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cluster_ls_beats_unweighted_kmeans_on_unique_loss() {
+    // Algorithm 3 dominance (paper §3.5): LS-optimal values for the chosen
+    // partition can only match or beat the same partition with centroid
+    // values, measured on ŵ.
+    check(
+        "cluster_ls ≤ kmeans (ŵ loss)",
+        CASES,
+        gens::vec_clustered(6..=120, 6),
+        |xs| {
+            let (u, b) = decomp(xs);
+            let km_cfg = sqlsq::cluster::kmeans::KMeansConfig { k: 5, seed: 1, ..Default::default() };
+            let cls = quant::cluster_ls::solve_cluster_ls(
+                &b,
+                &u.values,
+                None,
+                &quant::cluster_ls::ClusterLsConfig {
+                    l: 5,
+                    kmeans: km_cfg.clone(),
+                    ..Default::default()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let (km_rec, _, _) =
+                quant::cluster_ls::kmeans_quantize_levels(&b, None, &km_cfg)
+                    .map_err(|e| e.to_string())?;
+            let ls = l2_loss(&cls.reconstruction, &u.values);
+            let km = l2_loss(&km_rec, &u.values);
+            if ls <= km + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("cluster_ls {ls} > kmeans {km}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_clamp_forces_range() {
+    check("clamp ⇒ in range", CASES, gens::vec_f64(1..=80, -3.0, 3.0), |xs| {
+        let opts = QuantOptions {
+            target_values: 5,
+            lambda1: 0.2,
+            clamp: Some((-1.0, 1.0)),
+            ..Default::default()
+        };
+        for method in [QuantMethod::KMeans, QuantMethod::L1, QuantMethod::Gmm] {
+            let out = quant::quantize(xs, method, &opts).map_err(|e| e.to_string())?;
+            if let Some(bad) = out.values.iter().find(|&&v| !(-1.0..=1.0).contains(&v)) {
+                return Err(format!("{}: value {bad} escaped the clamp", method.id()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_l2_loss_reported_matches_recomputation() {
+    check("reported loss is correct", CASES, gens::vec_f64(1..=100, 0.0, 10.0), |xs| {
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        let out = quant::quantize(xs, QuantMethod::KMeans, &opts).map_err(|e| e.to_string())?;
+        let recomputed = l2_loss(xs, &out.values);
+        if (recomputed - out.l2_loss).abs() < 1e-9 * (1.0 + recomputed) {
+            Ok(())
+        } else {
+            Err(format!("loss {} vs recomputed {recomputed}", out.l2_loss))
+        }
+    });
+}
