@@ -1,0 +1,79 @@
+//! Staged-pipeline demo: prepare a 10k-element vector once, then sweep a
+//! 16-point λ grid with warm starts — versus 16 independent one-shot
+//! `quantize` calls that redo the prepare stage every time.
+//!
+//! ```bash
+//! cargo run --release --example lambda_sweep
+//! ```
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::eval::workloads::lambda_grid;
+use sqlsq::quant::{self, PreparedInput, QuantMethod, QuantOptions};
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 10k values quantized to a 512-level raster so repeats occur — the
+    // NN-weight shape the batch/sweep API is built for.
+    let mut rng = Pcg32::seeded(3);
+    let data: Vec<f64> =
+        (0..10_000).map(|_| (rng.uniform(0.0, 1.0) * 512.0).round() / 512.0).collect();
+    let lambdas = lambda_grid(1e-4, 1e-1, 16)?;
+    let opts = QuantOptions::default();
+    let method = QuantMethod::L1LeastSquare;
+
+    // --- one-shot baseline: prepare + solve per λ -----------------------
+    let t0 = Instant::now();
+    let mut one_shot = Vec::new();
+    for &lambda in &lambdas {
+        one_shot.push(quant::quantize(
+            &data,
+            method,
+            &QuantOptions { lambda1: lambda, ..opts.clone() },
+        )?);
+    }
+    let t_one_shot = t0.elapsed();
+
+    // --- staged pipeline: prepare once, warm-started sweep --------------
+    let t1 = Instant::now();
+    let prep = PreparedInput::new(&data)?;
+    let swept = quant::quantize_sweep(&prep, method, &lambdas, &opts)?;
+    let t_sweep = t1.elapsed();
+
+    println!(
+        "{:>12} {:>10} {:>14} | {:>10} {:>14}",
+        "lambda1", "1shot lvl", "1shot loss", "sweep lvl", "sweep loss"
+    );
+    for ((a, b), &lambda) in one_shot.iter().zip(&swept).zip(&lambdas) {
+        println!(
+            "{lambda:>12.4e} {:>10} {:>14.6e} | {:>10} {:>14.6e}",
+            a.distinct_values(),
+            a.l2_loss,
+            b.distinct_values(),
+            b.l2_loss
+        );
+    }
+    println!("\n16 one-shot calls : {t_one_shot:?}");
+    println!("prepared sweep    : {t_sweep:?}");
+    println!(
+        "speedup           : {:.2}x",
+        t_one_shot.as_secs_f64() / t_sweep.as_secs_f64().max(1e-12)
+    );
+
+    // --- batch API over many vectors ------------------------------------
+    let inputs: Vec<Vec<f64>> = (0..16)
+        .map(|i| {
+            let mut r = Pcg32::seeded(100 + i);
+            (0..2000).map(|_| (r.uniform(0.0, 1.0) * 256.0).round() / 256.0).collect()
+        })
+        .collect();
+    let t2 = Instant::now();
+    let batch_opts = QuantOptions { target_values: 16, ..Default::default() };
+    let batch = quant::quantize_batch(&inputs, QuantMethod::ClusterLs, &batch_opts);
+    let ok = batch.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "\nbatch of {}       : {ok} ok in {:?} (scoped-thread fan-out)",
+        inputs.len(),
+        t2.elapsed()
+    );
+    Ok(())
+}

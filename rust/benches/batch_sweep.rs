@@ -1,0 +1,96 @@
+//! §Perf: one-shot vs staged λ-sweep throughput (the ISSUE-1 acceptance
+//! bench). Compares 16 independent `quantize` calls on a 10k-element
+//! vector against one `PreparedInput` + a warm-started 16-point
+//! `quantize_sweep`, and `quantize_batch` against a serial loop. Emits a
+//! `BENCH_batch_sweep.json` baseline (median seconds + speedup) for the
+//! perf trajectory.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::data::rng::Pcg32;
+use sqlsq::eval::workloads::lambda_grid;
+use sqlsq::jsonio::Json;
+use sqlsq::quant::{self, PreparedInput, QuantMethod, QuantOptions};
+
+fn raster_vector(n: usize, levels: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (rng.uniform(0.0, 1.0) * levels).round() / levels).collect()
+}
+
+fn main() {
+    let data = raster_vector(10_000, 768.0, 11);
+    let lambdas = lambda_grid(1e-4, 1e-1, 16).unwrap();
+    let opts = QuantOptions::default();
+    let method = QuantMethod::L1LeastSquare;
+
+    let mut suite = Suite::with_config("Batch sweep", active_config());
+
+    let one_shot_s = suite
+        .case("one_shot_x16/n=10k", || {
+            for &lambda in &lambdas {
+                black_box(
+                    quant::quantize(
+                        &data,
+                        method,
+                        &QuantOptions { lambda1: lambda, ..opts.clone() },
+                    )
+                    .unwrap(),
+                );
+            }
+        })
+        .median;
+
+    let sweep_s = suite
+        .case("prepared_warm_sweep_x16/n=10k", || {
+            let prep = PreparedInput::new(&data).unwrap();
+            black_box(quant::quantize_sweep(&prep, method, &lambdas, &opts).unwrap());
+        })
+        .median;
+
+    // Cold sweep isolates the prepare-amortization share of the win.
+    let cold_sweep_s = suite
+        .case("prepared_cold_sweep_x16/n=10k", || {
+            let prep = PreparedInput::new(&data).unwrap();
+            black_box(
+                quant::quantize_sweep_with(&prep, method, &lambdas, &opts, false).unwrap(),
+            );
+        })
+        .median;
+
+    // Batch fan-out vs a serial loop over 16 independent vectors.
+    let inputs: Vec<Vec<f64>> = (0..16).map(|i| raster_vector(2000, 256.0, 100 + i)).collect();
+    let batch_opts = QuantOptions { target_values: 16, ..Default::default() };
+    let serial_s = suite
+        .case("serial_loop_x16/n=2k/cluster_ls", || {
+            for w in &inputs {
+                black_box(quant::quantize(w, QuantMethod::ClusterLs, &batch_opts).unwrap());
+            }
+        })
+        .median;
+    let batch_s = suite
+        .case("quantize_batch_x16/n=2k/cluster_ls", || {
+            black_box(quant::quantize_batch(&inputs, QuantMethod::ClusterLs, &batch_opts));
+        })
+        .median;
+
+    let sweep_speedup = one_shot_s / sweep_s.max(1e-12);
+    let batch_speedup = serial_s / batch_s.max(1e-12);
+    println!("\nsweep speedup (one-shot / warm sweep)  : {sweep_speedup:.2}x");
+    println!("batch speedup (serial / scoped fan-out): {batch_speedup:.2}x");
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("batch_sweep".into())),
+        ("n", Json::Num(10_000.0)),
+        ("lambda_points", Json::Num(lambdas.len() as f64)),
+        ("one_shot_median_s", Json::Num(one_shot_s)),
+        ("warm_sweep_median_s", Json::Num(sweep_s)),
+        ("cold_sweep_median_s", Json::Num(cold_sweep_s)),
+        ("sweep_speedup", Json::Num(sweep_speedup)),
+        ("batch_serial_median_s", Json::Num(serial_s)),
+        ("batch_parallel_median_s", Json::Num(batch_s)),
+        ("batch_speedup", Json::Num(batch_speedup)),
+    ]);
+    std::fs::write("BENCH_batch_sweep.json", json.to_pretty()).expect("write baseline json");
+    println!("[written BENCH_batch_sweep.json]");
+
+    suite.write_csv(std::path::Path::new("reports")).ok();
+}

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! sqlsq quantize  --method l1_ls --values 8 [--lambda1 x] [--input f | --demo]
+//! sqlsq sweep     --method l1_ls [--steps 16] [--lambda-min 1e-4] [--lambda-max 1e-1]
 //! sqlsq train     [--cache path]
 //! sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
 //! sqlsq serve     --jobs 200 [--engine native|runtime|auto] [--workers N]
@@ -79,6 +80,8 @@ sqlsq — Scalar Quantization as Sparse Least Square Optimization (full-system r
 USAGE:
   sqlsq quantize  --method <id> [--values K] [--lambda1 X] [--lambda2 Y]
                   [--input FILE | --demo] [--clamp lo,hi] [--seed N]
+  sqlsq sweep     --method <id> [--steps N] [--lambda-min X] [--lambda-max Y]
+                  [--values K] [--cold] [--input FILE | --demo]
   sqlsq train     [--cache PATH]
   sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
                   [--report-dir DIR]
@@ -88,7 +91,7 @@ USAGE:
   sqlsq version | help
 
 METHODS: l1, l1_ls, l1_l2, l0, iter_l1, cluster_ls, kmeans, kmeans_exact,
-         gmm, data_transform";
+         gmm, data_transform, tv_exact, agglom, fcm";
 
 /// CLI entry (returns the process exit code).
 pub fn run() -> i32 {
@@ -115,6 +118,7 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
             Ok(())
         }
         "quantize" => cmd_quantize(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
@@ -187,6 +191,54 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         std::fs::write(path, text)?;
         println!("wrote             : {path}");
     }
+    Ok(())
+}
+
+/// λ sweep through the staged pipeline: prepare once, solve per grid
+/// point with warm starts (pass `--cold` for independent cold solves).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let method_id = args.flag("method").unwrap_or("l1_ls");
+    let method = QuantMethod::from_id(method_id)
+        .ok_or_else(|| Error::Config(format!("unknown method '{method_id}'")))?;
+    let data = load_input(args)?;
+    let steps = args.flag_usize("steps", 16)?;
+    let lo = args.flag_f64("lambda-min", 1e-4)?;
+    let hi = args.flag_f64("lambda-max", 1e-1)?;
+    let warm = args.flag("cold").is_none();
+    let lambdas = workloads::lambda_grid(lo, hi, steps)?;
+    let opts = QuantOptions {
+        lambda2: args.flag_f64("lambda2", 0.0)?,
+        target_values: args.flag_usize("values", 16)?,
+        seed: args.flag_usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let prep = quant::PreparedInput::new(&data)?;
+    let t_prepare = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let outs = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, warm)?;
+    let t_solve = t1.elapsed();
+
+    println!(
+        "method {} over {} λ points ({} start mode), n={} m={}",
+        method.id(),
+        lambdas.len(),
+        if warm { "warm" } else { "cold" },
+        prep.len(),
+        prep.m()
+    );
+    println!("{:>12} {:>9} {:>14} {:>11}", "lambda1", "distinct", "l2_loss", "iterations");
+    for (out, &lambda) in outs.iter().zip(&lambdas) {
+        println!(
+            "{lambda:>12.4e} {:>9} {:>14.6e} {:>11}",
+            out.distinct_values(),
+            out.l2_loss,
+            out.diag.iterations
+        );
+    }
+    println!("prepare time      : {t_prepare:?} (once, amortized over the grid)");
+    println!("solve time        : {t_solve:?} ({} solves)", outs.len());
     Ok(())
 }
 
@@ -364,6 +416,22 @@ mod tests {
     #[test]
     fn quantize_rejects_bad_method() {
         assert!(dispatch(&s(&["quantize", "--method", "nope"])).is_err());
+    }
+
+    #[test]
+    fn sweep_demo_runs_warm_and_cold() {
+        dispatch(&s(&["sweep", "--method", "l1_ls", "--steps", "4"])).unwrap();
+        dispatch(&s(&[
+            "sweep", "--method", "l1", "--steps", "3", "--cold", "--lambda-min", "1e-3",
+            "--lambda-max", "1e-1",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_bad_grid() {
+        assert!(dispatch(&s(&["sweep", "--method", "l1", "--steps", "0"])).is_err());
+        assert!(dispatch(&s(&["sweep", "--method", "nope"])).is_err());
     }
 
     #[test]

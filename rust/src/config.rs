@@ -55,6 +55,9 @@ pub struct Config {
     pub queue_capacity: usize,
     /// Max jobs per batch drained at once.
     pub max_batch: usize,
+    /// Threads a worker fans one drained batch across (1 = serial; each
+    /// worker hands chunks of its batch to scoped helper threads).
+    pub batch_fanout: usize,
     /// Max microseconds the batcher waits to fill a batch.
     pub batch_wait_us: u64,
     /// Artifact directory for the PJRT runtime.
@@ -69,11 +72,17 @@ pub struct Config {
 
 impl Default for Config {
     fn default() -> Self {
+        let cores = std::thread::available_parallelism().map_or(4, |n| n.get());
+        let workers = cores.min(8);
         Config {
-            workers: std::thread::available_parallelism().map_or(4, |n| n.get().min(8)),
+            workers,
             runtime_lanes: 2,
             queue_capacity: 1024,
             max_batch: 32,
+            // Spare cores beyond the worker pool, so a fully busy pool
+            // never oversubscribes: 1 (serial) on hosts where workers
+            // already cover every core, up to 4 on wide machines.
+            batch_fanout: (cores / workers).clamp(1, 4),
             batch_wait_us: 200,
             artifacts_dir: PathBuf::from("artifacts"),
             engine: Engine::Native,
@@ -136,6 +145,9 @@ impl Config {
             "max_batch" => {
                 self.max_batch = parse_usize(value)?.max(1);
             }
+            "batch_fanout" => {
+                self.batch_fanout = parse_usize(value)?.max(1);
+            }
             "batch_wait_us" => {
                 self.batch_wait_us = parse_usize(value)? as u64;
             }
@@ -165,6 +177,7 @@ impl Config {
             "runtime_lanes",
             "queue_capacity",
             "max_batch",
+            "batch_fanout",
             "batch_wait_us",
             "artifacts_dir",
             "report_dir",
@@ -217,6 +230,15 @@ mod tests {
         assert!(Config::parse_str("workers = 0").is_err());
         assert!(Config::parse_str("nonsense = 1").is_err());
         assert!(Engine::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn batch_fanout_parse_and_floor() {
+        let c = Config::parse_str("batch_fanout = 6").unwrap();
+        assert_eq!(c.batch_fanout, 6);
+        let c0 = Config::parse_str("batch_fanout = 0").unwrap();
+        assert_eq!(c0.batch_fanout, 1, "floored to 1");
+        assert!(Config::default().batch_fanout >= 1);
     }
 
     #[test]

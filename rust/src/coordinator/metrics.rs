@@ -18,6 +18,9 @@ pub struct Metrics {
     batch_jobs: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    stage_prepare_ns: AtomicU64,
+    stage_solve_ns: AtomicU64,
+    stage_samples: AtomicU64,
 }
 
 /// Immutable snapshot for reporting.
@@ -47,6 +50,12 @@ pub struct Snapshot {
     pub p95_us: u64,
     /// p99.
     pub p99_us: u64,
+    /// Jobs with recorded per-stage (prepare/solve) timings.
+    pub stage_samples: u64,
+    /// Mean prepare-stage time (µs) across those jobs.
+    pub mean_prepare_us: f64,
+    /// Mean solve-stage time (µs) across those jobs.
+    pub mean_solve_us: f64,
 }
 
 impl Metrics {
@@ -69,6 +78,15 @@ impl Metrics {
     pub fn on_batch(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_jobs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record per-stage pipeline timings (prepare vs solve) for one job.
+    pub fn on_stage(&self, prepare: Duration, solve: Duration) {
+        let p = prepare.as_nanos().min(u64::MAX as u128) as u64;
+        let s = solve.as_nanos().min(u64::MAX as u128) as u64;
+        self.stage_prepare_ns.fetch_add(p, Ordering::Relaxed);
+        self.stage_solve_ns.fetch_add(s, Ordering::Relaxed);
+        self.stage_samples.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Count a completion with its latency and serving engine.
@@ -115,6 +133,14 @@ impl Metrics {
         }
         let batches = self.batches.load(Ordering::Relaxed);
         let batch_jobs = self.batch_jobs.load(Ordering::Relaxed);
+        let stage_samples = self.stage_samples.load(Ordering::Relaxed);
+        let stage_mean_us = |total_ns: &AtomicU64| {
+            if stage_samples > 0 {
+                total_ns.load(Ordering::Relaxed) as f64 / stage_samples as f64 / 1000.0
+            } else {
+                0.0
+            }
+        };
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -132,6 +158,9 @@ impl Metrics {
             p50_us: self.percentile(&counts, total, 0.50),
             p95_us: self.percentile(&counts, total, 0.95),
             p99_us: self.percentile(&counts, total, 0.99),
+            stage_samples,
+            mean_prepare_us: stage_mean_us(&self.stage_prepare_ns),
+            mean_solve_us: stage_mean_us(&self.stage_solve_ns),
         }
     }
 }
@@ -141,7 +170,8 @@ impl Snapshot {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} rejected={} native={} runtime={} \
-             batches={} mean_batch={:.1} lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{}",
+             batches={} mean_batch={:.1} lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{} \
+             stages(prep/solve mean µs)={:.1}/{:.1}",
             self.submitted,
             self.completed,
             self.failed,
@@ -153,7 +183,9 @@ impl Snapshot {
             self.mean_latency_us,
             self.p50_us,
             self.p95_us,
-            self.p99_us
+            self.p99_us,
+            self.mean_prepare_us,
+            self.mean_solve_us
         )
     }
 }
@@ -181,6 +213,18 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert!((s.mean_batch - 2.0).abs() < 1e-12);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_timings_average() {
+        let m = Metrics::new();
+        m.on_stage(Duration::from_micros(10), Duration::from_micros(90));
+        m.on_stage(Duration::from_micros(30), Duration::from_micros(110));
+        let s = m.snapshot();
+        assert_eq!(s.stage_samples, 2);
+        assert!((s.mean_prepare_us - 20.0).abs() < 1e-9);
+        assert!((s.mean_solve_us - 100.0).abs() < 1e-9);
+        assert!(s.summary().contains("stages("));
     }
 
     #[test]

@@ -140,6 +140,17 @@ impl Router {
     ) -> Result<QuantOutput> {
         quant::quantize(data, method, opts)
     }
+
+    /// Serve a job on the native engines, reporting per-stage
+    /// (prepare/solve) wall times for the metrics surface.
+    pub fn dispatch_native_timed(
+        &self,
+        data: &[f64],
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) -> Result<(QuantOutput, quant::StageTimings)> {
+        quant::quantize_timed(data, method, opts)
+    }
 }
 
 /// Runtime-lane dispatch (called only from the lane thread that owns the

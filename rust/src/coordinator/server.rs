@@ -43,7 +43,12 @@ pub struct Coordinator {
     cfg: Config,
 }
 
-fn finish(metrics: &Metrics, job: Job, outcome: Result<crate::quant::QuantOutput>, served_by: ServedBy) {
+fn finish(
+    metrics: &Metrics,
+    job: Job,
+    outcome: Result<crate::quant::QuantOutput>,
+    served_by: ServedBy,
+) {
     let latency = job.submitted.elapsed();
     let outcome = outcome.map_err(|e| e.to_string());
     metrics.on_complete(outcome.is_ok(), latency, served_by == ServedBy::Runtime);
@@ -51,12 +56,54 @@ fn finish(metrics: &Metrics, job: Job, outcome: Result<crate::quant::QuantOutput
     let _ = job.respond.send(JobResult { id: job.id, outcome, latency, served_by });
 }
 
-fn serve_batch_native(router: &Router, metrics: &Metrics, batch: Vec<Job>) {
+/// Serve one job natively, recording prepare/solve stage timings.
+fn serve_one_native(router: &Router, metrics: &Metrics, job: Job) {
+    let outcome = match router.dispatch_native_timed(&job.data, job.method, &job.opts) {
+        Ok((out, t)) => {
+            metrics.on_stage(t.prepare, t.solve);
+            Ok(out)
+        }
+        Err(e) => Err(e),
+    };
+    finish(metrics, job, outcome, ServedBy::Native);
+}
+
+/// Serve a drained batch natively, fanning the jobs across up to `fanout`
+/// scoped threads (chunked hand-off). Jobs are independent — each owns its
+/// response channel — so intra-batch completion order does not matter.
+fn serve_batch_native(router: &Router, metrics: &Metrics, mut batch: Vec<Job>, fanout: usize) {
     metrics.on_batch(batch.len());
-    for job in batch {
-        let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
-        finish(metrics, job, outcome, ServedBy::Native);
+    let lanes = fanout.max(1).min(batch.len().max(1));
+    if lanes <= 1 {
+        for job in batch.drain(..) {
+            serve_one_native(router, metrics, job);
+        }
+        return;
     }
+    let chunk = batch.len().div_ceil(lanes);
+    let mut chunks: Vec<Vec<Job>> = Vec::with_capacity(lanes);
+    while !batch.is_empty() {
+        let take = chunk.min(batch.len());
+        chunks.push(batch.drain(..take).collect());
+    }
+    std::thread::scope(|s| {
+        let mut it = chunks.into_iter();
+        // The draining worker serves the first chunk itself; the rest are
+        // handed off to scoped helper threads.
+        let local = it.next();
+        for handed_off in it {
+            s.spawn(move || {
+                for job in handed_off {
+                    serve_one_native(router, metrics, job);
+                }
+            });
+        }
+        if let Some(own) = local {
+            for job in own {
+                serve_one_native(router, metrics, job);
+            }
+        }
+    });
 }
 
 /// Runtime-lane batch service: the lane thread owns the executor (PJRT
@@ -103,6 +150,7 @@ impl Coordinator {
             let r = Arc::clone(&router);
             let m = Arc::clone(&metrics);
             let max_batch = cfg.max_batch;
+            let fanout = cfg.batch_fanout;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sqlsq-worker-{wi}"))
@@ -110,7 +158,7 @@ impl Coordinator {
                         while let Some(batch) =
                             q.pop_batch(max_batch, Duration::from_millis(50), batch_wait)
                         {
-                            serve_batch_native(&r, &m, batch);
+                            serve_batch_native(&r, &m, batch, fanout);
                         }
                     })
                     .expect("spawn worker"),
@@ -408,6 +456,38 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().is_ok());
         }
+    }
+
+    #[test]
+    fn batch_fanout_parallel_results_match_direct_calls() {
+        // One worker + wide batches + fan-out 4 forces the parallel path.
+        let cfg = Config {
+            workers: 1,
+            queue_capacity: 128,
+            max_batch: 16,
+            batch_wait_us: 3000,
+            batch_fanout: 4,
+            engine: Engine::Native,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg).unwrap();
+        let mut jobs = Vec::new();
+        for i in 0..32u64 {
+            let data = sample(200 + i);
+            let opts = QuantOptions { target_values: 4, seed: i, ..Default::default() };
+            let (_, rx) = c.submit(data.clone(), QuantMethod::KMeans, opts.clone()).unwrap();
+            jobs.push((data, opts, rx));
+        }
+        for (data, opts, rx) in jobs {
+            let got = rx.recv().unwrap().outcome.unwrap();
+            let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+            assert_eq!(got.values, direct.values, "fan-out changed a result");
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 32);
+        // Every native job records prepare/solve stage timings.
+        assert_eq!(snap.stage_samples, 32);
+        assert!(snap.mean_prepare_us >= 0.0 && snap.mean_solve_us >= 0.0);
     }
 
     #[test]

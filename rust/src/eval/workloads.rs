@@ -7,7 +7,7 @@ use crate::data::rng::Pcg32;
 use crate::data::synth_digits::{self, DigitDataset};
 use crate::nn::mlp::Mlp;
 use crate::nn::train::{self, TrainConfig};
-use crate::Result;
+use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 
 /// Sizes for the §4.1 corpus. Chosen so training takes ~tens of seconds
@@ -49,11 +49,15 @@ pub fn nn_workload(cache: Option<&Path>) -> Result<NnWorkload> {
         _ => {
             eprintln!("training MLP ({} images, arch 784-256-128-64-10)...", TRAIN_N);
             let mut m = Mlp::paper_arch(7);
-            let report = train::train(
-                &mut m,
-                &train_ds,
-                &TrainConfig { epochs: 14, lr: 0.08, momentum: 0.9, batch: 64, seed: 1, log_every: 0 },
-            )?;
+            let cfg = TrainConfig {
+                epochs: 14,
+                lr: 0.08,
+                momentum: 0.9,
+                batch: 64,
+                seed: 1,
+                log_every: 0,
+            };
+            let report = train::train(&mut m, &train_ds, &cfg)?;
             eprintln!(
                 "trained: final loss {:.4}, train acc {:.4}",
                 report.final_loss, report.train_accuracy
@@ -86,6 +90,35 @@ pub fn digit_image() -> Vec<f64> {
     synth_digits::canonical_digit(5).pixels
 }
 
+/// Log-spaced λ grid for sweep workloads (CLI `sweep`, the batch-sweep
+/// bench, figure harnesses): `n` points from `min` to `max` inclusive.
+pub fn lambda_grid(min: f64, max: f64, n: usize) -> Result<Vec<f64>> {
+    if min <= 0.0 || !min.is_finite() || !max.is_finite() {
+        return Err(Error::InvalidParam(format!(
+            "lambda_grid: bounds must be finite and positive (min={min}, max={max})"
+        )));
+    }
+    if max < min {
+        return Err(Error::InvalidParam(format!(
+            "lambda_grid: max {max} < min {min}"
+        )));
+    }
+    if n == 0 {
+        return Err(Error::InvalidParam("lambda_grid: n must be ≥ 1".into()));
+    }
+    if n == 1 {
+        return Ok(vec![min]);
+    }
+    let ratio = (max / min).powf(1.0 / (n - 1) as f64);
+    let mut grid = Vec::with_capacity(n);
+    let mut lambda = min;
+    for _ in 0..n {
+        grid.push(lambda);
+        lambda *= ratio;
+    }
+    Ok(grid)
+}
+
 /// The §4.3 synthetic datasets (500 samples each in [0, 100]).
 pub fn synth_datasets(seed: u64) -> Vec<(SynthKind, Vec<f64>)> {
     let params = SynthParams::default();
@@ -108,6 +141,26 @@ mod tests {
         assert_eq!(img.len(), 784);
         assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
         assert!(img.iter().any(|&v| v > 0.5));
+    }
+
+    #[test]
+    fn lambda_grid_is_log_spaced_and_inclusive() {
+        let g = lambda_grid(1e-4, 1e-1, 16).unwrap();
+        assert_eq!(g.len(), 16);
+        assert!((g[0] - 1e-4).abs() < 1e-12);
+        assert!((g[15] - 1e-1).abs() < 1e-6);
+        for pair in g.windows(2) {
+            assert!(pair[1] > pair[0]);
+        }
+        // Constant ratio between neighbours (log spacing).
+        let r0 = g[1] / g[0];
+        for pair in g.windows(2) {
+            assert!((pair[1] / pair[0] - r0).abs() < 1e-9);
+        }
+        assert_eq!(lambda_grid(1e-3, 1e-3, 1).unwrap(), vec![1e-3]);
+        assert!(lambda_grid(0.0, 1.0, 4).is_err());
+        assert!(lambda_grid(1.0, 0.5, 4).is_err());
+        assert!(lambda_grid(1e-3, 1e-1, 0).is_err());
     }
 
     #[test]

@@ -40,33 +40,57 @@ pub mod quant;
 pub mod runtime;
 pub mod testkit;
 
-/// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Library-wide error type. Display/Error are implemented by hand —
+/// thiserror (like every other external crate) is unavailable offline
+/// (DESIGN §2), and the build must be dependency-free.
+#[derive(Debug)]
 pub enum Error {
     /// Input vector was empty or otherwise unusable.
-    #[error("invalid input: {0}")]
     InvalidInput(String),
     /// An algorithm parameter was out of its valid domain.
-    #[error("invalid parameter: {0}")]
     InvalidParam(String),
     /// An iterative solver failed to converge within its budget.
-    #[error("no convergence: {0}")]
     NoConvergence(String),
     /// A linear system was singular / not positive definite.
-    #[error("linear algebra failure: {0}")]
     Linalg(String),
     /// PJRT / artifact runtime failure.
-    #[error("runtime failure: {0}")]
     Runtime(String),
     /// Coordinator failure (queue closed, worker panicked, ...).
-    #[error("coordinator failure: {0}")]
     Coordinator(String),
     /// Configuration / CLI parsing failure.
-    #[error("config error: {0}")]
     Config(String),
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
+            Error::NoConvergence(m) => write!(f, "no convergence: {m}"),
+            Error::Linalg(m) => write!(f, "linear algebra failure: {m}"),
+            Error::Runtime(m) => write!(f, "runtime failure: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator failure: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result alias.

@@ -69,6 +69,19 @@ pub fn solve_iterative(
     w: &[f64],
     cfg: &IterativeConfig,
 ) -> Result<IterativeSolution> {
+    solve_iterative_warm(basis, w, cfg, None)
+}
+
+/// Run Algorithm 2 with an optional warm start for the *first* inner CD
+/// solve (λ-sweep pipelines seed this with the previous grid point's α;
+/// later rounds warm-start from the refit as usual). `None` reproduces
+/// [`solve_iterative`] exactly.
+pub fn solve_iterative_warm(
+    basis: &VBasis,
+    w: &[f64],
+    cfg: &IterativeConfig,
+    warm_init: Option<&[f64]>,
+) -> Result<IterativeSolution> {
     if w.len() != basis.m() {
         return Err(Error::InvalidInput(format!(
             "iterative: basis dim {} vs target dim {}",
@@ -86,9 +99,19 @@ pub fn solve_iterative(
         return Err(Error::InvalidParam("iterative: accelerate must be ≥ 1".into()));
     }
 
+    if let Some(a) = warm_init {
+        if a.len() != basis.m() {
+            return Err(Error::InvalidInput(format!(
+                "iterative: warm start dim {} vs {}",
+                a.len(),
+                basis.m()
+            )));
+        }
+    }
+
     let mut lambda = cfg.lambda_start;
     let mut dlambda = cfg.lambda_start;
-    let mut warm: Option<Vec<f64>> = None;
+    let mut warm: Option<Vec<f64>> = warm_init.map(|a| a.to_vec());
     let mut epochs = 0usize;
     let mut steps = 0usize;
 
@@ -262,6 +285,24 @@ mod tests {
         for (a, b2) in sol.alpha.iter().zip(&re.alpha) {
             assert!((a - b2).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn warm_none_is_identical_to_plain() {
+        let (basis, v) = random_basis(48, 7);
+        let cfg = IterativeConfig { target_nnz: 6, ..Default::default() };
+        let plain = solve_iterative(&basis, &v, &cfg).unwrap();
+        let warm = solve_iterative_warm(&basis, &v, &cfg, None).unwrap();
+        assert_eq!(plain.alpha, warm.alpha);
+        assert_eq!(plain.steps, warm.steps);
+        assert_eq!(plain.epochs, warm.epochs);
+    }
+
+    #[test]
+    fn warm_start_rejects_bad_dim() {
+        let (basis, v) = random_basis(16, 8);
+        let cfg = IterativeConfig::default();
+        assert!(solve_iterative_warm(&basis, &v, &cfg, Some(&[1.0])).is_err());
     }
 
     #[test]

@@ -1,13 +1,33 @@
-//! The paper's quantization algorithms and the unified [`quantize`] API.
+//! The paper's quantization algorithms behind a staged two-stage pipeline.
 //!
-//! Pipeline shared by every method (paper §3.1–§3.2):
+//! Every method (paper §3.1–§3.2) factors into the same two stages:
 //!
-//! 1. `ŵ = unique(w)` — [`unique::UniqueDecomp`];
-//! 2. build the difference basis `V` — [`vmatrix::VBasis`];
-//! 3. run the method-specific solver;
-//! 4. recover the full-length vector by indexing;
-//! 5. optionally clamp with the hard sigmoid (eq 21) and compute the l2
-//!    information loss.
+//! 1. **Prepare** — `ŵ = unique(w)` ([`unique::UniqueDecomp`]), the
+//!    difference basis `V` ([`vmatrix::VBasis`]), multiplicity weights and
+//!    cached prefix/suffix sums. This is a full sort of the input and is
+//!    method-independent, so it is built once per vector as a
+//!    [`PreparedInput`] and reused across methods, λ grids and repeat
+//!    requests.
+//! 2. **Solve** — the method-specific solver, one [`QuantSolver`] impl per
+//!    [`QuantMethod`], resolved through the registration table in
+//!    [`pipeline`]. Solvers produce per-level values; full-length recovery
+//!    (indexing through the decomposition), the optional hard-sigmoid
+//!    clamp (eq 21) and the l2 information loss live in
+//!    [`PreparedInput::finish`].
+//!
+//! Entry points, from highest to lowest level:
+//!
+//! * [`quantize`] — the keep-alive one-shot wrapper (prepare + solve);
+//!   existing callers and the coordinator's native engine route here.
+//! * [`quantize_batch`] — many vectors, one method, fanned across scoped
+//!   threads; results are bitwise-identical to per-call [`quantize`].
+//! * [`quantize_sweep`] — a λ grid over ONE prepared input, amortizing the
+//!   prepare stage and warm-starting lasso/iterative solves along the
+//!   path; [`quantize_sweep_with`] exposes the cold (bitwise-reference)
+//!   variant.
+//! * [`quantize_prepared`] / [`quantize_timed`] — the raw staged calls;
+//!   `quantize_timed` reports per-stage wall times for the coordinator's
+//!   prepare-vs-solve metrics.
 
 pub mod cluster_ls;
 pub mod codebook;
@@ -16,6 +36,7 @@ pub mod iterative;
 pub mod l0;
 pub mod lasso;
 pub mod merge;
+pub mod pipeline;
 pub mod refit;
 pub mod tensor;
 pub mod tv_exact;
@@ -23,358 +44,20 @@ pub mod types;
 pub mod unique;
 pub mod vmatrix;
 
+pub use pipeline::{
+    quantize_batch, quantize_prepared, quantize_sweep, quantize_sweep_with, quantize_timed,
+    solver_for, PreparedInput, QuantSolver, StageTimings, SweepState,
+};
 pub use types::{QuantDiag, QuantMethod, QuantOptions, QuantOutput};
 
-use crate::cluster::data_transform::{data_transform_cluster, DataTransformConfig};
-use crate::cluster::gmm::{gmm_1d, GmmConfig};
-use crate::cluster::kmeans::{assign_sorted, KMeansConfig};
-use crate::cluster::kmeans_dp::kmeans_dp;
 use crate::Result;
-use unique::UniqueDecomp;
-use vmatrix::VBasis;
 
 /// Quantize `w` with the chosen method. This is the library's main entry
-/// point; the coordinator's native engine and the CLI both route here.
+/// point; the coordinator's native engine and the CLI both route here. It
+/// is a thin one-shot over the staged pipeline: prepare, then solve.
 pub fn quantize(w: &[f64], method: QuantMethod, opts: &QuantOptions) -> Result<QuantOutput> {
-    let u = UniqueDecomp::new(w)?;
-    let basis = VBasis::new(&u.values);
-    let counts = u.weights();
-
-    let (level_values, diag) = match method {
-        QuantMethod::L1 => run_l1(&basis, &u, opts, false)?,
-        QuantMethod::L1LeastSquare => run_l1(&basis, &u, opts, true)?,
-        QuantMethod::L1L2 => run_l1l2(&basis, &u, opts)?,
-        QuantMethod::L0 => run_l0(&basis, &u, opts)?,
-        QuantMethod::IterativeL1 => run_iterative(&basis, &u, opts)?,
-        QuantMethod::ClusterLs => run_cluster_ls(&basis, &u, opts)?,
-        QuantMethod::KMeans => run_kmeans(&basis, &counts, opts)?,
-        QuantMethod::Gmm => run_gmm(&basis, &counts, opts)?,
-        QuantMethod::DataTransform => run_data_transform(&basis, &counts, opts)?,
-        QuantMethod::KMeansExact => run_kmeans_exact(&basis, &counts, opts)?,
-        QuantMethod::TvExact => run_tv_exact(&basis, &u, opts)?,
-        QuantMethod::Agglomerative => run_agglomerative(&basis, &counts, opts)?,
-        QuantMethod::FuzzyCMeans => run_fcm(&basis, &counts, opts)?,
-    };
-
-    let full = u.recover(&level_values)?;
-    Ok(types::finalize(w, full, opts.clamp, diag))
-}
-
-fn lasso_cfg(opts: &QuantOptions) -> lasso::LassoConfig {
-    lasso::LassoConfig {
-        lambda1: opts.lambda1,
-        lambda2: 0.0,
-        max_epochs: opts.max_epochs,
-        tol: opts.tol,
-        ..Default::default()
-    }
-}
-
-fn run_l1(
-    basis: &VBasis,
-    u: &UniqueDecomp,
-    opts: &QuantOptions,
-    with_refit: bool,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let sol = lasso::solve(basis, &u.values, &lasso_cfg(opts), None)?;
-    let diag = QuantDiag {
-        iterations: sol.epochs,
-        converged: sol.converged,
-        lambda1: opts.lambda1,
-        nnz: sol.nnz(),
-        unstable: sol.unstable,
-        empty_cluster_events: 0,
-    };
-    if with_refit {
-        let support = sol.support();
-        let r = refit::refit_fast(basis, &u.values, &support, None)?;
-        Ok((r.reconstruction, diag))
-    } else {
-        Ok((basis.apply(&sol.alpha), diag))
-    }
-}
-
-fn run_l1l2(basis: &VBasis, u: &UniqueDecomp, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = lasso::LassoConfig { lambda2: opts.lambda2, ..lasso_cfg(opts) };
-    let sol = lasso::solve(basis, &u.values, &cfg, None)?;
-    let diag = QuantDiag {
-        iterations: sol.epochs,
-        converged: sol.converged,
-        lambda1: opts.lambda1,
-        nnz: sol.nnz(),
-        unstable: sol.unstable,
-        empty_cluster_events: 0,
-    };
-    // Fig 4 compares l1 vs l1+l2 without the LS refit; honor opts.refit
-    // for users who want Algorithm-1 style output.
-    if opts.refit {
-        let r = refit::refit_fast(basis, &u.values, &sol.support(), None)?;
-        Ok((r.reconstruction, diag))
-    } else {
-        Ok((basis.apply(&sol.alpha), diag))
-    }
-}
-
-fn run_l0(basis: &VBasis, u: &UniqueDecomp, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = l0::L0Config {
-        max_nnz: opts.target_values,
-        max_epochs: opts.max_epochs,
-        tol: opts.tol,
-        ..Default::default()
-    };
-    let sol = l0::solve_l0(basis, &u.values, &cfg)?;
-    let diag = QuantDiag {
-        iterations: sol.epochs,
-        converged: !sol.unstable,
-        lambda1: sol.lambda0,
-        nnz: sol.nnz,
-        unstable: sol.unstable,
-        empty_cluster_events: 0,
-    };
-    Ok((basis.apply(&sol.alpha), diag))
-}
-
-fn run_iterative(
-    basis: &VBasis,
-    u: &UniqueDecomp,
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = iterative::IterativeConfig {
-        target_nnz: opts.target_values,
-        lambda_start: opts.lambda1.max(1e-9),
-        max_steps: opts.max_lambda_steps,
-        cd: lasso_cfg(opts),
-        accelerate: 1.0,
-    };
-    let sol = iterative::solve_iterative(basis, &u.values, &cfg)?;
-    let diag = QuantDiag {
-        iterations: sol.epochs,
-        converged: sol.reached_target,
-        lambda1: sol.lambda1,
-        nnz: sol.nnz,
-        unstable: !sol.reached_target,
-        empty_cluster_events: 0,
-    };
-    let mut rec = basis.apply(&sol.alpha);
-    if !sol.reached_target {
-        // The λ path can jump past the requested count (paper: "might fail
-        // to optimize to exact l values"). Enforce the library's contract
-        // with a Ward merge of the surplus levels.
-        rec = merge::merge_to_target(&rec, None, opts.target_values);
-    }
-    Ok((rec, diag))
-}
-
-fn run_cluster_ls(
-    basis: &VBasis,
-    u: &UniqueDecomp,
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = cluster_ls::ClusterLsConfig {
-        l: opts.target_values,
-        kmeans: KMeansConfig {
-            k: opts.target_values,
-            restarts: opts.kmeans_restarts,
-            max_iters: opts.max_iters,
-            tol: 1e-10,
-            seed: opts.seed,
-            ..Default::default()
-        },
-        // Weighted: the paper's eq 19 is written over ŵ unweighted, but its
-        // experimental claim (Alg 3 ≥ k-means on the full-vector loss) only
-        // holds when multiplicities weight both the partition and the LS
-        // values; the paper-literal unweighted variant stays available via
-        // ClusterLsConfig. See EXPERIMENTS.md Fig 5 notes.
-        weighted: true,
-    };
-    let counts = u.weights();
-    let sol = cluster_ls::solve_cluster_ls(basis, &u.values, Some(&counts), &cfg)?;
-    let diag = QuantDiag {
-        iterations: sol.iterations,
-        converged: true,
-        lambda1: 0.0,
-        nnz: sol.levels.len(),
-        unstable: false,
-        empty_cluster_events: sol.empty_cluster_events,
-    };
-    Ok((sol.reconstruction, diag))
-}
-
-fn run_kmeans(
-    basis: &VBasis,
-    counts: &[f64],
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = KMeansConfig {
-        k: opts.target_values,
-        restarts: opts.kmeans_restarts,
-        max_iters: opts.max_iters,
-        tol: 1e-10,
-        seed: opts.seed,
-        ..Default::default()
-    };
-    let (rec, iters, empty) = cluster_ls::kmeans_quantize_levels(basis, Some(counts), &cfg)?;
-    let diag = QuantDiag {
-        iterations: iters,
-        converged: true,
-        lambda1: 0.0,
-        nnz: opts.target_values,
-        unstable: empty > 0,
-        empty_cluster_events: empty,
-    };
-    Ok((rec, diag))
-}
-
-fn run_kmeans_exact(
-    basis: &VBasis,
-    counts: &[f64],
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let r = kmeans_dp(basis.values(), Some(counts), opts.target_values)?;
-    let rec: Vec<f64> = basis
-        .values()
-        .iter()
-        .zip(&r.assignment)
-        .map(|(_, &a)| r.centroids[a])
-        .collect();
-    let diag = QuantDiag {
-        iterations: 1,
-        converged: true,
-        lambda1: 0.0,
-        nnz: r.centroids.len(),
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
-}
-
-fn run_tv_exact(
-    basis: &VBasis,
-    u: &UniqueDecomp,
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let rec = tv_exact::solve_tv_exact(basis, &u.values, opts.lambda1)?;
-    let nnz = {
-        // Count level jumps (α support) for diagnostics.
-        let mut prev = 0.0;
-        let mut c = 0usize;
-        for (&x, &d) in rec.iter().zip(basis.diffs()) {
-            if d != 0.0 && (x - prev).abs() > 1e-12 {
-                c += 1;
-            }
-            prev = x;
-        }
-        c
-    };
-    let diag = QuantDiag {
-        iterations: 1, // exact, single pass
-        converged: true,
-        lambda1: opts.lambda1,
-        nnz,
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
-}
-
-fn run_agglomerative(
-    basis: &VBasis,
-    counts: &[f64],
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let r = crate::cluster::agglomerative::agglomerative_1d(
-        basis.values(),
-        Some(counts),
-        opts.target_values,
-    )?;
-    let rec: Vec<f64> = basis
-        .values()
-        .iter()
-        .zip(&r.assignment)
-        .map(|(_, &a)| r.centroids[a])
-        .collect();
-    let diag = QuantDiag {
-        iterations: basis.m().saturating_sub(r.centroids.len()),
-        converged: true,
-        lambda1: 0.0,
-        nnz: r.centroids.len(),
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
-}
-
-fn run_fcm(
-    basis: &VBasis,
-    counts: &[f64],
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = crate::cluster::fuzzy_cmeans::FcmConfig {
-        k: opts.target_values,
-        max_iters: opts.max_iters,
-        seed: opts.seed,
-        ..Default::default()
-    };
-    let r = crate::cluster::fuzzy_cmeans::fuzzy_cmeans_1d(basis.values(), Some(counts), &cfg)?;
-    let rec: Vec<f64> = r.assignment.iter().map(|&a| r.centroids[a]).collect();
-    let diag = QuantDiag {
-        iterations: r.iterations,
-        converged: r.converged,
-        lambda1: 0.0,
-        nnz: r.centroids.len(),
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
-}
-
-fn run_gmm(basis: &VBasis, counts: &[f64], opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = GmmConfig {
-        k: opts.target_values,
-        max_iters: opts.max_iters,
-        tol: 1e-9,
-        seed: opts.seed,
-    };
-    let r = gmm_1d(basis.values(), Some(counts), &cfg)?;
-    let rec: Vec<f64> = r.assignment.iter().map(|&a| r.means[a]).collect();
-    let diag = QuantDiag {
-        iterations: r.iterations,
-        converged: r.converged,
-        lambda1: 0.0,
-        nnz: r.means.len(),
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
-}
-
-fn run_data_transform(
-    basis: &VBasis,
-    counts: &[f64],
-    opts: &QuantOptions,
-) -> Result<(Vec<f64>, QuantDiag)> {
-    let cfg = DataTransformConfig {
-        k: opts.target_values,
-        restarts: opts.kmeans_restarts,
-        max_iters: opts.max_iters,
-        seed: opts.seed,
-        ..Default::default()
-    };
-    let r = data_transform_cluster(basis.values(), Some(counts), &cfg)?;
-    let rec: Vec<f64> = basis
-        .values()
-        .iter()
-        .map(|&v| r.centroids[assign_sorted(v, &r.centroids)])
-        .collect();
-    let diag = QuantDiag {
-        iterations: r.iterations,
-        converged: true,
-        lambda1: 0.0,
-        nnz: r.centroids.len(),
-        unstable: false,
-        empty_cluster_events: 0,
-    };
-    Ok((rec, diag))
+    let prep = PreparedInput::new(w)?;
+    quantize_prepared(&prep, method, opts)
 }
 
 #[cfg(test)]

@@ -1,0 +1,931 @@
+//! The staged quantization pipeline: prepare once, solve many.
+//!
+//! Every method in the paper shares an expensive *prepare* stage — the
+//! unique decomposition `ŵ = unique(w)` (a full sort) plus the difference
+//! basis `V` — followed by a method-specific *solve* stage. The historical
+//! `quantize()` fused the two, rebuilding the decomposition on every call
+//! and dispatching through a 500-line `match`. This module splits them:
+//!
+//! * [`PreparedInput`] — built once per vector; owns the
+//!   [`UniqueDecomp`], the [`VBasis`], the multiplicity weights, and
+//!   cached prefix/suffix sums. The sums are part of the prepared-input
+//!   contract (O(1) segment statistics for weighted solvers and external
+//!   consumers); they cost two O(m) passes next to the O(n log n) sort.
+//! * [`QuantSolver`] — one trait impl per [`QuantMethod`], registered in a
+//!   method→solver table ([`solver_for`]); `QuantMethod::solver()`
+//!   resolves it. Replaces the thirteen `run_*` free functions.
+//! * [`quantize_prepared`] — one solve over a prepared input.
+//! * [`quantize_batch`] — many vectors, fanned across scoped threads.
+//! * [`quantize_sweep`] — a λ path over ONE prepared input, warm-starting
+//!   lasso/iterative solves from the previous λ's coefficients
+//!   ([`SweepState`]); [`quantize_sweep_with`] exposes the cold variant,
+//!   which is bitwise-identical to per-call [`quantize`](super::quantize).
+//! * [`quantize_timed`] — the coordinator's entry point, reporting
+//!   per-stage wall times ([`StageTimings`]) for the metrics surface.
+
+use super::types::{self, QuantDiag, QuantMethod, QuantOptions, QuantOutput};
+use super::unique::UniqueDecomp;
+use super::vmatrix::VBasis;
+use super::{cluster_ls, iterative, l0, lasso, merge, refit, tv_exact};
+use crate::cluster::data_transform::{data_transform_cluster, DataTransformConfig};
+use crate::cluster::gmm::{gmm_1d, GmmConfig};
+use crate::cluster::kmeans::{assign_sorted, KMeansConfig};
+use crate::cluster::kmeans_dp::kmeans_dp;
+use crate::linalg::stats::distinct_count_exact;
+use crate::Result;
+use std::time::{Duration, Instant};
+
+/// The prepare-stage product: everything a solver needs that depends only
+/// on the input vector, not on the method or its options.
+#[derive(Debug, Clone)]
+pub struct PreparedInput {
+    original: Vec<f64>,
+    unique: UniqueDecomp,
+    basis: VBasis,
+    /// Multiplicity of each unique value, as f64 (weighted LS variants).
+    weights: Vec<f64>,
+    /// `weight_suffix[j] = Σ_{i≥j} weights[i]` (m+1 entries, last 0).
+    weight_suffix: Vec<f64>,
+    /// `value_prefix[j] = Σ_{i<j} ŵ_i` (m+1 entries, first 0).
+    value_prefix: Vec<f64>,
+}
+
+impl PreparedInput {
+    /// Run the prepare stage on `w` (sort + decompose + basis + sums).
+    pub fn new(w: &[f64]) -> Result<PreparedInput> {
+        let unique = UniqueDecomp::new(w)?;
+        let basis = VBasis::new(&unique.values);
+        let weights = unique.weights();
+        let m = unique.m();
+        let mut weight_suffix = vec![0.0; m + 1];
+        for j in (0..m).rev() {
+            weight_suffix[j] = weight_suffix[j + 1] + weights[j];
+        }
+        let mut value_prefix = vec![0.0; m + 1];
+        for j in 0..m {
+            value_prefix[j + 1] = value_prefix[j] + unique.values[j];
+        }
+        Ok(PreparedInput {
+            original: w.to_vec(),
+            unique,
+            basis,
+            weights,
+            weight_suffix,
+            value_prefix,
+        })
+    }
+
+    /// The original (full-length) input vector.
+    pub fn original(&self) -> &[f64] {
+        &self.original
+    }
+
+    /// The unique decomposition.
+    pub fn unique(&self) -> &UniqueDecomp {
+        &self.unique
+    }
+
+    /// The difference basis over the unique values.
+    pub fn basis(&self) -> &VBasis {
+        &self.basis
+    }
+
+    /// Multiplicity weights (f64) per unique value.
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Cached suffix weight `Σ_{i≥j} counts[i]` in O(1).
+    pub fn weight_suffix(&self, j: usize) -> f64 {
+        self.weight_suffix[j]
+    }
+
+    /// Cached segment sum `Σ_{a≤i<b} ŵ_i` in O(1).
+    pub fn segment_sum(&self, a: usize, b: usize) -> f64 {
+        self.value_prefix[b] - self.value_prefix[a]
+    }
+
+    /// Unweighted mean of the unique values over `[a, b)` in O(1).
+    pub fn segment_mean(&self, a: usize, b: usize) -> f64 {
+        if b > a {
+            self.segment_sum(a, b) / (b - a) as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Number of distinct values `m`.
+    pub fn m(&self) -> usize {
+        self.unique.m()
+    }
+
+    /// Length of the original vector.
+    pub fn len(&self) -> usize {
+        self.original.len()
+    }
+
+    /// Always false after a successful [`PreparedInput::new`].
+    pub fn is_empty(&self) -> bool {
+        self.original.is_empty()
+    }
+
+    /// Recover the full-length vector from per-level values and finalize
+    /// (clamp + levels + loss bookkeeping).
+    pub fn finish(
+        &self,
+        level_values: &[f64],
+        clamp: Option<(f64, f64)>,
+        diag: QuantDiag,
+    ) -> Result<QuantOutput> {
+        let full = self.unique.recover(level_values)?;
+        Ok(types::finalize(&self.original, full, clamp, diag))
+    }
+}
+
+/// Reusable state carried along a λ sweep ([`quantize_sweep`]): solvers
+/// that can warm-start store their coefficients here between steps.
+#[derive(Debug, Default)]
+pub struct SweepState {
+    /// α from the previous step (lasso-family warm start).
+    pub warm_alpha: Option<Vec<f64>>,
+}
+
+/// The solve stage: one impl per [`QuantMethod`]. Solvers return the
+/// per-level values (length `m`) plus diagnostics; full-length recovery
+/// and finalization happen in [`PreparedInput::finish`].
+pub trait QuantSolver: Sync {
+    /// The method this solver implements (table registration key).
+    fn method(&self) -> QuantMethod;
+
+    /// Solve over a prepared input.
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)>;
+
+    /// One step of a λ path. Solvers that can reuse cross-step state
+    /// (lasso warm starts) override this; the default is stateless and
+    /// therefore bitwise-identical to [`QuantSolver::solve`].
+    fn solve_path_step(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        _state: &mut SweepState,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        self.solve(prep, opts)
+    }
+}
+
+/// Shared warm-start bookkeeping for path-capable solvers: feed the
+/// previous step's α in, store the new one back.
+fn step_with_warm<F>(state: &mut SweepState, solve: F) -> Result<(Vec<f64>, QuantDiag)>
+where
+    F: FnOnce(Option<&[f64]>) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)>,
+{
+    let (levels, diag, alpha) = solve(state.warm_alpha.as_deref())?;
+    state.warm_alpha = Some(alpha);
+    Ok((levels, diag))
+}
+
+fn lasso_cfg(opts: &QuantOptions) -> lasso::LassoConfig {
+    lasso::LassoConfig {
+        lambda1: opts.lambda1,
+        lambda2: 0.0,
+        max_epochs: opts.max_epochs,
+        tol: opts.tol,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lasso family (eq 6 / Algorithm 1 / eq 13)
+// ---------------------------------------------------------------------
+
+struct L1Solver {
+    with_refit: bool,
+}
+
+impl L1Solver {
+    fn solve_with(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        warm: Option<&[f64]>,
+    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        let basis = prep.basis();
+        let w = &prep.unique().values;
+        let sol = lasso::solve(basis, w, &lasso_cfg(opts), warm)?;
+        let diag = QuantDiag {
+            iterations: sol.epochs,
+            converged: sol.converged,
+            lambda1: opts.lambda1,
+            nnz: sol.nnz(),
+            unstable: sol.unstable,
+            empty_cluster_events: 0,
+        };
+        let levels = if self.with_refit {
+            let support = sol.support();
+            refit::refit_fast(basis, w, &support, None)?.reconstruction
+        } else {
+            basis.apply(&sol.alpha)
+        };
+        Ok((levels, diag, sol.alpha))
+    }
+}
+
+impl QuantSolver for L1Solver {
+    fn method(&self) -> QuantMethod {
+        if self.with_refit {
+            QuantMethod::L1LeastSquare
+        } else {
+            QuantMethod::L1
+        }
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let (levels, diag, _) = self.solve_with(prep, opts, None)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        step_with_warm(state, |warm| self.solve_with(prep, opts, warm))
+    }
+}
+
+struct L1L2Solver;
+
+impl L1L2Solver {
+    fn solve_with(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        warm: Option<&[f64]>,
+    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        let basis = prep.basis();
+        let w = &prep.unique().values;
+        let cfg = lasso::LassoConfig { lambda2: opts.lambda2, ..lasso_cfg(opts) };
+        let sol = lasso::solve(basis, w, &cfg, warm)?;
+        let diag = QuantDiag {
+            iterations: sol.epochs,
+            converged: sol.converged,
+            lambda1: opts.lambda1,
+            nnz: sol.nnz(),
+            unstable: sol.unstable,
+            empty_cluster_events: 0,
+        };
+        // Fig 4 compares l1 vs l1+l2 without the LS refit; honor opts.refit
+        // for users who want Algorithm-1 style output.
+        let levels = if opts.refit {
+            refit::refit_fast(basis, w, &sol.support(), None)?.reconstruction
+        } else {
+            basis.apply(&sol.alpha)
+        };
+        Ok((levels, diag, sol.alpha))
+    }
+}
+
+impl QuantSolver for L1L2Solver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::L1L2
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let (levels, diag, _) = self.solve_with(prep, opts, None)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        step_with_warm(state, |warm| self.solve_with(prep, opts, warm))
+    }
+}
+
+// ---------------------------------------------------------------------
+// l0 best-subset (eq 16)
+// ---------------------------------------------------------------------
+
+struct L0Solver;
+
+impl QuantSolver for L0Solver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::L0
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let cfg = l0::L0Config {
+            max_nnz: opts.target_values,
+            max_epochs: opts.max_epochs,
+            tol: opts.tol,
+            ..Default::default()
+        };
+        let sol = l0::solve_l0(basis, &prep.unique().values, &cfg)?;
+        let diag = QuantDiag {
+            iterations: sol.epochs,
+            converged: !sol.unstable,
+            lambda1: sol.lambda0,
+            nnz: sol.nnz,
+            unstable: sol.unstable,
+            empty_cluster_events: 0,
+        };
+        Ok((basis.apply(&sol.alpha), diag))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Iterative l1 (Algorithm 2)
+// ---------------------------------------------------------------------
+
+struct IterativeSolver;
+
+impl IterativeSolver {
+    fn solve_warm(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        warm: Option<&[f64]>,
+    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        let basis = prep.basis();
+        let cfg = iterative::IterativeConfig {
+            target_nnz: opts.target_values,
+            lambda_start: opts.lambda1.max(1e-9),
+            max_steps: opts.max_lambda_steps,
+            cd: lasso_cfg(opts),
+            accelerate: 1.0,
+        };
+        let sol = iterative::solve_iterative_warm(basis, &prep.unique().values, &cfg, warm)?;
+        let diag = QuantDiag {
+            iterations: sol.epochs,
+            converged: sol.reached_target,
+            lambda1: sol.lambda1,
+            nnz: sol.nnz,
+            unstable: !sol.reached_target,
+            empty_cluster_events: 0,
+        };
+        let mut rec = basis.apply(&sol.alpha);
+        if !sol.reached_target {
+            // The λ path can jump past the requested count (paper: "might
+            // fail to optimize to exact l values"). Enforce the library's
+            // contract with a Ward merge of the surplus levels.
+            rec = merge::merge_to_target(&rec, None, opts.target_values);
+        }
+        Ok((rec, diag, sol.alpha))
+    }
+}
+
+impl QuantSolver for IterativeSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::IterativeL1
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let (levels, diag, _) = self.solve_warm(prep, opts, None)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step(
+        &self,
+        prep: &PreparedInput,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        step_with_warm(state, |warm| self.solve_warm(prep, opts, warm))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cluster-based least squares (Algorithm 3) and clustering baselines
+// ---------------------------------------------------------------------
+
+struct ClusterLsSolver;
+
+impl QuantSolver for ClusterLsSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::ClusterLs
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let cfg = cluster_ls::ClusterLsConfig {
+            l: opts.target_values,
+            kmeans: KMeansConfig {
+                k: opts.target_values,
+                restarts: opts.kmeans_restarts,
+                max_iters: opts.max_iters,
+                tol: 1e-10,
+                seed: opts.seed,
+                ..Default::default()
+            },
+            // Weighted: the paper's eq 19 is written over ŵ unweighted, but
+            // its experimental claim (Alg 3 ≥ k-means on the full-vector
+            // loss) only holds when multiplicities weight both the
+            // partition and the LS values; the paper-literal unweighted
+            // variant stays available via ClusterLsConfig. See
+            // EXPERIMENTS.md Fig 5 notes.
+            weighted: true,
+        };
+        let sol = cluster_ls::solve_cluster_ls(
+            basis,
+            &prep.unique().values,
+            Some(prep.weights()),
+            &cfg,
+        )?;
+        let diag = QuantDiag {
+            iterations: sol.iterations,
+            converged: true,
+            lambda1: 0.0,
+            nnz: sol.levels.len(),
+            unstable: false,
+            empty_cluster_events: sol.empty_cluster_events,
+        };
+        Ok((sol.reconstruction, diag))
+    }
+}
+
+struct KMeansSolver;
+
+impl QuantSolver for KMeansSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::KMeans
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let cfg = KMeansConfig {
+            k: opts.target_values,
+            restarts: opts.kmeans_restarts,
+            max_iters: opts.max_iters,
+            tol: 1e-10,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let (rec, iters, empty) =
+            cluster_ls::kmeans_quantize_levels(prep.basis(), Some(prep.weights()), &cfg)?;
+        let diag = QuantDiag {
+            iterations: iters,
+            converged: true,
+            lambda1: 0.0,
+            // Report the achieved level count, not the request: clusters
+            // can collapse to fewer distinct centroids.
+            nnz: distinct_count_exact(&rec),
+            unstable: empty > 0,
+            empty_cluster_events: empty,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct KMeansExactSolver;
+
+impl QuantSolver for KMeansExactSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::KMeansExact
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let r = kmeans_dp(basis.values(), Some(prep.weights()), opts.target_values)?;
+        let rec: Vec<f64> = basis
+            .values()
+            .iter()
+            .zip(&r.assignment)
+            .map(|(_, &a)| r.centroids[a])
+            .collect();
+        let diag = QuantDiag {
+            iterations: 1,
+            converged: true,
+            lambda1: 0.0,
+            nnz: r.centroids.len(),
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct GmmSolver;
+
+impl QuantSolver for GmmSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::Gmm
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let cfg = GmmConfig {
+            k: opts.target_values,
+            max_iters: opts.max_iters,
+            tol: 1e-9,
+            seed: opts.seed,
+        };
+        let r = gmm_1d(prep.basis().values(), Some(prep.weights()), &cfg)?;
+        let rec: Vec<f64> = r.assignment.iter().map(|&a| r.means[a]).collect();
+        let diag = QuantDiag {
+            iterations: r.iterations,
+            converged: r.converged,
+            lambda1: 0.0,
+            nnz: r.means.len(),
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct DataTransformSolver;
+
+impl QuantSolver for DataTransformSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::DataTransform
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let cfg = DataTransformConfig {
+            k: opts.target_values,
+            restarts: opts.kmeans_restarts,
+            max_iters: opts.max_iters,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = data_transform_cluster(basis.values(), Some(prep.weights()), &cfg)?;
+        let rec: Vec<f64> = basis
+            .values()
+            .iter()
+            .map(|&v| r.centroids[assign_sorted(v, &r.centroids)])
+            .collect();
+        let diag = QuantDiag {
+            iterations: r.iterations,
+            converged: true,
+            lambda1: 0.0,
+            nnz: r.centroids.len(),
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct TvExactSolver;
+
+impl QuantSolver for TvExactSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::TvExact
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let rec = tv_exact::solve_tv_exact(basis, &prep.unique().values, opts.lambda1)?;
+        let nnz = {
+            // Count level jumps (α support) for diagnostics.
+            let mut prev = 0.0;
+            let mut c = 0usize;
+            for (&x, &d) in rec.iter().zip(basis.diffs()) {
+                if d != 0.0 && (x - prev).abs() > 1e-12 {
+                    c += 1;
+                }
+                prev = x;
+            }
+            c
+        };
+        let diag = QuantDiag {
+            iterations: 1, // exact, single pass
+            converged: true,
+            lambda1: opts.lambda1,
+            nnz,
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct AgglomerativeSolver;
+
+impl QuantSolver for AgglomerativeSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::Agglomerative
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let basis = prep.basis();
+        let r = crate::cluster::agglomerative::agglomerative_1d(
+            basis.values(),
+            Some(prep.weights()),
+            opts.target_values,
+        )?;
+        let rec: Vec<f64> = basis
+            .values()
+            .iter()
+            .zip(&r.assignment)
+            .map(|(_, &a)| r.centroids[a])
+            .collect();
+        let diag = QuantDiag {
+            iterations: basis.m().saturating_sub(r.centroids.len()),
+            converged: true,
+            lambda1: 0.0,
+            nnz: r.centroids.len(),
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+struct FcmSolver;
+
+impl QuantSolver for FcmSolver {
+    fn method(&self) -> QuantMethod {
+        QuantMethod::FuzzyCMeans
+    }
+
+    fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        let cfg = crate::cluster::fuzzy_cmeans::FcmConfig {
+            k: opts.target_values,
+            max_iters: opts.max_iters,
+            seed: opts.seed,
+            ..Default::default()
+        };
+        let r = crate::cluster::fuzzy_cmeans::fuzzy_cmeans_1d(
+            prep.basis().values(),
+            Some(prep.weights()),
+            &cfg,
+        )?;
+        let rec: Vec<f64> = r.assignment.iter().map(|&a| r.centroids[a]).collect();
+        let diag = QuantDiag {
+            iterations: r.iterations,
+            converged: r.converged,
+            lambda1: 0.0,
+            nnz: r.centroids.len(),
+            unstable: false,
+            empty_cluster_events: 0,
+        };
+        Ok((rec, diag))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Method → solver table
+// ---------------------------------------------------------------------
+
+/// Registration table: one entry per [`QuantMethod`], same order as
+/// [`QuantMethod::ALL`].
+static SOLVERS: [&dyn QuantSolver; 13] = [
+    &L1Solver { with_refit: false },
+    &L1Solver { with_refit: true },
+    &L1L2Solver,
+    &L0Solver,
+    &IterativeSolver,
+    &ClusterLsSolver,
+    &KMeansSolver,
+    &GmmSolver,
+    &DataTransformSolver,
+    &KMeansExactSolver,
+    &TvExactSolver,
+    &AgglomerativeSolver,
+    &FcmSolver,
+];
+
+/// Resolve the solver registered for `method`.
+pub fn solver_for(method: QuantMethod) -> &'static dyn QuantSolver {
+    SOLVERS
+        .iter()
+        .copied()
+        .find(|s| s.method() == method)
+        .expect("every QuantMethod has a registered solver")
+}
+
+// ---------------------------------------------------------------------
+// Pipeline entry points
+// ---------------------------------------------------------------------
+
+/// Solve stage only: quantize a prepared input with the chosen method.
+pub fn quantize_prepared(
+    prep: &PreparedInput,
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<QuantOutput> {
+    let (levels, diag) = solver_for(method).solve(prep, opts)?;
+    prep.finish(&levels, opts.clamp, diag)
+}
+
+/// Per-stage wall times of one pipeline run (coordinator metrics).
+#[derive(Debug, Clone, Copy)]
+pub struct StageTimings {
+    /// Prepare stage (unique decomposition + basis + cached sums).
+    pub prepare: Duration,
+    /// Solve stage (method solver + recovery + finalize).
+    pub solve: Duration,
+}
+
+/// One-shot quantize that reports per-stage timings.
+pub fn quantize_timed(
+    w: &[f64],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<(QuantOutput, StageTimings)> {
+    let t0 = Instant::now();
+    let prep = PreparedInput::new(w)?;
+    let prepare = t0.elapsed();
+    let t1 = Instant::now();
+    let out = quantize_prepared(&prep, method, opts)?;
+    let solve = t1.elapsed();
+    Ok((out, StageTimings { prepare, solve }))
+}
+
+/// How many threads a batch of `n` independent inputs should fan across.
+fn batch_threads(n: usize) -> usize {
+    let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+    cores.min(n).min(8)
+}
+
+/// Quantize many vectors with the same method/options. Inputs are
+/// independent, so the batch fans across scoped threads; results come
+/// back in input order and are bitwise-identical to per-call
+/// [`quantize`](super::quantize).
+pub fn quantize_batch(
+    inputs: &[Vec<f64>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Vec<Result<QuantOutput>> {
+    let threads = batch_threads(inputs.len());
+    if threads <= 1 {
+        return inputs.iter().map(|w| super::quantize(w, method, opts)).collect();
+    }
+    let mut results: Vec<Option<Result<QuantOutput>>> = Vec::with_capacity(inputs.len());
+    results.resize_with(inputs.len(), || None);
+    let chunk = inputs.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (slots, ins) in results.chunks_mut(chunk).zip(inputs.chunks(chunk)) {
+            s.spawn(move || {
+                for (slot, w) in slots.iter_mut().zip(ins) {
+                    *slot = Some(super::quantize(w, method, opts));
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("batch worker filled every slot"))
+        .collect()
+}
+
+/// λ sweep over one prepared input with warm starts along the path
+/// (lasso-family and iterative solvers reuse the previous α). `base`
+/// supplies every option except `lambda1`, which each grid point
+/// overrides.
+pub fn quantize_sweep(
+    prep: &PreparedInput,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+) -> Result<Vec<QuantOutput>> {
+    quantize_sweep_with(prep, method, lambdas, base, true)
+}
+
+/// λ sweep with explicit warm-start control. `warm_start = false` runs
+/// every grid point cold, which is bitwise-identical to calling
+/// [`quantize`](super::quantize) per λ (minus the repeated prepare).
+pub fn quantize_sweep_with(
+    prep: &PreparedInput,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+) -> Result<Vec<QuantOutput>> {
+    let solver = solver_for(method);
+    let mut state = SweepState::default();
+    let mut outs = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        let opts = QuantOptions { lambda1: lambda, ..base.clone() };
+        let (levels, diag) = if warm_start {
+            solver.solve_path_step(prep, &opts, &mut state)?
+        } else {
+            solver.solve(prep, &opts)?
+        };
+        outs.push(prep.finish(&levels, opts.clamp, diag)?);
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    fn clustered(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let center = [0.1, 0.35, 0.6, 0.9][i % 4];
+            // Round so repeats occur (multiplicities > 1).
+            v.push(((center + rng.normal_with(0.0, 0.02)) * 200.0).round() / 200.0);
+        }
+        v
+    }
+
+    #[test]
+    fn every_method_resolves_to_its_own_solver() {
+        for m in QuantMethod::ALL {
+            assert_eq!(solver_for(m).method(), m, "{m:?}");
+            assert_eq!(m.solver().method(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn prepared_pipeline_matches_one_shot() {
+        let data = clustered(80, 1);
+        let prep = PreparedInput::new(&data).unwrap();
+        for m in QuantMethod::ALL {
+            let opts = QuantOptions {
+                lambda1: 0.01,
+                lambda2: 4e-5,
+                target_values: 4,
+                ..Default::default()
+            };
+            let staged = quantize_prepared(&prep, m, &opts).unwrap();
+            let one_shot = super::super::quantize(&data, m, &opts).unwrap();
+            assert_eq!(staged.values, one_shot.values, "{m:?}");
+            assert_eq!(staged.levels, one_shot.levels, "{m:?}");
+            assert_eq!(staged.l2_loss.to_bits(), one_shot.l2_loss.to_bits(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn prepared_input_caches_are_consistent() {
+        let data = clustered(60, 2);
+        let prep = PreparedInput::new(&data).unwrap();
+        let m = prep.m();
+        assert_eq!(prep.len(), data.len());
+        assert!(!prep.is_empty());
+        // Suffix weights against a naive recomputation.
+        for j in 0..=m {
+            let naive: f64 = prep.weights()[j..].iter().sum();
+            assert!((prep.weight_suffix(j) - naive).abs() < 1e-9);
+        }
+        // Segment means against naive means.
+        let vals = &prep.unique().values;
+        for (a, b) in [(0, m), (0, m / 2), (m / 3, m)] {
+            let naive = vals[a..b].iter().sum::<f64>() / (b - a) as f64;
+            assert!((prep.segment_mean(a, b) - naive).abs() < 1e-9);
+        }
+        assert_eq!(prep.segment_mean(3, 3), 0.0);
+    }
+
+    #[test]
+    fn kmeans_diag_reports_achieved_levels_not_request() {
+        // Two tight value groups but target_values = 5: clusters collapse,
+        // and nnz must report the achieved count.
+        let mut data = vec![1.0; 10];
+        data.extend(vec![9.0; 10]);
+        let opts = QuantOptions { target_values: 5, ..Default::default() };
+        let out = super::super::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+        assert_eq!(out.diag.nnz, out.distinct_values());
+        assert!(out.diag.nnz <= 2, "two-level data, nnz={}", out.diag.nnz);
+    }
+
+    #[test]
+    fn batch_handles_bad_inputs_per_slot() {
+        let inputs = vec![clustered(30, 3), vec![], clustered(30, 4)];
+        let opts = QuantOptions { target_values: 3, ..Default::default() };
+        let rs = quantize_batch(&inputs, QuantMethod::KMeans, &opts);
+        assert_eq!(rs.len(), 3);
+        assert!(rs[0].is_ok());
+        assert!(rs[1].is_err(), "empty vector must fail its own slot only");
+        assert!(rs[2].is_ok());
+    }
+
+    #[test]
+    fn sweep_outputs_one_per_lambda_in_order() {
+        let data = clustered(50, 5);
+        let prep = PreparedInput::new(&data).unwrap();
+        let lambdas = [1e-4, 1e-3, 1e-2, 1e-1];
+        let outs =
+            quantize_sweep(&prep, QuantMethod::L1, &lambdas, &QuantOptions::default()).unwrap();
+        assert_eq!(outs.len(), lambdas.len());
+        for (o, &l) in outs.iter().zip(&lambdas) {
+            assert_eq!(o.diag.lambda1, l);
+            assert_eq!(o.values.len(), data.len());
+        }
+        // Three decades of λ ⇒ the path ends much sparser than it starts.
+        assert!(
+            outs.last().unwrap().distinct_values() <= outs.first().unwrap().distinct_values(),
+            "λ path did not sparsify"
+        );
+    }
+
+    #[test]
+    fn timed_quantize_reports_stages() {
+        let data = clustered(64, 6);
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        let (out, t) = quantize_timed(&data, QuantMethod::ClusterLs, &opts).unwrap();
+        assert_eq!(out.values.len(), data.len());
+        // Durations are non-negative by construction; just make sure the
+        // call returns something sane.
+        assert!(t.prepare + t.solve < Duration::from_secs(60));
+    }
+}

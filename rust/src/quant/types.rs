@@ -74,6 +74,12 @@ impl QuantMethod {
         })
     }
 
+    /// Resolve the registered [`super::pipeline::QuantSolver`] for this
+    /// method (the method→solver table lives in [`super::pipeline`]).
+    pub fn solver(self) -> &'static dyn super::pipeline::QuantSolver {
+        super::pipeline::solver_for(self)
+    }
+
     /// Methods that take a target value count `l` (as opposed to a λ).
     pub fn takes_target_count(self) -> bool {
         matches!(

@@ -1,0 +1,145 @@
+//! Staged-pipeline equivalence properties (ISSUE 1): `quantize_batch` and
+//! cold `quantize_sweep` must be bitwise-identical to per-call `quantize`
+//! for every method, and the warm-started lasso λ path must be equivalent
+//! (same near-optimal loss) to the cold one.
+
+use sqlsq::quant::{self, PreparedInput, QuantMethod, QuantOptions};
+use sqlsq::testkit::{check, gens};
+
+const CASES: usize = 12;
+
+fn base_opts() -> QuantOptions {
+    QuantOptions {
+        lambda1: 0.02,
+        lambda2: 4e-5,
+        target_values: 4,
+        ..Default::default()
+    }
+}
+
+/// Bitwise equality of two outputs (values, levels and loss).
+fn assert_bitwise_eq(
+    a: &quant::QuantOutput,
+    b: &quant::QuantOutput,
+    method: QuantMethod,
+    what: &str,
+) {
+    assert_eq!(a.values, b.values, "{method:?}: {what} values differ");
+    assert_eq!(a.levels, b.levels, "{method:?}: {what} levels differ");
+    assert_eq!(
+        a.l2_loss.to_bits(),
+        b.l2_loss.to_bits(),
+        "{method:?}: {what} loss differs"
+    );
+    assert_eq!(a.clamped, b.clamped, "{method:?}: {what} clamp count differs");
+}
+
+#[test]
+fn prop_batch_bitwise_matches_per_call_for_all_methods() {
+    check(
+        "quantize_batch ≡ per-call quantize",
+        CASES,
+        gens::vec_clustered(8..=60, 4),
+        |xs| {
+            // Three shifted copies exercise distinct prepare stages.
+            let inputs: Vec<Vec<f64>> = (0..3)
+                .map(|k| xs.iter().map(|&x| x + 0.05 * k as f64).collect())
+                .collect();
+            for method in QuantMethod::ALL {
+                let opts = base_opts();
+                let batch = quant::quantize_batch(&inputs, method, &opts);
+                for (w, got) in inputs.iter().zip(&batch) {
+                    let got = got.as_ref().map_err(|e| e.to_string())?;
+                    let single = quant::quantize(w, method, &opts).map_err(|e| e.to_string())?;
+                    assert_bitwise_eq(got, &single, method, "batch");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cold_sweep_bitwise_matches_per_call_for_all_methods() {
+    let lambdas = [1e-3, 1e-2, 1e-1];
+    check(
+        "cold quantize_sweep ≡ per-call quantize",
+        CASES,
+        gens::vec_clustered(8..=50, 4),
+        |xs| {
+            let prep = PreparedInput::new(xs).map_err(|e| e.to_string())?;
+            for method in QuantMethod::ALL {
+                let opts = base_opts();
+                let swept = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, false)
+                    .map_err(|e| e.to_string())?;
+                for (out, &lambda) in swept.iter().zip(&lambdas) {
+                    let single = quant::quantize(
+                        xs,
+                        method,
+                        &QuantOptions { lambda1: lambda, ..opts.clone() },
+                    )
+                    .map_err(|e| e.to_string())?;
+                    assert_bitwise_eq(out, &single, method, "sweep");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_warm_sweep_equivalent_to_cold_on_lasso_path() {
+    // The lasso objective is strongly convex (paper §3.2.1), so warm and
+    // cold CD converge to the same optimum; the loss along the λ path must
+    // agree closely even though the iterate paths (and hence exact bits)
+    // differ — support-patience early stopping leaves a small slack.
+    let lambdas = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1];
+    check(
+        "warm sweep ≈ cold sweep (lasso family)",
+        CASES,
+        gens::vec_clustered(8..=60, 4),
+        |xs| {
+            let prep = PreparedInput::new(xs).map_err(|e| e.to_string())?;
+            for method in [QuantMethod::L1, QuantMethod::L1LeastSquare] {
+                let opts = QuantOptions { lambda1: 0.0, ..Default::default() };
+                let warm = quant::quantize_sweep(&prep, method, &lambdas, &opts)
+                    .map_err(|e| e.to_string())?;
+                let cold = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, false)
+                    .map_err(|e| e.to_string())?;
+                for ((w, c), &lambda) in warm.iter().zip(&cold).zip(&lambdas) {
+                    let tol = 1e-3 * (1.0 + c.l2_loss);
+                    if (w.l2_loss - c.l2_loss).abs() > tol {
+                        return Err(format!(
+                            "{method:?} λ={lambda}: warm loss {} vs cold {}",
+                            w.l2_loss, c.l2_loss
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn warm_sweep_reuses_fewer_epochs_than_cold_in_aggregate() {
+    // The point of warm starts: across a dense λ path the warm sweep must
+    // not consume more CD epochs than the cold one (ties allowed).
+    let data: Vec<f64> = (0..600)
+        .map(|i| ((i % 37) as f64 * 0.027 + (i % 11) as f64 * 0.003))
+        .collect();
+    let prep = PreparedInput::new(&data).unwrap();
+    let lambdas: Vec<f64> =
+        sqlsq::eval::workloads::lambda_grid(1e-4, 1e-1, 12).unwrap();
+    let opts = QuantOptions::default();
+    let warm = quant::quantize_sweep(&prep, QuantMethod::L1, &lambdas, &opts).unwrap();
+    let cold =
+        quant::quantize_sweep_with(&prep, QuantMethod::L1, &lambdas, &opts, false).unwrap();
+    let warm_epochs: usize = warm.iter().map(|o| o.diag.iterations).sum();
+    let cold_epochs: usize = cold.iter().map(|o| o.diag.iterations).sum();
+    // One epoch of slack per grid point tolerates patience-stop jitter.
+    assert!(
+        warm_epochs <= cold_epochs + lambdas.len(),
+        "warm path used more epochs ({warm_epochs}) than cold ({cold_epochs})"
+    );
+}
