@@ -8,7 +8,7 @@
 
 use sqlsq::data::rng::Pcg32;
 use sqlsq::eval::workloads::lambda_grid;
-use sqlsq::quant::{self, PreparedInput, QuantMethod, QuantOptions};
+use sqlsq::quant::{self, PreparedInput, PreparedInputF32, QuantMethod, QuantOptions};
 use std::time::Instant;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -57,6 +57,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!(
         "speedup           : {:.2}x",
         t_one_shot.as_secs_f64() / t_sweep.as_secs_f64().max(1e-12)
+    );
+
+    // --- f32 fast lane over the same sweep ------------------------------
+    // Narrowing stays untimed: the lane's intended clients (f32 NN
+    // weights) never pay it, and the batch_sweep bench measures the same
+    // way.
+    let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    let t_f32 = Instant::now();
+    let prep32 = PreparedInputF32::from_vec(data32)?;
+    let swept32 = quant::quantize_sweep_f32(&prep32, method, &lambdas, &opts)?;
+    let t_sweep32 = t_f32.elapsed();
+    let loss64: f64 = swept.iter().map(|o| o.l2_loss).sum();
+    let loss32: f64 = swept32.iter().map(|o| o.l2_loss).sum();
+    println!(
+        "\nf32-lane sweep    : {t_sweep32:?} ({:.2}x vs f64 sweep)",
+        t_sweep.as_secs_f64() / t_sweep32.as_secs_f64().max(1e-12)
+    );
+    println!(
+        "total grid loss   : f64 {loss64:.6e} vs f32 {loss32:.6e} (rel delta {:.2e})",
+        (loss32 - loss64).abs() / loss64.max(1e-12)
     );
 
     // --- batch API over many vectors ------------------------------------

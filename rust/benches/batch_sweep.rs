@@ -1,15 +1,17 @@
 //! §Perf: one-shot vs staged λ-sweep throughput (the ISSUE-1 acceptance
 //! bench). Compares 16 independent `quantize` calls on a 10k-element
 //! vector against one `PreparedInput` + a warm-started 16-point
-//! `quantize_sweep`, and `quantize_batch` against a serial loop. Emits a
-//! `BENCH_batch_sweep.json` baseline (median seconds + speedup) for the
+//! `quantize_sweep`, `quantize_batch` against a serial loop, and (ISSUE-2)
+//! the f32 lane against the f64 lane on the same sweep workload — both
+//! throughput and total-information-loss delta. Emits a
+//! `BENCH_batch_sweep.json` baseline (median seconds + speedups) for the
 //! perf trajectory.
 
 use sqlsq::bench_support::{active_config, black_box, Suite};
 use sqlsq::data::rng::Pcg32;
 use sqlsq::eval::workloads::lambda_grid;
 use sqlsq::jsonio::Json;
-use sqlsq::quant::{self, PreparedInput, QuantMethod, QuantOptions};
+use sqlsq::quant::{self, PreparedInput, PreparedInputF32, QuantMethod, QuantOptions};
 
 fn raster_vector(n: usize, levels: f64, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::seeded(seed);
@@ -56,6 +58,34 @@ fn main() {
         })
         .median;
 
+    // f32 lane vs f64 lane on the same sweep workload: prepare + 16 warm
+    // solves per iteration in both cases. The one-time f64→f32 narrowing
+    // is deliberately OUTSIDE the timed case — the lane's intended clients
+    // (NN weights) hold f32 data natively, so narrowing is not part of the
+    // steady-state cost being compared.
+    let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    let f32_sweep_s = suite
+        .case("prepared_warm_sweep_f32_x16/n=10k", || {
+            let prep = PreparedInputF32::new(&data32).unwrap();
+            black_box(quant::quantize_sweep_f32(&prep, method, &lambdas, &opts).unwrap());
+        })
+        .median;
+
+    // Info-loss delta between the lanes, measured outside the timed loop:
+    // total l2 loss across the λ grid (per-point losses near λ→0 are ~0 in
+    // both lanes, so the total is the stable comparison).
+    let outs64 = {
+        let prep = PreparedInput::new(&data).unwrap();
+        quant::quantize_sweep(&prep, method, &lambdas, &opts).unwrap()
+    };
+    let outs32 = {
+        let prep = PreparedInputF32::new(&data32).unwrap();
+        quant::quantize_sweep_f32(&prep, method, &lambdas, &opts).unwrap()
+    };
+    let f64_loss_total: f64 = outs64.iter().map(|o| o.l2_loss).sum();
+    let f32_loss_total: f64 = outs32.iter().map(|o| o.l2_loss).sum();
+    let f32_rel_loss_delta = (f32_loss_total - f64_loss_total).abs() / f64_loss_total.max(1e-12);
+
     // Batch fan-out vs a serial loop over 16 independent vectors.
     let inputs: Vec<Vec<f64>> = (0..16).map(|i| raster_vector(2000, 256.0, 100 + i)).collect();
     let batch_opts = QuantOptions { target_values: 16, ..Default::default() };
@@ -74,8 +104,14 @@ fn main() {
 
     let sweep_speedup = one_shot_s / sweep_s.max(1e-12);
     let batch_speedup = serial_s / batch_s.max(1e-12);
+    let f32_sweep_speedup = sweep_s / f32_sweep_s.max(1e-12);
     println!("\nsweep speedup (one-shot / warm sweep)  : {sweep_speedup:.2}x");
     println!("batch speedup (serial / scoped fan-out): {batch_speedup:.2}x");
+    println!("f32 lane speedup (f64 sweep / f32 sweep): {f32_sweep_speedup:.2}x");
+    println!(
+        "f32 lane info-loss delta (total over grid): {f32_rel_loss_delta:.3e} \
+         (f64 {f64_loss_total:.6e} vs f32 {f32_loss_total:.6e})"
+    );
 
     let json = Json::obj(vec![
         ("bench", Json::Str("batch_sweep".into())),
@@ -88,6 +124,11 @@ fn main() {
         ("batch_serial_median_s", Json::Num(serial_s)),
         ("batch_parallel_median_s", Json::Num(batch_s)),
         ("batch_speedup", Json::Num(batch_speedup)),
+        ("f32_sweep_median_s", Json::Num(f32_sweep_s)),
+        ("f32_sweep_speedup", Json::Num(f32_sweep_speedup)),
+        ("f64_loss_total", Json::Num(f64_loss_total)),
+        ("f32_loss_total", Json::Num(f32_loss_total)),
+        ("f32_rel_loss_delta", Json::Num(f32_rel_loss_delta)),
     ]);
     std::fs::write("BENCH_batch_sweep.json", json.to_pretty()).expect("write baseline json");
     println!("[written BENCH_batch_sweep.json]");

@@ -80,18 +80,23 @@ sqlsq — Scalar Quantization as Sparse Least Square Optimization (full-system r
 USAGE:
   sqlsq quantize  --method <id> [--values K] [--lambda1 X] [--lambda2 Y]
                   [--input FILE | --demo] [--clamp lo,hi] [--seed N]
+                  [--precision f32|f64]
   sqlsq sweep     --method <id> [--steps N] [--lambda-min X] [--lambda-max Y]
                   [--values K] [--cold] [--input FILE | --demo]
+                  [--precision f32|f64]
   sqlsq train     [--cache PATH]
   sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
                   [--report-dir DIR]
   sqlsq serve     [--jobs N] [--engine native|runtime|auto] [--workers N]
-                  [--artifacts DIR]
+                  [--artifacts DIR] [--precision f32|f64]
   sqlsq selfcheck [--artifacts DIR]
   sqlsq version | help
 
 METHODS: l1, l1_ls, l1_l2, l0, iter_l1, cluster_ls, kmeans, kmeans_exact,
-         gmm, data_transform, tv_exact, agglom, fcm";
+         gmm, data_transform, tv_exact, agglom, fcm
+
+PRECISION: --precision f32 runs the native single-precision lane (native
+         f32 kernels for the CD family; other methods widen internally).";
 
 /// CLI entry (returns the process exit code).
 pub fn run() -> i32 {
@@ -124,6 +129,14 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "selfcheck" => cmd_selfcheck(&args),
         other => Err(Error::Config(format!("unknown command '{other}' (try help)"))),
+    }
+}
+
+fn parse_precision(args: &Args) -> Result<quant::Precision> {
+    match args.flag("precision") {
+        None => Ok(quant::Precision::F64),
+        Some(v) => quant::Precision::from_id(v)
+            .ok_or_else(|| Error::Config(format!("--precision wants f32|f64, got '{v}'"))),
     }
 }
 
@@ -172,12 +185,14 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         target_values: args.flag_usize("values", 16)?,
         seed: args.flag_usize("seed", 0)? as u64,
         clamp,
+        precision: parse_precision(args)?,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let out = quant::quantize(&data, method, &opts)?;
     let dt = t0.elapsed();
     println!("method            : {}", method.id());
+    println!("precision         : {}", opts.precision.id());
     println!("input length      : {}", data.len());
     println!("distinct in       : {}", crate::linalg::stats::distinct_count_exact(&data));
     println!("distinct out      : {}", out.distinct_values());
@@ -205,6 +220,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let lo = args.flag_f64("lambda-min", 1e-4)?;
     let hi = args.flag_f64("lambda-max", 1e-1)?;
     let warm = args.flag("cold").is_none();
+    let precision = parse_precision(args)?;
     let lambdas = workloads::lambda_grid(lo, hi, steps)?;
     let opts = QuantOptions {
         lambda2: args.flag_f64("lambda2", 0.0)?,
@@ -213,20 +229,35 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ..Default::default()
     };
 
-    let t0 = std::time::Instant::now();
-    let prep = quant::PreparedInput::new(&data)?;
-    let t_prepare = t0.elapsed();
-    let t1 = std::time::Instant::now();
-    let outs = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, warm)?;
-    let t_solve = t1.elapsed();
+    // Lane split: the staged entry points pick the lane by the prepared
+    // input's own element type; f32 outputs are widened only for printing.
+    let (n, m, outs, t_prepare, t_solve) = match precision {
+        quant::Precision::F64 => {
+            let t0 = std::time::Instant::now();
+            let prep = quant::PreparedInput::new(&data)?;
+            let t_prepare = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            let outs = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, warm)?;
+            (prep.len(), prep.m(), outs, t_prepare, t1.elapsed())
+        }
+        quant::Precision::F32 => {
+            let t0 = std::time::Instant::now();
+            let narrow: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+            let prep = quant::PreparedInputF32::from_vec(narrow)?;
+            let t_prepare = t0.elapsed();
+            let t1 = std::time::Instant::now();
+            let outs32 = quant::quantize_sweep_f32_with(&prep, method, &lambdas, &opts, warm)?;
+            let outs = outs32.iter().map(|o| o.widen()).collect();
+            (prep.len(), prep.m(), outs, t_prepare, t1.elapsed())
+        }
+    };
 
     println!(
-        "method {} over {} λ points ({} start mode), n={} m={}",
+        "method {} over {} λ points ({} start mode, {}), n={n} m={m}",
         method.id(),
         lambdas.len(),
         if warm { "warm" } else { "cold" },
-        prep.len(),
-        prep.m()
+        precision.id(),
     );
     println!("{:>12} {:>9} {:>14} {:>11}", "lambda1", "distinct", "l2_loss", "iterations");
     for (out, &lambda) in outs.iter().zip(&lambdas) {
@@ -299,13 +330,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.flag_usize("jobs", 200)?;
     let engine = Engine::parse(args.flag("engine").unwrap_or("auto"))?;
+    let precision = parse_precision(args)?;
     let cfg = Config {
         workers: args.flag_usize("workers", Config::default().workers)?,
         engine,
         artifacts_dir: PathBuf::from(args.flag("artifacts").unwrap_or("artifacts")),
         ..Default::default()
     };
-    println!("starting coordinator: {} workers, engine {:?}", cfg.workers, cfg.engine);
+    println!(
+        "starting coordinator: {} workers, engine {:?}, {} payloads",
+        cfg.workers,
+        cfg.engine,
+        precision.id()
+    );
     let coord = Coordinator::start(cfg)?;
 
     // Synthetic job mix: three data shapes × four methods.
@@ -327,7 +364,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             seed: i as u64,
             ..Default::default()
         };
-        let (_, rx) = coord.submit(data, method, opts)?;
+        let (_, rx) = match precision {
+            quant::Precision::F64 => coord.submit(data, method, opts)?,
+            quant::Precision::F32 => {
+                // f32 clients submit typed payloads; no up-front widening.
+                let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                coord.submit_f32(data32, method, opts)?
+            }
+        };
         rxs.push(rx);
     }
     let mut ok = 0usize;
@@ -432,6 +476,25 @@ mod tests {
     fn sweep_rejects_bad_grid() {
         assert!(dispatch(&s(&["sweep", "--method", "l1", "--steps", "0"])).is_err());
         assert!(dispatch(&s(&["sweep", "--method", "nope"])).is_err());
+    }
+
+    #[test]
+    fn f32_precision_lane_runs_quantize_and_sweep() {
+        dispatch(&s(&[
+            "quantize", "--method", "l1_ls", "--values", "8", "--precision", "f32",
+        ]))
+        .unwrap();
+        dispatch(&s(&["sweep", "--method", "l1_ls", "--steps", "3", "--precision", "f32"]))
+            .unwrap();
+        assert!(dispatch(&s(&["quantize", "--precision", "f16"])).is_err());
+    }
+
+    #[test]
+    fn serve_small_f32_native_run() {
+        dispatch(&s(&[
+            "serve", "--jobs", "8", "--engine", "native", "--workers", "2", "--precision", "f32",
+        ]))
+        .unwrap();
     }
 
     #[test]

@@ -1,11 +1,74 @@
 //! Job types flowing through the coordinator.
 
-use crate::quant::{QuantMethod, QuantOptions, QuantOutput};
+use crate::quant::{Precision, QuantMethod, QuantOptions, QuantOutput};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// Monotonically increasing job identifier.
 pub type JobId = u64;
+
+/// A quantization payload in its submitted precision.
+///
+/// f32 payloads are served by the native f32 lane end to end — no up-front
+/// widening at admission or dispatch; only the final per-level output is
+/// widened into the f64 [`QuantOutput`] result surface. The runtime (PJRT)
+/// lane's boundary is f64, so f32 payloads always route native.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Double-precision data (the historical submit path).
+    F64(Vec<f64>),
+    /// Single-precision data (NN-weight fast path).
+    F32(Vec<f32>),
+}
+
+impl Payload {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F64(v) => v.len(),
+            Payload::F32(v) => v.len(),
+        }
+    }
+
+    /// True when the payload holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The payload's lane.
+    pub fn precision(&self) -> Precision {
+        match self {
+            Payload::F64(_) => Precision::F64,
+            Payload::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Widen to f64 (the runtime-lane boundary; a copy for f64 payloads).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Payload::F64(v) => v.clone(),
+            Payload::F32(v) => v.iter().map(|&x| f64::from(x)).collect(),
+        }
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Payload::F64(Vec::new())
+    }
+}
+
+impl From<Vec<f64>> for Payload {
+    fn from(v: Vec<f64>) -> Self {
+        Payload::F64(v)
+    }
+}
+
+impl From<Vec<f32>> for Payload {
+    fn from(v: Vec<f32>) -> Self {
+        Payload::F32(v)
+    }
+}
 
 /// Which engine actually served a job (reported in results/metrics).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,8 +94,8 @@ impl ServedBy {
 pub struct Job {
     /// Unique id.
     pub id: JobId,
-    /// The vector to quantize.
-    pub data: Vec<f64>,
+    /// The vector to quantize, in its submitted precision.
+    pub data: Payload,
     /// Algorithm to run.
     pub method: QuantMethod,
     /// Algorithm options.
@@ -71,5 +134,19 @@ mod tests {
     fn served_by_labels() {
         assert_eq!(ServedBy::Native.label(), "native");
         assert_eq!(ServedBy::Runtime.label(), "runtime");
+    }
+
+    #[test]
+    fn payload_precision_and_len() {
+        let p64: Payload = vec![1.0f64, 2.0].into();
+        let p32: Payload = vec![1.0f32, 2.0, 3.0].into();
+        assert_eq!(p64.precision(), Precision::F64);
+        assert_eq!(p32.precision(), Precision::F32);
+        assert_eq!(p64.len(), 2);
+        assert_eq!(p32.len(), 3);
+        assert!(!p64.is_empty());
+        assert!(Payload::default().is_empty());
+        assert_eq!(p32.to_f64_vec(), vec![1.0f64, 2.0, 3.0]);
+        assert_eq!(p64.to_f64_vec(), vec![1.0f64, 2.0]);
     }
 }

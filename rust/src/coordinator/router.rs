@@ -18,6 +18,7 @@
 //! Everything else always runs natively — their inner loops are
 //! data-dependent control flow the AOT graph cannot express.
 
+use super::job::Payload;
 use crate::config::Engine;
 use crate::quant::{
     self, refit, types, unique::UniqueDecomp, vmatrix::VBasis, QuantDiag, QuantMethod,
@@ -131,25 +132,34 @@ impl Router {
         }
     }
 
-    /// Serve a job on the native engines.
+    /// Serve a job on the native engines; the payload's precision picks
+    /// the lane (f32 payloads run the single-precision fast path and widen
+    /// only the output).
     pub fn dispatch_native(
         &self,
-        data: &[f64],
+        data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
     ) -> Result<QuantOutput> {
-        quant::quantize(data, method, opts)
+        match data {
+            Payload::F64(v) => quant::quantize(v, method, opts),
+            Payload::F32(v) => Ok(quant::quantize_f32(v, method, opts)?.widen()),
+        }
     }
 
-    /// Serve a job on the native engines, reporting per-stage
-    /// (prepare/solve) wall times for the metrics surface.
-    pub fn dispatch_native_timed(
+    /// Serve an owned payload on the native engines, reporting per-stage
+    /// (prepare/solve) wall times for the metrics surface. Owning the
+    /// buffer lets the prepare stage take it without a copy.
+    pub fn dispatch_native_timed_owned(
         &self,
-        data: &[f64],
+        data: Payload,
         method: QuantMethod,
         opts: &QuantOptions,
     ) -> Result<(QuantOutput, quant::StageTimings)> {
-        quant::quantize_timed(data, method, opts)
+        match data {
+            Payload::F64(v) => quant::pipeline::quantize_timed_vec(v, method, opts),
+            Payload::F32(v) => quant::pipeline::quantize_timed_f32_vec(v, method, opts),
+        }
     }
 }
 
@@ -351,12 +361,26 @@ mod tests {
         let data = vec![1.0, 2.0, 3.0, 4.0];
         let out = r
             .dispatch_native(
-                &data,
+                &data.into(),
                 QuantMethod::KMeans,
                 &QuantOptions { target_values: 2, ..Default::default() },
             )
             .unwrap();
         assert!(out.distinct_values() <= 2);
+    }
+
+    #[test]
+    fn f32_payloads_dispatch_on_the_native_f32_lane() {
+        let r = Router::new(Engine::Native, Path::new("/nonexistent")).unwrap();
+        let data32 = vec![0.1f32, 0.2, 0.3, 0.2, 0.1, 0.9];
+        let opts = QuantOptions { lambda1: 0.05, ..Default::default() };
+        let via_router = r
+            .dispatch_native(&data32.clone().into(), QuantMethod::L1LeastSquare, &opts)
+            .unwrap();
+        let direct =
+            quant::quantize_f32(&data32, QuantMethod::L1LeastSquare, &opts).unwrap().widen();
+        assert_eq!(via_router.values, direct.values);
+        assert_eq!(via_router.l2_loss.to_bits(), direct.l2_loss.to_bits());
     }
 
     #[test]

@@ -21,12 +21,12 @@
 //! Workers drain *batches* from the queue (`max_batch`, `batch_wait_us`)
 //! so bursts of small jobs pay one wakeup.
 
-use super::job::{Job, JobId, JobResult, ServedBy};
+use super::job::{Job, JobId, JobResult, Payload, ServedBy};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
 use crate::config::{Config, Engine};
-use crate::quant::{QuantMethod, QuantOptions};
+use crate::quant::{Precision, QuantMethod, QuantOptions};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,9 +56,12 @@ fn finish(
     let _ = job.respond.send(JobResult { id: job.id, outcome, latency, served_by });
 }
 
-/// Serve one job natively, recording prepare/solve stage timings.
-fn serve_one_native(router: &Router, metrics: &Metrics, job: Job) {
-    let outcome = match router.dispatch_native_timed(&job.data, job.method, &job.opts) {
+/// Serve one job natively, recording prepare/solve stage timings. The
+/// payload is taken out of the job so the prepare stage can own the buffer
+/// (no second copy of the input); the payload's precision picks the lane.
+fn serve_one_native(router: &Router, metrics: &Metrics, mut job: Job) {
+    let data = std::mem::take(&mut job.data);
+    let outcome = match router.dispatch_native_timed_owned(data, job.method, &job.opts) {
         Ok((out, t)) => {
             metrics.on_stage(t.prepare, t.solve);
             Ok(out)
@@ -118,7 +121,18 @@ fn serve_batch_runtime(
     metrics.on_batch(batch.len());
     for job in batch {
         let rt_outcome = match executor.as_mut() {
-            Some(ex) => super::router::dispatch_runtime(ex, &job.data, job.method, &job.opts),
+            Some(ex) => match &job.data {
+                Payload::F64(v) => {
+                    super::router::dispatch_runtime(ex, v, job.method, &job.opts)
+                }
+                data @ Payload::F32(_) => {
+                    // The PJRT artifact boundary is f64; f32 payloads
+                    // normally never route here (admission keeps them
+                    // native), but widen defensively if one does.
+                    let wide = data.to_f64_vec();
+                    super::router::dispatch_runtime(ex, &wide, job.method, &job.opts)
+                }
+            },
             None => Err(Error::Runtime("runtime lane has no executor".into())),
         };
         match rt_outcome {
@@ -209,7 +223,7 @@ impl Coordinator {
 
     fn make_job(
         &self,
-        data: Vec<f64>,
+        data: Payload,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> (Job, mpsc::Receiver<JobResult>, bool) {
@@ -217,7 +231,13 @@ impl Coordinator {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // Route by distinct-count upper bound (len) — cheap admission-time
         // heuristic; the lane falls back per job under Auto when unfit.
+        // f32 requests always stay native — whether the payload itself is
+        // f32 or the caller asked for the f32 lane via opts.precision —
+        // because the PJRT boundary is f64 and the native f32 lane *is*
+        // their fast path (runtime dispatch never consults precision).
         let to_runtime = self.cfg.engine != Engine::Native
+            && matches!(data, Payload::F64(_))
+            && opts.precision == Precision::F64
             && self
                 .router
                 .routes_to_runtime(method, data.len().max(1), opts.target_values);
@@ -228,11 +248,11 @@ impl Coordinator {
         )
     }
 
-    /// Blocking submit (applies backpressure). Returns the job id and the
-    /// result receiver.
-    pub fn submit(
+    /// Blocking submit of a typed payload (applies backpressure). Returns
+    /// the job id and the result receiver.
+    pub fn submit_payload(
         &self,
-        data: Vec<f64>,
+        data: Payload,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
@@ -246,10 +266,32 @@ impl Coordinator {
         Ok((id, rx))
     }
 
-    /// Non-blocking submit; `Err` when the queue is full (load shedding).
-    pub fn try_submit(
+    /// Blocking submit of f64 data (the historical API).
+    pub fn submit(
         &self,
         data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_payload(Payload::F64(data), method, opts)
+    }
+
+    /// Blocking submit of f32 data; served by the native f32 lane without
+    /// up-front widening.
+    pub fn submit_f32(
+        &self,
+        data: Vec<f32>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_payload(Payload::F32(data), method, opts)
+    }
+
+    /// Non-blocking submit of a typed payload; `Err` when the queue is
+    /// full (load shedding).
+    pub fn try_submit_payload(
+        &self,
+        data: Payload,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
@@ -269,6 +311,16 @@ impl Coordinator {
         }
     }
 
+    /// Non-blocking submit of f64 data (the historical API).
+    pub fn try_submit(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.try_submit_payload(Payload::F64(data), method, opts)
+    }
+
     /// Submit and wait for the result (convenience).
     pub fn quantize_blocking(
         &self,
@@ -277,6 +329,18 @@ impl Coordinator {
         opts: QuantOptions,
     ) -> Result<JobResult> {
         let (_, rx) = self.submit(data, method, opts)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("worker dropped the job".into()))
+    }
+
+    /// Submit f32 data and wait for the result (convenience).
+    pub fn quantize_blocking_f32(
+        &self,
+        data: Vec<f32>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<JobResult> {
+        let (_, rx) = self.submit_f32(data, method, opts)?;
         rx.recv()
             .map_err(|_| Error::Coordinator("worker dropped the job".into()))
     }
@@ -488,6 +552,27 @@ mod tests {
         // Every native job records prepare/solve stage timings.
         assert_eq!(snap.stage_samples, 32);
         assert!(snap.mean_prepare_us >= 0.0 && snap.mean_solve_us >= 0.0);
+    }
+
+    #[test]
+    fn f32_payloads_serve_on_the_native_f32_lane() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data32: Vec<f32> = sample(9).iter().map(|&x| x as f32).collect();
+        let opts = QuantOptions { lambda1: 0.05, ..Default::default() };
+        let res = c
+            .quantize_blocking_f32(data32.clone(), QuantMethod::L1LeastSquare, opts.clone())
+            .unwrap();
+        assert!(res.is_ok());
+        assert_eq!(res.served_by, ServedBy::Native);
+        let got = res.outcome.unwrap();
+        let direct = crate::quant::quantize_f32(&data32, QuantMethod::L1LeastSquare, &opts)
+            .unwrap()
+            .widen();
+        assert_eq!(got.values, direct.values);
+        assert_eq!(got.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.stage_samples, 1, "f32 jobs must record stage timings too");
     }
 
     #[test]

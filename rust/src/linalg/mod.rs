@@ -3,4 +3,5 @@
 
 pub mod cholesky;
 pub mod matrix;
+pub mod scalar;
 pub mod stats;

@@ -1,0 +1,207 @@
+//! Element-precision abstraction for the quantization hot path.
+//!
+//! The paper's headline workload — neural-network weights — arrives in
+//! single precision, and the coordinate-descent kernel is memory-bound
+//! (O(m) flops per epoch over O(m) memory), so running it in `f32` halves
+//! the bytes moved per epoch. [`Scalar`] is the small closed trait that
+//! lets `UniqueDecomp`, `VBasis`, the CD solvers and the staged pipeline
+//! be generic over the element type while keeping the `f64` lane
+//! bit-for-bit identical to the historical implementation: every trait
+//! operation maps 1:1 onto the intrinsic `f64` operation it replaced.
+//!
+//! ## Precision contract
+//!
+//! * **f64 lane** — the reference. `TOL_FLOOR` is 0, so configured
+//!   tolerances apply verbatim and results are bitwise-reproducible.
+//! * **f32 lane** — inputs are narrowed once at the lane boundary; all
+//!   prepare/solve arithmetic runs in `f32`; outputs widen back at the
+//!   end. Convergence thresholds are floored at [`Scalar::TOL_FLOOR`]
+//!   (`1e-6`, matching the PJRT runtime's single-precision floor):
+//!   an `f32` coordinate move below that is indistinguishable from
+//!   rounding noise, so chasing the f64 default of `1e-10` would burn
+//!   epochs until the support-patience stop with no accuracy to show for
+//!   it. The lane is intended for O(1)-scaled data (NN weights, pixel
+//!   intensities); for values spanning more than ~6 decades of magnitude
+//!   stay on f64.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A floating-point element type the quantization pipeline can run on.
+///
+/// Implemented for `f32` and `f64` only; the trait is deliberately closed
+/// (sealed by convention — solvers assume IEEE-754 semantics such as
+/// exact negation, signed zero equality and `max` ignoring NaN).
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialOrd
+    + PartialEq
+    + Debug
+    + Display
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Machine epsilon of the lane.
+    const EPSILON: Self;
+    /// Positive infinity.
+    const INFINITY: Self;
+    /// Lane floor applied to CD convergence tolerances (`tol.max(floor)`):
+    /// `0.0` for f64 (configured tolerances apply verbatim), `1e-6` for
+    /// f32 (see the module docs' precision contract).
+    const TOL_FLOOR: f64;
+    /// Stable lane id ("f32" / "f64") for diagnostics.
+    const ID: &'static str;
+
+    /// Narrow/convert from `f64` (exact for the f64 lane).
+    fn from_f64(x: f64) -> Self;
+    /// Widen/convert to `f64` (exact for both lanes).
+    fn to_f64(self) -> f64;
+    /// Convert a count; exact for every count the pipeline can produce
+    /// (f32 is exact up to 2^24 distinct values).
+    fn from_usize(n: usize) -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// IEEE-754 maximum (NaN-ignoring, like `f64::max`).
+    fn max(self, other: Self) -> Self;
+    /// IEEE-754 minimum (NaN-ignoring, like `f64::min`).
+    fn min(self, other: Self) -> Self;
+    /// Neither NaN nor infinite.
+    fn is_finite(self) -> bool;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    const INFINITY: Self = f64::INFINITY;
+    const TOL_FLOOR: f64 = 0.0;
+    const ID: &'static str = "f64";
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn from_usize(n: usize) -> Self {
+        n as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn min(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    const INFINITY: Self = f32::INFINITY;
+    const TOL_FLOOR: f64 = 1e-6;
+    const ID: &'static str = "f32";
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn from_usize(n: usize) -> Self {
+        n as f32
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn min(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Scalar>(xs: &[f64]) {
+        for &x in xs {
+            let t = T::from_f64(x);
+            // Widening back must be the identity on the lane's own grid.
+            assert_eq!(T::from_f64(t.to_f64()).to_f64(), t.to_f64());
+        }
+    }
+
+    #[test]
+    fn conversions_roundtrip_on_lane_grid() {
+        let xs = [0.0, -0.0, 1.0, -2.5, 0.125, 1e-3, 1e6];
+        roundtrip::<f64>(&xs);
+        roundtrip::<f32>(&xs);
+    }
+
+    #[test]
+    fn f64_lane_ops_are_the_intrinsics() {
+        assert_eq!(f64::from_f64(0.1).to_bits(), 0.1f64.to_bits());
+        assert_eq!(Scalar::max(1.0f64, 2.0), 2.0);
+        assert_eq!(Scalar::min(1.0f64, 2.0), 1.0);
+        assert_eq!(Scalar::abs(-3.5f64), 3.5);
+        assert_eq!(f64::from_usize(7), 7.0);
+        assert_eq!(f64::TOL_FLOOR, 0.0);
+        assert_eq!(f64::ID, "f64");
+    }
+
+    #[test]
+    fn f32_lane_constants() {
+        assert_eq!(f32::ZERO, 0.0f32);
+        assert_eq!(f32::ONE, 1.0f32);
+        assert!(f32::TOL_FLOOR > 0.0);
+        assert_eq!(f32::ID, "f32");
+        assert!(f32::INFINITY.to_f64().is_infinite());
+        assert!(!f32::INFINITY.is_finite());
+        assert!(Scalar::is_finite(1.5f32));
+    }
+
+    #[test]
+    fn f32_counts_exact_to_2_pow_24() {
+        assert_eq!(f32::from_usize(1 << 24).to_f64(), (1u64 << 24) as f64);
+    }
+}

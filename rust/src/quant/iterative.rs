@@ -16,6 +16,7 @@
 use super::lasso::{self, LassoConfig};
 use super::refit;
 use super::vmatrix::VBasis;
+use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
 
 /// Configuration for Algorithm 2.
@@ -46,11 +47,12 @@ impl Default for IterativeConfig {
     }
 }
 
-/// Output of Algorithm 2.
+/// Output of Algorithm 2 (lane-generic; `IterativeSolution<f64>` is the
+/// default).
 #[derive(Debug, Clone)]
-pub struct IterativeSolution {
+pub struct IterativeSolution<T: Scalar = f64> {
     /// Refitted sparse coefficients (α* of the final round).
-    pub alpha: Vec<f64>,
+    pub alpha: Vec<T>,
     /// Achieved `‖α‖₀ ≤ target` (may undershoot — see module docs).
     pub nnz: usize,
     /// Final λ₁ used.
@@ -64,24 +66,41 @@ pub struct IterativeSolution {
 }
 
 /// Run Algorithm 2.
-pub fn solve_iterative(
-    basis: &VBasis,
-    w: &[f64],
+pub fn solve_iterative<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
     cfg: &IterativeConfig,
-) -> Result<IterativeSolution> {
+) -> Result<IterativeSolution<T>> {
     solve_iterative_warm(basis, w, cfg, None)
 }
 
 /// Run Algorithm 2 with an optional warm start for the *first* inner CD
 /// solve (λ-sweep pipelines seed this with the previous grid point's α;
 /// later rounds warm-start from the refit as usual). `None` reproduces
-/// [`solve_iterative`] exactly.
-pub fn solve_iterative_warm(
-    basis: &VBasis,
-    w: &[f64],
+/// [`solve_iterative`] exactly. Allocating wrapper over
+/// [`solve_iterative_ws`].
+pub fn solve_iterative_warm<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
     cfg: &IterativeConfig,
-    warm_init: Option<&[f64]>,
-) -> Result<IterativeSolution> {
+    warm_init: Option<&[T]>,
+) -> Result<IterativeSolution<T>> {
+    let mut ws = lasso::Workspace::default();
+    solve_iterative_ws(basis, w, cfg, warm_init, &mut ws)
+}
+
+/// [`solve_iterative_warm`] with a caller-owned CD [`lasso::Workspace`]:
+/// the λ ladder runs hundreds of inner solves, and a shared workspace
+/// removes their per-solve buffer allocations. Bitwise-identical to the
+/// allocating wrappers. The λ schedule itself is always computed in f64 so
+/// both precision lanes walk the same penalty grid.
+pub fn solve_iterative_ws<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    cfg: &IterativeConfig,
+    warm_init: Option<&[T]>,
+    ws: &mut lasso::Workspace<T>,
+) -> Result<IterativeSolution<T>> {
     if w.len() != basis.m() {
         return Err(Error::InvalidInput(format!(
             "iterative: basis dim {} vs target dim {}",
@@ -111,13 +130,13 @@ pub fn solve_iterative_warm(
 
     let mut lambda = cfg.lambda_start;
     let mut dlambda = cfg.lambda_start;
-    let mut warm: Option<Vec<f64>> = warm_init.map(|a| a.to_vec());
+    let mut warm: Option<Vec<T>> = warm_init.map(|a| a.to_vec());
     let mut epochs = 0usize;
     let mut steps = 0usize;
 
     // Track the best (feasible-or-not) solution so an over-aggressive final
     // step cannot lose a good intermediate.
-    let mut last_alpha: Vec<f64> = vec![1.0; basis.m()];
+    let mut last_alpha: Vec<T> = vec![T::ONE; basis.m()];
     let mut last_nnz = basis.m();
     let mut last_levels = basis.m();
     let mut last_lambda = 0.0;
@@ -125,7 +144,7 @@ pub fn solve_iterative_warm(
     while steps < cfg.max_steps {
         steps += 1;
         let cd_cfg = LassoConfig { lambda1: lambda, ..cfg.cd.clone() };
-        let sol = lasso::solve(basis, w, &cd_cfg, warm.as_deref())?;
+        let sol = lasso::solve_ws(basis, w, &cd_cfg, warm.as_deref(), ws)?;
         epochs += sol.epochs;
 
         // Steps 7–9: refit on the support, put α* back (eq 10), and carry
@@ -136,7 +155,7 @@ pub fn solve_iterative_warm(
         } else {
             refit::refit_fast(basis, w, &support, None)?.alpha
         };
-        let nnz = refitted.iter().filter(|&&a| a != 0.0).count();
+        let nnz = refitted.iter().filter(|&&a| a != T::ZERO).count();
         // Distinct OUTPUT levels (includes the implicit 0-prefix when
         // index 0 is off the support) — the user-facing count.
         let levels = super::l0::level_count(&support);

@@ -32,10 +32,37 @@
 //! memory.
 //!
 //! [`solve_dense`] is the textbook O(m²)-per-epoch implementation over the
-//! materialized `V`; it exists as the correctness oracle and as the §Perf
+//! dense `V`; it exists as the correctness oracle and as the §Perf
 //! "before" baseline.
+//!
+//! ## Precision lanes
+//!
+//! The solvers are generic over the element precision ([`Scalar`]): the
+//! default `f64` instantiation is the bitwise-reference lane; `T = f32`
+//! halves the memory traffic of the O(m)-per-epoch kernel, which is what
+//! the epoch loop is bound by on 10k+-element NN-weight workloads.
+//! Penalties and tolerances stay `f64` in [`LassoConfig`] and are narrowed
+//! once at solve entry. Two lane-specific rules (see
+//! [`crate::linalg::scalar`] for the full contract):
+//!
+//! * the convergence tolerance is floored at [`Scalar::TOL_FLOOR`]
+//!   (0 for f64, 1e-6 for f32) — an f32 coordinate move below ~1e-6 is
+//!   rounding noise, and waiting for the f64 default of 1e-10 would only
+//!   burn epochs until the support-patience stop fires;
+//! * `support_patience` is therefore the *primary* stop for the f32 lane
+//!   at small λ: quantization consumes the support, and the support
+//!   stabilizes well before α converges in norm in either precision.
+//!
+//! ## Workspaces
+//!
+//! [`solve_ws`] takes a caller-owned [`Workspace`] holding the residual and
+//! reconstruction buffers, so λ-sweeps and Algorithm-2 λ-ladders reuse one
+//! allocation across hundreds of solves instead of allocating two fresh
+//! vectors per call. [`solve`] is the allocating convenience wrapper and is
+//! bitwise-identical to it.
 
 use super::vmatrix::VBasis;
+use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
 
 /// What to do when the negative-l2 relaxation makes a coordinate's
@@ -50,7 +77,8 @@ pub enum Instability {
     Error,
 }
 
-/// Solver configuration.
+/// Solver configuration. Penalties/tolerances are always `f64` regardless
+/// of the solve lane; they are narrowed once at solve entry.
 #[derive(Debug, Clone)]
 pub struct LassoConfig {
     /// l1 penalty λ₁ ≥ 0.
@@ -60,7 +88,10 @@ pub struct LassoConfig {
     /// Epoch budget.
     pub max_epochs: usize,
     /// Convergence threshold on the largest coordinate move per epoch,
-    /// scaled by `d_j` (i.e. measured in reconstruction units).
+    /// scaled by `d_j` (i.e. measured in reconstruction units). The
+    /// effective threshold is `tol.max(Scalar::TOL_FLOOR)` — identical to
+    /// `tol` on the f64 lane, floored at 1e-6 on the f32 lane where
+    /// smaller moves are below single-precision resolution.
     pub tol: f64,
     /// Behaviour when `c_k − 2λ₂ ≤ 0`.
     pub on_instability: Instability,
@@ -68,7 +99,8 @@ pub struct LassoConfig {
     /// for this many consecutive epochs (0 disables). Quantization only
     /// consumes the support — Algorithm 1 refits the values exactly — so
     /// waiting for α to converge in norm wastes epochs (§Perf: ~10×
-    /// fewer epochs at small λ with identical refit loss).
+    /// fewer epochs at small λ with identical refit loss). On the f32
+    /// lane this is the stop that usually fires (see module docs).
     pub support_patience: usize,
 }
 
@@ -85,60 +117,88 @@ impl Default for LassoConfig {
     }
 }
 
-/// Solver output.
+/// Solver output (lane-generic; `LassoSolution<f64>` is the default).
 #[derive(Debug, Clone)]
-pub struct LassoSolution {
+pub struct LassoSolution<T: Scalar = f64> {
     /// The optimized coefficient vector (exact zeros from shrinkage).
-    pub alpha: Vec<f64>,
+    pub alpha: Vec<T>,
     /// Epochs actually run.
     pub epochs: usize,
     /// Whether the tolerance was met within the epoch budget.
     pub converged: bool,
-    /// Final objective value (½LS + λ₁‖α‖₁ − λ₂‖α‖₂²).
+    /// Final objective value (½LS + λ₁‖α‖₁ − λ₂‖α‖₂²), accumulated in f64
+    /// on both lanes.
     pub objective: f64,
     /// True if any coordinate hit the λ₂ instability and was skipped.
     pub unstable: bool,
 }
 
-impl LassoSolution {
+impl<T: Scalar> LassoSolution<T> {
     /// Indices of the non-zero coefficients (the support, eq 7).
     pub fn support(&self) -> Vec<usize> {
         self.alpha
             .iter()
             .enumerate()
-            .filter(|(_, &a)| a != 0.0)
+            .filter(|(_, &a)| a != T::ZERO)
             .map(|(i, _)| i)
             .collect()
     }
 
     /// `‖α‖₀`.
     pub fn nnz(&self) -> usize {
-        self.alpha.iter().filter(|&&a| a != 0.0).count()
+        self.alpha.iter().filter(|&&a| a != T::ZERO).count()
+    }
+}
+
+/// Reusable CD solve buffers (residual + reconstruction), sized lazily to
+/// the basis dimension. Owning one across a λ path removes the two
+/// per-solve allocations from the hot loop; buffers are fully overwritten
+/// before every read, so reuse cannot change results.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace<T: Scalar = f64> {
+    rec: Vec<T>,
+    r: Vec<T>,
+}
+
+impl<T: Scalar> Workspace<T> {
+    /// Size both buffers for an m-dimensional solve. Existing contents are
+    /// left as-is (both buffers are fully overwritten before every read),
+    /// so steady-state reuse at a fixed `m` writes nothing here.
+    fn reset(&mut self, m: usize) {
+        self.rec.resize(m, T::ZERO);
+        self.r.resize(m, T::ZERO);
     }
 }
 
 /// Soft-thresholding operator `S_λ(x)` (paper §3.3).
 #[inline]
-pub fn shrink(x: f64, lambda: f64) -> f64 {
+pub fn shrink<T: Scalar>(x: T, lambda: T) -> T {
     if x > lambda {
         x - lambda
     } else if x < -lambda {
         x + lambda
     } else {
-        0.0
+        T::ZERO
     }
 }
 
-/// Objective value ½‖ŵ − Vα‖² + λ₁‖α‖₁ − λ₂‖α‖₂².
-pub fn objective(basis: &VBasis, w: &[f64], alpha: &[f64], cfg: &LassoConfig) -> f64 {
+/// Objective value ½‖ŵ − Vα‖² + λ₁‖α‖₁ − λ₂‖α‖₂², accumulated in f64.
+pub fn objective<T: Scalar>(basis: &VBasis<T>, w: &[T], alpha: &[T], cfg: &LassoConfig) -> f64 {
     let rec = basis.apply(alpha);
-    let ls: f64 = w.iter().zip(&rec).map(|(a, b)| (a - b) * (a - b)).sum();
-    let l1: f64 = alpha.iter().map(|a| a.abs()).sum();
-    let l2: f64 = alpha.iter().map(|a| a * a).sum();
+    let ls: f64 = w
+        .iter()
+        .zip(&rec)
+        .map(|(a, b)| {
+            let d = (*a - *b).to_f64();
+            d * d
+        })
+        .sum();
+    let l1: f64 = alpha.iter().map(|a| a.abs().to_f64()).sum();
+    let l2: f64 = alpha.iter().map(|a| (*a * *a).to_f64()).sum();
     0.5 * ls + cfg.lambda1 * l1 - cfg.lambda2 * l2
 }
 
-fn validate(basis: &VBasis, w: &[f64], cfg: &LassoConfig) -> Result<()> {
+fn validate<T: Scalar>(basis: &VBasis<T>, w: &[T], cfg: &LassoConfig) -> Result<()> {
     if w.len() != basis.m() {
         return Err(Error::InvalidInput(format!(
             "lasso: basis dim {} vs target dim {}",
@@ -158,43 +218,69 @@ fn validate(basis: &VBasis, w: &[f64], cfg: &LassoConfig) -> Result<()> {
     Ok(())
 }
 
-/// Structured CD solve — O(m) per epoch. `warm` optionally warm-starts α
-/// (Algorithm 2 relies on this); the default start is the paper's `α = 𝟙`.
-pub fn solve(
-    basis: &VBasis,
-    w: &[f64],
-    cfg: &LassoConfig,
-    warm: Option<&[f64]>,
-) -> Result<LassoSolution> {
-    validate(basis, w, cfg)?;
+/// Validate and materialize the starting α (warm copy or the paper's
+/// `α = 𝟙`), with null columns (`d_j = 0`) forced to zero.
+fn init_alpha<T: Scalar>(basis: &VBasis<T>, warm: Option<&[T]>, who: &str) -> Result<Vec<T>> {
     let m = basis.m();
-    let d = basis.diffs();
-
-    let mut alpha: Vec<f64> = match warm {
+    let mut alpha: Vec<T> = match warm {
         Some(a) => {
             if a.len() != m {
                 return Err(Error::InvalidInput(format!(
-                    "lasso: warm start dim {} vs {}",
+                    "{who}: warm start dim {} vs {}",
                     a.len(),
                     m
                 )));
             }
             a.to_vec()
         }
-        None => vec![1.0; m],
+        None => vec![T::ONE; m],
     };
     // Null columns (d_j = 0, possible at j = 0 when v_0 = 0) can never
     // affect the reconstruction; force their α to 0 so they never pollute
     // the support.
-    for (a, dj) in alpha.iter_mut().zip(d) {
-        if *dj == 0.0 {
-            *a = 0.0;
+    for (a, dj) in alpha.iter_mut().zip(basis.diffs()) {
+        if *dj == T::ZERO {
+            *a = T::ZERO;
         }
     }
+    Ok(alpha)
+}
+
+/// Structured CD solve — O(m) per epoch. `warm` optionally warm-starts α
+/// (Algorithm 2 relies on this); the default start is the paper's `α = 𝟙`.
+/// Allocating wrapper over [`solve_ws`].
+pub fn solve<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    cfg: &LassoConfig,
+    warm: Option<&[T]>,
+) -> Result<LassoSolution<T>> {
+    let mut ws = Workspace::default();
+    solve_ws(basis, w, cfg, warm, &mut ws)
+}
+
+/// [`solve`] with a caller-owned [`Workspace`] so repeated solves (λ
+/// sweeps, Algorithm 2 ladders) do not allocate per call. Results are
+/// bitwise-identical to [`solve`].
+pub fn solve_ws<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    cfg: &LassoConfig,
+    warm: Option<&[T]>,
+    ws: &mut Workspace<T>,
+) -> Result<LassoSolution<T>> {
+    validate(basis, w, cfg)?;
+    let m = basis.m();
+    let d = basis.diffs();
+    let mut alpha = init_alpha(basis, warm, "lasso")?;
+
+    let lambda1 = T::from_f64(cfg.lambda1);
+    let two_lambda2 = T::from_f64(2.0 * cfg.lambda2);
+    let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
 
     // Residual r = ŵ − Vα, rebuilt exactly once per epoch in O(m).
-    let mut rec = vec![0.0; m];
-    let mut r = vec![0.0; m];
+    ws.reset(m);
+    let Workspace { rec, r } = ws;
     let mut unstable = false;
     let mut epochs = 0;
     let mut converged = false;
@@ -204,23 +290,23 @@ pub fn solve(
 
     for _ in 0..cfg.max_epochs {
         epochs += 1;
-        basis.apply_into(&alpha, &mut rec);
-        for i in 0..m {
-            r[i] = w[i] - rec[i];
+        basis.apply_into(&alpha, rec);
+        for ((ri, wi), reci) in r.iter_mut().zip(w).zip(rec.iter()) {
+            *ri = *wi - *reci;
         }
 
         // Descending pass with the lazy suffix scalar (see module docs).
-        let mut s = 0.0; // Σ_{i≥j} r_i, exact under all updates so far this epoch
-        let mut max_move = 0.0f64;
+        let mut s = T::ZERO; // Σ_{i≥j} r_i, exact under all updates so far this epoch
+        let mut max_move = T::ZERO;
         for j in (0..m).rev() {
             s += r[j];
             let dj = d[j];
-            if dj == 0.0 {
+            if dj == T::ZERO {
                 continue; // only possible at j=0 when v_0 == 0
             }
             let cj = basis.col_norm_sq(j);
-            let mut denom = cj - 2.0 * cfg.lambda2;
-            if denom <= f64::EPSILON * cj.max(1.0) {
+            let mut denom = cj - two_lambda2;
+            if denom <= T::EPSILON * cj.max(T::ONE) {
                 match cfg.on_instability {
                     Instability::Skip => {
                         // Per-coordinate fallback: the relaxation is
@@ -239,18 +325,18 @@ pub fn solve(
             }
             // ρ_j = V_jᵀ(r + V_j α_j) = d_j·s + c_j·α_j
             let rho = dj * s + cj * alpha[j];
-            let new = shrink(rho, cfg.lambda1) / denom;
+            let new = shrink(rho, lambda1) / denom;
             let delta = new - alpha[j];
-            if delta != 0.0 {
+            if delta != T::ZERO {
                 alpha[j] = new;
                 // The update subtracts d_j·δ from every residual row i ≥ j —
                 // all inside the suffix the scalar tracks.
-                s -= (m - j) as f64 * dj * delta;
+                s -= T::from_usize(m - j) * dj * delta;
                 max_move = max_move.max((dj * delta).abs());
             }
         }
 
-        if max_move < cfg.tol {
+        if max_move < tol {
             converged = true;
             break;
         }
@@ -274,45 +360,47 @@ pub fn solve(
 }
 
 /// FNV-1a hash of α's zero pattern (the support signature).
-fn support_signature(alpha: &[f64]) -> u64 {
+fn support_signature<T: Scalar>(alpha: &[T]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for (i, &a) in alpha.iter().enumerate() {
-        if a != 0.0 {
+        if a != T::ZERO {
             h = (h ^ i as u64).wrapping_mul(0x100000001b3);
         }
     }
     h
 }
 
-/// Dense (naïve) CD solve — O(m²) per epoch over the materialized `V`.
-/// Correctness oracle for [`solve`] and the §Perf baseline.
-pub fn solve_dense(
-    basis: &VBasis,
-    w: &[f64],
+/// Dense (naïve) CD solve — O(m²) per epoch over the dense `V`.
+/// Correctness oracle for [`solve`] and the §Perf baseline. Validates the
+/// warm start exactly like [`solve`] (a wrong-length warm start is an
+/// error, not a silent truncation).
+pub fn solve_dense<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
     cfg: &LassoConfig,
-    warm: Option<&[f64]>,
-) -> Result<LassoSolution> {
+    warm: Option<&[T]>,
+) -> Result<LassoSolution<T>> {
     validate(basis, w, cfg)?;
     let m = basis.m();
-    let v = basis.dense();
-
-    let mut alpha: Vec<f64> = match warm {
-        Some(a) => a.to_vec(),
-        None => vec![1.0; m],
-    };
-    for (a, dj) in alpha.iter_mut().zip(basis.diffs()) {
-        if *dj == 0.0 {
-            *a = 0.0;
-        }
-    }
-    // r = ŵ − Vα maintained incrementally.
-    let mut r: Vec<f64> = {
-        let rec = v.matvec(&alpha).unwrap();
-        w.iter().zip(&rec).map(|(a, b)| a - b).collect()
-    };
-
-    let col_norms: Vec<f64> = (0..m).map(|j| basis.col_norm_sq(j)).collect();
     let d = basis.diffs();
+    let mut alpha = init_alpha(basis, warm, "lasso (dense)")?;
+
+    let lambda1 = T::from_f64(cfg.lambda1);
+    let two_lambda2 = T::from_f64(2.0 * cfg.lambda2);
+    let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
+
+    // r = ŵ − Vα maintained incrementally; the initial reconstruction is
+    // the naïve O(m²) row-by-row dense product.
+    let mut r: Vec<T> = Vec::with_capacity(m);
+    for (i, wi) in w.iter().enumerate() {
+        let mut acc = T::ZERO;
+        for (dj, aj) in d[..=i].iter().zip(&alpha[..=i]) {
+            acc += *dj * *aj;
+        }
+        r.push(*wi - acc);
+    }
+
+    let col_norms: Vec<T> = (0..m).map(|j| basis.col_norm_sq(j)).collect();
     let mut unstable = false;
     let mut epochs = 0;
     let mut converged = false;
@@ -321,15 +409,15 @@ pub fn solve_dense(
 
     for _ in 0..cfg.max_epochs {
         epochs += 1;
-        let mut max_move = 0.0f64;
+        let mut max_move = T::ZERO;
         for j in (0..m).rev() {
             let dj = d[j];
-            if dj == 0.0 {
+            if dj == T::ZERO {
                 continue;
             }
             let cj = col_norms[j];
-            let mut denom = cj - 2.0 * cfg.lambda2;
-            if denom <= f64::EPSILON * cj.max(1.0) {
+            let mut denom = cj - two_lambda2;
+            if denom <= T::EPSILON * cj.max(T::ONE) {
                 match cfg.on_instability {
                     Instability::Skip => {
                         unstable = true;
@@ -341,11 +429,14 @@ pub fn solve_dense(
                 }
             }
             // V_jᵀ r over the dense column (rows j..m all equal d_j).
-            let vt_r: f64 = r[j..].iter().sum::<f64>() * dj;
-            let rho = vt_r + cj * alpha[j];
-            let new = shrink(rho, cfg.lambda1) / denom;
+            let mut suffix = T::ZERO;
+            for ri in &r[j..] {
+                suffix += *ri;
+            }
+            let rho = suffix * dj + cj * alpha[j];
+            let new = shrink(rho, lambda1) / denom;
             let delta = new - alpha[j];
-            if delta != 0.0 {
+            if delta != T::ZERO {
                 alpha[j] = new;
                 for ri in &mut r[j..] {
                     *ri -= dj * delta;
@@ -353,7 +444,7 @@ pub fn solve_dense(
                 max_move = max_move.max((dj * delta).abs());
             }
         }
-        if max_move < cfg.tol {
+        if max_move < tol {
             converged = true;
             break;
         }
@@ -396,6 +487,7 @@ mod tests {
         assert_eq!(shrink(0.5, 1.0), 0.0);
         assert_eq!(shrink(-0.5, 1.0), 0.0);
         assert_eq!(shrink(1.0, 1.0), 0.0);
+        assert_eq!(shrink(3.0f32, 1.0f32), 2.0f32);
     }
 
     #[test]
@@ -430,6 +522,43 @@ mod tests {
                 assert!((a - b2).abs() < 1e-6, "{a} vs {b2}");
             }
         }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_identical() {
+        let v = random_values(64, 11);
+        let b = VBasis::new(&v);
+        let mut ws = Workspace::default();
+        for lambda in [0.01, 0.1, 1.0] {
+            let cfg = LassoConfig { lambda1: lambda, ..Default::default() };
+            let fresh = solve(&b, &v, &cfg, None).unwrap();
+            let reused = solve_ws(&b, &v, &cfg, None, &mut ws).unwrap();
+            assert_eq!(fresh.alpha, reused.alpha, "λ={lambda}");
+            assert_eq!(fresh.epochs, reused.epochs, "λ={lambda}");
+            assert_eq!(fresh.objective.to_bits(), reused.objective.to_bits(), "λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn f32_lane_tracks_f64_objective() {
+        let v = random_values(64, 12);
+        // Narrowing can merge near-equal neighbours; dedup to keep the
+        // f32 basis strictly ascending (the lane's own prepare stage does
+        // the same through UniqueDecomp).
+        let mut v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        v32.dedup();
+        let b = VBasis::new(&v);
+        let b32 = VBasis::new(&v32);
+        let cfg = LassoConfig { lambda1: 0.3, max_epochs: 5000, ..Default::default() };
+        let s64 = solve(&b, &v, &cfg, None).unwrap();
+        let s32 = solve(&b32, &v32, &cfg, None).unwrap();
+        let denom = s64.objective.abs().max(1e-9);
+        assert!(
+            (s32.objective - s64.objective).abs() / denom < 1e-3,
+            "f32 objective {} vs f64 {}",
+            s32.objective,
+            s64.objective
+        );
     }
 
     #[test]
@@ -543,6 +672,19 @@ mod tests {
         )
         .is_err());
         assert!(solve(&b, &[1.0, 2.0], &LassoConfig::default(), Some(&[1.0])).is_err());
+    }
+
+    #[test]
+    fn dense_rejects_bad_warm_start_like_structured() {
+        // Regression: solve_dense used to accept a wrong-length warm start
+        // (silent `to_vec()`), diverging from `solve` and courting an
+        // out-of-bounds panic in the epoch loop.
+        let b = VBasis::new(&[1.0, 2.0, 4.0]);
+        let w = [1.0, 2.0, 4.0];
+        let cfg = LassoConfig::default();
+        assert!(solve_dense(&b, &w, &cfg, Some(&[1.0])).is_err());
+        assert!(solve_dense(&b, &w, &cfg, Some(&[1.0, 1.0, 1.0, 1.0])).is_err());
+        assert!(solve_dense(&b, &w, &cfg, Some(&[1.0, 1.0, 1.0])).is_ok());
     }
 
     #[test]

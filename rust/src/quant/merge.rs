@@ -7,32 +7,35 @@
 //! until the count bound holds. Also exposed as a standalone agglomerative
 //! quantizer building block (cf. Xiang & Joy 1994, the paper's ref [11]).
 
+use crate::linalg::scalar::Scalar;
+
 /// Merge the levels of a piecewise-constant reconstruction (over sorted
 /// unique values) down to at most `target` distinct levels. `weights` are
 /// per-position multiplicities (None = 1 each). Returns the new
-/// reconstruction.
-pub fn merge_to_target(
-    reconstruction: &[f64],
-    weights: Option<&[f64]>,
+/// reconstruction. Lane-generic ([`Scalar`]): the f32 instantiation is the
+/// count-enforcement fallback of the single-precision fast path.
+pub fn merge_to_target<T: Scalar>(
+    reconstruction: &[T],
+    weights: Option<&[T]>,
     target: usize,
-) -> Vec<f64> {
+) -> Vec<T> {
     assert!(target >= 1);
     let m = reconstruction.len();
     if m == 0 {
         return Vec::new();
     }
     // Segment list: (start, end_exclusive, weight, weighted mean).
-    let mut segs: Vec<(usize, usize, f64, f64)> = Vec::new();
+    let mut segs: Vec<(usize, usize, T, T)> = Vec::new();
     let mut start = 0usize;
     for i in 1..=m {
         if i == m || reconstruction[i] != reconstruction[start] {
-            let (mut wsum, mut xsum) = (0.0, 0.0);
+            let (mut wsum, mut xsum) = (T::ZERO, T::ZERO);
             for j in start..i {
-                let w = weights.map_or(1.0, |ws| ws[j]);
+                let w = weights.map_or(T::ONE, |ws| ws[j]);
                 wsum += w;
                 xsum += w * reconstruction[j];
             }
-            let mean = if wsum > 0.0 { xsum / wsum } else { reconstruction[start] };
+            let mean = if wsum > T::ZERO { xsum / wsum } else { reconstruction[start] };
             segs.push((start, i, wsum, mean));
             start = i;
         }
@@ -41,12 +44,13 @@ pub fn merge_to_target(
     // Greedy adjacent merges: Ward cost = W1·W2/(W1+W2)·(m1−m2)².
     while segs.len() > target {
         let mut best = 0usize;
-        let mut best_cost = f64::INFINITY;
+        let mut best_cost = T::INFINITY;
         for i in 0..segs.len() - 1 {
             let (_, _, w1, m1) = segs[i];
             let (_, _, w2, m2) = segs[i + 1];
             let denom = w1 + w2;
-            let cost = if denom > 0.0 { w1 * w2 / denom * (m1 - m2) * (m1 - m2) } else { 0.0 };
+            let cost =
+                if denom > T::ZERO { w1 * w2 / denom * (m1 - m2) * (m1 - m2) } else { T::ZERO };
             if cost < best_cost {
                 best_cost = cost;
                 best = i;
@@ -55,12 +59,12 @@ pub fn merge_to_target(
         let (s1, _, w1, m1) = segs[best];
         let (_, e2, w2, m2) = segs[best + 1];
         let w = w1 + w2;
-        let mean = if w > 0.0 { (w1 * m1 + w2 * m2) / w } else { m1 };
+        let mean = if w > T::ZERO { (w1 * m1 + w2 * m2) / w } else { m1 };
         segs[best] = (s1, e2, w, mean);
         segs.remove(best + 1);
     }
 
-    let mut out = vec![0.0; m];
+    let mut out = vec![T::ZERO; m];
     for &(s, e, _, mean) in &segs {
         for o in &mut out[s..e] {
             *o = mean;
@@ -121,6 +125,16 @@ mod tests {
 
     #[test]
     fn empty_input() {
-        assert!(merge_to_target(&[], None, 3).is_empty());
+        assert!(merge_to_target::<f64>(&[], None, 3).is_empty());
+    }
+
+    #[test]
+    fn f32_lane_merges_like_f64() {
+        let rec = vec![0.0f32, 1.0, 1.05, 10.0];
+        let merged = merge_to_target(&rec, None, 3);
+        assert_eq!(merged[0], 0.0);
+        assert_eq!(merged[3], 10.0);
+        assert_eq!(merged[1], merged[2]);
+        assert!((merged[1] - 1.025).abs() < 1e-5);
     }
 }

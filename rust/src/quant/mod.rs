@@ -28,6 +28,13 @@
 //! * [`quantize_prepared`] / [`quantize_timed`] — the raw staged calls;
 //!   `quantize_timed` reports per-stage wall times for the coordinator's
 //!   prepare-vs-solve metrics.
+//!
+//! Every entry point exists on two precision lanes: the default f64
+//! reference lane and an f32 fast lane ([`Precision`],
+//! [`quantize_f32`]/[`quantize_batch_f32`]/[`quantize_sweep_f32`],
+//! [`PreparedInputF32`]) that halves memory traffic on NN-weight-shaped
+//! workloads. See [`pipeline`] for lane selection and the precision
+//! contract.
 
 pub mod cluster_ls;
 pub mod codebook;
@@ -45,19 +52,38 @@ pub mod unique;
 pub mod vmatrix;
 
 pub use pipeline::{
-    quantize_batch, quantize_prepared, quantize_sweep, quantize_sweep_with, quantize_timed,
-    solver_for, PreparedInput, QuantSolver, StageTimings, SweepState,
+    quantize_batch, quantize_batch_f32, quantize_f32, quantize_prepared, quantize_prepared_f32,
+    quantize_sweep, quantize_sweep_f32, quantize_sweep_f32_with, quantize_sweep_with,
+    quantize_timed, solver_for, PreparedInput, PreparedInputF32, QuantSolver, StageTimings,
+    SweepState,
 };
-pub use types::{QuantDiag, QuantMethod, QuantOptions, QuantOutput};
+pub use types::{
+    Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputF32, QuantOutputT,
+};
 
 use crate::Result;
 
 /// Quantize `w` with the chosen method. This is the library's main entry
 /// point; the coordinator's native engine and the CLI both route here. It
 /// is a thin one-shot over the staged pipeline: prepare, then solve.
+///
+/// [`QuantOptions::precision`] selects the lane: the default `F64` is the
+/// bitwise-stable reference path; `F32` narrows the input once, runs the
+/// whole pipeline in single precision (the NN-weight fast path) and widens
+/// the output at the end. Callers holding f32 data should use
+/// [`quantize_f32`] directly and skip both conversions.
 pub fn quantize(w: &[f64], method: QuantMethod, opts: &QuantOptions) -> Result<QuantOutput> {
-    let prep = PreparedInput::new(w)?;
-    quantize_prepared(&prep, method, opts)
+    match opts.precision {
+        Precision::F64 => {
+            let prep = PreparedInput::new(w)?;
+            quantize_prepared(&prep, method, opts)
+        }
+        Precision::F32 => {
+            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            let prep = PreparedInputF32::from_vec(narrow)?;
+            Ok(quantize_prepared_f32(&prep, method, opts)?.widen())
+        }
+    }
 }
 
 #[cfg(test)]

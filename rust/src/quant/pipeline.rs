@@ -22,8 +22,42 @@
 //!   which is bitwise-identical to per-call [`quantize`](super::quantize).
 //! * [`quantize_timed`] — the coordinator's entry point, reporting
 //!   per-stage wall times ([`StageTimings`]) for the metrics surface.
+//!
+//! ## Precision lanes
+//!
+//! The pipeline is generic over the element precision
+//! ([`crate::linalg::scalar::Scalar`]): `PreparedInput<f64>` (the default)
+//! is the bitwise-reference lane, and [`PreparedInputF32`] is the
+//! single-precision fast path for NN-weight-shaped workloads — roughly
+//! half the memory traffic through the sort, the O(m)-per-epoch CD kernel
+//! and the O(n) recovery. Lane selection:
+//!
+//! * [`QuantOptions::precision`] switches [`quantize`](super::quantize) /
+//!   [`quantize_batch`] (input narrowed once at entry, output widened at
+//!   exit);
+//! * the f32-native entry points ([`quantize_f32`], [`quantize_sweep_f32`],
+//!   [`quantize_batch_f32`]) take and return `f32` end to end;
+//! * coordinator jobs carry a typed payload and pick the lane from it.
+//!
+//! CD-family methods (l1, l1+LS, l1+l2, iterative-l1) have native f32
+//! kernels; every other method falls back to widening the prepared input
+//! ([`PreparedInput::widen`]) and running its f64 solver — correct, but
+//! without the bandwidth win. On the f32 lane, CD tolerances are floored
+//! at `1e-6` (see `linalg::scalar` for the precision contract).
+//!
+//! ## Allocation discipline
+//!
+//! The original input is held behind an `Arc`, so cloning a prepared input
+//! or building one from an owned vector ([`PreparedInput::from_vec`] /
+//! [`PreparedInput::from_shared`]) never copies the data; finalization
+//! computes the output levels in level space (O(m log m), no full-vector
+//! clone-and-sort); and [`SweepState`] owns reusable CD workspaces
+//! ([`lasso::Workspace`]) so a λ path allocates its solve buffers once,
+//! not per grid point.
 
-use super::types::{self, QuantDiag, QuantMethod, QuantOptions, QuantOutput};
+use super::types::{
+    Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputF32, QuantOutputT,
+};
 use super::unique::UniqueDecomp;
 use super::vmatrix::VBasis;
 use super::{cluster_ls, iterative, l0, lasso, merge, refit, tv_exact};
@@ -31,86 +65,109 @@ use crate::cluster::data_transform::{data_transform_cluster, DataTransformConfig
 use crate::cluster::gmm::{gmm_1d, GmmConfig};
 use crate::cluster::kmeans::{assign_sorted, KMeansConfig};
 use crate::cluster::kmeans_dp::kmeans_dp;
+use crate::linalg::scalar::Scalar;
 use crate::linalg::stats::distinct_count_exact;
 use crate::Result;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// The prepare-stage product: everything a solver needs that depends only
-/// on the input vector, not on the method or its options.
+/// on the input vector, not on the method or its options. Generic over the
+/// lane precision; `PreparedInput<f64>` is the default reference lane.
 #[derive(Debug, Clone)]
-pub struct PreparedInput {
-    original: Vec<f64>,
-    unique: UniqueDecomp,
-    basis: VBasis,
-    /// Multiplicity of each unique value, as f64 (weighted LS variants).
-    weights: Vec<f64>,
+pub struct PreparedInput<T: Scalar = f64> {
+    /// The original input, shared (never deep-copied by `clone`/`finish`).
+    original: Arc<[T]>,
+    unique: UniqueDecomp<T>,
+    basis: VBasis<T>,
+    /// Multiplicity of each unique value, in lane precision (weighted LS
+    /// variants).
+    weights: Vec<T>,
     /// `weight_suffix[j] = Σ_{i≥j} weights[i]` (m+1 entries, last 0).
-    weight_suffix: Vec<f64>,
+    weight_suffix: Vec<T>,
     /// `value_prefix[j] = Σ_{i<j} ŵ_i` (m+1 entries, first 0).
-    value_prefix: Vec<f64>,
+    value_prefix: Vec<T>,
 }
 
-impl PreparedInput {
-    /// Run the prepare stage on `w` (sort + decompose + basis + sums).
-    pub fn new(w: &[f64]) -> Result<PreparedInput> {
-        let unique = UniqueDecomp::new(w)?;
+/// The single-precision prepared input (the f32 fast lane).
+pub type PreparedInputF32 = PreparedInput<f32>;
+
+impl<T: Scalar> PreparedInput<T> {
+    /// Derive the basis, weights and cached sums from an existing
+    /// decomposition (shared by the prepare stage and the f32→f64 widen).
+    fn from_parts(original: Arc<[T]>, unique: UniqueDecomp<T>) -> PreparedInput<T> {
         let basis = VBasis::new(&unique.values);
         let weights = unique.weights();
         let m = unique.m();
-        let mut weight_suffix = vec![0.0; m + 1];
+        let mut weight_suffix = vec![T::ZERO; m + 1];
         for j in (0..m).rev() {
             weight_suffix[j] = weight_suffix[j + 1] + weights[j];
         }
-        let mut value_prefix = vec![0.0; m + 1];
+        let mut value_prefix = vec![T::ZERO; m + 1];
         for j in 0..m {
             value_prefix[j + 1] = value_prefix[j] + unique.values[j];
         }
-        Ok(PreparedInput {
-            original: w.to_vec(),
-            unique,
-            basis,
-            weights,
-            weight_suffix,
-            value_prefix,
-        })
+        PreparedInput { original, unique, basis, weights, weight_suffix, value_prefix }
+    }
+
+    fn build(original: Arc<[T]>) -> Result<PreparedInput<T>> {
+        let unique = UniqueDecomp::new(&original)?;
+        Ok(Self::from_parts(original, unique))
+    }
+
+    /// Run the prepare stage on `w` (sort + decompose + basis + sums).
+    /// Copies the slice once into shared storage; callers that own their
+    /// vector should prefer [`PreparedInput::from_vec`], which does not.
+    pub fn new(w: &[T]) -> Result<PreparedInput<T>> {
+        Self::build(Arc::from(w))
+    }
+
+    /// Prepare an owned vector without copying the data.
+    pub fn from_vec(w: Vec<T>) -> Result<PreparedInput<T>> {
+        Self::build(Arc::from(w))
+    }
+
+    /// Prepare an already-shared vector without copying the data.
+    pub fn from_shared(w: Arc<[T]>) -> Result<PreparedInput<T>> {
+        Self::build(w)
     }
 
     /// The original (full-length) input vector.
-    pub fn original(&self) -> &[f64] {
+    pub fn original(&self) -> &[T] {
         &self.original
     }
 
     /// The unique decomposition.
-    pub fn unique(&self) -> &UniqueDecomp {
+    pub fn unique(&self) -> &UniqueDecomp<T> {
         &self.unique
     }
 
     /// The difference basis over the unique values.
-    pub fn basis(&self) -> &VBasis {
+    pub fn basis(&self) -> &VBasis<T> {
         &self.basis
     }
 
-    /// Multiplicity weights (f64) per unique value.
-    pub fn weights(&self) -> &[f64] {
+    /// Multiplicity weights (lane precision) per unique value.
+    pub fn weights(&self) -> &[T] {
         &self.weights
     }
 
     /// Cached suffix weight `Σ_{i≥j} counts[i]` in O(1).
-    pub fn weight_suffix(&self, j: usize) -> f64 {
+    pub fn weight_suffix(&self, j: usize) -> T {
         self.weight_suffix[j]
     }
 
     /// Cached segment sum `Σ_{a≤i<b} ŵ_i` in O(1).
-    pub fn segment_sum(&self, a: usize, b: usize) -> f64 {
+    pub fn segment_sum(&self, a: usize, b: usize) -> T {
         self.value_prefix[b] - self.value_prefix[a]
     }
 
     /// Unweighted mean of the unique values over `[a, b)` in O(1).
-    pub fn segment_mean(&self, a: usize, b: usize) -> f64 {
+    pub fn segment_mean(&self, a: usize, b: usize) -> T {
         if b > a {
-            self.segment_sum(a, b) / (b - a) as f64
+            self.segment_sum(a, b) / T::from_usize(b - a)
         } else {
-            0.0
+            T::ZERO
         }
     }
 
@@ -131,28 +188,114 @@ impl PreparedInput {
 
     /// Recover the full-length vector from per-level values and finalize
     /// (clamp + levels + loss bookkeeping).
+    ///
+    /// Finalization works in *level space*: the clamp and the distinct-level
+    /// extraction run over the `m` per-level values before recovery, which
+    /// is equivalent to the historical full-vector path (recovery replicates
+    /// level values, and every level occurs at least once) while replacing
+    /// the O(n log n) clone-and-sort with an O(m log m) one. The l2 loss is
+    /// still accumulated over the full vector in input order, so f64
+    /// results stay bitwise-identical.
     pub fn finish(
         &self,
-        level_values: &[f64],
+        level_values: &[T],
         clamp: Option<(f64, f64)>,
         diag: QuantDiag,
-    ) -> Result<QuantOutput> {
-        let full = self.unique.recover(level_values)?;
-        Ok(types::finalize(&self.original, full, clamp, diag))
+    ) -> Result<QuantOutputT<T>> {
+        let mut lv = level_values.to_vec();
+        let mut clamped = 0usize;
+        if let Some((lo, hi)) = clamp {
+            let (lo, hi) = (T::from_f64(lo), T::from_f64(hi));
+            for (v, &c) in lv.iter_mut().zip(&self.unique.counts) {
+                // Mirrors hard_sigmoid semantics: only strictly
+                // out-of-range values move (and count, once per original
+                // occurrence).
+                if *v < lo {
+                    *v = lo;
+                    clamped += c;
+                } else if *v > hi {
+                    *v = hi;
+                    clamped += c;
+                }
+            }
+        }
+        let values = self.unique.recover(&lv)?;
+        let mut l2_loss = 0.0f64;
+        for (o, q) in self.original.iter().zip(&values) {
+            let d = (*o - *q).to_f64();
+            l2_loss += d * d;
+        }
+        let mut levels = lv;
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        Ok(QuantOutputT { values, levels, l2_loss, clamped, diag })
+    }
+}
+
+impl PreparedInput<f32> {
+    /// Widen to a double-precision prepared input. Reuses the sort: f32 →
+    /// f64 conversion is exact and order-preserving, so the decomposition
+    /// is rebuilt from the already-sorted unique values in O(n + m) without
+    /// re-sorting. Backs the f64 fallback for methods without a native f32
+    /// kernel.
+    pub fn widen(&self) -> PreparedInput<f64> {
+        let unique = UniqueDecomp {
+            values: self.unique.values.iter().map(|&x| f64::from(x)).collect(),
+            inverse: self.unique.inverse.clone(),
+            counts: self.unique.counts.clone(),
+        };
+        let original: Arc<[f64]> =
+            self.original.iter().map(|&x| f64::from(x)).collect::<Vec<f64>>().into();
+        PreparedInput::from_parts(original, unique)
     }
 }
 
 /// Reusable state carried along a λ sweep ([`quantize_sweep`]): solvers
-/// that can warm-start store their coefficients here between steps.
+/// that can warm-start store their coefficients here between steps, and
+/// the CD workspaces live here so path solves don't allocate per step.
 #[derive(Debug, Default)]
 pub struct SweepState {
-    /// α from the previous step (lasso-family warm start).
+    /// α from the previous step (lasso-family warm start, f64 lane).
     pub warm_alpha: Option<Vec<f64>>,
+    /// α from the previous step (lasso-family warm start, f32 lane).
+    pub warm_alpha32: Option<Vec<f32>>,
+    /// Reusable CD buffers for the f64 lane.
+    ws64: lasso::Workspace<f64>,
+    /// Reusable CD buffers for the f32 lane.
+    ws32: lasso::Workspace<f32>,
+    /// Cached f64 widening of the swept f32 input, built on first use by
+    /// the widen-fallback path so non-CD methods don't re-widen per λ.
+    /// Keyed by the source buffer so a state reused across different
+    /// inputs rebuilds instead of serving the wrong widening.
+    widened: Option<(Arc<[f32]>, PreparedInput<f64>)>,
+}
+
+/// Shared λ-path warm-start bookkeeping for the CD-family solvers: take
+/// the previous step's α out of its lane slot, solve with the lane's
+/// reusable workspace, and store the new α back. One point of change for
+/// both lanes and all three path-capable solvers.
+fn path_step_warm<T: Scalar, F>(
+    warm_slot: &mut Option<Vec<T>>,
+    ws: &mut lasso::Workspace<T>,
+    solve: F,
+) -> Result<(Vec<T>, QuantDiag)>
+where
+    F: FnOnce(Option<&[T]>, &mut lasso::Workspace<T>) -> Result<(Vec<T>, QuantDiag, Vec<T>)>,
+{
+    let warm = warm_slot.take();
+    let (levels, diag, alpha) = solve(warm.as_deref(), ws)?;
+    *warm_slot = Some(alpha);
+    Ok((levels, diag))
 }
 
 /// The solve stage: one impl per [`QuantMethod`]. Solvers return the
 /// per-level values (length `m`) plus diagnostics; full-length recovery
 /// and finalization happen in [`PreparedInput::finish`].
+///
+/// The `*_f32` methods are the single-precision lane. Their default
+/// implementations widen the prepared input and run the f64 solver, so
+/// every method is f32-callable; the CD-family solvers override them with
+/// native f32 kernels.
 pub trait QuantSolver: Sync {
     /// The method this solver implements (table registration key).
     fn method(&self) -> QuantMethod;
@@ -171,17 +314,42 @@ pub trait QuantSolver: Sync {
     ) -> Result<(Vec<f64>, QuantDiag)> {
         self.solve(prep, opts)
     }
-}
 
-/// Shared warm-start bookkeeping for path-capable solvers: feed the
-/// previous step's α in, store the new one back.
-fn step_with_warm<F>(state: &mut SweepState, solve: F) -> Result<(Vec<f64>, QuantDiag)>
-where
-    F: FnOnce(Option<&[f64]>) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)>,
-{
-    let (levels, diag, alpha) = solve(state.warm_alpha.as_deref())?;
-    state.warm_alpha = Some(alpha);
-    Ok((levels, diag))
+    /// Solve on the f32 lane. Default: widen and run the f64 solver (no
+    /// bandwidth win, but correct for every method).
+    fn solve_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        let wide = prep.widen();
+        let (levels, diag) = self.solve(&wide, opts)?;
+        Ok((levels.iter().map(|&x| x as f32).collect(), diag))
+    }
+
+    /// One step of a λ path on the f32 lane. The default is stateless in
+    /// the solver sense but caches the f64 widening of the prepared input
+    /// in [`SweepState`], so widen-fallback methods pay the O(n + m)
+    /// conversion once per sweep instead of once per λ. Results are
+    /// identical to [`QuantSolver::solve_f32`] (widening is
+    /// deterministic).
+    fn solve_path_step_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        let stale = match &state.widened {
+            Some((src, _)) => !Arc::ptr_eq(src, &prep.original),
+            None => true,
+        };
+        if stale {
+            state.widened = Some((Arc::clone(&prep.original), prep.widen()));
+        }
+        let (_, wide) = state.widened.as_ref().expect("widened cache just filled");
+        let (levels, diag) = self.solve(wide, opts)?;
+        Ok((levels.iter().map(|&x| x as f32).collect(), diag))
+    }
 }
 
 fn lasso_cfg(opts: &QuantOptions) -> lasso::LassoConfig {
@@ -203,15 +371,16 @@ struct L1Solver {
 }
 
 impl L1Solver {
-    fn solve_with(
+    fn solve_with<T: Scalar>(
         &self,
-        prep: &PreparedInput,
+        prep: &PreparedInput<T>,
         opts: &QuantOptions,
-        warm: Option<&[f64]>,
-    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        warm: Option<&[T]>,
+        ws: &mut lasso::Workspace<T>,
+    ) -> Result<(Vec<T>, QuantDiag, Vec<T>)> {
         let basis = prep.basis();
         let w = &prep.unique().values;
-        let sol = lasso::solve(basis, w, &lasso_cfg(opts), warm)?;
+        let sol = lasso::solve_ws(basis, w, &lasso_cfg(opts), warm, ws)?;
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.converged,
@@ -240,7 +409,8 @@ impl QuantSolver for L1Solver {
     }
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-        let (levels, diag, _) = self.solve_with(prep, opts, None)?;
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_with(prep, opts, None, &mut ws)?;
         Ok((levels, diag))
     }
 
@@ -250,23 +420,47 @@ impl QuantSolver for L1Solver {
         opts: &QuantOptions,
         state: &mut SweepState,
     ) -> Result<(Vec<f64>, QuantDiag)> {
-        step_with_warm(state, |warm| self.solve_with(prep, opts, warm))
+        path_step_warm(&mut state.warm_alpha, &mut state.ws64, |warm, ws| {
+            self.solve_with(prep, opts, warm, ws)
+        })
+    }
+
+    fn solve_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_with(prep, opts, None, &mut ws)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        path_step_warm(&mut state.warm_alpha32, &mut state.ws32, |warm, ws| {
+            self.solve_with(prep, opts, warm, ws)
+        })
     }
 }
 
 struct L1L2Solver;
 
 impl L1L2Solver {
-    fn solve_with(
+    fn solve_with<T: Scalar>(
         &self,
-        prep: &PreparedInput,
+        prep: &PreparedInput<T>,
         opts: &QuantOptions,
-        warm: Option<&[f64]>,
-    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        warm: Option<&[T]>,
+        ws: &mut lasso::Workspace<T>,
+    ) -> Result<(Vec<T>, QuantDiag, Vec<T>)> {
         let basis = prep.basis();
         let w = &prep.unique().values;
         let cfg = lasso::LassoConfig { lambda2: opts.lambda2, ..lasso_cfg(opts) };
-        let sol = lasso::solve(basis, w, &cfg, warm)?;
+        let sol = lasso::solve_ws(basis, w, &cfg, warm, ws)?;
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.converged,
@@ -292,7 +486,8 @@ impl QuantSolver for L1L2Solver {
     }
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-        let (levels, diag, _) = self.solve_with(prep, opts, None)?;
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_with(prep, opts, None, &mut ws)?;
         Ok((levels, diag))
     }
 
@@ -302,7 +497,30 @@ impl QuantSolver for L1L2Solver {
         opts: &QuantOptions,
         state: &mut SweepState,
     ) -> Result<(Vec<f64>, QuantDiag)> {
-        step_with_warm(state, |warm| self.solve_with(prep, opts, warm))
+        path_step_warm(&mut state.warm_alpha, &mut state.ws64, |warm, ws| {
+            self.solve_with(prep, opts, warm, ws)
+        })
+    }
+
+    fn solve_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_with(prep, opts, None, &mut ws)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        path_step_warm(&mut state.warm_alpha32, &mut state.ws32, |warm, ws| {
+            self.solve_with(prep, opts, warm, ws)
+        })
     }
 }
 
@@ -345,12 +563,13 @@ impl QuantSolver for L0Solver {
 struct IterativeSolver;
 
 impl IterativeSolver {
-    fn solve_warm(
+    fn solve_warm<T: Scalar>(
         &self,
-        prep: &PreparedInput,
+        prep: &PreparedInput<T>,
         opts: &QuantOptions,
-        warm: Option<&[f64]>,
-    ) -> Result<(Vec<f64>, QuantDiag, Vec<f64>)> {
+        warm: Option<&[T]>,
+        ws: &mut lasso::Workspace<T>,
+    ) -> Result<(Vec<T>, QuantDiag, Vec<T>)> {
         let basis = prep.basis();
         let cfg = iterative::IterativeConfig {
             target_nnz: opts.target_values,
@@ -359,7 +578,7 @@ impl IterativeSolver {
             cd: lasso_cfg(opts),
             accelerate: 1.0,
         };
-        let sol = iterative::solve_iterative_warm(basis, &prep.unique().values, &cfg, warm)?;
+        let sol = iterative::solve_iterative_ws(basis, &prep.unique().values, &cfg, warm, ws)?;
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.reached_target,
@@ -385,7 +604,8 @@ impl QuantSolver for IterativeSolver {
     }
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
-        let (levels, diag, _) = self.solve_warm(prep, opts, None)?;
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_warm(prep, opts, None, &mut ws)?;
         Ok((levels, diag))
     }
 
@@ -395,7 +615,30 @@ impl QuantSolver for IterativeSolver {
         opts: &QuantOptions,
         state: &mut SweepState,
     ) -> Result<(Vec<f64>, QuantDiag)> {
-        step_with_warm(state, |warm| self.solve_warm(prep, opts, warm))
+        path_step_warm(&mut state.warm_alpha, &mut state.ws64, |warm, ws| {
+            self.solve_warm(prep, opts, warm, ws)
+        })
+    }
+
+    fn solve_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        let mut ws = lasso::Workspace::default();
+        let (levels, diag, _) = self.solve_warm(prep, opts, None, &mut ws)?;
+        Ok((levels, diag))
+    }
+
+    fn solve_path_step_f32(
+        &self,
+        prep: &PreparedInputF32,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        path_step_warm(&mut state.warm_alpha32, &mut state.ws32, |warm, ws| {
+            self.solve_warm(prep, opts, warm, ws)
+        })
     }
 }
 
@@ -713,26 +956,85 @@ pub fn quantize_prepared(
     prep.finish(&levels, opts.clamp, diag)
 }
 
+/// Solve stage only, f32 lane: quantize a single-precision prepared input.
+pub fn quantize_prepared_f32(
+    prep: &PreparedInputF32,
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<QuantOutputF32> {
+    let (levels, diag) = solver_for(method).solve_f32(prep, opts)?;
+    prep.finish(&levels, opts.clamp, diag)
+}
+
+/// One-shot f32-native quantize: prepare + solve in single precision,
+/// returning an f32 output (no widening pass). The f64 API's
+/// [`QuantOptions::precision`] routes through this lane and widens.
+pub fn quantize_f32(
+    w: &[f32],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<QuantOutputF32> {
+    let prep = PreparedInput::new(w)?;
+    quantize_prepared_f32(&prep, method, opts)
+}
+
 /// Per-stage wall times of one pipeline run (coordinator metrics).
 #[derive(Debug, Clone, Copy)]
 pub struct StageTimings {
-    /// Prepare stage (unique decomposition + basis + cached sums).
+    /// Prepare stage (unique decomposition + basis + cached sums; on the
+    /// f32 lane this includes the one-time input narrowing, if any).
     pub prepare: Duration,
     /// Solve stage (method solver + recovery + finalize).
     pub solve: Duration,
 }
 
-/// One-shot quantize that reports per-stage timings.
+/// One-shot quantize that reports per-stage timings. Honors
+/// [`QuantOptions::precision`] like [`quantize`](super::quantize).
 pub fn quantize_timed(
     w: &[f64],
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<(QuantOutput, StageTimings)> {
+    quantize_timed_vec(w.to_vec(), method, opts)
+}
+
+/// [`quantize_timed`] over an owned vector: the prepared input takes the
+/// buffer as-is instead of copying it (the coordinator's serve path).
+pub fn quantize_timed_vec(
+    w: Vec<f64>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<(QuantOutput, StageTimings)> {
+    match opts.precision {
+        Precision::F64 => {
+            let t0 = Instant::now();
+            let prep = PreparedInput::from_vec(w)?;
+            let prepare = t0.elapsed();
+            let t1 = Instant::now();
+            let out = quantize_prepared(&prep, method, opts)?;
+            let solve = t1.elapsed();
+            Ok((out, StageTimings { prepare, solve }))
+        }
+        Precision::F32 => {
+            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            quantize_timed_f32_vec(narrow, method, opts)
+        }
+    }
+}
+
+/// Timed quantize of an owned f32 payload on the f32 lane; the output is
+/// widened for the coordinator's f64 result surface. Narrowing never
+/// happens here — the payload is already single precision.
+pub fn quantize_timed_f32_vec(
+    w: Vec<f32>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Result<(QuantOutput, StageTimings)> {
     let t0 = Instant::now();
-    let prep = PreparedInput::new(w)?;
+    let prep = PreparedInput::from_vec(w)?;
     let prepare = t0.elapsed();
     let t1 = Instant::now();
-    let out = quantize_prepared(&prep, method, opts)?;
+    let out = quantize_prepared_f32(&prep, method, opts)?.widen();
     let solve = t1.elapsed();
     Ok((out, StageTimings { prepare, solve }))
 }
@@ -743,27 +1045,28 @@ fn batch_threads(n: usize) -> usize {
     cores.min(n).min(8)
 }
 
-/// Quantize many vectors with the same method/options. Inputs are
-/// independent, so the batch fans across scoped threads; results come
-/// back in input order and are bitwise-identical to per-call
-/// [`quantize`](super::quantize).
-pub fn quantize_batch(
-    inputs: &[Vec<f64>],
-    method: QuantMethod,
-    opts: &QuantOptions,
-) -> Vec<Result<QuantOutput>> {
+/// Shared scoped-thread fan-out for both precision lanes' batch entry
+/// points: apply `f` to every input, in input order, chunked across
+/// [`batch_threads`] workers.
+fn batch_map<In, Out, F>(inputs: &[In], f: F) -> Vec<Out>
+where
+    In: Sync,
+    Out: Send,
+    F: Fn(&In) -> Out + Sync,
+{
     let threads = batch_threads(inputs.len());
     if threads <= 1 {
-        return inputs.iter().map(|w| super::quantize(w, method, opts)).collect();
+        return inputs.iter().map(&f).collect();
     }
-    let mut results: Vec<Option<Result<QuantOutput>>> = Vec::with_capacity(inputs.len());
+    let mut results: Vec<Option<Out>> = Vec::with_capacity(inputs.len());
     results.resize_with(inputs.len(), || None);
     let chunk = inputs.len().div_ceil(threads);
     std::thread::scope(|s| {
+        let f = &f;
         for (slots, ins) in results.chunks_mut(chunk).zip(inputs.chunks(chunk)) {
             s.spawn(move || {
                 for (slot, w) in slots.iter_mut().zip(ins) {
-                    *slot = Some(super::quantize(w, method, opts));
+                    *slot = Some(f(w));
                 }
             });
         }
@@ -772,6 +1075,30 @@ pub fn quantize_batch(
         .into_iter()
         .map(|r| r.expect("batch worker filled every slot"))
         .collect()
+}
+
+/// Quantize many vectors with the same method/options. Inputs are
+/// independent, so the batch fans across scoped threads; results come
+/// back in input order and are bitwise-identical to per-call
+/// [`quantize`](super::quantize) (including its
+/// [`QuantOptions::precision`] routing).
+pub fn quantize_batch(
+    inputs: &[Vec<f64>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Vec<Result<QuantOutput>> {
+    batch_map(inputs, |w| super::quantize(w, method, opts))
+}
+
+/// f32-native batch quantize: many single-precision vectors fanned across
+/// scoped threads, each through the f32 lane end to end. Results are
+/// bitwise-identical to per-call [`quantize_f32`].
+pub fn quantize_batch_f32(
+    inputs: &[Vec<f32>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Vec<Result<QuantOutputF32>> {
+    batch_map(inputs, |w| quantize_f32(w, method, opts))
 }
 
 /// λ sweep over one prepared input with warm starts along the path
@@ -790,6 +1117,9 @@ pub fn quantize_sweep(
 /// λ sweep with explicit warm-start control. `warm_start = false` runs
 /// every grid point cold, which is bitwise-identical to calling
 /// [`quantize`](super::quantize) per λ (minus the repeated prepare).
+/// The lane is fixed by the prepared input's own precision (f64 here);
+/// `base.precision` is ignored — use [`quantize_sweep_f32`] with a
+/// [`PreparedInputF32`] for the single-precision lane.
 pub fn quantize_sweep_with(
     prep: &PreparedInput,
     method: QuantMethod,
@@ -812,6 +1142,42 @@ pub fn quantize_sweep_with(
     Ok(outs)
 }
 
+/// f32-lane λ sweep with warm starts (see [`quantize_sweep`]).
+pub fn quantize_sweep_f32(
+    prep: &PreparedInputF32,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+) -> Result<Vec<QuantOutputF32>> {
+    quantize_sweep_f32_with(prep, method, lambdas, base, true)
+}
+
+/// f32-lane λ sweep with explicit warm-start control. The cold variant is
+/// bitwise-identical to per-λ [`quantize_f32`] (minus the repeated
+/// prepare). The λ grid itself stays f64 so both lanes walk the same
+/// penalty schedule.
+pub fn quantize_sweep_f32_with(
+    prep: &PreparedInputF32,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+) -> Result<Vec<QuantOutputF32>> {
+    let solver = solver_for(method);
+    let mut state = SweepState::default();
+    let mut outs = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        let opts = QuantOptions { lambda1: lambda, ..base.clone() };
+        let (levels, diag) = if warm_start {
+            solver.solve_path_step_f32(prep, &opts, &mut state)?
+        } else {
+            solver.solve_f32(prep, &opts)?
+        };
+        outs.push(prep.finish(&levels, opts.clamp, diag)?);
+    }
+    Ok(outs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -826,6 +1192,10 @@ mod tests {
             v.push(((center + rng.normal_with(0.0, 0.02)) * 200.0).round() / 200.0);
         }
         v
+    }
+
+    fn narrowed(xs: &[f64]) -> Vec<f32> {
+        xs.iter().map(|&x| x as f32).collect()
     }
 
     #[test]
@@ -874,6 +1244,41 @@ mod tests {
             assert!((prep.segment_mean(a, b) - naive).abs() < 1e-9);
         }
         assert_eq!(prep.segment_mean(3, 3), 0.0);
+    }
+
+    #[test]
+    fn from_vec_and_from_shared_match_new() {
+        let data = clustered(50, 21);
+        let a = PreparedInput::new(&data).unwrap();
+        let b = PreparedInput::from_vec(data.clone()).unwrap();
+        let c = PreparedInput::from_shared(Arc::from(&data[..])).unwrap();
+        assert_eq!(a.original(), b.original());
+        assert_eq!(a.original(), c.original());
+        assert_eq!(a.unique().values, b.unique().values);
+        assert_eq!(a.m(), c.m());
+    }
+
+    #[test]
+    fn finish_level_space_matches_full_vector_finalize() {
+        // Regression for the level-space finalize: identical values,
+        // levels, loss bits and clamp counts vs the historical
+        // recover-then-finalize path, with and without clamping.
+        let data = clustered(70, 22);
+        let prep = PreparedInput::new(&data).unwrap();
+        let m = prep.m();
+        // A deliberately non-monotone level assignment with out-of-range
+        // values at both ends.
+        let lv: Vec<f64> =
+            (0..m).map(|j| ((j * 13 % 7) as f64) * 0.3 - 0.4).collect();
+        for clamp in [None, Some((0.0, 1.0))] {
+            let got = prep.finish(&lv, clamp, QuantDiag::default()).unwrap();
+            let full = prep.unique().recover(&lv).unwrap();
+            let want = crate::quant::types::finalize(&data, full, clamp, QuantDiag::default());
+            assert_eq!(got.values, want.values);
+            assert_eq!(got.levels, want.levels);
+            assert_eq!(got.l2_loss.to_bits(), want.l2_loss.to_bits());
+            assert_eq!(got.clamped, want.clamped);
+        }
     }
 
     #[test]
@@ -927,5 +1332,129 @@ mod tests {
         // Durations are non-negative by construction; just make sure the
         // call returns something sane.
         assert!(t.prepare + t.solve < Duration::from_secs(60));
+    }
+
+    #[test]
+    fn precision_option_routes_through_f32_lane() {
+        let data = clustered(60, 7);
+        let opts = QuantOptions {
+            lambda1: 0.02,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        let via_opts = super::super::quantize(&data, QuantMethod::L1LeastSquare, &opts).unwrap();
+        let direct =
+            quantize_f32(&narrowed(&data), QuantMethod::L1LeastSquare, &opts).unwrap().widen();
+        assert_eq!(via_opts.values, direct.values);
+        assert_eq!(via_opts.levels, direct.levels);
+        assert_eq!(via_opts.l2_loss.to_bits(), direct.l2_loss.to_bits());
+    }
+
+    #[test]
+    fn f32_lane_covers_every_method_via_widen_fallback() {
+        let data32 = narrowed(&clustered(60, 8));
+        for m in QuantMethod::ALL {
+            let opts = QuantOptions {
+                lambda1: 0.01,
+                lambda2: 4e-5,
+                target_values: 4,
+                ..Default::default()
+            };
+            let out = quantize_f32(&data32, m, &opts)
+                .unwrap_or_else(|e| panic!("{m:?} failed on the f32 lane: {e}"));
+            assert_eq!(out.values.len(), data32.len(), "{m:?}");
+            assert!(out.l2_loss.is_finite(), "{m:?}");
+            assert!(out.distinct_values() >= 1, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn f32_prepared_pipeline_matches_one_shot_f32() {
+        let data32 = narrowed(&clustered(70, 9));
+        let prep = PreparedInputF32::new(&data32).unwrap();
+        for m in [
+            QuantMethod::L1,
+            QuantMethod::L1LeastSquare,
+            QuantMethod::L1L2,
+            QuantMethod::IterativeL1,
+        ] {
+            let opts =
+                QuantOptions { lambda1: 0.02, target_values: 4, ..Default::default() };
+            let staged = quantize_prepared_f32(&prep, m, &opts).unwrap();
+            let one_shot = quantize_f32(&data32, m, &opts).unwrap();
+            assert_eq!(staged.values, one_shot.values, "{m:?}");
+            assert_eq!(staged.l2_loss.to_bits(), one_shot.l2_loss.to_bits(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn f32_sweep_sparsifies_like_f64() {
+        let data = clustered(64, 10);
+        let lambdas = [1e-4, 1e-3, 1e-2, 1e-1];
+        let opts = QuantOptions::default();
+        let prep64 = PreparedInput::new(&data).unwrap();
+        let outs64 = quantize_sweep(&prep64, QuantMethod::L1LeastSquare, &lambdas, &opts).unwrap();
+        let prep32 = PreparedInputF32::new(&narrowed(&data)).unwrap();
+        let outs32 =
+            quantize_sweep_f32(&prep32, QuantMethod::L1LeastSquare, &lambdas, &opts).unwrap();
+        assert_eq!(outs32.len(), outs64.len());
+        for (o32, o64) in outs32.iter().zip(&outs64) {
+            // Same order of magnitude of sparsity along the path.
+            assert!(
+                o32.distinct_values().abs_diff(o64.distinct_values())
+                    <= 2 + o64.distinct_values() / 4,
+                "f32 {} vs f64 {} levels",
+                o32.distinct_values(),
+                o64.distinct_values()
+            );
+        }
+    }
+
+    #[test]
+    fn f32_widen_fallback_sweep_caches_but_matches_cold() {
+        // Non-CD methods on an f32 sweep go through the cached-widen
+        // default path step; results must equal the cold (per-λ widen)
+        // reference exactly, since widening is deterministic.
+        let data32 = narrowed(&clustered(50, 12));
+        let prep = PreparedInputF32::new(&data32).unwrap();
+        let lambdas = [1e-3, 1e-2];
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        let warm = quantize_sweep_f32(&prep, QuantMethod::KMeans, &lambdas, &opts).unwrap();
+        let cold =
+            quantize_sweep_f32_with(&prep, QuantMethod::KMeans, &lambdas, &opts, false).unwrap();
+        for (w, c) in warm.iter().zip(&cold) {
+            assert_eq!(w.values, c.values);
+            assert_eq!(w.l2_loss.to_bits(), c.l2_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn widen_cache_rebuilds_for_a_different_input() {
+        // Reusing one SweepState across different f32 inputs must not
+        // serve the first input's cached widening for the second.
+        let a32 = narrowed(&clustered(40, 13));
+        let b32 = narrowed(&clustered(40, 14));
+        let pa = PreparedInputF32::new(&a32).unwrap();
+        let pb = PreparedInputF32::new(&b32).unwrap();
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        let solver = solver_for(QuantMethod::KMeans);
+        let mut st = SweepState::default();
+        let _ = solver.solve_path_step_f32(&pa, &opts, &mut st).unwrap();
+        let (lv_b, _diag) = solver.solve_path_step_f32(&pb, &opts, &mut st).unwrap();
+        let (lv_ref, _diag_ref) = solver.solve_f32(&pb, &opts).unwrap();
+        assert_eq!(lv_b, lv_ref);
+    }
+
+    #[test]
+    fn widened_prepared_input_is_consistent() {
+        let data32 = narrowed(&clustered(40, 11));
+        let prep32 = PreparedInputF32::new(&data32).unwrap();
+        let wide = prep32.widen();
+        assert_eq!(wide.m(), prep32.m());
+        assert_eq!(wide.len(), prep32.len());
+        for (w64, w32) in wide.unique().values.iter().zip(&prep32.unique().values) {
+            assert_eq!(*w64, f64::from(*w32));
+        }
+        assert_eq!(wide.unique().counts, prep32.unique().counts);
     }
 }

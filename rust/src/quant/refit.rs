@@ -22,19 +22,20 @@
 
 use super::vmatrix::VBasis;
 use crate::linalg::cholesky::least_squares;
+use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
 
-/// Result of a support refit.
+/// Result of a support refit (lane-generic; `Refit<f64>` is the default).
 #[derive(Debug, Clone)]
-pub struct Refit {
+pub struct Refit<T: Scalar = f64> {
     /// Full-length α* (eq 10): optimal coefficients scattered onto the
     /// support, zeros elsewhere.
-    pub alpha: Vec<f64>,
+    pub alpha: Vec<T>,
     /// The reconstruction `w* = V α*` (eq 11) at unique-value level.
-    pub reconstruction: Vec<f64>,
+    pub reconstruction: Vec<T>,
 }
 
-fn validate_support(support: &[usize], basis: &VBasis) -> Result<()> {
+fn validate_support<T: Scalar>(support: &[usize], basis: &VBasis<T>) -> Result<()> {
     let m = basis.m();
     if support.windows(2).any(|p| p[0] >= p[1]) {
         return Err(Error::InvalidInput("refit: support must be sorted strictly ascending".into()));
@@ -46,7 +47,7 @@ fn validate_support(support: &[usize], basis: &VBasis) -> Result<()> {
             )));
         }
     }
-    if let Some(&z) = support.iter().find(|&&j| basis.diffs()[j] == 0.0) {
+    if let Some(&z) = support.iter().find(|&&j| basis.diffs()[j] == T::ZERO) {
         return Err(Error::InvalidInput(format!(
             "refit: support index {z} has zero diff (null column)"
         )));
@@ -57,13 +58,14 @@ fn validate_support(support: &[usize], basis: &VBasis) -> Result<()> {
 /// O(m) segment-mean refit. `weights` optionally weights each unique value
 /// by its multiplicity (exact LS on the *full* vector rather than the
 /// unique one — the paper's eq 8 uses unweighted ŵ, so `None` reproduces
-/// the paper).
-pub fn refit_fast(
-    basis: &VBasis,
-    w: &[f64],
+/// the paper). Lane-generic: the f32 instantiation is the refit stage of
+/// the single-precision fast path.
+pub fn refit_fast<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
     support: &[usize],
-    weights: Option<&[f64]>,
-) -> Result<Refit> {
+    weights: Option<&[T]>,
+) -> Result<Refit<T>> {
     let m = basis.m();
     if w.len() != m {
         return Err(Error::InvalidInput(format!(
@@ -78,26 +80,26 @@ pub fn refit_fast(
         }
     }
 
-    let mut alpha = vec![0.0; m];
-    let mut reconstruction = vec![0.0; m];
+    let mut alpha = vec![T::ZERO; m];
+    let mut reconstruction = vec![T::ZERO; m];
     if support.is_empty() {
         // No columns: reconstruction is identically zero.
         return Ok(Refit { alpha, reconstruction });
     }
 
     let d = basis.diffs();
-    let mut prev_level = 0.0;
+    let mut prev_level = T::ZERO;
     for (t, &s) in support.iter().enumerate() {
         let seg_end = support.get(t + 1).copied().unwrap_or(m);
         // Optimal level on [s, seg_end): (weighted) mean of ŵ there.
-        let (mut num, mut den) = (0.0, 0.0);
+        let (mut num, mut den) = (T::ZERO, T::ZERO);
         for i in s..seg_end {
-            let c = weights.map_or(1.0, |ws| ws[i]);
+            let c = weights.map_or(T::ONE, |ws| ws[i]);
             num += c * w[i];
             den += c;
         }
-        let level = if den > 0.0 { num / den } else { prev_level };
-        debug_assert!(d[s] != 0.0, "support column with zero diff");
+        let level = if den > T::ZERO { num / den } else { prev_level };
+        debug_assert!(d[s] != T::ZERO, "support column with zero diff");
         alpha[s] = (level - prev_level) / d[s];
         for r in &mut reconstruction[s..seg_end] {
             *r = level;

@@ -1,6 +1,46 @@
 //! Public types for the quantization API.
 
+use crate::linalg::scalar::Scalar;
 use crate::linalg::stats;
+
+/// Element precision a quantization request runs at.
+///
+/// `F64` is the bitwise-reproducible reference lane. `F32` narrows the
+/// input once at the lane boundary, runs prepare + solve in single
+/// precision (halving the memory traffic of the CD hot loop), and widens
+/// the output at the end; CD solvers on the f32 lane floor their
+/// convergence tolerance at `1e-6` (see [`crate::linalg::scalar`] for the
+/// full precision contract). Methods without a native f32 kernel (the
+/// clustering baselines, l0, tv_exact) transparently widen the prepared
+/// input and run their f64 solver — correct, but without the bandwidth
+/// win.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Double precision (the default, bitwise-stable reference lane).
+    #[default]
+    F64,
+    /// Single precision (the NN-weight fast path).
+    F32,
+}
+
+impl Precision {
+    /// Stable string id (CLI, manifests, reports).
+    pub fn id(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse from the stable id.
+    pub fn from_id(s: &str) -> Option<Self> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
 
 /// Which quantization algorithm to run. These are exactly the methods the
 /// paper's §4 experiments compare.
@@ -144,6 +184,11 @@ pub struct QuantOptions {
     pub max_lambda_steps: usize,
     /// Optional hard-sigmoid clamp range applied to the output (eq 21).
     pub clamp: Option<(f64, f64)>,
+    /// Element precision for `quantize`/`quantize_batch` (the staged
+    /// `PreparedInput` entry points choose the lane by the prepared input's
+    /// own type instead, and payload-typed coordinator submissions by the
+    /// payload's). See [`Precision`].
+    pub precision: Precision,
 }
 
 impl Default for QuantOptions {
@@ -160,18 +205,23 @@ impl Default for QuantOptions {
             refit: true,
             max_lambda_steps: 5000,
             clamp: None,
+            precision: Precision::F64,
         }
     }
 }
 
-/// Output of a quantization run.
+/// Output of a quantization run, generic over the lane precision.
+/// [`QuantOutput`] (the f64 default) is the type the f64 API and the
+/// coordinator surface; [`QuantOutputF32`] is what the f32-native entry
+/// points return, avoiding a widening pass the caller may not want.
 #[derive(Debug, Clone)]
-pub struct QuantOutput {
+pub struct QuantOutputT<T: Scalar = f64> {
     /// Quantized vector, same length/order as the input.
-    pub values: Vec<f64>,
+    pub values: Vec<T>,
     /// The distinct levels used (sorted ascending).
-    pub levels: Vec<f64>,
-    /// Squared-l2 information loss vs the input (after clamping if any).
+    pub levels: Vec<T>,
+    /// Squared-l2 information loss vs the (lane-precision) input, always
+    /// accumulated in f64.
     pub l2_loss: f64,
     /// Number of values clamped by the hard sigmoid (out-of-range count).
     pub clamped: usize,
@@ -179,10 +229,31 @@ pub struct QuantOutput {
     pub diag: QuantDiag,
 }
 
-impl QuantOutput {
+/// Double-precision output (the historical `QuantOutput` type).
+pub type QuantOutput = QuantOutputT<f64>;
+/// Single-precision output of the f32-native entry points.
+pub type QuantOutputF32 = QuantOutputT<f32>;
+
+impl<T: Scalar> QuantOutputT<T> {
     /// Achieved number of distinct values.
     pub fn distinct_values(&self) -> usize {
         self.levels.len()
+    }
+}
+
+impl QuantOutputF32 {
+    /// Widen to the f64 output type (for f64-surface callers such as the
+    /// coordinator's job results). Loss/diagnostics carry over unchanged —
+    /// the loss was measured against the f32 input the lane actually
+    /// quantized.
+    pub fn widen(&self) -> QuantOutput {
+        QuantOutput {
+            values: self.values.iter().map(|&x| f64::from(x)).collect(),
+            levels: self.levels.iter().map(|&x| f64::from(x)).collect(),
+            l2_loss: self.l2_loss,
+            clamped: self.clamped,
+            diag: self.diag.clone(),
+        }
     }
 }
 
@@ -204,6 +275,11 @@ pub struct QuantDiag {
 }
 
 /// Compute levels + loss bookkeeping for a reconstructed full vector.
+/// This is the full-vector (O(n log n)) path used by the runtime-lane
+/// dispatchers, which already hold a recovered vector; the staged native
+/// pipeline finalizes in level space instead
+/// ([`super::pipeline::PreparedInput::finish`]), which is O(m log m) and
+/// produces identical results.
 pub(crate) fn finalize(
     original: &[f64],
     mut values: Vec<f64>,
@@ -231,6 +307,32 @@ mod tests {
             assert_eq!(QuantMethod::from_id(m.id()), Some(m));
         }
         assert_eq!(QuantMethod::from_id("nope"), None);
+    }
+
+    #[test]
+    fn precision_id_roundtrip_and_default() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::from_id(p.id()), Some(p));
+        }
+        assert_eq!(Precision::from_id("f16"), None);
+        assert_eq!(QuantOptions::default().precision, Precision::F64);
+    }
+
+    #[test]
+    fn f32_output_widens_losslessly() {
+        let out32 = QuantOutputF32 {
+            values: vec![0.5f32, 1.5, 0.5],
+            levels: vec![0.5f32, 1.5],
+            l2_loss: 0.25,
+            clamped: 1,
+            diag: QuantDiag::default(),
+        };
+        let wide = out32.widen();
+        assert_eq!(wide.values, vec![0.5f64, 1.5, 0.5]);
+        assert_eq!(wide.levels, vec![0.5f64, 1.5]);
+        assert_eq!(wide.l2_loss, 0.25);
+        assert_eq!(wide.clamped, 1);
+        assert_eq!(wide.distinct_values(), 2);
     }
 
     #[test]

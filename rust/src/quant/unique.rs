@@ -5,26 +5,31 @@
 //! the end. This module provides that decomposition plus the inverse map,
 //! and keeps per-value multiplicities so weighted variants (exact LS on the
 //! full vector rather than the unique one) are possible.
+//!
+//! Generic over the element precision ([`Scalar`]): the default `f64`
+//! instantiation is the reference lane; `UniqueDecomp<f32>` feeds the
+//! single-precision fast path (see `linalg::scalar` for the contract).
 
+use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
 
 /// Sorted unique decomposition of a vector.
 #[derive(Debug, Clone)]
-pub struct UniqueDecomp {
+pub struct UniqueDecomp<T: Scalar = f64> {
     /// Sorted distinct values `ŵ` (ascending).
-    pub values: Vec<f64>,
+    pub values: Vec<T>,
     /// For each element of the original vector, its index into `values`.
     pub inverse: Vec<usize>,
     /// Multiplicity of each distinct value in the original vector.
     pub counts: Vec<usize>,
 }
 
-impl UniqueDecomp {
+impl<T: Scalar> UniqueDecomp<T> {
     /// Decompose `w` into sorted distinct values + inverse index.
     ///
     /// Rejects empty input and non-finite values — quantizing NaN/Inf is
     /// meaningless and k-means baselines would silently corrupt on them.
-    pub fn new(w: &[f64]) -> Result<Self> {
+    pub fn new(w: &[T]) -> Result<Self> {
         if w.is_empty() {
             return Err(Error::InvalidInput("cannot quantize an empty vector".into()));
         }
@@ -44,8 +49,8 @@ impl UniqueDecomp {
         for &idx in &order {
             let x = w[idx];
             // Normalize -0.0 to 0.0 so the two collapse to one level.
-            let x = if x == 0.0 { 0.0 } else { x };
-            if values.last().map_or(true, |&last: &f64| last != x) {
+            let x = if x == T::ZERO { T::ZERO } else { x };
+            if values.last().map_or(true, |&last: &T| last != x) {
                 values.push(x);
                 counts.push(0);
             }
@@ -75,7 +80,7 @@ impl UniqueDecomp {
     ///
     /// `level_values` assigns a (possibly shared) value to each of the `m`
     /// levels; the output has the original vector's length and ordering.
-    pub fn recover(&self, level_values: &[f64]) -> Result<Vec<f64>> {
+    pub fn recover(&self, level_values: &[T]) -> Result<Vec<T>> {
         if level_values.len() != self.m() {
             return Err(Error::InvalidInput(format!(
                 "recover: expected {} level values, got {}",
@@ -86,9 +91,10 @@ impl UniqueDecomp {
         Ok(self.inverse.iter().map(|&i| level_values[i]).collect())
     }
 
-    /// Multiplicities as f64 weights (for weighted least squares).
-    pub fn weights(&self) -> Vec<f64> {
-        self.counts.iter().map(|&c| c as f64).collect()
+    /// Multiplicities as lane-precision weights (for weighted least
+    /// squares).
+    pub fn weights(&self) -> Vec<T> {
+        self.counts.iter().map(|&c| T::from_usize(c)).collect()
     }
 }
 
@@ -131,9 +137,23 @@ mod tests {
 
     #[test]
     fn rejects_empty_and_nonfinite() {
-        assert!(UniqueDecomp::new(&[]).is_err());
+        assert!(UniqueDecomp::<f64>::new(&[]).is_err());
         assert!(UniqueDecomp::new(&[1.0, f64::NAN]).is_err());
         assert!(UniqueDecomp::new(&[f64::INFINITY]).is_err());
+        assert!(UniqueDecomp::<f32>::new(&[]).is_err());
+        assert!(UniqueDecomp::new(&[1.0f32, f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn f32_lane_decomposes_like_f64() {
+        let w64 = [3.0f64, 1.0, 2.0, 1.0, 3.0];
+        let w32: Vec<f32> = w64.iter().map(|&x| x as f32).collect();
+        let u64d = UniqueDecomp::new(&w64).unwrap();
+        let u32d = UniqueDecomp::new(&w32).unwrap();
+        assert_eq!(u32d.inverse, u64d.inverse);
+        assert_eq!(u32d.counts, u64d.counts);
+        assert_eq!(u32d.values, vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(u32d.weights(), vec![2.0f32, 1.0, 2.0]);
     }
 
     #[test]

@@ -26,24 +26,27 @@
 //! benchmarks compare against.
 
 use crate::linalg::matrix::Matrix;
+use crate::linalg::scalar::Scalar;
 
 /// Structured representation of the difference basis for a sorted value
-/// vector.
+/// vector. Generic over the element precision ([`Scalar`]); the default
+/// `f64` instantiation is the reference lane and `VBasis<f32>` carries the
+/// single-precision fast path.
 #[derive(Debug, Clone)]
-pub struct VBasis {
+pub struct VBasis<T: Scalar = f64> {
     /// The sorted distinct values `v` (ascending).
-    v: Vec<f64>,
+    v: Vec<T>,
     /// First differences `d_j = v_j − v_{j−1}` with `d_0 = v_0`.
-    d: Vec<f64>,
+    d: Vec<T>,
 }
 
-impl VBasis {
+impl<T: Scalar> VBasis<T> {
     /// Build from sorted distinct values. Debug-asserts strict ascending
     /// order (guaranteed by [`crate::quant::unique::UniqueDecomp`]).
-    pub fn new(values: &[f64]) -> Self {
+    pub fn new(values: &[T]) -> Self {
         debug_assert!(values.windows(2).all(|p| p[0] < p[1]), "values must be sorted strictly ascending");
         let mut d = Vec::with_capacity(values.len());
-        let mut prev = 0.0;
+        let mut prev = T::ZERO;
         for &x in values {
             d.push(x - prev);
             prev = x;
@@ -57,43 +60,43 @@ impl VBasis {
     }
 
     /// The original sorted values.
-    pub fn values(&self) -> &[f64] {
+    pub fn values(&self) -> &[T] {
         &self.v
     }
 
     /// First differences `d` (`d_0 = v_0`).
-    pub fn diffs(&self) -> &[f64] {
+    pub fn diffs(&self) -> &[T] {
         &self.d
     }
 
     /// `Vα` — O(m) prefix-sum reconstruction.
-    pub fn apply(&self, alpha: &[f64]) -> Vec<f64> {
+    pub fn apply(&self, alpha: &[T]) -> Vec<T> {
         debug_assert_eq!(alpha.len(), self.m());
         let mut out = Vec::with_capacity(self.m());
-        let mut acc = 0.0;
+        let mut acc = T::ZERO;
         for (dj, aj) in self.d.iter().zip(alpha) {
-            acc += dj * aj;
+            acc += *dj * *aj;
             out.push(acc);
         }
         out
     }
 
     /// `Vα` written into a caller-provided buffer (hot-path variant).
-    pub fn apply_into(&self, alpha: &[f64], out: &mut [f64]) {
+    pub fn apply_into(&self, alpha: &[T], out: &mut [T]) {
         debug_assert_eq!(alpha.len(), self.m());
         debug_assert_eq!(out.len(), self.m());
-        let mut acc = 0.0;
+        let mut acc = T::ZERO;
         for ((o, dj), aj) in out.iter_mut().zip(&self.d).zip(alpha) {
-            acc += dj * aj;
+            acc += *dj * *aj;
             *o = acc;
         }
     }
 
     /// `Vᵀ r` — O(m) via suffix sums.
-    pub fn t_apply(&self, r: &[f64]) -> Vec<f64> {
+    pub fn t_apply(&self, r: &[T]) -> Vec<T> {
         debug_assert_eq!(r.len(), self.m());
-        let mut out = vec![0.0; self.m()];
-        let mut suffix = 0.0;
+        let mut out = vec![T::ZERO; self.m()];
+        let mut suffix = T::ZERO;
         for j in (0..self.m()).rev() {
             suffix += r[j];
             out[j] = self.d[j] * suffix;
@@ -103,39 +106,32 @@ impl VBasis {
 
     /// Gram entry `(VᵀV)_{jk} = d_j d_k (m − max(j,k))` — paper eq 12.
     #[inline]
-    pub fn gram_entry(&self, j: usize, k: usize) -> f64 {
+    pub fn gram_entry(&self, j: usize, k: usize) -> T {
         let m = self.m();
-        self.d[j] * self.d[k] * (m - j.max(k)) as f64
+        self.d[j] * self.d[k] * T::from_usize(m - j.max(k))
     }
 
     /// Squared column norm `‖V_{·j}‖² = d_j² (m − j)`.
     #[inline]
-    pub fn col_norm_sq(&self, j: usize) -> f64 {
+    pub fn col_norm_sq(&self, j: usize) -> T {
         let m = self.m();
-        self.d[j] * self.d[j] * (m - j) as f64
+        self.d[j] * self.d[j] * T::from_usize(m - j)
     }
 
     /// Weighted squared column norm `Σ_{i≥j} c_i d_j²` for per-row weights
     /// `c` (multiplicity-weighted variants).
-    pub fn col_norm_sq_weighted(&self, j: usize, suffix_weight: &[f64]) -> f64 {
+    pub fn col_norm_sq_weighted(&self, j: usize, suffix_weight: &[T]) -> T {
         self.d[j] * self.d[j] * suffix_weight[j]
-    }
-
-    /// Materialize the dense `m × m` matrix. For tests and the naïve
-    /// baseline only — O(m²) memory.
-    pub fn dense(&self) -> Matrix {
-        let m = self.m();
-        Matrix::from_fn(m, m, |i, j| if j <= i { self.d[j] } else { 0.0 })
     }
 
     /// Reconstruction from a sparse support: `V_{·S} β` where `support` is
     /// sorted ascending. O(m + |S|).
-    pub fn apply_support(&self, support: &[usize], beta: &[f64]) -> Vec<f64> {
+    pub fn apply_support(&self, support: &[usize], beta: &[T]) -> Vec<T> {
         debug_assert_eq!(support.len(), beta.len());
         debug_assert!(support.windows(2).all(|p| p[0] < p[1]));
         let m = self.m();
-        let mut out = vec![0.0; m];
-        let mut acc = 0.0;
+        let mut out = vec![T::ZERO; m];
+        let mut acc = T::ZERO;
         let mut s = 0;
         for (i, o) in out.iter_mut().enumerate() {
             if s < support.len() && support[s] == i {
@@ -145,6 +141,18 @@ impl VBasis {
             *o = acc;
         }
         out
+    }
+}
+
+/// Dense materializations exist only on the f64 reference lane — they feed
+/// the `Matrix`-based oracles and the naïve §Perf baselines, which are
+/// double-precision by design.
+impl VBasis<f64> {
+    /// Materialize the dense `m × m` matrix. For tests and the naïve
+    /// baseline only — O(m²) memory.
+    pub fn dense(&self) -> Matrix {
+        let m = self.m();
+        Matrix::from_fn(m, m, |i, j| if j <= i { self.d[j] } else { 0.0 })
     }
 
     /// Dense `m × h` sub-matrix of the support columns (eq 7's `V*`), for

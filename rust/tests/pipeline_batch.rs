@@ -121,6 +121,99 @@ fn prop_warm_sweep_equivalent_to_cold_on_lasso_path() {
     );
 }
 
+/// Bitwise equality of two f32-lane outputs (values, levels and loss).
+fn assert_bitwise_eq_f32(
+    a: &quant::QuantOutputF32,
+    b: &quant::QuantOutputF32,
+    method: QuantMethod,
+    what: &str,
+) {
+    assert_eq!(a.values, b.values, "{method:?}: {what} values differ");
+    assert_eq!(a.levels, b.levels, "{method:?}: {what} levels differ");
+    assert_eq!(
+        a.l2_loss.to_bits(),
+        b.l2_loss.to_bits(),
+        "{method:?}: {what} loss differs"
+    );
+    assert_eq!(a.clamped, b.clamped, "{method:?}: {what} clamp count differs");
+}
+
+#[test]
+fn prop_f32_batch_bitwise_matches_per_call_for_all_methods() {
+    check(
+        "f32 quantize_batch ≡ per-call quantize_f32",
+        CASES,
+        gens::vec_clustered(8..=60, 4),
+        |xs| {
+            let inputs: Vec<Vec<f32>> = (0..3)
+                .map(|k| xs.iter().map(|&x| (x + 0.05 * k as f64) as f32).collect())
+                .collect();
+            for method in QuantMethod::ALL {
+                let opts = base_opts();
+                let batch = quant::quantize_batch_f32(&inputs, method, &opts);
+                for (w, got) in inputs.iter().zip(&batch) {
+                    let got = got.as_ref().map_err(|e| e.to_string())?;
+                    let single =
+                        quant::quantize_f32(w, method, &opts).map_err(|e| e.to_string())?;
+                    assert_bitwise_eq_f32(got, &single, method, "f32 batch");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f32_cold_sweep_bitwise_matches_per_call_for_all_methods() {
+    let lambdas = [1e-3, 1e-2, 1e-1];
+    check(
+        "f32 cold quantize_sweep ≡ per-call quantize_f32",
+        CASES,
+        gens::vec_clustered(8..=50, 4),
+        |xs| {
+            let xs32: Vec<f32> = xs.iter().map(|&x| x as f32).collect();
+            let prep = quant::PreparedInputF32::new(&xs32).map_err(|e| e.to_string())?;
+            for method in QuantMethod::ALL {
+                let opts = base_opts();
+                let swept =
+                    quant::quantize_sweep_f32_with(&prep, method, &lambdas, &opts, false)
+                        .map_err(|e| e.to_string())?;
+                for (out, &lambda) in swept.iter().zip(&lambdas) {
+                    let single = quant::quantize_f32(
+                        &xs32,
+                        method,
+                        &QuantOptions { lambda1: lambda, ..opts.clone() },
+                    )
+                    .map_err(|e| e.to_string())?;
+                    assert_bitwise_eq_f32(out, &single, method, "f32 sweep");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn precision_option_batch_matches_per_call() {
+    // opts.precision = F32 must route `quantize_batch` slots exactly like
+    // one-shot `quantize` (both narrow per input, solve on the f32 lane,
+    // and widen).
+    let inputs: Vec<Vec<f64>> = (0..4)
+        .map(|k| (0..80).map(|i| ((i * 7 + k * 3) % 13) as f64 * 0.07).collect())
+        .collect();
+    let opts = QuantOptions {
+        lambda1: 0.03,
+        precision: sqlsq::quant::Precision::F32,
+        ..Default::default()
+    };
+    let batch = quant::quantize_batch(&inputs, QuantMethod::L1LeastSquare, &opts);
+    for (w, got) in inputs.iter().zip(&batch) {
+        let got = got.as_ref().unwrap();
+        let single = quant::quantize(w, QuantMethod::L1LeastSquare, &opts).unwrap();
+        assert_bitwise_eq(got, &single, QuantMethod::L1LeastSquare, "precision batch");
+    }
+}
+
 #[test]
 fn warm_sweep_reuses_fewer_epochs_than_cold_in_aggregate() {
     // The point of warm starts: across a dense λ path the warm sweep must

@@ -228,6 +228,98 @@ fn prop_clamp_forces_range() {
 }
 
 #[test]
+fn prop_f32_lane_loss_tracks_f64_lane() {
+    // The two precision lanes optimize the same objective from the same
+    // start; their reported losses must agree to ~1e-3 in the regime where
+    // the loss is meaningful (the absolute `1e-3·(1+loss)` form mirrors
+    // the warm-vs-cold sweep tolerance — both compare runs whose CD
+    // trajectories, and hence tie-coordinates, may differ slightly).
+    check(
+        "f32 lane loss ≈ f64 lane loss",
+        CASES,
+        gens::vec_clustered(8..=120, 5),
+        |xs| {
+            let xs32: Vec<f32> = xs.iter().map(|&x| x as f32).collect();
+            for method in [QuantMethod::L1, QuantMethod::L1LeastSquare] {
+                let opts = QuantOptions { lambda1: 0.05, ..Default::default() };
+                let o64 = quant::quantize(xs, method, &opts).map_err(|e| e.to_string())?;
+                let o32 = quant::quantize_f32(&xs32, method, &opts).map_err(|e| e.to_string())?;
+                let tol = 1e-3 * (1.0 + o64.l2_loss);
+                if (o32.l2_loss - o64.l2_loss).abs() > tol {
+                    return Err(format!(
+                        "{}: f32 loss {} vs f64 loss {}",
+                        method.id(),
+                        o32.l2_loss,
+                        o64.l2_loss
+                    ));
+                }
+                // Level counts stay in the same ballpark (ties can shift a
+                // few marginal coordinates either way).
+                let (d64, d32) = (o64.distinct_values(), o32.distinct_values());
+                if d64.abs_diff(d32) > 2 + d64.max(d32) / 4 {
+                    return Err(format!("{}: {d32} f32 levels vs {d64} f64", method.id()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f32_f64_lasso_supports_agree_up_to_ties() {
+    // Same support up to ties: the lanes may disagree only on marginal
+    // coordinates (near the KKT boundary |ρ| ≈ λ₁), whose reconstruction
+    // contribution |α_j·d_j| is necessarily small in whichever lane kept
+    // them.
+    check(
+        "f32/f64 lasso support ≡ up to ties",
+        CASES,
+        gens::vec_clustered(8..=100, 5),
+        |xs| {
+            let (u64d, b64) = decomp(xs);
+            let xs32: Vec<f32> = xs.iter().map(|&x| x as f32).collect();
+            let u32d = UniqueDecomp::new(&xs32).map_err(|e| e.to_string())?;
+            if u32d.m() != u64d.m() {
+                // Narrowing merged two adjacent levels — documented lane
+                // behaviour, not a support property; skip this case.
+                return Ok(());
+            }
+            let b32 = VBasis::new(&u32d.values);
+            let cfg = lasso::LassoConfig { lambda1: 0.2, ..Default::default() };
+            let s64 = lasso::solve(&b64, &u64d.values, &cfg, None).map_err(|e| e.to_string())?;
+            let s32 = lasso::solve(&b32, &u32d.values, &cfg, None).map_err(|e| e.to_string())?;
+            let m = u64d.m();
+            let in64: Vec<bool> = s64.alpha.iter().map(|&a| a != 0.0).collect();
+            let in32: Vec<bool> = s32.alpha.iter().map(|&a| a != 0.0).collect();
+            let mut flips = 0usize;
+            for j in 0..m {
+                if in64[j] == in32[j] {
+                    continue;
+                }
+                flips += 1;
+                // The lane that kept j must hold it with a near-zero
+                // contribution — a tie, not a disagreement.
+                let contrib = if in64[j] {
+                    s64.alpha[j] * b64.diffs()[j]
+                } else {
+                    f64::from(s32.alpha[j]) * f64::from(b32.diffs()[j])
+                }
+                .abs();
+                if contrib > 5e-2 {
+                    return Err(format!(
+                        "coordinate {j} flipped with contribution {contrib:.3e}"
+                    ));
+                }
+            }
+            if flips > 2 + m / 5 {
+                return Err(format!("{flips} support flips out of m={m}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_l2_loss_reported_matches_recomputation() {
     check("reported loss is correct", CASES, gens::vec_f64(1..=100, 0.0, 10.0), |xs| {
         let opts = QuantOptions { target_values: 4, ..Default::default() };
