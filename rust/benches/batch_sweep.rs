@@ -1,17 +1,23 @@
 //! §Perf: one-shot vs staged λ-sweep throughput (the ISSUE-1 acceptance
 //! bench). Compares 16 independent `quantize` calls on a 10k-element
 //! vector against one `PreparedInput` + a warm-started 16-point
-//! `quantize_sweep`, `quantize_batch` against a serial loop, and (ISSUE-2)
+//! `quantize_sweep`, `quantize_batch` against a serial loop, (ISSUE-2)
 //! the f32 lane against the f64 lane on the same sweep workload — both
-//! throughput and total-information-loss delta. Emits a
-//! `BENCH_batch_sweep.json` baseline (median seconds + speedups) for the
-//! perf trajectory.
+//! throughput and total-information-loss delta — and (ISSUE-3) the
+//! runtime lane's drained-batch service serial vs fanned across
+//! `runtime_fanout` sub-lanes (ShadowBackend: runtime semantics, no
+//! artifacts). Emits a `BENCH_batch_sweep.json` baseline (median
+//! seconds + speedups) for the perf trajectory.
 
 use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::config::Engine;
+use sqlsq::coordinator::server::serve_batch_runtime;
+use sqlsq::coordinator::{Job, Metrics, Payload, Router};
 use sqlsq::data::rng::Pcg32;
 use sqlsq::eval::workloads::lambda_grid;
 use sqlsq::jsonio::Json;
 use sqlsq::quant::{self, PreparedInput, PreparedInputF32, QuantMethod, QuantOptions};
+use sqlsq::runtime::{BackendKind, ShadowBackend};
 
 fn raster_vector(n: usize, levels: f64, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::seeded(seed);
@@ -102,11 +108,63 @@ fn main() {
         })
         .median;
 
+    // Runtime-lane batch service: the same 16-job runtime-capable burst
+    // through serve_batch_runtime, serial vs fanned. The shadow backend
+    // replays the artifact kernels (f32, padding, epochs-per-call), so
+    // this measures exactly the lane-level parallelism ISSUE-3 added.
+    let rt_router = Router::new(
+        Engine::Auto,
+        std::path::Path::new("artifacts"),
+        BackendKind::Shadow,
+    )
+    .expect("shadow router");
+    let rt_inputs: Vec<(Vec<f64>, QuantMethod)> = (0..16)
+        .map(|i| {
+            let method = [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::Gmm]
+                [i % 3];
+            (raster_vector(2000, 512.0, 300 + i as u64), method)
+        })
+        .collect();
+    let rt_opts = QuantOptions { lambda1: 0.01, target_values: 16, ..Default::default() };
+    let run_runtime_batch = |fanout: usize| {
+        let metrics = Metrics::new();
+        let mut jobs = Vec::with_capacity(rt_inputs.len());
+        let mut rxs = Vec::with_capacity(rt_inputs.len());
+        for (i, (data, method)) in rt_inputs.iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::channel();
+            jobs.push(Job {
+                id: i as u64 + 1,
+                data: Payload::F64(data.clone()),
+                method: *method,
+                opts: rt_opts.clone(),
+                submitted: std::time::Instant::now(),
+                respond: tx,
+            });
+            rxs.push(rx);
+        }
+        let mut backend = ShadowBackend::new();
+        serve_batch_runtime(&mut backend, &rt_router, &metrics, jobs, fanout);
+        for rx in rxs {
+            black_box(rx.recv().expect("runtime bench job lost"));
+        }
+    };
+    let rt_serial_s = suite
+        .case("runtime_batch_serial_x16/n=2k", || run_runtime_batch(1))
+        .median;
+    let rt_fanout = 4usize;
+    let rt_fanout_s = suite
+        .case("runtime_batch_fanout4_x16/n=2k", || run_runtime_batch(rt_fanout))
+        .median;
+
     let sweep_speedup = one_shot_s / sweep_s.max(1e-12);
     let batch_speedup = serial_s / batch_s.max(1e-12);
+    let runtime_batch_speedup = rt_serial_s / rt_fanout_s.max(1e-12);
     let f32_sweep_speedup = sweep_s / f32_sweep_s.max(1e-12);
     println!("\nsweep speedup (one-shot / warm sweep)  : {sweep_speedup:.2}x");
     println!("batch speedup (serial / scoped fan-out): {batch_speedup:.2}x");
+    println!(
+        "runtime-batch speedup (serial / fanout {rt_fanout}): {runtime_batch_speedup:.2}x"
+    );
     println!("f32 lane speedup (f64 sweep / f32 sweep): {f32_sweep_speedup:.2}x");
     println!(
         "f32 lane info-loss delta (total over grid): {f32_rel_loss_delta:.3e} \
@@ -126,6 +184,10 @@ fn main() {
         ("batch_speedup", Json::Num(batch_speedup)),
         ("f32_sweep_median_s", Json::Num(f32_sweep_s)),
         ("f32_sweep_speedup", Json::Num(f32_sweep_speedup)),
+        ("runtime_batch_serial_median_s", Json::Num(rt_serial_s)),
+        ("runtime_batch_fanout_median_s", Json::Num(rt_fanout_s)),
+        ("runtime_batch_fanout", Json::Num(rt_fanout as f64)),
+        ("runtime_batch_speedup", Json::Num(runtime_batch_speedup)),
         ("f64_loss_total", Json::Num(f64_loss_total)),
         ("f32_loss_total", Json::Num(f32_loss_total)),
         ("f32_rel_loss_delta", Json::Num(f32_rel_loss_delta)),

@@ -15,6 +15,7 @@ use crate::config::{Config, Engine};
 use crate::coordinator::Coordinator;
 use crate::eval::{figures, workloads};
 use crate::quant::{self, QuantMethod, QuantOptions};
+use crate::runtime::BackendKind;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -89,6 +90,8 @@ USAGE:
                   [--report-dir DIR]
   sqlsq serve     [--jobs N] [--engine native|runtime|auto] [--workers N]
                   [--artifacts DIR] [--precision f32|f64]
+                  [--runtime-backend pjrt|shadow] [--runtime-fanout N]
+                  [--lanes N]
   sqlsq selfcheck [--artifacts DIR]
   sqlsq version | help
 
@@ -96,7 +99,12 @@ METHODS: l1, l1_ls, l1_l2, l0, iter_l1, cluster_ls, kmeans, kmeans_exact,
          gmm, data_transform, tv_exact, agglom, fcm
 
 PRECISION: --precision f32 runs the native single-precision lane (native
-         f32 kernels for the CD family; other methods widen internally).";
+         f32 kernels for the CD family; other methods widen internally).
+
+BACKENDS: --runtime-backend pjrt executes AOT artifacts (make artifacts);
+         shadow replays the kernels natively with runtime semantics — no
+         artifacts needed, and batches fan across --runtime-fanout
+         sub-lanes.";
 
 /// CLI entry (returns the process exit code).
 pub fn run() -> i32 {
@@ -331,17 +339,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.flag_usize("jobs", 200)?;
     let engine = Engine::parse(args.flag("engine").unwrap_or("auto"))?;
     let precision = parse_precision(args)?;
+    let defaults = Config::default();
     let cfg = Config {
-        workers: args.flag_usize("workers", Config::default().workers)?,
+        workers: args.flag_usize("workers", defaults.workers)?,
         engine,
         artifacts_dir: PathBuf::from(args.flag("artifacts").unwrap_or("artifacts")),
-        ..Default::default()
+        runtime_backend: BackendKind::parse(
+            args.flag("runtime-backend").unwrap_or(defaults.runtime_backend.id()),
+        )?,
+        runtime_fanout: args.flag_usize("runtime-fanout", defaults.runtime_fanout)?.max(1),
+        runtime_lanes: args.flag_usize("lanes", defaults.runtime_lanes)?.max(1),
+        ..defaults
     };
     println!(
-        "starting coordinator: {} workers, engine {:?}, {} payloads",
+        "starting coordinator: {} workers, engine {:?}, {} payloads, \
+         runtime backend {} (lanes {}, fanout {})",
         cfg.workers,
         cfg.engine,
-        precision.id()
+        precision.id(),
+        cfg.runtime_backend.id(),
+        cfg.runtime_lanes,
+        cfg.runtime_fanout
     );
     let coord = Coordinator::start(cfg)?;
 
@@ -532,5 +550,15 @@ mod tests {
     #[test]
     fn serve_small_native_run() {
         dispatch(&s(&["serve", "--jobs", "12", "--engine", "native", "--workers", "2"])).unwrap();
+    }
+
+    #[test]
+    fn serve_auto_with_shadow_backend_runs_without_artifacts() {
+        dispatch(&s(&[
+            "serve", "--jobs", "12", "--engine", "auto", "--workers", "2", "--lanes", "1",
+            "--runtime-backend", "shadow", "--runtime-fanout", "2",
+        ]))
+        .unwrap();
+        assert!(dispatch(&s(&["serve", "--runtime-backend", "tpu"])).is_err());
     }
 }

@@ -16,6 +16,7 @@
 //! (`SQLSQ_WORKERS=8`) and `--key value` CLI flags; precedence is
 //! CLI > env > file > default.
 
+use crate::runtime::BackendKind;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -49,8 +50,16 @@ impl Engine {
 pub struct Config {
     /// Worker threads in the coordinator pool.
     pub workers: usize,
-    /// Runtime-lane threads (each owns a PJRT client + executable cache).
+    /// Runtime-lane threads (each owns its backend — for PJRT, a client
+    /// + compiled-artifact cache).
     pub runtime_lanes: usize,
+    /// Which backend runtime lanes open (`pjrt` needs `make artifacts`;
+    /// `shadow` replays the kernels natively and needs none).
+    pub runtime_backend: BackendKind,
+    /// Sub-lanes a runtime lane fans one drained batch across (1 =
+    /// serial). Only effective for backends with Send sub-handles
+    /// (shadow); PJRT lanes stay serial and scale via `runtime_lanes`.
+    pub runtime_fanout: usize,
     /// Bounded job-queue capacity (backpressure threshold).
     pub queue_capacity: usize,
     /// Max jobs per batch drained at once.
@@ -74,15 +83,19 @@ impl Default for Config {
     fn default() -> Self {
         let cores = std::thread::available_parallelism().map_or(4, |n| n.get());
         let workers = cores.min(8);
+        // Spare cores beyond the worker pool, so a fully busy pool never
+        // oversubscribes: 1 (serial) on hosts where workers already cover
+        // every core, up to 4 on wide machines. Sizes both the native
+        // batch fan-out and the runtime-lane fan-out.
+        let spare_fanout = (cores / workers).clamp(1, 4);
         Config {
             workers,
             runtime_lanes: 2,
+            runtime_backend: BackendKind::default(),
+            runtime_fanout: spare_fanout,
             queue_capacity: 1024,
             max_batch: 32,
-            // Spare cores beyond the worker pool, so a fully busy pool
-            // never oversubscribes: 1 (serial) on hosts where workers
-            // already cover every core, up to 4 on wide machines.
-            batch_fanout: (cores / workers).clamp(1, 4),
+            batch_fanout: spare_fanout,
             batch_wait_us: 200,
             artifacts_dir: PathBuf::from("artifacts"),
             engine: Engine::Native,
@@ -136,6 +149,10 @@ impl Config {
             "runtime_lanes" => {
                 self.runtime_lanes = parse_usize(value)?.max(1);
             }
+            "runtime_backend" => self.runtime_backend = BackendKind::parse(value)?,
+            "runtime_fanout" => {
+                self.runtime_fanout = parse_usize(value)?.max(1);
+            }
             "queue_capacity" => {
                 self.queue_capacity = parse_usize(value)?;
                 if self.queue_capacity == 0 {
@@ -175,6 +192,8 @@ impl Config {
         for key in [
             "workers",
             "runtime_lanes",
+            "runtime_backend",
+            "runtime_fanout",
             "queue_capacity",
             "max_batch",
             "batch_fanout",
@@ -247,6 +266,18 @@ mod tests {
         assert_eq!(c.runtime_lanes, 3);
         let c0 = Config::parse_str("runtime_lanes = 0").unwrap();
         assert_eq!(c0.runtime_lanes, 1, "floored to 1");
+    }
+
+    #[test]
+    fn runtime_backend_and_fanout_parse() {
+        let c = Config::parse_str("runtime_backend = \"shadow\"\nruntime_fanout = 3").unwrap();
+        assert_eq!(c.runtime_backend, BackendKind::Shadow);
+        assert_eq!(c.runtime_fanout, 3);
+        assert_eq!(Config::default().runtime_backend, BackendKind::Pjrt);
+        assert!(Config::default().runtime_fanout >= 1);
+        let c0 = Config::parse_str("runtime_fanout = 0").unwrap();
+        assert_eq!(c0.runtime_fanout, 1, "floored to 1");
+        assert!(Config::parse_str("runtime_backend = \"tpu\"").is_err());
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub struct Metrics {
     served_runtime: AtomicU64,
     batches: AtomicU64,
     batch_jobs: AtomicU64,
+    lanes_degraded: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     stage_prepare_ns: AtomicU64,
@@ -42,6 +43,9 @@ pub struct Snapshot {
     pub batches: u64,
     /// Mean batch size.
     pub mean_batch: f64,
+    /// Runtime lanes that failed to open their backend and run degraded
+    /// (under `Auto` their pops are rerouted to the native engines).
+    pub lanes_degraded: u64,
     /// Mean latency (µs).
     pub mean_latency_us: f64,
     /// Approximate latency percentiles (µs): p50, p95, p99.
@@ -78,6 +82,12 @@ impl Metrics {
     pub fn on_batch(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_jobs.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count a runtime lane whose backend failed to open (the lane keeps
+    /// running degraded; see `server::serve_batch_degraded`).
+    pub fn on_lane_degraded(&self) {
+        self.lanes_degraded.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record per-stage pipeline timings (prepare vs solve) for one job.
@@ -150,6 +160,7 @@ impl Metrics {
             served_runtime: self.served_runtime.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches > 0 { batch_jobs as f64 / batches as f64 } else { 0.0 },
+            lanes_degraded: self.lanes_degraded.load(Ordering::Relaxed),
             mean_latency_us: if total > 0 {
                 self.latency_sum_us.load(Ordering::Relaxed) as f64 / total as f64
             } else {
@@ -170,7 +181,8 @@ impl Snapshot {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} rejected={} native={} runtime={} \
-             batches={} mean_batch={:.1} lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{} \
+             batches={} mean_batch={:.1} degraded_lanes={} \
+             lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{} \
              stages(prep/solve mean µs)={:.1}/{:.1}",
             self.submitted,
             self.completed,
@@ -180,6 +192,7 @@ impl Snapshot {
             self.served_runtime,
             self.batches,
             self.mean_batch,
+            self.lanes_degraded,
             self.mean_latency_us,
             self.p50_us,
             self.p95_us,
@@ -213,6 +226,10 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert!((s.mean_batch - 2.0).abs() < 1e-12);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-9);
+        assert_eq!(s.lanes_degraded, 0);
+        m.on_lane_degraded();
+        assert_eq!(m.snapshot().lanes_degraded, 1);
+        assert!(m.snapshot().summary().contains("degraded_lanes=1"));
     }
 
     #[test]

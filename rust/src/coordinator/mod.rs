@@ -11,4 +11,4 @@ pub mod server;
 pub use job::{Job, JobId, JobResult, Payload, ServedBy};
 pub use metrics::{Metrics, Snapshot};
 pub use router::Router;
-pub use server::Coordinator;
+pub use server::{BackendFactory, Coordinator};

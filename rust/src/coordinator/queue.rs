@@ -77,7 +77,9 @@ impl<T> BoundedQueue<T> {
 
     /// Wait (bounded by `first_wait`) for at least one item, then drain up
     /// to `max` items, waiting at most `fill_wait` more for stragglers.
-    /// Returns `None` once the queue is closed *and* empty.
+    /// Returns `None` once the queue is closed *and* empty; a returned
+    /// batch is never empty (`1 ≤ len ≤ max`), even with multiple
+    /// consumers racing through the linger window.
     pub fn pop_batch(
         &self,
         max: usize,
@@ -85,32 +87,40 @@ impl<T> BoundedQueue<T> {
         fill_wait: Duration,
     ) -> Option<Vec<T>> {
         let mut g = self.inner.lock().unwrap();
-        // Phase 1: wait for the first item.
-        while g.deque.is_empty() {
-            if g.closed {
-                return None;
-            }
-            let (ng, timeout) = self.not_empty.wait_timeout(g, first_wait).unwrap();
-            g = ng;
-            if timeout.timed_out() && g.deque.is_empty() {
+        loop {
+            // Phase 1: wait for the first item.
+            while g.deque.is_empty() {
                 if g.closed {
                     return None;
                 }
-                // Spurious/empty timeout: keep waiting (callers loop).
-                continue;
+                let (ng, timeout) = self.not_empty.wait_timeout(g, first_wait).unwrap();
+                g = ng;
+                if timeout.timed_out() && g.deque.is_empty() {
+                    if g.closed {
+                        return None;
+                    }
+                    // Spurious/empty timeout: keep waiting (callers loop).
+                    continue;
+                }
             }
+            // Phase 2: optionally linger to fill the batch.
+            if g.deque.len() < max && !fill_wait.is_zero() && !g.closed {
+                let (ng, _) = self.not_empty.wait_timeout(g, fill_wait).unwrap();
+                g = ng;
+                // Another consumer may have drained everything while we
+                // lingered (the wait releases the lock): go back to
+                // waiting instead of serving an empty batch.
+                if g.deque.is_empty() {
+                    continue;
+                }
+            }
+            let take = g.deque.len().min(max);
+            let batch: Vec<T> = g.deque.drain(..take).collect();
+            if !batch.is_empty() {
+                self.not_full.notify_all();
+            }
+            return Some(batch);
         }
-        // Phase 2: optionally linger to fill the batch.
-        if g.deque.len() < max && !fill_wait.is_zero() && !g.closed {
-            let (ng, _) = self.not_empty.wait_timeout(g, fill_wait).unwrap();
-            g = ng;
-        }
-        let take = g.deque.len().min(max);
-        let batch: Vec<T> = g.deque.drain(..take).collect();
-        if !batch.is_empty() {
-            self.not_full.notify_all();
-        }
-        Some(batch)
     }
 
     /// Current depth (diagnostics).

@@ -8,9 +8,12 @@
 //!   (the serving default).
 //!
 //! PJRT handles are `Rc`-based and **not Send**, so the [`Router`] itself
-//! never holds an [`Executor`]: it only routes using bucket metadata parsed
-//! from the manifest. The single runtime-lane thread constructs its own
-//! Executor at startup ([`super::server`]) and calls [`dispatch_runtime`].
+//! never holds a backend: it only routes using the capability table
+//! ([`RuntimeInfo`]) — parsed from the manifest for the PJRT backend, or
+//! taken from the shadow backend's static bucket table (no artifacts
+//! needed). Runtime-lane threads construct their own
+//! [`crate::runtime::ExecutorBackend`] at startup ([`super::server`])
+//! and call [`dispatch_runtime`].
 //!
 //! Runtime-capable methods: `L1`/`L1LeastSquare` (artifact CD epochs +
 //! native refit), `KMeans` (artifact Lloyd steps + native seeding) and
@@ -24,61 +27,11 @@ use crate::quant::{
     self, refit, types, unique::UniqueDecomp, vmatrix::VBasis, QuantDiag, QuantMethod,
     QuantOptions, QuantOutput,
 };
-use crate::runtime::artifact;
-use crate::runtime::Executor;
+use crate::runtime::{BackendKind, ExecutorBackend, ShadowBackend};
 use crate::{Error, Result};
 use std::path::Path;
 
-/// Bucket metadata probed from the manifest (no PJRT client involved).
-#[derive(Debug, Clone, Default)]
-pub struct RuntimeInfo {
-    /// Largest lasso `m` bucket.
-    pub max_lasso_m: usize,
-    /// Available (m, k) kmeans buckets.
-    pub kmeans_buckets: Vec<(usize, usize)>,
-    /// Available (m, k) gmm buckets.
-    pub gmm_buckets: Vec<(usize, usize)>,
-}
-
-impl RuntimeInfo {
-    /// Probe a manifest on disk.
-    pub fn probe(dir: &Path) -> Result<RuntimeInfo> {
-        let specs = artifact::load_manifest(dir)?;
-        let max_lasso_m = specs
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some("lasso_cd"))
-            .filter_map(|s| s.meta_usize("m"))
-            .max()
-            .unwrap_or(0);
-        let kmeans_buckets = specs
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some("kmeans"))
-            .filter_map(|s| Some((s.meta_usize("m")?, s.meta_usize("k")?)))
-            .collect();
-        let gmm_buckets = specs
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some("gmm"))
-            .filter_map(|s| Some((s.meta_usize("m")?, s.meta_usize("k")?)))
-            .collect();
-        Ok(RuntimeInfo { max_lasso_m, kmeans_buckets, gmm_buckets })
-    }
-
-    /// Does any bucket fit this (method, m, k) request?
-    pub fn fits(&self, method: QuantMethod, m: usize, k: usize) -> bool {
-        match method {
-            QuantMethod::L1 | QuantMethod::L1LeastSquare => m <= self.max_lasso_m,
-            QuantMethod::KMeans => self
-                .kmeans_buckets
-                .iter()
-                .any(|&(bm, bk)| m <= bm && k <= bk),
-            QuantMethod::Gmm => self
-                .gmm_buckets
-                .iter()
-                .any(|&(bm, bk)| m <= bm && k <= bk),
-            _ => false,
-        }
-    }
-}
+pub use crate::runtime::RuntimeInfo;
 
 /// Send-safe routing state shared by all workers.
 pub struct Router {
@@ -87,12 +40,17 @@ pub struct Router {
 }
 
 impl Router {
-    /// Build a router; probes the manifest unless the policy is Native.
-    pub fn new(policy: Engine, artifacts_dir: &Path) -> Result<Router> {
-        let info = match policy {
-            Engine::Native => None,
-            Engine::Runtime => Some(RuntimeInfo::probe(artifacts_dir)?),
-            Engine::Auto => match RuntimeInfo::probe(artifacts_dir) {
+    /// Build a router for the given backend kind. For `Pjrt` the
+    /// capability table is probed from the manifest on disk (under
+    /// `Auto`, probe failure degrades to native-only routing; under
+    /// `Runtime` it is a hard error). The shadow backend needs no
+    /// artifacts — its bucket table is static.
+    pub fn new(policy: Engine, artifacts_dir: &Path, backend: BackendKind) -> Result<Router> {
+        let info = match (policy, backend) {
+            (Engine::Native, _) => None,
+            (_, BackendKind::Shadow) => Some(ShadowBackend::new().info()),
+            (Engine::Runtime, BackendKind::Pjrt) => Some(RuntimeInfo::probe(artifacts_dir)?),
+            (Engine::Auto, BackendKind::Pjrt) => match RuntimeInfo::probe(artifacts_dir) {
                 Ok(i) => Some(i),
                 Err(e) => {
                     eprintln!("router: runtime unavailable, auto-falling back to native: {e}");
@@ -101,6 +59,19 @@ impl Router {
             },
         };
         Ok(Router { policy, info })
+    }
+
+    /// Build a router from an explicit capability table. Use when the
+    /// lane backends come from an injected [`super::server::BackendFactory`]
+    /// whose buckets differ from the stock tables (pass
+    /// `backend.info()`), so routing never disagrees with the backend
+    /// that actually serves the jobs.
+    pub fn with_info(policy: Engine, info: RuntimeInfo) -> Router {
+        let info = match policy {
+            Engine::Native => None,
+            _ => Some(info),
+        };
+        Router { policy, info }
     }
 
     /// The active policy.
@@ -163,10 +134,10 @@ impl Router {
     }
 }
 
-/// Runtime-lane dispatch (called only from the lane thread that owns the
-/// executor).
+/// Runtime-lane dispatch (called only from a lane thread — or one of its
+/// scoped sub-lanes — that owns the backend handle).
 pub fn dispatch_runtime(
-    ex: &mut Executor,
+    ex: &mut dyn ExecutorBackend,
     data: &[f64],
     method: QuantMethod,
     opts: &QuantOptions,
@@ -189,7 +160,7 @@ pub fn dispatch_runtime(
 
 /// L1 on the runtime: artifact CD epochs (f32) + native f64 refit/recovery.
 fn runtime_lasso(
-    ex: &mut Executor,
+    ex: &mut dyn ExecutorBackend,
     data: &[f64],
     opts: &QuantOptions,
     with_refit: bool,
@@ -234,7 +205,11 @@ fn runtime_lasso(
 
 /// k-means on the runtime: deterministic quantile seeding, artifact Lloyd
 /// steps, native assignment.
-fn runtime_kmeans(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Result<QuantOutput> {
+fn runtime_kmeans(
+    ex: &mut dyn ExecutorBackend,
+    data: &[f64],
+    opts: &QuantOptions,
+) -> Result<QuantOutput> {
     let u = UniqueDecomp::new(data)?;
     let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
     let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
@@ -272,7 +247,11 @@ fn runtime_kmeans(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Resul
 
 /// GMM on the runtime: deterministic quantile seeding, artifact EM steps,
 /// native max-posterior assignment.
-fn runtime_gmm(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Result<QuantOutput> {
+fn runtime_gmm(
+    ex: &mut dyn ExecutorBackend,
+    data: &[f64],
+    opts: &QuantOptions,
+) -> Result<QuantOutput> {
     let u = UniqueDecomp::new(data)?;
     let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
     let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
@@ -340,7 +319,7 @@ fn runtime_gmm(ex: &mut Executor, data: &[f64], opts: &QuantOptions) -> Result<Q
 /// native vs runtime Algorithm 1 on the same data. Returns (native loss,
 /// runtime loss).
 pub fn check_lasso_equivalence(
-    ex: &mut Executor,
+    ex: &mut dyn ExecutorBackend,
     data: &[f64],
     lambda1: f64,
 ) -> Result<(f64, f64)> {
@@ -356,7 +335,7 @@ mod tests {
 
     #[test]
     fn native_policy_never_routes_runtime() {
-        let r = Router::new(Engine::Native, Path::new("/nonexistent")).unwrap();
+        let r = Router::new(Engine::Native, Path::new("/nonexistent"), BackendKind::Pjrt).unwrap();
         assert!(!r.routes_to_runtime(QuantMethod::L1, 10, 4));
         let data = vec![1.0, 2.0, 3.0, 4.0];
         let out = r
@@ -371,7 +350,7 @@ mod tests {
 
     #[test]
     fn f32_payloads_dispatch_on_the_native_f32_lane() {
-        let r = Router::new(Engine::Native, Path::new("/nonexistent")).unwrap();
+        let r = Router::new(Engine::Native, Path::new("/nonexistent"), BackendKind::Pjrt).unwrap();
         let data32 = vec![0.1f32, 0.2, 0.3, 0.2, 0.1, 0.9];
         let opts = QuantOptions { lambda1: 0.05, ..Default::default() };
         let via_router = r
@@ -395,30 +374,49 @@ mod tests {
 
     #[test]
     fn auto_policy_with_missing_artifacts_falls_back() {
-        let r = Router::new(Engine::Auto, Path::new("/nonexistent")).unwrap();
+        let r = Router::new(Engine::Auto, Path::new("/nonexistent"), BackendKind::Pjrt).unwrap();
         assert!(!r.routes_to_runtime(QuantMethod::L1, 10, 4));
     }
 
     #[test]
     fn runtime_policy_with_missing_artifacts_errors_at_open() {
-        assert!(Router::new(Engine::Runtime, Path::new("/nonexistent")).is_err());
+        let r = Router::new(Engine::Runtime, Path::new("/nonexistent"), BackendKind::Pjrt);
+        assert!(r.is_err());
     }
 
     #[test]
-    fn runtime_info_fit_logic() {
-        let info = RuntimeInfo {
-            max_lasso_m: 256,
-            kmeans_buckets: vec![(256, 8), (1024, 64)],
-            gmm_buckets: vec![(256, 8)],
-        };
-        assert!(info.fits(QuantMethod::L1, 256, 0));
-        assert!(!info.fits(QuantMethod::L1, 257, 0));
-        assert!(info.fits(QuantMethod::KMeans, 300, 32));
-        assert!(!info.fits(QuantMethod::KMeans, 2000, 8));
-        assert!(!info.fits(QuantMethod::KMeans, 100, 100));
-        assert!(info.fits(QuantMethod::Gmm, 100, 8));
-        assert!(!info.fits(QuantMethod::Gmm, 1000, 8));
-        assert!(!info.fits(QuantMethod::ClusterLs, 10, 2));
+    fn shadow_backend_routes_without_artifacts() {
+        // The shadow backend's capability table is static: no manifest on
+        // disk, yet Auto routes runtime-capable jobs to the lane.
+        let r = Router::new(Engine::Auto, Path::new("/nonexistent"), BackendKind::Shadow).unwrap();
+        assert!(r.routes_to_runtime(QuantMethod::L1, 500, 4));
+        assert!(r.routes_to_runtime(QuantMethod::KMeans, 500, 8));
+        assert!(!r.routes_to_runtime(QuantMethod::L1, 5000, 4), "over every bucket");
+        assert!(!r.routes_to_runtime(QuantMethod::ClusterLs, 10, 2), "not capable");
+        // Strict policy also opens fine with no artifact dir.
+        let strict =
+            Router::new(Engine::Runtime, Path::new("/nonexistent"), BackendKind::Shadow).unwrap();
+        assert!(strict.routes_to_runtime(QuantMethod::Gmm, 100, 8));
+    }
+
+    #[test]
+    fn shadow_dispatch_runtime_produces_valid_outputs() {
+        // Per-job runtime dispatch over the shadow backend: the reference
+        // the batch integration tests compare against.
+        let mut ex = ShadowBackend::new();
+        let data: Vec<f64> = (0..120).map(|i| ((i * 37) % 97) as f64 / 97.0).collect();
+        for method in [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::Gmm] {
+            let opts = QuantOptions { lambda1: 0.02, target_values: 8, ..Default::default() };
+            let out = dispatch_runtime(&mut ex, &data, method, &opts).unwrap();
+            assert_eq!(out.values.len(), data.len(), "{method:?}");
+            assert!(out.l2_loss.is_finite());
+            if method != QuantMethod::L1LeastSquare {
+                assert!(out.distinct_values() <= 8, "{method:?}");
+            }
+        }
+        // Non-runtime-capable methods are rejected loudly.
+        assert!(dispatch_runtime(&mut ex, &data, QuantMethod::L0, &QuantOptions::default())
+            .is_err());
     }
 
     #[test]

@@ -15,11 +15,17 @@
 //!              respond channels + metrics
 //! ```
 //!
-//! Runtime lanes each own their Executor because PJRT handles are
-//! `Rc`-based (not Send); per-lane executable caches keep lanes
-//! independent (§Perf row 7: 2 lanes ≈ 2.2× mixed-burst throughput).
-//! Workers drain *batches* from the queue (`max_batch`, `batch_wait_us`)
-//! so bursts of small jobs pay one wakeup.
+//! Runtime lanes each open their own [`ExecutorBackend`] via a backend
+//! factory (PJRT handles are `Rc`-based, not Send; per-lane artifact
+//! caches keep lanes independent — §Perf row 7: 2 lanes ≈ 2.2×
+//! mixed-burst throughput). Backends with Send sub-handles (the shadow
+//! backend) additionally fan one drained batch across
+//! `Config::runtime_fanout` scoped sub-lanes, exactly like the native
+//! workers' `batch_fanout`. Workers drain *batches* from the queue
+//! (`max_batch`, `batch_wait_us`) so bursts of small jobs pay one
+//! wakeup. A lane whose backend fails to open runs *degraded*: counted
+//! in [`Metrics`], and under `Engine::Auto` its pops are served natively
+//! instead of erroring job by job.
 
 use super::job::{Job, JobId, JobResult, Payload, ServedBy};
 use super::metrics::{Metrics, Snapshot};
@@ -27,10 +33,19 @@ use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
 use crate::config::{Config, Engine};
 use crate::quant::{Precision, QuantMethod, QuantOptions};
+use crate::runtime::{open_backend, ExecutorBackend};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+/// Constructs one runtime-lane backend; called *on* the lane thread (the
+/// result never crosses threads), so non-Send backends are fine. The
+/// argument is the lane index. Injectable for tests — failing factories
+/// and instrumented shadow backends exercise the degradation/fan-out
+/// paths without artifacts.
+pub type BackendFactory =
+    Arc<dyn Fn(usize) -> Result<Box<dyn ExecutorBackend>> + Send + Sync>;
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -71,18 +86,26 @@ fn serve_one_native(router: &Router, metrics: &Metrics, mut job: Job) {
     finish(metrics, job, outcome, ServedBy::Native);
 }
 
-/// Serve a drained batch natively, fanning the jobs across up to `fanout`
-/// scoped threads (chunked hand-off). Jobs are independent — each owns its
-/// response channel — so intra-batch completion order does not matter.
-fn serve_batch_native(router: &Router, metrics: &Metrics, mut batch: Vec<Job>, fanout: usize) {
-    metrics.on_batch(batch.len());
-    let lanes = fanout.max(1).min(batch.len().max(1));
-    if lanes <= 1 {
+/// Chunked batch fan-out shared by the native workers and the runtime
+/// lanes: the first chunk runs on the calling thread via `serve_local`,
+/// the rest are handed to scoped helper threads, each paired with one
+/// element of `helpers` (per-thread lane state — `()` for native lanes,
+/// a backend sub-handle for runtime lanes). Empty `helpers` ⇒ serial.
+/// Jobs are independent — each owns its response channel — so
+/// intra-batch completion order does not matter.
+fn fan_out_batch<C: Send>(
+    mut batch: Vec<Job>,
+    helpers: Vec<C>,
+    mut serve_local: impl FnMut(Job),
+    serve_helper: impl Fn(&mut C, Job) + Send + Sync,
+) {
+    if helpers.is_empty() {
         for job in batch.drain(..) {
-            serve_one_native(router, metrics, job);
+            serve_local(job);
         }
         return;
     }
+    let lanes = helpers.len() + 1;
     let chunk = batch.len().div_ceil(lanes);
     let mut chunks: Vec<Vec<Job>> = Vec::with_capacity(lanes);
     while !batch.is_empty() {
@@ -94,65 +117,155 @@ fn serve_batch_native(router: &Router, metrics: &Metrics, mut batch: Vec<Job>, f
         // The draining worker serves the first chunk itself; the rest are
         // handed off to scoped helper threads.
         let local = it.next();
-        for handed_off in it {
+        let serve_helper = &serve_helper;
+        for (mut ctx, handed_off) in helpers.into_iter().zip(it) {
             s.spawn(move || {
                 for job in handed_off {
-                    serve_one_native(router, metrics, job);
+                    serve_helper(&mut ctx, job);
                 }
             });
         }
         if let Some(own) = local {
             for job in own {
-                serve_one_native(router, metrics, job);
+                serve_local(job);
             }
         }
     });
 }
 
-/// Runtime-lane batch service: the lane thread owns the executor (PJRT
-/// handles are not Send). `Auto` falls back to native per job on runtime
-/// errors; `Runtime` propagates them.
-fn serve_batch_runtime(
-    executor: &mut Option<crate::runtime::Executor>,
+/// Serve a drained batch natively, fanning the jobs across up to `fanout`
+/// scoped threads (chunked hand-off).
+fn serve_batch_native(router: &Router, metrics: &Metrics, batch: Vec<Job>, fanout: usize) {
+    metrics.on_batch(batch.len());
+    let lanes = fanout.max(1).min(batch.len().max(1));
+    fan_out_batch(
+        batch,
+        vec![(); lanes.saturating_sub(1)],
+        |job| serve_one_native(router, metrics, job),
+        |_, job| serve_one_native(router, metrics, job),
+    );
+}
+
+/// Serve one job on a runtime backend. `Auto` falls back to native on
+/// runtime errors; `Runtime` propagates them. `ServedBy` reports the
+/// engine that actually produced the result.
+fn serve_one_runtime(
+    backend: &mut dyn ExecutorBackend,
     router: &Router,
     metrics: &Metrics,
-    batch: Vec<Job>,
+    job: Job,
 ) {
-    metrics.on_batch(batch.len());
-    for job in batch {
-        let rt_outcome = match executor.as_mut() {
-            Some(ex) => match &job.data {
-                Payload::F64(v) => {
-                    super::router::dispatch_runtime(ex, v, job.method, &job.opts)
-                }
-                data @ Payload::F32(_) => {
-                    // The PJRT artifact boundary is f64; f32 payloads
-                    // normally never route here (admission keeps them
-                    // native), but widen defensively if one does.
-                    let wide = data.to_f64_vec();
-                    super::router::dispatch_runtime(ex, &wide, job.method, &job.opts)
-                }
-            },
-            None => Err(Error::Runtime("runtime lane has no executor".into())),
-        };
-        match rt_outcome {
-            Ok(out) => finish(metrics, job, Ok(out), ServedBy::Runtime),
-            Err(e) => {
-                if router.policy() == Engine::Auto {
-                    let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
-                    finish(metrics, job, outcome, ServedBy::Native);
-                } else {
-                    finish(metrics, job, Err(e), ServedBy::Runtime);
-                }
+    let rt_outcome = match &job.data {
+        Payload::F64(v) => super::router::dispatch_runtime(backend, v, job.method, &job.opts),
+        data @ Payload::F32(_) => {
+            // The runtime boundary is f64; f32 payloads normally never
+            // route here (admission keeps them native), but widen
+            // defensively if one does.
+            let wide = data.to_f64_vec();
+            super::router::dispatch_runtime(backend, &wide, job.method, &job.opts)
+        }
+    };
+    match rt_outcome {
+        Ok(out) => finish(metrics, job, Ok(out), ServedBy::Runtime),
+        Err(e) => {
+            if router.policy() == Engine::Auto {
+                let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
+                finish(metrics, job, outcome, ServedBy::Native);
+            } else {
+                finish(metrics, job, Err(e), ServedBy::Runtime);
             }
         }
     }
 }
 
+/// Runtime-lane batch service. When the backend hands out Send
+/// sub-handles (shared compiled state), the drained batch fans across up
+/// to `fanout` scoped sub-lanes exactly like [`serve_batch_native`];
+/// thread-pinned backends (PJRT) serve serially. Jobs are independent —
+/// each owns its response channel — and every backend is deterministic
+/// per job, so fanned results are bitwise-identical to the serial path.
+///
+/// Public (with [`BackendFactory`] and the job types) so integration
+/// tests and benches can drive the lane logic directly — artifact-free
+/// via the shadow backend.
+pub fn serve_batch_runtime(
+    backend: &mut dyn ExecutorBackend,
+    router: &Router,
+    metrics: &Metrics,
+    batch: Vec<Job>,
+    fanout: usize,
+) {
+    metrics.on_batch(batch.len());
+    let lanes = fanout.max(1).min(batch.len().max(1));
+    // One sub-handle per helper lane; the draining lane thread keeps the
+    // primary handle and serves the first chunk itself. Thread-pinned
+    // backends yield no sub-handles ⇒ serial.
+    let subs: Vec<Box<dyn ExecutorBackend + Send>> =
+        (1..lanes).map_while(|_| backend.try_sub_handle()).collect();
+    fan_out_batch(
+        batch,
+        subs,
+        |job| serve_one_runtime(backend, router, metrics, job),
+        |sub, job| serve_one_runtime(sub.as_mut(), router, metrics, job),
+    );
+}
+
+/// Degraded runtime lane (its backend failed to open). Under `Auto` the
+/// lane reroutes its pops to the native engines — same fan-out as a
+/// native worker — so queued runtime jobs still complete; under the
+/// strict `Runtime` policy each job fails loudly.
+fn serve_batch_degraded(router: &Router, metrics: &Metrics, batch: Vec<Job>, fanout: usize) {
+    if router.policy() == Engine::Auto {
+        serve_batch_native(router, metrics, batch, fanout);
+        return;
+    }
+    metrics.on_batch(batch.len());
+    for job in batch {
+        finish(
+            metrics,
+            job,
+            Err(Error::Runtime("runtime lane has no executor".into())),
+            ServedBy::Runtime,
+        );
+    }
+}
+
 impl Coordinator {
-    /// Start workers per `cfg`.
+    /// Start workers per `cfg`, opening runtime lanes with the backend
+    /// selected by `cfg.runtime_backend`.
     pub fn start(cfg: Config) -> Result<Coordinator> {
-        let router = Arc::new(Router::new(cfg.engine, &cfg.artifacts_dir)?);
+        let kind = cfg.runtime_backend;
+        let dir = cfg.artifacts_dir.clone();
+        let factory: BackendFactory = Arc::new(move |_lane| open_backend(kind, &dir));
+        Self::start_with_backend_factory(cfg, factory)
+    }
+
+    /// Start workers per `cfg` with an injected runtime-backend factory
+    /// (called once per lane, on the lane thread). This is the seam the
+    /// runtime integration tests use: instrumented, failing, or
+    /// custom-bucket backends — no artifacts required.
+    ///
+    /// Routing uses the stock capability table for `cfg.runtime_backend`;
+    /// if the factory's backends have *different* buckets, use
+    /// [`Coordinator::start_with_backend_factory_and_info`] with
+    /// `backend.info()` so admission routing matches the lanes.
+    pub fn start_with_backend_factory(cfg: Config, factory: BackendFactory) -> Result<Coordinator> {
+        Self::start_with_backend_factory_and_info(cfg, factory, None)
+    }
+
+    /// [`Coordinator::start_with_backend_factory`] with an explicit
+    /// routing capability table ([`crate::runtime::RuntimeInfo`]) —
+    /// `None` derives it from `cfg.runtime_backend` (manifest probe for
+    /// PJRT, stock bucket table for shadow).
+    pub fn start_with_backend_factory_and_info(
+        cfg: Config,
+        factory: BackendFactory,
+        info: Option<crate::runtime::RuntimeInfo>,
+    ) -> Result<Coordinator> {
+        let router = Arc::new(match info {
+            Some(i) => Router::with_info(cfg.engine, i),
+            None => Router::new(cfg.engine, &cfg.artifacts_dir, cfg.runtime_backend)?,
+        });
         let metrics = Arc::new(Metrics::new());
         let native_q = Arc::new(BoundedQueue::new(cfg.queue_capacity));
         let runtime_q = Arc::new(BoundedQueue::new(cfg.queue_capacity));
@@ -179,30 +292,40 @@ impl Coordinator {
             );
         }
         // Runtime lanes (only when the policy can ever use them). Each
-        // lane constructs its own Executor: PJRT handles are not Send, and
-        // per-lane executable caches let lanes scale independently.
+        // lane constructs its own backend on its own thread: PJRT handles
+        // are not Send, and per-lane artifact caches let lanes scale
+        // independently. A lane whose backend fails to open runs
+        // degraded (counted in metrics; Auto reroutes its pops native).
         if cfg.engine != Engine::Native {
             for li in 0..cfg.runtime_lanes.max(1) {
                 let q = Arc::clone(&runtime_q);
                 let r = Arc::clone(&router);
                 let m = Arc::clone(&metrics);
                 let max_batch = cfg.max_batch;
-                let dir = cfg.artifacts_dir.clone();
+                let rt_fanout = cfg.runtime_fanout;
+                let native_fanout = cfg.batch_fanout;
+                let factory = Arc::clone(&factory);
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("sqlsq-runtime-lane-{li}"))
                         .spawn(move || {
-                            let mut executor = match crate::runtime::Executor::open(&dir) {
-                                Ok(ex) => Some(ex),
+                            let mut backend = match factory(li) {
+                                Ok(b) => Some(b),
                                 Err(e) => {
-                                    eprintln!("runtime lane {li}: executor unavailable: {e}");
+                                    eprintln!("runtime lane {li}: backend unavailable: {e}");
+                                    m.on_lane_degraded();
                                     None
                                 }
                             };
                             while let Some(batch) =
                                 q.pop_batch(max_batch, Duration::from_millis(50), batch_wait)
                             {
-                                serve_batch_runtime(&mut executor, &r, &m, batch);
+                                match backend.as_mut() {
+                                    Some(b) => {
+                                        serve_batch_runtime(b.as_mut(), &r, &m, batch, rt_fanout)
+                                    }
+                                    None => serve_batch_degraded(&r, &m, batch, native_fanout),
+                                }
                             }
                         })
                         .expect("spawn runtime lane"),

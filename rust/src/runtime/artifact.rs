@@ -5,10 +5,13 @@
 //! The registry loads the manifest, validates it, and compiles executables
 //! on first use — compile once, execute many (DESIGN §9).
 
+use super::xla;
 use crate::jsonio::{self, Json};
 use crate::{Error, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 /// One tensor input declared in the manifest.
 #[derive(Debug, Clone, PartialEq)]
@@ -87,11 +90,7 @@ impl Registry {
 
     /// Names of artifacts of a given kind, with their `m` bucket.
     pub fn buckets_of_kind(&self, kind: &str) -> Vec<(String, usize)> {
-        self.specs
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some(kind))
-            .filter_map(|s| s.meta_usize("m").map(|m| (s.name.clone(), m)))
-            .collect()
+        buckets_of_kind(&self.specs, kind)
     }
 
     /// The PJRT platform name (diagnostics).
@@ -172,6 +171,77 @@ impl Registry {
             })
             .collect()
     }
+}
+
+/// Shared compiled-artifact state for one runtime lane: the manifest,
+/// the PJRT client and the compiled-executable cache behind an `Rc`, so
+/// sub-executors on the same lane thread compile/load each artifact
+/// **once** and share the executables ([`super::Executor::fork`]).
+///
+/// PJRT handles are `Rc`-based (not Send), so an `ArtifactCache` never
+/// crosses threads — cross-thread batch fan-out needs a backend whose
+/// shared state is Send ([`super::ShadowBackend`]). This type is the
+/// split between *compiled-artifact state* (here) and *execution state*
+/// (bucket indexes + padding/convergence driving, in the executor).
+pub struct ArtifactCache {
+    inner: Rc<RefCell<Registry>>,
+}
+
+impl ArtifactCache {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<ArtifactCache> {
+        Ok(Self::from_registry(Registry::open(dir)?))
+    }
+
+    /// Wrap an already-open registry.
+    pub fn from_registry(registry: Registry) -> ArtifactCache {
+        ArtifactCache { inner: Rc::new(RefCell::new(registry)) }
+    }
+
+    /// Cheap same-thread handle sharing the compiled-executable cache.
+    pub fn handle(&self) -> ArtifactCache {
+        ArtifactCache { inner: Rc::clone(&self.inner) }
+    }
+
+    /// The PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.inner.borrow().platform()
+    }
+
+    /// Snapshot of the artifact specs (open-time bucket indexing).
+    pub fn specs(&self) -> Vec<ArtifactSpec> {
+        self.inner.borrow().specs().to_vec()
+    }
+
+    /// Metadata field of one artifact as usize.
+    pub fn meta_usize(&self, name: &str, key: &str) -> Option<usize> {
+        self.inner.borrow().spec(name).and_then(|s| s.meta_usize(key))
+    }
+
+    /// Execute artifact `name` (compiling + caching on first use).
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.inner.borrow_mut().execute_f32(name, inputs)
+    }
+}
+
+/// Names of artifacts of a given kind, with their `m` bucket — the one
+/// filter shared by the registry surface and the executor's open-time
+/// bucket indexing.
+pub fn buckets_of_kind(specs: &[ArtifactSpec], kind: &str) -> Vec<(String, usize)> {
+    specs
+        .iter()
+        .filter(|s| s.meta_str("kind") == Some(kind))
+        .filter_map(|s| s.meta_usize("m").map(|m| (s.name.clone(), m)))
+        .collect()
+}
+
+/// (name, m, k) buckets of a given kind (kmeans/gmm shapes).
+pub fn mk_buckets_of_kind(specs: &[ArtifactSpec], kind: &str) -> Vec<(String, usize, usize)> {
+    specs
+        .iter()
+        .filter(|s| s.meta_str("kind") == Some(kind))
+        .filter_map(|s| Some((s.name.clone(), s.meta_usize("m")?, s.meta_usize("k")?)))
+        .collect()
 }
 
 /// Load and parse `manifest.json` from an artifact directory without

@@ -1,0 +1,512 @@
+//! Execution backends for the runtime lane.
+//!
+//! [`ExecutorBackend`] abstracts the three kernel families (lasso_cd,
+//! kmeans, gmm) plus the batched MLP forward behind typed calls, so the
+//! coordinator's runtime lane is written once against the trait and
+//! served by either:
+//!
+//! * [`super::Executor`] — the real PJRT path (AOT HLO artifacts,
+//!   compile-once per lane via [`super::artifact::ArtifactCache`]);
+//! * [`super::ShadowBackend`] — a deterministic native replay of the
+//!   artifact kernels with the runtime's exact f32 / shape-bucket padding
+//!   / iterations-per-call semantics. No PJRT, no artifacts — the CI
+//!   stand-in that puts the whole serve path under test.
+//!
+//! The bucket-padding plans and the call-chaining convergence loops live
+//! here as shared drivers (`drive_*`): both backends run the *identical*
+//! control flow — bucket fit, inert padding, per-call convergence and
+//! early-stop tests — and differ only in what one "artifact call" does.
+//! That shared control flow is the shadow backend's fidelity contract.
+
+use super::{artifact, buckets};
+use crate::quant::QuantMethod;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Result of a runtime LASSO solve.
+#[derive(Debug, Clone)]
+pub struct RuntimeLasso {
+    /// Final coefficients (unpadded, length = original m).
+    pub alpha: Vec<f32>,
+    /// Artifact calls made (each = `epochs_per_call` CD epochs).
+    pub calls: usize,
+    /// Converged before the call budget?
+    pub converged: bool,
+}
+
+/// Which backend implementation a runtime lane opens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// AOT artifacts on the PJRT runtime (needs `make artifacts`).
+    #[default]
+    Pjrt,
+    /// Deterministic native replay of the artifact kernels (no
+    /// artifacts needed; the CI/testing backend).
+    Shadow,
+}
+
+impl BackendKind {
+    /// Parse from config/CLI strings.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "shadow" => Ok(BackendKind::Shadow),
+            _ => Err(Error::Config(format!("unknown runtime backend '{s}' (pjrt|shadow)"))),
+        }
+    }
+
+    /// Stable string id.
+    pub fn id(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Shadow => "shadow",
+        }
+    }
+}
+
+/// Bucket metadata for capability routing (no PJRT client involved).
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeInfo {
+    /// Largest lasso `m` bucket.
+    pub max_lasso_m: usize,
+    /// Available (m, k) kmeans buckets.
+    pub kmeans_buckets: Vec<(usize, usize)>,
+    /// Available (m, k) gmm buckets.
+    pub gmm_buckets: Vec<(usize, usize)>,
+}
+
+impl RuntimeInfo {
+    /// Probe a manifest on disk (Send-safe; used by the router). Shares
+    /// the manifest filters with the executor's bucket indexing so
+    /// routing capability can never diverge from execution.
+    pub fn probe(dir: &Path) -> Result<RuntimeInfo> {
+        let specs = artifact::load_manifest(dir)?;
+        let drop_name = |b: Vec<(String, usize, usize)>| -> Vec<(usize, usize)> {
+            b.into_iter().map(|(_, m, k)| (m, k)).collect()
+        };
+        Ok(RuntimeInfo {
+            max_lasso_m: artifact::buckets_of_kind(&specs, "lasso_cd")
+                .iter()
+                .map(|&(_, m)| m)
+                .max()
+                .unwrap_or(0),
+            kmeans_buckets: drop_name(artifact::mk_buckets_of_kind(&specs, "kmeans")),
+            gmm_buckets: drop_name(artifact::mk_buckets_of_kind(&specs, "gmm")),
+        })
+    }
+
+    /// Does any bucket fit this (method, m, k) request?
+    pub fn fits(&self, method: QuantMethod, m: usize, k: usize) -> bool {
+        match method {
+            QuantMethod::L1 | QuantMethod::L1LeastSquare => m <= self.max_lasso_m,
+            QuantMethod::KMeans => self
+                .kmeans_buckets
+                .iter()
+                .any(|&(bm, bk)| m <= bm && k <= bk),
+            QuantMethod::Gmm => self
+                .gmm_buckets
+                .iter()
+                .any(|&(bm, bk)| m <= bm && k <= bk),
+            _ => false,
+        }
+    }
+}
+
+/// Typed execution surface of a runtime lane.
+///
+/// Implementations own whatever compiled/cached state they need; the
+/// coordinator only sees these calls. Methods take `&mut self` because
+/// the PJRT implementation caches compiled executables on first use.
+pub trait ExecutorBackend {
+    /// Stable backend id ("pjrt" | "shadow"), for logs and metrics.
+    fn backend_id(&self) -> &'static str;
+
+    /// Platform name (diagnostics).
+    fn platform(&self) -> String;
+
+    /// Largest lasso bucket available (capability probe).
+    fn max_lasso_m(&self) -> usize;
+
+    /// Epochs fused into one lasso call.
+    fn lasso_epochs_per_call(&self) -> usize;
+
+    /// Capability table for routing (bucket fits).
+    fn info(&self) -> RuntimeInfo;
+
+    /// Run CD-LASSO until convergence: repeated calls of
+    /// `lasso_epochs_per_call` epochs each, until the max α move falls
+    /// under `tol` or `max_calls` is exhausted.
+    fn lasso_solve(
+        &mut self,
+        w: &[f32],
+        d: &[f32],
+        lambda1: f32,
+        lambda2: f32,
+        max_calls: usize,
+        tol: f32,
+    ) -> Result<RuntimeLasso>;
+
+    /// Run `min_calls` fused-Lloyd calls; returns centroids truncated to
+    /// the real k.
+    fn kmeans_lloyd(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+        min_calls: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Run `calls` fused-EM calls; returns (means, variances, weights)
+    /// truncated to the real k.
+    #[allow(clippy::too_many_arguments)]
+    fn gmm_em(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        means: &[f32],
+        variances: &[f32],
+        mix: &[f32],
+        var_floor: f32,
+        calls: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Forward a row-major `rows × in_dim` batch through the MLP;
+    /// `params` are (w, b) pairs. Rows are chunked/padded to the
+    /// backend's batch size.
+    fn mlp_forward(
+        &mut self,
+        x: &[f32],
+        rows: usize,
+        in_dim: usize,
+        out_dim: usize,
+        params: &[(&[f32], &[f32])],
+    ) -> Result<Vec<f32>>;
+
+    /// Cheap per-thread sub-executor sharing this backend's compiled
+    /// state, for intra-lane batch fan-out. `None` means handles are
+    /// thread-pinned (PJRT: `Rc`-based, not Send) and the lane serves
+    /// its batches serially.
+    fn try_sub_handle(&self) -> Option<Box<dyn ExecutorBackend + Send>>;
+}
+
+/// Open a backend of the given kind. The shadow backend ignores the
+/// artifact directory — it needs none.
+pub fn open_backend(kind: BackendKind, dir: &Path) -> Result<Box<dyn ExecutorBackend>> {
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(super::Executor::open(dir)?)),
+        BackendKind::Shadow => Ok(Box::new(super::ShadowBackend::new())),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared call drivers: padding + convergence control flow, identical for
+// every backend. One "call" is whatever the backend fuses per artifact
+// dispatch (epochs_per_call CD epochs, iters_per_call Lloyd/EM steps).
+// ---------------------------------------------------------------------------
+
+/// Drive CD-LASSO over a raw step function. `call(w, d, cw, lam, alpha)`
+/// runs one fused call on padded inputs and returns the new padded α.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive_lasso<F>(
+    w: &[f32],
+    d: &[f32],
+    lambda1: f32,
+    lambda2: f32,
+    max_calls: usize,
+    tol: f32,
+    bucket: usize,
+    mut call: F,
+) -> Result<RuntimeLasso>
+where
+    F: FnMut(&[f32], &[f32], &[f32], &[f32; 2], &[f32]) -> Result<Vec<f32>>,
+{
+    let m = w.len();
+    // All dim checks live here, once, for every backend.
+    if m == 0 || d.len() != m || bucket < m {
+        return Err(Error::InvalidInput("lasso_solve: bad dims".into()));
+    }
+    let alpha0 = vec![1.0f32; m];
+    let buckets::LassoPadding { w: wp, d: dp, cw: cwp, alpha: mut alpha } =
+        buckets::pad_lasso(w, d, &alpha0, bucket);
+    let lam = [lambda1, lambda2];
+    let mut calls = 0usize;
+    let mut converged = false;
+    // Support-stability early stop, mirroring the native solver (§Perf):
+    // only the zero pattern matters downstream.
+    let mut last_sig = 0u64;
+    let mut stable = 0usize;
+    while calls < max_calls {
+        calls += 1;
+        let new_alpha = call(&wp, &dp, &cwp, &lam, &alpha)?;
+        let max_move = alpha
+            .iter()
+            .zip(&new_alpha)
+            .zip(&dp)
+            .map(|((a, b), dd)| ((a - b) * dd).abs())
+            .fold(0.0f32, f32::max);
+        alpha = new_alpha;
+        if max_move < tol {
+            converged = true;
+            break;
+        }
+        let mut sig = 0xcbf29ce484222325u64;
+        for (i, &a) in alpha.iter().enumerate() {
+            if a.abs() > 1e-7 {
+                sig = (sig ^ i as u64).wrapping_mul(0x100000001b3);
+            }
+        }
+        if sig == last_sig {
+            stable += 1;
+            // Each call is epochs_per_call epochs; 2 stable calls ≈ the
+            // native patience.
+            if stable >= 2 {
+                converged = true;
+                break;
+            }
+        } else {
+            last_sig = sig;
+            stable = 0;
+        }
+    }
+    alpha.truncate(m);
+    Ok(RuntimeLasso { alpha, calls, converged })
+}
+
+/// Sentinel value far above the data range, so no real point selects a
+/// padded component and sorting keeps pads last. One min/max pass;
+/// callers guarantee `points` is non-empty.
+fn sentinel_above(points: &[f32]) -> f32 {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &p in points {
+        lo = lo.min(p);
+        hi = hi.max(p);
+    }
+    hi + (hi - lo).max(1.0) * 10.0
+}
+
+/// Point weights padded to the bucket with zero-weight (inert) rows;
+/// real weights can be multiplicities.
+fn pad_weights(weights: &[f32], bm: usize) -> Vec<f32> {
+    let mut cw = weights.to_vec();
+    cw.resize(bm, 0.0);
+    cw
+}
+
+/// Drive fused-Lloyd calls with sentinel padding. `call(pts, cw, cen)`
+/// runs one fused call and returns the new padded centroid vector.
+pub(crate) fn drive_kmeans<F>(
+    points: &[f32],
+    weights: &[f32],
+    centroids: &[f32],
+    min_calls: usize,
+    bm: usize,
+    bk: usize,
+    mut call: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(&[f32], &[f32], &[f32]) -> Result<Vec<f32>>,
+{
+    let k = centroids.len();
+    // Empty points would make the sentinel degenerate (-inf pads sorting
+    // *first*); mismatched weights would mis-weight real rows.
+    if points.is_empty() || weights.len() != points.len() {
+        return Err(Error::InvalidInput("kmeans_lloyd: bad dims".into()));
+    }
+    let pts = buckets::pad(points, bm, 0.0);
+    let cw = pad_weights(weights, bm);
+    let sentinel = sentinel_above(points);
+    // Distinct pads (sentinel, sentinel+1, …) so sort order is stable;
+    // every Lloyd step keeps empty pad clusters at their value ≥
+    // sentinel, so the spacing survives across calls.
+    let mut cen = buckets::pad(centroids, bk, sentinel);
+    for (i, c) in cen.iter_mut().enumerate().skip(k) {
+        *c = sentinel + (i - k) as f32;
+    }
+    for _ in 0..min_calls.max(1) {
+        cen = call(&pts, &cw, &cen)?;
+    }
+    // Real centroids are the k smallest (sentinels sort last).
+    cen.truncate(k);
+    Ok(cen)
+}
+
+/// Drive fused-EM calls with sentinel padding. `call(pts, cw, mu, var,
+/// pi, floor)` runs one fused call and returns the new padded
+/// (means, variances, weights).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive_gmm<F>(
+    points: &[f32],
+    weights: &[f32],
+    means: &[f32],
+    variances: &[f32],
+    mix: &[f32],
+    var_floor: f32,
+    calls: usize,
+    bm: usize,
+    bk: usize,
+    mut call: F,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>
+where
+    F: FnMut(
+        &[f32],
+        &[f32],
+        &[f32],
+        &[f32],
+        &[f32],
+        &[f32; 1],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+{
+    let k = means.len();
+    // Same degenerate-sentinel guard as [`drive_kmeans`], plus the
+    // component-parameter dims — once, for every backend.
+    if points.is_empty()
+        || weights.len() != points.len()
+        || variances.len() != k
+        || mix.len() != k
+    {
+        return Err(Error::InvalidInput("gmm_em: bad dims".into()));
+    }
+    // Pad points with weight 0; pad components with zero mixing weight
+    // and a far-away sentinel mean so sorting keeps them last.
+    let pts = buckets::pad(points, bm, 0.0);
+    let cw = pad_weights(weights, bm);
+    let sentinel = sentinel_above(points);
+    let mut mu = means.to_vec();
+    let mut var = variances.to_vec();
+    let mut pi = mix.to_vec();
+    for i in k..bk {
+        mu.push(sentinel + (i - k) as f32);
+        var.push(1.0);
+        pi.push(0.0);
+    }
+    let floor = [var_floor];
+    for _ in 0..calls.max(1) {
+        let (nmu, nvar, npi) = call(&pts, &cw, &mu, &var, &pi, &floor)?;
+        mu = nmu;
+        var = nvar;
+        pi = npi;
+    }
+    mu.truncate(k);
+    var.truncate(k);
+    pi.truncate(k);
+    // Renormalize over the real components (pads carried ≈0 mass).
+    let total: f32 = pi.iter().sum();
+    if total > 0.0 {
+        for p in &mut pi {
+            *p /= total;
+        }
+    }
+    Ok((mu, var, pi))
+}
+
+/// Drive the MLP forward in batch-sized chunks. `call(xb)` forwards one
+/// zero-padded `batch × in_dim` chunk and returns `batch × out_dim`
+/// logits.
+pub(crate) fn drive_mlp<F>(
+    x: &[f32],
+    rows: usize,
+    in_dim: usize,
+    out_dim: usize,
+    batch: usize,
+    mut call: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>>,
+{
+    if x.len() != rows * in_dim {
+        return Err(Error::InvalidInput("mlp_forward: x dims".into()));
+    }
+    let mut logits = Vec::with_capacity(rows * out_dim);
+    let mut row = 0usize;
+    while row < rows {
+        let take = (rows - row).min(batch);
+        let mut xb = vec![0.0f32; batch * in_dim];
+        xb[..take * in_dim].copy_from_slice(&x[row * in_dim..(row + take) * in_dim]);
+        let out = call(&xb)?;
+        if out.len() < take * out_dim {
+            return Err(Error::Runtime("mlp call returned a short batch".into()));
+        }
+        logits.extend_from_slice(&out[..take * out_dim]);
+        row += take;
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("shadow").unwrap(), BackendKind::Shadow);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::Shadow.id(), "shadow");
+        assert_eq!(BackendKind::default(), BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn runtime_info_fit_logic() {
+        let info = RuntimeInfo {
+            max_lasso_m: 256,
+            kmeans_buckets: vec![(256, 8), (1024, 64)],
+            gmm_buckets: vec![(256, 8)],
+        };
+        assert!(info.fits(QuantMethod::L1, 256, 0));
+        assert!(!info.fits(QuantMethod::L1, 257, 0));
+        assert!(info.fits(QuantMethod::KMeans, 300, 32));
+        assert!(!info.fits(QuantMethod::KMeans, 2000, 8));
+        assert!(!info.fits(QuantMethod::KMeans, 100, 100));
+        assert!(info.fits(QuantMethod::Gmm, 100, 8));
+        assert!(!info.fits(QuantMethod::Gmm, 1000, 8));
+        assert!(!info.fits(QuantMethod::ClusterLs, 10, 2));
+    }
+
+    #[test]
+    fn drive_lasso_pads_and_truncates() {
+        // A step that returns α unchanged converges by support stability
+        // after two stable calls.
+        let w = [0.1f32, 0.4, 0.9];
+        let d = [0.1f32, 0.3, 0.5];
+        let sol = drive_lasso(&w, &d, 0.0, 0.0, 10, 0.0, 8, |wp, dp, cwp, _lam, alpha| {
+            assert_eq!(wp.len(), 8);
+            assert_eq!(dp.len(), 8);
+            assert_eq!(cwp[..3], [1.0, 1.0, 1.0]);
+            assert_eq!(cwp[3..], [0.0; 5]);
+            Ok(alpha.to_vec())
+        })
+        .unwrap();
+        assert_eq!(sol.alpha.len(), 3);
+        assert!(sol.converged);
+        assert!(sol.calls <= 3);
+    }
+
+    #[test]
+    fn drive_kmeans_keeps_sentinels_last() {
+        let pts = [0.0f32, 0.5, 1.0];
+        let wts = [1.0f32, 1.0, 1.0];
+        let cen0 = [0.2f32, 0.8];
+        let cen = drive_kmeans(&pts, &wts, &cen0, 2, 4, 4, |p, cw, c| {
+            assert_eq!(p.len(), 4);
+            assert_eq!(cw[3], 0.0);
+            // Pads sit above the data range.
+            assert!(c[2] > 1.0 && c[3] > 1.0);
+            Ok(c.to_vec())
+        })
+        .unwrap();
+        assert_eq!(cen, vec![0.2, 0.8]);
+    }
+
+    #[test]
+    fn drive_mlp_chunks_and_unpads() {
+        // Identity-ish call: echo the first out_dim entries per row.
+        let x: Vec<f32> = (0..6).map(|i| i as f32).collect(); // 3 rows × 2
+        let out = drive_mlp(&x, 3, 2, 1, 2, |xb| {
+            assert_eq!(xb.len(), 4); // batch 2 × in_dim 2
+            Ok(vec![xb[0], xb[2]])
+        })
+        .unwrap();
+        assert_eq!(out, vec![0.0, 2.0, 4.0]);
+    }
+}

@@ -1,71 +1,84 @@
-//! Typed execution layer over the artifact registry.
+//! PJRT execution backend: typed calls over the artifact cache.
 //!
-//! The executor owns the registry and exposes the three kernel families as
-//! typed calls with automatic shape-bucketing, padding and unpadding. The
-//! Rust side drives convergence (one artifact call = a fixed number of
-//! inner iterations, see `model.py`), so a single compiled executable
-//! serves every λ, warm start and iteration budget.
+//! The executor indexes the shape buckets once at open and exposes the
+//! kernel families as typed calls with automatic shape-bucketing,
+//! padding and unpadding (the shared `drive_*` helpers in
+//! [`super::backend`]). The Rust side drives convergence (one artifact
+//! call = a fixed number of inner iterations, see `model.py`), so a
+//! single compiled executable serves every λ, warm start and iteration
+//! budget.
+//!
+//! Compiled-artifact state lives in an [`ArtifactCache`] shared by
+//! same-thread sub-executors ([`Executor::fork`]): compile/load once,
+//! execute from every fork. PJRT handles are `Rc`-based (not Send), so
+//! forks never cross threads — [`ExecutorBackend::try_sub_handle`]
+//! returns `None` and the coordinator keeps PJRT lanes serial, scaling
+//! them with `runtime_lanes` instead (each lane owns its own cache).
 
-use super::artifact::Registry;
-use super::buckets;
+use super::artifact::ArtifactCache;
+use super::backend::{self, ExecutorBackend, RuntimeInfo, RuntimeLasso};
 use crate::{Error, Result};
 use std::path::Path;
 
-/// Typed runtime front-end.
+/// Typed runtime front-end over the PJRT artifact cache.
 pub struct Executor {
-    registry: Registry,
+    cache: ArtifactCache,
     lasso_buckets: Vec<(String, usize)>,
     kmeans_buckets: Vec<(String, usize, usize)>, // (name, m, k)
     gmm_buckets: Vec<(String, usize, usize)>,    // (name, m, k)
     mlp_batch: Option<(String, usize)>,
-}
-
-/// Result of a runtime LASSO solve.
-#[derive(Debug, Clone)]
-pub struct RuntimeLasso {
-    /// Final coefficients (unpadded, length = original m).
-    pub alpha: Vec<f32>,
-    /// Artifact calls made (each = `epochs_per_call` CD epochs).
-    pub calls: usize,
-    /// Converged before the call budget?
-    pub converged: bool,
+    epochs_per_call: usize,
 }
 
 impl Executor {
     /// Open the artifact directory and index the buckets.
     pub fn open(dir: &Path) -> Result<Executor> {
-        let registry = Registry::open(dir)?;
-        let mut lasso_buckets = registry.buckets_of_kind("lasso_cd");
+        Self::with_cache(ArtifactCache::open(dir)?)
+    }
+
+    /// Build an executor over an existing (possibly shared) cache.
+    pub fn with_cache(cache: ArtifactCache) -> Result<Executor> {
+        let specs = cache.specs();
+        let mut lasso_buckets = super::artifact::buckets_of_kind(&specs, "lasso_cd");
         lasso_buckets.sort_by_key(|&(_, m)| m);
-        let mut kmeans_buckets: Vec<(String, usize, usize)> = registry
-            .specs()
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some("kmeans"))
-            .filter_map(|s| {
-                Some((s.name.clone(), s.meta_usize("m")?, s.meta_usize("k")?))
-            })
-            .collect();
+        let mut kmeans_buckets = super::artifact::mk_buckets_of_kind(&specs, "kmeans");
         kmeans_buckets.sort_by_key(|&(_, m, k)| (m, k));
-        let mut gmm_buckets: Vec<(String, usize, usize)> = registry
-            .specs()
-            .iter()
-            .filter(|s| s.meta_str("kind") == Some("gmm"))
-            .filter_map(|s| {
-                Some((s.name.clone(), s.meta_usize("m")?, s.meta_usize("k")?))
-            })
-            .collect();
+        let mut gmm_buckets = super::artifact::mk_buckets_of_kind(&specs, "gmm");
         gmm_buckets.sort_by_key(|&(_, m, k)| (m, k));
-        let mlp_batch = registry
-            .specs()
+        let mlp_batch = specs
             .iter()
             .find(|s| s.meta_str("kind") == Some("mlp_fwd"))
             .and_then(|s| Some((s.name.clone(), s.meta_usize("batch")?)));
-        Ok(Executor { registry, lasso_buckets, kmeans_buckets, gmm_buckets, mlp_batch })
+        let epochs_per_call = lasso_buckets
+            .first()
+            .and_then(|(n, _)| cache.meta_usize(n, "epochs_per_call"))
+            .unwrap_or(1);
+        Ok(Executor {
+            cache,
+            lasso_buckets,
+            kmeans_buckets,
+            gmm_buckets,
+            mlp_batch,
+            epochs_per_call,
+        })
+    }
+
+    /// Same-thread sub-executor sharing this executor's compiled
+    /// artifacts (the cache is `Rc`-shared; nothing recompiles).
+    pub fn fork(&self) -> Executor {
+        Executor {
+            cache: self.cache.handle(),
+            lasso_buckets: self.lasso_buckets.clone(),
+            kmeans_buckets: self.kmeans_buckets.clone(),
+            gmm_buckets: self.gmm_buckets.clone(),
+            mlp_batch: self.mlp_batch.clone(),
+            epochs_per_call: self.epochs_per_call,
+        }
     }
 
     /// Platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.registry.platform()
+        self.cache.platform()
     }
 
     /// Largest lasso bucket available (capability probe).
@@ -75,11 +88,7 @@ impl Executor {
 
     /// Epochs fused into one lasso artifact call.
     pub fn lasso_epochs_per_call(&self) -> usize {
-        self.lasso_buckets
-            .first()
-            .and_then(|(n, _)| self.registry.spec(n))
-            .and_then(|s| s.meta_usize("epochs_per_call"))
-            .unwrap_or(1)
+        self.epochs_per_call
     }
 
     /// Run CD-LASSO on the runtime until convergence: repeated artifact
@@ -94,10 +103,8 @@ impl Executor {
         max_calls: usize,
         tol: f32,
     ) -> Result<RuntimeLasso> {
+        // Dim validation lives in the shared driver (`drive_lasso`).
         let m = w.len();
-        if m == 0 || d.len() != m {
-            return Err(Error::InvalidInput("lasso_solve: bad dims".into()));
-        }
         let (name, bucket) = self
             .lasso_buckets
             .iter()
@@ -109,62 +116,19 @@ impl Executor {
                     self.max_lasso_m()
                 ))
             })?;
-        let alpha0 = vec![1.0f32; m];
-        let pad = buckets::pad_lasso(w, d, &alpha0, bucket);
-        let lam = [lambda1, lambda2];
-        let mut alpha = pad.alpha;
-        let mut calls = 0usize;
-        let mut converged = false;
-        // Support-stability early stop, mirroring the native solver
-        // (§Perf): only the zero pattern matters downstream.
-        let mut last_sig = 0u64;
-        let mut stable = 0usize;
-        while calls < max_calls {
-            calls += 1;
-            let out = self.registry.execute_f32(
-                &name,
-                &[&pad.w, &pad.d, &pad.cw, &lam, &alpha],
-            )?;
-            let new_alpha = out
-                .into_iter()
+        let cache = &self.cache;
+        let step = |wp: &[f32], dp: &[f32], cwp: &[f32], lam: &[f32; 2], alpha: &[f32]| {
+            let out = cache.execute_f32(&name, &[wp, dp, cwp, lam, alpha])?;
+            out.into_iter()
                 .next()
-                .ok_or_else(|| Error::Runtime("lasso artifact returned no output".into()))?;
-            let max_move = alpha
-                .iter()
-                .zip(&new_alpha)
-                .zip(&pad.d)
-                .map(|((a, b), dd)| ((a - b) * dd).abs())
-                .fold(0.0f32, f32::max);
-            alpha = new_alpha;
-            if max_move < tol {
-                converged = true;
-                break;
-            }
-            let mut sig = 0xcbf29ce484222325u64;
-            for (i, &a) in alpha.iter().enumerate() {
-                if a.abs() > 1e-7 {
-                    sig = (sig ^ i as u64).wrapping_mul(0x100000001b3);
-                }
-            }
-            if sig == last_sig {
-                stable += 1;
-                // Each call is epochs_per_call epochs; 2 stable calls ≈ the
-                // native patience.
-                if stable >= 2 {
-                    converged = true;
-                    break;
-                }
-            } else {
-                last_sig = sig;
-                stable = 0;
-            }
-        }
-        alpha.truncate(m);
-        Ok(RuntimeLasso { alpha, calls, converged })
+                .ok_or_else(|| Error::Runtime("lasso artifact returned no output".into()))
+        };
+        backend::drive_lasso(w, d, lambda1, lambda2, max_calls, tol, bucket, step)
     }
 
-    /// Run `iters` Lloyd iterations on the runtime. `centroids` length must
-    /// match an available k bucket after padding points to an m bucket.
+    /// Run `iters` Lloyd iterations on the runtime. `centroids` length
+    /// must match an available k bucket after padding points to an m
+    /// bucket.
     pub fn kmeans_lloyd(
         &mut self,
         points: &[f32],
@@ -174,51 +138,24 @@ impl Executor {
     ) -> Result<Vec<f32>> {
         let m = points.len();
         let k = centroids.len();
-        if weights.len() != m {
-            return Err(Error::InvalidInput("kmeans_lloyd: weights mismatch".into()));
-        }
         let (name, bm, bk) = self
             .kmeans_buckets
             .iter()
             .find(|&&(_, bm, bk)| bm >= m && bk >= k)
             .cloned()
             .ok_or_else(|| Error::Runtime(format!("no kmeans bucket fits m={m}, k={k}")))?;
-        // Pad points with weight 0; pad centroids far above the data range
-        // so no real point selects them and sorting keeps them last.
-        let pts = buckets::pad(points, bm, 0.0);
-        let cw = {
-            let mut cw = vec![1.0f32; m];
-            // Real weights can be multiplicities.
-            cw.copy_from_slice(weights);
-            cw.resize(bm, 0.0);
-            cw
-        };
-        let span = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
-            - points.iter().fold(f32::INFINITY, |a, &b| a.min(b));
-        let sentinel = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
-            + span.max(1.0) * 10.0;
-        let mut cen = buckets::pad(centroids, bk, sentinel);
-        for call in 0..min_calls.max(1) {
-            // Sentinel spacing: keep pads distinct so sort order is stable.
-            for (i, c) in cen.iter_mut().enumerate().skip(k) {
-                if !c.is_finite() || *c < sentinel {
-                    *c = sentinel + (i - k) as f32;
-                }
-            }
-            let out = self.registry.execute_f32(&name, &[&pts, &cw, &cen])?;
-            cen = out
-                .into_iter()
+        let cache = &self.cache;
+        backend::drive_kmeans(points, weights, centroids, min_calls, bm, bk, |pts, cw, cen| {
+            let out = cache.execute_f32(&name, &[pts, cw, cen])?;
+            out.into_iter()
                 .next()
-                .ok_or_else(|| Error::Runtime("kmeans artifact returned no output".into()))?;
-            let _ = call;
-        }
-        // Real centroids are the k smallest (sentinels sort last).
-        cen.truncate(k);
-        Ok(cen)
+                .ok_or_else(|| Error::Runtime("kmeans artifact returned no output".into()))
+        })
     }
 
     /// Run `calls × EM_ITERS_PER_CALL` EM iterations on the runtime.
     /// Returns (means, variances, weights) truncated to the real k.
+    #[allow(clippy::too_many_arguments)]
     pub fn gmm_em(
         &mut self,
         points: &[f32],
@@ -231,61 +168,37 @@ impl Executor {
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let m = points.len();
         let k = means.len();
-        if weights.len() != m || variances.len() != k || mix.len() != k {
-            return Err(Error::InvalidInput("gmm_em: dim mismatch".into()));
-        }
         let (name, bm, bk) = self
             .gmm_buckets
             .iter()
             .find(|&&(_, bm, bk)| bm >= m && bk >= k)
             .cloned()
             .ok_or_else(|| Error::Runtime(format!("no gmm bucket fits m={m}, k={k}")))?;
-        // Pad points with weight 0; pad components with zero mixing weight
-        // and a far-away sentinel mean so sorting keeps them last.
-        let pts = buckets::pad(points, bm, 0.0);
-        let cw = {
-            let mut c = weights.to_vec();
-            c.resize(bm, 0.0);
-            c
-        };
-        let span = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
-            - points.iter().fold(f32::INFINITY, |a, &b| a.min(b));
-        let sentinel = points.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
-            + span.max(1.0) * 10.0;
-        let mut mu = means.to_vec();
-        let mut var = variances.to_vec();
-        let mut pi = mix.to_vec();
-        for i in k..bk {
-            mu.push(sentinel + (i - k) as f32);
-            var.push(1.0);
-            pi.push(0.0);
-        }
-        let floor = [var_floor];
-        for _ in 0..calls.max(1) {
-            let out = self
-                .registry
-                .execute_f32(&name, &[&pts, &cw, &mu, &var, &pi, &floor])?;
-            let mut it = out.into_iter();
-            mu = it.next().ok_or_else(|| Error::Runtime("gmm: no means".into()))?;
-            var = it.next().ok_or_else(|| Error::Runtime("gmm: no vars".into()))?;
-            pi = it.next().ok_or_else(|| Error::Runtime("gmm: no weights".into()))?;
-        }
-        mu.truncate(k);
-        var.truncate(k);
-        pi.truncate(k);
-        // Renormalize over the real components (pads carried ≈0 mass).
-        let total: f32 = pi.iter().sum();
-        if total > 0.0 {
-            for p in &mut pi {
-                *p /= total;
-            }
-        }
-        Ok((mu, var, pi))
+        let cache = &self.cache;
+        backend::drive_gmm(
+            points,
+            weights,
+            means,
+            variances,
+            mix,
+            var_floor,
+            calls,
+            bm,
+            bk,
+            |pts, cw, mu, var, pi, floor| {
+                let out = cache.execute_f32(&name, &[pts, cw, mu, var, pi, floor])?;
+                let mut it = out.into_iter();
+                let mu = it.next().ok_or_else(|| Error::Runtime("gmm: no means".into()))?;
+                let var = it.next().ok_or_else(|| Error::Runtime("gmm: no vars".into()))?;
+                let pi = it.next().ok_or_else(|| Error::Runtime("gmm: no weights".into()))?;
+                Ok((mu, var, pi))
+            },
+        )
     }
 
     /// Forward a batch through the MLP artifact. `x` is row-major
-    /// `rows × in_dim`; `params` are (w, b) pairs. Rows are chunked/padded
-    /// to the artifact batch.
+    /// `rows × in_dim`; `params` are (w, b) pairs. Rows are
+    /// chunked/padded to the artifact batch.
     pub fn mlp_forward(
         &mut self,
         x: &[f32],
@@ -298,34 +211,179 @@ impl Executor {
             .mlp_batch
             .clone()
             .ok_or_else(|| Error::Runtime("no mlp artifact in manifest".into()))?;
-        if x.len() != rows * in_dim {
-            return Err(Error::InvalidInput("mlp_forward: x dims".into()));
-        }
         if params.len() != 4 {
             return Err(Error::InvalidInput("mlp_forward: need 4 layers".into()));
         }
-        let mut logits = Vec::with_capacity(rows * out_dim);
-        let mut row = 0usize;
-        while row < rows {
-            let take = (rows - row).min(batch);
-            let mut xb = vec![0.0f32; batch * in_dim];
-            xb[..take * in_dim].copy_from_slice(&x[row * in_dim..(row + take) * in_dim]);
+        let cache = &self.cache;
+        backend::drive_mlp(x, rows, in_dim, out_dim, batch, |xb| {
             let inputs: Vec<&[f32]> = {
-                let mut v: Vec<&[f32]> = vec![&xb];
+                let mut v: Vec<&[f32]> = vec![xb];
                 for (w, b) in params {
                     v.push(w);
                     v.push(b);
                 }
                 v
             };
-            let out = self.registry.execute_f32(&name, &inputs)?;
-            let out0 = out
-                .into_iter()
+            let out = cache.execute_f32(&name, &inputs)?;
+            out.into_iter()
                 .next()
-                .ok_or_else(|| Error::Runtime("mlp artifact returned no output".into()))?;
-            logits.extend_from_slice(&out0[..take * out_dim]);
-            row += take;
+                .ok_or_else(|| Error::Runtime("mlp artifact returned no output".into()))
+        })
+    }
+}
+
+impl ExecutorBackend for Executor {
+    fn backend_id(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        Executor::platform(self)
+    }
+
+    fn max_lasso_m(&self) -> usize {
+        Executor::max_lasso_m(self)
+    }
+
+    fn lasso_epochs_per_call(&self) -> usize {
+        Executor::lasso_epochs_per_call(self)
+    }
+
+    fn info(&self) -> RuntimeInfo {
+        RuntimeInfo {
+            max_lasso_m: Executor::max_lasso_m(self),
+            kmeans_buckets: self.kmeans_buckets.iter().map(|&(_, m, k)| (m, k)).collect(),
+            gmm_buckets: self.gmm_buckets.iter().map(|&(_, m, k)| (m, k)).collect(),
         }
-        Ok(logits)
+    }
+
+    fn lasso_solve(
+        &mut self,
+        w: &[f32],
+        d: &[f32],
+        lambda1: f32,
+        lambda2: f32,
+        max_calls: usize,
+        tol: f32,
+    ) -> Result<RuntimeLasso> {
+        Executor::lasso_solve(self, w, d, lambda1, lambda2, max_calls, tol)
+    }
+
+    fn kmeans_lloyd(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+        min_calls: usize,
+    ) -> Result<Vec<f32>> {
+        Executor::kmeans_lloyd(self, points, weights, centroids, min_calls)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gmm_em(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        means: &[f32],
+        variances: &[f32],
+        mix: &[f32],
+        var_floor: f32,
+        calls: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        Executor::gmm_em(self, points, weights, means, variances, mix, var_floor, calls)
+    }
+
+    fn mlp_forward(
+        &mut self,
+        x: &[f32],
+        rows: usize,
+        in_dim: usize,
+        out_dim: usize,
+        params: &[(&[f32], &[f32])],
+    ) -> Result<Vec<f32>> {
+        Executor::mlp_forward(self, x, rows, in_dim, out_dim, params)
+    }
+
+    fn try_sub_handle(&self) -> Option<Box<dyn ExecutorBackend + Send>> {
+        // PJRT handles are Rc-based and thread-pinned; same-thread forks
+        // exist ([`Executor::fork`]) but cannot back scoped fan-out.
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantMethod;
+    use std::path::PathBuf;
+
+    /// A manifest the stub PJRT client can open (compile stays lazy, so
+    /// no HLO files are needed until execute).
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lasso_cd_m64", "file": "lasso_cd_m64.hlo.txt",
+         "inputs": [
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"},
+            {"shape": [2], "dtype": "float32"},
+            {"shape": [64], "dtype": "float32"}],
+         "meta": {"kind": "lasso_cd", "m": 64, "epochs_per_call": 8}},
+        {"name": "kmeans_m256_k8", "file": "kmeans_m256_k8.hlo.txt",
+         "inputs": [
+            {"shape": [256], "dtype": "float32"},
+            {"shape": [256], "dtype": "float32"},
+            {"shape": [8], "dtype": "float32"}],
+         "meta": {"kind": "kmeans", "m": 256, "k": 8, "iters_per_call": 4}}
+      ]
+    }"#;
+
+    fn manifest_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sqlsq_executor_test_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fork_shares_the_artifact_cache_and_buckets() {
+        let dir = manifest_dir("fork");
+        let mut ex = Executor::open(&dir).unwrap();
+        let mut sub = ex.fork();
+        // Same bucket tables and capabilities.
+        assert_eq!(sub.max_lasso_m(), ex.max_lasso_m());
+        assert_eq!(sub.lasso_epochs_per_call(), 8);
+        let info = ExecutorBackend::info(&ex);
+        assert!(info.fits(QuantMethod::L1, 64, 0));
+        assert!(info.fits(QuantMethod::KMeans, 200, 8));
+        assert!(!info.fits(QuantMethod::Gmm, 10, 2), "no gmm artifact in this manifest");
+        // Both handles drive the *same* registry: identical behavior at
+        // the (lazily failing) execute boundary, through either handle.
+        let w = vec![0.5f32; 8];
+        let d = vec![0.1f32; 8];
+        let e1 = ex.lasso_solve(&w, &d, 0.01, 0.0, 1, 0.0).unwrap_err().to_string();
+        let e2 = sub.lasso_solve(&w, &d, 0.01, 0.0, 1, 0.0).unwrap_err().to_string();
+        assert_eq!(e1, e2, "fork must hit the same cache/registry");
+        assert!(e1.contains("lasso_cd_m64"), "err: {e1}");
+        // PJRT forks are same-thread only: no Send sub-handles.
+        assert!(ex.try_sub_handle().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn artifact_cache_handle_is_shared_not_cloned() {
+        let dir = manifest_dir("cache_handle");
+        let cache = ArtifactCache::open(&dir).unwrap();
+        let handle = cache.handle();
+        assert_eq!(cache.platform(), handle.platform());
+        assert_eq!(cache.specs().len(), 2);
+        assert_eq!(handle.meta_usize("lasso_cd_m64", "epochs_per_call"), Some(8));
+        // Executors built over both handles agree on buckets.
+        let a = Executor::with_cache(cache).unwrap();
+        let b = Executor::with_cache(handle).unwrap();
+        assert_eq!(a.max_lasso_m(), b.max_lasso_m());
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -1,20 +1,48 @@
-//! PJRT runtime (S18): load AOT-compiled JAX/Pallas artifacts and execute
-//! them from the Rust request path.
+//! Runtime lane (S18): execute the paper's kernels from the Rust
+//! request path, behind a pluggable [`ExecutorBackend`].
 //!
-//! The flow mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
-//! *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Two backends implement the same typed surface (lasso_cd epochs,
+//! fused Lloyd steps, fused EM steps, batched MLP forward):
 //!
-//! Python runs once at `make artifacts`; after that the binary is
-//! self-contained. Because `m = |unique(w)|` is data-dependent, executables
-//! are compiled per **shape bucket** ([`buckets`]) and inputs are padded
-//! with provably-inert rows (weight 0 / diff 0 — see the kernel docs and
-//! the padding tests on both sides of the language boundary).
+//! * **[`Executor`] (pjrt)** — loads AOT-compiled JAX/Pallas artifacts
+//!   (HLO *text*; jax ≥ 0.5 emits 64-bit-id protos that xla_extension
+//!   0.5.1 rejects, so the text parser reassigns ids) and executes them
+//!   via PJRT, mirroring /opt/xla-example/load_hlo: `PjRtClient::cpu()`
+//!   → `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!   Python runs once at `make artifacts`; after that the binary is
+//!   self-contained. Compiled-artifact state (client + executable cache)
+//!   lives in a per-lane [`ArtifactCache`]; same-thread sub-executors
+//!   share it via [`Executor::fork`]. PJRT handles are `Rc`-based (not
+//!   Send), so PJRT lanes serve their batches serially and scale with
+//!   `runtime_lanes`. This build links the offline [`mod@xla`] shim —
+//!   capability probing works everywhere, artifact *execution* needs the
+//!   real `xla_extension` bindings dropped in place of that one file.
+//! * **[`ShadowBackend`] (shadow)** — a deterministic native replay of
+//!   the same kernels with the runtime's exact semantics: **f32
+//!   arithmetic end to end**, **identical shape-bucket padding** (inert
+//!   rows: weight 0 / diff 0 / sentinel components), and **identical
+//!   iterations-per-call fusion** (8 CD epochs, 4 Lloyd steps, 4 EM
+//!   steps per call). It needs no artifacts and is Send, so the
+//!   coordinator fans one drained batch across `runtime_fanout` scoped
+//!   sub-lanes via [`ExecutorBackend::try_sub_handle`]. This is how the
+//!   whole runtime serve path (batching, routing, fallback, widening,
+//!   metrics) runs under `cargo test -q` with no PJRT present — see
+//!   `tests/integration_runtime_batch.rs`.
+//!
+//! Because `m = |unique(w)|` is data-dependent, executables are compiled
+//! per **shape bucket** ([`buckets`]) and inputs are padded with
+//! provably-inert rows (see the kernel docs and the padding tests on
+//! both sides of the language boundary); the shadow backend reuses the
+//! very same padding plans, so padding bugs are caught artifact-free.
 
 pub mod artifact;
+pub mod backend;
 pub mod buckets;
 pub mod executor;
+pub mod shadow;
+pub mod xla;
 
-pub use artifact::{ArtifactSpec, Registry};
+pub use artifact::{ArtifactCache, ArtifactSpec, Registry};
+pub use backend::{open_backend, BackendKind, ExecutorBackend, RuntimeInfo, RuntimeLasso};
 pub use executor::Executor;
+pub use shadow::{CallRecord, ShadowBackend, ShadowBuckets};

@@ -1,0 +1,757 @@
+//! ShadowBackend: a deterministic, artifact-free replay of the runtime.
+//!
+//! Re-implements the three Pallas kernel families
+//! (`python/compile/kernels/{lasso_cd,kmeans,gmm,mlp}.py`) natively in
+//! f32 and drives them through the *same* shared control flow as the
+//! PJRT executor ([`super::backend`]'s `drive_*` helpers): identical
+//! shape-bucket selection, identical inert padding, identical
+//! iterations-per-call granularity and convergence tests.
+//!
+//! ## Fidelity contract
+//!
+//! * **f32 boundary** — every kernel computes in single precision, like
+//!   the artifacts; callers widen outputs back to f64 exactly where the
+//!   runtime lane does.
+//! * **Padding inertness** — inputs are padded to the same shape buckets
+//!   with the same inert rows (weight 0 / diff 0 / sentinel components),
+//!   so padding bugs reproduce under test, not just on PJRT.
+//! * **Iterations per call** — one "call" fuses `EPOCHS_PER_CALL` (8) CD
+//!   epochs / `LLOYD_ITERS_PER_CALL` (4) Lloyd steps / `EM_ITERS_PER_CALL`
+//!   (4) EM steps, mirroring `python/compile/model.py`, so convergence
+//!   and early-stop behave call-for-call like the artifact path.
+//!
+//! The shadow is *deterministic* (fixed summation order, no threads
+//! inside a kernel), so batch fan-out across sub-handles is bitwise
+//! reproducible. It is **not** bitwise-identical to XLA (different f32
+//! summation schedules); integration tests that compare against PJRT
+//! keep their tolerance-based asserts.
+//!
+//! All state is an immutable `Arc` — the shadow's analogue of the PJRT
+//! [`super::artifact::ArtifactCache`] — so [`ShadowBackend::clone`]
+//! hands out cheap `Send` sub-executors for intra-lane fan-out.
+
+use super::backend::{self, ExecutorBackend, RuntimeInfo, RuntimeLasso};
+use super::buckets;
+use crate::{Error, Result};
+use std::sync::{Arc, Mutex};
+use std::thread::ThreadId;
+
+/// Shape buckets and fusion factors mirroring `python/compile/aot.py` /
+/// `model.py`. These are the shapes the real artifact set is lowered
+/// for; the shadow accepts exactly the same requests.
+#[derive(Debug, Clone)]
+pub struct ShadowBuckets {
+    /// Lasso `m` buckets.
+    pub lasso: Vec<usize>,
+    /// (m, k) kmeans buckets.
+    pub kmeans: Vec<(usize, usize)>,
+    /// (m, k) gmm buckets.
+    pub gmm: Vec<(usize, usize)>,
+    /// MLP artifact batch rows.
+    pub mlp_batch: usize,
+    /// CD epochs fused per lasso call.
+    pub epochs_per_call: usize,
+    /// Lloyd steps fused per kmeans call.
+    pub lloyd_iters_per_call: usize,
+    /// EM steps fused per gmm call.
+    pub em_iters_per_call: usize,
+}
+
+impl Default for ShadowBuckets {
+    fn default() -> Self {
+        ShadowBuckets {
+            lasso: vec![64, 256, 1024],
+            kmeans: vec![(256, 8), (256, 32), (1024, 8), (1024, 64)],
+            gmm: vec![(256, 8), (1024, 32)],
+            mlp_batch: 64,
+            epochs_per_call: 8,
+            lloyd_iters_per_call: 4,
+            em_iters_per_call: 4,
+        }
+    }
+}
+
+/// One recorded kernel call (test/diagnostic surface): which kernel
+/// family ran, and on which OS thread — the fan-out assertions read the
+/// thread ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CallRecord {
+    /// Kernel family ("lasso_cd" | "kmeans" | "gmm" | "mlp").
+    pub kernel: &'static str,
+    /// OS thread the call executed on.
+    pub thread: ThreadId,
+}
+
+#[derive(Debug)]
+struct ShadowState {
+    buckets: ShadowBuckets,
+    /// When set, every kernel call fails with this message (failure
+    /// injection for fallback/metrics tests).
+    fail: Option<String>,
+    /// When true, every kernel call appends a [`CallRecord`].
+    capturing: bool,
+    capture: Mutex<Vec<CallRecord>>,
+}
+
+/// Deterministic native replay backend. Cloning yields a cheap handle
+/// onto the same shared state (sub-executor for fan-out).
+#[derive(Debug, Clone)]
+pub struct ShadowBackend {
+    state: Arc<ShadowState>,
+}
+
+impl Default for ShadowBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShadowBackend {
+    fn from_state(buckets: ShadowBuckets, fail: Option<String>, capturing: bool) -> Self {
+        ShadowBackend {
+            state: Arc::new(ShadowState {
+                buckets,
+                fail,
+                capturing,
+                capture: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Default-bucket shadow backend (mirrors the real artifact set).
+    pub fn new() -> Self {
+        Self::from_state(ShadowBuckets::default(), None, false)
+    }
+
+    /// Shadow backend with a custom bucket table.
+    pub fn with_buckets(buckets: ShadowBuckets) -> Self {
+        Self::from_state(buckets, None, false)
+    }
+
+    /// Shadow backend that records every kernel call (and its thread id)
+    /// for test assertions; read the log with [`ShadowBackend::calls`].
+    pub fn with_capture() -> Self {
+        Self::from_state(ShadowBuckets::default(), None, true)
+    }
+
+    /// Failure-injection backend: capability probing works, but every
+    /// kernel call errors with `msg` — exercises the Auto-policy native
+    /// fallback and the strict-policy error surface.
+    pub fn failing(msg: &str) -> Self {
+        Self::from_state(ShadowBuckets::default(), Some(msg.to_string()), false)
+    }
+
+    /// Snapshot of the recorded kernel calls (empty unless built with
+    /// [`ShadowBackend::with_capture`]).
+    pub fn calls(&self) -> Vec<CallRecord> {
+        self.state.capture.lock().unwrap().clone()
+    }
+
+    /// Number of distinct OS threads the recorded calls ran on.
+    pub fn distinct_call_threads(&self) -> usize {
+        let ids: std::collections::HashSet<ThreadId> =
+            self.calls().iter().map(|c| c.thread).collect();
+        ids.len()
+    }
+
+    fn enter(&self, kernel: &'static str) -> Result<()> {
+        if self.state.capturing {
+            self.state
+                .capture
+                .lock()
+                .unwrap()
+                .push(CallRecord { kernel, thread: std::thread::current().id() });
+        }
+        match &self.state.fail {
+            Some(msg) => Err(Error::Runtime(format!("shadow backend (injected): {msg}"))),
+            None => Ok(()),
+        }
+    }
+}
+
+impl ExecutorBackend for ShadowBackend {
+    fn backend_id(&self) -> &'static str {
+        "shadow"
+    }
+
+    fn platform(&self) -> String {
+        "shadow".to_string()
+    }
+
+    fn max_lasso_m(&self) -> usize {
+        self.state.buckets.lasso.iter().copied().max().unwrap_or(0)
+    }
+
+    fn lasso_epochs_per_call(&self) -> usize {
+        self.state.buckets.epochs_per_call
+    }
+
+    fn info(&self) -> RuntimeInfo {
+        RuntimeInfo {
+            max_lasso_m: self.max_lasso_m(),
+            kmeans_buckets: self.state.buckets.kmeans.clone(),
+            gmm_buckets: self.state.buckets.gmm.clone(),
+        }
+    }
+
+    fn lasso_solve(
+        &mut self,
+        w: &[f32],
+        d: &[f32],
+        lambda1: f32,
+        lambda2: f32,
+        max_calls: usize,
+        tol: f32,
+    ) -> Result<RuntimeLasso> {
+        // Dim validation lives in the shared driver (`drive_lasso`).
+        let m = w.len();
+        let bucket = buckets::pick(&self.state.buckets.lasso, m).ok_or_else(|| {
+            Error::Runtime(format!("no lasso bucket fits m={m} (max {})", self.max_lasso_m()))
+        })?;
+        let epochs = self.state.buckets.epochs_per_call;
+        let this = self.clone();
+        let step = |wp: &[f32], dp: &[f32], cwp: &[f32], lam: &[f32; 2], alpha: &[f32]| {
+            this.enter("lasso_cd")?;
+            let mut a = alpha.to_vec();
+            for _ in 0..epochs {
+                lasso_cd_epoch(wp, dp, cwp, lam[0], lam[1], &mut a);
+            }
+            Ok(a)
+        };
+        backend::drive_lasso(w, d, lambda1, lambda2, max_calls, tol, bucket, step)
+    }
+
+    fn kmeans_lloyd(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+        min_calls: usize,
+    ) -> Result<Vec<f32>> {
+        let m = points.len();
+        let k = centroids.len();
+        let (bm, bk) = self
+            .state
+            .buckets
+            .kmeans
+            .iter()
+            .copied()
+            .filter(|&(bm, bk)| bm >= m && bk >= k)
+            .min()
+            .ok_or_else(|| Error::Runtime(format!("no kmeans bucket fits m={m}, k={k}")))?;
+        let iters = self.state.buckets.lloyd_iters_per_call;
+        let this = self.clone();
+        backend::drive_kmeans(points, weights, centroids, min_calls, bm, bk, |pts, cw, cen| {
+            this.enter("kmeans")?;
+            let mut c = cen.to_vec();
+            for _ in 0..iters {
+                c = kmeans_step(pts, cw, &c);
+            }
+            Ok(c)
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gmm_em(
+        &mut self,
+        points: &[f32],
+        weights: &[f32],
+        means: &[f32],
+        variances: &[f32],
+        mix: &[f32],
+        var_floor: f32,
+        calls: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = points.len();
+        let k = means.len();
+        let (bm, bk) = self
+            .state
+            .buckets
+            .gmm
+            .iter()
+            .copied()
+            .filter(|&(bm, bk)| bm >= m && bk >= k)
+            .min()
+            .ok_or_else(|| Error::Runtime(format!("no gmm bucket fits m={m}, k={k}")))?;
+        let iters = self.state.buckets.em_iters_per_call;
+        let this = self.clone();
+        backend::drive_gmm(
+            points,
+            weights,
+            means,
+            variances,
+            mix,
+            var_floor,
+            calls,
+            bm,
+            bk,
+            |pts, cw, mu, var, pi, floor| {
+                this.enter("gmm")?;
+                let mut state = (mu.to_vec(), var.to_vec(), pi.to_vec());
+                for _ in 0..iters {
+                    state = gmm_em_step(pts, cw, &state.0, &state.1, &state.2, floor[0]);
+                }
+                Ok(state)
+            },
+        )
+    }
+
+    fn mlp_forward(
+        &mut self,
+        x: &[f32],
+        rows: usize,
+        in_dim: usize,
+        out_dim: usize,
+        params: &[(&[f32], &[f32])],
+    ) -> Result<Vec<f32>> {
+        if params.len() != 4 {
+            return Err(Error::InvalidInput("mlp_forward: need 4 layers".into()));
+        }
+        // Validate the layer chain like the manifest shapes would.
+        let mut dim = in_dim;
+        for (i, (w, b)) in params.iter().enumerate() {
+            let out = b.len();
+            if w.len() != dim * out {
+                return Err(Error::InvalidInput(format!(
+                    "mlp_forward: layer {i} weight is {} elements, expected {dim}×{out}",
+                    w.len()
+                )));
+            }
+            dim = out;
+        }
+        if dim != out_dim {
+            return Err(Error::InvalidInput("mlp_forward: out_dim mismatch".into()));
+        }
+        let batch = self.state.buckets.mlp_batch;
+        let this = self.clone();
+        backend::drive_mlp(x, rows, in_dim, out_dim, batch, |xb| {
+            this.enter("mlp")?;
+            let mut h = xb.to_vec();
+            let mut din = in_dim;
+            for (i, (w, b)) in params.iter().enumerate() {
+                h = dense(&h, batch, din, w, b, i + 1 < params.len());
+                din = b.len();
+            }
+            Ok(h)
+        })
+    }
+
+    fn try_sub_handle(&self) -> Option<Box<dyn ExecutorBackend + Send>> {
+        Some(Box::new(self.clone()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 kernel replays (direct translations of the Pallas kernel bodies).
+// ---------------------------------------------------------------------------
+
+fn sign(x: f32) -> f32 {
+    // jnp.sign semantics: sign(0) = 0 (f32::signum(0) would be ±1).
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// One weighted Gauss-Seidel CD epoch in the O(m) suffix-scalar form
+/// (descending pass), mirroring `kernels/lasso_cd.py::_epoch_body`.
+/// Padded rows have `cw = 0` (never enter a suffix sum); padded
+/// coordinates have `d = 0` (the `c_j > 0` guard skips them).
+fn lasso_cd_epoch(w: &[f32], d: &[f32], cw: &[f32], lam1: f32, lam2: f32, alpha: &mut [f32]) {
+    let m = w.len();
+    // Residual at epoch start: r = w − cumsum(d ⊙ α).
+    let mut r = vec![0.0f32; m];
+    let mut rec = 0.0f32;
+    for i in 0..m {
+        rec += d[i] * alpha[i];
+        r[i] = w[i] - rec;
+    }
+    // Suffix weight sums W_j = Σ_{i≥j} cw_i (column norms).
+    let mut wsuf = vec![0.0f32; m];
+    let mut acc = 0.0f32;
+    for j in (0..m).rev() {
+        acc += cw[j];
+        wsuf[j] = acc;
+    }
+    // Descending pass with the lazy suffix scalar s = Σ_{i≥j} cw_i r_i.
+    let mut s = 0.0f32;
+    for jj in 0..m {
+        let j = m - 1 - jj;
+        s += cw[j] * r[j];
+        let dj = d[j];
+        let cj = dj * dj * wsuf[j];
+        // Unstable negative-l2 denominator falls back to the plain-l1
+        // rule per coordinate. Deliberately the kernel's exact `> 0`
+        // test (`jnp.where(denom > 0, denom, cj)` in lasso_cd.py), NOT
+        // the native solver's relative-epsilon guard — the shadow's
+        // fidelity target is the artifact, epsilon-regime included.
+        let mut denom = cj - 2.0 * lam2;
+        if denom <= 0.0 {
+            denom = cj;
+        }
+        let rho = dj * s + cj * alpha[j];
+        let shrunk = sign(rho) * (rho.abs() - lam1).max(0.0);
+        let mut new = shrunk / if denom > 0.0 { denom } else { 1.0 };
+        // Guard: skip null columns (padding / d_j = 0).
+        if cj <= 0.0 {
+            new = alpha[j];
+        }
+        let delta = new - alpha[j];
+        // Update the suffix scalar for the residual change on rows i ≥ j.
+        s -= dj * delta * wsuf[j];
+        alpha[j] = new;
+    }
+}
+
+/// One full Lloyd step (assign + weighted accumulate + empty-cluster
+/// hold + sort), mirroring `kernels/kmeans.py::kmeans_step`. Weight-0
+/// (padding) points fall out of every accumulator.
+fn kmeans_step(pts: &[f32], cw: &[f32], cen: &[f32]) -> Vec<f32> {
+    let k = cen.len();
+    let mut sums = vec![0.0f32; k];
+    let mut wsums = vec![0.0f32; k];
+    for (i, &x) in pts.iter().enumerate() {
+        // argmin with first-wins ties (jnp.argmin semantics).
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (c, &mu) in cen.iter().enumerate() {
+            let d = (x - mu) * (x - mu);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        sums[best] += cw[i] * x;
+        wsums[best] += cw[i];
+    }
+    let mut new: Vec<f32> = (0..k)
+        .map(|c| if wsums[c] > 0.0 { sums[c] / wsums[c] } else { cen[c] })
+        .collect();
+    new.sort_by(f32::total_cmp);
+    new
+}
+
+const LOG2PI: f32 = 1.837_877_1;
+
+/// One full EM step (log-space E-step + sufficient statistics + M-step
+/// finalization + sort-by-mean), mirroring `kernels/gmm.py`. Weight-0
+/// points and ≈0-mass components (padding) keep their parameters.
+fn gmm_em_step(
+    pts: &[f32],
+    cw: &[f32],
+    mu: &[f32],
+    var: &[f32],
+    pi: &[f32],
+    var_floor: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let k = mu.len();
+    let mut n = vec![0.0f32; k];
+    let mut sx = vec![0.0f32; k];
+    let mut sxx = vec![0.0f32; k];
+    let log_pi: Vec<f32> = pi.iter().map(|&p| p.max(1e-30).ln()).collect();
+    let log_var: Vec<f32> = var.iter().map(|&v| v.ln()).collect();
+    let mut logp = vec![0.0f32; k];
+    for (i, &x) in pts.iter().enumerate() {
+        if cw[i] == 0.0 {
+            continue; // responsibilities scale by cw — exactly 0 mass
+        }
+        let mut maxlp = f32::NEG_INFINITY;
+        for c in 0..k {
+            let d = x - mu[c];
+            let lp = -0.5 * (d * d / var[c] + log_var[c] + LOG2PI) + log_pi[c];
+            logp[c] = lp;
+            maxlp = maxlp.max(lp);
+        }
+        // logsumexp over components.
+        let mut sum = 0.0f32;
+        for c in 0..k {
+            sum += (logp[c] - maxlp).exp();
+        }
+        let lse = maxlp + sum.ln();
+        for c in 0..k {
+            let r = (logp[c] - lse).exp() * cw[i];
+            n[c] += r;
+            sx[c] += r * x;
+            sxx[c] += r * x * x;
+        }
+    }
+    // M-step finalization: underflowed components keep their parameters.
+    let total: f32 = n.iter().sum();
+    let mut new_mu = vec![0.0f32; k];
+    let mut new_var = vec![0.0f32; k];
+    let mut new_pi = vec![0.0f32; k];
+    for c in 0..k {
+        let ok = n[c] > 1e-12 * total.max(1e-30);
+        if ok {
+            new_mu[c] = sx[c] / n[c];
+            new_var[c] = (sxx[c] / n[c] - new_mu[c] * new_mu[c]).max(var_floor);
+            new_pi[c] = n[c] / total.max(1e-30);
+        } else {
+            new_mu[c] = mu[c];
+            new_var[c] = var[c];
+            new_pi[c] = pi[c];
+        }
+    }
+    let pi_sum: f32 = new_pi.iter().sum();
+    if pi_sum > 0.0 {
+        for p in &mut new_pi {
+            *p /= pi_sum;
+        }
+    }
+    // Keep means sorted with variances/weights permuted alongside
+    // (stable argsort, like jnp.argsort).
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| new_mu[a].total_cmp(&new_mu[b]));
+    (
+        order.iter().map(|&c| new_mu[c]).collect(),
+        order.iter().map(|&c| new_var[c]).collect(),
+        order.iter().map(|&c| new_pi[c]).collect(),
+    )
+}
+
+/// Fused dense layer `relu(x @ w + b)` over a row-major batch,
+/// mirroring `kernels/mlp.py::dense_ref`.
+fn dense(x: &[f32], rows: usize, in_dim: usize, w: &[f32], b: &[f32], relu: bool) -> Vec<f32> {
+    let out_dim = b.len();
+    let mut z = vec![0.0f32; rows * out_dim];
+    for r in 0..rows {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let zr = &mut z[r * out_dim..(r + 1) * out_dim];
+        zr.copy_from_slice(b);
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue; // zero-padded rows stay b, then relu — cheap skip
+            }
+            let wrow = &w[i * out_dim..(i + 1) * out_dim];
+            for (o, &wv) in wrow.iter().enumerate() {
+                zr[o] += xi * wv;
+            }
+        }
+        if relu {
+            for v in zr {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::quant::{self, unique::UniqueDecomp, vmatrix::VBasis};
+
+    fn sample(seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.uniform(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn reports_default_buckets() {
+        let ex = ShadowBackend::new();
+        assert_eq!(ex.max_lasso_m(), 1024);
+        assert_eq!(ex.lasso_epochs_per_call(), 8);
+        assert_eq!(ex.platform(), "shadow");
+        assert_eq!(ex.backend_id(), "shadow");
+        let info = ex.info();
+        assert!(info.fits(crate::quant::QuantMethod::KMeans, 1000, 64));
+        assert!(!info.fits(crate::quant::QuantMethod::KMeans, 2000, 8));
+    }
+
+    #[test]
+    fn lasso_matches_native_structured_solver_per_epoch() {
+        // Same contract the PJRT artifact is tested against
+        // (integration_runtime.rs): one call = epochs_per_call native
+        // epochs, α within f32 tolerance of the f64 solver.
+        let data = sample(11, 60);
+        let u = UniqueDecomp::new(&data).unwrap();
+        let basis = VBasis::new(&u.values);
+        let w32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
+        let d32: Vec<f32> = basis.diffs().iter().map(|&x| x as f32).collect();
+
+        let mut ex = ShadowBackend::new();
+        let epc = ex.lasso_epochs_per_call();
+        let rt = ex.lasso_solve(&w32, &d32, 0.05, 0.0, 1, 0.0).unwrap();
+        assert_eq!(rt.calls, 1);
+
+        let cfg = quant::lasso::LassoConfig {
+            lambda1: 0.05,
+            max_epochs: epc,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let native = quant::lasso::solve(&basis, &u.values, &cfg, None).unwrap();
+        assert_eq!(native.epochs, epc);
+        for (i, (a32, a64)) in rt.alpha.iter().zip(&native.alpha).enumerate() {
+            assert!(
+                (*a32 as f64 - a64).abs() < 5e-3,
+                "α[{i}]: shadow {a32} vs native {a64}"
+            );
+        }
+    }
+
+    #[test]
+    fn lasso_padding_is_inert() {
+        // The same data solved through two different buckets (256 via the
+        // picker, 1024 via a custom table) must agree bitwise: pads are
+        // provably inert.
+        let data = sample(3, 80); // 80 distinct uniform draws ⇒ m = 80
+        let u = UniqueDecomp::new(&data).unwrap();
+        assert!(u.m() <= 256);
+        let basis = VBasis::new(&u.values);
+        let w32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
+        let d32: Vec<f32> = basis.diffs().iter().map(|&x| x as f32).collect();
+        let mut small = ShadowBackend::new(); // picks the smallest fitting bucket
+        let mut big = ShadowBackend::with_buckets(ShadowBuckets {
+            lasso: vec![1024],
+            ..ShadowBuckets::default()
+        });
+        let a = small.lasso_solve(&w32, &d32, 0.02, 0.0, 10, 1e-6).unwrap();
+        let b = big.lasso_solve(&w32, &d32, 0.02, 0.0, 10, 1e-6).unwrap();
+        assert_eq!(a.calls, b.calls);
+        for (x, y) in a.alpha.iter().zip(&b.alpha) {
+            assert_eq!(x.to_bits(), y.to_bits(), "padding changed a coefficient");
+        }
+    }
+
+    #[test]
+    fn kmeans_finds_tight_groups() {
+        let mut data = Vec::new();
+        let mut rng = Pcg32::seeded(5);
+        for c in [0.1f64, 0.5, 0.9] {
+            for _ in 0..40 {
+                data.push(c + rng.uniform(-0.01, 0.01));
+            }
+        }
+        let pts: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+        let cw = vec![1.0f32; pts.len()];
+        let cen0 = vec![0.2f32, 0.6, 0.8];
+        let mut ex = ShadowBackend::new();
+        let cen = ex.kmeans_lloyd(&pts, &cw, &cen0, 10).unwrap();
+        assert_eq!(cen.len(), 3);
+        assert!((cen[0] - 0.1).abs() < 0.02, "{cen:?}");
+        assert!((cen[1] - 0.5).abs() < 0.02, "{cen:?}");
+        assert!((cen[2] - 0.9).abs() < 0.02, "{cen:?}");
+    }
+
+    #[test]
+    fn gmm_finds_separated_modes() {
+        let mut rng = Pcg32::seeded(6);
+        let mut pts = Vec::new();
+        for c in [10.0f32, 90.0] {
+            for _ in 0..128 {
+                pts.push(c + rng.normal_with(0.0, 1.0) as f32);
+            }
+        }
+        let cw = vec![1.0f32; pts.len()];
+        let mu0 = vec![30.0f32, 60.0];
+        let var0 = vec![200.0f32, 200.0];
+        let pi0 = vec![0.5f32, 0.5];
+        let mut ex = ShadowBackend::new();
+        let (mu, var, pi) = ex.gmm_em(&pts, &cw, &mu0, &var0, &pi0, 1e-4, 10).unwrap();
+        assert!((mu[0] - 10.0).abs() < 1.0, "mu={mu:?}");
+        assert!((mu[1] - 90.0).abs() < 1.0, "mu={mu:?}");
+        assert!(var[0] < 5.0 && var[1] < 5.0, "var={var:?}");
+        assert!((pi[0] - 0.5).abs() < 0.05, "pi={pi:?}");
+        assert!((pi.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mlp_forward_matches_native_infer() {
+        let mlp = crate::nn::mlp::Mlp::paper_arch(3);
+        let mut rows = Vec::new();
+        for d in 0..4 {
+            rows.push(crate::data::synth_digits::canonical_digit(d).pixels);
+        }
+        let rows_n = rows.len();
+        let x32: Vec<f32> = rows.iter().flatten().map(|&v| v as f32).collect();
+        let params32: Vec<(Vec<f32>, Vec<f32>)> = mlp
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    l.w.data().iter().map(|&v| v as f32).collect(),
+                    l.b.iter().map(|&v| v as f32).collect(),
+                )
+            })
+            .collect();
+        let params_ref: Vec<(&[f32], &[f32])> =
+            params32.iter().map(|(w, b)| (w.as_slice(), b.as_slice())).collect();
+        let mut ex = ShadowBackend::new();
+        let logits = ex.mlp_forward(&x32, rows_n, 784, 10, &params_ref).unwrap();
+        assert_eq!(logits.len(), rows_n * 10);
+
+        let mut xm = crate::linalg::matrix::Matrix::zeros(rows_n, 784);
+        for (i, r) in rows.iter().enumerate() {
+            xm.row_mut(i).copy_from_slice(r);
+        }
+        let native = mlp.infer(&xm).unwrap();
+        for i in 0..rows_n {
+            for j in 0..10 {
+                let a = logits[i * 10 + j] as f64;
+                let b = native[(i, j)];
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "logit[{i},{j}]: shadow {a} vs native {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn failure_injection_errors_every_kernel() {
+        let mut ex = ShadowBackend::failing("boom");
+        let w = vec![0.1f32, 0.4];
+        let d = vec![0.1f32, 0.3];
+        let err = ex.lasso_solve(&w, &d, 0.01, 0.0, 2, 1e-6).unwrap_err();
+        assert!(err.to_string().contains("boom"), "err: {err}");
+        assert!(ex.kmeans_lloyd(&w, &d, &w, 1).is_err());
+        // Capability probing still works — Auto routes jobs here, and
+        // the per-call failure triggers the fallback.
+        assert!(ex.max_lasso_m() > 0);
+    }
+
+    #[test]
+    fn capture_records_calls_and_threads() {
+        let probe = ShadowBackend::with_capture();
+        let mut ex = probe.clone(); // sub-handle shares the log
+        let w = vec![0.1f32, 0.4, 0.9];
+        let d = vec![0.1f32, 0.3, 0.5];
+        ex.lasso_solve(&w, &d, 0.01, 0.0, 2, 0.0).unwrap();
+        let calls = probe.calls();
+        assert!(!calls.is_empty());
+        assert!(calls.iter().all(|c| c.kernel == "lasso_cd"));
+        assert_eq!(probe.distinct_call_threads(), 1);
+    }
+
+    #[test]
+    fn empty_or_mismatched_inputs_error_instead_of_degenerate_sentinels() {
+        // Empty points would give a -inf sentinel (pads sorting first);
+        // the shared drivers must reject them for every backend.
+        let mut ex = ShadowBackend::new();
+        assert!(ex.kmeans_lloyd(&[], &[], &[0.5], 1).is_err());
+        assert!(ex.gmm_em(&[], &[], &[0.5], &[1.0], &[1.0], 1e-6, 1).is_err());
+        let pts = [0.1f32, 0.9];
+        assert!(ex.kmeans_lloyd(&pts, &[1.0], &[0.5], 1).is_err(), "weights mismatch");
+        assert!(ex.lasso_solve(&[], &[], 0.01, 0.0, 1, 1e-6).is_err());
+    }
+
+    #[test]
+    fn oversize_requests_fail_with_bucket_errors() {
+        let mut ex = ShadowBackend::new();
+        let w = vec![0.5f32; 2000];
+        let d = vec![0.1f32; 2000];
+        let err = ex.lasso_solve(&w, &d, 0.01, 0.0, 2, 1e-6).unwrap_err();
+        assert!(err.to_string().contains("no lasso bucket"), "err: {err}");
+        let pts = vec![0.5f32; 100];
+        let cw = vec![1.0f32; 100];
+        let cen = vec![0.5f32; 80]; // k too large for every bucket
+        assert!(ex.kmeans_lloyd(&pts, &cw, &cen, 1).is_err());
+    }
+}
