@@ -1,0 +1,100 @@
+//! Quickstart for the unified request/response API — the front door for
+//! new code, and the migration target for every legacy `quantize_*` call.
+//!
+//! ```bash
+//! cargo run --release --example request_api
+//! ```
+//!
+//! Responses are **codebook-first**: you get a few shared levels plus one
+//! small index per element (the compact payload a serving edge ships),
+//! and the full-length vector only materializes if you ask for it.
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::linalg::matrix::Matrix;
+use sqlsq::quant::tensor::Grouping;
+use sqlsq::quant::{QuantMethod, QuantRequest, Quantizer};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut rng = Pcg32::seeded(42);
+    let mut data = Vec::new();
+    for center in [0.1f64, 0.35, 0.6, 0.9] {
+        for _ in 0..60 {
+            data.push(center + rng.normal_with(0.0, 0.015));
+        }
+    }
+    let quantizer = Quantizer::new();
+
+    // 1. One-shot, codebook-first (the default output form). The owned
+    //    vector moves into the request — no copy.
+    let req = QuantRequest::vector(data.clone())
+        .method(QuantMethod::ClusterLs)
+        .target_count(4);
+    let item = quantizer.run(&req)?.into_single()?;
+    let cb = item.codebook_f64();
+    println!(
+        "one-shot   : {} values -> {} levels, {} bits/index, {:.1}x vs dense f32, loss {:.3e}",
+        cb.indices.len(),
+        cb.k(),
+        cb.bits_per_index(),
+        cb.compression_ratio_f32(),
+        item.l2_loss()
+    );
+    // Full vectors are lazy — only built when you need one.
+    let full = item.materialize_f64();
+    assert_eq!(full.len(), data.len());
+
+    // 2. A λ sweep: one prepared input, warm starts along the grid.
+    let lambdas: Vec<f64> = (0..5).map(|i| 1e-4 * 10f64.powi(i)).collect();
+    let sweep = QuantRequest::vector(data.clone())
+        .method(QuantMethod::L1LeastSquare)
+        .sweep(lambdas.clone());
+    let resp = quantizer.run(&sweep)?;
+    for (r, lambda) in resp.items.iter().zip(&lambdas) {
+        let it = r.as_ref().expect("sweep items all succeed");
+        println!(
+            "sweep      : λ={lambda:>8.1e} -> {:>3} levels, loss {:.3e}",
+            it.distinct_values(),
+            it.l2_loss()
+        );
+    }
+
+    // 3. A batch on the f32 fast lane — results stay single-precision
+    //    (no early widening), failures would be isolated per slot.
+    let batch: Vec<Vec<f32>> = (0..4)
+        .map(|s| {
+            let mut r = Pcg32::seeded(100 + s);
+            (0..256).map(|_| r.uniform(0.0, 1.0) as f32).collect()
+        })
+        .collect();
+    let breq = QuantRequest::batch_f32(batch).method(QuantMethod::KMeans).target_count(8);
+    let bresp = quantizer.run(&breq)?;
+    let ok = bresp.items.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "batch f32  : {}/{} slots ok, total loss {:.3e}",
+        ok,
+        bresp.len(),
+        bresp.total_l2_loss()
+    );
+
+    // 4. Matrix grouping: per-row codebooks (NN layer style), fanned
+    //    across the batch executor.
+    let m = Matrix::from_fn(8, 64, |_, _| rng.normal_with(0.0, 1.0));
+    let mreq = QuantRequest::matrix(m, Grouping::PerRow)
+        .method(QuantMethod::KMeansExact)
+        .target_count(4);
+    let mresp = quantizer.run(&mreq)?;
+    println!(
+        "matrix     : {} per-row codebooks, prepare+solve {:?}",
+        mresp.len(),
+        mresp.timings().prepare + mresp.timings().solve
+    );
+
+    // Migration cheat sheet (old -> new):
+    //   quantize(&w, m, &o)              -> QuantRequest::vector(w).method(m).options(o)
+    //   quantize_f32(&w, m, &o)          -> QuantRequest::vector_f32(w)...
+    //   quantize_batch(&ws, m, &o)       -> QuantRequest::batch(ws)...
+    //   quantize_sweep(&prep, m, λs, &o) -> QuantRequest::vector(w)...sweep(λs)
+    //   quantize_matrix(&mat, m, &o, g)  -> QuantRequest::matrix(mat, g)...
+    //   coord.submit(w, m, o)            -> coord.submit_request(QuantRequest::vector(w)...)
+    Ok(())
+}

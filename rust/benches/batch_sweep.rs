@@ -134,7 +134,7 @@ fn main() {
             let (tx, rx) = std::sync::mpsc::channel();
             jobs.push(Job {
                 id: i as u64 + 1,
-                data: Payload::F64(data.clone()),
+                data: Payload::F64(data.clone().into()),
                 method: *method,
                 opts: rt_opts.clone(),
                 submitted: std::time::Instant::now(),

@@ -14,6 +14,7 @@
 use crate::config::{Config, Engine};
 use crate::coordinator::Coordinator;
 use crate::eval::{figures, workloads};
+use crate::jsonio::Json;
 use crate::quant::{self, QuantMethod, QuantOptions};
 use crate::runtime::BackendKind;
 use crate::{Error, Result};
@@ -81,10 +82,10 @@ sqlsq — Scalar Quantization as Sparse Least Square Optimization (full-system r
 USAGE:
   sqlsq quantize  --method <id> [--values K] [--lambda1 X] [--lambda2 Y]
                   [--input FILE | --demo] [--clamp lo,hi] [--seed N]
-                  [--precision f32|f64]
+                  [--precision f32|f64] [--output codebook|values|FILE]
   sqlsq sweep     --method <id> [--steps N] [--lambda-min X] [--lambda-max Y]
                   [--values K] [--cold] [--input FILE | --demo]
-                  [--precision f32|f64]
+                  [--precision f32|f64] [--output codebook|values]
   sqlsq train     [--cache PATH]
   sqlsq eval      <fig1|...|fig8|crossover|ablations|bitwidth|oor|all>
                   [--report-dir DIR]
@@ -100,6 +101,13 @@ METHODS: l1, l1_ls, l1_l2, l0, iter_l1, cluster_ls, kmeans, kmeans_exact,
 
 PRECISION: --precision f32 runs the native single-precision lane (native
          f32 kernels for the CD family; other methods widen internally).
+
+OUTPUT: --output codebook emits the compact wire format as JSON (a few
+         shared levels + one small index per element — what a serving
+         edge should ship); --output values emits the full-length
+         vector(s). On quantize, any other value is treated as a file
+         path and written in the historical values format (the default
+         prints only the summary, exactly as before).
 
 BACKENDS: --runtime-backend pjrt executes AOT artifacts (make artifacts);
          shadow replays the kernels natively with runtime semantics — no
@@ -170,6 +178,24 @@ fn load_input(args: &Args) -> Result<Vec<f64>> {
     }
 }
 
+/// The compact wire format: `{"indices":[..],"levels":[..]}` plus any
+/// extra fields (e.g. the sweep's λ).
+fn codebook_json(cb: &quant::Codebook, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = extra;
+    fields.push(("levels", Json::Arr(cb.levels.iter().map(|&v| Json::Num(v)).collect())));
+    fields.push((
+        "indices",
+        Json::Arr(cb.indices.iter().map(|&i| Json::Num(i as f64)).collect()),
+    ));
+    Json::obj(fields)
+}
+
+fn values_json(values: &[f64], extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = extra;
+    fields.push(("values", Json::Arr(values.iter().map(|&v| Json::Num(v)).collect())));
+    Json::obj(fields)
+}
+
 fn cmd_quantize(args: &Args) -> Result<()> {
     let method_id = args.flag("method").unwrap_or("l1_ls");
     let method = QuantMethod::from_id(method_id)
@@ -196,29 +222,50 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         precision: parse_precision(args)?,
         ..Default::default()
     };
+    let n = data.len();
+    let distinct_in = crate::linalg::stats::distinct_count_exact(&data);
+    let precision = opts.precision;
+    // One front door: a single-vector request through the Quantizer. The
+    // owned input moves into the request — no slice copy — and the
+    // response is codebook-first (full values only materialize below if
+    // the output mode needs them).
     let t0 = std::time::Instant::now();
-    let out = quant::quantize(&data, method, &opts)?;
+    let req = quant::QuantRequest::vector(data).method(method).options(opts);
+    let item = quant::Quantizer::new().run(&req)?.into_single()?;
     let dt = t0.elapsed();
     println!("method            : {}", method.id());
-    println!("precision         : {}", opts.precision.id());
-    println!("input length      : {}", data.len());
-    println!("distinct in       : {}", crate::linalg::stats::distinct_count_exact(&data));
-    println!("distinct out      : {}", out.distinct_values());
-    println!("l2 loss           : {:.6e}", out.l2_loss);
-    println!("clamped values    : {}", out.clamped);
-    println!("iterations        : {}", out.diag.iterations);
-    println!("nnz / lambda1     : {} / {:.3e}", out.diag.nnz, out.diag.lambda1);
+    println!("precision         : {}", precision.id());
+    println!("input length      : {n}");
+    println!("distinct in       : {distinct_in}");
+    println!("distinct out      : {}", item.distinct_values());
+    println!("l2 loss           : {:.6e}", item.l2_loss());
+    println!("clamped values    : {}", item.clamped());
+    println!("iterations        : {}", item.diag().iterations);
+    println!("nnz / lambda1     : {} / {:.3e}", item.diag().nnz, item.diag().lambda1);
     println!("time              : {:?}", dt);
-    if let Some(path) = args.flag("output") {
-        let text: String = out.values.iter().map(|v| format!("{v}\n")).collect();
-        std::fs::write(path, text)?;
-        println!("wrote             : {path}");
+    match args.flag("output") {
+        Some("codebook") => {
+            println!("{}", codebook_json(&item.codebook_f64(), Vec::new()).to_string());
+        }
+        Some("values") => {
+            println!("{}", values_json(&item.materialize_f64(), Vec::new()).to_string());
+        }
+        Some(path) => {
+            // Historical behavior: any other value is a file path for the
+            // full-vector text format.
+            let text: String =
+                item.materialize_f64().iter().map(|v| format!("{v}\n")).collect();
+            std::fs::write(path, text)?;
+            println!("wrote             : {path}");
+        }
+        None => {}
     }
     Ok(())
 }
 
-/// λ sweep through the staged pipeline: prepare once, solve per grid
-/// point with warm starts (pass `--cold` for independent cold solves).
+/// λ sweep through the request front door: one [`quant::QuantRequest`]
+/// with a sweep plan — the prepare stage runs once and warm starts ride
+/// the grid (pass `--cold` for independent cold solves).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let method_id = args.flag("method").unwrap_or("l1_ls");
     let method = QuantMethod::from_id(method_id)
@@ -228,37 +275,43 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let lo = args.flag_f64("lambda-min", 1e-4)?;
     let hi = args.flag_f64("lambda-max", 1e-1)?;
     let warm = args.flag("cold").is_none();
+    let output = match args.flag("output") {
+        None => None,
+        Some(v @ ("codebook" | "values")) => Some(v),
+        Some(other) => {
+            return Err(Error::Config(format!(
+                "--output wants codebook|values, got '{other}'"
+            )))
+        }
+    };
     let precision = parse_precision(args)?;
     let lambdas = workloads::lambda_grid(lo, hi, steps)?;
     let opts = QuantOptions {
         lambda2: args.flag_f64("lambda2", 0.0)?,
         target_values: args.flag_usize("values", 16)?,
         seed: args.flag_usize("seed", 0)? as u64,
+        precision,
         ..Default::default()
     };
 
-    // Lane split: the staged entry points pick the lane by the prepared
-    // input's own element type; f32 outputs are widened only for printing.
-    let (n, m, outs, t_prepare, t_solve) = match precision {
+    let n = data.len();
+    // Report the problem size the solver actually sees: on the f32 lane,
+    // distinct f64 values can collapse after narrowing. Display-only, and
+    // costs one extra sort of the CLI input (the run's own prepared input
+    // is not exposed through the response).
+    let m = match precision {
         quant::Precision::F64 => {
-            let t0 = std::time::Instant::now();
-            let prep = quant::PreparedInput::new(&data)?;
-            let t_prepare = t0.elapsed();
-            let t1 = std::time::Instant::now();
-            let outs = quant::quantize_sweep_with(&prep, method, &lambdas, &opts, warm)?;
-            (prep.len(), prep.m(), outs, t_prepare, t1.elapsed())
+            quant::unique::UniqueDecomp::new(&data).map(|u| u.m()).unwrap_or(0)
         }
         quant::Precision::F32 => {
-            let t0 = std::time::Instant::now();
             let narrow: Vec<f32> = data.iter().map(|&x| x as f32).collect();
-            let prep = quant::PreparedInputF32::from_vec(narrow)?;
-            let t_prepare = t0.elapsed();
-            let t1 = std::time::Instant::now();
-            let outs32 = quant::quantize_sweep_f32_with(&prep, method, &lambdas, &opts, warm)?;
-            let outs = outs32.iter().map(|o| o.widen()).collect();
-            (prep.len(), prep.m(), outs, t_prepare, t1.elapsed())
+            quant::unique::UniqueDecomp::new(&narrow).map(|u| u.m()).unwrap_or(0)
         }
     };
+    let req = quant::QuantRequest::vector(data).method(method).options(opts);
+    let req = if warm { req.sweep(lambdas.clone()) } else { req.sweep_cold(lambdas.clone()) };
+    let items: Vec<quant::Item> =
+        quant::Quantizer::new().run(&req)?.items.into_iter().collect::<Result<_>>()?;
 
     println!(
         "method {} over {} λ points ({} start mode, {}), n={n} m={m}",
@@ -268,16 +321,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         precision.id(),
     );
     println!("{:>12} {:>9} {:>14} {:>11}", "lambda1", "distinct", "l2_loss", "iterations");
-    for (out, &lambda) in outs.iter().zip(&lambdas) {
+    for (item, &lambda) in items.iter().zip(&lambdas) {
         println!(
             "{lambda:>12.4e} {:>9} {:>14.6e} {:>11}",
-            out.distinct_values(),
-            out.l2_loss,
-            out.diag.iterations
+            item.distinct_values(),
+            item.l2_loss(),
+            item.diag().iterations
         );
     }
+    let t_prepare = items.first().map(|i| i.timings().prepare).unwrap_or_default();
+    let t_solve: std::time::Duration = items.iter().map(|i| i.timings().solve).sum();
     println!("prepare time      : {t_prepare:?} (once, amortized over the grid)");
-    println!("solve time        : {t_solve:?} ({} solves)", outs.len());
+    println!("solve time        : {t_solve:?} ({} solves)", items.len());
+    if let Some(form) = output {
+        // Machine-readable wire format, one JSON object per λ.
+        for (item, &lambda) in items.iter().zip(&lambdas) {
+            let extra = vec![("lambda", Json::Num(lambda))];
+            let json = match form {
+                "codebook" => codebook_json(&item.codebook_f64(), extra),
+                _ => values_json(&item.materialize_f64(), extra),
+            };
+            println!("{}", json.to_string());
+        }
+    }
     Ok(())
 }
 
@@ -513,6 +579,30 @@ mod tests {
             "serve", "--jobs", "8", "--engine", "native", "--workers", "2", "--precision", "f32",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn quantize_compact_output_forms_run() {
+        dispatch(&s(&[
+            "quantize", "--method", "kmeans", "--values", "4", "--output", "codebook",
+        ]))
+        .unwrap();
+        dispatch(&s(&[
+            "quantize", "--method", "kmeans", "--values", "4", "--output", "values",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_compact_output_forms_run() {
+        dispatch(&s(&["sweep", "--method", "l1_ls", "--steps", "3", "--output", "codebook"]))
+            .unwrap();
+        dispatch(&s(&["sweep", "--method", "l1", "--steps", "3", "--output", "values"]))
+            .unwrap();
+        assert!(dispatch(&s(&[
+            "sweep", "--method", "l1", "--steps", "3", "--output", "bogus",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! Job types flowing through the coordinator.
 
-use crate::quant::{Precision, QuantMethod, QuantOptions, QuantOutput};
+use crate::quant::{Codebook, Precision, QuantMethod, QuantOptions, QuantOutput};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Monotonically increasing job identifier.
 pub type JobId = u64;
 
-/// A quantization payload in its submitted precision.
+/// A quantization payload in its submitted precision, behind shared
+/// storage: submitting an owned `Vec` moves the buffer once into the
+/// `Arc`, and an already-shared request input ([`crate::quant::api`])
+/// enters the serve path with **zero** copies — the prepare stage reads
+/// the same allocation the client holds.
 ///
 /// f32 payloads are served by the native f32 lane end to end — no up-front
 /// widening at admission or dispatch; only the final per-level output is
@@ -16,9 +21,9 @@ pub type JobId = u64;
 #[derive(Debug, Clone)]
 pub enum Payload {
     /// Double-precision data (the historical submit path).
-    F64(Vec<f64>),
+    F64(Arc<[f64]>),
     /// Single-precision data (NN-weight fast path).
-    F32(Vec<f32>),
+    F32(Arc<[f32]>),
 }
 
 impl Payload {
@@ -46,7 +51,7 @@ impl Payload {
     /// Widen to f64 (the runtime-lane boundary; a copy for f64 payloads).
     pub fn to_f64_vec(&self) -> Vec<f64> {
         match self {
-            Payload::F64(v) => v.clone(),
+            Payload::F64(v) => v.to_vec(),
             Payload::F32(v) => v.iter().map(|&x| f64::from(x)).collect(),
         }
     }
@@ -54,18 +59,30 @@ impl Payload {
 
 impl Default for Payload {
     fn default() -> Self {
-        Payload::F64(Vec::new())
+        Payload::F64(Vec::new().into())
     }
 }
 
 impl From<Vec<f64>> for Payload {
     fn from(v: Vec<f64>) -> Self {
-        Payload::F64(v)
+        Payload::F64(v.into())
     }
 }
 
 impl From<Vec<f32>> for Payload {
     fn from(v: Vec<f32>) -> Self {
+        Payload::F32(v.into())
+    }
+}
+
+impl From<Arc<[f64]>> for Payload {
+    fn from(v: Arc<[f64]>) -> Self {
+        Payload::F64(v)
+    }
+}
+
+impl From<Arc<[f32]>> for Payload {
+    fn from(v: Arc<[f32]>) -> Self {
         Payload::F32(v)
     }
 }
@@ -124,6 +141,21 @@ impl JobResult {
     pub fn is_ok(&self) -> bool {
         self.outcome.is_ok()
     }
+
+    /// Compact view of a successful outcome: the codebook (levels + `u32`
+    /// indices) — the wire format a serving edge ships instead of the
+    /// full-length vector. `None` when the job failed.
+    ///
+    /// Derived from the full values at the response edge — a fresh
+    /// O(n log n) sort per call, not cached — because the job result
+    /// still carries the full vector (the runtime/PJRT lane's boundary is
+    /// full-length f64). Call it once per result; carrying the native
+    /// lane's already-built codebook through `JobResult` is a recorded
+    /// ROADMAP follow-up.
+    pub fn codebook(&self) -> Option<Codebook> {
+        let out = self.outcome.as_ref().ok()?;
+        Codebook::from_output(out).ok()
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +166,32 @@ mod tests {
     fn served_by_labels() {
         assert_eq!(ServedBy::Native.label(), "native");
         assert_eq!(ServedBy::Runtime.label(), "runtime");
+    }
+
+    #[test]
+    fn job_result_codebook_is_compact() {
+        let res = JobResult {
+            id: 1,
+            outcome: Ok(QuantOutput {
+                values: vec![1.0, 2.0, 1.0],
+                levels: vec![1.0, 2.0],
+                l2_loss: 0.0,
+                clamped: 0,
+                diag: Default::default(),
+            }),
+            latency: Duration::ZERO,
+            served_by: ServedBy::Native,
+        };
+        let cb = res.codebook().expect("ok outcome has a codebook");
+        assert_eq!(cb.levels, vec![1.0, 2.0]);
+        assert_eq!(cb.indices, vec![0, 1, 0]);
+        let failed = JobResult {
+            id: 2,
+            outcome: Err("boom".into()),
+            latency: Duration::ZERO,
+            served_by: ServedBy::Native,
+        };
+        assert!(failed.codebook().is_none());
     }
 
     #[test]

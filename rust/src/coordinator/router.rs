@@ -30,6 +30,7 @@ use crate::quant::{
 use crate::runtime::{BackendKind, ExecutorBackend, ShadowBackend};
 use crate::{Error, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 pub use crate::runtime::RuntimeInfo;
 
@@ -105,7 +106,8 @@ impl Router {
 
     /// Serve a job on the native engines; the payload's precision picks
     /// the lane (f32 payloads run the single-precision fast path and widen
-    /// only the output).
+    /// only the output). Payloads are shared, so dispatch clones an `Arc`,
+    /// never the data — the prepare stage reads the submitted buffer.
     pub fn dispatch_native(
         &self,
         data: &Payload,
@@ -113,14 +115,27 @@ impl Router {
         opts: &QuantOptions,
     ) -> Result<QuantOutput> {
         match data {
-            Payload::F64(v) => quant::quantize(v, method, opts),
-            Payload::F32(v) => Ok(quant::quantize_f32(v, method, opts)?.widen()),
+            Payload::F64(v) => Ok(quant::api::run_shared_f64(
+                Arc::clone(v),
+                method,
+                opts,
+                quant::OutputForm::Codebook,
+            )?
+            .into_output64()),
+            Payload::F32(v) => Ok(quant::api::run_shared_f32(
+                Arc::clone(v),
+                method,
+                opts,
+                quant::OutputForm::Codebook,
+            )?
+            .into_output()
+            .widen()),
         }
     }
 
-    /// Serve an owned payload on the native engines, reporting per-stage
-    /// (prepare/solve) wall times for the metrics surface. Owning the
-    /// buffer lets the prepare stage take it without a copy.
+    /// Serve a payload on the native engines, reporting per-stage
+    /// (prepare/solve) wall times for the metrics surface. The shared
+    /// buffer enters the request-API core without a copy on either lane.
     pub fn dispatch_native_timed_owned(
         &self,
         data: Payload,
@@ -128,8 +143,18 @@ impl Router {
         opts: &QuantOptions,
     ) -> Result<(QuantOutput, quant::StageTimings)> {
         match data {
-            Payload::F64(v) => quant::pipeline::quantize_timed_vec(v, method, opts),
-            Payload::F32(v) => quant::pipeline::quantize_timed_f32_vec(v, method, opts),
+            Payload::F64(v) => {
+                let item =
+                    quant::api::run_shared_f64(v, method, opts, quant::OutputForm::Codebook)?;
+                let timings = item.timings();
+                Ok((item.into_output64(), timings))
+            }
+            Payload::F32(v) => {
+                let item =
+                    quant::api::run_shared_f32(v, method, opts, quant::OutputForm::Codebook)?;
+                let timings = item.timings;
+                Ok((item.into_output().widen(), timings))
+            }
         }
     }
 }

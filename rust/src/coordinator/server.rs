@@ -4,8 +4,10 @@
 //! Topology:
 //!
 //! ```text
-//!            submit()/try_submit()
-//!                   │  (bounded queue = backpressure)
+//!      submit_request()/try_submit_request()   (QuantRequest front door;
+//!                   │                            legacy submit*/try_submit*
+//!                   │  (bounded queue =          are shims over it)
+//!                   │   backpressure)
 //!        ┌──────────┴───────────┐
 //!   native queue           runtime queue        (router decides per job)
 //!        │                      │
@@ -32,6 +34,7 @@ use super::metrics::{Metrics, Snapshot};
 use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
 use crate::config::{Config, Engine};
+use crate::quant::api::{Plan, QuantRequest, RequestInput};
 use crate::quant::{Precision, QuantMethod, QuantOptions};
 use crate::runtime::{open_backend, ExecutorBackend};
 use crate::{Error, Result};
@@ -46,6 +49,43 @@ use std::time::{Duration, Instant};
 /// paths without artifacts.
 pub type BackendFactory =
     Arc<dyn Fn(usize) -> Result<Box<dyn ExecutorBackend>> + Send + Sync>;
+
+/// Convert a typed request into coordinator job parts. The coordinator
+/// serves single-vector one-shot (or target-count) requests; sweep plans
+/// and batch/matrix inputs are rejected — submit their units as
+/// individual requests, or run them in-process via
+/// [`crate::quant::Quantizer`].
+fn request_job_parts(req: QuantRequest) -> Result<(Payload, QuantMethod, QuantOptions)> {
+    if matches!(req.plan, Plan::Sweep { .. }) {
+        return Err(Error::Coordinator(
+            "coordinator jobs are one-shot; run λ sweeps in-process via quant::Quantizer".into(),
+        ));
+    }
+    let opts = req.effective_options();
+    let payload = match req.input {
+        RequestInput::VectorF64(w) => Payload::F64(w),
+        RequestInput::VectorF32(w) => Payload::F32(w),
+        _ => {
+            return Err(Error::Coordinator(
+                "coordinator jobs take a single vector; submit batch/matrix groups as \
+                 individual requests"
+                    .into(),
+            ))
+        }
+    };
+    Ok((payload, req.method, opts))
+}
+
+/// Wrap a legacy (payload, method, opts) submission as a typed request —
+/// the shim the historical `submit*` surface rides through. The shared
+/// payload moves into the request unchanged; no data copy.
+fn request_from_payload(data: Payload, method: QuantMethod, opts: QuantOptions) -> QuantRequest {
+    let req = match data {
+        Payload::F64(v) => QuantRequest::shared(v),
+        Payload::F32(v) => QuantRequest::shared_f32(v),
+    };
+    req.method(method).options(opts)
+}
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
@@ -371,17 +411,32 @@ impl Coordinator {
         )
     }
 
-    /// Blocking submit of a typed payload (applies backpressure). Returns
-    /// the job id and the result receiver.
-    pub fn submit_payload(
+    /// Shared admission path for both submit front doors: validate the
+    /// request shape, build the job, and pick its queue. The push
+    /// strategy (blocking vs shedding) stays at the call site.
+    fn admit_request(
         &self,
-        data: Payload,
-        method: QuantMethod,
-        opts: QuantOptions,
-    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        req: QuantRequest,
+    ) -> Result<(Job, mpsc::Receiver<JobResult>, &BoundedQueue<Job>)> {
+        let (data, method, opts) = request_job_parts(req)?;
         let (job, rx, to_runtime) = self.make_job(data, method, opts);
-        let id = job.id;
         let q = if to_runtime { &self.runtime_q } else { &self.native_q };
+        Ok((job, rx, q.as_ref()))
+    }
+
+    /// **The typed front door**: blocking submit of a single-vector
+    /// [`QuantRequest`] (applies backpressure). Returns the job id and
+    /// the result receiver. Every legacy `submit*` variant below is a
+    /// thin shim over this; shared request inputs enter the serve path
+    /// without copying. Sweep plans and batch/matrix inputs are rejected
+    /// — submit their units individually, or run them in-process via
+    /// [`crate::quant::Quantizer`].
+    pub fn submit_request(
+        &self,
+        req: QuantRequest,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        let (job, rx, q) = self.admit_request(req)?;
+        let id = job.id;
         if !q.push(job) {
             return Err(Error::Coordinator("queue closed".into()));
         }
@@ -389,38 +444,14 @@ impl Coordinator {
         Ok((id, rx))
     }
 
-    /// Blocking submit of f64 data (the historical API).
-    pub fn submit(
+    /// Non-blocking typed submit; `Err` when the queue is full (load
+    /// shedding). The `try_` twin of [`Coordinator::submit_request`].
+    pub fn try_submit_request(
         &self,
-        data: Vec<f64>,
-        method: QuantMethod,
-        opts: QuantOptions,
+        req: QuantRequest,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        self.submit_payload(Payload::F64(data), method, opts)
-    }
-
-    /// Blocking submit of f32 data; served by the native f32 lane without
-    /// up-front widening.
-    pub fn submit_f32(
-        &self,
-        data: Vec<f32>,
-        method: QuantMethod,
-        opts: QuantOptions,
-    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        self.submit_payload(Payload::F32(data), method, opts)
-    }
-
-    /// Non-blocking submit of a typed payload; `Err` when the queue is
-    /// full (load shedding).
-    pub fn try_submit_payload(
-        &self,
-        data: Payload,
-        method: QuantMethod,
-        opts: QuantOptions,
-    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        let (job, rx, to_runtime) = self.make_job(data, method, opts);
+        let (job, rx, q) = self.admit_request(req)?;
         let id = job.id;
-        let q = if to_runtime { &self.runtime_q } else { &self.native_q };
         match q.try_push(job) {
             TryPush::Ok => {
                 self.metrics.on_submit();
@@ -434,38 +465,106 @@ impl Coordinator {
         }
     }
 
+    /// Submit a typed request and wait for the result (convenience).
+    /// [`JobResult::codebook`] exposes the compact payload view.
+    pub fn quantize_blocking_request(&self, req: QuantRequest) -> Result<JobResult> {
+        let (_, rx) = self.submit_request(req)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("worker dropped the job".into()))
+    }
+
+    /// Blocking submit of a typed payload (applies backpressure).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::submit_request`].
+    pub fn submit_payload(
+        &self,
+        data: Payload,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_request(request_from_payload(data, method, opts))
+    }
+
+    /// Blocking submit of f64 data (the historical API).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::submit_request`].
+    pub fn submit(
+        &self,
+        data: Vec<f64>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_payload(Payload::F64(data.into()), method, opts)
+    }
+
+    /// Blocking submit of f32 data; served by the native f32 lane without
+    /// up-front widening.
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::submit_request`].
+    pub fn submit_f32(
+        &self,
+        data: Vec<f32>,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_payload(Payload::F32(data.into()), method, opts)
+    }
+
+    /// Non-blocking submit of a typed payload; `Err` when the queue is
+    /// full (load shedding).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::try_submit_request`].
+    pub fn try_submit_payload(
+        &self,
+        data: Payload,
+        method: QuantMethod,
+        opts: QuantOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.try_submit_request(request_from_payload(data, method, opts))
+    }
+
     /// Non-blocking submit of f64 data (the historical API).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::try_submit_request`].
     pub fn try_submit(
         &self,
         data: Vec<f64>,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        self.try_submit_payload(Payload::F64(data), method, opts)
+        self.try_submit_payload(Payload::F64(data.into()), method, opts)
     }
 
     /// Submit and wait for the result (convenience).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::quantize_blocking_request`].
     pub fn quantize_blocking(
         &self,
         data: Vec<f64>,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> Result<JobResult> {
-        let (_, rx) = self.submit(data, method, opts)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("worker dropped the job".into()))
+        self.quantize_blocking_request(request_from_payload(
+            Payload::F64(data.into()),
+            method,
+            opts,
+        ))
     }
 
     /// Submit f32 data and wait for the result (convenience).
+    ///
+    /// **Legacy**: thin shim over [`Coordinator::quantize_blocking_request`].
     pub fn quantize_blocking_f32(
         &self,
         data: Vec<f32>,
         method: QuantMethod,
         opts: QuantOptions,
     ) -> Result<JobResult> {
-        let (_, rx) = self.submit_f32(data, method, opts)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("worker dropped the job".into()))
+        self.quantize_blocking_request(request_from_payload(
+            Payload::F32(data.into()),
+            method,
+            opts,
+        ))
     }
 
     /// Current metrics snapshot.
@@ -696,6 +795,56 @@ mod tests {
         let snap = c.shutdown();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.stage_samples, 1, "f32 jobs must record stage timings too");
+    }
+
+    #[test]
+    fn request_front_door_matches_legacy_submit() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(11);
+        let opts = QuantOptions { target_values: 4, seed: 5, ..Default::default() };
+        let via_req = c
+            .quantize_blocking_request(
+                QuantRequest::vector(data.clone())
+                    .method(QuantMethod::KMeans)
+                    .options(opts.clone()),
+            )
+            .unwrap()
+            .outcome
+            .unwrap();
+        let via_legacy = c
+            .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+            .unwrap()
+            .outcome
+            .unwrap();
+        let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+        assert_eq!(via_req.values, via_legacy.values);
+        assert_eq!(via_req.values, direct.values);
+        assert_eq!(via_req.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        c.shutdown();
+    }
+
+    #[test]
+    fn non_job_shaped_requests_are_rejected_at_submit() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let sweep = QuantRequest::vector(sample(12)).sweep(vec![1e-3, 1e-2]);
+        assert!(c.submit_request(sweep).is_err());
+        let batch = QuantRequest::batch(vec![sample(13)]);
+        assert!(c.try_submit_request(batch).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn job_result_ships_compact_codebook() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let res = c
+            .quantize_blocking_request(
+                QuantRequest::vector(sample(14)).method(QuantMethod::KMeans).target_count(4),
+            )
+            .unwrap();
+        let cb = res.codebook().expect("successful jobs expose a codebook");
+        assert!(cb.k() <= 4);
+        assert_eq!(cb.decode(), res.outcome.unwrap().values);
+        c.shutdown();
     }
 
     #[test]

@@ -1,0 +1,999 @@
+//! The unified request/response front door for quantization.
+//!
+//! The library grew one entry-point family per capability — one-shot vs
+//! batch vs λ-sweep vs timed, times two precision lanes, times vector vs
+//! matrix — and every new lane multiplied the surface again. This module
+//! collapses them behind three types:
+//!
+//! * [`QuantRequest`] — a builder describing *what* to quantize (an owned
+//!   or shared vector, a batch, or a matrix with a [`Grouping`]), *how*
+//!   (method + options + precision lane), under which [`Plan`] (one-shot,
+//!   exact target count, or a λ sweep), and in which [`OutputForm`].
+//! * [`Quantizer`] — the facade whose single [`Quantizer::run`] serves
+//!   every request shape. Batches and matrix groupings fan across the
+//!   scoped-thread batch executor; sweeps amortize one prepared input
+//!   across the λ grid with warm starts.
+//! * [`QuantResponse`] — **codebook-first** results: each [`QuantItem`]
+//!   carries a [`Codebook`] (levels + `u32` indices, in the lane's own
+//!   precision — f32 results are never widened early) plus loss,
+//!   diagnostics and per-stage timings. Full-length vectors are *not*
+//!   built unless the request asked for [`OutputForm::Values`]; callers
+//!   that need one later materialize lazily via [`QuantItem::materialize`]
+//!   (an O(n) table lookup).
+//!
+//! Every legacy entry point (`quantize`, `quantize_batch`,
+//! `quantize_sweep*`, `quantize_timed*`, `tensor::quantize_matrix`, the
+//! coordinator's `submit*` family) is a thin shim over the cores in this
+//! module and is regression-tested bitwise-identical to its pre-redesign
+//! output (`tests/api_equivalence.rs`).
+//!
+//! # Quickstart
+//!
+//! ```
+//! use sqlsq::quant::{QuantMethod, QuantRequest, Quantizer};
+//!
+//! let data = vec![0.1, 0.12, 0.5, 0.52, 0.9, 0.1];
+//! let req = QuantRequest::vector(data)
+//!     .method(QuantMethod::KMeans)
+//!     .target_count(3);
+//! let resp = Quantizer::new().run(&req).unwrap();
+//! let item = resp.into_single().unwrap();
+//! // Compact by default: a few levels + one small index per element.
+//! assert!(item.distinct_values() <= 3);
+//! let full = item.materialize_f64(); // lazy, only when you need it
+//! assert_eq!(full.len(), 6);
+//! ```
+
+use super::codebook::Codebook;
+use super::pipeline::{
+    batch_map, solver_for, LaneSolve, PreparedInput, StageTimings, SweepState,
+};
+use super::tensor::Grouping;
+use super::types::{
+    Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputT,
+};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scalar::Scalar;
+use crate::{Error, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Request types
+// ---------------------------------------------------------------------
+
+/// What a request returns per item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OutputForm {
+    /// Codebook only (levels + indices) — the compact serve payload.
+    /// Full vectors materialize lazily via [`QuantItem::materialize`].
+    #[default]
+    Codebook,
+    /// Codebook plus eagerly materialized full-length values
+    /// ([`QuantItem::values`] is populated).
+    Values,
+}
+
+/// The solve plan a request runs under.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Plan {
+    /// One solve per input group with the request's options as given.
+    OneShot,
+    /// One solve per input group targeting exactly `l` distinct values
+    /// (overrides `QuantOptions::target_values`; pair with a count-taking
+    /// method — see `QuantMethod::takes_target_count`).
+    TargetCount(usize),
+    /// A λ₁ grid over ONE prepared input (single-vector requests only):
+    /// the prepare stage runs once and lasso/iterative solvers warm-start
+    /// along the path. `warm_start = false` solves every grid point cold
+    /// (bitwise-identical to independent one-shot calls).
+    Sweep {
+        /// The λ₁ grid, one response item per entry, in order.
+        lambdas: Vec<f64>,
+        /// Reuse the previous grid point's coefficients as a warm start.
+        warm_start: bool,
+    },
+}
+
+/// The input a request quantizes. Vectors are held behind `Arc`, so
+/// cloning a request never copies data.
+#[derive(Debug, Clone)]
+pub enum RequestInput {
+    /// One f64 vector (shared storage).
+    VectorF64(Arc<[f64]>),
+    /// One f32 vector; runs the native single-precision lane end to end.
+    VectorF32(Arc<[f32]>),
+    /// Independent f64 vectors, fanned across the batch executor.
+    BatchF64(Vec<Vec<f64>>),
+    /// Independent f32 vectors, fanned across the batch executor.
+    BatchF32(Vec<Vec<f32>>),
+    /// A matrix quantized per the [`Grouping`]; per-row / per-column
+    /// groups fan across the batch executor like a batch.
+    Matrix(Matrix, Grouping),
+}
+
+/// A quantization request: input + method + options + plan + output form.
+///
+/// Build with one of the input constructors ([`QuantRequest::vector`],
+/// [`QuantRequest::shared`], [`QuantRequest::batch`],
+/// [`QuantRequest::matrix`], or their `_f32` twins), then chain setters.
+/// Defaults: [`QuantMethod::L1LeastSquare`] (the paper's Algorithm 1),
+/// `QuantOptions::default()`, [`Plan::OneShot`], [`OutputForm::Codebook`].
+#[derive(Debug, Clone)]
+pub struct QuantRequest {
+    pub(crate) input: RequestInput,
+    pub(crate) method: QuantMethod,
+    pub(crate) opts: QuantOptions,
+    pub(crate) plan: Plan,
+    pub(crate) output: OutputForm,
+}
+
+impl QuantRequest {
+    fn with_input(input: RequestInput) -> QuantRequest {
+        QuantRequest {
+            input,
+            method: QuantMethod::L1LeastSquare,
+            opts: QuantOptions::default(),
+            plan: Plan::OneShot,
+            output: OutputForm::default(),
+        }
+    }
+
+    /// Quantize one owned f64 vector (the buffer is taken as-is; no data
+    /// copy beyond the one-time move into shared storage).
+    pub fn vector(w: Vec<f64>) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF64(Arc::from(w)))
+    }
+
+    /// Quantize one owned f32 vector on the native single-precision lane.
+    pub fn vector_f32(w: Vec<f32>) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF32(Arc::from(w)))
+    }
+
+    /// Quantize an already-shared f64 vector without copying it.
+    pub fn shared(w: Arc<[f64]>) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF64(w))
+    }
+
+    /// Quantize an already-shared f32 vector without copying it.
+    pub fn shared_f32(w: Arc<[f32]>) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF32(w))
+    }
+
+    /// Quantize a borrowed f64 slice (copies once into shared storage —
+    /// prefer [`QuantRequest::vector`] / [`QuantRequest::shared`] when you
+    /// own the buffer).
+    pub fn slice(w: &[f64]) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF64(Arc::from(w)))
+    }
+
+    /// Quantize a borrowed f32 slice (copies once into shared storage).
+    pub fn slice_f32(w: &[f32]) -> QuantRequest {
+        Self::with_input(RequestInput::VectorF32(Arc::from(w)))
+    }
+
+    /// Quantize many independent f64 vectors (scoped-thread fan-out; one
+    /// response item per input, in order, failures isolated per slot).
+    pub fn batch(inputs: Vec<Vec<f64>>) -> QuantRequest {
+        Self::with_input(RequestInput::BatchF64(inputs))
+    }
+
+    /// Quantize many independent f32 vectors on the native f32 lane.
+    pub fn batch_f32(inputs: Vec<Vec<f32>>) -> QuantRequest {
+        Self::with_input(RequestInput::BatchF32(inputs))
+    }
+
+    /// Quantize a matrix with the given grouping (one response item per
+    /// group: 1 for per-tensor, `rows` for per-row, `cols` for
+    /// per-column). Per-row/per-column groups run through the batch
+    /// fan-out.
+    pub fn matrix(m: Matrix, grouping: Grouping) -> QuantRequest {
+        Self::with_input(RequestInput::Matrix(m, grouping))
+    }
+
+    /// Set the quantization method.
+    pub fn method(mut self, method: QuantMethod) -> QuantRequest {
+        self.method = method;
+        self
+    }
+
+    /// Replace the full option set (including precision). Chain the
+    /// narrower setters after this to tweak individual fields.
+    pub fn options(mut self, opts: QuantOptions) -> QuantRequest {
+        self.opts = opts;
+        self
+    }
+
+    /// Select the precision lane (`F32` narrows f64 inputs once at the
+    /// boundary; f32 inputs always run natively regardless).
+    pub fn precision(mut self, precision: Precision) -> QuantRequest {
+        self.opts.precision = precision;
+        self
+    }
+
+    /// Set the l1 penalty λ₁.
+    pub fn lambda1(mut self, lambda1: f64) -> QuantRequest {
+        self.opts.lambda1 = lambda1;
+        self
+    }
+
+    /// Plan for an exact distinct-value count (sets [`Plan::TargetCount`]).
+    pub fn target_count(mut self, l: usize) -> QuantRequest {
+        self.plan = Plan::TargetCount(l);
+        self
+    }
+
+    /// Plan a warm-started λ sweep (sets [`Plan::Sweep`]).
+    pub fn sweep(mut self, lambdas: Vec<f64>) -> QuantRequest {
+        self.plan = Plan::Sweep { lambdas, warm_start: true };
+        self
+    }
+
+    /// Plan a cold λ sweep: every grid point solved independently
+    /// (bitwise-identical to per-λ one-shot runs).
+    pub fn sweep_cold(mut self, lambdas: Vec<f64>) -> QuantRequest {
+        self.plan = Plan::Sweep { lambdas, warm_start: false };
+        self
+    }
+
+    /// Choose the output form.
+    pub fn output(mut self, form: OutputForm) -> QuantRequest {
+        self.output = form;
+        self
+    }
+
+    /// Eagerly materialize full-length vectors (sets
+    /// [`OutputForm::Values`]).
+    pub fn with_values(mut self) -> QuantRequest {
+        self.output = OutputForm::Values;
+        self
+    }
+
+    /// The request's plan.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The options the run will actually use: the request's options with
+    /// the plan folded in ([`Plan::TargetCount`] overrides
+    /// `target_values`; sweep λ overrides happen per grid point).
+    pub fn effective_options(&self) -> QuantOptions {
+        let mut opts = self.opts.clone();
+        if let Plan::TargetCount(l) = self.plan {
+            opts.target_values = l;
+        }
+        opts
+    }
+}
+
+// ---------------------------------------------------------------------
+// Response types
+// ---------------------------------------------------------------------
+
+/// One quantized unit (a vector, batch element, matrix group, or sweep
+/// grid point) in its lane precision. Codebook-first: the full-length
+/// vector exists only if the request asked for [`OutputForm::Values`] or
+/// a caller materializes it.
+#[derive(Debug, Clone)]
+pub struct QuantItem<T: Scalar = f64> {
+    /// Compact result: shared levels + one `u32` index per element.
+    pub codebook: Codebook<T>,
+    /// Squared-l2 information loss vs the lane-precision input (always
+    /// accumulated in f64, bitwise-identical to the legacy pipeline).
+    pub l2_loss: f64,
+    /// Number of values moved by the hard-sigmoid clamp.
+    pub clamped: usize,
+    /// Solver diagnostics.
+    pub diag: QuantDiag,
+    /// Per-stage wall times for this item (prepare is attributed to the
+    /// first item of a sweep; later grid points reuse the prepared input).
+    pub timings: StageTimings,
+    /// Populated only under [`OutputForm::Values`].
+    values: Option<Vec<T>>,
+}
+
+impl<T: Scalar> QuantItem<T> {
+    /// Eagerly materialized values, if the request asked for them.
+    pub fn values(&self) -> Option<&[T]> {
+        self.values.as_deref()
+    }
+
+    /// The full-length quantized vector: returns the eager copy when
+    /// present, otherwise decodes the codebook (O(n) table lookup).
+    pub fn materialize(&self) -> Vec<T> {
+        match &self.values {
+            Some(v) => v.clone(),
+            None => self.codebook.decode(),
+        }
+    }
+
+    /// Achieved number of distinct values.
+    pub fn distinct_values(&self) -> usize {
+        self.codebook.k()
+    }
+
+    /// Convert into the legacy full-vector output type (materializes).
+    pub fn into_output(self) -> QuantOutputT<T> {
+        let QuantItem { codebook, l2_loss, clamped, diag, values, .. } = self;
+        let values = values.unwrap_or_else(|| codebook.decode());
+        QuantOutputT { values, levels: codebook.levels, l2_loss, clamped, diag }
+    }
+}
+
+/// A lane-erased response item. The request's input lane (and, for f64
+/// inputs, `QuantOptions::precision`) decides which variant you get; f32
+/// results stay narrow until a caller explicitly widens.
+#[derive(Debug, Clone)]
+pub enum Item {
+    /// Double-precision result.
+    F64(QuantItem<f64>),
+    /// Single-precision result (native f32 lane).
+    F32(QuantItem<f32>),
+}
+
+impl Item {
+    /// The item's lane.
+    pub fn precision(&self) -> Precision {
+        match self {
+            Item::F64(_) => Precision::F64,
+            Item::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Per-stage wall times.
+    pub fn timings(&self) -> StageTimings {
+        match self {
+            Item::F64(i) => i.timings,
+            Item::F32(i) => i.timings,
+        }
+    }
+
+    /// Solver diagnostics.
+    pub fn diag(&self) -> &QuantDiag {
+        match self {
+            Item::F64(i) => &i.diag,
+            Item::F32(i) => &i.diag,
+        }
+    }
+
+    /// Squared-l2 information loss.
+    pub fn l2_loss(&self) -> f64 {
+        match self {
+            Item::F64(i) => i.l2_loss,
+            Item::F32(i) => i.l2_loss,
+        }
+    }
+
+    /// Number of values moved by the clamp.
+    pub fn clamped(&self) -> usize {
+        match self {
+            Item::F64(i) => i.clamped,
+            Item::F32(i) => i.clamped,
+        }
+    }
+
+    /// Achieved number of distinct values.
+    pub fn distinct_values(&self) -> usize {
+        match self {
+            Item::F64(i) => i.distinct_values(),
+            Item::F32(i) => i.distinct_values(),
+        }
+    }
+
+    /// Borrow the f64 item, if this is the f64 lane.
+    pub fn as_f64(&self) -> Option<&QuantItem<f64>> {
+        match self {
+            Item::F64(i) => Some(i),
+            Item::F32(_) => None,
+        }
+    }
+
+    /// Borrow the f32 item, if this is the f32 lane.
+    pub fn as_f32(&self) -> Option<&QuantItem<f32>> {
+        match self {
+            Item::F64(_) => None,
+            Item::F32(i) => Some(i),
+        }
+    }
+
+    /// The codebook on the f64 surface (f32 levels widen; indices are
+    /// shared unchanged). The compact wire format for f64 consumers.
+    pub fn codebook_f64(&self) -> Codebook<f64> {
+        match self {
+            Item::F64(i) => i.codebook.clone(),
+            Item::F32(i) => i.codebook.widen(),
+        }
+    }
+
+    /// Materialize the full vector on the f64 surface.
+    pub fn materialize_f64(&self) -> Vec<f64> {
+        match self {
+            Item::F64(i) => i.materialize(),
+            Item::F32(i) => i.materialize().iter().map(|&x| f64::from(x)).collect(),
+        }
+    }
+
+    /// Convert into the legacy f64 [`QuantOutput`] (widening f32 results),
+    /// exactly as the historical f64-surface entry points did.
+    pub fn into_output64(self) -> QuantOutput {
+        match self {
+            Item::F64(i) => i.into_output(),
+            Item::F32(i) => i.into_output().widen(),
+        }
+    }
+}
+
+/// The response to one [`Quantizer::run`]: one item per unit of work
+/// (single → 1, batch → one per input, matrix → one per group, sweep →
+/// one per λ, in request order). Item failures are isolated per slot —
+/// one bad batch element does not fail its siblings.
+#[derive(Debug)]
+pub struct QuantResponse {
+    /// Per-item results, in request order.
+    pub items: Vec<Result<Item>>,
+}
+
+impl QuantResponse {
+    fn from_items(items: Vec<Result<Item>>) -> QuantResponse {
+        QuantResponse { items }
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True for an empty (zero-input batch) response.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Consume a single-item response (single-vector one-shot requests),
+    /// propagating the item's own error if it failed.
+    pub fn into_single(mut self) -> Result<Item> {
+        if self.items.len() != 1 {
+            return Err(Error::InvalidInput(format!(
+                "expected a single-item response, got {} items",
+                self.items.len()
+            )));
+        }
+        self.items.pop().expect("len checked above")
+    }
+
+    /// Materialize every item onto the legacy f64 output surface.
+    pub fn into_outputs64(self) -> Vec<Result<QuantOutput>> {
+        self.items.into_iter().map(|r| r.map(Item::into_output64)).collect()
+    }
+
+    /// Aggregate per-stage wall times over the successful items.
+    pub fn timings(&self) -> StageTimings {
+        let mut prepare = Duration::ZERO;
+        let mut solve = Duration::ZERO;
+        for item in self.items.iter().flatten() {
+            let t = item.timings();
+            prepare += t.prepare;
+            solve += t.solve;
+        }
+        StageTimings { prepare, solve }
+    }
+
+    /// Total squared-l2 loss over the successful items.
+    pub fn total_l2_loss(&self) -> f64 {
+        self.items.iter().flatten().map(Item::l2_loss).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The facade
+// ---------------------------------------------------------------------
+
+/// The quantization facade: one [`Quantizer::run`] for every request
+/// shape. Stateless today (the prepared-input and workspace reuse live
+/// per-run); constructed once and shared freely.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Quantizer;
+
+impl Quantizer {
+    /// A new facade.
+    pub fn new() -> Quantizer {
+        Quantizer
+    }
+
+    /// Serve one request. Returns `Err` only for request-shape errors
+    /// (e.g. a sweep plan over a batch input, an empty matrix); per-item
+    /// solve failures land in [`QuantResponse::items`] so batch siblings
+    /// survive.
+    pub fn run(&self, req: &QuantRequest) -> Result<QuantResponse> {
+        let opts = req.effective_options();
+        match (&req.input, &req.plan) {
+            (RequestInput::VectorF64(w), Plan::Sweep { lambdas, warm_start }) => {
+                let items = sweep_shared_f64(
+                    Arc::clone(w),
+                    req.method,
+                    lambdas,
+                    &opts,
+                    *warm_start,
+                    req.output,
+                )?;
+                Ok(QuantResponse::from_items(items.into_iter().map(Ok).collect()))
+            }
+            (RequestInput::VectorF32(w), Plan::Sweep { lambdas, warm_start }) => {
+                let t0 = Instant::now();
+                let prep = PreparedInput::from_shared(Arc::clone(w))?;
+                let prepare = t0.elapsed();
+                let items = sweep_prepared_core(
+                    &prep, req.method, lambdas, &opts, *warm_start, req.output, prepare,
+                )?;
+                Ok(QuantResponse::from_items(
+                    items.into_iter().map(|i| Ok(Item::F32(i))).collect(),
+                ))
+            }
+            (_, Plan::Sweep { .. }) => Err(Error::InvalidParam(
+                "λ-sweep plans need a single-vector input".into(),
+            )),
+            (RequestInput::VectorF64(w), _) => Ok(QuantResponse::from_items(vec![
+                run_shared_f64(Arc::clone(w), req.method, &opts, req.output),
+            ])),
+            (RequestInput::VectorF32(w), _) => Ok(QuantResponse::from_items(vec![
+                run_shared_f32(Arc::clone(w), req.method, &opts, req.output).map(Item::F32),
+            ])),
+            (RequestInput::BatchF64(inputs), _) => Ok(QuantResponse::from_items(
+                batch_core_f64(inputs, req.method, &opts, req.output),
+            )),
+            (RequestInput::BatchF32(inputs), _) => Ok(QuantResponse::from_items(
+                batch_core_f32(inputs, req.method, &opts, req.output),
+            )),
+            (RequestInput::Matrix(m, grouping), _) => {
+                let groups = matrix_groups(m, *grouping)?;
+                Ok(QuantResponse::from_items(batch_core_shared_f64(
+                    &groups, req.method, &opts, req.output,
+                )))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cores — everything below is what the legacy entry points shim over.
+// ---------------------------------------------------------------------
+
+/// Compact finalize: clamp in level space, build the codebook through the
+/// unique decomposition's inverse map, and accumulate the l2 loss over the
+/// full vector in input order — the exact arithmetic sequence of the
+/// historical full-vector finalize, so losses are bitwise-identical, but
+/// without ever materializing the full-length output vector
+/// (O(n + m log m) instead of a second full-vector pass + sort).
+/// [`PreparedInput::finish`] is a thin wrapper over this; the independent
+/// bitwise anchor is `types::finalize` (still used by the runtime lane),
+/// which the regression tests compare against.
+pub(crate) fn finish_compact<T: Scalar>(
+    prep: &PreparedInput<T>,
+    level_values: &[T],
+    clamp: Option<(f64, f64)>,
+    diag: QuantDiag,
+) -> Result<QuantItem<T>> {
+    let m = prep.m();
+    if level_values.len() != m {
+        return Err(Error::InvalidInput(format!(
+            "finish: expected {m} level values, got {}",
+            level_values.len()
+        )));
+    }
+    let unique = prep.unique();
+    // Clamp in level space — mirrors hard_sigmoid semantics (only strictly
+    // out-of-range values move, counted once per original occurrence).
+    let mut lv = level_values.to_vec();
+    let mut clamped = 0usize;
+    if let Some((lo, hi)) = clamp {
+        let (lo, hi) = (T::from_f64(lo), T::from_f64(hi));
+        for (v, &c) in lv.iter_mut().zip(&unique.counts) {
+            if *v < lo {
+                *v = lo;
+                clamped += c;
+            } else if *v > hi {
+                *v = hi;
+                clamped += c;
+            }
+        }
+    }
+    // Sorted distinct levels — the same construction the legacy finalize
+    // uses, so the level table is identical.
+    let mut levels = lv.clone();
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    levels.dedup();
+    if levels.len() > u32::MAX as usize {
+        return Err(Error::InvalidInput("codebook: too many levels".into()));
+    }
+    // Each unique value's level slot, then one u32 per element through the
+    // inverse map.
+    let level_of: Vec<u32> = lv
+        .iter()
+        .map(|v| {
+            levels
+                .binary_search_by(|l| l.partial_cmp(v).unwrap())
+                .expect("every per-level value is in the level table") as u32
+        })
+        .collect();
+    let indices: Vec<u32> = unique.inverse.iter().map(|&j| level_of[j]).collect();
+    // l2 loss over the full vector in input order: identical operation
+    // sequence to the full-vector path (recover() replicates lv[inverse]).
+    let mut l2_loss = 0.0f64;
+    for (o, &j) in prep.original().iter().zip(&unique.inverse) {
+        let d = (*o - lv[j]).to_f64();
+        l2_loss += d * d;
+    }
+    Ok(QuantItem {
+        codebook: Codebook { levels, indices },
+        l2_loss,
+        clamped,
+        diag,
+        timings: StageTimings { prepare: Duration::ZERO, solve: Duration::ZERO },
+        values: None,
+    })
+}
+
+/// Solve one prepared input on its lane and finalize compactly.
+pub(crate) fn run_prepared_core<T: LaneSolve>(
+    prep: &PreparedInput<T>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+    prepare: Duration,
+) -> Result<QuantItem<T>> {
+    let t = Instant::now();
+    let (lv, diag) = T::lane_solve(solver_for(method), prep, opts)?;
+    let mut item = finish_compact(prep, &lv, opts.clamp, diag)?;
+    if form == OutputForm::Values {
+        item.values = Some(item.codebook.decode());
+    }
+    item.timings = StageTimings { prepare, solve: t.elapsed() };
+    Ok(item)
+}
+
+/// λ path over one prepared input, warm-starting capable solvers between
+/// grid points. The prepare time is attributed to the first item.
+pub(crate) fn sweep_prepared_core<T: LaneSolve>(
+    prep: &PreparedInput<T>,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+    form: OutputForm,
+    prepare: Duration,
+) -> Result<Vec<QuantItem<T>>> {
+    let solver = solver_for(method);
+    let mut state = SweepState::default();
+    let mut items = Vec::with_capacity(lambdas.len());
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let opts = QuantOptions { lambda1: lambda, ..base.clone() };
+        let t = Instant::now();
+        let (lv, diag) = if warm_start {
+            T::lane_solve_path_step(solver, prep, &opts, &mut state)?
+        } else {
+            T::lane_solve(solver, prep, &opts)?
+        };
+        let mut item = finish_compact(prep, &lv, opts.clamp, diag)?;
+        if form == OutputForm::Values {
+            item.values = Some(item.codebook.decode());
+        }
+        item.timings = StageTimings {
+            prepare: if i == 0 { prepare } else { Duration::ZERO },
+            solve: t.elapsed(),
+        };
+        items.push(item);
+    }
+    Ok(items)
+}
+
+/// Single-vector core on the f64 surface: honors `opts.precision` (the
+/// `F32` lane narrows once here, runs natively, and stays narrow in the
+/// response). Shared storage in, so callers that own or share their
+/// buffer never copy it.
+pub(crate) fn run_shared_f64(
+    w: Arc<[f64]>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Result<Item> {
+    match opts.precision {
+        Precision::F64 => {
+            let t0 = Instant::now();
+            let prep = PreparedInput::from_shared(w)?;
+            let prepare = t0.elapsed();
+            run_prepared_core(&prep, method, opts, form, prepare).map(Item::F64)
+        }
+        Precision::F32 => {
+            // The one-time lane narrowing is part of the prepare stage.
+            let t0 = Instant::now();
+            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            let prep = PreparedInput::from_vec(narrow)?;
+            let prepare = t0.elapsed();
+            run_prepared_core(&prep, method, opts, form, prepare).map(Item::F32)
+        }
+    }
+}
+
+/// Single-vector core for f32 payloads: always the native f32 lane
+/// (narrowing never happens — the data is already single precision), as
+/// the legacy `quantize_f32` did.
+pub(crate) fn run_shared_f32(
+    w: Arc<[f32]>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Result<QuantItem<f32>> {
+    let t0 = Instant::now();
+    let prep = PreparedInput::from_shared(w)?;
+    let prepare = t0.elapsed();
+    run_prepared_core(&prep, method, opts, form, prepare)
+}
+
+/// λ sweep on the f64 surface, honoring `opts.precision` like
+/// [`run_shared_f64`].
+fn sweep_shared_f64(
+    w: Arc<[f64]>,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+    form: OutputForm,
+) -> Result<Vec<Item>> {
+    match base.precision {
+        Precision::F64 => {
+            let t0 = Instant::now();
+            let prep = PreparedInput::from_shared(w)?;
+            let prepare = t0.elapsed();
+            Ok(sweep_prepared_core(&prep, method, lambdas, base, warm_start, form, prepare)?
+                .into_iter()
+                .map(Item::F64)
+                .collect())
+        }
+        Precision::F32 => {
+            let t0 = Instant::now();
+            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+            let prep = PreparedInput::from_vec(narrow)?;
+            let prepare = t0.elapsed();
+            Ok(sweep_prepared_core(&prep, method, lambdas, base, warm_start, form, prepare)?
+                .into_iter()
+                .map(Item::F32)
+                .collect())
+        }
+    }
+}
+
+/// Batch core on the f64 surface: independent inputs fanned across the
+/// scoped-thread batch executor, failures isolated per slot.
+pub(crate) fn batch_core_f64(
+    inputs: &[Vec<f64>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Vec<Result<Item>> {
+    batch_map(inputs, |w| run_shared_f64(Arc::from(w.as_slice()), method, opts, form))
+}
+
+/// Batch core for f32 payloads (native f32 lane per slot).
+pub(crate) fn batch_core_f32(
+    inputs: &[Vec<f32>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Vec<Result<Item>> {
+    batch_map(inputs, |w| {
+        run_shared_f32(Arc::from(w.as_slice()), method, opts, form).map(Item::F32)
+    })
+}
+
+/// Batch core over already-shared groups: each slot clones an `Arc`, so
+/// callers that build their groups directly into shared storage (the
+/// matrix fan-out) pay exactly one copy per group end to end.
+pub(crate) fn batch_core_shared_f64(
+    inputs: &[Arc<[f64]>],
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Vec<Result<Item>> {
+    batch_map(inputs, |w| run_shared_f64(Arc::clone(w), method, opts, form))
+}
+
+/// Split a matrix into its quantization groups (the batch the fan-out
+/// runs over), each copied **once** into shared storage. Group order is
+/// the response item order: row index for per-row, column index for
+/// per-column.
+pub(crate) fn matrix_groups(m: &Matrix, grouping: Grouping) -> Result<Vec<Arc<[f64]>>> {
+    if m.rows() == 0 || m.cols() == 0 {
+        return Err(Error::InvalidInput("quantize_matrix: empty matrix".into()));
+    }
+    Ok(match grouping {
+        Grouping::PerTensor => vec![Arc::from(m.data())],
+        Grouping::PerRow => (0..m.rows()).map(|i| Arc::from(m.row(i))).collect(),
+        Grouping::PerColumn => (0..m.cols()).map(|j| Arc::from(m.col(j))).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    fn clustered(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut v = Vec::with_capacity(n);
+        for i in 0..n {
+            let center = [0.1, 0.35, 0.6, 0.9][i % 4];
+            v.push(((center + rng.normal_with(0.0, 0.02)) * 200.0).round() / 200.0);
+        }
+        v
+    }
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let req = QuantRequest::vector(vec![1.0, 2.0]);
+        assert_eq!(req.method, QuantMethod::L1LeastSquare);
+        assert_eq!(req.output, OutputForm::Codebook);
+        assert_eq!(*req.plan(), Plan::OneShot);
+        let req = req
+            .method(QuantMethod::KMeans)
+            .target_count(3)
+            .precision(Precision::F32)
+            .with_values();
+        assert_eq!(req.method, QuantMethod::KMeans);
+        assert_eq!(*req.plan(), Plan::TargetCount(3));
+        assert_eq!(req.effective_options().target_values, 3);
+        assert_eq!(req.effective_options().precision, Precision::F32);
+        assert_eq!(req.output, OutputForm::Values);
+    }
+
+    #[test]
+    fn codebook_form_does_not_materialize_values() {
+        let data = clustered(60, 1);
+        let req = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .target_count(4);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let q = item.as_f64().expect("f64 lane");
+        assert!(q.values().is_none(), "codebook form must stay compact");
+        assert_eq!(q.codebook.indices.len(), data.len());
+        assert!(q.distinct_values() <= 4);
+        // Lazy materialization reproduces the full vector.
+        assert_eq!(q.materialize().len(), data.len());
+    }
+
+    #[test]
+    fn values_form_materializes_eagerly() {
+        let data = clustered(40, 2);
+        let req = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .target_count(4)
+            .with_values();
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let q = item.as_f64().unwrap();
+        let vals = q.values().expect("values form is eager");
+        assert_eq!(vals.len(), data.len());
+        assert_eq!(vals, q.materialize().as_slice());
+    }
+
+    #[test]
+    fn run_matches_legacy_quantize() {
+        let data = clustered(80, 3);
+        for method in [QuantMethod::KMeans, QuantMethod::L1LeastSquare, QuantMethod::ClusterLs] {
+            let opts = QuantOptions { lambda1: 0.02, target_values: 4, ..Default::default() };
+            let req = QuantRequest::slice(&data).method(method).options(opts.clone());
+            let got =
+                Quantizer::new().run(&req).unwrap().into_single().unwrap().into_output64();
+            let want = super::super::quantize(&data, method, &opts).unwrap();
+            assert_eq!(got.values, want.values, "{method:?}");
+            assert_eq!(got.levels, want.levels, "{method:?}");
+            assert_eq!(got.l2_loss.to_bits(), want.l2_loss.to_bits(), "{method:?}");
+        }
+    }
+
+    #[test]
+    fn f32_input_stays_narrow() {
+        let data32: Vec<f32> = clustered(50, 4).iter().map(|&x| x as f32).collect();
+        let req = QuantRequest::vector_f32(data32.clone()).lambda1(0.02);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        assert_eq!(item.precision(), Precision::F32);
+        let q = item.as_f32().expect("f32 lane");
+        assert_eq!(q.codebook.indices.len(), data32.len());
+    }
+
+    #[test]
+    fn f64_input_with_f32_precision_runs_the_narrow_lane() {
+        let data = clustered(50, 5);
+        let req = QuantRequest::vector(data).lambda1(0.02).precision(Precision::F32);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        assert_eq!(item.precision(), Precision::F32, "never widened early");
+    }
+
+    #[test]
+    fn batch_isolates_per_slot_failures() {
+        let req = QuantRequest::batch(vec![clustered(30, 6), vec![], clustered(30, 7)])
+            .method(QuantMethod::KMeans)
+            .target_count(3);
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), 3);
+        assert!(resp.items[0].is_ok());
+        assert!(resp.items[1].is_err(), "empty vector fails its own slot only");
+        assert!(resp.items[2].is_ok());
+    }
+
+    #[test]
+    fn sweep_plan_yields_one_item_per_lambda() {
+        let data = clustered(60, 8);
+        let lambdas = vec![1e-4, 1e-3, 1e-2, 1e-1];
+        let req = QuantRequest::vector(data)
+            .method(QuantMethod::L1)
+            .sweep(lambdas.clone());
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), lambdas.len());
+        for (r, &l) in resp.items.iter().zip(&lambdas) {
+            let item = r.as_ref().unwrap();
+            assert_eq!(item.diag().lambda1, l);
+        }
+        // Only the first grid point pays the prepare stage.
+        assert_eq!(resp.items[1].as_ref().unwrap().timings().prepare, Duration::ZERO);
+    }
+
+    #[test]
+    fn sweep_over_batch_is_a_shape_error() {
+        let req = QuantRequest::batch(vec![clustered(20, 9)]).sweep(vec![1e-2]);
+        assert!(Quantizer::new().run(&req).is_err());
+    }
+
+    #[test]
+    fn matrix_request_yields_one_item_per_group() {
+        let m = Matrix::from_fn(6, 10, |i, j| ((i * 10 + j) % 7) as f64);
+        let req = QuantRequest::matrix(m, Grouping::PerRow)
+            .method(QuantMethod::KMeans)
+            .target_count(3);
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), 6);
+        for r in &resp.items {
+            assert!(r.as_ref().unwrap().distinct_values() <= 3);
+        }
+        let empty = QuantRequest::matrix(Matrix::zeros(0, 0), Grouping::PerTensor);
+        assert!(Quantizer::new().run(&empty).is_err());
+    }
+
+    #[test]
+    fn finish_compact_matches_historical_full_vector_finalize() {
+        // The compact finalize must agree with the independent historical
+        // full-vector path (recover + types::finalize, still used by the
+        // runtime lane) on values, levels, loss bits and clamp counts.
+        // `PreparedInput::finish` is compact-backed now, so this is the
+        // non-tautological anchor.
+        let data = clustered(70, 10);
+        let prep = PreparedInput::new(&data).unwrap();
+        let m = prep.m();
+        let lv: Vec<f64> = (0..m).map(|j| ((j * 13 % 7) as f64) * 0.3 - 0.4).collect();
+        for clamp in [None, Some((0.0, 1.0))] {
+            let compact = finish_compact(&prep, &lv, clamp, QuantDiag::default()).unwrap();
+            let full = prep.unique().recover(&lv).unwrap();
+            let want = crate::quant::types::finalize(&data, full, clamp, QuantDiag::default());
+            assert_eq!(compact.codebook.decode(), want.values);
+            assert_eq!(compact.codebook.levels, want.levels);
+            assert_eq!(compact.l2_loss.to_bits(), want.l2_loss.to_bits());
+            assert_eq!(compact.clamped, want.clamped);
+        }
+        // Wrong level count errors instead of panicking.
+        assert!(finish_compact(&prep, &lv[..m - 1], None, QuantDiag::default()).is_err());
+    }
+
+    #[test]
+    fn response_aggregates_timings_and_loss() {
+        let req = QuantRequest::batch(vec![clustered(40, 11), clustered(40, 12)])
+            .method(QuantMethod::KMeans)
+            .target_count(4);
+        let resp = Quantizer::new().run(&req).unwrap();
+        let total: f64 = resp
+            .items
+            .iter()
+            .flatten()
+            .map(Item::l2_loss)
+            .sum();
+        assert_eq!(resp.total_l2_loss().to_bits(), total.to_bits());
+        assert!(resp.timings().solve >= Duration::ZERO);
+        assert!(!resp.is_empty());
+    }
+}

@@ -1,31 +1,57 @@
-//! Codebook encoding utilities — the engineering payoff the paper's
-//! introduction motivates ("reduce the number of distinct values to the
-//! nearest 2^k to reduce memory cost").
+//! Codebook encoding — the engineering payoff the paper's introduction
+//! motivates ("reduce the number of distinct values to the nearest 2^k to
+//! reduce memory cost").
 //!
 //! A quantized vector is stored as a small codebook of levels plus one
 //! index per element; this module measures and performs that encoding:
 //! bits/value, total compressed size, index entropy (the Huffman-coding
 //! bound Deep Compression exploits), and lossless round-tripping.
+//!
+//! [`Codebook`] is generic over the lane precision
+//! ([`crate::linalg::scalar::Scalar`]): `Codebook<f64>` (the default) is
+//! what the f64 surface ships, and `Codebook<f32>` ([`CodebookF32`]) lets
+//! the single-precision lane stay narrow end to end — the request API
+//! ([`crate::quant::api`]) never widens an f32 result before the caller
+//! asks for it.
 
-use crate::quant::QuantOutput;
+use crate::linalg::scalar::Scalar;
+use crate::quant::types::QuantOutputT;
 use crate::{Error, Result};
 
-/// Codebook + per-element indices.
+/// Codebook + per-element indices: the compact representation of a
+/// quantized vector (`k` shared levels, one `u32` index per element).
 #[derive(Debug, Clone, PartialEq)]
-pub struct Codebook {
+pub struct Codebook<T: Scalar = f64> {
     /// The distinct levels, sorted ascending.
-    pub levels: Vec<f64>,
+    pub levels: Vec<T>,
     /// Index into `levels` per original element.
     pub indices: Vec<u32>,
 }
 
-impl Codebook {
-    /// Build from a quantized vector (exact value matching).
-    pub fn from_values(values: &[f64]) -> Result<Codebook> {
+/// Single-precision codebook (the f32 lane's compact output).
+pub type CodebookF32 = Codebook<f32>;
+
+impl<T: Scalar> Codebook<T> {
+    /// Build from a quantized vector.
+    ///
+    /// Matching is **exact** (bitwise value identity up to `-0.0 == 0.0`),
+    /// with no tolerance: every element must equal one of the distinct
+    /// values of the input, which holds by construction for any quantizer
+    /// output. Values that are merely close to a level are *not* snapped —
+    /// callers wanting tolerant re-encoding should quantize again instead.
+    ///
+    /// Errors on empty input and on NaN (a NaN can be neither sorted into
+    /// the level table nor looked up in it).
+    pub fn from_values(values: &[T]) -> Result<Codebook<T>> {
         if values.is_empty() {
             return Err(Error::InvalidInput("codebook: empty input".into()));
         }
-        let mut levels: Vec<f64> = values.to_vec();
+        // NaN would panic the sort / lookup comparators below; reject it
+        // up front (NaN is the only value unordered against itself).
+        if values.iter().any(|v| v.partial_cmp(v).is_none()) {
+            return Err(Error::InvalidInput("codebook: NaN in input".into()));
+        }
+        let mut levels: Vec<T> = values.to_vec();
         levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
         levels.dedup();
         if levels.len() > u32::MAX as usize {
@@ -43,8 +69,8 @@ impl Codebook {
         Ok(Codebook { levels, indices })
     }
 
-    /// Build from a [`QuantOutput`].
-    pub fn from_output(out: &QuantOutput) -> Result<Codebook> {
+    /// Build from a quantization output (either lane).
+    pub fn from_output(out: &QuantOutputT<T>) -> Result<Codebook<T>> {
         Self::from_values(&out.values)
     }
 
@@ -53,12 +79,24 @@ impl Codebook {
         self.levels.len()
     }
 
+    /// Number of encoded elements.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when no elements are encoded (cannot happen via
+    /// [`Codebook::from_values`]).
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
     /// Fixed-width bits per index (`⌈log₂ k⌉`, minimum 1).
     pub fn bits_per_index(&self) -> u32 {
         (usize::BITS - (self.k() - 1).leading_zeros()).max(1)
     }
 
-    /// Total compressed bytes: fixed-width indices + f32 codebook.
+    /// Total compressed bytes: fixed-width indices + the codebook stored
+    /// as f32 (the Deep-Compression wire convention, on both lanes).
     pub fn compressed_bytes(&self) -> usize {
         let idx_bits = self.indices.len() * self.bits_per_index() as usize;
         idx_bits.div_ceil(8) + self.k() * 4
@@ -87,9 +125,21 @@ impl Codebook {
             .sum()
     }
 
-    /// Reconstruct the full vector.
-    pub fn decode(&self) -> Vec<f64> {
+    /// Reconstruct the full vector (the lazy-materialization primitive of
+    /// the request API).
+    pub fn decode(&self) -> Vec<T> {
         self.indices.iter().map(|&i| self.levels[i as usize]).collect()
+    }
+}
+
+impl Codebook<f32> {
+    /// Widen to the f64 codebook type (for f64-surface consumers; the
+    /// indices are shared unchanged).
+    pub fn widen(&self) -> Codebook<f64> {
+        Codebook {
+            levels: self.levels.iter().map(|&x| f64::from(x)).collect(),
+            indices: self.indices.clone(),
+        }
     }
 }
 
@@ -103,8 +153,25 @@ mod tests {
         let values = vec![0.5, 0.5, 1.0, -2.0, 1.0, 0.5];
         let cb = Codebook::from_values(&values).unwrap();
         assert_eq!(cb.k(), 3);
+        assert_eq!(cb.len(), values.len());
+        assert!(!cb.is_empty());
         assert_eq!(cb.decode(), values);
         assert_eq!(cb.levels, vec![-2.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip_and_widen() {
+        let values = vec![0.5f32, 0.5, 1.0, -2.0, 1.0, 0.5];
+        let cb = CodebookF32::from_values(&values).unwrap();
+        assert_eq!(cb.k(), 3);
+        assert_eq!(cb.decode(), values);
+        let wide = cb.widen();
+        assert_eq!(wide.levels, vec![-2.0f64, 0.5, 1.0]);
+        assert_eq!(wide.indices, cb.indices);
+        assert_eq!(
+            wide.decode(),
+            values.iter().map(|&x| f64::from(x)).collect::<Vec<f64>>()
+        );
     }
 
     #[test]
@@ -163,6 +230,25 @@ mod tests {
 
     #[test]
     fn rejects_empty() {
-        assert!(Codebook::from_values(&[]).is_err());
+        assert!(Codebook::<f64>::from_values(&[]).is_err());
+    }
+
+    #[test]
+    fn nan_input_errors_instead_of_panicking() {
+        // Regression: `partial_cmp(..).unwrap()` used to abort the process
+        // on NaN; it must surface as Error::InvalidInput on both lanes.
+        let r64 = Codebook::from_values(&[1.0f64, f64::NAN, 2.0]);
+        match r64 {
+            Err(Error::InvalidInput(msg)) => assert!(msg.contains("NaN"), "{msg}"),
+            other => panic!("expected InvalidInput, got {other:?}"),
+        }
+        assert!(Codebook::from_values(&[f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn negative_zero_matches_positive_zero_level() {
+        let cb = Codebook::from_values(&[-0.0f64, 0.0, 1.0]).unwrap();
+        assert_eq!(cb.k(), 2, "-0.0 and 0.0 share one level");
+        assert_eq!(cb.decode().len(), 3);
     }
 }

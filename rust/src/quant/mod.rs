@@ -17,8 +17,14 @@
 //!
 //! Entry points, from highest to lowest level:
 //!
-//! * [`quantize`] — the keep-alive one-shot wrapper (prepare + solve);
-//!   existing callers and the coordinator's native engine route here.
+//! * **[`api`] — the unified request/response front door.** Build a
+//!   [`QuantRequest`] (vector / batch / matrix input; one-shot,
+//!   target-count or λ-sweep plan; precision lane; output form) and hand
+//!   it to [`Quantizer::run`]. Responses are codebook-first: each item
+//!   carries a [`Codebook`] (levels + `u32` indices) and materializes the
+//!   full vector only on demand. **This is the API for new code.**
+//! * [`quantize`] — the legacy one-shot wrapper (prepare + solve), now a
+//!   thin shim over the api core; kept source- and bitwise-compatible.
 //! * [`quantize_batch`] — many vectors, one method, fanned across scoped
 //!   threads; results are bitwise-identical to per-call [`quantize`].
 //! * [`quantize_sweep`] — a λ grid over ONE prepared input, amortizing the
@@ -33,9 +39,11 @@
 //! reference lane and an f32 fast lane ([`Precision`],
 //! [`quantize_f32`]/[`quantize_batch_f32`]/[`quantize_sweep_f32`],
 //! [`PreparedInputF32`]) that halves memory traffic on NN-weight-shaped
-//! workloads. See [`pipeline`] for lane selection and the precision
-//! contract.
+//! workloads; the request API keeps f32 results narrow until a caller
+//! explicitly widens. See [`pipeline`] for lane selection and the
+//! precision contract.
 
+pub mod api;
 pub mod cluster_ls;
 pub mod codebook;
 pub mod hard_sigmoid;
@@ -51,11 +59,13 @@ pub mod types;
 pub mod unique;
 pub mod vmatrix;
 
+pub use api::{Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer};
+pub use codebook::{Codebook, CodebookF32};
 pub use pipeline::{
     quantize_batch, quantize_batch_f32, quantize_f32, quantize_prepared, quantize_prepared_f32,
     quantize_sweep, quantize_sweep_f32, quantize_sweep_f32_with, quantize_sweep_with,
-    quantize_timed, solver_for, PreparedInput, PreparedInputF32, QuantSolver, StageTimings,
-    SweepState,
+    quantize_timed, solver_for, LaneSolve, PreparedInput, PreparedInputF32, QuantSolver,
+    StageTimings, SweepState,
 };
 pub use types::{
     Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputF32, QuantOutputT,
@@ -63,27 +73,23 @@ pub use types::{
 
 use crate::Result;
 
-/// Quantize `w` with the chosen method. This is the library's main entry
-/// point; the coordinator's native engine and the CLI both route here. It
-/// is a thin one-shot over the staged pipeline: prepare, then solve.
+/// Quantize `w` with the chosen method: the historical one-shot entry
+/// point the coordinator's native engine and the CLI route through.
 ///
 /// [`QuantOptions::precision`] selects the lane: the default `F64` is the
 /// bitwise-stable reference path; `F32` narrows the input once, runs the
 /// whole pipeline in single precision (the NN-weight fast path) and widens
 /// the output at the end. Callers holding f32 data should use
 /// [`quantize_f32`] directly and skip both conversions.
+///
+/// **Legacy**: thin shim over the [`api`] core ([`Quantizer::run`] with a
+/// single-vector one-shot request), bitwise-identical to the pre-redesign
+/// implementation. New code should build a [`QuantRequest`] — it avoids
+/// the slice copy (owned/shared inputs) and returns the compact
+/// codebook-first response.
 pub fn quantize(w: &[f64], method: QuantMethod, opts: &QuantOptions) -> Result<QuantOutput> {
-    match opts.precision {
-        Precision::F64 => {
-            let prep = PreparedInput::new(w)?;
-            quantize_prepared(&prep, method, opts)
-        }
-        Precision::F32 => {
-            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
-            let prep = PreparedInputF32::from_vec(narrow)?;
-            Ok(quantize_prepared_f32(&prep, method, opts)?.widen())
-        }
-    }
+    Ok(api::run_shared_f64(std::sync::Arc::from(w), method, opts, OutputForm::Codebook)?
+        .into_output64())
 }
 
 #[cfg(test)]

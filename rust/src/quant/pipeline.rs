@@ -23,6 +23,15 @@
 //! * [`quantize_timed`] — the coordinator's entry point, reporting
 //!   per-stage wall times ([`StageTimings`]) for the metrics surface.
 //!
+//! Since the request/response redesign, every entry point above is a
+//! **legacy shim** over the unified front door in [`super::api`]
+//! ([`super::api::Quantizer`]): this module keeps the solver
+//! implementations, the method→solver table, [`PreparedInput`] and the
+//! scoped-thread batch executor, while the api module owns request
+//! dispatch and the codebook-first finalize. The shims are
+//! regression-tested bitwise-identical to their pre-redesign outputs
+//! (`tests/api_equivalence.rs`).
+//!
 //! ## Precision lanes
 //!
 //! The pipeline is generic over the element precision
@@ -55,8 +64,9 @@
 //! ([`lasso::Workspace`]) so a λ path allocates its solve buffers once,
 //! not per grid point.
 
+use super::api::{self, OutputForm};
 use super::types::{
-    Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputF32, QuantOutputT,
+    QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputF32, QuantOutputT,
 };
 use super::unique::UniqueDecomp;
 use super::vmatrix::VBasis;
@@ -69,7 +79,7 @@ use crate::linalg::scalar::Scalar;
 use crate::linalg::stats::distinct_count_exact;
 use crate::Result;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// The prepare-stage product: everything a solver needs that depends only
 /// on the input vector, not on the method or its options. Generic over the
@@ -196,39 +206,19 @@ impl<T: Scalar> PreparedInput<T> {
     /// the O(n log n) clone-and-sort with an O(m log m) one. The l2 loss is
     /// still accumulated over the full vector in input order, so f64
     /// results stay bitwise-identical.
+    ///
+    /// Since the request/response redesign this is a thin wrapper over the
+    /// codebook-first compact finalize (one implementation, not two):
+    /// build the codebook, then materialize. The regression anchor against
+    /// the historical full-vector arithmetic is `types::finalize`
+    /// (`finish_level_space_matches_full_vector_finalize`).
     pub fn finish(
         &self,
         level_values: &[T],
         clamp: Option<(f64, f64)>,
         diag: QuantDiag,
     ) -> Result<QuantOutputT<T>> {
-        let mut lv = level_values.to_vec();
-        let mut clamped = 0usize;
-        if let Some((lo, hi)) = clamp {
-            let (lo, hi) = (T::from_f64(lo), T::from_f64(hi));
-            for (v, &c) in lv.iter_mut().zip(&self.unique.counts) {
-                // Mirrors hard_sigmoid semantics: only strictly
-                // out-of-range values move (and count, once per original
-                // occurrence).
-                if *v < lo {
-                    *v = lo;
-                    clamped += c;
-                } else if *v > hi {
-                    *v = hi;
-                    clamped += c;
-                }
-            }
-        }
-        let values = self.unique.recover(&lv)?;
-        let mut l2_loss = 0.0f64;
-        for (o, q) in self.original.iter().zip(&values) {
-            let d = (*o - *q).to_f64();
-            l2_loss += d * d;
-        }
-        let mut levels = lv;
-        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        levels.dedup();
-        Ok(QuantOutputT { values, levels, l2_loss, clamped, diag })
+        Ok(api::finish_compact(self, level_values, clamp, diag)?.into_output())
     }
 }
 
@@ -349,6 +339,66 @@ pub trait QuantSolver: Sync {
         let (_, wide) = state.widened.as_ref().expect("widened cache just filled");
         let (levels, diag) = self.solve(wide, opts)?;
         Ok((levels.iter().map(|&x| x as f32).collect(), diag))
+    }
+}
+
+/// Static lane dispatch for generic pipeline code: maps an element type
+/// to the matching concrete [`QuantSolver`] lane methods, so the request
+/// front door ([`super::api`]) and the sweep core are written once over
+/// `T` instead of once per precision lane.
+pub trait LaneSolve: Scalar {
+    /// Solve over a prepared input on this lane.
+    fn lane_solve(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<Self>,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<Self>, QuantDiag)>;
+
+    /// One λ-path step on this lane (warm-start-capable solvers reuse
+    /// `state` between grid points).
+    fn lane_solve_path_step(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<Self>,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<Self>, QuantDiag)>;
+}
+
+impl LaneSolve for f64 {
+    fn lane_solve(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<f64>,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        solver.solve(prep, opts)
+    }
+
+    fn lane_solve_path_step(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<f64>,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f64>, QuantDiag)> {
+        solver.solve_path_step(prep, opts, state)
+    }
+}
+
+impl LaneSolve for f32 {
+    fn lane_solve(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<f32>,
+        opts: &QuantOptions,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        solver.solve_f32(prep, opts)
+    }
+
+    fn lane_solve_path_step(
+        solver: &dyn QuantSolver,
+        prep: &PreparedInput<f32>,
+        opts: &QuantOptions,
+        state: &mut SweepState,
+    ) -> Result<(Vec<f32>, QuantDiag)> {
+        solver.solve_path_step_f32(prep, opts, state)
     }
 }
 
@@ -943,39 +993,47 @@ pub fn solver_for(method: QuantMethod) -> &'static dyn QuantSolver {
 }
 
 // ---------------------------------------------------------------------
-// Pipeline entry points
+// Pipeline entry points (legacy shims over the request-API core)
 // ---------------------------------------------------------------------
 
 /// Solve stage only: quantize a prepared input with the chosen method.
+///
+/// **Legacy**: thin shim over the [`super::api`] core; prefer
+/// [`super::api::Quantizer`] for new code. Results are bitwise-identical
+/// to the pre-redesign implementation.
 pub fn quantize_prepared(
     prep: &PreparedInput,
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<QuantOutput> {
-    let (levels, diag) = solver_for(method).solve(prep, opts)?;
-    prep.finish(&levels, opts.clamp, diag)
+    Ok(api::run_prepared_core(prep, method, opts, OutputForm::Codebook, Duration::ZERO)?
+        .into_output())
 }
 
 /// Solve stage only, f32 lane: quantize a single-precision prepared input.
+///
+/// **Legacy**: thin shim over the [`super::api`] core.
 pub fn quantize_prepared_f32(
     prep: &PreparedInputF32,
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<QuantOutputF32> {
-    let (levels, diag) = solver_for(method).solve_f32(prep, opts)?;
-    prep.finish(&levels, opts.clamp, diag)
+    Ok(api::run_prepared_core(prep, method, opts, OutputForm::Codebook, Duration::ZERO)?
+        .into_output())
 }
 
 /// One-shot f32-native quantize: prepare + solve in single precision,
 /// returning an f32 output (no widening pass). The f64 API's
 /// [`QuantOptions::precision`] routes through this lane and widens.
+///
+/// **Legacy**: thin shim over the [`super::api`] core; prefer
+/// [`super::api::QuantRequest::vector_f32`] for new code.
 pub fn quantize_f32(
     w: &[f32],
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<QuantOutputF32> {
-    let prep = PreparedInput::new(w)?;
-    quantize_prepared_f32(&prep, method, opts)
+    Ok(api::run_shared_f32(Arc::from(w), method, opts, OutputForm::Codebook)?.into_output())
 }
 
 /// Per-stage wall times of one pipeline run (coordinator metrics).
@@ -990,6 +1048,9 @@ pub struct StageTimings {
 
 /// One-shot quantize that reports per-stage timings. Honors
 /// [`QuantOptions::precision`] like [`quantize`](super::quantize).
+///
+/// **Legacy**: thin shim over the [`super::api`] core, which carries the
+/// same timings on every [`super::api::QuantItem`].
 pub fn quantize_timed(
     w: &[f64],
     method: QuantMethod,
@@ -1000,43 +1061,31 @@ pub fn quantize_timed(
 
 /// [`quantize_timed`] over an owned vector: the prepared input takes the
 /// buffer as-is instead of copying it (the coordinator's serve path).
+///
+/// **Legacy**: thin shim over the [`super::api`] core.
 pub fn quantize_timed_vec(
     w: Vec<f64>,
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<(QuantOutput, StageTimings)> {
-    match opts.precision {
-        Precision::F64 => {
-            let t0 = Instant::now();
-            let prep = PreparedInput::from_vec(w)?;
-            let prepare = t0.elapsed();
-            let t1 = Instant::now();
-            let out = quantize_prepared(&prep, method, opts)?;
-            let solve = t1.elapsed();
-            Ok((out, StageTimings { prepare, solve }))
-        }
-        Precision::F32 => {
-            let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
-            quantize_timed_f32_vec(narrow, method, opts)
-        }
-    }
+    let item = api::run_shared_f64(Arc::from(w), method, opts, OutputForm::Codebook)?;
+    let timings = item.timings();
+    Ok((item.into_output64(), timings))
 }
 
 /// Timed quantize of an owned f32 payload on the f32 lane; the output is
 /// widened for the coordinator's f64 result surface. Narrowing never
 /// happens here — the payload is already single precision.
+///
+/// **Legacy**: thin shim over the [`super::api`] core.
 pub fn quantize_timed_f32_vec(
     w: Vec<f32>,
     method: QuantMethod,
     opts: &QuantOptions,
 ) -> Result<(QuantOutput, StageTimings)> {
-    let t0 = Instant::now();
-    let prep = PreparedInput::from_vec(w)?;
-    let prepare = t0.elapsed();
-    let t1 = Instant::now();
-    let out = quantize_prepared_f32(&prep, method, opts)?.widen();
-    let solve = t1.elapsed();
-    Ok((out, StageTimings { prepare, solve }))
+    let item = api::run_shared_f32(Arc::from(w), method, opts, OutputForm::Codebook)?;
+    let timings = item.timings;
+    Ok((item.into_output().widen(), timings))
 }
 
 /// How many threads a batch of `n` independent inputs should fan across.
@@ -1046,9 +1095,9 @@ fn batch_threads(n: usize) -> usize {
 }
 
 /// Shared scoped-thread fan-out for both precision lanes' batch entry
-/// points: apply `f` to every input, in input order, chunked across
-/// [`batch_threads`] workers.
-fn batch_map<In, Out, F>(inputs: &[In], f: F) -> Vec<Out>
+/// points (and the request API's batch/matrix fan-out): apply `f` to
+/// every input, in input order, chunked across [`batch_threads`] workers.
+pub(crate) fn batch_map<In, Out, F>(inputs: &[In], f: F) -> Vec<Out>
 where
     In: Sync,
     Out: Send,
@@ -1082,6 +1131,10 @@ where
 /// back in input order and are bitwise-identical to per-call
 /// [`quantize`](super::quantize) (including its
 /// [`QuantOptions::precision`] routing).
+///
+/// **Legacy**: delegates to the [`super::api`] core through
+/// [`quantize`](super::quantize); prefer [`super::api::QuantRequest::batch`]
+/// for new code.
 pub fn quantize_batch(
     inputs: &[Vec<f64>],
     method: QuantMethod,
@@ -1093,6 +1146,10 @@ pub fn quantize_batch(
 /// f32-native batch quantize: many single-precision vectors fanned across
 /// scoped threads, each through the f32 lane end to end. Results are
 /// bitwise-identical to per-call [`quantize_f32`].
+///
+/// **Legacy**: delegates to the [`super::api`] core through
+/// [`quantize_f32`]; prefer [`super::api::QuantRequest::batch_f32`] for
+/// new code.
 pub fn quantize_batch_f32(
     inputs: &[Vec<f32>],
     method: QuantMethod,
@@ -1105,6 +1162,9 @@ pub fn quantize_batch_f32(
 /// (lasso-family and iterative solvers reuse the previous α). `base`
 /// supplies every option except `lambda1`, which each grid point
 /// overrides.
+///
+/// **Legacy**: thin shim over the [`super::api`] sweep core; prefer
+/// [`super::api::QuantRequest::sweep`] for new code.
 pub fn quantize_sweep(
     prep: &PreparedInput,
     method: QuantMethod,
@@ -1120,6 +1180,8 @@ pub fn quantize_sweep(
 /// The lane is fixed by the prepared input's own precision (f64 here);
 /// `base.precision` is ignored — use [`quantize_sweep_f32`] with a
 /// [`PreparedInputF32`] for the single-precision lane.
+///
+/// **Legacy**: thin shim over the [`super::api`] sweep core.
 pub fn quantize_sweep_with(
     prep: &PreparedInput,
     method: QuantMethod,
@@ -1127,22 +1189,24 @@ pub fn quantize_sweep_with(
     base: &QuantOptions,
     warm_start: bool,
 ) -> Result<Vec<QuantOutput>> {
-    let solver = solver_for(method);
-    let mut state = SweepState::default();
-    let mut outs = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
-        let opts = QuantOptions { lambda1: lambda, ..base.clone() };
-        let (levels, diag) = if warm_start {
-            solver.solve_path_step(prep, &opts, &mut state)?
-        } else {
-            solver.solve(prep, &opts)?
-        };
-        outs.push(prep.finish(&levels, opts.clamp, diag)?);
-    }
-    Ok(outs)
+    Ok(api::sweep_prepared_core(
+        prep,
+        method,
+        lambdas,
+        base,
+        warm_start,
+        OutputForm::Codebook,
+        Duration::ZERO,
+    )?
+    .into_iter()
+    .map(api::QuantItem::into_output)
+    .collect())
 }
 
 /// f32-lane λ sweep with warm starts (see [`quantize_sweep`]).
+///
+/// **Legacy**: thin shim over the [`super::api`] sweep core; prefer
+/// [`super::api::QuantRequest::vector_f32`] + `.sweep(..)` for new code.
 pub fn quantize_sweep_f32(
     prep: &PreparedInputF32,
     method: QuantMethod,
@@ -1156,6 +1220,8 @@ pub fn quantize_sweep_f32(
 /// bitwise-identical to per-λ [`quantize_f32`] (minus the repeated
 /// prepare). The λ grid itself stays f64 so both lanes walk the same
 /// penalty schedule.
+///
+/// **Legacy**: thin shim over the [`super::api`] sweep core.
 pub fn quantize_sweep_f32_with(
     prep: &PreparedInputF32,
     method: QuantMethod,
@@ -1163,25 +1229,25 @@ pub fn quantize_sweep_f32_with(
     base: &QuantOptions,
     warm_start: bool,
 ) -> Result<Vec<QuantOutputF32>> {
-    let solver = solver_for(method);
-    let mut state = SweepState::default();
-    let mut outs = Vec::with_capacity(lambdas.len());
-    for &lambda in lambdas {
-        let opts = QuantOptions { lambda1: lambda, ..base.clone() };
-        let (levels, diag) = if warm_start {
-            solver.solve_path_step_f32(prep, &opts, &mut state)?
-        } else {
-            solver.solve_f32(prep, &opts)?
-        };
-        outs.push(prep.finish(&levels, opts.clamp, diag)?);
-    }
-    Ok(outs)
+    Ok(api::sweep_prepared_core(
+        prep,
+        method,
+        lambdas,
+        base,
+        warm_start,
+        OutputForm::Codebook,
+        Duration::ZERO,
+    )?
+    .into_iter()
+    .map(api::QuantItem::into_output)
+    .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::rng::Pcg32;
+    use crate::quant::types::Precision;
 
     fn clustered(n: usize, seed: u64) -> Vec<f64> {
         let mut rng = Pcg32::seeded(seed);

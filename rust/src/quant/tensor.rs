@@ -7,9 +7,9 @@
 //! (per-output-channel codebooks), and the natural first step toward the
 //! paper's stated future work on higher-dimensional quantization.
 
-use super::{quantize, QuantMethod, QuantOptions, QuantOutput};
+use super::{api, QuantMethod, QuantOptions, QuantOutput};
 use crate::linalg::matrix::Matrix;
-use crate::{Error, Result};
+use crate::Result;
 
 /// How to group matrix entries into quantization problems.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -36,39 +36,42 @@ pub struct MatrixQuant {
     pub outputs: Vec<QuantOutput>,
 }
 
-/// Quantize a matrix with the chosen method and grouping.
+/// Quantize a matrix with the chosen method and grouping. Groups are
+/// independent, so per-row and per-column runs fan across the scoped
+/// batch executor (the same fan-out [`super::quantize_batch`] uses)
+/// instead of a serial loop; results are identical to quantizing each
+/// group one by one.
+///
+/// **Legacy**: thin shim over the [`super::api`] core; prefer
+/// [`super::api::QuantRequest::matrix`] for new code — it returns the
+/// compact per-group codebooks without materializing a full matrix.
 pub fn quantize_matrix(
     m: &Matrix,
     method: QuantMethod,
     opts: &QuantOptions,
     grouping: Grouping,
 ) -> Result<MatrixQuant> {
-    if m.rows() == 0 || m.cols() == 0 {
-        return Err(Error::InvalidInput("quantize_matrix: empty matrix".into()));
+    let groups = api::matrix_groups(m, grouping)?;
+    let items = api::batch_core_shared_f64(&groups, method, opts, api::OutputForm::Codebook);
+    // Propagate the first failing group's error in group order, matching
+    // the historical serial loop's early return.
+    let mut outputs = Vec::with_capacity(items.len());
+    for item in items {
+        outputs.push(item?.into_output64());
     }
     let mut out = Matrix::zeros(m.rows(), m.cols());
-    let mut outputs = Vec::new();
     match grouping {
-        Grouping::PerTensor => {
-            let q = quantize(m.data(), method, opts)?;
-            out.data_mut().copy_from_slice(&q.values);
-            outputs.push(q);
-        }
+        Grouping::PerTensor => out.data_mut().copy_from_slice(&outputs[0].values),
         Grouping::PerRow => {
-            for i in 0..m.rows() {
-                let q = quantize(m.row(i), method, opts)?;
+            for (i, q) in outputs.iter().enumerate() {
                 out.row_mut(i).copy_from_slice(&q.values);
-                outputs.push(q);
             }
         }
         Grouping::PerColumn => {
-            for j in 0..m.cols() {
-                let col = m.col(j);
-                let q = quantize(&col, method, opts)?;
+            for (j, q) in outputs.iter().enumerate() {
                 for i in 0..m.rows() {
                     out[(i, j)] = q.values[i];
                 }
-                outputs.push(q);
             }
         }
     }
@@ -81,6 +84,7 @@ pub fn quantize_matrix(
 mod tests {
     use super::*;
     use crate::data::rng::Pcg32;
+    use crate::quant::quantize;
 
     fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
         let mut rng = Pcg32::seeded(seed);

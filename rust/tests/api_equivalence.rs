@@ -1,0 +1,332 @@
+//! Bitwise-equivalence suite for the request/response front door: every
+//! legacy entry point is a shim over the `quant::api` core, and this file
+//! proves each one produces outputs identical to a direct
+//! `Quantizer::run` — values (`==`, which also pins the `-0.0`/`0.0`
+//! fold), levels, loss *bits*, clamp counts and diagnostics — plus the
+//! codebook round-trip property on both precision lanes.
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::linalg::matrix::Matrix;
+use sqlsq::quant::tensor::{quantize_matrix, Grouping};
+use sqlsq::quant::{
+    self, Codebook, Item, OutputForm, Precision, QuantMethod, QuantOptions, QuantOutput,
+    QuantRequest, Quantizer,
+};
+
+fn clustered(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut v = Vec::with_capacity(n);
+    for i in 0..n {
+        let center = [0.1, 0.35, 0.6, 0.9][i % 4];
+        // Round so repeats occur (multiplicities > 1).
+        v.push(((center + rng.normal_with(0.0, 0.02)) * 200.0).round() / 200.0);
+    }
+    v
+}
+
+fn narrowed(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+fn test_opts() -> QuantOptions {
+    QuantOptions { lambda1: 0.01, lambda2: 4e-5, target_values: 4, ..Default::default() }
+}
+
+fn assert_outputs_match(got: &QuantOutput, want: &QuantOutput, ctx: &str) {
+    assert_eq!(got.values, want.values, "{ctx}: values");
+    assert_eq!(got.levels, want.levels, "{ctx}: levels");
+    assert_eq!(got.l2_loss.to_bits(), want.l2_loss.to_bits(), "{ctx}: loss bits");
+    assert_eq!(got.clamped, want.clamped, "{ctx}: clamp count");
+    assert_eq!(got.diag.nnz, want.diag.nnz, "{ctx}: nnz");
+    assert_eq!(got.diag.iterations, want.diag.iterations, "{ctx}: iterations");
+}
+
+#[test]
+fn legacy_quantize_matches_run_for_every_method() {
+    let data = clustered(80, 1);
+    for method in QuantMethod::ALL {
+        let opts = test_opts();
+        let legacy = quant::quantize(&data, method, &opts).unwrap();
+        let req = QuantRequest::slice(&data).method(method).options(opts);
+        let via_run =
+            Quantizer::new().run(&req).unwrap().into_single().unwrap().into_output64();
+        assert_outputs_match(&via_run, &legacy, &format!("{method:?}"));
+    }
+}
+
+#[test]
+fn legacy_quantize_with_clamp_matches_run() {
+    let data = clustered(60, 2);
+    let opts = QuantOptions { clamp: Some((0.05, 0.85)), ..test_opts() };
+    let legacy = quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+    let req = QuantRequest::slice(&data).method(QuantMethod::KMeans).options(opts);
+    let via_run = Quantizer::new().run(&req).unwrap().into_single().unwrap().into_output64();
+    assert_outputs_match(&via_run, &legacy, "clamped kmeans");
+    assert!(legacy.clamped > 0, "clamp should engage on this data");
+}
+
+#[test]
+fn legacy_f32_precision_option_matches_run() {
+    let data = clustered(70, 3);
+    for method in [QuantMethod::L1, QuantMethod::L1LeastSquare, QuantMethod::KMeans] {
+        let opts = QuantOptions { precision: Precision::F32, ..test_opts() };
+        let legacy = quant::quantize(&data, method, &opts).unwrap();
+        let req = QuantRequest::slice(&data).method(method).options(opts);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        assert_eq!(item.precision(), Precision::F32, "{method:?}: stays narrow");
+        assert_outputs_match(&item.into_output64(), &legacy, &format!("{method:?} f32"));
+    }
+}
+
+#[test]
+fn legacy_quantize_f32_matches_run() {
+    let data32 = narrowed(&clustered(60, 4));
+    for method in [QuantMethod::L1LeastSquare, QuantMethod::ClusterLs] {
+        let opts = test_opts();
+        let legacy = quant::quantize_f32(&data32, method, &opts).unwrap();
+        let req = QuantRequest::slice_f32(&data32).method(method).options(opts);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let got = item.as_f32().expect("f32 lane").clone();
+        assert_eq!(got.codebook.decode(), legacy.values, "{method:?}: values");
+        assert_eq!(got.codebook.levels, legacy.levels, "{method:?}: levels");
+        assert_eq!(got.l2_loss.to_bits(), legacy.l2_loss.to_bits(), "{method:?}: loss");
+    }
+}
+
+#[test]
+fn legacy_batch_matches_run_including_bad_slots() {
+    let inputs = vec![clustered(50, 5), vec![], clustered(50, 6), clustered(30, 7)];
+    let opts = test_opts();
+    let legacy = quant::quantize_batch(&inputs, QuantMethod::KMeans, &opts);
+    let req = QuantRequest::batch(inputs.clone()).method(QuantMethod::KMeans).options(opts);
+    let via_run = Quantizer::new().run(&req).unwrap().into_outputs64();
+    assert_eq!(legacy.len(), via_run.len());
+    for (i, (l, r)) in legacy.iter().zip(&via_run).enumerate() {
+        match (l, r) {
+            (Ok(a), Ok(b)) => assert_outputs_match(b, a, &format!("slot {i}")),
+            (Err(_), Err(_)) => {}
+            other => panic!("slot {i}: ok/err mismatch: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn legacy_batch_f32_matches_run() {
+    let inputs32: Vec<Vec<f32>> =
+        vec![narrowed(&clustered(40, 8)), narrowed(&clustered(40, 9))];
+    let opts = QuantOptions { lambda1: 0.02, ..Default::default() };
+    let legacy = quant::quantize_batch_f32(&inputs32, QuantMethod::L1LeastSquare, &opts);
+    let req = QuantRequest::batch_f32(inputs32.clone())
+        .method(QuantMethod::L1LeastSquare)
+        .options(opts);
+    let resp = Quantizer::new().run(&req).unwrap();
+    assert_eq!(resp.len(), legacy.len());
+    for (i, (l, r)) in legacy.iter().zip(&resp.items).enumerate() {
+        let l = l.as_ref().unwrap();
+        let item = r.as_ref().unwrap().as_f32().expect("f32 lane");
+        assert_eq!(item.codebook.decode(), l.values, "slot {i}");
+        assert_eq!(item.l2_loss.to_bits(), l.l2_loss.to_bits(), "slot {i}");
+    }
+}
+
+#[test]
+fn legacy_sweep_matches_run_warm_and_cold() {
+    let data = clustered(64, 10);
+    let lambdas = vec![1e-4, 1e-3, 1e-2, 1e-1];
+    for method in [QuantMethod::L1, QuantMethod::L1LeastSquare, QuantMethod::IterativeL1] {
+        for warm in [true, false] {
+            let base = QuantOptions { target_values: 4, ..Default::default() };
+            let prep = quant::PreparedInput::new(&data).unwrap();
+            let legacy =
+                quant::quantize_sweep_with(&prep, method, &lambdas, &base, warm).unwrap();
+            let req = QuantRequest::slice(&data).method(method).options(base);
+            let req =
+                if warm { req.sweep(lambdas.clone()) } else { req.sweep_cold(lambdas.clone()) };
+            let outs: Vec<QuantOutput> = Quantizer::new()
+                .run(&req)
+                .unwrap()
+                .into_outputs64()
+                .into_iter()
+                .map(|r| r.unwrap())
+                .collect();
+            assert_eq!(outs.len(), legacy.len());
+            for (i, (got, want)) in outs.iter().zip(&legacy).enumerate() {
+                assert_outputs_match(got, want, &format!("{method:?} warm={warm} λ#{i}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_f32_sweep_matches_run() {
+    let data32 = narrowed(&clustered(60, 11));
+    let lambdas = vec![1e-3, 1e-2];
+    let base = QuantOptions { target_values: 4, ..Default::default() };
+    let prep = quant::PreparedInputF32::new(&data32).unwrap();
+    let legacy = quant::quantize_sweep_f32(&prep, QuantMethod::L1LeastSquare, &lambdas, &base)
+        .unwrap();
+    let req = QuantRequest::slice_f32(&data32)
+        .method(QuantMethod::L1LeastSquare)
+        .options(base)
+        .sweep(lambdas.clone());
+    let resp = Quantizer::new().run(&req).unwrap();
+    assert_eq!(resp.len(), legacy.len());
+    for (r, want) in resp.items.iter().zip(&legacy) {
+        let item = r.as_ref().unwrap().as_f32().expect("f32 lane");
+        assert_eq!(item.codebook.decode(), want.values);
+        assert_eq!(item.l2_loss.to_bits(), want.l2_loss.to_bits());
+    }
+}
+
+#[test]
+fn legacy_quantize_matrix_matches_run_and_serial_loop() {
+    let mut rng = Pcg32::seeded(12);
+    let m = Matrix::from_fn(6, 24, |_, _| (rng.normal_with(0.0, 1.0) * 50.0).round() / 50.0);
+    for grouping in [Grouping::PerTensor, Grouping::PerRow, Grouping::PerColumn] {
+        let opts = QuantOptions { target_values: 3, ..Default::default() };
+        let legacy = quantize_matrix(&m, QuantMethod::KMeans, &opts, grouping).unwrap();
+
+        // vs the request front door.
+        let req = QuantRequest::matrix(m.clone(), grouping)
+            .method(QuantMethod::KMeans)
+            .options(opts.clone());
+        let items = Quantizer::new().run(&req).unwrap().into_outputs64();
+        assert_eq!(items.len(), legacy.outputs.len(), "{grouping:?}");
+        for (got, want) in items.iter().zip(&legacy.outputs) {
+            assert_outputs_match(got.as_ref().unwrap(), want, &format!("{grouping:?}"));
+        }
+
+        // vs the pre-redesign serial loop semantics: one quantize() per
+        // group, in group order (pins that the batch fan-out changed
+        // nothing).
+        let groups: Vec<Vec<f64>> = match grouping {
+            Grouping::PerTensor => vec![m.data().to_vec()],
+            Grouping::PerRow => (0..m.rows()).map(|i| m.row(i).to_vec()).collect(),
+            Grouping::PerColumn => (0..m.cols()).map(|j| m.col(j)).collect(),
+        };
+        assert_eq!(groups.len(), legacy.outputs.len());
+        for (g, want) in groups.iter().zip(&legacy.outputs) {
+            let serial = quant::quantize(g, QuantMethod::KMeans, &opts).unwrap();
+            assert_eq!(serial.values, want.values, "{grouping:?}: serial reference");
+            assert_eq!(serial.l2_loss.to_bits(), want.l2_loss.to_bits(), "{grouping:?}");
+        }
+    }
+}
+
+#[test]
+fn legacy_quantize_timed_matches_untimed() {
+    let data = clustered(60, 13);
+    let opts = test_opts();
+    let (out, t) = quant::quantize_timed(&data, QuantMethod::ClusterLs, &opts).unwrap();
+    let want = quant::quantize(&data, QuantMethod::ClusterLs, &opts).unwrap();
+    assert_outputs_match(&out, &want, "timed");
+    assert!(t.prepare + t.solve < std::time::Duration::from_secs(60));
+}
+
+#[test]
+fn codebook_roundtrip_property_both_lanes() {
+    // encode → materialize == values, across seeds and methods, f64 + f32.
+    for seed in 0..6u64 {
+        let data = clustered(50 + 7 * seed as usize, 100 + seed);
+        let method = [
+            QuantMethod::KMeans,
+            QuantMethod::L1LeastSquare,
+            QuantMethod::ClusterLs,
+        ][seed as usize % 3];
+        let opts = test_opts();
+
+        // f64 lane.
+        let want = quant::quantize(&data, method, &opts).unwrap();
+        let req = QuantRequest::slice(&data).method(method).options(opts.clone());
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let q = item.as_f64().expect("f64 lane");
+        assert!(q.values().is_none(), "codebook form stays compact");
+        assert_eq!(q.materialize(), want.values, "seed {seed}: decode == values");
+        assert_eq!(q.codebook.levels, want.levels, "seed {seed}");
+        // Re-encoding the materialized vector reproduces the codebook.
+        let re = Codebook::from_values(&q.materialize()).unwrap();
+        assert_eq!(re.levels, q.codebook.levels, "seed {seed}: re-encode levels");
+        assert_eq!(re.indices, q.codebook.indices, "seed {seed}: re-encode indices");
+
+        // f32 lane.
+        let data32 = narrowed(&data);
+        let want32 = quant::quantize_f32(&data32, method, &opts).unwrap();
+        let req32 = QuantRequest::slice_f32(&data32).method(method).options(opts);
+        let item32 = Quantizer::new().run(&req32).unwrap().into_single().unwrap();
+        let q32 = item32.as_f32().expect("f32 lane");
+        assert_eq!(q32.materialize(), want32.values, "seed {seed}: f32 decode");
+        let re32 = Codebook::from_values(&q32.materialize()).unwrap();
+        assert_eq!(re32.indices, q32.codebook.indices, "seed {seed}: f32 re-encode");
+    }
+}
+
+#[test]
+fn values_output_form_is_eager_and_identical() {
+    let data = clustered(40, 20);
+    let req = QuantRequest::vector(data.clone())
+        .method(QuantMethod::KMeans)
+        .target_count(4)
+        .output(OutputForm::Values);
+    let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+    match &item {
+        Item::F64(q) => {
+            let eager = q.values().expect("values form is eager").to_vec();
+            assert_eq!(eager, q.codebook.decode());
+        }
+        Item::F32(_) => panic!("f64 input on the default lane"),
+    }
+}
+
+#[test]
+fn coordinator_legacy_submits_match_request_front_door() {
+    use sqlsq::config::{Config, Engine};
+    use sqlsq::coordinator::Coordinator;
+
+    let cfg = Config {
+        workers: 2,
+        queue_capacity: 64,
+        max_batch: 8,
+        batch_wait_us: 100,
+        engine: Engine::Native,
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg).unwrap();
+    let data = clustered(50, 30);
+    let opts = QuantOptions { target_values: 4, seed: 3, ..Default::default() };
+
+    let direct = quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
+    let legacy = c
+        .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+        .unwrap()
+        .outcome
+        .unwrap();
+    let via_request = c
+        .quantize_blocking_request(
+            QuantRequest::vector(data.clone()).method(QuantMethod::KMeans).options(opts.clone()),
+        )
+        .unwrap()
+        .outcome
+        .unwrap();
+    assert_outputs_match(&legacy, &direct, "legacy submit");
+    assert_outputs_match(&via_request, &direct, "request submit");
+
+    // f32 payloads: legacy f32 submit == request with an f32 vector.
+    let data32 = narrowed(&data);
+    let opts32 = QuantOptions { lambda1: 0.05, ..Default::default() };
+    let legacy32 = c
+        .quantize_blocking_f32(data32.clone(), QuantMethod::L1LeastSquare, opts32.clone())
+        .unwrap()
+        .outcome
+        .unwrap();
+    let via_request32 = c
+        .quantize_blocking_request(
+            QuantRequest::vector_f32(data32.clone())
+                .method(QuantMethod::L1LeastSquare)
+                .options(opts32),
+        )
+        .unwrap()
+        .outcome
+        .unwrap();
+    assert_outputs_match(&via_request32, &legacy32, "f32 request submit");
+    c.shutdown();
+}

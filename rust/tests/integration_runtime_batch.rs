@@ -293,7 +293,8 @@ fn f32_payloads_widen_defensively_on_the_runtime_lane() {
     let mut jobs = Vec::new();
     let mut rxs = Vec::new();
     for (i, method) in [QuantMethod::L1LeastSquare, QuantMethod::KMeans].iter().enumerate() {
-        let (job, rx) = raw_job(i as u64 + 1, Payload::F32(data32.clone()), *method, opts.clone());
+        let (job, rx) =
+            raw_job(i as u64 + 1, Payload::F32(data32.clone().into()), *method, opts.clone());
         jobs.push(job);
         rxs.push((method, rx));
     }
@@ -326,7 +327,7 @@ fn direct_serve_batch_runtime_fanout_is_bitwise_stable() {
         let mut jobs = Vec::new();
         let mut rxs = Vec::new();
         for (i, (data, method, opts)) in mix.iter().enumerate() {
-            let payload = Payload::F64(data.clone());
+            let payload = Payload::F64(data.clone().into());
             let (job, rx) = raw_job(i as u64 + 1, payload, *method, opts.clone());
             jobs.push(job);
             rxs.push(rx);
