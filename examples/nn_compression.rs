@@ -58,8 +58,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 QuantOptions { lambda1: lambda, ..Default::default() },
             )?;
             let out = res.outcome.map_err(|e| format!("layer {li}: {e}"))?;
+            // The coordinator returns the compact codebook; materialize at
+            // this edge to patch the layer.
+            let values = out.materialize();
             let (tr, te) =
-                workloads::accuracy_with_layer(&nn.mlp, li, &out.values, &nn.train, &nn.test)?;
+                workloads::accuracy_with_layer(&nn.mlp, li, &values, &nn.train, &nn.test)?;
             println!(
                 "{:<7} {:>10} {:>7} {:>9} {:>10.4} {:>10.4} {:>9}",
                 format!("L{li}"),
@@ -84,7 +87,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             QuantOptions { target_values: 32, ..Default::default() },
         )?;
         let out = res.outcome.map_err(|e| format!("layer {li}: {e}"))?;
-        compressed.set_layer_weights(li, &out.values)?;
+        println!("  L{li}: {}", out.compression().summary());
+        compressed.set_layer_weights(li, &out.materialize())?;
     }
     let tr = sqlsq::nn::train::evaluate(&compressed, &nn.train)?;
     let te = sqlsq::nn::train::evaluate(&compressed, &nn.test)?;

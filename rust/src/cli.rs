@@ -14,8 +14,8 @@
 use crate::config::{Config, Engine};
 use crate::coordinator::Coordinator;
 use crate::eval::{figures, workloads};
-use crate::jsonio::Json;
-use crate::quant::{self, QuantMethod, QuantOptions};
+use crate::jsonio::{self, Json};
+use crate::quant::{self, CompressionStats, QuantMethod, QuantOptions};
 use crate::runtime::BackendKind;
 use crate::{Error, Result};
 use std::collections::BTreeMap;
@@ -104,10 +104,12 @@ PRECISION: --precision f32 runs the native single-precision lane (native
 
 OUTPUT: --output codebook emits the compact wire format as JSON (a few
          shared levels + one small index per element — what a serving
-         edge should ship); --output values emits the full-length
-         vector(s). On quantize, any other value is treated as a file
-         path and written in the historical values format (the default
-         prints only the summary, exactly as before).
+         edge should ship), including a "stats" compression-accounting
+         object (bits/value, entropy, compact-vs-dense bytes; spec in
+         the jsonio module docs / README "Wire format"); --output values
+         emits the full-length vector(s). On quantize, any other value
+         is treated as a file path and written in the historical values
+         format (the default prints only the summary, exactly as before).
 
 BACKENDS: --runtime-backend pjrt executes AOT artifacts (make artifacts);
          shadow replays the kernels natively with runtime semantics — no
@@ -178,24 +180,6 @@ fn load_input(args: &Args) -> Result<Vec<f64>> {
     }
 }
 
-/// The compact wire format: `{"indices":[..],"levels":[..]}` plus any
-/// extra fields (e.g. the sweep's λ).
-fn codebook_json(cb: &quant::Codebook, extra: Vec<(&str, Json)>) -> Json {
-    let mut fields = extra;
-    fields.push(("levels", Json::Arr(cb.levels.iter().map(|&v| Json::Num(v)).collect())));
-    fields.push((
-        "indices",
-        Json::Arr(cb.indices.iter().map(|&i| Json::Num(i as f64)).collect()),
-    ));
-    Json::obj(fields)
-}
-
-fn values_json(values: &[f64], extra: Vec<(&str, Json)>) -> Json {
-    let mut fields = extra;
-    fields.push(("values", Json::Arr(values.iter().map(|&v| Json::Num(v)).collect())));
-    Json::obj(fields)
-}
-
 fn cmd_quantize(args: &Args) -> Result<()> {
     let method_id = args.flag("method").unwrap_or("l1_ls");
     let method = QuantMethod::from_id(method_id)
@@ -225,6 +209,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let n = data.len();
     let distinct_in = crate::linalg::stats::distinct_count_exact(&data);
     let precision = opts.precision;
+    let requested = opts.target_values;
     // One front door: a single-vector request through the Quantizer. The
     // owned input moves into the request — no slice copy — and the
     // response is codebook-first (full values only materialize below if
@@ -233,6 +218,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let req = quant::QuantRequest::vector(data).method(method).options(opts);
     let item = quant::Quantizer::new().run(&req)?.into_single()?;
     let dt = t0.elapsed();
+    let stats = item.compression(requested);
     println!("method            : {}", method.id());
     println!("precision         : {}", precision.id());
     println!("input length      : {n}");
@@ -242,13 +228,22 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("clamped values    : {}", item.clamped());
     println!("iterations        : {}", item.diag().iterations);
     println!("nnz / lambda1     : {} / {:.3e}", item.diag().nnz, item.diag().lambda1);
+    println!(
+        "bits/value        : {:.3} ({} bits/idx fixed, entropy {:.3})",
+        stats.bits_per_value, stats.bits_per_index, stats.index_entropy
+    );
+    println!(
+        "compact vs dense  : {} B vs {} B ({:.2}x)",
+        stats.compact_bytes, stats.dense_bytes, stats.byte_ratio
+    );
     println!("time              : {:?}", dt);
     match args.flag("output") {
         Some("codebook") => {
-            println!("{}", codebook_json(&item.codebook_f64(), Vec::new()).to_string());
+            let extra = vec![("stats", jsonio::stats_to_json(&stats))];
+            println!("{}", jsonio::codebook_to_json(&item.codebook_f64(), extra).to_string());
         }
         Some("values") => {
-            println!("{}", values_json(&item.materialize_f64(), Vec::new()).to_string());
+            println!("{}", jsonio::values_to_json(&item.materialize_f64(), Vec::new()).to_string());
         }
         Some(path) => {
             // Historical behavior: any other value is a file path for the
@@ -308,6 +303,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             quant::unique::UniqueDecomp::new(&narrow).map(|u| u.m()).unwrap_or(0)
         }
     };
+    let requested = opts.target_values;
     let req = quant::QuantRequest::vector(data).method(method).options(opts);
     let req = if warm { req.sweep(lambdas.clone()) } else { req.sweep_cold(lambdas.clone()) };
     let items: Vec<quant::Item> =
@@ -320,13 +316,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         if warm { "warm" } else { "cold" },
         precision.id(),
     );
-    println!("{:>12} {:>9} {:>14} {:>11}", "lambda1", "distinct", "l2_loss", "iterations");
+    println!(
+        "{:>12} {:>9} {:>14} {:>11} {:>9} {:>9}",
+        "lambda1", "distinct", "l2_loss", "iterations", "bits/val", "entropy"
+    );
     for (item, &lambda) in items.iter().zip(&lambdas) {
+        let stats = item.compression(requested);
         println!(
-            "{lambda:>12.4e} {:>9} {:>14.6e} {:>11}",
+            "{lambda:>12.4e} {:>9} {:>14.6e} {:>11} {:>9.3} {:>9.3}",
             item.distinct_values(),
             item.l2_loss(),
-            item.diag().iterations
+            item.diag().iterations,
+            stats.bits_per_value,
+            stats.index_entropy
         );
     }
     let t_prepare = items.first().map(|i| i.timings().prepare).unwrap_or_default();
@@ -334,12 +336,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     println!("prepare time      : {t_prepare:?} (once, amortized over the grid)");
     println!("solve time        : {t_solve:?} ({} solves)", items.len());
     if let Some(form) = output {
-        // Machine-readable wire format, one JSON object per λ.
+        // Machine-readable wire format (see `jsonio` / README "Wire
+        // format"), one JSON object per λ.
         for (item, &lambda) in items.iter().zip(&lambdas) {
-            let extra = vec![("lambda", Json::Num(lambda))];
             let json = match form {
-                "codebook" => codebook_json(&item.codebook_f64(), extra),
-                _ => values_json(&item.materialize_f64(), extra),
+                "codebook" => {
+                    let extra = vec![
+                        ("lambda", Json::Num(lambda)),
+                        ("stats", jsonio::stats_to_json(&item.compression(requested))),
+                    ];
+                    jsonio::codebook_to_json(&item.codebook_f64(), extra)
+                }
+                _ => jsonio::values_to_json(
+                    &item.materialize_f64(),
+                    vec![("lambda", Json::Num(lambda))],
+                ),
             };
             println!("{}", json.to_string());
         }
@@ -459,13 +470,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rxs.push(rx);
     }
     let mut ok = 0usize;
+    let mut stats: Vec<CompressionStats> = Vec::new();
     for rx in rxs {
-        if rx
-            .recv()
-            .map_err(|_| Error::Coordinator("worker dropped job".into()))?
-            .is_ok()
-        {
+        let res = rx.recv().map_err(|_| Error::Coordinator("worker dropped job".into()))?;
+        if let Ok(out) = &res.outcome {
             ok += 1;
+            // Results come back compact; the accounting is a cheap read
+            // off the codebook the worker already built.
+            stats.push(out.compression());
         }
     }
     let wall = t0.elapsed();
@@ -476,6 +488,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "throughput        : {:.1} jobs/s",
         jobs as f64 / wall.as_secs_f64()
     );
+    if let Some(agg) = CompressionStats::aggregate(stats.iter()) {
+        println!("compression       : {}", agg.summary());
+    }
     println!("metrics           : {}", snap.summary());
     Ok(())
 }

@@ -1,5 +1,26 @@
-//! Clustering substrates (S10–S13): the baselines the paper compares
-//! against, plus the exact 1-d DP k-means ablation.
+//! Clustering substrates (S10–S13): the baselines the paper's §4
+//! experiments compare the sparse-least-square quantizers against, plus
+//! two exact ablations. All of them operate on the **unique values** of
+//! the input (the prepare stage's decomposition), optionally weighted by
+//! multiplicity, and are surfaced as [`crate::quant::QuantMethod`]
+//! variants through the solver table in `quant::pipeline`:
+//!
+//! * [`kmeans`] — Lloyd's with k-means++ seeding and multi-restart
+//!   (the paper's principal baseline; `assign_sorted` is the shared
+//!   1-d nearest-centroid primitive).
+//! * [`gmm`] — 1-d Mixture-of-Gaussians via EM with variance flooring;
+//!   quantization assigns each value to its max-posterior mean.
+//! * [`data_transform`] — the data-transformation clustering of Azimi
+//!   et al. (2017), the paper's third baseline.
+//! * [`kmeans_dp`] — **exact** 1-d k-means by dynamic programming over
+//!   prefix sums (ablation: how far is Lloyd's from optimal).
+//! * [`agglomerative`] — bottom-up Ward merging (extension baseline).
+//! * [`fuzzy_cmeans`] — fuzzy c-means with hard final assignment
+//!   (extension baseline).
+//!
+//! The k-means partition is also the seed of the paper's Algorithm 3
+//! (`quant::cluster_ls`): cluster first, then solve the exact
+//! least-squares value per cluster.
 
 pub mod agglomerative;
 pub mod data_transform;

@@ -1,6 +1,19 @@
 //! Job types flowing through the coordinator.
+//!
+//! The serve path is **codebook-native**: a completed job's result
+//! ([`JobOutput`], inside [`JobResult::outcome`]) holds the compact
+//! lane-erased [`quant::Item`] — a [`Codebook`] of shared levels plus one
+//! `u32` index per element — not a materialized full-length vector. The
+//! heavy-traffic lane therefore moves O(n·u32 + k·levels) per job instead
+//! of O(n·f64); full vectors exist only where an edge explicitly asks
+//! ([`JobOutput::materialize`] / [`JobOutput::into_output64`], an O(n)
+//! table lookup). Compression accounting rides along
+//! ([`JobOutput::compression`]).
 
-use crate::quant::{Codebook, Precision, QuantMethod, QuantOptions, QuantOutput};
+use crate::quant::{
+    self, Codebook, CompressionStats, Precision, QuantDiag, QuantMethod, QuantOptions,
+    QuantOutput,
+};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -123,13 +136,97 @@ pub struct Job {
     pub respond: mpsc::Sender<JobResult>,
 }
 
+/// A successful job's result payload: the compact lane-erased item the
+/// engine produced, plus the level count the job requested (for
+/// achieved-vs-requested compression accounting).
+///
+/// This is the codebook-native form — no materialized full vector. Edges
+/// that need one call [`JobOutput::materialize`] (an O(n) decode), or
+/// [`JobOutput::into_output64`] for the full legacy [`QuantOutput`]
+/// surface; both are bitwise-identical to what the pre-compact serve path
+/// returned.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    item: quant::Item,
+    levels_requested: usize,
+}
+
+impl JobOutput {
+    /// Wrap an engine result with the job's requested level count.
+    pub(crate) fn new(item: quant::Item, levels_requested: usize) -> JobOutput {
+        JobOutput { item, levels_requested }
+    }
+
+    /// The compact lane-erased result (codebook + indices, loss, diag,
+    /// stage timings).
+    pub fn item(&self) -> &quant::Item {
+        &self.item
+    }
+
+    /// The compact wire payload on the f64 surface (f32 levels widen;
+    /// indices are shared unchanged). Cheap: the codebook was built by
+    /// the engine's finalize — no per-call re-derivation.
+    pub fn codebook(&self) -> Codebook {
+        self.item.codebook_f64()
+    }
+
+    /// Materialize the full-length quantized vector on the f64 surface —
+    /// the lazy **edge** operation (O(n) table lookup through the
+    /// codebook). The serve path itself never does this.
+    pub fn materialize(&self) -> Vec<f64> {
+        self.item.materialize_f64()
+    }
+
+    /// Convert into the legacy full-vector [`QuantOutput`] (materializes;
+    /// f32 results widen exactly as the historical result surface did).
+    pub fn into_output64(self) -> QuantOutput {
+        self.item.into_output64()
+    }
+
+    /// Squared-l2 information loss (lane input, accumulated in f64).
+    pub fn l2_loss(&self) -> f64 {
+        self.item.l2_loss()
+    }
+
+    /// Number of values moved by the hard-sigmoid clamp.
+    pub fn clamped(&self) -> usize {
+        self.item.clamped()
+    }
+
+    /// Solver diagnostics.
+    pub fn diag(&self) -> &QuantDiag {
+        self.item.diag()
+    }
+
+    /// Achieved number of distinct values.
+    pub fn distinct_values(&self) -> usize {
+        self.item.distinct_values()
+    }
+
+    /// The lane the job was served on.
+    pub fn precision(&self) -> Precision {
+        self.item.precision()
+    }
+
+    /// The level count the job requested (`QuantOptions::target_values`).
+    pub fn levels_requested(&self) -> usize {
+        self.levels_requested
+    }
+
+    /// Compression accounting for this result (bits/value, index entropy,
+    /// achieved-vs-requested levels, compact-vs-dense bytes).
+    pub fn compression(&self) -> CompressionStats {
+        self.item.compression(self.levels_requested)
+    }
+}
+
 /// A completed (or failed) job.
 #[derive(Debug)]
 pub struct JobResult {
     /// The job id.
     pub id: JobId,
-    /// Quantization output or error text.
-    pub outcome: Result<QuantOutput, String>,
+    /// Compact quantization result or error text.
+    pub outcome: Result<JobOutput, String>,
     /// Submit-to-complete latency.
     pub latency: Duration,
     /// Engine that served the job.
@@ -143,18 +240,14 @@ impl JobResult {
     }
 
     /// Compact view of a successful outcome: the codebook (levels + `u32`
-    /// indices) — the wire format a serving edge ships instead of the
+    /// indices) — the wire form a serving edge ships instead of the
     /// full-length vector. `None` when the job failed.
     ///
-    /// Derived from the full values at the response edge — a fresh
-    /// O(n log n) sort per call, not cached — because the job result
-    /// still carries the full vector (the runtime/PJRT lane's boundary is
-    /// full-length f64). Call it once per result; carrying the native
-    /// lane's already-built codebook through `JobResult` is a recorded
-    /// ROADMAP follow-up.
+    /// Since the codebook-native refactor this is a cheap accessor over
+    /// the stored compact item (the engine finalize built it); the old
+    /// derive-at-edge O(n log n) re-encode is gone.
     pub fn codebook(&self) -> Option<Codebook> {
-        let out = self.outcome.as_ref().ok()?;
-        Codebook::from_output(out).ok()
+        Some(self.outcome.as_ref().ok()?.codebook())
     }
 }
 
@@ -169,22 +262,32 @@ mod tests {
     }
 
     #[test]
-    fn job_result_codebook_is_compact() {
+    fn job_result_codebook_is_compact_and_materializes_at_the_edge() {
+        use crate::quant::{QuantMethod, QuantRequest, Quantizer};
+        let data = vec![1.0, 2.0, 1.0, 2.0, 1.0];
+        let req = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .target_count(2);
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
         let res = JobResult {
             id: 1,
-            outcome: Ok(QuantOutput {
-                values: vec![1.0, 2.0, 1.0],
-                levels: vec![1.0, 2.0],
-                l2_loss: 0.0,
-                clamped: 0,
-                diag: Default::default(),
-            }),
+            outcome: Ok(JobOutput::new(item, 2)),
             latency: Duration::ZERO,
             served_by: ServedBy::Native,
         };
         let cb = res.codebook().expect("ok outcome has a codebook");
         assert_eq!(cb.levels, vec![1.0, 2.0]);
-        assert_eq!(cb.indices, vec![0, 1, 0]);
+        assert_eq!(cb.indices, vec![0, 1, 0, 1, 0]);
+        let out = res.outcome.as_ref().unwrap();
+        assert_eq!(out.materialize(), data, "edge decode reproduces the vector");
+        assert_eq!(out.distinct_values(), 2);
+        assert_eq!(out.levels_requested(), 2);
+        let stats = out.compression();
+        assert_eq!(stats.levels_achieved, 2);
+        assert_eq!(stats.levels_requested, 2);
+        assert_eq!(stats.n, data.len());
+        let legacy = res.outcome.unwrap().into_output64();
+        assert_eq!(legacy.values, data);
         let failed = JobResult {
             id: 2,
             outcome: Err("boom".into()),

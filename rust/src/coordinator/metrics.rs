@@ -1,4 +1,29 @@
 //! Coordinator metrics: lock-free counters + a log₂ latency histogram.
+//!
+//! One [`Metrics`] instance is shared by every worker and runtime lane;
+//! all updates are single `fetch_add`s (wait-free, `Relaxed` — counters
+//! are independent, no cross-counter ordering is promised), so the hot
+//! serve path never takes a lock to record. [`Metrics::snapshot`]
+//! produces an immutable [`Snapshot`] for reports; under concurrent
+//! updates it is a *consistent-enough* read (each counter atomically,
+//! not the set), which is the usual tradeoff for serving telemetry.
+//!
+//! What is tracked, and who records it:
+//!
+//! * admission — `on_submit` / `on_reject` (the submit front doors);
+//! * completion — `on_complete` (ok/failed, latency into the power-of-two
+//!   histogram, native-vs-runtime engine), recorded by `finish` in
+//!   `server.rs` for every job exactly once;
+//! * batching — `on_batch` per drained batch (mean batch size falls out);
+//! * pipeline stages — `on_stage` with the prepare/solve wall times the
+//!   compact finalize reports on each item (native lane only; the
+//!   runtime lane's phases are artifact calls, not prepare/solve);
+//! * degraded lanes — `on_lane_degraded` when a runtime lane's backend
+//!   fails to open.
+//!
+//! Latency percentiles come from the histogram's upper bucket bounds —
+//! cheap, monotone, and accurate to a factor of two, which is enough to
+//! spot regressions in a serve run's p95/p99.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;

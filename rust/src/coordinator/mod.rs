@@ -8,7 +8,7 @@ pub mod queue;
 pub mod router;
 pub mod server;
 
-pub use job::{Job, JobId, JobResult, Payload, ServedBy};
+pub use job::{Job, JobId, JobOutput, JobResult, Payload, ServedBy};
 pub use metrics::{Metrics, Snapshot};
 pub use router::Router;
 pub use server::{BackendFactory, Coordinator};

@@ -5,6 +5,30 @@
 //! `push` blocks when full (backpressure), `try_push` refuses instead,
 //! `pop_batch` waits for the first item then drains up to `max` — the
 //! batcher in one primitive.
+//!
+//! Design notes, in serve-path terms:
+//!
+//! * **Backpressure vs shedding** is the *caller's* choice, not the
+//!   queue's: `Coordinator::submit_request` uses the blocking
+//!   [`BoundedQueue::push`] (a full queue slows producers down),
+//!   `try_submit_request` uses [`BoundedQueue::try_push`] and turns
+//!   [`TryPush::Full`] into a counted rejection (load shedding).
+//! * **Batching lives in the pop**: [`BoundedQueue::pop_batch`] waits up
+//!   to `first_wait` for one item, then lingers at most `fill_wait`
+//!   (`Config::batch_wait_us`) for stragglers so bursts of small jobs
+//!   pay one worker wakeup. A returned batch is never empty, even with
+//!   multiple consumers racing through the linger window.
+//! * **Shutdown is drain-then-stop**: [`BoundedQueue::close`] makes
+//!   producers fail fast while consumers keep popping until the queue is
+//!   empty, which is what lets `Coordinator::shutdown` complete every
+//!   admitted job. Items are moved, never cloned or dropped — the
+//!   property-tested invariant (`tests/property_queue.rs`: no loss, no
+//!   duplication under concurrent submit/drain).
+//!
+//! The queue is payload-agnostic; since the codebook-native refactor the
+//! jobs it carries hold `Arc`-shared inputs on the way in and compact
+//! codebook results on the way out, so nothing here ever copies vector
+//! data.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -20,12 +20,27 @@
 //! `Gmm` (artifact EM steps + native max-posterior assignment).
 //! Everything else always runs natively — their inner loops are
 //! data-dependent control flow the AOT graph cannot express.
+//!
+//! ## Compact results
+//!
+//! Every dispatcher here — native and runtime — returns the **compact**
+//! result form: a [`quant::QuantItem`] / lane-erased [`quant::Item`]
+//! carrying a [`quant::Codebook`] (a few shared levels + one `u32` index
+//! per element), not a materialized full-length vector. The runtime
+//! dispatchers finalize straight from the unique decomposition's inverse
+//! map (`api::finish_compact_parts`), so even the f64 runtime boundary
+//! never round-trips a full vector between solve and response; full
+//! vectors exist only where an edge explicitly materializes one
+//! ([`super::job::JobOutput::materialize`]). Losses are accumulated in the
+//! exact legacy arithmetic order, so compact results stay bitwise-identical
+//! to the historical full-vector path (`types::finalize`, kept as the
+//! independent regression anchor).
 
 use super::job::Payload;
 use crate::config::Engine;
 use crate::quant::{
-    self, refit, types, unique::UniqueDecomp, vmatrix::VBasis, QuantDiag, QuantMethod,
-    QuantOptions, QuantOutput,
+    self, api, refit, unique::UniqueDecomp, vmatrix::VBasis, QuantDiag, QuantItem,
+    QuantMethod, QuantOptions,
 };
 use crate::runtime::{BackendKind, ExecutorBackend, ShadowBackend};
 use crate::{Error, Result};
@@ -105,68 +120,67 @@ impl Router {
     }
 
     /// Serve a job on the native engines; the payload's precision picks
-    /// the lane (f32 payloads run the single-precision fast path and widen
-    /// only the output). Payloads are shared, so dispatch clones an `Arc`,
-    /// never the data — the prepare stage reads the submitted buffer.
+    /// the lane (f32 payloads run the single-precision fast path and stay
+    /// narrow in the result). Payloads are shared, so dispatch clones an
+    /// `Arc`, never the data — the prepare stage reads the submitted
+    /// buffer. The result is the **compact** lane-erased item (codebook +
+    /// indices); edges materialize full vectors lazily.
     pub fn dispatch_native(
         &self,
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
-    ) -> Result<QuantOutput> {
+    ) -> Result<quant::Item> {
         match data {
-            Payload::F64(v) => Ok(quant::api::run_shared_f64(
+            Payload::F64(v) => quant::api::run_shared_f64(
                 Arc::clone(v),
                 method,
                 opts,
                 quant::OutputForm::Codebook,
-            )?
-            .into_output64()),
-            Payload::F32(v) => Ok(quant::api::run_shared_f32(
+            ),
+            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32(
                 Arc::clone(v),
                 method,
                 opts,
                 quant::OutputForm::Codebook,
-            )?
-            .into_output()
-            .widen()),
+            )?)),
         }
     }
 
-    /// Serve a payload on the native engines, reporting per-stage
-    /// (prepare/solve) wall times for the metrics surface. The shared
+    /// [`Router::dispatch_native`] over an owned payload: the shared
     /// buffer enters the request-API core without a copy on either lane.
+    /// Per-stage (prepare/solve) wall times ride on the returned item
+    /// ([`quant::Item::timings`]) for the metrics surface.
     pub fn dispatch_native_timed_owned(
         &self,
         data: Payload,
         method: QuantMethod,
         opts: &QuantOptions,
-    ) -> Result<(QuantOutput, quant::StageTimings)> {
+    ) -> Result<quant::Item> {
         match data {
             Payload::F64(v) => {
-                let item =
-                    quant::api::run_shared_f64(v, method, opts, quant::OutputForm::Codebook)?;
-                let timings = item.timings();
-                Ok((item.into_output64(), timings))
+                quant::api::run_shared_f64(v, method, opts, quant::OutputForm::Codebook)
             }
-            Payload::F32(v) => {
-                let item =
-                    quant::api::run_shared_f32(v, method, opts, quant::OutputForm::Codebook)?;
-                let timings = item.timings;
-                Ok((item.into_output().widen(), timings))
-            }
+            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32(
+                v,
+                method,
+                opts,
+                quant::OutputForm::Codebook,
+            )?)),
         }
     }
 }
 
 /// Runtime-lane dispatch (called only from a lane thread — or one of its
-/// scoped sub-lanes — that owns the backend handle).
+/// scoped sub-lanes — that owns the backend handle). Returns the compact
+/// item: the per-level solve finalizes through the unique decomposition's
+/// inverse map without materializing an intermediate full vector.
 pub fn dispatch_runtime(
     ex: &mut dyn ExecutorBackend,
     data: &[f64],
     method: QuantMethod,
     opts: &QuantOptions,
-) -> Result<QuantOutput> {
+) -> Result<QuantItem> {
     match method {
         QuantMethod::L1 | QuantMethod::L1LeastSquare => runtime_lasso(
             ex,
@@ -189,7 +203,7 @@ fn runtime_lasso(
     data: &[f64],
     opts: &QuantOptions,
     with_refit: bool,
-) -> Result<QuantOutput> {
+) -> Result<QuantItem> {
     let u = UniqueDecomp::new(data)?;
     let basis = VBasis::new(&u.values);
     let w32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
@@ -224,8 +238,7 @@ fn runtime_lasso(
         let alpha64: Vec<f64> = sol.alpha.iter().map(|&a| a as f64).collect();
         basis.apply(&alpha64)
     };
-    let full = u.recover(&levels)?;
-    Ok(types::finalize(data, full, opts.clamp, diag))
+    api::finish_compact_parts(data, &u, &levels, opts.clamp, diag)
 }
 
 /// k-means on the runtime: deterministic quantile seeding, artifact Lloyd
@@ -234,7 +247,7 @@ fn runtime_kmeans(
     ex: &mut dyn ExecutorBackend,
     data: &[f64],
     opts: &QuantOptions,
-) -> Result<QuantOutput> {
+) -> Result<QuantItem> {
     let u = UniqueDecomp::new(data)?;
     let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
     let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
@@ -266,8 +279,7 @@ fn runtime_kmeans(
         unstable: false,
         empty_cluster_events: 0,
     };
-    let full = u.recover(&levels)?;
-    Ok(types::finalize(data, full, opts.clamp, diag))
+    api::finish_compact_parts(data, &u, &levels, opts.clamp, diag)
 }
 
 /// GMM on the runtime: deterministic quantile seeding, artifact EM steps,
@@ -276,7 +288,7 @@ fn runtime_gmm(
     ex: &mut dyn ExecutorBackend,
     data: &[f64],
     opts: &QuantOptions,
-) -> Result<QuantOutput> {
+) -> Result<QuantItem> {
     let u = UniqueDecomp::new(data)?;
     let pts32: Vec<f32> = u.values.iter().map(|&x| x as f32).collect();
     let cw32: Vec<f32> = u.counts.iter().map(|&c| c as f32).collect();
@@ -336,8 +348,7 @@ fn runtime_gmm(
         unstable: false,
         empty_cluster_events: 0,
     };
-    let full = u.recover(&levels)?;
-    Ok(types::finalize(data, full, opts.clamp, diag))
+    api::finish_compact_parts(data, &u, &levels, opts.clamp, diag)
 }
 
 /// Equivalence check used by integration tests and the self-check CLI:
@@ -381,10 +392,11 @@ mod tests {
         let via_router = r
             .dispatch_native(&data32.clone().into(), QuantMethod::L1LeastSquare, &opts)
             .unwrap();
+        assert_eq!(via_router.precision(), quant::Precision::F32, "stays narrow");
         let direct =
             quant::quantize_f32(&data32, QuantMethod::L1LeastSquare, &opts).unwrap().widen();
-        assert_eq!(via_router.values, direct.values);
-        assert_eq!(via_router.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        assert_eq!(via_router.materialize_f64(), direct.values);
+        assert_eq!(via_router.l2_loss().to_bits(), direct.l2_loss.to_bits());
     }
 
     #[test]
@@ -433,7 +445,9 @@ mod tests {
         for method in [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::Gmm] {
             let opts = QuantOptions { lambda1: 0.02, target_values: 8, ..Default::default() };
             let out = dispatch_runtime(&mut ex, &data, method, &opts).unwrap();
-            assert_eq!(out.values.len(), data.len(), "{method:?}");
+            // Compact-native: codebook + one index per input element.
+            assert_eq!(out.codebook.len(), data.len(), "{method:?}");
+            assert_eq!(out.materialize().len(), data.len(), "{method:?}");
             assert!(out.l2_loss.is_finite());
             if method != QuantMethod::L1LeastSquare {
                 assert!(out.distinct_values() <= 8, "{method:?}");

@@ -17,6 +17,13 @@
 //!              respond channels + metrics
 //! ```
 //!
+//! Results flow back **compact**: a worker's finalize builds the
+//! codebook (levels + `u32` indices) and [`JobResult`] carries exactly
+//! that ([`super::job::JobOutput`]) — the respond channels never move a
+//! materialized full-length vector, on either the native or the runtime
+//! lane. Edges that need full values decode lazily
+//! ([`super::job::JobOutput::materialize`]).
+//!
 //! Runtime lanes each open their own [`ExecutorBackend`] via a backend
 //! factory (PJRT handles are `Rc`-based, not Send; per-lane artifact
 //! caches keep lanes independent — §Perf row 7: 2 lanes ≈ 2.2×
@@ -29,13 +36,13 @@
 //! in [`Metrics`], and under `Engine::Auto` its pops are served natively
 //! instead of erroring job by job.
 
-use super::job::{Job, JobId, JobResult, Payload, ServedBy};
+use super::job::{Job, JobId, JobOutput, JobResult, Payload, ServedBy};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
 use crate::config::{Config, Engine};
 use crate::quant::api::{Plan, QuantRequest, RequestInput};
-use crate::quant::{Precision, QuantMethod, QuantOptions};
+use crate::quant::{Item, Precision, QuantMethod, QuantOptions};
 use crate::runtime::{open_backend, ExecutorBackend};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -54,7 +61,8 @@ pub type BackendFactory =
 /// serves single-vector one-shot (or target-count) requests; sweep plans
 /// and batch/matrix inputs are rejected — submit their units as
 /// individual requests, or run them in-process via
-/// [`crate::quant::Quantizer`].
+/// [`crate::quant::Quantizer`] (which serves sweep, batch and the
+/// combined batch×sweep plan with scoped-thread fan-out).
 fn request_job_parts(req: QuantRequest) -> Result<(Payload, QuantMethod, QuantOptions)> {
     if matches!(req.plan, Plan::Sweep { .. }) {
         return Err(Error::Coordinator(
@@ -98,14 +106,15 @@ pub struct Coordinator {
     cfg: Config,
 }
 
-fn finish(
-    metrics: &Metrics,
-    job: Job,
-    outcome: Result<crate::quant::QuantOutput>,
-    served_by: ServedBy,
-) {
+/// Complete a job: wrap the engine's **compact** item as the result
+/// payload (no materialization — full vectors are an edge concern), stamp
+/// metrics, and respond.
+fn finish(metrics: &Metrics, job: Job, outcome: Result<Item>, served_by: ServedBy) {
     let latency = job.submitted.elapsed();
-    let outcome = outcome.map_err(|e| e.to_string());
+    let levels_requested = job.opts.target_values;
+    let outcome = outcome
+        .map(|item| JobOutput::new(item, levels_requested))
+        .map_err(|e| e.to_string());
     metrics.on_complete(outcome.is_ok(), latency, served_by == ServedBy::Runtime);
     // Receiver may have hung up (fire-and-forget submit); ignore.
     let _ = job.respond.send(JobResult { id: job.id, outcome, latency, served_by });
@@ -117,9 +126,10 @@ fn finish(
 fn serve_one_native(router: &Router, metrics: &Metrics, mut job: Job) {
     let data = std::mem::take(&mut job.data);
     let outcome = match router.dispatch_native_timed_owned(data, job.method, &job.opts) {
-        Ok((out, t)) => {
+        Ok(item) => {
+            let t = item.timings();
             metrics.on_stage(t.prepare, t.solve);
-            Ok(out)
+            Ok(item)
         }
         Err(e) => Err(e),
     };
@@ -206,7 +216,9 @@ fn serve_one_runtime(
         }
     };
     match rt_outcome {
-        Ok(out) => finish(metrics, job, Ok(out), ServedBy::Runtime),
+        // The runtime lane's f64 boundary hands back a compact item too —
+        // no intermediate full-vector round trip.
+        Ok(out) => finish(metrics, job, Ok(Item::F64(out)), ServedBy::Runtime),
         Err(e) => {
             if router.policy() == Engine::Auto {
                 let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
@@ -767,7 +779,7 @@ mod tests {
         for (data, opts, rx) in jobs {
             let got = rx.recv().unwrap().outcome.unwrap();
             let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
-            assert_eq!(got.values, direct.values, "fan-out changed a result");
+            assert_eq!(got.materialize(), direct.values, "fan-out changed a result");
         }
         let snap = c.shutdown();
         assert_eq!(snap.completed, 32);
@@ -787,11 +799,12 @@ mod tests {
         assert!(res.is_ok());
         assert_eq!(res.served_by, ServedBy::Native);
         let got = res.outcome.unwrap();
+        assert_eq!(got.precision(), Precision::F32, "result stays narrow until the edge");
         let direct = crate::quant::quantize_f32(&data32, QuantMethod::L1LeastSquare, &opts)
             .unwrap()
             .widen();
-        assert_eq!(got.values, direct.values);
-        assert_eq!(got.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        assert_eq!(got.materialize(), direct.values);
+        assert_eq!(got.l2_loss().to_bits(), direct.l2_loss.to_bits());
         let snap = c.shutdown();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.stage_samples, 1, "f32 jobs must record stage timings too");
@@ -817,9 +830,9 @@ mod tests {
             .outcome
             .unwrap();
         let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
-        assert_eq!(via_req.values, via_legacy.values);
-        assert_eq!(via_req.values, direct.values);
-        assert_eq!(via_req.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        assert_eq!(via_req.materialize(), via_legacy.materialize());
+        assert_eq!(via_req.materialize(), direct.values);
+        assert_eq!(via_req.l2_loss().to_bits(), direct.l2_loss.to_bits());
         c.shutdown();
     }
 
@@ -843,7 +856,13 @@ mod tests {
             .unwrap();
         let cb = res.codebook().expect("successful jobs expose a codebook");
         assert!(cb.k() <= 4);
-        assert_eq!(cb.decode(), res.outcome.unwrap().values);
+        let out = res.outcome.unwrap();
+        assert_eq!(cb.decode(), out.materialize());
+        // Compression accounting rides on the result.
+        let stats = out.compression();
+        assert_eq!(stats.levels_requested, 4);
+        assert!(stats.levels_achieved <= 4);
+        assert!(stats.byte_ratio > 1.0);
         c.shutdown();
     }
 
@@ -858,7 +877,7 @@ mod tests {
             .outcome
             .unwrap();
         let direct = crate::quant::quantize(&data, QuantMethod::KMeans, &opts).unwrap();
-        assert_eq!(via_coord.values, direct.values);
+        assert_eq!(via_coord.materialize(), direct.values);
         c.shutdown();
     }
 }

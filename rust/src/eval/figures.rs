@@ -672,6 +672,9 @@ pub fn bitwidth(nn: &super::workloads::NnWorkload) -> Result<Report> {
             "compression_vs_f32",
         ],
     );
+    // The standard compression-accounting columns (shared with the CLI
+    // summaries), one row per (bits, method) cell of the sweep.
+    let mut accounting = Table::compression("Bitwidth compression accounting");
     for bits in 1..=7u32 {
         let k = 1usize << bits;
         for method in [QuantMethod::KMeans, QuantMethod::ClusterLs, QuantMethod::IterativeL1] {
@@ -694,9 +697,11 @@ pub fn bitwidth(nn: &super::workloads::NnWorkload) -> Result<Report> {
                 f(cb.index_entropy()),
                 format!("{:.1}x", cb.compression_ratio_f32()),
             ]);
+            accounting.compression_row(&format!("b{bits}/{}", method.id()), &cb.stats(k));
         }
     }
     rep.table(table);
+    rep.table(accounting);
     Ok(rep)
 }
 

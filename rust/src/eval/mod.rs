@@ -1,5 +1,24 @@
 //! Evaluation harness (S20): workloads, figure regeneration, and report
 //! plumbing for every experiment in DESIGN §5.
+//!
+//! Three submodules, one per concern:
+//!
+//! * [`workloads`] — the shared experiment substrates: the trained
+//!   784-256-128-64-10 MLP (cached on disk so harnesses don't retrain),
+//!   the procedural digit image, the paper's three synthetic
+//!   distributions, and the λ-grid helper the sweep surfaces share.
+//! * [`figures`] — one function per experiment (Fig 1–8, crossover,
+//!   ablations, bit-width, out-of-range), each returning a
+//!   [`report::Report`]. Absolute numbers differ from the paper's 2018
+//!   testbed; orderings, curve shapes and crossovers are the
+//!   reproduction targets (EXPERIMENTS.md has the side-by-side).
+//! * [`report`] — the rendering layer: aligned text tables + CSV twins,
+//!   including the standard compression-accounting columns
+//!   ([`report::Table::compression`]) shared with the CLI so
+//!   bits-per-value numbers are comparable across surfaces.
+//!
+//! Everything here consumes the public `quant` API only (no coordinator
+//! required), so `sqlsq eval <exp>` runs offline on a bare checkout.
 
 pub mod figures;
 pub mod report;

@@ -1,5 +1,18 @@
 //! Experiment report plumbing: aligned text tables + CSV files.
+//!
+//! Every figure/experiment harness ([`super::figures`]) renders through
+//! the same two types — [`Table`] (aligned text + CSV twin, one file per
+//! table) and [`Report`] (prose sections interleaved with tables,
+//! persisted as `<dir>/<name>.txt` plus per-table CSVs) — so results are
+//! both human-readable on stdout and machine-consumable for plotting.
+//!
+//! The compression-accounting columns ([`Table::compression`] /
+//! [`Table::compression_row`]) are the standard rendering of
+//! [`CompressionStats`] wherever bits-per-value results are reported (the
+//! CLI's quantize/serve summaries and the bit-width experiments share
+//! them, so numbers stay comparable across surfaces).
 
+use crate::quant::CompressionStats;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -75,6 +88,35 @@ impl Table {
             out.push('\n');
         }
         out
+    }
+
+    /// A table with the standard compression-accounting columns (pair
+    /// with [`Table::compression_row`]).
+    pub fn compression(title: &str) -> Table {
+        Table::new(
+            title,
+            &[
+                "label", "n", "levels", "requested", "bits/idx", "bits/val", "entropy",
+                "compact_B", "dense_B", "ratio",
+            ],
+        )
+    }
+
+    /// Append one [`CompressionStats`] row to a [`Table::compression`]
+    /// table.
+    pub fn compression_row(&mut self, label: &str, s: &CompressionStats) {
+        self.row(vec![
+            label.to_string(),
+            s.n.to_string(),
+            s.levels_achieved.to_string(),
+            s.levels_requested.to_string(),
+            s.bits_per_index.to_string(),
+            format!("{:.3}", s.bits_per_value),
+            format!("{:.3}", s.index_entropy),
+            s.compact_bytes.to_string(),
+            s.dense_bytes.to_string(),
+            format!("{:.2}", s.byte_ratio),
+        ]);
     }
 
     /// Write `<dir>/<slug>.csv` and return the path.
@@ -193,6 +235,19 @@ mod tests {
         assert!(dir.join("fig_x.txt").exists());
         assert!(dir.join("fig_x.csv").exists());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn compression_table_rows_align_with_headers() {
+        use crate::quant::Codebook;
+        let cb =
+            Codebook::from_values(&(0..100).map(|i| (i % 4) as f64).collect::<Vec<_>>()).unwrap();
+        let mut t = Table::compression("Compression");
+        t.compression_row("demo", &cb.stats(4));
+        let r = t.render();
+        assert!(r.contains("bits/val"));
+        assert!(r.contains("demo"));
+        assert!(t.to_csv().lines().count() == 2);
     }
 
     #[test]

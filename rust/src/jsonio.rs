@@ -1,11 +1,71 @@
-//! Minimal JSON reader/writer (S24).
+//! Minimal JSON reader/writer (S24) **and the serve wire format**.
 //!
-//! serde is not available in this offline environment (DESIGN §2), and the
-//! only JSON this system needs is the AOT `manifest.json` shared with the
-//! Python compile path plus the experiment reports — a few KiB of simple
-//! objects. This module implements exactly that subset: UTF-8 text, the
-//! six JSON value kinds, `\uXXXX` escapes, no trailing commas, no comments.
+//! serde is not available in this offline environment (DESIGN §2); this
+//! module implements exactly the subset the system needs — UTF-8 text,
+//! the six JSON value kinds, `\uXXXX` escapes, no trailing commas, no
+//! comments — for three consumers: the AOT `manifest.json` shared with
+//! the Python compile path, the experiment reports, and the serve
+//! protocol below.
+//!
+//! # Serve wire format
+//!
+//! Quantization results cross process boundaries in one of two JSON
+//! forms, emitted by `sqlsq quantize|sweep --output codebook|values` and
+//! produced/parsed by [`codebook_to_json`] / [`codebook_from_json`] /
+//! [`values_to_json`] / [`values_from_json`].
+//!
+//! **Codebook form** (the compact payload a serving edge should ship —
+//! a few shared levels plus one small index per element):
+//!
+//! ```json
+//! {
+//!   "levels":  [0.1, 0.5, 0.9],
+//!   "indices": [0, 0, 1, 2, 1, 0],
+//!   "lambda":  0.01,
+//!   "stats":   { "bits_per_value": 18.67, "index_entropy": 1.46, ... }
+//! }
+//! ```
+//!
+//! Field by field:
+//!
+//! * `levels` — array of numbers, the distinct quantization levels,
+//!   sorted ascending. Length `k ≥ 1`.
+//! * `indices` — array of non-negative integers `< k`, one per original
+//!   element, in input order. Element `i` decodes to
+//!   `levels[indices[i]]`.
+//! * optional extra fields added by the producer (the CLI sweep adds
+//!   `lambda`, the λ grid point; `stats` carries the compression
+//!   accounting of [`stats_to_json`]). Consumers must ignore fields they
+//!   don't know.
+//!
+//! **Values form** (the dense fallback for consumers that want the
+//! full-length vector):
+//!
+//! ```json
+//! { "values": [0.1, 0.1, 0.5, 0.9, 0.5, 0.1] }
+//! ```
+//!
+//! * `values` — array of numbers, the materialized quantized vector,
+//!   input order, length `n`.
+//!
+//! A worked round trip:
+//!
+//! ```
+//! use sqlsq::jsonio::{codebook_from_json, codebook_to_json, parse};
+//! use sqlsq::quant::Codebook;
+//!
+//! let cb = Codebook::from_values(&[0.1, 0.1, 0.9, 0.5, 0.9]).unwrap();
+//! let wire = codebook_to_json(&cb, vec![]).to_string();
+//! assert_eq!(wire, r#"{"indices":[0,0,2,1,2],"levels":[0.1,0.5,0.9]}"#);
+//! let back = codebook_from_json(&parse(&wire).unwrap()).unwrap();
+//! assert_eq!(back.decode(), vec![0.1, 0.1, 0.9, 0.5, 0.9]);
+//! ```
+//!
+//! The number encoding is JSON's (f64); the f32 lane's levels widen
+//! exactly when serialized, so a wire round trip is lossless for both
+//! lanes. Producers emit keys in deterministic (sorted) order.
 
+use crate::quant::{Codebook, CompressionStats};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -374,6 +434,94 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------
+// Serve wire format (see the module docs for the field-by-field spec)
+// ---------------------------------------------------------------------
+
+/// Serialize a codebook into the wire's **codebook form**:
+/// `{"levels":[..],"indices":[..]}` plus any `extra` producer fields
+/// (e.g. the sweep's `("lambda", Json::Num(λ))`, or `("stats", ..)` from
+/// [`stats_to_json`]).
+pub fn codebook_to_json(cb: &Codebook, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = extra;
+    fields.push(("levels", Json::Arr(cb.levels.iter().map(|&v| Json::Num(v)).collect())));
+    fields.push((
+        "indices",
+        Json::Arr(cb.indices.iter().map(|&i| Json::Num(i as f64)).collect()),
+    ));
+    Json::obj(fields)
+}
+
+/// Parse the wire's codebook form back into a [`Codebook`]. Validates the
+/// protocol invariants — `levels` non-empty and sorted ascending, every
+/// index a non-negative integer `< levels.len()` — and ignores unknown
+/// fields, per the wire contract.
+pub fn codebook_from_json(j: &Json) -> Result<Codebook> {
+    let bad = |msg: &str| Error::InvalidInput(format!("codebook wire: {msg}"));
+    let levels: Vec<f64> = j
+        .get("levels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'levels' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad("non-numeric level")))
+        .collect::<Result<_>>()?;
+    if levels.is_empty() {
+        return Err(bad("'levels' must be non-empty"));
+    }
+    if levels.windows(2).any(|w| !(w[0] < w[1])) {
+        return Err(bad("'levels' must be sorted strictly ascending"));
+    }
+    let indices: Vec<u32> = j
+        .get("indices")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'indices' array"))?
+        .iter()
+        .map(|v| {
+            let i = v.as_usize().ok_or_else(|| bad("index not a non-negative integer"))?;
+            if i >= levels.len() {
+                return Err(bad("index out of range of 'levels'"));
+            }
+            Ok(i as u32)
+        })
+        .collect::<Result<_>>()?;
+    Ok(Codebook { levels, indices })
+}
+
+/// Serialize a materialized vector into the wire's **values form**:
+/// `{"values":[..]}` plus any `extra` producer fields.
+pub fn values_to_json(values: &[f64], extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = extra;
+    fields.push(("values", Json::Arr(values.iter().map(|&v| Json::Num(v)).collect())));
+    Json::obj(fields)
+}
+
+/// Parse the wire's values form back into the full-length vector.
+pub fn values_from_json(j: &Json) -> Result<Vec<f64>> {
+    let bad = |msg: &str| Error::InvalidInput(format!("values wire: {msg}"));
+    j.get("values")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'values' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad("non-numeric value")))
+        .collect()
+}
+
+/// Serialize compression accounting as the wire's optional `stats`
+/// object (all fields numeric, names matching [`CompressionStats`]).
+pub fn stats_to_json(s: &CompressionStats) -> Json {
+    Json::obj(vec![
+        ("n", Json::Num(s.n as f64)),
+        ("levels_achieved", Json::Num(s.levels_achieved as f64)),
+        ("levels_requested", Json::Num(s.levels_requested as f64)),
+        ("bits_per_index", Json::Num(s.bits_per_index as f64)),
+        ("bits_per_value", Json::Num(s.bits_per_value)),
+        ("index_entropy", Json::Num(s.index_entropy)),
+        ("compact_bytes", Json::Num(s.compact_bytes as f64)),
+        ("dense_bytes", Json::Num(s.dense_bytes as f64)),
+        ("byte_ratio", Json::Num(s.byte_ratio)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,5 +596,54 @@ mod tests {
         assert_eq!(Json::Num(3.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::Str("x".into()).as_f64(), None);
+    }
+
+    #[test]
+    fn codebook_wire_roundtrip_with_extras() {
+        let cb = Codebook::from_values(&[0.5, -1.0, 0.5, 2.0]).unwrap();
+        let j = codebook_to_json(&cb, vec![("lambda", Json::Num(0.01))]);
+        let text = j.to_string();
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed.get("lambda").unwrap().as_f64(), Some(0.01));
+        let back = codebook_from_json(&parsed).unwrap();
+        assert_eq!(back.levels, cb.levels);
+        assert_eq!(back.indices, cb.indices);
+        assert_eq!(back.decode(), vec![0.5, -1.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn codebook_wire_rejects_protocol_violations() {
+        let bad = |t: &str| codebook_from_json(&parse(t).unwrap());
+        assert!(bad(r#"{"indices":[0]}"#).is_err(), "missing levels");
+        assert!(bad(r#"{"levels":[],"indices":[]}"#).is_err(), "empty levels");
+        assert!(bad(r#"{"levels":[2.0,1.0],"indices":[0]}"#).is_err(), "unsorted");
+        assert!(bad(r#"{"levels":[1.0,1.0],"indices":[0]}"#).is_err(), "duplicate level");
+        assert!(bad(r#"{"levels":[1.0],"indices":[1]}"#).is_err(), "index out of range");
+        assert!(bad(r#"{"levels":[1.0],"indices":[0.5]}"#).is_err(), "fractional index");
+        assert!(bad(r#"{"levels":[1.0],"indices":[-1]}"#).is_err(), "negative index");
+        // Unknown fields are ignored, per the wire contract.
+        assert!(bad(r#"{"levels":[1.0],"indices":[0],"future":true}"#).is_ok());
+    }
+
+    #[test]
+    fn values_wire_roundtrip() {
+        let vals = vec![0.25, 0.25, 1.0];
+        let j = values_to_json(&vals, vec![]);
+        assert_eq!(values_from_json(&parse(&j.to_string()).unwrap()).unwrap(), vals);
+        assert!(values_from_json(&parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn stats_wire_carries_all_fields() {
+        let cb = Codebook::from_values(&(0..64).map(|i| (i % 4) as f64).collect::<Vec<_>>())
+            .unwrap();
+        let s = cb.stats(4);
+        let j = stats_to_json(&s);
+        assert_eq!(j.get("levels_achieved").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(64));
+        assert_eq!(j.get("bits_per_value").unwrap().as_f64(), Some(s.bits_per_value));
+        assert_eq!(j.get("byte_ratio").unwrap().as_f64(), Some(s.byte_ratio));
+        // Round-trips through text.
+        assert!(parse(&j.to_string()).is_ok());
     }
 }

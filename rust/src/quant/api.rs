@@ -43,12 +43,56 @@
 //! let full = item.materialize_f64(); // lazy, only when you need it
 //! assert_eq!(full.len(), 6);
 //! ```
+//!
+//! # Migrating a legacy call
+//!
+//! Every row of the README migration table reduces to the same move:
+//! the legacy arguments become builder calls, and the output comes back
+//! compact. The shims are bitwise-identical, so migration is a pure
+//! refactor:
+//!
+//! ```
+//! use sqlsq::quant::{self, QuantMethod, QuantOptions, QuantRequest, Quantizer};
+//!
+//! let w: Vec<f64> = (0..60).map(|i| ((i % 7) as f64) / 7.0).collect();
+//! let opts = QuantOptions { target_values: 4, ..Default::default() };
+//!
+//! // Legacy: quantize(&w, m, &opts) — full-vector output.
+//! let legacy = quant::quantize(&w, QuantMethod::KMeans, &opts).unwrap();
+//!
+//! // Request API: same method/options, codebook-first output.
+//! let req = QuantRequest::slice(&w).method(QuantMethod::KMeans).options(opts);
+//! let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+//! assert_eq!(item.materialize_f64(), legacy.values);
+//! assert_eq!(item.l2_loss().to_bits(), legacy.l2_loss.to_bits());
+//! ```
+//!
+//! # Batch × sweep
+//!
+//! The sweep plan composes with batch (and matrix) inputs: `B` vectors ×
+//! `K` λs through one request, group-major item order, one warm-start
+//! chain per vector:
+//!
+//! ```
+//! use sqlsq::quant::{QuantMethod, QuantRequest, Quantizer};
+//!
+//! let vectors: Vec<Vec<f64>> = (0..3)
+//!     .map(|s| (0..40).map(|i| ((i * (s + 2)) % 11) as f64 / 11.0).collect())
+//!     .collect();
+//! let lambdas = vec![1e-3, 1e-2];
+//! let req = QuantRequest::batch(vectors)
+//!     .method(QuantMethod::L1LeastSquare)
+//!     .sweep(lambdas);
+//! let resp = Quantizer::new().run(&req).unwrap();
+//! assert_eq!(resp.len(), 3 * 2); // B × K items, vector-major
+//! ```
 
-use super::codebook::Codebook;
+use super::codebook::{Codebook, CompressionStats};
 use super::pipeline::{
     batch_map, solver_for, LaneSolve, PreparedInput, StageTimings, SweepState,
 };
 use super::tensor::Grouping;
+use super::unique::UniqueDecomp;
 use super::types::{
     Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputT,
 };
@@ -83,10 +127,18 @@ pub enum Plan {
     /// (overrides `QuantOptions::target_values`; pair with a count-taking
     /// method — see `QuantMethod::takes_target_count`).
     TargetCount(usize),
-    /// A λ₁ grid over ONE prepared input (single-vector requests only):
-    /// the prepare stage runs once and lasso/iterative solvers warm-start
-    /// along the path. `warm_start = false` solves every grid point cold
-    /// (bitwise-identical to independent one-shot calls).
+    /// A λ₁ grid, one response item per (input group, λ) pair.
+    ///
+    /// Over a single-vector input the prepare stage runs once and
+    /// lasso/iterative solvers warm-start along the path. Over a batch or
+    /// matrix input (**batch×sweep**) every group gets its own prepared
+    /// input and its own warm-start chain, and the groups fan across the
+    /// scoped-thread batch executor: `B` groups × `K` λs produce `B·K`
+    /// items in **group-major order** (group 0's λs in grid order, then
+    /// group 1's, …). A group whose prepare/solve fails yields `K` error
+    /// items so the `B·K` shape is preserved. `warm_start = false` solves
+    /// every grid point cold (bitwise-identical to independent one-shot
+    /// calls).
     Sweep {
         /// The λ₁ grid, one response item per entry, in order.
         lambdas: Vec<f64>,
@@ -223,7 +275,12 @@ impl QuantRequest {
         self
     }
 
-    /// Plan a warm-started λ sweep (sets [`Plan::Sweep`]).
+    /// Plan a warm-started λ sweep (sets [`Plan::Sweep`]). Composes with
+    /// every input shape: over a batch or matrix input this is the
+    /// **batch×sweep** plan — `B` groups × `K` λs through one request,
+    /// each group's λ path warm-started independently while the groups
+    /// fan across the batch executor (see [`Plan::Sweep`] for the item
+    /// order).
     pub fn sweep(mut self, lambdas: Vec<f64>) -> QuantRequest {
         self.plan = Plan::Sweep { lambdas, warm_start: true };
         self
@@ -312,6 +369,14 @@ impl<T: Scalar> QuantItem<T> {
         self.codebook.k()
     }
 
+    /// Compression accounting for this item's codebook (bits/value, index
+    /// entropy, achieved-vs-requested levels, compact-vs-dense bytes).
+    /// `levels_requested` is the request's `target_values`; the dense
+    /// baseline is the lane's element width.
+    pub fn compression(&self, levels_requested: usize) -> CompressionStats {
+        self.codebook.stats(levels_requested)
+    }
+
     /// Convert into the legacy full-vector output type (materializes).
     pub fn into_output(self) -> QuantOutputT<T> {
         let QuantItem { codebook, l2_loss, clamped, diag, values, .. } = self;
@@ -393,6 +458,15 @@ impl Item {
         match self {
             Item::F64(_) => None,
             Item::F32(i) => Some(i),
+        }
+    }
+
+    /// Compression accounting on either lane (the dense baseline follows
+    /// the lane's element width: 8 bytes/value for f64, 4 for f32).
+    pub fn compression(&self, levels_requested: usize) -> CompressionStats {
+        match self {
+            Item::F64(i) => i.compression(levels_requested),
+            Item::F32(i) => i.compression(levels_requested),
         }
     }
 
@@ -481,6 +555,21 @@ impl QuantResponse {
     pub fn total_l2_loss(&self) -> f64 {
         self.items.iter().flatten().map(Item::l2_loss).sum()
     }
+
+    /// Aggregate compression accounting over the successful items (see
+    /// [`CompressionStats::aggregate`] for the aggregation rules).
+    /// `levels_requested` is the request's effective `target_values`
+    /// ([`QuantRequest::effective_options`]). `None` when no item
+    /// succeeded.
+    pub fn compression(&self, levels_requested: usize) -> Option<CompressionStats> {
+        let per: Vec<CompressionStats> = self
+            .items
+            .iter()
+            .flatten()
+            .map(|i| i.compression(levels_requested))
+            .collect();
+        CompressionStats::aggregate(per.iter())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -500,9 +589,12 @@ impl Quantizer {
     }
 
     /// Serve one request. Returns `Err` only for request-shape errors
-    /// (e.g. a sweep plan over a batch input, an empty matrix); per-item
-    /// solve failures land in [`QuantResponse::items`] so batch siblings
-    /// survive.
+    /// (e.g. an empty matrix); per-item solve failures land in
+    /// [`QuantResponse::items`] so batch siblings survive. Sweep plans
+    /// compose with every input: over a batch/matrix this is the
+    /// batch×sweep plan — B groups × K λs ⇒ B·K items, group-major, one
+    /// warm-start chain per group, groups fanned across the batch
+    /// executor.
     pub fn run(&self, req: &QuantRequest) -> Result<QuantResponse> {
         let opts = req.effective_options();
         match (&req.input, &req.plan) {
@@ -528,9 +620,51 @@ impl Quantizer {
                     items.into_iter().map(|i| Ok(Item::F32(i))).collect(),
                 ))
             }
-            (_, Plan::Sweep { .. }) => Err(Error::InvalidParam(
-                "λ-sweep plans need a single-vector input".into(),
-            )),
+            // Batch×sweep: fan the groups across the batch executor, each
+            // group running its own warm-started λ path. B groups × K λs
+            // ⇒ B·K items, group-major; a failed group yields K error
+            // items so the shape is preserved.
+            (RequestInput::BatchF64(inputs), Plan::Sweep { lambdas, warm_start }) => {
+                let per = batch_map(inputs, |w| {
+                    sweep_shared_f64(
+                        Arc::from(w.as_slice()),
+                        req.method,
+                        lambdas,
+                        &opts,
+                        *warm_start,
+                        req.output,
+                    )
+                });
+                Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+            }
+            (RequestInput::BatchF32(inputs), Plan::Sweep { lambdas, warm_start }) => {
+                let per = batch_map(inputs, |w| -> Result<Vec<Item>> {
+                    let t0 = Instant::now();
+                    let prep = PreparedInput::from_shared(Arc::from(w.as_slice()))?;
+                    let prepare = t0.elapsed();
+                    Ok(sweep_prepared_core(
+                        &prep, req.method, lambdas, &opts, *warm_start, req.output, prepare,
+                    )?
+                    .into_iter()
+                    .map(Item::F32)
+                    .collect())
+                });
+                Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+            }
+            (RequestInput::Matrix(m, grouping), Plan::Sweep { lambdas, warm_start }) => {
+                let groups = matrix_groups(m, *grouping)?;
+                let per = batch_map(&groups, |w| {
+                    sweep_shared_f64(
+                        Arc::clone(w),
+                        req.method,
+                        lambdas,
+                        &opts,
+                        *warm_start,
+                        req.output,
+                    )
+                });
+                Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+            }
             (RequestInput::VectorF64(w), _) => Ok(QuantResponse::from_items(vec![
                 run_shared_f64(Arc::clone(w), req.method, &opts, req.output),
             ])),
@@ -553,6 +687,37 @@ impl Quantizer {
     }
 }
 
+/// Duplicate an error for per-slot replication (the batch×sweep plan
+/// fills a failed group's K item slots with the same failure). `Error` is
+/// not `Clone` — every variant carries a `String` except `Io`, which is
+/// rebuilt from its kind + rendered message.
+fn replicate_err(e: &Error) -> Error {
+    match e {
+        Error::InvalidInput(m) => Error::InvalidInput(m.clone()),
+        Error::InvalidParam(m) => Error::InvalidParam(m.clone()),
+        Error::NoConvergence(m) => Error::NoConvergence(m.clone()),
+        Error::Linalg(m) => Error::Linalg(m.clone()),
+        Error::Runtime(m) => Error::Runtime(m.clone()),
+        Error::Coordinator(m) => Error::Coordinator(m.clone()),
+        Error::Config(m) => Error::Config(m.clone()),
+        Error::Io(io) => Error::Io(std::io::Error::new(io.kind(), io.to_string())),
+    }
+}
+
+/// Flatten per-group sweep results into the response's group-major item
+/// order, replicating a failed group's error across its `k` λ slots so a
+/// B-group × K-λ request always yields B·K items.
+fn flatten_sweep(per_group: Vec<Result<Vec<Item>>>, k: usize) -> Vec<Result<Item>> {
+    let mut items = Vec::with_capacity(per_group.len() * k);
+    for group in per_group {
+        match group {
+            Ok(v) => items.extend(v.into_iter().map(Ok)),
+            Err(e) => items.extend((0..k).map(|_| Err(replicate_err(&e)))),
+        }
+    }
+    items
+}
+
 // ---------------------------------------------------------------------
 // Cores — everything below is what the legacy entry points shim over.
 // ---------------------------------------------------------------------
@@ -572,14 +737,28 @@ pub(crate) fn finish_compact<T: Scalar>(
     clamp: Option<(f64, f64)>,
     diag: QuantDiag,
 ) -> Result<QuantItem<T>> {
-    let m = prep.m();
+    finish_compact_parts(prep.original(), prep.unique(), level_values, clamp, diag)
+}
+
+/// [`finish_compact`] over raw parts — the original vector and its unique
+/// decomposition — for callers that never build a full [`PreparedInput`]
+/// (the coordinator's runtime lane holds only the decomposition: the
+/// difference basis and cached sums are solver-side state it doesn't
+/// need). Same arithmetic, same bitwise guarantees.
+pub(crate) fn finish_compact_parts<T: Scalar>(
+    original: &[T],
+    unique: &UniqueDecomp<T>,
+    level_values: &[T],
+    clamp: Option<(f64, f64)>,
+    diag: QuantDiag,
+) -> Result<QuantItem<T>> {
+    let m = unique.m();
     if level_values.len() != m {
         return Err(Error::InvalidInput(format!(
             "finish: expected {m} level values, got {}",
             level_values.len()
         )));
     }
-    let unique = prep.unique();
     // Clamp in level space — mirrors hard_sigmoid semantics (only strictly
     // out-of-range values move, counted once per original occurrence).
     let mut lv = level_values.to_vec();
@@ -618,7 +797,7 @@ pub(crate) fn finish_compact<T: Scalar>(
     // l2 loss over the full vector in input order: identical operation
     // sequence to the full-vector path (recover() replicates lv[inverse]).
     let mut l2_loss = 0.0f64;
-    for (o, &j) in prep.original().iter().zip(&unique.inverse) {
+    for (o, &j) in original.iter().zip(&unique.inverse) {
         let d = (*o - lv[j]).to_f64();
         l2_loss += d * d;
     }
@@ -936,9 +1115,108 @@ mod tests {
     }
 
     #[test]
-    fn sweep_over_batch_is_a_shape_error() {
-        let req = QuantRequest::batch(vec![clustered(20, 9)]).sweep(vec![1e-2]);
-        assert!(Quantizer::new().run(&req).is_err());
+    fn batch_sweep_yields_group_major_bxk_items_matching_per_vector_sweeps() {
+        let vectors = vec![clustered(50, 40), clustered(60, 41), clustered(40, 42)];
+        let lambdas = vec![1e-3, 1e-2, 1e-1];
+        let req = QuantRequest::batch(vectors.clone())
+            .method(QuantMethod::L1LeastSquare)
+            .sweep(lambdas.clone());
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), vectors.len() * lambdas.len(), "B×K items");
+        for (b, w) in vectors.iter().enumerate() {
+            // Reference: the same vector through a single-vector sweep
+            // request (its own warm-start chain).
+            let single = QuantRequest::vector(w.clone())
+                .method(QuantMethod::L1LeastSquare)
+                .sweep(lambdas.clone());
+            let want = Quantizer::new().run(&single).unwrap();
+            for (k, want_item) in want.items.iter().enumerate() {
+                let got = resp.items[b * lambdas.len() + k].as_ref().unwrap();
+                let want_item = want_item.as_ref().unwrap();
+                let (g, w_) = (got.as_f64().unwrap(), want_item.as_f64().unwrap());
+                assert_eq!(g.codebook.levels, w_.codebook.levels, "vec {b} λ#{k}");
+                assert_eq!(g.codebook.indices, w_.codebook.indices, "vec {b} λ#{k}");
+                assert_eq!(g.l2_loss.to_bits(), w_.l2_loss.to_bits(), "vec {b} λ#{k}");
+                assert_eq!(got.diag().lambda1, lambdas[k], "vec {b} λ#{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_sweep_replicates_a_failed_groups_errors() {
+        let lambdas = vec![1e-3, 1e-2];
+        let req = QuantRequest::batch(vec![clustered(30, 43), vec![], clustered(30, 44)])
+            .method(QuantMethod::L1)
+            .sweep(lambdas.clone());
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), 3 * lambdas.len(), "shape preserved despite the failure");
+        for k in 0..lambdas.len() {
+            assert!(resp.items[k].is_ok(), "vec 0 λ#{k}");
+            assert!(resp.items[lambdas.len() + k].is_err(), "empty vec λ#{k}");
+            assert!(resp.items[2 * lambdas.len() + k].is_ok(), "vec 2 λ#{k}");
+        }
+    }
+
+    #[test]
+    fn matrix_sweep_fans_groups_over_the_lambda_grid() {
+        let m = Matrix::from_fn(4, 16, |i, j| ((i * 16 + j) % 9) as f64 / 9.0);
+        let lambdas = vec![1e-3, 1e-2];
+        let req = QuantRequest::matrix(m, Grouping::PerRow)
+            .method(QuantMethod::L1LeastSquare)
+            .sweep(lambdas.clone());
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), 4 * lambdas.len());
+        for (i, r) in resp.items.iter().enumerate() {
+            let item = r.as_ref().unwrap();
+            assert_eq!(item.diag().lambda1, lambdas[i % lambdas.len()]);
+        }
+    }
+
+    #[test]
+    fn f32_batch_sweep_stays_narrow_and_matches_single_vector_sweeps() {
+        let vecs32: Vec<Vec<f32>> = (0..2)
+            .map(|s| clustered(40, 45 + s).iter().map(|&x| x as f32).collect())
+            .collect();
+        let lambdas = vec![1e-3, 1e-2];
+        let req = QuantRequest::batch_f32(vecs32.clone())
+            .method(QuantMethod::L1LeastSquare)
+            .sweep(lambdas.clone());
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), vecs32.len() * lambdas.len());
+        for (b, w) in vecs32.iter().enumerate() {
+            let single = QuantRequest::vector_f32(w.clone())
+                .method(QuantMethod::L1LeastSquare)
+                .sweep(lambdas.clone());
+            let want = Quantizer::new().run(&single).unwrap();
+            for (k, want_item) in want.items.iter().enumerate() {
+                let got = resp.items[b * lambdas.len() + k].as_ref().unwrap();
+                assert_eq!(got.precision(), Precision::F32, "never widened");
+                let (g, w_) = (
+                    got.as_f32().unwrap(),
+                    want_item.as_ref().unwrap().as_f32().unwrap(),
+                );
+                assert_eq!(g.codebook.levels, w_.codebook.levels, "vec {b} λ#{k}");
+                assert_eq!(g.l2_loss.to_bits(), w_.l2_loss.to_bits(), "vec {b} λ#{k}");
+            }
+        }
+    }
+
+    #[test]
+    fn response_compression_aggregates_over_items() {
+        let req = QuantRequest::batch(vec![clustered(200, 46), clustered(100, 47)])
+            .method(QuantMethod::KMeans)
+            .target_count(4);
+        let resp = Quantizer::new().run(&req).unwrap();
+        let agg = resp.compression(4).expect("successful items");
+        assert_eq!(agg.n, 300);
+        assert_eq!(agg.levels_requested, 4);
+        assert!(agg.levels_achieved <= 4);
+        assert!(agg.bits_per_value < 64.0);
+        assert!(agg.byte_ratio > 1.0);
+        // Per-item stats agree with a direct codebook computation.
+        let item = resp.items[0].as_ref().unwrap();
+        let direct = item.as_f64().unwrap().codebook.stats(4);
+        assert_eq!(item.compression(4), direct);
     }
 
     #[test]

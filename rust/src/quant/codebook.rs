@@ -143,6 +143,144 @@ impl Codebook<f32> {
     }
 }
 
+/// Compression accounting for one quantized payload — the numbers that
+/// decide whether a bit-width reduction actually won ("Towards the Limit
+/// of Network Quantization", Choi et al.: the entropy/bits-per-value view
+/// is the metric, not the level count alone).
+///
+/// Produced by [`Codebook::stats`] and surfaced on every response item
+/// ([`crate::quant::api::QuantItem::compression`] /
+/// [`crate::quant::api::Item::compression`]) and on coordinator results
+/// ([`crate::coordinator::job::JobOutput::compression`]).
+///
+/// ```
+/// use sqlsq::quant::{QuantMethod, QuantRequest, Quantizer};
+///
+/// let data: Vec<f64> = (0..1000).map(|i| ((i % 17) as f64).sin()).collect();
+/// let req = QuantRequest::vector(data).method(QuantMethod::KMeans).target_count(8);
+/// let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+/// let stats = item.compression(8);
+/// assert!(stats.levels_achieved <= stats.levels_requested);
+/// assert!(stats.bits_per_value < 64.0, "compact beats dense f64");
+/// assert!(stats.index_entropy <= stats.bits_per_index as f64 + 1e-9);
+/// assert!(stats.byte_ratio > 1.0, "{} compact vs {} dense bytes",
+///         stats.compact_bytes, stats.dense_bytes);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionStats {
+    /// Number of encoded elements `n`.
+    pub n: usize,
+    /// Distinct levels the quantizer actually produced (`k`).
+    pub levels_achieved: usize,
+    /// Levels the request asked for (`QuantOptions::target_values`; for
+    /// λ-driven methods this is the standing option, not a constraint).
+    pub levels_requested: usize,
+    /// Fixed-width bits per index, `⌈log₂ k⌉` (minimum 1).
+    pub bits_per_index: u32,
+    /// Total compact bits (indices + codebook) amortized per element —
+    /// the headline "bits/value" number.
+    pub bits_per_value: f64,
+    /// Shannon entropy of the index stream (bits/index): the Huffman
+    /// bound a variable-length coder could still reach below
+    /// `bits_per_index`.
+    pub index_entropy: f64,
+    /// Compact wire bytes: fixed-width indices + the codebook stored as
+    /// f32 (the Deep-Compression convention, on both lanes).
+    pub compact_bytes: usize,
+    /// Dense baseline bytes: `n` elements at the lane's element width
+    /// (8 for f64 payloads, 4 for f32).
+    pub dense_bytes: usize,
+    /// `dense_bytes / compact_bytes` — the compact-vs-dense ratio.
+    pub byte_ratio: f64,
+}
+
+impl CompressionStats {
+    /// Aggregate accounting over several payloads (a batch, a sweep, a
+    /// serve run). Byte and element counts sum; `bits_per_value` and
+    /// `byte_ratio` are recomputed from the totals; `index_entropy` is
+    /// the element-weighted mean; the level counts and `bits_per_index`
+    /// take the per-item maximum (for a homogeneous batch these are just
+    /// the per-item values). Returns `None` on an empty iterator.
+    pub fn aggregate<'a, I>(items: I) -> Option<CompressionStats>
+    where
+        I: IntoIterator<Item = &'a CompressionStats>,
+    {
+        let mut n = 0usize;
+        let mut compact = 0usize;
+        let mut dense = 0usize;
+        let mut entropy_weighted = 0.0f64;
+        let mut levels_achieved = 0usize;
+        let mut levels_requested = 0usize;
+        let mut bits_per_index = 0u32;
+        let mut any = false;
+        for s in items {
+            any = true;
+            n += s.n;
+            compact += s.compact_bytes;
+            dense += s.dense_bytes;
+            entropy_weighted += s.index_entropy * s.n as f64;
+            levels_achieved = levels_achieved.max(s.levels_achieved);
+            levels_requested = levels_requested.max(s.levels_requested);
+            bits_per_index = bits_per_index.max(s.bits_per_index);
+        }
+        if !any {
+            return None;
+        }
+        Some(CompressionStats {
+            n,
+            levels_achieved,
+            levels_requested,
+            bits_per_index,
+            bits_per_value: if n > 0 { compact as f64 * 8.0 / n as f64 } else { 0.0 },
+            index_entropy: if n > 0 { entropy_weighted / n as f64 } else { 0.0 },
+            compact_bytes: compact,
+            dense_bytes: dense,
+            byte_ratio: if compact > 0 { dense as f64 / compact as f64 } else { 0.0 },
+        })
+    }
+
+    /// One-line human summary (CLI, serve reports).
+    pub fn summary(&self) -> String {
+        format!(
+            "levels={}/{} bits/value={:.3} entropy={:.3} bits/idx \
+             compact={}B dense={}B ratio={:.2}x",
+            self.levels_achieved,
+            self.levels_requested,
+            self.bits_per_value,
+            self.index_entropy,
+            self.compact_bytes,
+            self.dense_bytes,
+            self.byte_ratio
+        )
+    }
+}
+
+impl<T: Scalar> Codebook<T> {
+    /// Compression accounting for this codebook. `levels_requested` is
+    /// the request's target level count (achieved-vs-requested is part of
+    /// the accounting); the dense baseline is `n` elements at this lane's
+    /// element width (`size_of::<T>()`).
+    pub fn stats(&self, levels_requested: usize) -> CompressionStats {
+        let compact = self.compressed_bytes();
+        let dense = self.len() * std::mem::size_of::<T>();
+        CompressionStats {
+            n: self.len(),
+            levels_achieved: self.k(),
+            levels_requested,
+            bits_per_index: self.bits_per_index(),
+            bits_per_value: if self.is_empty() {
+                0.0
+            } else {
+                compact as f64 * 8.0 / self.len() as f64
+            },
+            index_entropy: self.index_entropy(),
+            compact_bytes: compact,
+            dense_bytes: dense,
+            byte_ratio: if compact > 0 { dense as f64 / compact as f64 } else { 0.0 },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +381,60 @@ mod tests {
             other => panic!("expected InvalidInput, got {other:?}"),
         }
         assert!(Codebook::from_values(&[f32::NAN]).is_err());
+    }
+
+    #[test]
+    fn stats_match_manual_computation() {
+        let n = 1000usize;
+        let values: Vec<f64> = (0..n).map(|i| (i % 4) as f64).collect();
+        let cb = Codebook::from_values(&values).unwrap();
+        let s = cb.stats(4);
+        assert_eq!(s.n, n);
+        assert_eq!(s.levels_achieved, 4);
+        assert_eq!(s.levels_requested, 4);
+        assert_eq!(s.bits_per_index, 2);
+        // 2 bits × 1000 indices = 250 bytes + 4 levels × 4 bytes.
+        assert_eq!(s.compact_bytes, 250 + 16);
+        assert_eq!(s.dense_bytes, n * 8);
+        assert!((s.bits_per_value - (266.0 * 8.0 / 1000.0)).abs() < 1e-12);
+        assert!((s.index_entropy - 2.0).abs() < 1e-9, "uniform 4 levels = 2 bits");
+        assert!((s.byte_ratio - 8000.0 / 266.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_dense_baseline_is_lane_width() {
+        let v64: Vec<f64> = (0..100).map(|i| (i % 3) as f64).collect();
+        let v32: Vec<f32> = v64.iter().map(|&x| x as f32).collect();
+        let s64 = Codebook::from_values(&v64).unwrap().stats(3);
+        let s32 = Codebook::from_values(&v32).unwrap().stats(3);
+        assert_eq!(s64.dense_bytes, 800);
+        assert_eq!(s32.dense_bytes, 400);
+        // Compact side is identical (f32 codebook convention on both lanes).
+        assert_eq!(s64.compact_bytes, s32.compact_bytes);
+        assert!(s64.byte_ratio > s32.byte_ratio);
+    }
+
+    #[test]
+    fn stats_aggregate_sums_bytes_and_weights_entropy() {
+        let a = Codebook::from_values(&(0..400).map(|i| (i % 2) as f64).collect::<Vec<_>>())
+            .unwrap()
+            .stats(2);
+        let b = Codebook::from_values(&(0..100).map(|i| (i % 8) as f64).collect::<Vec<_>>())
+            .unwrap()
+            .stats(8);
+        let agg = CompressionStats::aggregate([&a, &b]).unwrap();
+        assert_eq!(agg.n, 500);
+        assert_eq!(agg.compact_bytes, a.compact_bytes + b.compact_bytes);
+        assert_eq!(agg.dense_bytes, a.dense_bytes + b.dense_bytes);
+        assert_eq!(agg.levels_achieved, 8);
+        assert_eq!(agg.bits_per_index, 3);
+        let want_entropy = (a.index_entropy * 400.0 + b.index_entropy * 100.0) / 500.0;
+        assert!((agg.index_entropy - want_entropy).abs() < 1e-12);
+        assert!(
+            (agg.bits_per_value - agg.compact_bytes as f64 * 8.0 / 500.0).abs() < 1e-12
+        );
+        assert!(CompressionStats::aggregate(std::iter::empty()).is_none());
+        assert!(!agg.summary().is_empty());
     }
 
     #[test]

@@ -19,10 +19,14 @@
 //!
 //! * **[`api`] — the unified request/response front door.** Build a
 //!   [`QuantRequest`] (vector / batch / matrix input; one-shot,
-//!   target-count or λ-sweep plan; precision lane; output form) and hand
-//!   it to [`Quantizer::run`]. Responses are codebook-first: each item
-//!   carries a [`Codebook`] (levels + `u32` indices) and materializes the
-//!   full vector only on demand. **This is the API for new code.**
+//!   target-count or λ-sweep plan — sweeps compose with batch/matrix
+//!   inputs as the batch×sweep plan, B groups × K λs in one request;
+//!   precision lane; output form) and hand it to [`Quantizer::run`].
+//!   Responses are codebook-first: each item carries a [`Codebook`]
+//!   (levels + `u32` indices), materializes the full vector only on
+//!   demand, and exposes compression accounting ([`CompressionStats`]:
+//!   bits/value, index entropy, achieved-vs-requested levels,
+//!   compact-vs-dense bytes). **This is the API for new code.**
 //! * [`quantize`] — the legacy one-shot wrapper (prepare + solve), now a
 //!   thin shim over the api core; kept source- and bitwise-compatible.
 //! * [`quantize_batch`] — many vectors, one method, fanned across scoped
@@ -60,7 +64,7 @@ pub mod unique;
 pub mod vmatrix;
 
 pub use api::{Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer};
-pub use codebook::{Codebook, CodebookF32};
+pub use codebook::{Codebook, CodebookF32, CompressionStats};
 pub use pipeline::{
     quantize_batch, quantize_batch_f32, quantize_f32, quantize_prepared, quantize_prepared_f32,
     quantize_sweep, quantize_sweep_f32, quantize_sweep_f32_with, quantize_sweep_with,

@@ -299,14 +299,16 @@ fn coordinator_legacy_submits_match_request_front_door() {
         .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
         .unwrap()
         .outcome
-        .unwrap();
+        .unwrap()
+        .into_output64();
     let via_request = c
         .quantize_blocking_request(
             QuantRequest::vector(data.clone()).method(QuantMethod::KMeans).options(opts.clone()),
         )
         .unwrap()
         .outcome
-        .unwrap();
+        .unwrap()
+        .into_output64();
     assert_outputs_match(&legacy, &direct, "legacy submit");
     assert_outputs_match(&via_request, &direct, "request submit");
 
@@ -317,7 +319,8 @@ fn coordinator_legacy_submits_match_request_front_door() {
         .quantize_blocking_f32(data32.clone(), QuantMethod::L1LeastSquare, opts32.clone())
         .unwrap()
         .outcome
-        .unwrap();
+        .unwrap()
+        .into_output64();
     let via_request32 = c
         .quantize_blocking_request(
             QuantRequest::vector_f32(data32.clone())
@@ -326,7 +329,8 @@ fn coordinator_legacy_submits_match_request_front_door() {
         )
         .unwrap()
         .outcome
-        .unwrap();
+        .unwrap()
+        .into_output64();
     assert_outputs_match(&via_request32, &legacy32, "f32 request submit");
     c.shutdown();
 }

@@ -121,7 +121,7 @@ fn auto_coordinator_with_broken_artifacts_falls_back_to_native() {
         )
         .unwrap();
     let out = res.outcome.expect("auto fallback must succeed");
-    assert_eq!(out.values.len(), data.len());
+    assert_eq!(out.materialize().len(), data.len());
     assert_eq!(res.served_by.label(), "native");
     coord.shutdown();
     std::fs::remove_dir_all(dir).ok();

@@ -152,7 +152,7 @@ fn coordinator_serves_gmm_via_runtime() {
         )
         .unwrap();
     let out = res.outcome.expect("runtime gmm job must succeed");
-    assert_eq!(out.values.len(), data.len());
+    assert_eq!(out.materialize().len(), data.len());
     assert!(out.distinct_values() <= 8);
     assert_eq!(res.served_by.label(), "runtime");
     coord.shutdown();
@@ -233,7 +233,7 @@ fn coordinator_auto_policy_serves_via_runtime() {
         )
         .unwrap();
     let out = res.outcome.expect("runtime-lane job must succeed");
-    assert_eq!(out.values.len(), data.len());
+    assert_eq!(out.materialize().len(), data.len());
     assert_eq!(res.served_by.label(), "runtime");
     // Native engines still work side by side.
     let res2 = coord

@@ -81,8 +81,11 @@ fn runtime_batch_results_match_per_job_dispatch() {
         assert_eq!(res.served_by, ServedBy::Runtime, "{method:?} must serve on the lane");
         let got = res.outcome.expect("runtime job must succeed");
         let direct = router::dispatch_runtime(&mut reference, data, *method, opts).unwrap();
-        assert_eq!(got.values, direct.values, "{method:?}: batched lane diverged");
-        assert_eq!(got.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        // Compact-native both ways: compare the codebooks themselves, and
+        // the materialized edge view.
+        assert_eq!(got.codebook(), direct.codebook, "{method:?}: batched lane diverged");
+        assert_eq!(got.materialize(), direct.materialize(), "{method:?}");
+        assert_eq!(got.l2_loss().to_bits(), direct.l2_loss.to_bits());
     }
     let snap = coord.shutdown();
     assert_eq!(snap.completed, 24);
@@ -133,8 +136,8 @@ fn runtime_batch_fans_across_sub_lanes_and_matches_serial() {
     }
     for (fanned_out, rx) in fanned.iter().zip(rxs1) {
         let serial_out = rx.recv().unwrap().outcome.expect("serial job must succeed");
-        assert_eq!(fanned_out.values, serial_out.values, "fan-out changed a result");
-        assert_eq!(fanned_out.l2_loss.to_bits(), serial_out.l2_loss.to_bits());
+        assert_eq!(fanned_out.codebook(), serial_out.codebook(), "fan-out changed a result");
+        assert_eq!(fanned_out.l2_loss().to_bits(), serial_out.l2_loss().to_bits());
     }
     coord1.shutdown();
 }
@@ -158,7 +161,11 @@ fn auto_policy_serves_failed_runtime_jobs_native() {
         assert_eq!(res.served_by, ServedBy::Native, "fallback must report native");
         let got = res.outcome.expect("fallback must succeed");
         let direct = sqlsq::quant::quantize(data, *method, opts).unwrap();
-        assert_eq!(got.values, direct.values, "{method:?}: fallback diverged from native");
+        assert_eq!(
+            got.materialize(),
+            direct.values,
+            "{method:?}: fallback diverged from native"
+        );
     }
     let snap = coord.shutdown();
     assert_eq!(snap.completed, 9);
@@ -307,8 +314,8 @@ fn f32_payloads_widen_defensively_on_the_runtime_lane() {
         assert_eq!(res.served_by, ServedBy::Runtime, "widened f32 still serves on the lane");
         let got = res.outcome.expect("widened job must succeed");
         let direct = router::dispatch_runtime(&mut reference, &wide, *method, &opts).unwrap();
-        assert_eq!(got.values, direct.values, "{method:?}: widening changed the result");
-        assert_eq!(got.l2_loss.to_bits(), direct.l2_loss.to_bits());
+        assert_eq!(got.codebook(), direct.codebook, "{method:?}: widening changed the result");
+        assert_eq!(got.l2_loss().to_bits(), direct.l2_loss.to_bits());
     }
     let snap = metrics.snapshot();
     assert_eq!(snap.completed, 2);
@@ -322,7 +329,7 @@ fn direct_serve_batch_runtime_fanout_is_bitwise_stable() {
     // the lane-logic level (no queues/timing involved): identical bits.
     let router = Router::new(Engine::Auto, Path::new("/nonexistent"), BackendKind::Shadow).unwrap();
     let mix = job_mix(16);
-    let mut run = |fanout: usize| -> Vec<sqlsq::quant::QuantOutput> {
+    let mut run = |fanout: usize| -> Vec<sqlsq::coordinator::job::JobOutput> {
         let metrics = Metrics::new();
         let mut jobs = Vec::new();
         let mut rxs = Vec::new();
@@ -339,8 +346,8 @@ fn direct_serve_batch_runtime_fanout_is_bitwise_stable() {
     let serial = run(1);
     let fanned = run(4);
     for (a, b) in serial.iter().zip(&fanned) {
-        assert_eq!(a.values, b.values);
-        assert_eq!(a.l2_loss.to_bits(), b.l2_loss.to_bits());
-        assert_eq!(a.diag.iterations, b.diag.iterations);
+        assert_eq!(a.codebook(), b.codebook());
+        assert_eq!(a.l2_loss().to_bits(), b.l2_loss().to_bits());
+        assert_eq!(a.diag().iterations, b.diag().iterations);
     }
 }

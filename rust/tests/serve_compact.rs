@@ -1,0 +1,245 @@
+//! The codebook-native serve path, pinned three ways:
+//!
+//! 1. compact results through the coordinator are **bitwise-identical**
+//!    to the PR-4 derive-at-edge path (run the legacy engine, materialize
+//!    a full vector, re-encode it at the edge) — on both precision lanes;
+//! 2. the compression accounting (`bits_per_value`, `index_entropy`,
+//!    byte counts) agrees with a brute-force recomputation from the
+//!    materialized vector — a property checked across seeds, methods and
+//!    lanes;
+//! 3. the batch×sweep plan returns B×K codebook items through one
+//!    submit, each bitwise-identical to the legacy per-vector sweep.
+
+use sqlsq::config::{Config, Engine};
+use sqlsq::coordinator::Coordinator;
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{
+    self, Codebook, CompressionStats, Precision, QuantMethod, QuantOptions, QuantRequest,
+    Quantizer,
+};
+
+fn clustered(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut v = Vec::with_capacity(n);
+    for i in 0..n {
+        let center = [0.1, 0.35, 0.6, 0.9][i % 4];
+        // Round so repeats occur (multiplicities > 1).
+        v.push(((center + rng.normal_with(0.0, 0.02)) * 200.0).round() / 200.0);
+    }
+    v
+}
+
+fn narrowed(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+fn native_coord() -> Coordinator {
+    Coordinator::start(Config {
+        workers: 2,
+        queue_capacity: 64,
+        max_batch: 8,
+        batch_wait_us: 100,
+        engine: Engine::Native,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn coordinator_compact_results_match_derive_at_edge_f64() {
+    let c = native_coord();
+    for (seed, method) in [
+        (1u64, QuantMethod::KMeans),
+        (2, QuantMethod::L1LeastSquare),
+        (3, QuantMethod::ClusterLs),
+        (4, QuantMethod::IterativeL1),
+    ] {
+        let data = clustered(80, seed);
+        let opts = QuantOptions {
+            lambda1: 0.02,
+            target_values: 4,
+            seed,
+            ..Default::default()
+        };
+        // The PR-4 path: legacy engine output (full vector), codebook
+        // derived at the edge by re-encoding the materialized values.
+        let legacy = quant::quantize(&data, method, &opts).unwrap();
+        let derived = Codebook::from_output(&legacy).unwrap();
+
+        // The compact-native path: the coordinator ships the codebook the
+        // engine finalize built; no full vector crosses the respond
+        // channel.
+        let res = c.quantize_blocking(data.clone(), method, opts).unwrap();
+        let out = res.outcome.expect("job must succeed");
+        assert_eq!(out.precision(), Precision::F64, "{method:?}");
+        assert_eq!(out.codebook().levels, derived.levels, "{method:?}: levels");
+        assert_eq!(out.codebook().indices, derived.indices, "{method:?}: indices");
+        assert_eq!(out.materialize(), legacy.values, "{method:?}: edge decode");
+        assert_eq!(out.l2_loss().to_bits(), legacy.l2_loss.to_bits(), "{method:?}: loss");
+        assert_eq!(out.clamped(), legacy.clamped, "{method:?}: clamp count");
+        assert_eq!(out.diag().nnz, legacy.diag.nnz, "{method:?}: nnz");
+        assert_eq!(out.diag().iterations, legacy.diag.iterations, "{method:?}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn coordinator_compact_results_match_derive_at_edge_f32() {
+    let c = native_coord();
+    for (seed, method) in [(11u64, QuantMethod::L1LeastSquare), (12, QuantMethod::KMeans)] {
+        let data32 = narrowed(&clustered(70, seed));
+        let opts = QuantOptions { lambda1: 0.03, target_values: 4, seed, ..Default::default() };
+        // PR-4 edge path for f32 payloads: the result surface widened
+        // first, then re-encoded.
+        let legacy_wide = quant::quantize_f32(&data32, method, &opts).unwrap().widen();
+        let derived = Codebook::from_output(&legacy_wide).unwrap();
+
+        let res = c.quantize_blocking_f32(data32.clone(), method, opts).unwrap();
+        let out = res.outcome.expect("f32 job must succeed");
+        assert_eq!(out.precision(), Precision::F32, "{method:?}: stays narrow");
+        assert_eq!(out.codebook().levels, derived.levels, "{method:?}: levels");
+        assert_eq!(out.codebook().indices, derived.indices, "{method:?}: indices");
+        assert_eq!(out.materialize(), legacy_wide.values, "{method:?}: edge decode");
+        assert_eq!(out.l2_loss().to_bits(), legacy_wide.l2_loss.to_bits(), "{method:?}");
+    }
+    c.shutdown();
+}
+
+/// Brute-force compression accounting from a materialized vector: the
+/// independent reference the serve path's stats must agree with.
+fn bruteforce_stats(values: &[f64], requested: usize, dense_elem_bytes: usize) -> CompressionStats {
+    let mut levels: Vec<f64> = values.to_vec();
+    levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    levels.dedup();
+    let k = levels.len();
+    let bits_per_index = (usize::BITS - (k - 1).leading_zeros()).max(1);
+    let idx_bits = values.len() * bits_per_index as usize;
+    let compact = idx_bits.div_ceil(8) + k * 4;
+    let n = values.len() as f64;
+    let entropy: f64 = levels
+        .iter()
+        .map(|l| values.iter().filter(|&&v| v == *l).count())
+        .filter(|&c| c > 0)
+        .map(|c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum();
+    let dense = values.len() * dense_elem_bytes;
+    CompressionStats {
+        n: values.len(),
+        levels_achieved: k,
+        levels_requested: requested,
+        bits_per_index,
+        bits_per_value: compact as f64 * 8.0 / n,
+        index_entropy: entropy,
+        compact_bytes: compact,
+        dense_bytes: dense,
+        byte_ratio: dense as f64 / compact as f64,
+    }
+}
+
+#[test]
+fn compression_stats_agree_with_bruteforce_recompute() {
+    for seed in 0..8u64 {
+        let method = [QuantMethod::KMeans, QuantMethod::L1LeastSquare, QuantMethod::ClusterLs]
+            [seed as usize % 3];
+        let data = clustered(60 + 11 * seed as usize, 200 + seed);
+        let requested = 3 + (seed as usize % 4);
+        let opts = QuantOptions {
+            lambda1: 0.02,
+            target_values: requested,
+            seed,
+            ..Default::default()
+        };
+
+        // f64 lane.
+        let req = QuantRequest::vector(data.clone()).method(method).options(opts.clone());
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let got = item.compression(requested);
+        let want = bruteforce_stats(&item.materialize_f64(), requested, 8);
+        assert_eq!(got.n, want.n, "seed {seed}");
+        assert_eq!(got.levels_achieved, want.levels_achieved, "seed {seed}");
+        assert_eq!(got.levels_requested, want.levels_requested, "seed {seed}");
+        assert_eq!(got.bits_per_index, want.bits_per_index, "seed {seed}");
+        assert_eq!(got.compact_bytes, want.compact_bytes, "seed {seed}");
+        assert_eq!(got.dense_bytes, want.dense_bytes, "seed {seed}");
+        assert!((got.bits_per_value - want.bits_per_value).abs() < 1e-12, "seed {seed}");
+        assert!((got.index_entropy - want.index_entropy).abs() < 1e-9, "seed {seed}");
+        assert!((got.byte_ratio - want.byte_ratio).abs() < 1e-12, "seed {seed}");
+
+        // f32 lane: same property, dense baseline is 4 bytes/element.
+        let data32 = narrowed(&data);
+        let req32 = QuantRequest::vector_f32(data32).method(method).options(opts);
+        let item32 = Quantizer::new().run(&req32).unwrap().into_single().unwrap();
+        let got32 = item32.compression(requested);
+        let want32 = bruteforce_stats(&item32.materialize_f64(), requested, 4);
+        assert_eq!(got32.levels_achieved, want32.levels_achieved, "seed {seed} f32");
+        assert_eq!(got32.compact_bytes, want32.compact_bytes, "seed {seed} f32");
+        assert_eq!(got32.dense_bytes, want32.dense_bytes, "seed {seed} f32");
+        assert!((got32.index_entropy - want32.index_entropy).abs() < 1e-9, "seed {seed} f32");
+    }
+}
+
+#[test]
+fn coordinator_job_stats_agree_with_bruteforce_recompute() {
+    let c = native_coord();
+    let data = clustered(90, 77);
+    let res = c
+        .quantize_blocking(
+            data,
+            QuantMethod::KMeans,
+            QuantOptions { target_values: 5, seed: 7, ..Default::default() },
+        )
+        .unwrap();
+    let out = res.outcome.unwrap();
+    let got = out.compression();
+    let want = bruteforce_stats(&out.materialize(), 5, 8);
+    assert_eq!(got.levels_achieved, want.levels_achieved);
+    assert_eq!(got.compact_bytes, want.compact_bytes);
+    assert!((got.index_entropy - want.index_entropy).abs() < 1e-9);
+    assert!((got.bits_per_value - want.bits_per_value).abs() < 1e-12);
+    c.shutdown();
+}
+
+#[test]
+fn batch_sweep_returns_bxk_codebook_items_through_one_submit() {
+    let vectors = vec![clustered(60, 50), clustered(50, 51), clustered(70, 52)];
+    let lambdas = vec![1e-4, 1e-3, 1e-2, 1e-1];
+    let (b, k) = (vectors.len(), lambdas.len());
+
+    // One submit: a single request through the Quantizer front door.
+    let req = QuantRequest::batch(vectors.clone())
+        .method(QuantMethod::L1LeastSquare)
+        .sweep(lambdas.clone());
+    let resp = Quantizer::new().run(&req).unwrap();
+    assert_eq!(resp.len(), b * k, "B×K items");
+
+    // Reference: the legacy per-vector warm-started sweep.
+    for (bi, w) in vectors.iter().enumerate() {
+        let prep = quant::PreparedInput::new(w).unwrap();
+        let legacy = quant::quantize_sweep(
+            &prep,
+            QuantMethod::L1LeastSquare,
+            &lambdas,
+            &QuantOptions::default(),
+        )
+        .unwrap();
+        for (ki, want) in legacy.iter().enumerate() {
+            let item = resp.items[bi * k + ki].as_ref().unwrap();
+            let q = item.as_f64().expect("f64 lane");
+            assert!(
+                q.values().is_none(),
+                "batch×sweep items stay compact (vec {bi} λ#{ki})"
+            );
+            assert_eq!(q.codebook.levels, want.levels, "vec {bi} λ#{ki}: levels");
+            assert_eq!(q.materialize(), want.values, "vec {bi} λ#{ki}: decode");
+            assert_eq!(q.l2_loss.to_bits(), want.l2_loss.to_bits(), "vec {bi} λ#{ki}");
+            assert_eq!(item.diag().lambda1, lambdas[ki], "vec {bi} λ#{ki}: λ");
+        }
+    }
+
+    // Aggregate accounting over the whole response works.
+    let agg = resp.compression(16).expect("all items succeeded");
+    assert_eq!(agg.n, vectors.iter().map(Vec::len).sum::<usize>() * k);
+}
