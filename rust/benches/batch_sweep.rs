@@ -6,8 +6,12 @@
 //! throughput and total-information-loss delta — and (ISSUE-3) the
 //! runtime lane's drained-batch service serial vs fanned across
 //! `runtime_fanout` sub-lanes (ShadowBackend: runtime semantics, no
-//! artifacts). Emits a `BENCH_batch_sweep.json` baseline (median
-//! seconds + speedups) for the perf trajectory.
+//! artifacts), and (ISSUE-6) the CD epoch loops before/after the
+//! kernel-layer restructure — in-bench copies of the seed's pre-kernel
+//! structured and dense inner loops raced against the current
+//! `lasso::solve` / `lasso::solve_dense` at fixed epoch budgets. Emits a
+//! `BENCH_batch_sweep.json` baseline (median seconds + speedups) for the
+//! perf trajectory.
 
 use sqlsq::bench_support::{active_config, black_box, Suite};
 use sqlsq::config::Engine;
@@ -16,12 +20,121 @@ use sqlsq::coordinator::{Job, Metrics, Payload, Router};
 use sqlsq::data::rng::Pcg32;
 use sqlsq::eval::workloads::lambda_grid;
 use sqlsq::jsonio::Json;
-use sqlsq::quant::{self, PreparedInput, PreparedInputF32, QuantMethod, QuantOptions};
+use sqlsq::quant::{
+    self, lasso, vmatrix::VBasis, PreparedInput, PreparedInputF32, QuantMethod, QuantOptions,
+};
 use sqlsq::runtime::{BackendKind, ShadowBackend};
 
 fn raster_vector(n: usize, levels: f64, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::seeded(seed);
     (0..n).map(|_| (rng.uniform(0.0, 1.0) * levels).round() / levels).collect()
+}
+
+fn sorted_values(m: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut v: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 1.0)).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    v
+}
+
+// ---------------------------------------------------------------------
+// "Before" copies of the seed's pre-kernel CD epoch loops, kept here so
+// the restructure stays raceable end-to-end: indexed residual rebuild,
+// per-coordinate col_norm_sq recompute, open-coded soft threshold, and
+// (dense) the separate suffix + correction loops that `shrink_axpy`
+// fused. No early stop — both sides run the exact epoch budget.
+// ---------------------------------------------------------------------
+
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn cd_structured_reference(
+    basis: &VBasis<f64>,
+    w: &[f64],
+    lambda1: f64,
+    epochs: usize,
+) -> Vec<f64> {
+    let m = basis.m();
+    let d = basis.diffs();
+    let mut alpha = vec![0.0f64; m];
+    let mut rec = vec![0.0f64; m];
+    let mut r = vec![0.0f64; m];
+    for _ in 0..epochs {
+        basis.apply_into(&alpha, &mut rec);
+        for i in 0..m {
+            r[i] = w[i] - rec[i];
+        }
+        let mut s = 0.0f64;
+        for j in (0..m).rev() {
+            s += r[j];
+            let dj = d[j];
+            if dj == 0.0 {
+                continue;
+            }
+            let cj = basis.col_norm_sq(j);
+            let rho = dj * s + cj * alpha[j];
+            let shrunk = if rho > lambda1 {
+                rho - lambda1
+            } else if rho < -lambda1 {
+                rho + lambda1
+            } else {
+                0.0
+            };
+            let new = shrunk / cj;
+            let delta = new - alpha[j];
+            if delta != 0.0 {
+                alpha[j] = new;
+                s -= (m - j) as f64 * dj * delta;
+            }
+        }
+    }
+    alpha
+}
+
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn cd_dense_reference(basis: &VBasis<f64>, w: &[f64], lambda1: f64, epochs: usize) -> Vec<f64> {
+    let m = basis.m();
+    let d = basis.diffs();
+    let mut alpha = vec![0.0f64; m];
+    let mut r = Vec::with_capacity(m);
+    for (i, wi) in w.iter().enumerate() {
+        let mut acc = 0.0f64;
+        for j in 0..=i {
+            acc += d[j] * alpha[j];
+        }
+        r.push(*wi - acc);
+    }
+    for _ in 0..epochs {
+        for j in 0..m {
+            let dj = d[j];
+            if dj == 0.0 {
+                continue;
+            }
+            let cj = basis.col_norm_sq(j);
+            let mut suffix = 0.0f64;
+            for ri in &r[j..] {
+                suffix += *ri;
+            }
+            let rho = suffix * dj + cj * alpha[j];
+            let shrunk = if rho > lambda1 {
+                rho - lambda1
+            } else if rho < -lambda1 {
+                rho + lambda1
+            } else {
+                0.0
+            };
+            let new = shrunk / cj;
+            let delta = new - alpha[j];
+            if delta != 0.0 {
+                alpha[j] = new;
+                for ri in &mut r[j..] {
+                    *ri -= dj * delta;
+                }
+            }
+        }
+    }
+    alpha
 }
 
 fn main() {
@@ -156,6 +269,70 @@ fn main() {
         .case("runtime_batch_fanout4_x16/n=2k", || run_runtime_batch(rt_fanout))
         .median;
 
+    // CD epochs before/after the kernel-layer restructure (ISSUE-6): the
+    // in-bench pre-kernel copies above vs the current solvers, fixed
+    // epoch budget on both sides (tol 0, support_patience 0 — no early
+    // stop), f64 lane (the bitwise-reference lane the restructure must
+    // not change).
+    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
+    let cd_epochs = 10usize;
+    let cd_lambda = 0.02f64;
+    let cd_cfg = lasso::LassoConfig {
+        lambda1: cd_lambda,
+        max_epochs: cd_epochs,
+        tol: 0.0,
+        support_patience: 0,
+        ..Default::default()
+    };
+    let structured_ms: &[usize] = if quick { &[256, 1024] } else { &[1024, 4096] };
+    let dense_m: usize = if quick { 256 } else { 1024 };
+    let mut cd_rows: Vec<Json> = Vec::new();
+    for &m in structured_ms {
+        let v = sorted_values(m, 42 + m as u64);
+        let basis = VBasis::new(&v);
+        let ref_s = suite
+            .case(&format!("cd_structured_reference/m={m}/{cd_epochs}ep"), || {
+                black_box(cd_structured_reference(&basis, &v, cd_lambda, cd_epochs));
+            })
+            .median;
+        let kern_s = suite
+            .case(&format!("cd_structured_kernel/m={m}/{cd_epochs}ep"), || {
+                black_box(lasso::solve(&basis, &v, &cd_cfg, None).unwrap());
+            })
+            .median;
+        cd_rows.push(Json::obj(vec![
+            ("path", Json::Str("structured".into())),
+            ("m", Json::Num(m as f64)),
+            ("epochs", Json::Num(cd_epochs as f64)),
+            ("reference_median_s", Json::Num(ref_s)),
+            ("kernel_median_s", Json::Num(kern_s)),
+            ("speedup", Json::Num(ref_s / kern_s.max(1e-12))),
+        ]));
+    }
+    {
+        let m = dense_m;
+        let v = sorted_values(m, 77);
+        let basis = VBasis::new(&v);
+        let ref_s = suite
+            .case(&format!("cd_dense_reference/m={m}/{cd_epochs}ep"), || {
+                black_box(cd_dense_reference(&basis, &v, cd_lambda, cd_epochs));
+            })
+            .median;
+        let kern_s = suite
+            .case(&format!("cd_dense_kernel/m={m}/{cd_epochs}ep"), || {
+                black_box(lasso::solve_dense(&basis, &v, &cd_cfg, None).unwrap());
+            })
+            .median;
+        cd_rows.push(Json::obj(vec![
+            ("path", Json::Str("dense".into())),
+            ("m", Json::Num(m as f64)),
+            ("epochs", Json::Num(cd_epochs as f64)),
+            ("reference_median_s", Json::Num(ref_s)),
+            ("kernel_median_s", Json::Num(kern_s)),
+            ("speedup", Json::Num(ref_s / kern_s.max(1e-12))),
+        ]));
+    }
+
     let sweep_speedup = one_shot_s / sweep_s.max(1e-12);
     let batch_speedup = serial_s / batch_s.max(1e-12);
     let runtime_batch_speedup = rt_serial_s / rt_fanout_s.max(1e-12);
@@ -191,6 +368,8 @@ fn main() {
         ("f64_loss_total", Json::Num(f64_loss_total)),
         ("f32_loss_total", Json::Num(f32_loss_total)),
         ("f32_rel_loss_delta", Json::Num(f32_rel_loss_delta)),
+        ("cd_epoch_series_quick", Json::Bool(quick)),
+        ("cd_epoch_series", Json::Arr(cd_rows)),
     ]);
     std::fs::write("BENCH_batch_sweep.json", json.to_pretty()).expect("write baseline json");
     println!("[written BENCH_batch_sweep.json]");

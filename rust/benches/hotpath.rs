@@ -1,6 +1,9 @@
 //! §Perf hot-path microbenchmarks (DESIGN §9): the before/after evidence
 //! for every optimization EXPERIMENTS.md records.
 //!
+//! * per-kernel series: `linalg::kernels` vs deliberately naive scalar
+//!   references, both precision lanes, across sizes — emitted into
+//!   `BENCH_hotpath.json` (the ISSUE-6 acceptance series);
 //! * structured O(m)/epoch CD vs the dense O(m²)/epoch oracle;
 //! * O(m) segment-mean refit vs the eq-9 normal-equation solve;
 //! * structured V ops vs dense matvec;
@@ -10,6 +13,9 @@
 use sqlsq::bench_support::{active_config, black_box, Suite};
 use sqlsq::cluster::kmeans::assign_sorted;
 use sqlsq::data::rng::Pcg32;
+use sqlsq::jsonio::Json;
+use sqlsq::linalg::kernels;
+use sqlsq::linalg::scalar::Scalar;
 use sqlsq::quant::{lasso, refit, unique::UniqueDecomp, vmatrix::VBasis};
 
 fn sorted_values(m: usize, seed: u64) -> Vec<f64> {
@@ -20,8 +26,180 @@ fn sorted_values(m: usize, seed: u64) -> Vec<f64> {
     v
 }
 
+// ---------------------------------------------------------------------
+// Scalar references for the per-kernel series: deliberately naive
+// indexed, bounds-checked loops, never inlined, so the comparison
+// measures the kernel layer against the code shape the hot path used
+// before it existed — not two spellings of the same optimized loop.
+// ---------------------------------------------------------------------
+
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn ref_sum<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = T::ZERO;
+    for i in 0..xs.len() {
+        acc += xs[i];
+    }
+    acc
+}
+
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn ref_dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut acc = T::ZERO;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn ref_axpy<T: Scalar>(a: T, x: &[T], y: &mut [T]) {
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// The pre-kernel two-loop CD coordinate update of `solve_dense`: strict
+/// suffix loop, open-coded soft threshold, then a separate correction
+/// loop recomputing `d_j·δ` per row.
+#[inline(never)]
+#[allow(clippy::needless_range_loop)]
+fn ref_shrink_axpy<T: Scalar>(
+    r: &mut [T],
+    dj: T,
+    cj: T,
+    alpha_j: T,
+    lambda1: T,
+    denom: T,
+) -> (T, T) {
+    let mut suffix = T::ZERO;
+    for i in 0..r.len() {
+        suffix += r[i];
+    }
+    let rho = suffix * dj + cj * alpha_j;
+    let shrunk = if rho > lambda1 {
+        rho - lambda1
+    } else if rho < -lambda1 {
+        rho + lambda1
+    } else {
+        T::ZERO
+    };
+    let new = shrunk / denom;
+    let delta = new - alpha_j;
+    if delta != T::ZERO {
+        for i in 0..r.len() {
+            r[i] -= dj * delta;
+        }
+    }
+    (new, delta)
+}
+
+fn kernel_row(kernel: &str, lane: &str, n: usize, ref_s: f64, kern_s: f64) -> Json {
+    Json::obj(vec![
+        ("kernel", Json::Str(kernel.into())),
+        ("lane", Json::Str(lane.into())),
+        ("n", Json::Num(n as f64)),
+        ("ref_median_s", Json::Num(ref_s)),
+        ("kernel_median_s", Json::Num(kern_s)),
+        ("speedup", Json::Num(ref_s / kern_s.max(1e-12))),
+    ])
+}
+
+/// One lane × one size of the per-kernel series (ref vs kernel for each
+/// primitive the CD hot path rides on).
+fn kernel_series<T: Scalar>(suite: &mut Suite, n: usize, rows: &mut Vec<Json>) {
+    let lane = T::ID;
+    let a: Vec<T> = (0..n).map(|i| T::from_f64(((i as f64) * 0.7311).sin() * 1.5)).collect();
+    let b: Vec<T> = (0..n).map(|i| T::from_f64(((i as f64) * 0.389).cos() * 0.8)).collect();
+
+    let r = suite.case(&format!("kernel_ref/sum/{lane}/n={n}"), || {
+        black_box(ref_sum(black_box(&a)));
+    });
+    let ref_s = r.median;
+    let k = suite.case(&format!("kernel/sum/{lane}/n={n}"), || {
+        black_box(kernels::sum(black_box(&a)));
+    });
+    rows.push(kernel_row("sum", lane, n, ref_s, k.median));
+
+    let r = suite.case(&format!("kernel_ref/dot/{lane}/n={n}"), || {
+        black_box(ref_dot(black_box(&a), black_box(&b)));
+    });
+    let ref_s = r.median;
+    let k = suite.case(&format!("kernel/dot/{lane}/n={n}"), || {
+        black_box(kernels::dot(black_box(&a), black_box(&b)));
+    });
+    rows.push(kernel_row("dot", lane, n, ref_s, k.median));
+
+    let scale = T::from_f64(1.000001);
+    let mut y = b.clone();
+    let r = suite.case(&format!("kernel_ref/axpy/{lane}/n={n}"), || {
+        ref_axpy(scale, black_box(&a), black_box(&mut y));
+        black_box(y[0]);
+    });
+    let ref_s = r.median;
+    let mut y = b.clone();
+    let k = suite.case(&format!("kernel/axpy/{lane}/n={n}"), || {
+        kernels::axpy(scale, black_box(&a), black_box(&mut y));
+        black_box(y[0]);
+    });
+    rows.push(kernel_row("axpy", lane, n, ref_s, k.median));
+
+    // shrink_axpy drives the residual toward its one-coordinate fixed
+    // point (δ → 0 after one call), so each iteration perturbs one row
+    // first — O(1), identical on both sides — to keep the correction
+    // loop live.
+    let dj = T::ONE;
+    let cj = T::from_usize(n);
+    let alpha_j = T::from_f64(0.3);
+    let lambda1 = T::from_f64(0.01);
+    let mut r_buf = a.clone();
+    let mut i = 0usize;
+    let r = suite.case(&format!("kernel_ref/shrink_axpy/{lane}/n={n}"), || {
+        i = (i + 1) % n.max(1);
+        r_buf[i] += T::ONE;
+        black_box(ref_shrink_axpy(black_box(&mut r_buf), dj, cj, alpha_j, lambda1, cj));
+    });
+    let ref_s = r.median;
+    let mut r_buf = a.clone();
+    let mut i = 0usize;
+    let k = suite.case(&format!("kernel/shrink_axpy/{lane}/n={n}"), || {
+        i = (i + 1) % n.max(1);
+        r_buf[i] += T::ONE;
+        black_box(kernels::shrink_axpy(black_box(&mut r_buf), dj, cj, alpha_j, lambda1, cj));
+    });
+    rows.push(kernel_row("shrink_axpy", lane, n, ref_s, k.median));
+}
+
 fn main() {
     let mut suite = Suite::with_config("Hot paths", active_config());
+
+    // --- per-kernel series (ISSUE-6 acceptance): ref vs kernel ---------
+    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
+    let kernel_sizes: &[usize] = if quick { &[512, 1024] } else { &[1024, 4096, 16384] };
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    for &n in kernel_sizes {
+        kernel_series::<f64>(&mut suite, n, &mut kernel_rows);
+        kernel_series::<f32>(&mut suite, n, &mut kernel_rows);
+    }
+
+    // Bit-plane kernels (pack/unpack) — kernel-only series: the "before"
+    // was not storing a packed plane at all, so there is no scalar
+    // reference to race; the number that matters is the absolute cost
+    // composing with the packed-codebook win.
+    {
+        let n = *kernel_sizes.last().unwrap();
+        let idx: Vec<u32> = (0..n).map(|i| ((i * 7) % 300) as u32).collect();
+        let bits = kernels::bits_per_index_for(300);
+        suite.case(&format!("kernel/pack_indices/9b/n={n}"), || {
+            black_box(kernels::pack_indices(black_box(&idx), bits));
+        });
+        let words = kernels::pack_indices(&idx, bits);
+        suite.case(&format!("kernel/unpack_indices/9b/n={n}"), || {
+            black_box(kernels::unpack_indices(black_box(&words), bits, n));
+        });
+    }
 
     // --- CD epochs: structured vs dense --------------------------------
     for &m in &[256usize, 1024] {
@@ -117,4 +295,30 @@ fn main() {
     coord.shutdown();
 
     suite.write_csv(std::path::Path::new("reports")).ok();
+
+    // Machine-readable evidence: the per-kernel series plus every suite
+    // case, so downstream tooling (and the acceptance check) can read
+    // speedups without scraping stdout.
+    let sizes_json: Vec<Json> = kernel_sizes.iter().map(|&n| Json::Num(n as f64)).collect();
+    let cases: Vec<Json> = suite
+        .rows()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("median_s", Json::Num(s.median)),
+                ("min_s", Json::Num(s.min)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("quick", Json::Bool(quick)),
+        ("kernel_sizes", Json::Arr(sizes_json)),
+        ("kernels", Json::Arr(kernel_rows)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_hotpath.json", json.to_pretty()) {
+        eprintln!("warning: could not write BENCH_hotpath.json: {e}");
+    }
 }

@@ -229,8 +229,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     println!("iterations        : {}", item.diag().iterations);
     println!("nnz / lambda1     : {} / {:.3e}", item.diag().nnz, item.diag().lambda1);
     println!(
-        "bits/value        : {:.3} ({} bits/idx fixed, entropy {:.3})",
-        stats.bits_per_value, stats.bits_per_index, stats.index_entropy
+        "bits/value        : {:.3} (idx {}→{} bits stored→packed, entropy {:.3})",
+        stats.bits_per_value,
+        stats.bits_per_idx_stored,
+        stats.bits_per_idx_packed,
+        stats.index_entropy
     );
     println!(
         "compact vs dense  : {} B vs {} B ({:.2}x)",
@@ -317,17 +320,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         precision.id(),
     );
     println!(
-        "{:>12} {:>9} {:>14} {:>11} {:>9} {:>9}",
-        "lambda1", "distinct", "l2_loss", "iterations", "bits/val", "entropy"
+        "{:>12} {:>9} {:>14} {:>11} {:>9} {:>9} {:>9}",
+        "lambda1", "distinct", "l2_loss", "iterations", "bits/val", "idx bits", "entropy"
     );
     for (item, &lambda) in items.iter().zip(&lambdas) {
         let stats = item.compression(requested);
         println!(
-            "{lambda:>12.4e} {:>9} {:>14.6e} {:>11} {:>9.3} {:>9.3}",
+            "{lambda:>12.4e} {:>9} {:>14.6e} {:>11} {:>9.3} {:>9} {:>9.3}",
             item.distinct_values(),
             item.l2_loss(),
             item.diag().iterations,
             stats.bits_per_value,
+            format!("{}→{}", stats.bits_per_idx_stored, stats.bits_per_idx_packed),
             stats.index_entropy
         );
     }

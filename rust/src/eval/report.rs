@@ -96,8 +96,8 @@ impl Table {
         Table::new(
             title,
             &[
-                "label", "n", "levels", "requested", "bits/idx", "bits/val", "entropy",
-                "compact_B", "dense_B", "ratio",
+                "label", "n", "levels", "requested", "idx_bits_stored/packed", "bits/val",
+                "entropy", "compact_B", "dense_B", "ratio",
             ],
         )
     }
@@ -110,7 +110,7 @@ impl Table {
             s.n.to_string(),
             s.levels_achieved.to_string(),
             s.levels_requested.to_string(),
-            s.bits_per_index.to_string(),
+            format!("{}/{}", s.bits_per_idx_stored, s.bits_per_idx_packed),
             format!("{:.3}", s.bits_per_value),
             format!("{:.3}", s.index_entropy),
             s.compact_bytes.to_string(),

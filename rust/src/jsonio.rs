@@ -38,6 +38,34 @@
 //!   accounting of [`stats_to_json`]). Consumers must ignore fields they
 //!   don't know.
 //!
+//! **Packed-codebook form** (the bit-packed index plane of
+//! [`crate::quant::PackedCodebook`], emitted by
+//! [`packed_codebook_to_json`] / parsed by [`packed_codebook_from_json`]):
+//!
+//! ```json
+//! {
+//!   "levels":     [0.1, 0.5, 0.9],
+//!   "bits":       2,
+//!   "len":        6,
+//!   "packed_hex": "9001"
+//! }
+//! ```
+//!
+//! * `levels` — as in the codebook form (sorted ascending, `k ≥ 1`).
+//! * `bits` — integer `1..=32`: fixed bits per index, `⌈log₂ k⌉`.
+//! * `len` — integer: number of encoded elements `n`.
+//! * `packed_hex` — lowercase hex string of exactly `⌈n·bits / 8⌉` bytes
+//!   (`2·⌈n·bits/8⌉` hex digits): the index plane packed LSB-first into
+//!   little-endian bytes — index `i` occupies plane bits
+//!   `[i·bits, (i+1)·bits)`, and plane bit `b` is bit `b mod 8` of byte
+//!   `b / 8`. Producers emit the final byte's pad bits as zero; decoders
+//!   ignore them. (Hex rather than a JSON number array: packed words
+//!   exceed the integer range a JSON f64 can carry exactly.)
+//! * unknown fields are ignored, as in the codebook form.
+//!
+//! Decoders do **not** require `bits == ⌈log₂ k⌉` (a producer may choose
+//! a wider plane), but every unpacked index must be `< k`.
+//!
 //! **Values form** (the dense fallback for consumers that want the
 //! full-length vector):
 //!
@@ -65,7 +93,7 @@
 //! exactly when serialized, so a wire round trip is lossless for both
 //! lanes. Producers emit keys in deterministic (sorted) order.
 
-use crate::quant::{Codebook, CompressionStats};
+use crate::quant::{Codebook, CompressionStats, PackedCodebook, PackedIndices};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -508,18 +536,129 @@ pub fn values_from_json(j: &Json) -> Result<Vec<f64>> {
 
 /// Serialize compression accounting as the wire's optional `stats`
 /// object (all fields numeric, names matching [`CompressionStats`]).
+/// `bits_per_index` is kept alongside the newer
+/// `bits_per_idx_stored`/`bits_per_idx_packed` pair — it has always meant
+/// the packed width and existing consumers read it.
 pub fn stats_to_json(s: &CompressionStats) -> Json {
     Json::obj(vec![
         ("n", Json::Num(s.n as f64)),
         ("levels_achieved", Json::Num(s.levels_achieved as f64)),
         ("levels_requested", Json::Num(s.levels_requested as f64)),
         ("bits_per_index", Json::Num(s.bits_per_index as f64)),
+        ("bits_per_idx_stored", Json::Num(s.bits_per_idx_stored as f64)),
+        ("bits_per_idx_packed", Json::Num(s.bits_per_idx_packed as f64)),
         ("bits_per_value", Json::Num(s.bits_per_value)),
         ("index_entropy", Json::Num(s.index_entropy)),
         ("compact_bytes", Json::Num(s.compact_bytes as f64)),
         ("dense_bytes", Json::Num(s.dense_bytes as f64)),
         ("byte_ratio", Json::Num(s.byte_ratio)),
     ])
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+fn hex_decode(text: &str) -> Result<Vec<u8>> {
+    if text.len() % 2 != 0 {
+        return Err(Error::InvalidInput("packed wire: odd hex length".into()));
+    }
+    let digit = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::InvalidInput(format!(
+                "packed wire: bad hex digit '{}'",
+                c as char
+            ))),
+        }
+    };
+    text.as_bytes()
+        .chunks_exact(2)
+        .map(|p| Ok(digit(p[0])? << 4 | digit(p[1])?))
+        .collect()
+}
+
+/// Serialize a packed codebook into the wire's **packed-codebook form**:
+/// `{"levels":[..],"bits":b,"len":n,"packed_hex":".."}` plus any `extra`
+/// producer fields (see the module docs for the byte-level layout).
+pub fn packed_codebook_to_json(cb: &PackedCodebook, extra: Vec<(&str, Json)>) -> Json {
+    let idx = &cb.indices;
+    let nbytes = idx.packed_bytes();
+    let mut bytes = Vec::with_capacity(nbytes);
+    'outer: for w in idx.words() {
+        for b in w.to_le_bytes() {
+            if bytes.len() == nbytes {
+                break 'outer;
+            }
+            bytes.push(b);
+        }
+    }
+    let mut fields = extra;
+    fields.push(("levels", Json::Arr(cb.levels.iter().map(|&v| Json::Num(v)).collect())));
+    fields.push(("bits", Json::Num(f64::from(idx.bits()))));
+    fields.push(("len", Json::Num(idx.len() as f64)));
+    fields.push(("packed_hex", Json::Str(hex_encode(&bytes))));
+    Json::obj(fields)
+}
+
+/// Parse the wire's packed-codebook form back into a [`PackedCodebook`].
+/// Validates the protocol invariants — `levels` non-empty and sorted
+/// ascending, `bits ∈ 1..=32`, `packed_hex` exactly `⌈len·bits / 8⌉`
+/// bytes, every unpacked index `< levels.len()` — and ignores unknown
+/// fields.
+pub fn packed_codebook_from_json(j: &Json) -> Result<PackedCodebook> {
+    let bad = |msg: &str| Error::InvalidInput(format!("packed codebook wire: {msg}"));
+    let levels: Vec<f64> = j
+        .get("levels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'levels' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad("non-numeric level")))
+        .collect::<Result<_>>()?;
+    if levels.is_empty() {
+        return Err(bad("'levels' must be non-empty"));
+    }
+    if levels.windows(2).any(|w| !(w[0] < w[1])) {
+        return Err(bad("'levels' must be sorted strictly ascending"));
+    }
+    let bits = j
+        .get("bits")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("missing integer 'bits'"))? as u32;
+    let len = j
+        .get("len")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("missing integer 'len'"))?;
+    let hex = j
+        .get("packed_hex")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing string 'packed_hex'"))?;
+    let bytes = hex_decode(hex)?;
+    if !(1..=32).contains(&bits) {
+        return Err(bad(&format!("'bits' must be in 1..=32, got {bits}")));
+    }
+    let want_bytes = (len * bits as usize).div_ceil(8);
+    if bytes.len() != want_bytes {
+        return Err(bad(&format!(
+            "'packed_hex' is {} bytes, expected {want_bytes} for {len} × {bits}-bit indices",
+            bytes.len()
+        )));
+    }
+    let mut words = vec![0u64; (len * bits as usize).div_ceil(64)];
+    for (i, &b) in bytes.iter().enumerate() {
+        words[i / 8] |= u64::from(b) << ((i % 8) * 8);
+    }
+    let indices = PackedIndices::from_raw(words, bits, len)?;
+    if indices.unpack().iter().any(|&i| (i as usize) >= levels.len()) {
+        return Err(bad("unpacked index out of range of 'levels'"));
+    }
+    Ok(PackedCodebook { levels, indices })
 }
 
 #[cfg(test)]
@@ -643,7 +782,84 @@ mod tests {
         assert_eq!(j.get("n").unwrap().as_usize(), Some(64));
         assert_eq!(j.get("bits_per_value").unwrap().as_f64(), Some(s.bits_per_value));
         assert_eq!(j.get("byte_ratio").unwrap().as_f64(), Some(s.byte_ratio));
+        // Stored vs packed index widths (the dense codebook stores u32;
+        // `bits_per_index` keeps its historical packed meaning).
+        assert_eq!(j.get("bits_per_idx_stored").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("bits_per_idx_packed").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("bits_per_index").unwrap().as_usize(), Some(2));
         // Round-trips through text.
         assert!(parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn packed_codebook_wire_matches_spec_example() {
+        let cb = Codebook {
+            levels: vec![0.1, 0.5, 0.9],
+            indices: vec![0, 0, 1, 2, 1, 0],
+        }
+        .pack();
+        let j = packed_codebook_to_json(&cb, vec![]);
+        assert_eq!(j.get("bits").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("len").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("packed_hex").unwrap().as_str(), Some("9001"));
+    }
+
+    #[test]
+    fn packed_codebook_wire_roundtrip() {
+        for k in [1usize, 2, 3, 255, 256, 257, 300] {
+            let values: Vec<f64> = (0..700).map(|i| ((i * 11) % k) as f64).collect();
+            let packed = Codebook::from_values(&values).unwrap().pack();
+            let j = packed_codebook_to_json(&packed, vec![("lambda", Json::Num(0.5))]);
+            let parsed = parse(&j.to_string()).unwrap();
+            assert_eq!(parsed.get("lambda").unwrap().as_f64(), Some(0.5));
+            let back = packed_codebook_from_json(&parsed).unwrap();
+            assert_eq!(back, packed, "k={k}");
+            assert_eq!(back.decode(), values, "k={k}");
+        }
+    }
+
+    #[test]
+    fn packed_codebook_wire_rejects_protocol_violations() {
+        let bad = |t: &str| packed_codebook_from_json(&parse(t).unwrap());
+        let ok = r#"{"levels":[1.0,2.0],"bits":1,"len":2,"packed_hex":"02"}"#;
+        assert!(bad(ok).is_ok());
+        assert!(bad(r#"{"bits":1,"len":0,"packed_hex":""}"#).is_err(), "missing levels");
+        assert!(
+            bad(r#"{"levels":[],"bits":1,"len":0,"packed_hex":""}"#).is_err(),
+            "empty levels"
+        );
+        assert!(
+            bad(r#"{"levels":[2.0,1.0],"bits":1,"len":0,"packed_hex":""}"#).is_err(),
+            "unsorted levels"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":0,"len":0,"packed_hex":""}"#).is_err(),
+            "bits out of range"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":33,"len":0,"packed_hex":""}"#).is_err(),
+            "bits too wide"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":1,"len":9,"packed_hex":"00"}"#).is_err(),
+            "plane too short"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":1,"len":2,"packed_hex":"0"}"#).is_err(),
+            "odd hex"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":1,"len":2,"packed_hex":"zz"}"#).is_err(),
+            "bad hex digit"
+        );
+        assert!(
+            bad(r#"{"levels":[1.0],"bits":1,"len":2,"packed_hex":"02"}"#).is_err(),
+            "unpacked index out of range"
+        );
+        // Unknown fields are ignored, per the wire contract.
+        assert!(
+            bad(r#"{"levels":[1.0,2.0],"bits":1,"len":2,"packed_hex":"03","future":1}"#)
+                .is_ok()
+        );
     }
 }

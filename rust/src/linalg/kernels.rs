@@ -1,0 +1,497 @@
+//! Vectorization-friendly kernels for the CD hot path (S24).
+//!
+//! Every request the quantizer serves bottoms out in a handful of slice
+//! primitives: suffix/dot reductions and residual updates inside the
+//! coordinate-descent epoch loop (`quant::lasso`), segment fills in the
+//! support refit (`quant::refit`), gathers through the unique
+//! decomposition's inverse map in the compact finalize
+//! (`quant::api::finish_compact_parts`), and ⌈log₂ k⌉-bit index planes
+//! for the packed codebook (`quant::codebook::PackedIndices`). This
+//! module is that floor, written once, chunked, and generic over
+//! [`Scalar`].
+//!
+//! ## The bitwise-f64 contract
+//!
+//! The f64 lane is the repository's bitwise reference
+//! (`tests/api_equivalence.rs`, `quant::types::finalize`): kernel results
+//! must be **bit-for-bit identical** to the scalar loops they replaced.
+//! Floating-point addition is not associative, so on the f64 lane every
+//! reduction here ([`sum`], [`dot`], [`nrm2`], the suffix sum inside
+//! [`shrink_axpy`], [`gather_sq_loss`]) keeps a **single accumulator in
+//! strict left-to-right order** — chunking is pure loop unrolling and
+//! never reassociates. The throughput win on f64 therefore comes from the
+//! element-wise kernels (which autovectorize freely: [`axpy`], [`sub`],
+//! [`sub_scalar`], [`scatter_levels`], the gathers and the bit packers)
+//! and from the call structure (fused passes, cached column norms, no
+//! per-coordinate recomputation) — not from reordering f64 sums.
+//!
+//! On the f32 lane results are tolerance-gated, not bitwise
+//! ([`Scalar::STRICT_ACCUMULATION`] is `false`), so reductions split the
+//! slice across [`LANES`] independent accumulators: the FP add chains run
+//! in parallel (or vectorize outright) instead of serializing on add
+//! latency. The association order is still a pure function of the slice
+//! length, so f32 results remain deterministic run-to-run.
+//!
+//! Per-kernel measurements live in `benches/hotpath.rs`, which emits
+//! `BENCH_hotpath.json` (scalar-reference vs kernel, both lanes, across
+//! sizes).
+
+use super::scalar::Scalar;
+
+/// Unroll width for strict (order-preserving) loops.
+const CHUNK: usize = 8;
+/// Independent accumulators used by reassociating (f32-lane) reductions.
+const LANES: usize = 4;
+
+// ---------------------------------------------------------------------
+// Reductions
+// ---------------------------------------------------------------------
+
+/// Strict left-to-right sum — the exact legacy association order.
+#[inline]
+fn sum_strict<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = T::ZERO;
+    let mut chunks = xs.chunks_exact(CHUNK);
+    for ch in chunks.by_ref() {
+        for &x in ch {
+            acc += x;
+        }
+    }
+    for &x in chunks.remainder() {
+        acc += x;
+    }
+    acc
+}
+
+/// Multi-accumulator sum (reassociates; f32 lane only). The partials
+/// combine pairwise, then the remainder folds in left-to-right.
+#[inline]
+fn sum_lanes<T: Scalar>(xs: &[T]) -> T {
+    let mut a = [T::ZERO; LANES];
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        a[0] += ch[0];
+        a[1] += ch[1];
+        a[2] += ch[2];
+        a[3] += ch[3];
+    }
+    let mut acc = (a[0] + a[1]) + (a[2] + a[3]);
+    for &x in chunks.remainder() {
+        acc += x;
+    }
+    acc
+}
+
+/// `Σ xs[i]`. Strict order on lanes with the bitwise contract
+/// ([`Scalar::STRICT_ACCUMULATION`]); multi-accumulator otherwise.
+#[inline]
+pub fn sum<T: Scalar>(xs: &[T]) -> T {
+    if T::STRICT_ACCUMULATION {
+        sum_strict(xs)
+    } else {
+        sum_lanes(xs)
+    }
+}
+
+/// Strict left-to-right dot product.
+#[inline]
+fn dot_strict<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut acc = T::ZERO;
+    let mut pa = a.chunks_exact(CHUNK);
+    let mut pb = b.chunks_exact(CHUNK);
+    for (ca, cb) in pa.by_ref().zip(pb.by_ref()) {
+        for (&x, &y) in ca.iter().zip(cb) {
+            acc += x * y;
+        }
+    }
+    for (&x, &y) in pa.remainder().iter().zip(pb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Multi-accumulator dot product (reassociates; f32 lane only).
+#[inline]
+fn dot_lanes<T: Scalar>(a: &[T], b: &[T]) -> T {
+    let mut acc4 = [T::ZERO; LANES];
+    let mut pa = a.chunks_exact(LANES);
+    let mut pb = b.chunks_exact(LANES);
+    for (ca, cb) in pa.by_ref().zip(pb.by_ref()) {
+        acc4[0] += ca[0] * cb[0];
+        acc4[1] += ca[1] * cb[1];
+        acc4[2] += ca[2] * cb[2];
+        acc4[3] += ca[3] * cb[3];
+    }
+    let mut acc = (acc4[0] + acc4[1]) + (acc4[2] + acc4[3]);
+    for (&x, &y) in pa.remainder().iter().zip(pb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `Σ a[i]·b[i]` over equal-length slices. Strict order on the f64 lane.
+#[inline]
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+    debug_assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    if T::STRICT_ACCUMULATION {
+        dot_strict(a, b)
+    } else {
+        dot_lanes(a, b)
+    }
+}
+
+/// Euclidean norm `‖xs‖₂`. The squared sum follows the lane's
+/// accumulation rule; the square root is taken in f64 and narrowed back,
+/// so the f64 lane is exact.
+#[inline]
+pub fn nrm2<T: Scalar>(xs: &[T]) -> T {
+    let ss = dot(xs, xs);
+    T::from_f64(ss.to_f64().sqrt())
+}
+
+// ---------------------------------------------------------------------
+// Element-wise updates (no reduction — autovectorize on both lanes)
+// ---------------------------------------------------------------------
+
+/// `y[i] += a · x[i]` over equal-length slices.
+#[inline]
+pub fn axpy<T: Scalar>(a: T, x: &[T], y: &mut [T]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `out[i] = a[i] − b[i]` over equal-length slices (the residual build
+/// `r = ŵ − Vα` of the structured CD epoch).
+#[inline]
+pub fn sub<T: Scalar>(a: &[T], b: &[T], out: &mut [T]) {
+    debug_assert_eq!(a.len(), out.len(), "sub: length mismatch");
+    debug_assert_eq!(b.len(), out.len(), "sub: length mismatch");
+    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// `y[i] −= c` — the rank-one residual correction of a CD coordinate
+/// update over the difference basis (every covered row moves by the same
+/// amount).
+#[inline]
+pub fn sub_scalar<T: Scalar>(y: &mut [T], c: T) {
+    for yi in y {
+        *yi -= c;
+    }
+}
+
+/// Soft-thresholding operator `S_λ(x)` (paper §3.3).
+#[inline]
+pub fn shrink<T: Scalar>(x: T, lambda: T) -> T {
+    if x > lambda {
+        x - lambda
+    } else if x < -lambda {
+        x + lambda
+    } else {
+        T::ZERO
+    }
+}
+
+/// Fused CD coordinate update over a residual suffix `r = r[j..]`
+/// (`quant::lasso::solve_dense`'s inner loop): suffix-sum the residual
+/// (lane accumulation rule), soft-threshold the coordinate, and apply the
+/// residual correction in one kernel call. Returns `(new_alpha, delta)`;
+/// the residual is only touched when `delta ≠ 0`, exactly like the legacy
+/// loop. Arithmetic sequence on the f64 lane is bit-identical to the
+/// historical two-loop form:
+///
+/// ```text
+/// suffix = Σ r_i;  ρ = suffix·d_j + c_j·α_j;
+/// α_j' = S_{λ₁}(ρ)/denom;  r_i −= d_j·(α_j' − α_j)
+/// ```
+#[inline]
+pub fn shrink_axpy<T: Scalar>(
+    r: &mut [T],
+    dj: T,
+    cj: T,
+    alpha_j: T,
+    lambda1: T,
+    denom: T,
+) -> (T, T) {
+    let suffix = sum(r);
+    let rho = suffix * dj + cj * alpha_j;
+    let new = shrink(rho, lambda1) / denom;
+    let delta = new - alpha_j;
+    if delta != T::ZERO {
+        sub_scalar(r, dj * delta);
+    }
+    (new, delta)
+}
+
+// ---------------------------------------------------------------------
+// Level-space finalize: scatters and gathers
+// ---------------------------------------------------------------------
+
+/// Fill a segment with one level value (the piecewise-constant scatter of
+/// the support refit: every row of a segment takes the segment's level).
+#[inline]
+pub fn scatter_levels<T: Scalar>(dst: &mut [T], level: T) {
+    for d in dst {
+        *d = level;
+    }
+}
+
+/// Gather `levels[indices[i]]` — codebook decode.
+#[inline]
+pub fn gather_levels<T: Scalar>(levels: &[T], indices: &[u32]) -> Vec<T> {
+    indices.iter().map(|&i| levels[i as usize]).collect()
+}
+
+/// Gather `table[idx[i]]` for `u32` tables — the compact finalize's
+/// per-element index build through the unique decomposition's inverse map.
+#[inline]
+pub fn gather_indices(table: &[u32], idx: &[usize]) -> Vec<u32> {
+    idx.iter().map(|&j| table[j]).collect()
+}
+
+/// Histogram of an index stream over `k` levels (index entropy, level
+/// occupancy). Panics if an index is out of range — codebook indices are
+/// validated at construction.
+#[inline]
+pub fn gather_counts(indices: &[u32], k: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; k];
+    for &i in indices {
+        counts[i as usize] += 1;
+    }
+    counts
+}
+
+/// Squared-l2 loss between the original vector and its level-space
+/// reconstruction, gathered through the inverse map:
+/// `Σ (original[i] − level_values[inverse[i]])²`, accumulated in f64 in
+/// input order on **both** lanes — this is the compact finalize's loss
+/// and must stay bit-identical to the historical full-vector path
+/// (`quant::types::finalize`), so it never reassociates.
+#[inline]
+pub fn gather_sq_loss<T: Scalar>(original: &[T], inverse: &[usize], level_values: &[T]) -> f64 {
+    debug_assert_eq!(original.len(), inverse.len(), "gather_sq_loss: length mismatch");
+    let mut l2 = 0.0f64;
+    for (o, &j) in original.iter().zip(inverse) {
+        let d = (*o - level_values[j]).to_f64();
+        l2 += d * d;
+    }
+    l2
+}
+
+// ---------------------------------------------------------------------
+// ⌈log₂ k⌉-bit index planes
+// ---------------------------------------------------------------------
+
+/// Fixed-width bits per index for a `k`-level codebook: `⌈log₂ k⌉`,
+/// minimum 1 (`k = 1` still needs one bit per the wire convention).
+#[inline]
+pub fn bits_per_index_for(k: usize) -> u32 {
+    (usize::BITS - (k - 1).leading_zeros()).max(1)
+}
+
+/// Pack `bits`-wide indices (1 ≤ bits ≤ 32) into a tight little-endian
+/// `u64` plane: index `i` occupies bits `[i·bits, (i+1)·bits)` counted
+/// LSB-first, straddling word boundaries. Values wider than `bits` are
+/// masked (callers derive `bits` from `k`, so in-range indices are
+/// unchanged).
+pub fn pack_indices(indices: &[u32], bits: u32) -> Vec<u64> {
+    assert!((1..=32).contains(&bits), "pack_indices: bits must be in 1..=32, got {bits}");
+    let bits = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    let total_bits = indices.len() * bits;
+    let mut words = vec![0u64; total_bits.div_ceil(64)];
+    let mut bitpos = 0usize;
+    for &idx in indices {
+        let v = u64::from(idx) & mask;
+        let w = bitpos / 64;
+        let off = bitpos % 64;
+        words[w] |= v << off;
+        if off + bits > 64 {
+            words[w + 1] |= v >> (64 - off);
+        }
+        bitpos += bits;
+    }
+    words
+}
+
+/// Unpack `len` `bits`-wide indices from a plane produced by
+/// [`pack_indices`]. Exact inverse for in-range indices.
+pub fn unpack_indices(words: &[u64], bits: u32, len: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits), "unpack_indices: bits must be in 1..=32, got {bits}");
+    let bits = bits as usize;
+    let mask = (1u64 << bits) - 1;
+    debug_assert!(
+        words.len() * 64 >= len * bits,
+        "unpack_indices: plane too short for {len} × {bits}-bit indices"
+    );
+    (0..len)
+        .map(|i| {
+            let bitpos = i * bits;
+            let w = bitpos / 64;
+            let off = bitpos % 64;
+            let mut v = words[w] >> off;
+            if off + bits > 64 {
+                v |= words[w + 1] << (64 - off);
+            }
+            (v & mask) as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i as f64 * 0.37).sin() * 3.0 + 0.1).collect()
+    }
+
+    #[test]
+    fn f64_sum_and_dot_are_bitwise_sequential() {
+        for n in [0usize, 1, 3, 7, 8, 9, 17, 64, 65, 100] {
+            let a = seq(n);
+            let b: Vec<f64> = a.iter().map(|x| x * 1.7 - 0.3).collect();
+            let mut s_ref = 0.0f64;
+            for &x in &a {
+                s_ref += x;
+            }
+            assert_eq!(sum(&a).to_bits(), s_ref.to_bits(), "sum n={n}");
+            let mut d_ref = 0.0f64;
+            for (&x, &y) in a.iter().zip(&b) {
+                d_ref += x * y;
+            }
+            assert_eq!(dot(&a, &b).to_bits(), d_ref.to_bits(), "dot n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_reductions_track_f64_reference() {
+        for n in [1usize, 5, 16, 33, 1000] {
+            let a64 = seq(n);
+            let a32: Vec<f32> = a64.iter().map(|&x| x as f32).collect();
+            let ref64: f64 = a32.iter().map(|&x| f64::from(x)).sum();
+            let got = f64::from(sum(&a32));
+            assert!(
+                (got - ref64).abs() <= 1e-4 * ref64.abs().max(1.0),
+                "f32 sum n={n}: {got} vs {ref64}"
+            );
+        }
+    }
+
+    #[test]
+    fn nrm2_matches_manual() {
+        let a = seq(37);
+        let ss: f64 = a.iter().map(|x| x * x).sum::<f64>();
+        assert!((nrm2(&a) - ss.sqrt()).abs() < 1e-12);
+        assert_eq!(nrm2::<f64>(&[]), 0.0);
+    }
+
+    #[test]
+    fn elementwise_kernels_match_loops() {
+        let a = seq(19);
+        let b: Vec<f64> = a.iter().map(|x| x * 0.5).collect();
+        let mut y = b.clone();
+        axpy(2.5, &a, &mut y);
+        for ((yi, &ai), &bi) in y.iter().zip(&a).zip(&b) {
+            assert_eq!(yi.to_bits(), (bi + 2.5 * ai).to_bits());
+        }
+        let mut out = vec![0.0; a.len()];
+        sub(&a, &b, &mut out);
+        for ((o, &ai), &bi) in out.iter().zip(&a).zip(&b) {
+            assert_eq!(o.to_bits(), (ai - bi).to_bits());
+        }
+        let mut z = a.clone();
+        sub_scalar(&mut z, 0.25);
+        for (zi, &ai) in z.iter().zip(&a) {
+            assert_eq!(zi.to_bits(), (ai - 0.25).to_bits());
+        }
+    }
+
+    #[test]
+    fn shrink_matches_cases() {
+        assert_eq!(shrink(3.0, 1.0), 2.0);
+        assert_eq!(shrink(-3.0, 1.0), -2.0);
+        assert_eq!(shrink(0.5, 1.0), 0.0);
+        assert_eq!(shrink(1.0f32, 1.0f32), 0.0f32);
+    }
+
+    #[test]
+    fn shrink_axpy_matches_legacy_two_loop_form() {
+        let base = seq(23);
+        let (dj, cj, alpha_j, lambda1) = (0.3f64, 0.3 * 0.3 * 23.0, 0.8, 0.05);
+        let denom = cj;
+        // Legacy form: separate suffix loop, then separate update loop.
+        let mut r_ref = base.clone();
+        let mut suffix = 0.0f64;
+        for ri in &r_ref {
+            suffix += *ri;
+        }
+        let rho = suffix * dj + cj * alpha_j;
+        let new_ref = shrink(rho, lambda1) / denom;
+        let delta_ref = new_ref - alpha_j;
+        if delta_ref != 0.0 {
+            for ri in &mut r_ref {
+                *ri -= dj * delta_ref;
+            }
+        }
+        let mut r = base.clone();
+        let (new, delta) = shrink_axpy(&mut r, dj, cj, alpha_j, lambda1, denom);
+        assert_eq!(new.to_bits(), new_ref.to_bits());
+        assert_eq!(delta.to_bits(), delta_ref.to_bits());
+        for (x, y) in r.iter().zip(&r_ref) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn scatter_and_gathers() {
+        let mut buf = vec![0.0f64; 9];
+        scatter_levels(&mut buf[2..7], 1.5);
+        assert_eq!(buf, vec![0.0, 0.0, 1.5, 1.5, 1.5, 1.5, 1.5, 0.0, 0.0]);
+
+        let levels = [(-1.0), 0.5, 2.0];
+        let idx = [2u32, 0, 1, 2];
+        assert_eq!(gather_levels(&levels, &idx), vec![2.0, -1.0, 0.5, 2.0]);
+        assert_eq!(gather_indices(&[7, 8, 9], &[2, 0, 0]), vec![9, 7, 7]);
+        assert_eq!(gather_counts(&idx, 3), vec![1, 1, 2]);
+
+        let original = [1.0, 2.0, 3.0];
+        let inverse = [0usize, 1, 2];
+        let lv = [1.5, 1.5, 3.0];
+        let want = 0.25 + 0.25 + 0.0;
+        assert_eq!(gather_sq_loss(&original, &inverse, &lv), want);
+    }
+
+    #[test]
+    fn bits_per_index_for_steps() {
+        assert_eq!(bits_per_index_for(1), 1);
+        assert_eq!(bits_per_index_for(2), 1);
+        assert_eq!(bits_per_index_for(3), 2);
+        assert_eq!(bits_per_index_for(256), 8);
+        assert_eq!(bits_per_index_for(257), 9);
+        assert_eq!(bits_per_index_for(65536), 16);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_straddles_words() {
+        for bits in [1u32, 2, 3, 9, 16, 17, 32] {
+            let modulus = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+            let indices: Vec<u32> =
+                (0..131u64).map(|i| ((i * 2_654_435_761) % modulus) as u32).collect();
+            let words = pack_indices(&indices, bits);
+            assert_eq!(words.len(), (indices.len() * bits as usize).div_ceil(64));
+            assert_eq!(unpack_indices(&words, bits, indices.len()), indices, "bits={bits}");
+        }
+        assert!(pack_indices(&[], 5).is_empty());
+        assert!(unpack_indices(&[], 5, 0).is_empty());
+    }
+
+    #[test]
+    fn pack_masks_out_of_range_values() {
+        let words = pack_indices(&[5u32], 2); // 5 = 0b101 → masked to 0b01
+        assert_eq!(unpack_indices(&words, 2, 1), vec![1]);
+    }
+}

@@ -2,6 +2,7 @@
 //! and the scalar statistics used across solvers and the eval harness.
 
 pub mod cholesky;
+pub mod kernels;
 pub mod matrix;
 pub mod scalar;
 pub mod stats;

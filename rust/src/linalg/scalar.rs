@@ -63,6 +63,15 @@ pub trait Scalar:
     /// `0.0` for f64 (configured tolerances apply verbatim), `1e-6` for
     /// f32 (see the module docs' precision contract).
     const TOL_FLOOR: f64;
+    /// Whether reduction kernels ([`crate::linalg::kernels`]) must keep
+    /// the exact left-to-right accumulation order. `true` on the f64
+    /// reference lane (reassociating a sum changes the rounding sequence
+    /// and would break the bitwise contract); `false` on the f32 lane,
+    /// whose results are tolerance-gated, so reductions may split across
+    /// independent accumulators for instruction-level parallelism /
+    /// vectorization. Still deterministic on both lanes: the association
+    /// order is a pure function of the slice length.
+    const STRICT_ACCUMULATION: bool;
     /// Stable lane id ("f32" / "f64") for diagnostics.
     const ID: &'static str;
 
@@ -89,6 +98,7 @@ impl Scalar for f64 {
     const EPSILON: Self = f64::EPSILON;
     const INFINITY: Self = f64::INFINITY;
     const TOL_FLOOR: f64 = 0.0;
+    const STRICT_ACCUMULATION: bool = true;
     const ID: &'static str = "f64";
 
     #[inline]
@@ -127,6 +137,7 @@ impl Scalar for f32 {
     const EPSILON: Self = f32::EPSILON;
     const INFINITY: Self = f32::INFINITY;
     const TOL_FLOOR: f64 = 1e-6;
+    const STRICT_ACCUMULATION: bool = false;
     const ID: &'static str = "f32";
 
     #[inline]
@@ -186,6 +197,8 @@ mod tests {
         assert_eq!(Scalar::abs(-3.5f64), 3.5);
         assert_eq!(f64::from_usize(7), 7.0);
         assert_eq!(f64::TOL_FLOOR, 0.0);
+        assert!(f64::STRICT_ACCUMULATION, "f64 is the bitwise lane");
+        assert!(!f32::STRICT_ACCUMULATION, "f32 reductions may reassociate");
         assert_eq!(f64::ID, "f64");
     }
 

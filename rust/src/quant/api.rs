@@ -96,6 +96,7 @@ use super::unique::UniqueDecomp;
 use super::types::{
     Precision, QuantDiag, QuantMethod, QuantOptions, QuantOutput, QuantOutputT,
 };
+use crate::linalg::kernels;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
@@ -793,14 +794,12 @@ pub(crate) fn finish_compact_parts<T: Scalar>(
                 .expect("every per-level value is in the level table") as u32
         })
         .collect();
-    let indices: Vec<u32> = unique.inverse.iter().map(|&j| level_of[j]).collect();
+    let indices = kernels::gather_indices(&level_of, &unique.inverse);
     // l2 loss over the full vector in input order: identical operation
-    // sequence to the full-vector path (recover() replicates lv[inverse]).
-    let mut l2_loss = 0.0f64;
-    for (o, &j) in original.iter().zip(&unique.inverse) {
-        let d = (*o - lv[j]).to_f64();
-        l2_loss += d * d;
-    }
+    // sequence to the full-vector path (recover() replicates lv[inverse]);
+    // the kernel accumulates strictly on both lanes for exactly this
+    // reason.
+    let l2_loss = kernels::gather_sq_loss(original, &unique.inverse, &lv);
     Ok(QuantItem {
         codebook: Codebook { levels, indices },
         l2_loss,

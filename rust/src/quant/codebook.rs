@@ -14,6 +14,7 @@
 //! ([`crate::quant::api`]) never widens an f32 result before the caller
 //! asks for it.
 
+use crate::linalg::kernels;
 use crate::linalg::scalar::Scalar;
 use crate::quant::types::QuantOutputT;
 use crate::{Error, Result};
@@ -92,7 +93,7 @@ impl<T: Scalar> Codebook<T> {
 
     /// Fixed-width bits per index (`⌈log₂ k⌉`, minimum 1).
     pub fn bits_per_index(&self) -> u32 {
-        (usize::BITS - (self.k() - 1).leading_zeros()).max(1)
+        kernels::bits_per_index_for(self.k())
     }
 
     /// Total compressed bytes: fixed-width indices + the codebook stored
@@ -110,10 +111,7 @@ impl<T: Scalar> Codebook<T> {
     /// Shannon entropy of the index stream (bits/index) — the Huffman
     /// bound on variable-length coding.
     pub fn index_entropy(&self) -> f64 {
-        let mut counts = vec![0usize; self.k()];
-        for &i in &self.indices {
-            counts[i as usize] += 1;
-        }
+        let counts = kernels::gather_counts(&self.indices, self.k());
         let n = self.indices.len() as f64;
         counts
             .iter()
@@ -128,7 +126,17 @@ impl<T: Scalar> Codebook<T> {
     /// Reconstruct the full vector (the lazy-materialization primitive of
     /// the request API).
     pub fn decode(&self) -> Vec<T> {
-        self.indices.iter().map(|&i| self.levels[i as usize]).collect()
+        kernels::gather_levels(&self.levels, &self.indices)
+    }
+
+    /// Pack the index plane to `⌈log₂ k⌉` bits per index — the opt-in
+    /// compact storage ([`PackedCodebook`]). Lossless:
+    /// `self.pack().to_codebook() == *self`.
+    pub fn pack(&self) -> PackedCodebook<T> {
+        PackedCodebook {
+            levels: self.levels.clone(),
+            indices: PackedIndices::pack(&self.indices, self.k()),
+        }
     }
 }
 
@@ -140,6 +148,159 @@ impl Codebook<f32> {
             levels: self.levels.iter().map(|&x| f64::from(x)).collect(),
             indices: self.indices.clone(),
         }
+    }
+}
+
+/// A tightly bit-packed index plane: `len` indices of `bits` bits each
+/// (`bits = ⌈log₂ k⌉`, 1..=32), laid out LSB-first in little-endian `u64`
+/// words, straddling word boundaries — index `i` occupies bits
+/// `[i·bits, (i+1)·bits)` of the plane. The storage actually *is* the
+/// packed width, so compression accounting over it is honest rather than
+/// hypothetical (`CompressionStats::bits_per_idx_stored` equals
+/// `bits_per_idx_packed`). Packing/unpacking run on the
+/// [`crate::linalg::kernels`] bit-plane kernels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedIndices {
+    words: Vec<u64>,
+    bits: u32,
+    len: usize,
+}
+
+impl PackedIndices {
+    /// Pack an index stream for a `k`-level codebook
+    /// (`bits = ⌈log₂ k⌉`, minimum 1). All indices must be `< k`, which
+    /// holds by construction for any [`Codebook`]; wider values would be
+    /// truncated by the bit mask, so this debug-asserts the range.
+    pub fn pack(indices: &[u32], k: usize) -> PackedIndices {
+        let bits = kernels::bits_per_index_for(k);
+        debug_assert!(
+            indices.iter().all(|&i| (i as usize) < k.max(1)),
+            "PackedIndices::pack: index out of range for k={k}"
+        );
+        PackedIndices { words: kernels::pack_indices(indices, bits), bits, len: indices.len() }
+    }
+
+    /// Rebuild a plane from raw parts (the jsonio decode path), validating
+    /// shape: `bits ∈ 1..=32` and the word count exactly matches `len`
+    /// indices of `bits` bits.
+    pub fn from_raw(words: Vec<u64>, bits: u32, len: usize) -> Result<PackedIndices> {
+        if !(1..=32).contains(&bits) {
+            return Err(Error::InvalidInput(format!(
+                "packed indices: bits must be in 1..=32, got {bits}"
+            )));
+        }
+        let want_words = (len * bits as usize).div_ceil(64);
+        if words.len() != want_words {
+            return Err(Error::InvalidInput(format!(
+                "packed indices: {} words, expected {want_words} for {len} × {bits}-bit indices",
+                words.len()
+            )));
+        }
+        Ok(PackedIndices { words, bits, len })
+    }
+
+    /// Unpack back to the dense `u32` stream. Exact inverse of
+    /// [`PackedIndices::pack`].
+    pub fn unpack(&self) -> Vec<u32> {
+        kernels::unpack_indices(&self.words, self.bits, self.len)
+    }
+
+    /// The index at position `i` (random access without unpacking).
+    pub fn get(&self, i: usize) -> u32 {
+        assert!(i < self.len, "PackedIndices::get: {i} out of range (len {})", self.len);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let (w, off) = (bitpos / 64, bitpos % 64);
+        let mut v = self.words[w] >> off;
+        if off + bits > 64 {
+            v |= self.words[w + 1] << (64 - off);
+        }
+        (v & ((1u64 << bits) - 1)) as u32
+    }
+
+    /// Bits per index.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Number of packed indices.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no indices are packed.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exact packed payload size in bytes (`⌈len·bits / 8⌉` — the final
+    /// word's slack is not counted).
+    pub fn packed_bytes(&self) -> usize {
+        (self.len * self.bits as usize).div_ceil(8)
+    }
+
+    /// The raw little-endian word plane (the jsonio encode path).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// [`Codebook`] with the index plane stored bit-packed — the opt-in
+/// compact storage the compression accounting reports on honestly.
+/// Construct via [`Codebook::pack`] or [`PackedCodebook::from_codebook`];
+/// round-trips losslessly through [`PackedCodebook::to_codebook`] and
+/// through jsonio (`jsonio::packed_codebook_to_json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodebook<T: Scalar = f64> {
+    /// The distinct levels, sorted ascending (same table as [`Codebook`]).
+    pub levels: Vec<T>,
+    /// The bit-packed per-element index plane.
+    pub indices: PackedIndices,
+}
+
+impl<T: Scalar> PackedCodebook<T> {
+    /// Pack a dense codebook (lossless).
+    pub fn from_codebook(cb: &Codebook<T>) -> PackedCodebook<T> {
+        cb.pack()
+    }
+
+    /// Unpack to the dense form. Exact inverse of [`Codebook::pack`].
+    pub fn to_codebook(&self) -> Codebook<T> {
+        Codebook { levels: self.levels.clone(), indices: self.indices.unpack() }
+    }
+
+    /// Number of levels.
+    pub fn k(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Number of encoded elements.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// True when no elements are encoded.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Bits per index as stored (the packed width, `⌈log₂ k⌉`).
+    pub fn bits_per_index(&self) -> u32 {
+        self.indices.bits()
+    }
+
+    /// Reconstruct the full vector directly from the packed plane.
+    pub fn decode(&self) -> Vec<T> {
+        kernels::gather_levels(&self.levels, &self.indices.unpack())
+    }
+
+    /// Compression accounting. Identical to the dense codebook's stats
+    /// except `bits_per_idx_stored`, which reflects the packed in-memory
+    /// width instead of 32.
+    pub fn stats(&self, levels_requested: usize) -> CompressionStats {
+        let mut s = self.to_codebook().stats(levels_requested);
+        s.bits_per_idx_stored = self.indices.bits();
+        s
     }
 }
 
@@ -165,6 +326,10 @@ impl Codebook<f32> {
 /// assert!(stats.index_entropy <= stats.bits_per_index as f64 + 1e-9);
 /// assert!(stats.byte_ratio > 1.0, "{} compact vs {} dense bytes",
 ///         stats.compact_bytes, stats.dense_bytes);
+/// // Dense codebooks store u32 indices; the packed width is what the
+/// // compact wire form pays (and what `bits_per_index` has always meant).
+/// assert_eq!(stats.bits_per_idx_stored, 32);
+/// assert_eq!(stats.bits_per_idx_packed, stats.bits_per_index);
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressionStats {
@@ -175,8 +340,17 @@ pub struct CompressionStats {
     /// Levels the request asked for (`QuantOptions::target_values`; for
     /// λ-driven methods this is the standing option, not a constraint).
     pub levels_requested: usize,
-    /// Fixed-width bits per index, `⌈log₂ k⌉` (minimum 1).
+    /// Fixed-width bits per index, `⌈log₂ k⌉` (minimum 1). Equal to
+    /// [`CompressionStats::bits_per_idx_packed`]; kept under its
+    /// historical name because the jsonio wire spec is normative.
     pub bits_per_index: u32,
+    /// Bits per index as actually stored by the representation the stats
+    /// were taken from: 32 for a dense [`Codebook`] (`Vec<u32>` plane),
+    /// `⌈log₂ k⌉` for a [`PackedCodebook`].
+    pub bits_per_idx_stored: u32,
+    /// Bits per index after ⌈log₂ k⌉-bit packing — what the compact wire
+    /// form pays per index regardless of in-memory storage.
+    pub bits_per_idx_packed: u32,
     /// Total compact bits (indices + codebook) amortized per element —
     /// the headline "bits/value" number.
     pub bits_per_value: f64,
@@ -212,6 +386,8 @@ impl CompressionStats {
         let mut levels_achieved = 0usize;
         let mut levels_requested = 0usize;
         let mut bits_per_index = 0u32;
+        let mut bits_per_idx_stored = 0u32;
+        let mut bits_per_idx_packed = 0u32;
         let mut any = false;
         for s in items {
             any = true;
@@ -222,6 +398,8 @@ impl CompressionStats {
             levels_achieved = levels_achieved.max(s.levels_achieved);
             levels_requested = levels_requested.max(s.levels_requested);
             bits_per_index = bits_per_index.max(s.bits_per_index);
+            bits_per_idx_stored = bits_per_idx_stored.max(s.bits_per_idx_stored);
+            bits_per_idx_packed = bits_per_idx_packed.max(s.bits_per_idx_packed);
         }
         if !any {
             return None;
@@ -231,6 +409,8 @@ impl CompressionStats {
             levels_achieved,
             levels_requested,
             bits_per_index,
+            bits_per_idx_stored,
+            bits_per_idx_packed,
             bits_per_value: if n > 0 { compact as f64 * 8.0 / n as f64 } else { 0.0 },
             index_entropy: if n > 0 { entropy_weighted / n as f64 } else { 0.0 },
             compact_bytes: compact,
@@ -243,11 +423,13 @@ impl CompressionStats {
     pub fn summary(&self) -> String {
         format!(
             "levels={}/{} bits/value={:.3} entropy={:.3} bits/idx \
-             compact={}B dense={}B ratio={:.2}x",
+             idx-bits={}→{} (stored→packed) compact={}B dense={}B ratio={:.2}x",
             self.levels_achieved,
             self.levels_requested,
             self.bits_per_value,
             self.index_entropy,
+            self.bits_per_idx_stored,
+            self.bits_per_idx_packed,
             self.compact_bytes,
             self.dense_bytes,
             self.byte_ratio
@@ -268,6 +450,10 @@ impl<T: Scalar> Codebook<T> {
             levels_achieved: self.k(),
             levels_requested,
             bits_per_index: self.bits_per_index(),
+            // The dense codebook stores its plane as Vec<u32>; only the
+            // packed representation actually pays ⌈log₂ k⌉.
+            bits_per_idx_stored: 32,
+            bits_per_idx_packed: self.bits_per_index(),
             bits_per_value: if self.is_empty() {
                 0.0
             } else {
@@ -442,5 +628,69 @@ mod tests {
         let cb = Codebook::from_values(&[-0.0f64, 0.0, 1.0]).unwrap();
         assert_eq!(cb.k(), 2, "-0.0 and 0.0 share one level");
         assert_eq!(cb.decode().len(), 3);
+    }
+
+    #[test]
+    fn pack_roundtrips_losslessly() {
+        for k in [1usize, 2, 3, 5, 17, 300] {
+            let values: Vec<f64> = (0..1000).map(|i| ((i * 7) % k) as f64).collect();
+            let cb = Codebook::from_values(&values).unwrap();
+            let packed = cb.pack();
+            assert_eq!(packed.bits_per_index(), cb.bits_per_index(), "k={k}");
+            assert_eq!(packed.to_codebook(), cb, "k={k}");
+            assert_eq!(packed.decode(), cb.decode(), "k={k}");
+            assert_eq!(PackedCodebook::from_codebook(&cb), packed);
+            assert_eq!(packed.k(), cb.k());
+            assert_eq!(packed.len(), cb.len());
+            assert!(!packed.is_empty());
+        }
+    }
+
+    #[test]
+    fn packed_indices_random_access_and_raw_parts() {
+        let idx: Vec<u32> = (0..97).map(|i| (i * 13) % 300).collect();
+        let p = PackedIndices::pack(&idx, 300); // 9 bits — straddles words
+        assert_eq!(p.bits(), 9);
+        assert_eq!(p.len(), idx.len());
+        assert_eq!(p.packed_bytes(), (97 * 9usize).div_ceil(8));
+        for (i, &want) in idx.iter().enumerate() {
+            assert_eq!(p.get(i), want, "get({i})");
+        }
+        let rebuilt =
+            PackedIndices::from_raw(p.words().to_vec(), p.bits(), p.len()).unwrap();
+        assert_eq!(rebuilt, p);
+        assert_eq!(rebuilt.unpack(), idx);
+        // Shape validation on the raw path.
+        assert!(PackedIndices::from_raw(vec![0; 3], 9, 97).is_err());
+        assert!(PackedIndices::from_raw(vec![], 0, 0).is_err());
+        assert!(PackedIndices::from_raw(vec![], 33, 0).is_err());
+    }
+
+    #[test]
+    fn packed_stats_report_stored_width_honestly() {
+        let values: Vec<f64> = (0..1000).map(|i| (i % 4) as f64).collect();
+        let cb = Codebook::from_values(&values).unwrap();
+        let dense = cb.stats(4);
+        let packed = cb.pack().stats(4);
+        assert_eq!(dense.bits_per_idx_stored, 32);
+        assert_eq!(dense.bits_per_idx_packed, 2);
+        assert_eq!(dense.bits_per_index, dense.bits_per_idx_packed);
+        assert_eq!(packed.bits_per_idx_stored, 2);
+        assert_eq!(packed.bits_per_idx_packed, 2);
+        // Everything except the stored width is identical — the wire form
+        // was already packed.
+        assert_eq!(packed.compact_bytes, dense.compact_bytes);
+        assert_eq!(packed.bits_per_value, dense.bits_per_value);
+        let line = packed.summary();
+        assert!(line.contains("idx-bits=2→2"), "{line}");
+        assert!(dense.summary().contains("idx-bits=32→2"), "{}", dense.summary());
+    }
+
+    #[test]
+    fn packed_empty_plane() {
+        let p = PackedIndices::pack(&[], 7);
+        assert!(p.is_empty());
+        assert_eq!(p.packed_bytes(), 0);
+        assert_eq!(p.unpack(), Vec::<u32>::new());
     }
 }

@@ -62,8 +62,14 @@
 //! bitwise-identical to it.
 
 use super::vmatrix::VBasis;
+use crate::linalg::kernels;
 use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
+
+/// Soft-thresholding operator `S_λ(x)` — defined in
+/// [`crate::linalg::kernels`] (the CD arithmetic floor), re-exported here
+/// under its historical path.
+pub use crate::linalg::kernels::shrink;
 
 /// What to do when the negative-l2 relaxation makes a coordinate's
 /// denominator `c_k − 2λ₂` non-positive (the instability the paper reports
@@ -150,35 +156,48 @@ impl<T: Scalar> LassoSolution<T> {
     }
 }
 
-/// Reusable CD solve buffers (residual + reconstruction), sized lazily to
-/// the basis dimension. Owning one across a λ path removes the two
-/// per-solve allocations from the hot loop; buffers are fully overwritten
-/// before every read, so reuse cannot change results.
+/// Reusable CD solve buffers — residual, reconstruction, and the per-solve
+/// column-norm cache — sized lazily to the basis dimension. Owning one
+/// across a λ path removes the per-solve allocations from the hot loop;
+/// buffers are fully overwritten before every read, so reuse cannot change
+/// results.
+///
+/// All three buffers are kept **contiguous and exactly `m` long** (the
+/// layout contract the [`crate::linalg::kernels`] layer assumes: plain
+/// `&[T]` slices, no strides, no interleaving), and [`Workspace::reset`]
+/// never reallocates when the prior capacity suffices — a size *decrease*
+/// followed by an increase back reuses the old allocation instead of
+/// round-tripping through the allocator.
 #[derive(Debug, Clone, Default)]
 pub struct Workspace<T: Scalar = f64> {
     rec: Vec<T>,
     r: Vec<T>,
+    /// Cached `‖V_{·j}‖² = d_j²(m−j)` for the current basis — filled once
+    /// per solve ([`VBasis::col_norms_into`]) instead of recomputed per
+    /// coordinate per epoch.
+    c: Vec<T>,
 }
 
 impl<T: Scalar> Workspace<T> {
-    /// Size both buffers for an m-dimensional solve. Existing contents are
-    /// left as-is (both buffers are fully overwritten before every read),
-    /// so steady-state reuse at a fixed `m` writes nothing here.
+    /// Size every buffer for an m-dimensional solve, reusing capacity.
+    /// `clear` + `resize` (rather than a bare `resize`) guarantees a grow
+    /// never copies stale contents into the new allocation; all buffers
+    /// are fully overwritten before every read, so the zero-fill cannot
+    /// change results.
     fn reset(&mut self, m: usize) {
+        self.rec.clear();
         self.rec.resize(m, T::ZERO);
+        self.r.clear();
         self.r.resize(m, T::ZERO);
+        self.c.clear();
+        self.c.resize(m, T::ZERO);
     }
-}
 
-/// Soft-thresholding operator `S_λ(x)` (paper §3.3).
-#[inline]
-pub fn shrink<T: Scalar>(x: T, lambda: T) -> T {
-    if x > lambda {
-        x - lambda
-    } else if x < -lambda {
-        x + lambda
-    } else {
-        T::ZERO
+    /// Buffer capacities `(rec, r, c)` — exposed for the no-reallocation
+    /// regression test.
+    #[cfg(test)]
+    fn capacities(&self) -> (usize, usize, usize) {
+        (self.rec.capacity(), self.r.capacity(), self.c.capacity())
     }
 }
 
@@ -278,9 +297,12 @@ pub fn solve_ws<T: Scalar>(
     let two_lambda2 = T::from_f64(2.0 * cfg.lambda2);
     let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
 
-    // Residual r = ŵ − Vα, rebuilt exactly once per epoch in O(m).
+    // Residual r = ŵ − Vα, rebuilt exactly once per epoch in O(m); column
+    // norms cached once per solve (pure per-entry expression — bitwise
+    // neutral vs recomputing inside the loop).
     ws.reset(m);
-    let Workspace { rec, r } = ws;
+    let Workspace { rec, r, c } = ws;
+    basis.col_norms_into(c);
     let mut unstable = false;
     let mut epochs = 0;
     let mut converged = false;
@@ -291,9 +313,7 @@ pub fn solve_ws<T: Scalar>(
     for _ in 0..cfg.max_epochs {
         epochs += 1;
         basis.apply_into(&alpha, rec);
-        for ((ri, wi), reci) in r.iter_mut().zip(w).zip(rec.iter()) {
-            *ri = *wi - *reci;
-        }
+        kernels::sub(w, rec, r);
 
         // Descending pass with the lazy suffix scalar (see module docs).
         let mut s = T::ZERO; // Σ_{i≥j} r_i, exact under all updates so far this epoch
@@ -304,7 +324,7 @@ pub fn solve_ws<T: Scalar>(
             if dj == T::ZERO {
                 continue; // only possible at j=0 when v_0 == 0
             }
-            let cj = basis.col_norm_sq(j);
+            let cj = c[j];
             let mut denom = cj - two_lambda2;
             if denom <= T::EPSILON * cj.max(T::ONE) {
                 match cfg.on_instability {
@@ -390,17 +410,14 @@ pub fn solve_dense<T: Scalar>(
     let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
 
     // r = ŵ − Vα maintained incrementally; the initial reconstruction is
-    // the naïve O(m²) row-by-row dense product.
+    // the naïve O(m²) row-by-row dense product (a growing-prefix dot).
     let mut r: Vec<T> = Vec::with_capacity(m);
     for (i, wi) in w.iter().enumerate() {
-        let mut acc = T::ZERO;
-        for (dj, aj) in d[..=i].iter().zip(&alpha[..=i]) {
-            acc += *dj * *aj;
-        }
-        r.push(*wi - acc);
+        r.push(*wi - kernels::dot(&d[..=i], &alpha[..=i]));
     }
 
-    let col_norms: Vec<T> = (0..m).map(|j| basis.col_norm_sq(j)).collect();
+    let mut col_norms = vec![T::ZERO; m];
+    basis.col_norms_into(&mut col_norms);
     let mut unstable = false;
     let mut epochs = 0;
     let mut converged = false;
@@ -428,19 +445,13 @@ pub fn solve_dense<T: Scalar>(
                     }
                 }
             }
-            // V_jᵀ r over the dense column (rows j..m all equal d_j).
-            let mut suffix = T::ZERO;
-            for ri in &r[j..] {
-                suffix += *ri;
-            }
-            let rho = suffix * dj + cj * alpha[j];
-            let new = shrink(rho, lambda1) / denom;
-            let delta = new - alpha[j];
+            // Fused coordinate update over the dense column (rows j..m all
+            // equal d_j): suffix-sum V_jᵀr, soft-threshold, apply the
+            // residual correction — one kernel call.
+            let (new, delta) =
+                kernels::shrink_axpy(&mut r[j..], dj, cj, alpha[j], lambda1, denom);
             if delta != T::ZERO {
                 alpha[j] = new;
-                for ri in &mut r[j..] {
-                    *ri -= dj * delta;
-                }
                 max_move = max_move.max((dj * delta).abs());
             }
         }
@@ -537,6 +548,38 @@ mod tests {
             assert_eq!(fresh.epochs, reused.epochs, "λ={lambda}");
             assert_eq!(fresh.objective.to_bits(), reused.objective.to_bits(), "λ={lambda}");
         }
+    }
+
+    #[test]
+    fn workspace_reset_reuses_capacity_across_sweep() {
+        // Regression: `reset` must not round-trip through the allocator on
+        // repeated same-size solves, nor when the dimension shrinks and
+        // grows back within prior capacity.
+        let v = random_values(96, 13);
+        let b = VBasis::new(&v);
+        let v_small = random_values(24, 14);
+        let b_small = VBasis::new(&v_small);
+        let cfg = LassoConfig::default();
+        let mut ws = Workspace::default();
+
+        solve_ws(&b, &v, &cfg, None, &mut ws).unwrap();
+        let caps = ws.capacities();
+        let ptrs = (ws.rec.as_ptr(), ws.r.as_ptr(), ws.c.as_ptr());
+        // Same-size sweep: capacity AND the allocations themselves stable.
+        for lambda in [0.01, 0.1, 1.0, 10.0] {
+            let cfg = LassoConfig { lambda1: lambda, ..Default::default() };
+            solve_ws(&b, &v, &cfg, None, &mut ws).unwrap();
+            assert_eq!(ws.capacities(), caps, "λ={lambda}: capacity changed");
+            assert_eq!(
+                (ws.rec.as_ptr(), ws.r.as_ptr(), ws.c.as_ptr()),
+                ptrs,
+                "λ={lambda}: buffer reallocated"
+            );
+        }
+        // Shrink then grow back: still no growth past the original caps.
+        solve_ws(&b_small, &v_small, &cfg, None, &mut ws).unwrap();
+        solve_ws(&b, &v, &cfg, None, &mut ws).unwrap();
+        assert_eq!(ws.capacities(), caps, "shrink/grow cycle reallocated");
     }
 
     #[test]

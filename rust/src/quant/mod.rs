@@ -64,7 +64,7 @@ pub mod unique;
 pub mod vmatrix;
 
 pub use api::{Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer};
-pub use codebook::{Codebook, CodebookF32, CompressionStats};
+pub use codebook::{Codebook, CodebookF32, CompressionStats, PackedCodebook, PackedIndices};
 pub use pipeline::{
     quantize_batch, quantize_batch_f32, quantize_f32, quantize_prepared, quantize_prepared_f32,
     quantize_sweep, quantize_sweep_f32, quantize_sweep_f32_with, quantize_sweep_with,

@@ -243,6 +243,11 @@ impl PreparedInput<f32> {
 /// Reusable state carried along a λ sweep ([`quantize_sweep`]): solvers
 /// that can warm-start store their coefficients here between steps, and
 /// the CD workspaces live here so path solves don't allocate per step.
+/// The workspaces reuse capacity across steps even when the problem size
+/// changes ([`lasso::Workspace::reset`] is clear+resize, never a
+/// reallocation when prior capacity suffices — regression-tested by
+/// `workspace_reset_reuses_capacity_across_sweep` in `quant::lasso`), so
+/// a same-size sweep is allocation-free in the epoch loop.
 #[derive(Debug, Default)]
 pub struct SweepState {
     /// α from the previous step (lasso-family warm start, f64 lane).

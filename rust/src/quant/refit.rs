@@ -22,6 +22,7 @@
 
 use super::vmatrix::VBasis;
 use crate::linalg::cholesky::least_squares;
+use crate::linalg::kernels;
 use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
 
@@ -92,18 +93,19 @@ pub fn refit_fast<T: Scalar>(
     for (t, &s) in support.iter().enumerate() {
         let seg_end = support.get(t + 1).copied().unwrap_or(m);
         // Optimal level on [s, seg_end): (weighted) mean of ŵ there.
-        let (mut num, mut den) = (T::ZERO, T::ZERO);
-        for i in s..seg_end {
-            let c = weights.map_or(T::ONE, |ws| ws[i]);
-            num += c * w[i];
-            den += c;
-        }
+        // Unweighted, the legacy loop accumulated `1·w[i]` (bitwise `w[i]`)
+        // and counted in ONE-steps (equal to `from_usize` on the f64 lane),
+        // so the kernel reductions reproduce it exactly.
+        let (num, den) = match weights {
+            None => (kernels::sum(&w[s..seg_end]), T::from_usize(seg_end - s)),
+            Some(ws) => {
+                (kernels::dot(&ws[s..seg_end], &w[s..seg_end]), kernels::sum(&ws[s..seg_end]))
+            }
+        };
         let level = if den > T::ZERO { num / den } else { prev_level };
         debug_assert!(d[s] != T::ZERO, "support column with zero diff");
         alpha[s] = (level - prev_level) / d[s];
-        for r in &mut reconstruction[s..seg_end] {
-            *r = level;
-        }
+        kernels::scatter_levels(&mut reconstruction[s..seg_end], level);
         prev_level = level;
     }
     Ok(Refit { alpha, reconstruction })

@@ -124,6 +124,19 @@ impl<T: Scalar> VBasis<T> {
         self.d[j] * self.d[j] * suffix_weight[j]
     }
 
+    /// Fill `out` with every squared column norm ([`Self::col_norm_sq`]),
+    /// one pass, no allocation. The CD solvers cache these once per solve
+    /// instead of recomputing `d_j²(m−j)` for every coordinate of every
+    /// epoch; each entry is the same pure expression as `col_norm_sq(j)`,
+    /// so caching is bitwise-neutral.
+    pub fn col_norms_into(&self, out: &mut [T]) {
+        let m = self.m();
+        debug_assert_eq!(out.len(), m);
+        for (j, (o, &dj)) in out.iter_mut().zip(&self.d).enumerate() {
+            *o = dj * dj * T::from_usize(m - j);
+        }
+    }
+
     /// Reconstruction from a sparse support: `V_{·S} β` where `support` is
     /// sorted ascending. O(m + |S|).
     pub fn apply_support(&self, support: &[usize], beta: &[T]) -> Vec<T> {

@@ -1,0 +1,294 @@
+//! Property suite for the `linalg::kernels` layer: every kernel against a
+//! naive scalar reference, **bitwise** on the f64 lane (the repository's
+//! reference precision — kernels must reproduce the exact legacy
+//! accumulation order) and tolerance-gated on the f32 lane (whose
+//! reductions may reassociate across independent accumulators), across
+//! odd lengths, chunk boundaries, and empty inputs; plus pack→unpack
+//! round trips for the ⌈log₂ k⌉-bit index planes at the k values the
+//! bit-width formula steps on.
+
+use sqlsq::linalg::kernels;
+use sqlsq::quant::{Codebook, PackedIndices};
+
+/// Deterministic pseudo-random data without pulling in an RNG: a sine
+/// scramble covering sign changes, magnitudes around 1, and exact zeros.
+fn data64(n: usize, seed: u64) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let x = ((i as f64 + seed as f64 * 0.611) * 0.7311).sin() * 2.5;
+            if i % 17 == 3 {
+                0.0
+            } else {
+                x
+            }
+        })
+        .collect()
+}
+
+fn data32(n: usize, seed: u64) -> Vec<f32> {
+    data64(n, seed).iter().map(|&x| x as f32).collect()
+}
+
+/// Lengths hitting empty, the strict-unroll chunk (8) and f32 lane count
+/// (4) boundaries ±1, and a few odd sizes past them.
+const LENGTHS: &[usize] =
+    &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 257];
+
+#[test]
+fn sum_f64_bitwise_matches_sequential_reference() {
+    for &n in LENGTHS {
+        let a = data64(n, 1);
+        let mut want = 0.0f64;
+        for &x in &a {
+            want += x;
+        }
+        assert_eq!(kernels::sum(&a).to_bits(), want.to_bits(), "n={n}");
+    }
+}
+
+#[test]
+fn sum_f32_within_tolerance_of_f64_reference() {
+    for &n in LENGTHS {
+        let a = data32(n, 2);
+        let want: f64 = a.iter().map(|&x| f64::from(x)).sum();
+        let got = f64::from(kernels::sum(&a));
+        assert!(
+            (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+            "n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn dot_f64_bitwise_matches_sequential_reference() {
+    for &n in LENGTHS {
+        let a = data64(n, 3);
+        let b = data64(n, 4);
+        let mut want = 0.0f64;
+        for (&x, &y) in a.iter().zip(&b) {
+            want += x * y;
+        }
+        assert_eq!(kernels::dot(&a, &b).to_bits(), want.to_bits(), "n={n}");
+    }
+}
+
+#[test]
+fn dot_f32_within_tolerance_of_f64_reference() {
+    for &n in LENGTHS {
+        let a = data32(n, 5);
+        let b = data32(n, 6);
+        let want: f64 =
+            a.iter().zip(&b).map(|(&x, &y)| f64::from(x) * f64::from(y)).sum();
+        let got = f64::from(kernels::dot(&a, &b));
+        assert!(
+            (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn nrm2_matches_sqrt_of_dot() {
+    for &n in LENGTHS {
+        let a = data64(n, 7);
+        let want = kernels::dot(&a, &a).sqrt();
+        assert_eq!(kernels::nrm2(&a).to_bits(), want.to_bits(), "n={n}");
+    }
+    let a32 = data32(33, 8);
+    let want = f64::from(kernels::dot(&a32, &a32)).sqrt() as f32;
+    assert_eq!(kernels::nrm2(&a32).to_bits(), want.to_bits());
+}
+
+#[test]
+fn axpy_bitwise_matches_reference_on_both_lanes() {
+    for &n in LENGTHS {
+        let x = data64(n, 9);
+        let y0 = data64(n, 10);
+        let a = 1.37f64;
+        let mut got = y0.clone();
+        kernels::axpy(a, &x, &mut got);
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), (y0[i] + a * x[i]).to_bits(), "n={n} i={i}");
+        }
+        // Elementwise kernels are bitwise on f32 too — no reduction to
+        // reassociate.
+        let x32 = data32(n, 9);
+        let y32 = data32(n, 10);
+        let mut got32 = y32.clone();
+        kernels::axpy(0.5f32, &x32, &mut got32);
+        for i in 0..n {
+            assert_eq!(got32[i].to_bits(), (y32[i] + 0.5 * x32[i]).to_bits());
+        }
+    }
+}
+
+#[test]
+fn sub_and_sub_scalar_bitwise_match_reference() {
+    for &n in LENGTHS {
+        let a = data64(n, 11);
+        let b = data64(n, 12);
+        let mut out = vec![0.0f64; n];
+        kernels::sub(&a, &b, &mut out);
+        for i in 0..n {
+            assert_eq!(out[i].to_bits(), (a[i] - b[i]).to_bits(), "sub n={n} i={i}");
+        }
+        let mut y = a.clone();
+        kernels::sub_scalar(&mut y, 0.311);
+        for i in 0..n {
+            assert_eq!(y[i].to_bits(), (a[i] - 0.311).to_bits(), "sub_scalar n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn shrink_axpy_bitwise_matches_legacy_two_loop_update() {
+    for &n in LENGTHS {
+        if n == 0 {
+            // Degenerate coordinate with an empty suffix still updates.
+            let mut r: Vec<f64> = vec![];
+            let (new, delta) = kernels::shrink_axpy(&mut r, 0.5, 1.0, 2.0, 0.1, 1.0);
+            assert_eq!(new, kernels::shrink(0.5f64 * 0.0 + 1.0 * 2.0, 0.1));
+            assert_eq!(delta, new - 2.0);
+            continue;
+        }
+        let base = data64(n, 13);
+        let (dj, alpha_j, lambda1) = (0.41f64, 0.9f64, 0.05f64);
+        let cj = dj * dj * n as f64;
+        let denom = cj;
+        // Legacy: strict suffix loop, threshold, then a separate
+        // correction loop recomputing dj*delta each row.
+        let mut r_ref = base.clone();
+        let mut suffix = 0.0f64;
+        for ri in &r_ref {
+            suffix += *ri;
+        }
+        let rho = suffix * dj + cj * alpha_j;
+        let new_ref = kernels::shrink(rho, lambda1) / denom;
+        let delta_ref = new_ref - alpha_j;
+        if delta_ref != 0.0 {
+            for ri in &mut r_ref {
+                *ri -= dj * delta_ref;
+            }
+        }
+        let mut r = base.clone();
+        let (new, delta) = kernels::shrink_axpy(&mut r, dj, cj, alpha_j, lambda1, denom);
+        assert_eq!(new.to_bits(), new_ref.to_bits(), "n={n}");
+        assert_eq!(delta.to_bits(), delta_ref.to_bits(), "n={n}");
+        for i in 0..n {
+            assert_eq!(r[i].to_bits(), r_ref[i].to_bits(), "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn shrink_matches_piecewise_definition() {
+    for x in [-3.0f64, -1.0, -0.5, 0.0, 0.5, 1.0, 3.0] {
+        let want = if x > 1.0 {
+            x - 1.0
+        } else if x < -1.0 {
+            x + 1.0
+        } else {
+            0.0
+        };
+        assert_eq!(kernels::shrink(x, 1.0), want);
+    }
+}
+
+#[test]
+fn scatter_and_gather_kernels_match_references() {
+    for &n in LENGTHS {
+        let mut buf = data64(n, 14);
+        kernels::scatter_levels(&mut buf, 2.25);
+        assert!(buf.iter().all(|&x| x == 2.25), "n={n}");
+
+        let k = 7usize;
+        let idx: Vec<u32> = (0..n).map(|i| ((i * 5) % k) as u32).collect();
+        let levels: Vec<f64> = (0..k).map(|i| i as f64 * 0.5 - 1.0).collect();
+        let want_gather: Vec<f64> = idx.iter().map(|&i| levels[i as usize]).collect();
+        assert_eq!(kernels::gather_levels(&levels, &idx), want_gather, "n={n}");
+
+        let mut want_counts = vec![0usize; k];
+        for &i in &idx {
+            want_counts[i as usize] += 1;
+        }
+        assert_eq!(kernels::gather_counts(&idx, k), want_counts, "n={n}");
+
+        let inverse: Vec<usize> = (0..n).map(|i| (i * 3) % k.min(n.max(1))).collect();
+        let table: Vec<u32> = (0..k.min(n.max(1))).map(|i| (i * 10) as u32).collect();
+        let want_idx: Vec<u32> = inverse.iter().map(|&j| table[j]).collect();
+        assert_eq!(kernels::gather_indices(&table, &inverse), want_idx, "n={n}");
+    }
+}
+
+#[test]
+fn gather_sq_loss_bitwise_matches_sequential_reference_on_both_lanes() {
+    for &n in LENGTHS {
+        let orig = data64(n, 15);
+        let m = n.max(1).min(9);
+        let inverse: Vec<usize> = (0..n).map(|i| (i * 7) % m).collect();
+        let lv: Vec<f64> = (0..m).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let mut want = 0.0f64;
+        for (o, &j) in orig.iter().zip(&inverse) {
+            let d = *o - lv[j];
+            want += d * d;
+        }
+        assert_eq!(
+            kernels::gather_sq_loss(&orig, &inverse, &lv).to_bits(),
+            want.to_bits(),
+            "n={n}"
+        );
+        // The loss kernel is strict on the f32 lane too (shared f64
+        // accumulator contract with types::finalize).
+        let orig32 = data32(n, 15);
+        let lv32: Vec<f32> = lv.iter().map(|&x| x as f32).collect();
+        let mut want32 = 0.0f64;
+        for (o, &j) in orig32.iter().zip(&inverse) {
+            let d = f64::from(*o - lv32[j]);
+            want32 += d * d;
+        }
+        assert_eq!(
+            kernels::gather_sq_loss(&orig32, &inverse, &lv32).to_bits(),
+            want32.to_bits(),
+            "n={n} f32"
+        );
+    }
+}
+
+#[test]
+fn packed_indices_roundtrip_at_bit_width_steps() {
+    // The k values the satellite names: both sides of each ⌈log₂ k⌉ step,
+    // plus the 16-bit plane.
+    for k in [1usize, 2, 3, 255, 256, 257, 65536] {
+        let want_bits = kernels::bits_per_index_for(k);
+        for n in [0usize, 1, 7, 64, 71, 500] {
+            let idx: Vec<u32> = (0..n).map(|i| ((i * 2654435761usize) % k) as u32).collect();
+            let p = PackedIndices::pack(&idx, k);
+            assert_eq!(p.bits(), want_bits, "k={k}");
+            assert_eq!(p.len(), n, "k={k} n={n}");
+            assert_eq!(p.unpack(), idx, "k={k} n={n}");
+            assert_eq!(p.packed_bytes(), (n * want_bits as usize).div_ceil(8));
+            for (i, &want) in idx.iter().enumerate() {
+                assert_eq!(p.get(i), want, "k={k} n={n} get({i})");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_codebook_roundtrips_through_jsonio() {
+    for k in [1usize, 2, 3, 255, 256, 257] {
+        let values: Vec<f64> = (0..600).map(|i| ((i * 13) % k) as f64).collect();
+        let cb = Codebook::from_values(&values).unwrap();
+        let packed = cb.pack();
+        let wire = sqlsq::jsonio::packed_codebook_to_json(&packed, vec![]).to_string();
+        let back =
+            sqlsq::jsonio::packed_codebook_from_json(&sqlsq::jsonio::parse(&wire).unwrap())
+                .unwrap();
+        assert_eq!(back, packed, "k={k}");
+        assert_eq!(back.to_codebook(), cb, "k={k}");
+        // Honest accounting: the packed form stores exactly ⌈log₂ k⌉ bits.
+        let stats = packed.stats(k);
+        assert_eq!(stats.bits_per_idx_stored, kernels::bits_per_index_for(cb.k()));
+        assert_eq!(stats.bits_per_idx_packed, stats.bits_per_idx_stored);
+    }
+}

@@ -131,6 +131,8 @@ fn bruteforce_stats(values: &[f64], requested: usize, dense_elem_bytes: usize) -
         levels_achieved: k,
         levels_requested: requested,
         bits_per_index,
+        bits_per_idx_stored: 32,
+        bits_per_idx_packed: bits_per_index,
         bits_per_value: compact as f64 * 8.0 / n,
         index_entropy: entropy,
         compact_bytes: compact,
@@ -162,6 +164,8 @@ fn compression_stats_agree_with_bruteforce_recompute() {
         assert_eq!(got.levels_achieved, want.levels_achieved, "seed {seed}");
         assert_eq!(got.levels_requested, want.levels_requested, "seed {seed}");
         assert_eq!(got.bits_per_index, want.bits_per_index, "seed {seed}");
+        assert_eq!(got.bits_per_idx_stored, 32, "seed {seed}: dense plane stores u32");
+        assert_eq!(got.bits_per_idx_packed, want.bits_per_index, "seed {seed}");
         assert_eq!(got.compact_bytes, want.compact_bytes, "seed {seed}");
         assert_eq!(got.dense_bytes, want.dense_bytes, "seed {seed}");
         assert!((got.bits_per_value - want.bits_per_value).abs() < 1e-12, "seed {seed}");
