@@ -1,131 +1,106 @@
-//! End-to-end driver (DESIGN E11): the full system on a real small
-//! workload, proving all layers compose.
+//! End-to-end driver (DESIGN E11): NN compression served from
+//! **quantized compute** — the forward pass runs straight off packed
+//! index planes, never materializing a dense weight matrix.
 //!
 //! 1. Train the paper's 784-256-128-64-10 MLP on the procedural digit
 //!    corpus (or load the cached weights) — the §4.1 substrate.
-//! 2. Start the coordinator with the `auto` engine: runtime-capable jobs
-//!    are served by the **AOT JAX/Pallas artifacts on PJRT**, the rest by
-//!    the native engines.
-//! 3. Quantize EVERY layer of the network through the service, sweeping
-//!    the value count; evaluate post-quantization accuracy (Figure 1/2
-//!    end to end).
-//! 4. Report serving throughput/latency from the coordinator metrics.
+//! 2. Quantize every layer into a `QMatrix` residual cascade
+//!    (`Mlp::quantize_weights`): quantize at the first bit width,
+//!    re-quantize the residual at the next, until the norm tolerance.
+//! 3. Serve inference from the packed planes (`QuantizedMlp::infer`) and
+//!    compare dense vs quantized accuracy and weight bytes per config —
+//!    the accuracy-vs-bits trade the cascade buys.
+//! 4. Cross-check the contract: with a single-level cascade the f64
+//!    quantized logits are bit-for-bit the dense logits on the decoded
+//!    weights.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example nn_compression
+//! cargo run --release --example nn_compression
 //! ```
 
-use sqlsq::config::{Config, Engine};
-use sqlsq::coordinator::Coordinator;
 use sqlsq::eval::workloads;
+use sqlsq::nn::train::to_matrix;
+use sqlsq::linalg::matrix::Matrix;
+use sqlsq::quant::tensor::Grouping;
 use sqlsq::quant::{QuantMethod, QuantOptions};
 use std::time::Instant;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. substrate: the trained network -----------------------------
     let nn = workloads::nn_workload(None)?;
+    let dense_bytes: usize = (0..nn.mlp.layers.len())
+        .map(|li| nn.mlp.layer_weights(li).len() * 8)
+        .sum();
     println!(
-        "MLP 784-256-128-64-10 ({} params): train acc {:.4}, test acc {:.4}",
+        "MLP 784-256-128-64-10 ({} params, {} weight bytes dense): train acc {:.4}, test acc {:.4}",
         nn.mlp.param_count(),
+        dense_bytes,
         nn.train_acc,
         nn.test_acc
     );
+    let (train_x, train_y) = to_matrix(&nn.train);
+    let (test_x, test_y) = to_matrix(&nn.test);
 
-    // --- 2. the serving layer ------------------------------------------
-    let engine = if std::path::Path::new("artifacts/manifest.json").exists() {
-        Engine::Auto
-    } else {
-        eprintln!("note: artifacts/ missing — run `make artifacts` for the PJRT path; using native");
-        Engine::Native
-    };
-    let coord = Coordinator::start(Config { engine, ..Default::default() })?;
-
-    // --- 3. quantize every layer through the coordinator ----------------
-    println!("\n== per-layer quantization through the coordinator ==");
+    // --- 2./3. cascade configs: accuracy/bytes served off the planes ----
+    let opts = QuantOptions { kmeans_restarts: 2, ..Default::default() };
+    let configs: &[(&str, &[u32], f64)] = &[
+        ("1 level, 2-bit", &[2], 0.0),
+        ("1 level, 4-bit", &[4], 0.0),
+        ("cascade 4+2", &[4, 2], 0.0),
+        ("cascade 4+2+2", &[4, 2, 2], 0.0),
+        ("cascade 4+2+2, tol 2%", &[4, 2, 2], 0.02),
+    ];
+    println!("\n== quantized forward pass (per-column cascades, kmeans levels) ==");
     println!(
-        "{:<7} {:>10} {:>7} {:>9} {:>10} {:>10} {:>9}",
-        "layer", "method", "k", "achieved", "train_acc", "test_acc", "engine"
+        "{:<22} {:>7} {:>12} {:>8} {:>10} {:>10} {:>10}",
+        "config", "levels", "bytes", "ratio", "max_err", "train_acc", "test_acc"
     );
-    for k in [4usize, 8, 16, 32] {
-        for li in 0..4 {
-            let weights = nn.mlp.layer_weights(li).to_vec();
-            // The l1+LS method (Algorithm 1) through the service; the
-            // runtime lane serves it when the unique-count fits a bucket.
-            let lambda = sqlsq::eval::figures::lambda_for_count(&weights, k);
-            let res = coord.quantize_blocking(
-                weights,
-                QuantMethod::L1LeastSquare,
-                QuantOptions { lambda1: lambda, ..Default::default() },
-            )?;
-            let out = res.outcome.map_err(|e| format!("layer {li}: {e}"))?;
-            // The coordinator returns the compact codebook; materialize at
-            // this edge to patch the layer.
-            let values = out.materialize();
-            let (tr, te) =
-                workloads::accuracy_with_layer(&nn.mlp, li, &values, &nn.train, &nn.test)?;
-            println!(
-                "{:<7} {:>10} {:>7} {:>9} {:>10.4} {:>10.4} {:>9}",
-                format!("L{li}"),
-                "l1_ls",
-                k,
-                out.distinct_values(),
-                tr,
-                te,
-                res.served_by.label()
-            );
-        }
+    for &(name, bits, tol) in configs {
+        let t0 = Instant::now();
+        let qnet =
+            nn.mlp.quantize_weights(Grouping::PerColumn, QuantMethod::KMeans, &opts, bits, tol)?;
+        let build = t0.elapsed();
+        let tr = qnet.accuracy(&train_x, &train_y)?;
+        let te = qnet.accuracy(&test_x, &test_y)?;
+        println!(
+            "{:<22} {:>7} {:>12} {:>7.1}x {:>10.2e} {:>10.4} {:>10.4}   (built in {build:.2?})",
+            name,
+            qnet.weights.iter().map(|w| w.num_levels()).max().unwrap_or(0),
+            qnet.weight_bytes(),
+            qnet.dense_weight_bytes() as f64 / qnet.weight_bytes() as f64,
+            qnet.max_layer_error(&nn.mlp),
+            tr,
+            te
+        );
     }
-
-    // Full-network compression: quantize all layers at once, k=32 each.
-    println!("\n== whole-network quantization (all four layers, k=32) ==");
-    let mut compressed = nn.mlp.clone();
-    for li in 0..4 {
-        let weights = nn.mlp.layer_weights(li).to_vec();
-        let res = coord.quantize_blocking(
-            weights,
-            QuantMethod::ClusterLs,
-            QuantOptions { target_values: 32, ..Default::default() },
-        )?;
-        let out = res.outcome.map_err(|e| format!("layer {li}: {e}"))?;
-        println!("  L{li}: {}", out.compression().summary());
-        compressed.set_layer_weights(li, &out.materialize())?;
-    }
-    let tr = sqlsq::nn::train::evaluate(&compressed, &nn.train)?;
-    let te = sqlsq::nn::train::evaluate(&compressed, &nn.test)?;
     println!(
-        "32 shared values/layer (~{:.1}x weight-bits compression): train {:.4} (Δ{:+.4}), test {:.4} (Δ{:+.4})",
-        64.0 / 5.0, // f64 mantissa-ish vs 5-bit index — illustrative
-        tr,
-        tr - nn.train_acc,
-        te,
-        te - nn.test_acc
+        "(dense reference: train {:.4}, test {:.4} — the cascade rows converge toward it \
+         as cumulative bits grow)",
+        nn.train_acc, nn.test_acc
     );
 
-    // --- 4. throughput under a burst ------------------------------------
-    println!("\n== serving burst: 120 mixed quantization jobs ==");
-    let t0 = Instant::now();
-    let mut rxs = Vec::new();
-    for i in 0..120 {
-        let li = i % 4;
-        let weights = nn.mlp.layer_weights(li).to_vec();
-        let method = [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::ClusterLs]
-            [i % 3];
-        let (_, rx) = coord.submit(
-            weights,
-            method,
-            QuantOptions { target_values: 16, lambda1: 0.01, seed: i as u64, ..Default::default() },
-        )?;
-        rxs.push(rx);
+    // --- 4. the bitwise contract ----------------------------------------
+    let qnet =
+        nn.mlp.quantize_weights(Grouping::PerColumn, QuantMethod::KMeans, &opts, &[4], 0.0)?;
+    let mut decoded = nn.mlp.clone();
+    for (li, qw) in qnet.weights.iter().enumerate() {
+        decoded.set_layer_weights(li, qw.decode().data())?;
     }
-    let mut ok = 0;
-    for rx in rxs {
-        if rx.recv()?.is_ok() {
-            ok += 1;
-        }
+    let probe_x: &Matrix = &test_x;
+    let quantized_logits = qnet.infer(probe_x)?;
+    let dense_logits = decoded.infer(probe_x)?;
+    let identical = quantized_logits
+        .data()
+        .iter()
+        .zip(dense_logits.data())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "\nsingle-level packed forward vs decoded-dense forward over {} test rows: {}",
+        probe_x.rows(),
+        if identical { "bit-for-bit identical" } else { "MISMATCH (contract violated!)" }
+    );
+    if !identical {
+        return Err("single-level quantized forward must be bitwise dense".into());
     }
-    let wall = t0.elapsed();
-    let snap = coord.shutdown();
-    println!("{ok}/120 ok in {wall:.2?}  ({:.1} jobs/s)", 120.0 / wall.as_secs_f64());
-    println!("metrics: {}", snap.summary());
     Ok(())
 }

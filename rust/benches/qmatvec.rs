@@ -1,0 +1,164 @@
+//! Quantized-compute serving bench (ISSUE-7 acceptance): `QMatrix::matvec`
+//! straight off the packed ⌈log₂k⌉-bit index planes, raced against
+//!
+//! * `decode_dense` — decode the codebook payload to a dense matrix and
+//!   run the dense matvec, **per call** (what serving from the compact
+//!   wire form cost before `QMatrix` existed), and
+//! * `dense_pre` — the dense matvec on a pre-materialized matrix (the
+//!   steady-state dense baseline; the packed path trades its gather
+//!   arithmetic against moving 64 bits per entry).
+//!
+//! Emits `BENCH_qmatvec.json`: a quantized-vs-dense throughput series
+//! over sizes × bit widths (both precision lanes), plus the residual
+//! cascade's error-vs-cumulative-bits series. The acceptance criterion
+//! reads `speedup_vs_decode > 1` at low bit widths for rows ≥ 4096.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::data::rng::Pcg32;
+use sqlsq::jsonio::Json;
+use sqlsq::linalg::matrix::Matrix;
+use sqlsq::quant::tensor::Grouping;
+use sqlsq::quant::{QMatrix, QuantMethod, QuantOptions};
+
+/// Clustered NN-like weights, rounded to a coarse grid so the k-means
+/// build stage stays cheap at bench sizes (the compute path under test
+/// does not depend on how the levels were fit).
+fn weights(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed, 77);
+    Matrix::from_fn(rows, cols, |_, _| {
+        let c = [-0.6, -0.2, 0.1, 0.45, 0.8][(rng.next_u32() % 5) as usize];
+        ((c + rng.normal() * 0.04) * 256.0).round() / 256.0
+    })
+}
+
+fn probe(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i as f64) * 0.531).cos() * 1.5).collect()
+}
+
+fn opts() -> QuantOptions {
+    QuantOptions { kmeans_restarts: 1, ..QuantOptions::default() }
+}
+
+fn main() {
+    let mut suite = Suite::with_config("Quantized matvec", active_config());
+    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
+
+    // (rows, cols) per series point; rows is the reduction length. The
+    // full run includes the ≥4096 acceptance point.
+    let sizes: &[(usize, usize)] =
+        if quick { &[(512, 64)] } else { &[(1024, 128), (4096, 256), (8192, 256)] };
+    let bit_widths: &[u32] = if quick { &[2, 4] } else { &[2, 4, 8] };
+
+    // --- throughput series: packed vs decode_dense vs dense_pre --------
+    let mut series: Vec<Json> = Vec::new();
+    for &(rows, cols) in sizes {
+        let m = weights(rows, cols, rows as u64);
+        let x = probe(rows);
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        for &bits in bit_widths {
+            let qm = QMatrix::quantize(&m, Grouping::PerColumn, QuantMethod::KMeans, &opts(), bits)
+                .expect("bench build");
+            let tag = format!("{rows}x{cols}/b={bits}");
+
+            let packed = suite.case(&format!("qmatvec/packed/f64/{tag}"), || {
+                black_box(qm.matvec(black_box(&x)));
+            });
+
+            let q32 = qm.to_f32();
+            let packed32 = suite.case(&format!("qmatvec/packed/f32/{tag}"), || {
+                black_box(q32.matvec(black_box(&x32)));
+            });
+
+            let x_row = Matrix::from_vec(1, rows, x.clone()).unwrap();
+            let decode_dense = suite.case(&format!("qmatvec/decode_dense/f64/{tag}"), || {
+                let dense = qm.decode();
+                black_box(x_row.matmul(black_box(&dense)).unwrap());
+            });
+
+            let dense = qm.decode();
+            let dense_pre = suite.case(&format!("qmatvec/dense_pre/f64/{tag}"), || {
+                black_box(x_row.matmul(black_box(&dense)).unwrap());
+            });
+
+            let elems = (rows * cols) as f64;
+            series.push(Json::obj(vec![
+                ("rows", Json::Num(rows as f64)),
+                ("cols", Json::Num(cols as f64)),
+                ("bits", Json::Num(f64::from(bits))),
+                ("packed_f64_median_s", Json::Num(packed.median)),
+                ("packed_f32_median_s", Json::Num(packed32.median)),
+                ("decode_dense_median_s", Json::Num(decode_dense.median)),
+                ("dense_pre_median_s", Json::Num(dense_pre.median)),
+                ("speedup_vs_decode", Json::Num(decode_dense.median / packed.median.max(1e-12))),
+                ("speedup_vs_dense_pre", Json::Num(dense_pre.median / packed.median.max(1e-12))),
+                ("packed_gelem_per_s", Json::Num(elems / packed.median.max(1e-12) / 1e9)),
+            ]));
+        }
+    }
+
+    // --- cascade series: error vs cumulative packed bits ----------------
+    let (casc_rows, casc_cols) = if quick { (256, 32) } else { (1024, 128) };
+    let m = weights(casc_rows, casc_cols, 9);
+    let bit_list: &[u32] = &[4, 2, 2, 2];
+    let (qm, trace) = QMatrix::residual_levels_traced(
+        &m,
+        Grouping::PerColumn,
+        QuantMethod::KMeans,
+        &opts(),
+        bit_list,
+        0.0,
+    )
+    .expect("cascade build");
+    let x = probe(casc_rows);
+    suite.case(&format!("qmatvec/cascade{}l/{casc_rows}x{casc_cols}", qm.num_levels()), || {
+        black_box(qm.matvec(black_box(&x)));
+    });
+    let stats = qm.stats();
+    let cascade: Vec<Json> = trace
+        .iter()
+        .enumerate()
+        .map(|(l, lv)| {
+            Json::obj(vec![
+                ("level", Json::Num(l as f64)),
+                ("bits", Json::Num(f64::from(lv.bits))),
+                ("cum_bits", Json::Num(f64::from(lv.cum_bits))),
+                ("rel_error", Json::Num(lv.rel_error)),
+            ])
+        })
+        .collect();
+
+    suite.write_csv(std::path::Path::new("reports")).ok();
+
+    let cases: Vec<Json> = suite
+        .rows()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("median_s", Json::Num(s.median)),
+                ("min_s", Json::Num(s.min)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("qmatvec".into())),
+        ("quick", Json::Bool(quick)),
+        ("series", Json::Arr(series)),
+        ("cascade", Json::Arr(cascade)),
+        (
+            "cascade_stats",
+            Json::obj(vec![
+                ("rows", Json::Num(casc_rows as f64)),
+                ("cols", Json::Num(casc_cols as f64)),
+                ("bits_per_idx_packed", Json::Num(f64::from(stats.bits_per_idx_packed))),
+                ("compact_bytes", Json::Num(stats.compact_bytes as f64)),
+                ("dense_bytes", Json::Num(stats.dense_bytes as f64)),
+                ("byte_ratio", Json::Num(stats.byte_ratio)),
+            ]),
+        ),
+        ("cases", Json::Arr(cases)),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_qmatvec.json", json.to_pretty()) {
+        eprintln!("warning: could not write BENCH_qmatvec.json: {e}");
+    }
+}

@@ -93,7 +93,8 @@
 //! exactly when serialized, so a wire round trip is lossless for both
 //! lanes. Producers emit keys in deterministic (sorted) order.
 
-use crate::quant::{Codebook, CompressionStats, PackedCodebook, PackedIndices};
+use crate::quant::tensor::Grouping;
+use crate::quant::{Codebook, CompressionStats, PackedCodebook, PackedIndices, QMatrix};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -661,6 +662,89 @@ pub fn packed_codebook_from_json(j: &Json) -> Result<PackedCodebook> {
     Ok(PackedCodebook { levels, indices })
 }
 
+fn grouping_to_str(g: Grouping) -> &'static str {
+    match g {
+        Grouping::PerTensor => "per_tensor",
+        Grouping::PerRow => "per_row",
+        Grouping::PerColumn => "per_column",
+    }
+}
+
+fn grouping_from_str(s: &str) -> Result<Grouping> {
+    match s {
+        "per_tensor" => Ok(Grouping::PerTensor),
+        "per_row" => Ok(Grouping::PerRow),
+        "per_column" => Ok(Grouping::PerColumn),
+        other => Err(Error::InvalidInput(format!(
+            "qmatrix wire: unknown grouping '{other}' (per_tensor|per_row|per_column)"
+        ))),
+    }
+}
+
+/// Serialize a quantized-compute matrix into the wire's **qmatrix form**:
+/// `{"rows":r,"cols":c,"grouping":"per_column","groups":[[plane,..],..]}`
+/// where each plane is a packed-codebook form ([`packed_codebook_to_json`]).
+/// Groups are emitted in [`Grouping`] order (row-major flat / rows /
+/// columns); within a group, planes are in cascade-level order. `extra`
+/// producer fields ride along at the top level.
+pub fn qmatrix_to_json(qm: &QMatrix, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = extra;
+    fields.push(("rows", Json::Num(qm.rows() as f64)));
+    fields.push(("cols", Json::Num(qm.cols() as f64)));
+    fields.push(("grouping", Json::Str(grouping_to_str(qm.grouping()).into())));
+    fields.push((
+        "groups",
+        Json::Arr(
+            qm.groups()
+                .iter()
+                .map(|planes| {
+                    Json::Arr(
+                        planes.iter().map(|cb| packed_codebook_to_json(cb, vec![])).collect(),
+                    )
+                })
+                .collect(),
+        ),
+    ));
+    Json::obj(fields)
+}
+
+/// Parse the wire's qmatrix form back into a [`QMatrix`]. Each plane goes
+/// through [`packed_codebook_from_json`]'s invariants, then
+/// [`QMatrix::from_parts`] revalidates the assembled shape (group count vs
+/// grouping, plane coverage, packed widths, index ranges) — wire data can
+/// never build a `QMatrix` whose matvec would fault. Unknown fields are
+/// ignored.
+pub fn qmatrix_from_json(j: &Json) -> Result<QMatrix> {
+    let bad = |msg: &str| Error::InvalidInput(format!("qmatrix wire: {msg}"));
+    let rows = j
+        .get("rows")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("missing integer 'rows'"))?;
+    let cols = j
+        .get("cols")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("missing integer 'cols'"))?;
+    let grouping = grouping_from_str(
+        j.get("grouping")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing string 'grouping'"))?,
+    )?;
+    let groups: Vec<Vec<PackedCodebook>> = j
+        .get("groups")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("missing 'groups' array"))?
+        .iter()
+        .map(|g| {
+            g.as_arr()
+                .ok_or_else(|| bad("each group must be an array of planes"))?
+                .iter()
+                .map(packed_codebook_from_json)
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<_>>()?;
+    QMatrix::from_parts(rows, cols, grouping, groups)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -802,6 +886,60 @@ mod tests {
         assert_eq!(j.get("bits").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("len").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("packed_hex").unwrap().as_str(), Some("9001"));
+    }
+
+    fn demo_qmatrix() -> QMatrix {
+        // 3×2, per-column, a 2-level cascade on column 0 and a single
+        // level on column 1 (ragged, like an early-stopped group).
+        let plane = |levels: Vec<f64>, idx: Vec<u32>| Codebook { levels, indices: idx }.pack();
+        QMatrix::from_parts(
+            3,
+            2,
+            Grouping::PerColumn,
+            vec![
+                vec![
+                    plane(vec![-1.0, 1.0], vec![0, 1, 0]),
+                    plane(vec![-0.25, 0.0, 0.25], vec![2, 0, 1]),
+                ],
+                vec![plane(vec![0.5], vec![0, 0, 0])],
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn qmatrix_wire_roundtrip_preserves_planes_and_matvec() {
+        let qm = demo_qmatrix();
+        let j = qmatrix_to_json(&qm, vec![("method", Json::Str("kmeans".into()))]);
+        let parsed = parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("method").unwrap().as_str(), Some("kmeans"));
+        let back = qmatrix_from_json(&parsed).unwrap();
+        assert_eq!(back, qm);
+        let x = [0.3, -0.7, 1.1];
+        for (a, b) in back.matvec(&x).iter().zip(qm.matvec(&x)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn qmatrix_wire_rejects_shape_violations() {
+        let qm = demo_qmatrix();
+        let good = qmatrix_to_json(&qm, vec![]).to_string();
+        assert!(qmatrix_from_json(&parse(&good).unwrap()).is_ok());
+        let bad = |t: &str| qmatrix_from_json(&parse(t).unwrap());
+        assert!(bad(r#"{"rows":3,"cols":2,"groups":[]}"#).is_err(), "missing grouping");
+        assert!(
+            bad(r#"{"rows":3,"cols":2,"grouping":"per_banana","groups":[]}"#).is_err(),
+            "unknown grouping"
+        );
+        // Group count must match the grouping over the declared shape.
+        let wrong_count = good.replacen(r#""cols": 2"#, r#""cols": 3"#, 1);
+        let wrong_count = wrong_count.replacen(r#""cols":2"#, r#""cols":3"#, 1);
+        assert!(bad(&wrong_count).is_err(), "2 groups for per_column over 3 cols");
+        // Plane length must cover the group.
+        let wrong_rows = good.replacen(r#""rows": 3"#, r#""rows": 4"#, 1);
+        let wrong_rows = wrong_rows.replacen(r#""rows":3"#, r#""rows":4"#, 1);
+        assert!(bad(&wrong_rows).is_err(), "3-element planes for 4-row columns");
     }
 
     #[test]

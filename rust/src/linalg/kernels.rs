@@ -341,6 +341,154 @@ pub fn unpack_indices(words: &[u64], bits: u32, len: usize) -> Vec<u32> {
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Quantized compute: matvec straight off a packed index plane
+// ---------------------------------------------------------------------
+
+/// Sequential reader over a packed index plane (the [`pack_indices`]
+/// layout). The quantized-compute kernels stream indices through this
+/// cursor instead of materializing a `Vec<u32>` — one shift/mask pair per
+/// element, no allocation, memory traffic proportional to `bits`, not 32.
+pub struct PackedIter<'a> {
+    words: &'a [u64],
+    bits: usize,
+    mask: u64,
+    bitpos: usize,
+    remaining: usize,
+}
+
+impl<'a> PackedIter<'a> {
+    /// Cursor over the first `len` `bits`-wide indices of `words`.
+    pub fn new(words: &'a [u64], bits: u32, len: usize) -> PackedIter<'a> {
+        assert!((1..=32).contains(&bits), "PackedIter: bits must be in 1..=32, got {bits}");
+        debug_assert!(
+            words.len() * 64 >= len * bits as usize,
+            "PackedIter: plane too short for {len} × {bits}-bit indices"
+        );
+        PackedIter {
+            words,
+            bits: bits as usize,
+            mask: (1u64 << bits) - 1,
+            bitpos: 0,
+            remaining: len,
+        }
+    }
+}
+
+impl Iterator for PackedIter<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let w = self.bitpos / 64;
+        let off = self.bitpos % 64;
+        let mut v = self.words[w] >> off;
+        if off + self.bits > 64 {
+            v |= self.words[w + 1] << (64 - off);
+        }
+        self.bitpos += self.bits;
+        Some((v & self.mask) as u32)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for PackedIter<'_> {}
+
+/// `acc[idx[i]] += x[i]` with the indices read straight off a packed
+/// plane — the per-level partial-sum gather of the quantized matvec.
+/// `acc` must have one slot per codebook level. Combining the slots as
+/// `Σ acc[k]·levels[k]` afterwards turns n multiplies into k, at the cost
+/// of reassociating the sum — so this is the fast-lane building block
+/// ([`matvec_levels`] routes the f32 lane through it) and a public
+/// primitive for cascade callers that keep accumulators across planes.
+#[inline]
+pub fn accum_by_index<T: Scalar>(acc: &mut [T], x: &[T], words: &[u64], bits: u32) {
+    let idx = PackedIter::new(words, bits, x.len());
+    for (&xi, i) in x.iter().zip(idx) {
+        acc[i as usize] += xi;
+    }
+}
+
+/// `Σ x[i] · levels[idx[i]]` with `idx` read straight off a packed plane —
+/// one output element of a quantized matvec `y = x·W` when the plane holds
+/// a column's indices. The dense column is never materialized.
+///
+/// Lane dispatch follows the module contract: on the strict
+/// ([`Scalar::STRICT_ACCUMULATION`]) f64 lane a single accumulator runs
+/// left-to-right and skips zero inputs exactly like the dense matmul's
+/// `a == 0.0` fast path, so the result is **bit-identical** to
+/// decode-then-`Matrix::matmul` — including on signed-zero edges, where
+/// adding the skipped `±0.0` products could flip a zero sum's sign. On
+/// the f32 lane the sum reassociates per level via [`accum_by_index`]
+/// (n adds + k multiplies instead of n of each), combined with [`dot`].
+/// `scratch` is the caller-owned k-slot accumulator buffer
+/// (cleared/resized here; untouched on the strict lane).
+pub fn matvec_levels<T: Scalar>(
+    x: &[T],
+    levels: &[T],
+    words: &[u64],
+    bits: u32,
+    scratch: &mut Vec<T>,
+) -> T {
+    if T::STRICT_ACCUMULATION {
+        let idx = PackedIter::new(words, bits, x.len());
+        let mut acc = T::ZERO;
+        for (&xi, i) in x.iter().zip(idx) {
+            if xi == T::ZERO {
+                continue;
+            }
+            acc += xi * levels[i as usize];
+        }
+        acc
+    } else {
+        scratch.clear();
+        scratch.resize(levels.len(), T::ZERO);
+        accum_by_index(scratch, x, words, bits);
+        dot(scratch, levels)
+    }
+}
+
+/// Row-major quantized GEMV: the plane holds `x.len() × y.len()` indices
+/// row-major, and each row `i` contributes `y[j] += x[i]·levels[idx(i,j)]`.
+/// The level table is pre-scaled once per row (`k` multiplies into the
+/// caller-owned `scaled` buffer), then every entry costs one gather + add.
+/// The per-element arithmetic — `x[i]·levels[idx]` multiplied first, then
+/// added in `i` order, with zero rows skipped like the dense matmul's
+/// `a == 0.0` fast path (their `±0.0` products could flip a signed-zero
+/// `y` entry) — is exactly the dense ikj matmul sequence, so this kernel
+/// is **bitwise identical to decode-then-`Matrix::matmul` on both lanes**.
+pub fn matvec_rowmajor_levels<T: Scalar>(
+    y: &mut [T],
+    x: &[T],
+    levels: &[T],
+    words: &[u64],
+    bits: u32,
+    scaled: &mut Vec<T>,
+) {
+    let mut idx = PackedIter::new(words, bits, x.len() * y.len());
+    for &xi in x {
+        if xi == T::ZERO {
+            for _ in 0..y.len() {
+                let _ = idx.next();
+            }
+            continue;
+        }
+        scaled.clear();
+        scaled.extend(levels.iter().map(|&l| xi * l));
+        for yj in y.iter_mut() {
+            let i = idx.next().expect("matvec_rowmajor_levels: plane exhausted");
+            *yj += scaled[i as usize];
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -493,5 +641,118 @@ mod tests {
     fn pack_masks_out_of_range_values() {
         let words = pack_indices(&[5u32], 2); // 5 = 0b101 → masked to 0b01
         assert_eq!(unpack_indices(&words, 2, 1), vec![1]);
+    }
+
+    #[test]
+    fn packed_iter_matches_unpack() {
+        for bits in [1u32, 3, 7, 13, 32] {
+            let modulus = if bits == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << bits };
+            let indices: Vec<u32> =
+                (0..97u64).map(|i| ((i * 2_654_435_761) % modulus) as u32).collect();
+            let words = pack_indices(&indices, bits);
+            let streamed: Vec<u32> = PackedIter::new(&words, bits, indices.len()).collect();
+            assert_eq!(streamed, unpack_indices(&words, bits, indices.len()), "bits={bits}");
+        }
+        assert_eq!(PackedIter::new(&[], 5, 0).count(), 0);
+    }
+
+    #[test]
+    fn matvec_levels_f64_is_bitwise_dense_column_sequence() {
+        for n in [0usize, 1, 7, 8, 33, 130] {
+            let mut x = seq(n);
+            if n > 2 {
+                x[n / 2] = 0.0; // exercise the dense-matmul zero-skip
+            }
+            let levels = [-1.25f64, 0.5, 2.0, 3.75, 5.5];
+            let indices: Vec<u32> = (0..n as u64).map(|i| ((i * 7) % 5) as u32).collect();
+            let bits = bits_per_index_for(levels.len());
+            let words = pack_indices(&indices, bits);
+            let dense = gather_levels(&levels, &indices);
+            // Matrix::matmul's per-column sequence: multiply-then-add in
+            // input order, zero inputs skipped.
+            let mut want = 0.0f64;
+            for (&xi, &wi) in x.iter().zip(&dense) {
+                if xi != 0.0 {
+                    want += xi * wi;
+                }
+            }
+            let mut scratch = Vec::new();
+            let got = matvec_levels(&x, &levels, &words, bits, &mut scratch);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}");
+            assert!(scratch.is_empty(), "strict lane must not touch scratch");
+        }
+    }
+
+    #[test]
+    fn matvec_levels_f32_tracks_reference() {
+        let n = 257usize;
+        let x: Vec<f32> = seq(n).iter().map(|&v| v as f32).collect();
+        let levels = [-1.25f32, 0.5, 2.0, 3.75];
+        let indices: Vec<u32> = (0..n as u64).map(|i| ((i * 5) % 4) as u32).collect();
+        let bits = bits_per_index_for(levels.len());
+        let words = pack_indices(&indices, bits);
+        let ref64: f64 = x
+            .iter()
+            .zip(&indices)
+            .map(|(&xi, &i)| f64::from(xi) * f64::from(levels[i as usize]))
+            .sum();
+        let mut scratch = Vec::new();
+        let got = f64::from(matvec_levels(&x, &levels, &words, bits, &mut scratch));
+        assert!((got - ref64).abs() <= 1e-3 * ref64.abs().max(1.0), "{got} vs {ref64}");
+        assert_eq!(scratch.len(), levels.len());
+    }
+
+    #[test]
+    fn accum_by_index_builds_per_level_sums() {
+        let x = [1.0f64, 2.0, 4.0, 8.0];
+        let indices = [1u32, 0, 1, 2];
+        let words = pack_indices(&indices, 2);
+        let mut acc = vec![0.0f64; 3];
+        accum_by_index(&mut acc, &x, &words, 2);
+        assert_eq!(acc, vec![2.0, 5.0, 8.0]);
+    }
+
+    #[test]
+    fn matvec_rowmajor_levels_is_bitwise_ikj() {
+        let (rows, cols) = (9usize, 6usize);
+        let mut x = seq(rows);
+        x[4] = 0.0; // a skipped row in the middle must still advance the plane
+        let levels = [-2.0f64, 0.25, 1.0, 3.5];
+        let indices: Vec<u32> = (0..(rows * cols) as u64).map(|i| ((i * 11) % 4) as u32).collect();
+        let bits = bits_per_index_for(levels.len());
+        let words = pack_indices(&indices, bits);
+        // ikj dense reference over the decoded matrix, with matmul's zero-skip.
+        let w = gather_levels(&levels, &indices);
+        let mut y_ref = vec![0.0f64; cols];
+        for i in 0..rows {
+            if x[i] == 0.0 {
+                continue;
+            }
+            for j in 0..cols {
+                y_ref[j] += x[i] * w[i * cols + j];
+            }
+        }
+        let mut y = vec![0.0f64; cols];
+        let mut scaled = Vec::new();
+        matvec_rowmajor_levels(&mut y, &x, &levels, &words, bits, &mut scaled);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_inputs_are_skipped_like_dense_matmul() {
+        // x = 0 against a negative level: naively accumulating the 0·(-1)
+        // product yields -0.0, while Matrix::matmul's `a == 0.0` skip leaves
+        // +0.0. The kernels must side with matmul — that is the bitwise
+        // decode-then-dense contract.
+        let words = pack_indices(&[0u32], 1);
+        let mut scratch = Vec::new();
+        let got = matvec_levels(&[0.0f64], &[-1.0f64, 1.0], &words, 1, &mut scratch);
+        assert_eq!(got.to_bits(), 0.0f64.to_bits());
+        let mut y = vec![0.0f64];
+        let mut scaled = Vec::new();
+        matvec_rowmajor_levels(&mut y, &[0.0f64], &[-1.0f64, 1.0], &words, 1, &mut scaled);
+        assert_eq!(y[0].to_bits(), 0.0f64.to_bits());
     }
 }

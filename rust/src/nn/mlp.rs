@@ -4,6 +4,9 @@
 
 use crate::data::rng::Pcg32;
 use crate::linalg::matrix::Matrix;
+use crate::quant::qmatrix::QMatrix;
+use crate::quant::tensor::Grouping;
+use crate::quant::types::{QuantMethod, QuantOptions};
 use crate::{Error, Result};
 
 /// One dense layer `y = x W + b` with optional ReLU.
@@ -231,6 +234,123 @@ impl Mlp {
         w.data_mut().copy_from_slice(flat);
         Ok(())
     }
+
+    /// Quantize every layer's weight matrix into a packed residual
+    /// cascade ([`QMatrix::residual_levels`]) — the serve-side handoff:
+    /// the returned network computes its forward pass straight off the
+    /// index planes. Biases stay dense (they are `out_dim` values per
+    /// layer, noise next to `in_dim × out_dim` weights).
+    pub fn quantize_weights(
+        &self,
+        grouping: Grouping,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        bit_list: &[u32],
+        norm_tol: f64,
+    ) -> Result<QuantizedMlp> {
+        let mut weights = Vec::with_capacity(self.layers.len());
+        for layer in &self.layers {
+            weights.push(QMatrix::residual_levels(
+                &layer.w, grouping, method, opts, bit_list, norm_tol,
+            )?);
+        }
+        Ok(QuantizedMlp {
+            weights,
+            biases: self.layers.iter().map(|l| l.b.clone()).collect(),
+            relus: self.layers.iter().map(|l| l.relu).collect(),
+        })
+    }
+}
+
+/// An [`Mlp`] whose weight matrices are packed [`QMatrix`] cascades: the
+/// forward pass runs directly on the ⌈log₂k⌉-bit index planes, so serving
+/// never materializes a dense weight matrix. With a single-level
+/// per-layer cascade the f64 logits are bit-for-bit identical to running
+/// [`Mlp::infer`] on the decoded weights (the kernels reproduce the dense
+/// ikj arithmetic order); multi-level cascades sum per-level matvecs in
+/// cascade order.
+#[derive(Debug, Clone)]
+pub struct QuantizedMlp {
+    /// Per-layer quantized weights, input to output.
+    pub weights: Vec<QMatrix<f64>>,
+    /// Per-layer dense biases (copied from the source network).
+    pub biases: Vec<Vec<f64>>,
+    /// Per-layer ReLU flags.
+    pub relus: Vec<bool>,
+}
+
+impl QuantizedMlp {
+    /// Input dimension.
+    pub fn in_dim(&self) -> usize {
+        self.weights.first().map_or(0, |w| w.rows())
+    }
+
+    /// Quantized inference: affine maps off the packed planes, dense
+    /// biases, ReLU masks — [`Mlp::infer`] shape for shape.
+    pub fn infer(&self, x: &Matrix) -> Result<Matrix> {
+        if x.cols() != self.in_dim() {
+            return Err(Error::InvalidInput(format!(
+                "quantized mlp: input dim {} vs expected {}",
+                x.cols(),
+                self.in_dim()
+            )));
+        }
+        let mut a = x.clone();
+        for ((w, b), &relu) in self.weights.iter().zip(&self.biases).zip(&self.relus) {
+            let mut z = w.matmul(&a);
+            for i in 0..z.rows() {
+                for (zj, bj) in z.row_mut(i).iter_mut().zip(b) {
+                    *zj += bj;
+                }
+            }
+            if relu {
+                for v in z.data_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            a = z;
+        }
+        Ok(a)
+    }
+
+    /// Classification accuracy over a batch, served from quantized compute.
+    pub fn accuracy(&self, x: &Matrix, labels: &[usize]) -> Result<f64> {
+        let logits = self.infer(x)?;
+        let mut correct = 0usize;
+        for i in 0..logits.rows() {
+            let row = logits.row(i);
+            let pred = (0..row.len())
+                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap();
+            if pred == labels[i] {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / logits.rows().max(1) as f64)
+    }
+
+    /// Compact payload bytes across all weight cascades (packed index
+    /// planes + f32 level tables; biases excluded — dense in both nets).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.iter().map(QMatrix::compact_bytes).sum()
+    }
+
+    /// Dense f64 bytes of the same weights, for the compression ratio.
+    pub fn dense_weight_bytes(&self) -> usize {
+        self.weights.iter().map(|w| w.rows() * w.cols() * 8).sum()
+    }
+
+    /// Worst per-layer relative Frobenius reconstruction error vs the
+    /// source network the weights were quantized from.
+    pub fn max_layer_error(&self, src: &Mlp) -> f64 {
+        self.weights
+            .iter()
+            .zip(&src.layers)
+            .map(|(qw, l)| qw.approx_error(&l.w))
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +448,54 @@ mod tests {
         let labels = vec![0usize; 6];
         let acc = m.accuracy(&x, &labels).unwrap();
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn quantized_forward_single_level_is_bitwise_decoded_dense() {
+        let m = tiny();
+        let qnet = m
+            .quantize_weights(
+                Grouping::PerColumn,
+                QuantMethod::KMeans,
+                &QuantOptions { kmeans_restarts: 2, ..QuantOptions::default() },
+                &[3],
+                0.0,
+            )
+            .unwrap();
+        // A dense copy carrying the decoded (reconstructed) weights.
+        let mut dense = m.clone();
+        for (li, qw) in qnet.weights.iter().enumerate() {
+            dense.set_layer_weights(li, qw.decode().data()).unwrap();
+        }
+        let x = Matrix::from_fn(6, 4, |i, j| ((i * 3 + j) as f64 * 0.37).sin());
+        let want = dense.infer(&x).unwrap();
+        let got = qnet.infer(&x).unwrap();
+        assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()));
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantized_accuracy_and_bytes_report() {
+        let m = tiny();
+        let qnet = m
+            .quantize_weights(
+                Grouping::PerColumn,
+                QuantMethod::KMeans,
+                &QuantOptions { kmeans_restarts: 2, ..QuantOptions::default() },
+                &[4, 3],
+                0.0,
+            )
+            .unwrap();
+        let x = Matrix::from_fn(10, 4, |i, j| ((i + 2 * j) as f64 * 0.21).cos());
+        let labels: Vec<usize> = (0..10).map(|i| i % 3).collect();
+        let acc = qnet.accuracy(&x, &labels).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(qnet.weight_bytes() < qnet.dense_weight_bytes());
+        assert_eq!(qnet.dense_weight_bytes(), (4 * 8 + 8 * 3) * 8);
+        assert!(qnet.max_layer_error(&m).is_finite());
+        assert!(qnet.infer(&Matrix::zeros(2, 5)).is_err(), "dim mismatch must error");
     }
 
     #[test]

@@ -146,6 +146,26 @@ pub enum Plan {
         /// Reuse the previous grid point's coefficients as a warm start.
         warm_start: bool,
     },
+    /// A multi-level residual cascade (the quantized-compute plan —
+    /// lm-nslsqr's successive-bit-levels scheme): quantize the input at
+    /// `2^bits[0]` target levels, then re-quantize the *residual*
+    /// `w − decode(level₀)` at `2^bits[1]`, and so on, stopping early once
+    /// the relative l2 norm of the residual (`‖r‖₂ / ‖w‖₂`; Frobenius over
+    /// a matrix group) drops to `norm_tol`. One response item per level
+    /// actually built, in cascade order; over a batch/matrix input the
+    /// items are group-major and each group stops independently, so
+    /// per-group level counts may differ (a failed group contributes one
+    /// error item). Pair with a count-taking method
+    /// (`QuantMethod::takes_target_count`) so `2^bits` is honored;
+    /// `quant::qmatrix::QMatrix` assembles the per-group planes into a
+    /// matrix that computes matvec without decoding.
+    Cascade {
+        /// Index bit-widths per level, in cascade order (level `l` targets
+        /// `2^bits[l]` codebook levels). Must be non-empty, each in 1..=16.
+        bits: Vec<u32>,
+        /// Relative residual-norm stop; `0.0` always runs every level.
+        norm_tol: f64,
+    },
 }
 
 /// The input a request quantizes. Vectors are held behind `Arc`, so
@@ -291,6 +311,14 @@ impl QuantRequest {
     /// (bitwise-identical to per-λ one-shot runs).
     pub fn sweep_cold(mut self, lambdas: Vec<f64>) -> QuantRequest {
         self.plan = Plan::Sweep { lambdas, warm_start: false };
+        self
+    }
+
+    /// Plan a multi-level residual cascade (sets [`Plan::Cascade`]): one
+    /// quantization per bit width, each over the previous level's
+    /// residual, stopping early at `norm_tol` relative residual norm.
+    pub fn residual_levels(mut self, bits: Vec<u32>, norm_tol: f64) -> QuantRequest {
+        self.plan = Plan::Cascade { bits, norm_tol };
         self
     }
 
@@ -571,6 +599,28 @@ impl QuantResponse {
             .collect();
         CompressionStats::aggregate(per.iter())
     }
+
+    /// Stacked compression accounting for a single-group
+    /// [`Plan::Cascade`] response: the items are successive planes over
+    /// the **same** elements, so their stats fold through
+    /// [`CompressionStats::stack`] (per-index bits add, one dense
+    /// baseline) instead of [`CompressionStats::aggregate`]'s
+    /// parallel-payload rules. Each level's `levels_requested` is its own
+    /// achieved count (a cascade has no single request-level target).
+    /// `None` when no item succeeded. For batch/matrix cascades, slice the
+    /// items per group before stacking — stacking across groups panics on
+    /// the element-count mismatch.
+    pub fn compression_cascade(&self) -> Option<CompressionStats> {
+        let mut acc: Option<CompressionStats> = None;
+        for item in self.items.iter().flatten() {
+            let s = item.compression(item.distinct_values());
+            acc = Some(match acc {
+                Some(a) => a.stack(&s),
+                None => s,
+            });
+        }
+        acc
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -665,6 +715,75 @@ impl Quantizer {
                     )
                 });
                 Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+            }
+            (RequestInput::VectorF64(w), Plan::Cascade { bits, norm_tol }) => {
+                let items = cascade_shared_f64(
+                    Arc::clone(w),
+                    req.method,
+                    bits,
+                    *norm_tol,
+                    &opts,
+                    req.output,
+                )?;
+                Ok(QuantResponse::from_items(items.into_iter().map(Ok).collect()))
+            }
+            (RequestInput::VectorF32(w), Plan::Cascade { bits, norm_tol }) => {
+                let items = cascade_shared_f32(
+                    Arc::clone(w),
+                    req.method,
+                    bits,
+                    *norm_tol,
+                    &opts,
+                    req.output,
+                )?;
+                Ok(QuantResponse::from_items(items.into_iter().map(Ok).collect()))
+            }
+            // Batch/matrix × cascade: groups fan across the batch executor,
+            // each running its own residual cascade and stopping at its own
+            // tolerance — items are group-major and per-group counts may
+            // differ (a failed group contributes one error item).
+            (RequestInput::BatchF64(inputs), Plan::Cascade { bits, norm_tol }) => {
+                validate_cascade_bits(bits)?;
+                let per = batch_map(inputs, |w| {
+                    cascade_shared_f64(
+                        Arc::from(w.as_slice()),
+                        req.method,
+                        bits,
+                        *norm_tol,
+                        &opts,
+                        req.output,
+                    )
+                });
+                Ok(QuantResponse::from_items(flatten_cascade(per)))
+            }
+            (RequestInput::BatchF32(inputs), Plan::Cascade { bits, norm_tol }) => {
+                validate_cascade_bits(bits)?;
+                let per = batch_map(inputs, |w| {
+                    cascade_shared_f32(
+                        Arc::from(w.as_slice()),
+                        req.method,
+                        bits,
+                        *norm_tol,
+                        &opts,
+                        req.output,
+                    )
+                });
+                Ok(QuantResponse::from_items(flatten_cascade(per)))
+            }
+            (RequestInput::Matrix(m, grouping), Plan::Cascade { bits, norm_tol }) => {
+                validate_cascade_bits(bits)?;
+                let groups = matrix_groups(m, *grouping)?;
+                let per = batch_map(&groups, |w| {
+                    cascade_shared_f64(
+                        Arc::clone(w),
+                        req.method,
+                        bits,
+                        *norm_tol,
+                        &opts,
+                        req.output,
+                    )
+                });
+                Ok(QuantResponse::from_items(flatten_cascade(per)))
             }
             (RequestInput::VectorF64(w), _) => Ok(QuantResponse::from_items(vec![
                 run_shared_f64(Arc::clone(w), req.method, &opts, req.output),
@@ -937,6 +1056,110 @@ fn sweep_shared_f64(
                 .collect())
         }
     }
+}
+
+/// Shape-check a cascade's bit list (shared by every input arm).
+fn validate_cascade_bits(bits: &[u32]) -> Result<()> {
+    if bits.is_empty() {
+        return Err(Error::InvalidParam("cascade: bit list must be non-empty".into()));
+    }
+    if let Some(&b) = bits.iter().find(|&&b| !(1..=16).contains(&b)) {
+        return Err(Error::InvalidParam(format!("cascade: bits must be in 1..=16, got {b}")));
+    }
+    Ok(())
+}
+
+/// Residual cascade over one f64-surface vector ([`Plan::Cascade`]):
+/// level `l` quantizes the running residual at `2^bits[l]` target levels
+/// through [`run_shared_f64`] (so `opts.precision` picks the lane per
+/// level exactly as a one-shot would), subtracts the decoded level, and
+/// stops once `‖r‖₂ ≤ norm_tol · ‖w‖₂`. Items come back in cascade order;
+/// `quant::qmatrix` packs them into compute-ready planes.
+pub(crate) fn cascade_shared_f64(
+    w: Arc<[f64]>,
+    method: QuantMethod,
+    bits: &[u32],
+    norm_tol: f64,
+    base: &QuantOptions,
+    form: OutputForm,
+) -> Result<Vec<Item>> {
+    validate_cascade_bits(bits)?;
+    if !(norm_tol >= 0.0) {
+        return Err(Error::InvalidParam(format!(
+            "cascade: norm_tol must be a non-negative number, got {norm_tol}"
+        )));
+    }
+    let base_norm = kernels::nrm2(&w[..]);
+    let mut residual: Vec<f64> = w.to_vec();
+    let mut items = Vec::with_capacity(bits.len());
+    for (l, &b) in bits.iter().enumerate() {
+        let opts = QuantOptions { target_values: 1usize << b, ..base.clone() };
+        // Level 0 reuses the caller's shared buffer; later levels copy the
+        // running residual once into shared storage.
+        let src: Arc<[f64]> =
+            if l == 0 { Arc::clone(&w) } else { Arc::from(residual.as_slice()) };
+        let item = run_shared_f64(src, method, &opts, form)?;
+        let decoded = item.materialize_f64();
+        for (r, d) in residual.iter_mut().zip(&decoded) {
+            *r -= d;
+        }
+        items.push(item);
+        if base_norm == 0.0 || kernels::nrm2(&residual) <= norm_tol * base_norm {
+            break;
+        }
+    }
+    Ok(items)
+}
+
+/// [`cascade_shared_f64`] for native f32 payloads: the residual arithmetic
+/// stays single-precision end to end, like `quantize_f32` itself.
+pub(crate) fn cascade_shared_f32(
+    w: Arc<[f32]>,
+    method: QuantMethod,
+    bits: &[u32],
+    norm_tol: f64,
+    base: &QuantOptions,
+    form: OutputForm,
+) -> Result<Vec<Item>> {
+    validate_cascade_bits(bits)?;
+    if !(norm_tol >= 0.0) {
+        return Err(Error::InvalidParam(format!(
+            "cascade: norm_tol must be a non-negative number, got {norm_tol}"
+        )));
+    }
+    let base_norm = f64::from(kernels::nrm2(&w[..]));
+    let mut residual: Vec<f32> = w.to_vec();
+    let mut items = Vec::with_capacity(bits.len());
+    for (l, &b) in bits.iter().enumerate() {
+        let opts = QuantOptions { target_values: 1usize << b, ..base.clone() };
+        let src: Arc<[f32]> =
+            if l == 0 { Arc::clone(&w) } else { Arc::from(residual.as_slice()) };
+        let item = run_shared_f32(src, method, &opts, form)?;
+        let decoded = item.materialize();
+        for (r, d) in residual.iter_mut().zip(&decoded) {
+            *r -= d;
+        }
+        items.push(Item::F32(item));
+        if base_norm == 0.0 || f64::from(kernels::nrm2(&residual)) <= norm_tol * base_norm {
+            break;
+        }
+    }
+    Ok(items)
+}
+
+/// Flatten per-group cascade results into group-major item order. Unlike
+/// [`flatten_sweep`] the per-group item count is not fixed (groups stop at
+/// their own tolerance), so a failed group contributes exactly one error
+/// item rather than a replicated block.
+fn flatten_cascade(per_group: Vec<Result<Vec<Item>>>) -> Vec<Result<Item>> {
+    let mut items = Vec::new();
+    for group in per_group {
+        match group {
+            Ok(v) => items.extend(v.into_iter().map(Ok)),
+            Err(e) => items.push(Err(e)),
+        }
+    }
+    items
 }
 
 /// Batch core on the f64 surface: independent inputs fanned across the
@@ -1272,5 +1495,96 @@ mod tests {
         assert_eq!(resp.total_l2_loss().to_bits(), total.to_bits());
         assert!(resp.timings().solve >= Duration::ZERO);
         assert!(!resp.is_empty());
+    }
+
+    #[test]
+    fn cascade_plan_runs_levels_over_the_residual() {
+        let data = clustered(120, 21);
+        let req = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .residual_levels(vec![2, 2, 2], 0.0);
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert!(!resp.is_empty() && resp.len() <= 3);
+        // Reconstructions stack: summing the decoded levels must shrink the
+        // residual monotonically (each level fits the previous residual).
+        let mut recon = vec![0.0f64; data.len()];
+        let mut prev = f64::INFINITY;
+        for item in resp.items.iter().map(|r| r.as_ref().unwrap()) {
+            for (acc, d) in recon.iter_mut().zip(item.materialize_f64()) {
+                *acc += d;
+            }
+            let err: f64 =
+                data.iter().zip(&recon).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+            assert!(err <= prev + 1e-12, "residual grew: {err} > {prev}");
+            prev = err;
+        }
+        // The stacked accounting adds index bits across levels.
+        let stacked = resp.compression_cascade().unwrap();
+        let per_level: Vec<CompressionStats> = resp
+            .items
+            .iter()
+            .flatten()
+            .map(|i| i.compression(i.distinct_values()))
+            .collect();
+        assert_eq!(
+            stacked.bits_per_idx_packed,
+            per_level.iter().map(|s| s.bits_per_idx_packed).sum::<u32>()
+        );
+        assert_eq!(stacked.n, data.len());
+    }
+
+    #[test]
+    fn cascade_norm_tol_stops_early() {
+        // 4 distinct values: a 2-bit (4-level) k-means level is exact, so
+        // any positive tolerance must stop the cascade after one level.
+        let data: Vec<f64> = (0..100).map(|i| (i % 4) as f64).collect();
+        let req = QuantRequest::vector(data)
+            .method(QuantMethod::KMeans)
+            .residual_levels(vec![2, 2, 2], 1e-9);
+        let resp = Quantizer::new().run(&req).unwrap();
+        assert_eq!(resp.len(), 1);
+    }
+
+    #[test]
+    fn cascade_rejects_bad_bit_lists() {
+        let mk = |bits: Vec<u32>| {
+            QuantRequest::vector(clustered(30, 5))
+                .method(QuantMethod::KMeans)
+                .residual_levels(bits, 0.0)
+        };
+        assert!(Quantizer::new().run(&mk(vec![])).is_err());
+        assert!(Quantizer::new().run(&mk(vec![0])).is_err());
+        assert!(Quantizer::new().run(&mk(vec![17])).is_err());
+        let bad_tol = QuantRequest::vector(clustered(30, 5))
+            .method(QuantMethod::KMeans)
+            .residual_levels(vec![2], f64::NAN);
+        assert!(Quantizer::new().run(&bad_tol).is_err());
+    }
+
+    #[test]
+    fn cascade_composes_with_matrix_groups() {
+        let m = Matrix::from_fn(8, 5, |i, j| ((i * 5 + j) % 6) as f64 * 0.2);
+        let req = QuantRequest::matrix(m, Grouping::PerColumn)
+            .method(QuantMethod::KMeans)
+            .residual_levels(vec![1, 1], 0.0);
+        let resp = Quantizer::new().run(&req).unwrap();
+        // 5 groups × up to 2 levels, group-major; every item covers one
+        // column's 8 elements.
+        assert!(resp.len() >= 5 && resp.len() <= 10);
+        for item in resp.items.iter().flatten() {
+            assert_eq!(item.codebook_f64().len(), 8);
+        }
+    }
+
+    #[test]
+    fn cascade_f32_lane_stays_narrow() {
+        let data: Vec<f32> = clustered(80, 31).iter().map(|&x| x as f32).collect();
+        let req = QuantRequest::vector_f32(data)
+            .method(QuantMethod::KMeans)
+            .residual_levels(vec![2, 2], 0.0);
+        let resp = Quantizer::new().run(&req).unwrap();
+        for item in resp.items.iter().flatten() {
+            assert_eq!(item.precision(), Precision::F32);
+        }
     }
 }

@@ -419,6 +419,38 @@ impl CompressionStats {
         })
     }
 
+    /// Stack the accounting of a residual-cascade plane on top of `self`.
+    ///
+    /// A cascade stores several index planes over the **same** `n`
+    /// elements, so [`CompressionStats::aggregate`]'s rules (element
+    /// counts sum, per-index bit widths take the max — right for parallel
+    /// payloads like a batch) would misreport it: an element of a
+    /// 4-bit + 2-bit cascade pays 6 index bits, not 4, and there is only
+    /// one dense baseline, not two. Here `n` and `dense_bytes` stay fixed,
+    /// the per-index bit widths (`bits_per_index`, stored, packed) **add**,
+    /// compact bytes add, `bits_per_value`/`byte_ratio` are recomputed
+    /// from the stacked totals, `index_entropy` adds (the planes' joint
+    /// entropy is at most the sum), and the level counts multiply
+    /// (saturating — an L-plane cascade resolves up to `Π kₗ` distinct
+    /// reconstruction values). Panics if the planes disagree on `n`.
+    pub fn stack(&self, next: &CompressionStats) -> CompressionStats {
+        assert_eq!(self.n, next.n, "stack: cascade planes must cover the same elements");
+        let compact = self.compact_bytes + next.compact_bytes;
+        CompressionStats {
+            n: self.n,
+            levels_achieved: self.levels_achieved.saturating_mul(next.levels_achieved),
+            levels_requested: self.levels_requested.saturating_mul(next.levels_requested),
+            bits_per_index: self.bits_per_index + next.bits_per_index,
+            bits_per_idx_stored: self.bits_per_idx_stored + next.bits_per_idx_stored,
+            bits_per_idx_packed: self.bits_per_idx_packed + next.bits_per_idx_packed,
+            bits_per_value: if self.n > 0 { compact as f64 * 8.0 / self.n as f64 } else { 0.0 },
+            index_entropy: self.index_entropy + next.index_entropy,
+            compact_bytes: compact,
+            dense_bytes: self.dense_bytes,
+            byte_ratio: if compact > 0 { self.dense_bytes as f64 / compact as f64 } else { 0.0 },
+        }
+    }
+
     /// One-line human summary (CLI, serve reports).
     pub fn summary(&self) -> String {
         format!(
@@ -585,6 +617,34 @@ mod tests {
         assert!((s.bits_per_value - (266.0 * 8.0 / 1000.0)).abs() < 1e-12);
         assert!((s.index_entropy - 2.0).abs() < 1e-9, "uniform 4 levels = 2 bits");
         assert!((s.byte_ratio - 8000.0 / 266.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stack_adds_cascade_bits_where_aggregate_would_max() {
+        // Regression (cascade accounting): two planes over the SAME 1000
+        // elements — a 4-level base and a 2-level residual. The honest
+        // per-element index cost is 2+1 = 3 packed bits; `aggregate`'s
+        // parallel-payload rules would report max(2,1) = 2 bits over
+        // 2n elements and double the dense baseline.
+        let n = 1000usize;
+        let base: Vec<f64> = (0..n).map(|i| (i % 4) as f64).collect();
+        let resid: Vec<f64> = (0..n).map(|i| (i % 2) as f64 * 0.1).collect();
+        let s0 = Codebook::from_values(&base).unwrap().pack().stats(4);
+        let s1 = Codebook::from_values(&resid).unwrap().pack().stats(2);
+        let stacked = s0.stack(&s1);
+        assert_eq!(stacked.n, n);
+        assert_eq!(stacked.bits_per_idx_packed, 3);
+        assert_eq!(stacked.bits_per_idx_stored, 3, "packed planes store the packed width");
+        assert_eq!(stacked.bits_per_index, 3);
+        assert_eq!(stacked.levels_achieved, 8, "4 base × 2 residual reconstructions");
+        assert_eq!(stacked.compact_bytes, s0.compact_bytes + s1.compact_bytes);
+        assert_eq!(stacked.dense_bytes, n * 8, "one dense baseline, not two");
+        assert!(
+            (stacked.bits_per_value - stacked.compact_bytes as f64 * 8.0 / n as f64).abs() < 1e-12
+        );
+        let agg = CompressionStats::aggregate([&s0, &s1]).unwrap();
+        assert_eq!(agg.bits_per_idx_packed, 2, "aggregate maxes — wrong for a cascade");
+        assert_eq!(agg.n, 2 * n);
     }
 
     #[test]

@@ -56,6 +56,7 @@ pub mod l0;
 pub mod lasso;
 pub mod merge;
 pub mod pipeline;
+pub mod qmatrix;
 pub mod refit;
 pub mod tensor;
 pub mod tv_exact;
@@ -65,6 +66,7 @@ pub mod vmatrix;
 
 pub use api::{Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer};
 pub use codebook::{Codebook, CodebookF32, CompressionStats, PackedCodebook, PackedIndices};
+pub use qmatrix::{CascadeLevel, QMatrix};
 pub use pipeline::{
     quantize_batch, quantize_batch_f32, quantize_f32, quantize_prepared, quantize_prepared_f32,
     quantize_sweep, quantize_sweep_f32, quantize_sweep_f32_with, quantize_sweep_with,

@@ -1,0 +1,722 @@
+//! Quantized-compute matrices: matvec/GEMV straight off packed index
+//! planes (S25).
+//!
+//! The serve path's payload has been codebook-native since PR 5 — levels
+//! plus an index map — but downstream compute still decoded to dense
+//! first. [`QMatrix`] closes that gap, following the lm-nslsqr shape: a
+//! matrix stored as per-group ([`Grouping`]) [`PackedCodebook`] planes
+//! that **computes** `y = x·W` directly on the ⌈log₂ k⌉-bit indices
+//! ([`crate::linalg::kernels::matvec_levels`] /
+//! [`crate::linalg::kernels::matvec_rowmajor_levels`]), so the dense
+//! matrix is never materialized and memory traffic scales with the packed
+//! bits, not 64 bits per entry.
+//!
+//! On top sits the **residual cascade** ([`QMatrix::residual_levels`],
+//! the constructor for [`crate::quant::api::Plan::Cascade`]): quantize at
+//! `2^bits[0]` levels, re-quantize the residual at `2^bits[1]`, …, until
+//! the relative Frobenius norm of the residual reaches `norm_tol`. Each
+//! level adds one packed plane per group; reconstruction (and matvec) sum
+//! the planes. Accounting folds through [`CompressionStats::stack`]
+//! within a group (per-index bits add — the cascade-honest rule) and
+//! [`CompressionStats::aggregate`] across groups.
+//!
+//! ## The bitwise contract (f64 lane)
+//!
+//! A single-level f64 `matvec` is **bit-for-bit identical** to
+//! decode-then-dense (`x` as a 1×rows matrix times [`QMatrix::decode`],
+//! via `Matrix::matmul`'s ikj loop): per-column groups reduce with a
+//! strict single accumulator in row order, and per-row/per-tensor groups
+//! multiply `x[i]·levels[idx]` first and add in row order — both exactly
+//! the dense arithmetic sequence. A multi-level f64 matvec is bitwise
+//! equal to summing the *per-level* dense matvecs in cascade order (the
+//! planes are separate summands; summing the decoded matrices first would
+//! reassociate). The f32 lane reassociates per level
+//! ([`crate::linalg::kernels::accum_by_index`]) and is tolerance-gated.
+//!
+//! `cargo bench --bench qmatvec` races the packed path against dense
+//! decode-then-matvec and emits `BENCH_qmatvec.json` (throughput vs bits,
+//! plus the cascade's error-vs-cumulative-bits series).
+
+use super::api::{self, OutputForm};
+use super::codebook::{CompressionStats, PackedCodebook};
+use super::pipeline::batch_map;
+use super::tensor::Grouping;
+use super::types::{QuantMethod, QuantOptions};
+use crate::linalg::kernels;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::scalar::Scalar;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A scalar-quantized matrix stored as per-group packed codebook planes
+/// that computes matvec/GEMV without materializing the dense matrix.
+///
+/// Shape is `rows × cols` acting on the right of a row vector
+/// (`y = x·W`, `x.len() == rows`, `y.len() == cols`) — the `nn::mlp`
+/// forward convention. Groups follow [`Grouping`]: one plane set for the
+/// whole matrix (row-major), one per row, or one per column; each group
+/// holds one [`PackedCodebook`] per cascade level.
+///
+/// ```
+/// use sqlsq::linalg::matrix::Matrix;
+/// use sqlsq::quant::{tensor::Grouping, QMatrix, QuantMethod, QuantOptions};
+///
+/// let w = Matrix::from_fn(64, 8, |i, j| ((i * 7 + j) % 5) as f64 * 0.1);
+/// // 2-bit base plane, then a 2-bit plane over the residual.
+/// let qm = QMatrix::residual_levels(
+///     &w, Grouping::PerColumn, QuantMethod::KMeans,
+///     &QuantOptions::default(), &[2, 2], 0.0,
+/// ).unwrap();
+/// let y = qm.matvec(&vec![1.0; 64]); // straight off the packed planes
+/// assert_eq!(y.len(), 8);
+/// // Cascade accounting STACKS: the planes cover the same elements, so
+/// // packed index bits add per level instead of taking the max.
+/// assert!(qm.stats().bits_per_idx_packed > 2);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct QMatrix<T: Scalar = f64> {
+    rows: usize,
+    cols: usize,
+    grouping: Grouping,
+    groups: Vec<Vec<PackedCodebook<T>>>,
+}
+
+/// Per-level build record of a residual cascade ([`QMatrix::residual_levels`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CascadeLevel {
+    /// Index bit-width this level was quantized at (`2^bits` target levels).
+    pub bits: u32,
+    /// Cumulative packed index bits per element through this level.
+    pub cum_bits: u32,
+    /// Relative Frobenius residual norm after subtracting this level.
+    pub rel_error: f64,
+}
+
+impl<T: Scalar> QMatrix<T> {
+    /// Rebuild from raw parts (the jsonio decode path), validating shape:
+    /// non-degenerate dims, the group count implied by the grouping, a
+    /// non-empty plane list per group, every plane covering the group's
+    /// element count, the packed width matching `⌈log₂ k⌉`, and every
+    /// index in range — so `matvec` never faults on wire data.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        grouping: Grouping,
+        groups: Vec<Vec<PackedCodebook<T>>>,
+    ) -> Result<QMatrix<T>> {
+        if rows == 0 || cols == 0 {
+            return Err(Error::InvalidInput("qmatrix: empty matrix".into()));
+        }
+        let want_groups = match grouping {
+            Grouping::PerTensor => 1,
+            Grouping::PerRow => rows,
+            Grouping::PerColumn => cols,
+        };
+        if groups.len() != want_groups {
+            return Err(Error::InvalidInput(format!(
+                "qmatrix: {} groups, expected {want_groups} for {grouping:?} over {rows}×{cols}",
+                groups.len()
+            )));
+        }
+        let group_len = match grouping {
+            Grouping::PerTensor => rows * cols,
+            Grouping::PerRow => cols,
+            Grouping::PerColumn => rows,
+        };
+        for (g, planes) in groups.iter().enumerate() {
+            if planes.is_empty() {
+                return Err(Error::InvalidInput(format!(
+                    "qmatrix: group {g} has no levels"
+                )));
+            }
+            for (l, cb) in planes.iter().enumerate() {
+                if cb.k() == 0 {
+                    return Err(Error::InvalidInput(format!(
+                        "qmatrix: group {g} level {l} has an empty codebook"
+                    )));
+                }
+                if cb.len() != group_len {
+                    return Err(Error::InvalidInput(format!(
+                        "qmatrix: group {g} level {l} covers {} elements, expected {group_len}",
+                        cb.len()
+                    )));
+                }
+                if cb.indices.bits() != kernels::bits_per_index_for(cb.k()) {
+                    return Err(Error::InvalidInput(format!(
+                        "qmatrix: group {g} level {l} packs {} bits for k={}",
+                        cb.indices.bits(),
+                        cb.k()
+                    )));
+                }
+                if cb.indices.unpack().into_iter().any(|i| i as usize >= cb.k()) {
+                    return Err(Error::InvalidInput(format!(
+                        "qmatrix: group {g} level {l} has an index out of range"
+                    )));
+                }
+            }
+        }
+        Ok(QMatrix { rows, cols, grouping, groups })
+    }
+
+    /// Input dimension (`x.len()` for [`QMatrix::matvec`]).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Output dimension.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The grouping the planes were built under.
+    pub fn grouping(&self) -> Grouping {
+        self.grouping
+    }
+
+    /// The per-group cascade planes, group-major (the jsonio encode path).
+    pub fn groups(&self) -> &[Vec<PackedCodebook<T>>] {
+        &self.groups
+    }
+
+    /// Number of cascade levels (the maximum across groups — groups that
+    /// hit the norm tolerance early carry fewer planes).
+    pub fn num_levels(&self) -> usize {
+        self.groups.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// `y = x·W` computed directly on the packed planes; the dense matrix
+    /// is never materialized. See the module docs for the per-lane bitwise
+    /// contract. Panics on a length mismatch, like the dense matrix ops.
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(
+            x.len(),
+            self.rows,
+            "QMatrix::matvec: x has {} elements, matrix has {} rows",
+            x.len(),
+            self.rows
+        );
+        let mut y = vec![T::ZERO; self.cols];
+        let mut scratch: Vec<T> = Vec::new();
+        match self.grouping {
+            Grouping::PerColumn => {
+                for (j, planes) in self.groups.iter().enumerate() {
+                    let mut acc = T::ZERO;
+                    for cb in planes {
+                        acc += kernels::matvec_levels(
+                            x,
+                            &cb.levels,
+                            cb.indices.words(),
+                            cb.indices.bits(),
+                            &mut scratch,
+                        );
+                    }
+                    y[j] = acc;
+                }
+            }
+            Grouping::PerRow => {
+                for (i, planes) in self.groups.iter().enumerate() {
+                    for cb in planes {
+                        kernels::matvec_rowmajor_levels(
+                            &mut y,
+                            &x[i..i + 1],
+                            &cb.levels,
+                            cb.indices.words(),
+                            cb.indices.bits(),
+                            &mut scratch,
+                        );
+                    }
+                }
+            }
+            Grouping::PerTensor => {
+                for cb in &self.groups[0] {
+                    kernels::matvec_rowmajor_levels(
+                        &mut y,
+                        x,
+                        &cb.levels,
+                        cb.indices.words(),
+                        cb.indices.bits(),
+                        &mut scratch,
+                    );
+                }
+            }
+        }
+        y
+    }
+
+    /// BLAS-shaped GEMV over the packed planes:
+    /// `y ← α·(x·W) + β·y` (`β = 0` overwrites, so `y` may start
+    /// uninitialized in the BLAS sense).
+    pub fn gemv(&self, alpha: T, x: &[T], beta: T, y: &mut [T]) {
+        assert_eq!(
+            y.len(),
+            self.cols,
+            "QMatrix::gemv: y has {} elements, matrix has {} cols",
+            y.len(),
+            self.cols
+        );
+        let t = self.matvec(x);
+        if beta == T::ZERO {
+            for (yi, ti) in y.iter_mut().zip(t) {
+                *yi = alpha * ti;
+            }
+        } else {
+            for (yi, ti) in y.iter_mut().zip(t) {
+                *yi = alpha * ti + beta * *yi;
+            }
+        }
+    }
+
+    /// Materialize the reconstruction row-major (sum of the decoded
+    /// cascade planes) — the edge decode; compute paths never call this.
+    pub fn decode_flat(&self) -> Vec<T> {
+        let mut flat = vec![T::ZERO; self.rows * self.cols];
+        match self.grouping {
+            Grouping::PerTensor => {
+                for cb in &self.groups[0] {
+                    for (d, v) in flat.iter_mut().zip(cb.decode()) {
+                        *d += v;
+                    }
+                }
+            }
+            Grouping::PerRow => {
+                for (i, planes) in self.groups.iter().enumerate() {
+                    let row = &mut flat[i * self.cols..(i + 1) * self.cols];
+                    for cb in planes {
+                        for (d, v) in row.iter_mut().zip(cb.decode()) {
+                            *d += v;
+                        }
+                    }
+                }
+            }
+            Grouping::PerColumn => {
+                for (j, planes) in self.groups.iter().enumerate() {
+                    for cb in planes {
+                        for (i, v) in cb.decode().into_iter().enumerate() {
+                            flat[i * self.cols + j] += v;
+                        }
+                    }
+                }
+            }
+        }
+        flat
+    }
+
+    /// Compression accounting: cascade planes within a group **stack**
+    /// (per-index bits add over the same elements —
+    /// [`CompressionStats::stack`]), then the groups aggregate as parallel
+    /// payloads ([`CompressionStats::aggregate`]). `levels_requested` per
+    /// plane is its achieved count (the cascade targets bits, not one
+    /// level count).
+    pub fn stats(&self) -> CompressionStats {
+        let per_group: Vec<CompressionStats> = self
+            .groups
+            .iter()
+            .map(|planes| {
+                let mut it = planes.iter().map(|cb| cb.stats(cb.k()));
+                let first = it.next().expect("from_parts/residual_levels: no empty groups");
+                it.fold(first, |acc, s| acc.stack(&s))
+            })
+            .collect();
+        CompressionStats::aggregate(per_group.iter()).expect("qmatrix has at least one group")
+    }
+
+    /// Compact payload bytes (packed index planes + f32 level tables,
+    /// summed over groups and levels) — `stats().compact_bytes`.
+    pub fn compact_bytes(&self) -> usize {
+        self.stats().compact_bytes
+    }
+}
+
+impl QMatrix<f64> {
+    /// Quantize `m` into a single-level `QMatrix` at `2^bits` target
+    /// levels per group — [`QMatrix::residual_levels`] with one level and
+    /// no tolerance.
+    pub fn quantize(
+        m: &Matrix,
+        grouping: Grouping,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        bits: u32,
+    ) -> Result<QMatrix<f64>> {
+        Self::residual_levels(m, grouping, method, opts, &[bits], 0.0)
+    }
+
+    /// Build a multi-level residual cascade over `m`: each group (per the
+    /// grouping) quantizes at `2^bit_list[0]` levels, re-quantizes its
+    /// residual at `2^bit_list[1]`, …, stopping early once its relative l2
+    /// residual norm reaches `norm_tol` (so the matrix-wide Frobenius
+    /// criterion also holds: if every group is within `norm_tol`
+    /// relatively, so is the whole matrix). Groups fan across the batch
+    /// executor; the solve lane follows `opts.precision` (an f32-lane
+    /// solve widens into the f64 planes — use [`QMatrix::to_f32`] for f32
+    /// *compute*). Pair with a count-taking method
+    /// ([`QuantMethod::takes_target_count`]) so the bit widths are honored.
+    pub fn residual_levels(
+        m: &Matrix,
+        grouping: Grouping,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        bit_list: &[u32],
+        norm_tol: f64,
+    ) -> Result<QMatrix<f64>> {
+        let groups = api::matrix_groups(m, grouping)?;
+        let per = batch_map(&groups, |w| {
+            api::cascade_shared_f64(
+                Arc::clone(w),
+                method,
+                bit_list,
+                norm_tol,
+                opts,
+                OutputForm::Codebook,
+            )
+        });
+        let mut built = Vec::with_capacity(per.len());
+        for res in per {
+            let items = res?;
+            let planes: Vec<PackedCodebook<f64>> =
+                items.iter().map(|it| it.codebook_f64().pack()).collect();
+            built.push(planes);
+        }
+        QMatrix::from_parts(m.rows(), m.cols(), grouping, built)
+    }
+
+    /// Build the cascade and report each level's cumulative index bits
+    /// (the requested widths, summed) and relative Frobenius error — the
+    /// error-vs-bits series the qmatvec bench plots. The trace is
+    /// truncated like the planes themselves when `norm_tol` stops every
+    /// group early.
+    pub fn residual_levels_traced(
+        m: &Matrix,
+        grouping: Grouping,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        bit_list: &[u32],
+        norm_tol: f64,
+    ) -> Result<(QMatrix<f64>, Vec<CascadeLevel>)> {
+        let qm = Self::residual_levels(m, grouping, method, opts, bit_list, norm_tol)?;
+        let mut trace = Vec::new();
+        let mut cum_bits = 0u32;
+        for (l, &bits) in bit_list.iter().enumerate().take(qm.num_levels()) {
+            cum_bits += bits;
+            let prefix = QMatrix {
+                rows: qm.rows,
+                cols: qm.cols,
+                grouping: qm.grouping,
+                groups: qm
+                    .groups
+                    .iter()
+                    .map(|planes| planes.iter().take(l + 1).cloned().collect())
+                    .collect(),
+            };
+            trace.push(CascadeLevel { bits, cum_bits, rel_error: prefix.approx_error(m) });
+        }
+        Ok((qm, trace))
+    }
+
+    /// Materialize the dense reconstruction (sum of the decoded planes).
+    pub fn decode(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.decode_flat())
+            .expect("decode_flat emits rows*cols elements")
+    }
+
+    /// Relative Frobenius approximation error
+    /// `‖original − decode()‖_F / ‖original‖_F` (absolute norm when the
+    /// original is all zeros). Panics on a shape mismatch.
+    pub fn approx_error(&self, original: &Matrix) -> f64 {
+        assert_eq!(
+            (original.rows(), original.cols()),
+            (self.rows, self.cols),
+            "QMatrix::approx_error: shape mismatch"
+        );
+        let recon = self.decode_flat();
+        let diff: Vec<f64> =
+            original.data().iter().zip(&recon).map(|(&a, &b)| a - b).collect();
+        let base = kernels::nrm2(original.data());
+        let err = kernels::nrm2(&diff);
+        if base == 0.0 {
+            err
+        } else {
+            err / base
+        }
+    }
+
+    /// Batched quantized forward: `A·W` for a row-major batch `A`
+    /// (`a.cols() == rows`), one packed matvec per input row — the
+    /// `nn::mlp` serving shape.
+    pub fn matmul(&self, a: &Matrix) -> Matrix {
+        assert_eq!(
+            a.cols(),
+            self.rows,
+            "QMatrix::matmul: a has {} cols, matrix has {} rows",
+            a.cols(),
+            self.rows
+        );
+        let mut out = Matrix::zeros(a.rows(), self.cols);
+        for i in 0..a.rows() {
+            let y = self.matvec(a.row(i));
+            out.row_mut(i).copy_from_slice(&y);
+        }
+        out
+    }
+
+    /// Narrow to an f32 compute lane: levels narrow once, index planes are
+    /// shared bit-for-bit. The f32 `matvec` then runs the per-level
+    /// multi-accumulator path.
+    pub fn to_f32(&self) -> QMatrix<f32> {
+        QMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            grouping: self.grouping,
+            groups: self
+                .groups
+                .iter()
+                .map(|planes| {
+                    planes
+                        .iter()
+                        .map(|cb| PackedCodebook {
+                            levels: cb.levels.iter().map(|&l| l as f32).collect(),
+                            indices: cb.indices.clone(),
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    fn demo_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        Matrix::from_fn(rows, cols, |_, _| {
+            let center = [0.1, 0.35, 0.6, 0.9][(rng.next_u32() % 4) as usize];
+            (center + rng.normal() * 0.01).clamp(-1.0, 1.0)
+        })
+    }
+
+    fn opts() -> QuantOptions {
+        QuantOptions { kmeans_restarts: 2, ..QuantOptions::default() }
+    }
+
+    #[test]
+    fn single_level_matvec_is_bitwise_decode_then_dense() {
+        let m = demo_matrix(17, 9, 3);
+        let x: Vec<f64> = (0..17).map(|i| ((i as f64) * 0.71).cos()).collect();
+        for grouping in [Grouping::PerTensor, Grouping::PerRow, Grouping::PerColumn] {
+            let qm =
+                QMatrix::quantize(&m, grouping, QuantMethod::KMeans, &opts(), 2).unwrap();
+            let dense = qm.decode();
+            let x_row = Matrix::from_vec(1, 17, x.clone()).unwrap();
+            let want = x_row.matmul(&dense).unwrap();
+            let got = qm.matvec(&x);
+            assert_eq!(got.len(), 9);
+            for (a, b) in got.iter().zip(want.row(0)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "grouping {grouping:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_level_matvec_is_bitwise_per_level_sum() {
+        let m = demo_matrix(12, 7, 5);
+        let x: Vec<f64> = (0..12).map(|i| ((i as f64) * 0.31).sin()).collect();
+        let qm = QMatrix::residual_levels(
+            &m,
+            Grouping::PerColumn,
+            QuantMethod::KMeans,
+            &opts(),
+            &[2, 2],
+            0.0,
+        )
+        .unwrap();
+        // Uniform level counts (norm_tol = 0), so every group carries
+        // every plane.
+        assert!(qm.groups().iter().all(|p| p.len() == qm.num_levels()));
+        // Reference: per-level decode-then-dense matvecs summed in level
+        // order — the documented multi-level contract.
+        let mut want = vec![0.0f64; 7];
+        for l in 0..qm.num_levels() {
+            let level_only = QMatrix::from_parts(
+                12,
+                7,
+                Grouping::PerColumn,
+                qm.groups().iter().map(|p| vec![p[l].clone()]).collect(),
+            )
+            .unwrap();
+            let dense = level_only.decode();
+            let yl = Matrix::from_vec(1, 12, x.clone()).unwrap().matmul(&dense).unwrap();
+            for (w, v) in want.iter_mut().zip(yl.row(0)) {
+                *w += v;
+            }
+        }
+        let got = qm.matvec(&x);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_lane_tracks_f64_within_tolerance() {
+        let m = demo_matrix(40, 11, 7);
+        let x: Vec<f64> = (0..40).map(|i| ((i as f64) * 0.17).sin()).collect();
+        let qm = QMatrix::residual_levels(
+            &m,
+            Grouping::PerColumn,
+            QuantMethod::KMeans,
+            &opts(),
+            &[3, 2],
+            0.0,
+        )
+        .unwrap();
+        let q32 = qm.to_f32();
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let y64 = qm.matvec(&x);
+        let y32 = q32.matvec(&x32);
+        for (a, b) in y64.iter().zip(&y32) {
+            let scale = a.abs().max(1.0);
+            assert!(
+                (a - f64::from(*b)).abs() <= 1e-3 * scale,
+                "f32 lane diverged: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn cascade_error_is_monotonically_non_increasing() {
+        let m = demo_matrix(20, 10, 11);
+        let (qm, trace) = QMatrix::residual_levels_traced(
+            &m,
+            Grouping::PerColumn,
+            QuantMethod::KMeans,
+            &opts(),
+            &[1, 2, 3],
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(trace.len(), qm.num_levels());
+        let mut prev = f64::INFINITY;
+        let mut prev_bits = 0;
+        for level in &trace {
+            assert!(
+                level.rel_error <= prev + 1e-12,
+                "error grew: {} after {}",
+                level.rel_error,
+                prev
+            );
+            assert!(level.cum_bits > prev_bits, "cumulative bits must grow");
+            prev = level.rel_error;
+            prev_bits = level.cum_bits;
+        }
+        assert!(qm.approx_error(&m) <= trace[0].rel_error + 1e-12);
+    }
+
+    #[test]
+    fn norm_tol_stops_groups_early() {
+        // Each column has ≤2 distinct values, so a 1-bit level is exact
+        // and any positive tolerance stops every group after one plane.
+        let m = Matrix::from_fn(10, 4, |i, j| ((i + j) % 2) as f64);
+        let qm = QMatrix::residual_levels(
+            &m,
+            Grouping::PerColumn,
+            QuantMethod::KMeans,
+            &opts(),
+            &[1, 1, 1],
+            1e-9,
+        )
+        .unwrap();
+        assert_eq!(qm.num_levels(), 1);
+        assert!(qm.approx_error(&m) <= 1e-12);
+    }
+
+    #[test]
+    fn k1_constant_matrix_roundtrips() {
+        let m = Matrix::from_fn(6, 5, |_, _| 0.75);
+        let qm =
+            QMatrix::quantize(&m, Grouping::PerTensor, QuantMethod::KMeans, &opts(), 1)
+                .unwrap();
+        assert!(qm.groups()[0][0].k() <= 2);
+        assert!(qm.approx_error(&m) <= 1e-12);
+        let y = qm.matvec(&[1.0; 6]);
+        for v in y {
+            assert!((v - 4.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gemv_applies_alpha_beta() {
+        let m = demo_matrix(8, 3, 13);
+        let qm =
+            QMatrix::quantize(&m, Grouping::PerColumn, QuantMethod::KMeans, &opts(), 2)
+                .unwrap();
+        let x: Vec<f64> = (0..8).map(|i| i as f64 * 0.1).collect();
+        let base = qm.matvec(&x);
+        let mut y = vec![1.0f64; 3];
+        qm.gemv(2.0, &x, 0.5, &mut y);
+        for (yi, bi) in y.iter().zip(&base) {
+            assert_eq!(yi.to_bits(), (2.0 * bi + 0.5).to_bits());
+        }
+        let mut y0 = vec![f64::NAN; 3];
+        qm.gemv(1.0, &x, 0.0, &mut y0);
+        for (yi, bi) in y0.iter().zip(&base) {
+            assert_eq!(yi.to_bits(), bi.to_bits(), "β=0 must overwrite");
+        }
+    }
+
+    #[test]
+    fn stats_stack_bits_across_levels() {
+        let m = demo_matrix(30, 6, 17);
+        let qm = QMatrix::residual_levels(
+            &m,
+            Grouping::PerColumn,
+            QuantMethod::KMeans,
+            &opts(),
+            &[2, 1],
+            0.0,
+        )
+        .unwrap();
+        let s = qm.stats();
+        assert_eq!(s.n, 30 * 6);
+        // Every group ran both levels (norm_tol = 0): 2 + 1 packed bits.
+        assert_eq!(s.bits_per_idx_packed, 3);
+        assert_eq!(s.bits_per_idx_stored, 3, "packed planes store the packed width");
+        assert_eq!(s.dense_bytes, 30 * 6 * 8);
+        assert!(s.compact_bytes < s.dense_bytes);
+        assert_eq!(qm.compact_bytes(), s.compact_bytes);
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        let m = demo_matrix(5, 4, 19);
+        let qm =
+            QMatrix::quantize(&m, Grouping::PerColumn, QuantMethod::KMeans, &opts(), 2)
+                .unwrap();
+        let planes = qm.groups().to_vec();
+        assert!(QMatrix::from_parts(0, 4, Grouping::PerColumn, planes.clone()).is_err());
+        assert!(QMatrix::from_parts(5, 3, Grouping::PerColumn, planes.clone()).is_err());
+        assert!(QMatrix::from_parts(6, 4, Grouping::PerColumn, planes.clone()).is_err());
+        let mut empty_group = planes.clone();
+        empty_group[0].clear();
+        assert!(QMatrix::from_parts(5, 4, Grouping::PerColumn, empty_group).is_err());
+        assert!(QMatrix::from_parts(5, 4, Grouping::PerColumn, planes).is_ok());
+    }
+
+    #[test]
+    fn matmul_matches_per_row_matvec() {
+        let m = demo_matrix(9, 4, 23);
+        let qm =
+            QMatrix::quantize(&m, Grouping::PerRow, QuantMethod::KMeans, &opts(), 2)
+                .unwrap();
+        let a = demo_matrix(3, 9, 29);
+        let out = qm.matmul(&a);
+        assert_eq!((out.rows(), out.cols()), (3, 4));
+        for i in 0..3 {
+            let want = qm.matvec(a.row(i));
+            for (x, y) in out.row(i).iter().zip(&want) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

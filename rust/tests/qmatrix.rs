@@ -1,0 +1,227 @@
+//! Property suite for the quantized-compute subsystem (PR 7): `QMatrix`
+//! matvec raced against decode-then-dense (bitwise on the f64 lane,
+//! tolerance-gated on f32), residual-cascade error monotonicity, the
+//! stacked compression accounting, the wire round trip, and the
+//! empty/1-level/k=1 edges — all through the public API.
+
+use sqlsq::jsonio;
+use sqlsq::linalg::matrix::Matrix;
+use sqlsq::quant::tensor::Grouping;
+use sqlsq::quant::{QMatrix, QuantMethod, QuantOptions, QuantRequest, Quantizer};
+
+/// Deterministic clustered weights (the NN-weights shape the paper
+/// quantizes) without an RNG dependency in the test.
+fn weights(rows: usize, cols: usize, seed: u64) -> Matrix {
+    Matrix::from_fn(rows, cols, |i, j| {
+        let t = (i * cols + j) as f64 + seed as f64 * 0.37;
+        let c = [-0.7, -0.25, 0.05, 0.4, 0.85][((i * 7 + j * 3 + seed as usize) % 5)];
+        c + (t * 0.9311).sin() * 0.02
+    })
+}
+
+fn probe(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i as f64) * 0.531).cos() * 1.5).collect()
+}
+
+fn opts() -> QuantOptions {
+    QuantOptions { kmeans_restarts: 2, ..QuantOptions::default() }
+}
+
+const GROUPINGS: [Grouping; 3] =
+    [Grouping::PerTensor, Grouping::PerRow, Grouping::PerColumn];
+
+#[test]
+fn single_level_matvec_is_bitwise_decode_then_dense_all_groupings() {
+    for (rows, cols) in [(1usize, 1usize), (7, 13), (33, 8), (64, 5)] {
+        let m = weights(rows, cols, (rows + cols) as u64);
+        let x = probe(rows);
+        for grouping in GROUPINGS {
+            for bits in [1u32, 2, 4] {
+                let qm = QMatrix::quantize(&m, grouping, QuantMethod::KMeans, &opts(), bits)
+                    .unwrap();
+                let dense = qm.decode();
+                let want =
+                    Matrix::from_vec(1, rows, x.clone()).unwrap().matmul(&dense).unwrap();
+                let got = qm.matvec(&x);
+                for (a, b) in got.iter().zip(want.row(0)) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{rows}x{cols} {grouping:?} {bits}-bit"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_lane_matvec_tracks_decode_then_dense_within_tolerance() {
+    let m = weights(48, 17, 5);
+    let qm = QMatrix::residual_levels(
+        &m,
+        Grouping::PerColumn,
+        QuantMethod::KMeans,
+        &opts(),
+        &[3, 2],
+        0.0,
+    )
+    .unwrap();
+    let q32 = qm.to_f32();
+    let x32: Vec<f32> = probe(48).iter().map(|&v| v as f32).collect();
+    // f32 reference: decode the f32 planes densely, then a naive matvec.
+    let flat = q32.decode_flat();
+    let mut want = vec![0.0f32; 17];
+    for (i, &xi) in x32.iter().enumerate() {
+        for (wj, &f) in want.iter_mut().zip(&flat[i * 17..(i + 1) * 17]) {
+            *wj += xi * f;
+        }
+    }
+    for (a, b) in q32.matvec(&x32).iter().zip(&want) {
+        let scale = b.abs().max(1.0);
+        assert!((a - b).abs() <= 1e-3 * scale, "f32 lane diverged: {a} vs {b}");
+    }
+}
+
+#[test]
+fn cascade_error_monotone_and_levels_stack_bits() {
+    let m = weights(40, 12, 9);
+    for grouping in GROUPINGS {
+        let (qm, trace) = QMatrix::residual_levels_traced(
+            &m,
+            grouping,
+            QuantMethod::KMeans,
+            &opts(),
+            &[1, 2, 2],
+            0.0,
+        )
+        .unwrap();
+        assert_eq!(trace.len(), 3, "{grouping:?}: norm_tol 0 runs every level");
+        let mut prev = f64::INFINITY;
+        for lv in &trace {
+            assert!(lv.rel_error <= prev + 1e-12, "{grouping:?}: error must not grow");
+            prev = lv.rel_error;
+        }
+        assert_eq!(trace.last().unwrap().cum_bits, 5);
+        let s = qm.stats();
+        assert_eq!(s.n, 40 * 12, "stacking covers the same elements once");
+        assert_eq!(s.bits_per_idx_packed, 5, "cascade planes add packed bits");
+        assert!(s.compact_bytes < s.dense_bytes);
+    }
+}
+
+#[test]
+fn cascade_through_the_request_front_door_matches_qmatrix_accounting() {
+    // The same cascade driven through Quantizer::run's Plan::Cascade on a
+    // single vector: per-level items whose stacked stats agree with the
+    // QMatrix (PerTensor over a 1-row matrix is the same flat problem).
+    let m = weights(1, 96, 3);
+    let req = QuantRequest::matrix(m.clone(), Grouping::PerTensor)
+        .method(QuantMethod::KMeans)
+        .options(opts())
+        .residual_levels(vec![2, 2], 0.0);
+    let resp = Quantizer::new().run(&req).unwrap();
+    let stacked = resp.compression_cascade().unwrap();
+    let qm = QMatrix::residual_levels(
+        &m,
+        Grouping::PerTensor,
+        QuantMethod::KMeans,
+        &opts(),
+        &[2, 2],
+        0.0,
+    )
+    .unwrap();
+    let s = qm.stats();
+    assert_eq!(stacked.n, s.n);
+    assert_eq!(stacked.bits_per_idx_packed, s.bits_per_idx_packed);
+    assert_eq!(stacked.dense_bytes, s.dense_bytes);
+}
+
+#[test]
+fn norm_tol_prunes_exactly_representable_groups() {
+    // Two distinct values per column: a 1-bit plane is exact, so the
+    // cascade must stop after one level under any positive tolerance.
+    let m = Matrix::from_fn(12, 3, |i, j| if (i + j) % 2 == 0 { 0.25 } else { 0.75 });
+    let qm = QMatrix::residual_levels(
+        &m,
+        Grouping::PerColumn,
+        QuantMethod::KMeans,
+        &opts(),
+        &[1, 1, 1, 1],
+        1e-9,
+    )
+    .unwrap();
+    assert_eq!(qm.num_levels(), 1);
+    assert!(qm.approx_error(&m) <= 1e-12);
+}
+
+#[test]
+fn k1_single_level_and_empty_edges() {
+    // k = 1: a constant matrix collapses to one level; matvec is the
+    // row-sum scaled by it.
+    let m = Matrix::from_fn(5, 4, |_, _| -0.5);
+    let qm = QMatrix::quantize(&m, Grouping::PerRow, QuantMethod::KMeans, &opts(), 1).unwrap();
+    let y = qm.matvec(&[1.0; 5]);
+    for v in &y {
+        assert!((v + 2.5).abs() < 1e-9);
+    }
+    // Empty matrices are rejected at every door.
+    assert!(QMatrix::from_parts(0, 3, Grouping::PerRow, vec![]).is_err());
+    assert!(QMatrix::from_parts(3, 0, Grouping::PerRow, vec![]).is_err());
+    // Empty bit list / zero-width levels are rejected.
+    assert!(QMatrix::residual_levels(
+        &m,
+        Grouping::PerRow,
+        QuantMethod::KMeans,
+        &opts(),
+        &[],
+        0.0
+    )
+    .is_err());
+    assert!(QMatrix::residual_levels(
+        &m,
+        Grouping::PerRow,
+        QuantMethod::KMeans,
+        &opts(),
+        &[0],
+        0.0
+    )
+    .is_err());
+}
+
+#[test]
+fn wire_roundtrip_preserves_matvec_bitwise() {
+    let m = weights(21, 6, 13);
+    for grouping in GROUPINGS {
+        let qm = QMatrix::residual_levels(
+            &m,
+            grouping,
+            QuantMethod::KMeans,
+            &opts(),
+            &[2, 1],
+            0.0,
+        )
+        .unwrap();
+        let wire = jsonio::qmatrix_to_json(&qm, vec![]).to_pretty();
+        let back = jsonio::qmatrix_from_json(&jsonio::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, qm, "{grouping:?}");
+        let x = probe(21);
+        for (a, b) in back.matvec(&x).iter().zip(qm.matvec(&x)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{grouping:?}");
+        }
+    }
+}
+
+#[test]
+fn gemv_composes_with_matvec() {
+    let m = weights(10, 4, 1);
+    let qm =
+        QMatrix::quantize(&m, Grouping::PerColumn, QuantMethod::KMeans, &opts(), 3).unwrap();
+    let x = probe(10);
+    let base = qm.matvec(&x);
+    let mut y = vec![2.0f64; 4];
+    qm.gemv(0.5, &x, -1.0, &mut y);
+    for (yi, bi) in y.iter().zip(&base) {
+        assert_eq!(yi.to_bits(), (0.5 * bi - 2.0).to_bits());
+    }
+}
