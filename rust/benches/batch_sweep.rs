@@ -9,14 +9,16 @@
 //! artifacts), and (ISSUE-6) the CD epoch loops before/after the
 //! kernel-layer restructure — in-bench copies of the seed's pre-kernel
 //! structured and dense inner loops raced against the current
-//! `lasso::solve` / `lasso::solve_dense` at fixed epoch budgets. Emits a
-//! `BENCH_batch_sweep.json` baseline (median seconds + speedups) for the
-//! perf trajectory.
+//! `lasso::solve` / `lasso::solve_dense` at fixed epoch budgets, and
+//! (ISSUE-8) repeat-heavy coordinator traffic with the serve-path result
+//! cache off vs on (hit rate, bytes saved, hit-path vs solve-path
+//! medians). Emits a `BENCH_batch_sweep.json` baseline (median seconds +
+//! speedups) for the perf trajectory.
 
 use sqlsq::bench_support::{active_config, black_box, Suite};
-use sqlsq::config::Engine;
+use sqlsq::config::{CachePolicy, Config, Engine};
 use sqlsq::coordinator::server::serve_batch_runtime;
-use sqlsq::coordinator::{Job, Metrics, Payload, Router};
+use sqlsq::coordinator::{Coordinator, Job, Metrics, Payload, Router};
 use sqlsq::data::rng::Pcg32;
 use sqlsq::eval::workloads::lambda_grid;
 use sqlsq::jsonio::Json;
@@ -252,6 +254,7 @@ fn main() {
                 opts: rt_opts.clone(),
                 submitted: std::time::Instant::now(),
                 respond: tx,
+                cache: None,
             });
             rxs.push(rx);
         }
@@ -268,6 +271,48 @@ fn main() {
     let rt_fanout_s = suite
         .case("runtime_batch_fanout4_x16/n=2k", || run_runtime_batch(rt_fanout))
         .median;
+
+    // Serve-path result cache (ISSUE-8): identical repeat-heavy traffic
+    // — 64 submits cycling over a pool of 8 distinct payloads — through
+    // a cache-off coordinator (every submit solves) and a cache-on one
+    // (the pool's first lap misses; every later submit is an exact
+    // fingerprint hit served without entering a queue). The coordinators
+    // persist across timing iterations, so the cache-on median measures
+    // the steady-state hit path.
+    let cache_pool: Vec<Vec<f64>> =
+        (0..8u64).map(|i| raster_vector(2000, 256.0, 500 + i)).collect();
+    let cache_opts = QuantOptions { target_values: 8, ..Default::default() };
+    let cache_cfg = |policy: CachePolicy| Config {
+        workers: 2,
+        queue_capacity: 128,
+        max_batch: 8,
+        batch_wait_us: 100,
+        engine: Engine::Native,
+        cache_policy: policy,
+        ..Default::default()
+    };
+    let run_traffic = |coord: &Coordinator| {
+        let mut rxs = Vec::with_capacity(64);
+        for i in 0..64usize {
+            let w = &cache_pool[i % cache_pool.len()];
+            let (_, rx) =
+                coord.submit(w.clone(), QuantMethod::KMeans, cache_opts.clone()).unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            black_box(rx.recv().expect("cache bench job lost"));
+        }
+    };
+    let coord_off = Coordinator::start(cache_cfg(CachePolicy::Off)).unwrap();
+    let cache_off_s = suite
+        .case("coordinator_repeat_x64_cache_off/n=2k", || run_traffic(&coord_off))
+        .median;
+    coord_off.shutdown();
+    let coord_on = Coordinator::start(cache_cfg(CachePolicy::Lru)).unwrap();
+    let cache_on_s = suite
+        .case("coordinator_repeat_x64_cache_on/n=2k", || run_traffic(&coord_on))
+        .median;
+    let cache_snap = coord_on.shutdown();
 
     // CD epochs before/after the kernel-layer restructure (ISSUE-6): the
     // in-bench pre-kernel copies above vs the current solvers, fixed
@@ -337,12 +382,21 @@ fn main() {
     let batch_speedup = serial_s / batch_s.max(1e-12);
     let runtime_batch_speedup = rt_serial_s / rt_fanout_s.max(1e-12);
     let f32_sweep_speedup = sweep_s / f32_sweep_s.max(1e-12);
+    let cache_speedup = cache_off_s / cache_on_s.max(1e-12);
     println!("\nsweep speedup (one-shot / warm sweep)  : {sweep_speedup:.2}x");
     println!("batch speedup (serial / scoped fan-out): {batch_speedup:.2}x");
     println!(
         "runtime-batch speedup (serial / fanout {rt_fanout}): {runtime_batch_speedup:.2}x"
     );
     println!("f32 lane speedup (f64 sweep / f32 sweep): {f32_sweep_speedup:.2}x");
+    println!(
+        "result-cache speedup (repeat traffic, off / on): {cache_speedup:.2}x \
+         (hit rate {:.2}, {} hits / {} misses, {} compact bytes saved)",
+        cache_snap.cache_hit_rate,
+        cache_snap.cache_hits,
+        cache_snap.cache_misses,
+        cache_snap.cache_bytes_saved
+    );
     println!(
         "f32 lane info-loss delta (total over grid): {f32_rel_loss_delta:.3e} \
          (f64 {f64_loss_total:.6e} vs f32 {f32_loss_total:.6e})"
@@ -365,6 +419,14 @@ fn main() {
         ("runtime_batch_fanout_median_s", Json::Num(rt_fanout_s)),
         ("runtime_batch_fanout", Json::Num(rt_fanout as f64)),
         ("runtime_batch_speedup", Json::Num(runtime_batch_speedup)),
+        ("cache_off_median_s", Json::Num(cache_off_s)),
+        ("cache_on_median_s", Json::Num(cache_on_s)),
+        ("cache_speedup", Json::Num(cache_speedup)),
+        ("cache_hit_rate", Json::Num(cache_snap.cache_hit_rate)),
+        ("cache_hits", Json::Num(cache_snap.cache_hits as f64)),
+        ("cache_misses", Json::Num(cache_snap.cache_misses as f64)),
+        ("cache_bytes_saved", Json::Num(cache_snap.cache_bytes_saved as f64)),
+        ("cache_solve_saved_us", Json::Num(cache_snap.cache_solve_saved_us as f64)),
         ("f64_loss_total", Json::Num(f64_loss_total)),
         ("f32_loss_total", Json::Num(f32_loss_total)),
         ("f32_rel_loss_delta", Json::Num(f32_rel_loss_delta)),

@@ -11,7 +11,7 @@
 //! sqlsq version | help
 //! ```
 
-use crate::config::{Config, Engine};
+use crate::config::{CachePolicy, Config, Engine};
 use crate::coordinator::Coordinator;
 use crate::eval::{figures, workloads};
 use crate::jsonio::{self, Json};
@@ -95,7 +95,8 @@ USAGE:
   sqlsq serve     [--jobs N] [--engine native|runtime|auto] [--workers N]
                   [--artifacts DIR] [--precision f32|f64]
                   [--runtime-backend pjrt|shadow] [--runtime-fanout N]
-                  [--lanes N]
+                  [--lanes N] [--cache lru|off] [--cache-bytes N]
+                  [--distinct N]
   sqlsq selfcheck [--artifacts DIR]
   sqlsq version | help
 
@@ -118,6 +119,15 @@ BACKENDS: --runtime-backend pjrt executes AOT artifacts (make artifacts);
          shadow replays the kernels natively with runtime semantics — no
          artifacts needed, and batches fan across --runtime-fanout
          sub-lanes.
+
+CACHE:   the serve path keeps a result cache keyed by a content
+         fingerprint of (payload bits, lane, method, options); an
+         identical resubmit is answered from the cached compact result —
+         bitwise-identical, no solve. --cache off disables it;
+         --cache-bytes bounds the compact bytes retained (LRU). serve's
+         synthetic traffic cycles --distinct payload/option units across
+         --jobs submits, so --jobs > --distinct is repeat-heavy and the
+         metrics line shows the hit rate.
 
 MATVEC: quantized-compute demo — builds a residual cascade (QMatrix) over
          a synthetic weight matrix, prints the per-level error-vs-bits
@@ -545,6 +555,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = Engine::parse(args.flag("engine").unwrap_or("auto"))?;
     let precision = parse_precision(args)?;
     let defaults = Config::default();
+    let cache_bytes = args.flag_usize("cache-bytes", defaults.cache_capacity_bytes)?;
+    if cache_bytes == 0 {
+        return Err(Error::Config(
+            "--cache-bytes must be ≥ 1 (use --cache off to disable caching)".into(),
+        ));
+    }
     let cfg = Config {
         workers: args.flag_usize("workers", defaults.workers)?,
         engine,
@@ -554,45 +570,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
         )?,
         runtime_fanout: args.flag_usize("runtime-fanout", defaults.runtime_fanout)?.max(1),
         runtime_lanes: args.flag_usize("lanes", defaults.runtime_lanes)?.max(1),
+        cache_policy: CachePolicy::parse(args.flag("cache").unwrap_or(defaults.cache_policy.id()))?,
+        cache_capacity_bytes: cache_bytes,
         ..defaults
     };
     println!(
         "starting coordinator: {} workers, engine {:?}, {} payloads, \
-         runtime backend {} (lanes {}, fanout {})",
+         runtime backend {} (lanes {}, fanout {}), cache {} ({} B)",
         cfg.workers,
         cfg.engine,
         precision.id(),
         cfg.runtime_backend.id(),
         cfg.runtime_lanes,
-        cfg.runtime_fanout
+        cfg.runtime_fanout,
+        cfg.cache_policy.id(),
+        cfg.cache_capacity_bytes
     );
     let coord = Coordinator::start(cfg)?;
 
-    // Synthetic job mix: three data shapes × four methods.
+    // Synthetic job mix: three data shapes × four methods, drawn from a
+    // pool of `--distinct` units and cycled across the submits. With
+    // --jobs > --distinct the traffic is repeat-heavy: every lap after
+    // the first is answered by the serve-path result cache (when on),
+    // and the metrics summary reports the hit rate.
     let mut rng = crate::data::rng::Pcg32::seeded(args.flag_usize("seed", 1)? as u64);
+    let distinct = args.flag_usize("distinct", 24)?.max(1).min(jobs.max(1));
+    let pool: Vec<(Vec<f64>, QuantMethod, QuantOptions)> = (0..distinct)
+        .map(|i| {
+            let n = [64usize, 256, 640][i % 3];
+            let data: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let method = [
+                QuantMethod::L1LeastSquare,
+                QuantMethod::KMeans,
+                QuantMethod::ClusterLs,
+                QuantMethod::L1,
+            ][i % 4];
+            let opts = QuantOptions {
+                lambda1: 0.01,
+                target_values: 16,
+                seed: i as u64,
+                ..Default::default()
+            };
+            (data, method, opts)
+        })
+        .collect();
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::with_capacity(jobs);
     for i in 0..jobs {
-        let n = [64usize, 256, 640][i % 3];
-        let data: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
-        let method = [
-            QuantMethod::L1LeastSquare,
-            QuantMethod::KMeans,
-            QuantMethod::ClusterLs,
-            QuantMethod::L1,
-        ][i % 4];
-        let opts = QuantOptions {
-            lambda1: 0.01,
-            target_values: 16,
-            seed: i as u64,
-            ..Default::default()
-        };
+        let (data, method, opts) = &pool[i % pool.len()];
         let (_, rx) = match precision {
-            quant::Precision::F64 => coord.submit(data, method, opts)?,
+            quant::Precision::F64 => coord.submit(data.clone(), *method, opts.clone())?,
             quant::Precision::F32 => {
                 // f32 clients submit typed payloads; no up-front widening.
                 let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
-                coord.submit_f32(data32, method, opts)?
+                coord.submit_f32(data32, *method, opts.clone())?
             }
         };
         rxs.push(rx);
@@ -813,6 +844,21 @@ mod tests {
     #[test]
     fn serve_small_native_run() {
         dispatch(&s(&["serve", "--jobs", "12", "--engine", "native", "--workers", "2"])).unwrap();
+    }
+
+    #[test]
+    fn serve_repeat_heavy_traffic_runs_with_cache_on_and_off() {
+        dispatch(&s(&[
+            "serve", "--jobs", "12", "--distinct", "4", "--engine", "native", "--workers", "2",
+        ]))
+        .unwrap();
+        dispatch(&s(&[
+            "serve", "--jobs", "8", "--distinct", "4", "--engine", "native", "--workers", "2",
+            "--cache", "off", "--cache-bytes", "4096",
+        ]))
+        .unwrap();
+        assert!(dispatch(&s(&["serve", "--cache", "fifo"])).is_err());
+        assert!(dispatch(&s(&["serve", "--cache-bytes", "0"])).is_err());
     }
 
     #[test]

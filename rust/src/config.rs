@@ -45,6 +45,35 @@ impl Engine {
     }
 }
 
+/// Eviction policy for the coordinator's serve-path result cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    /// Bounded LRU over compact result bytes (the default).
+    #[default]
+    Lru,
+    /// Caching disabled: every admitted request solves.
+    Off,
+}
+
+impl CachePolicy {
+    /// Parse from the config string.
+    pub fn parse(s: &str) -> Result<CachePolicy> {
+        match s {
+            "lru" => Ok(CachePolicy::Lru),
+            "off" => Ok(CachePolicy::Off),
+            _ => Err(Error::Config(format!("unknown cache policy '{s}' (lru|off)"))),
+        }
+    }
+
+    /// Stable string id.
+    pub fn id(self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Off => "off",
+        }
+    }
+}
+
 /// Full system configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -73,6 +102,12 @@ pub struct Config {
     pub artifacts_dir: PathBuf,
     /// Engine routing policy.
     pub engine: Engine,
+    /// Serve-path result-cache policy (`lru` caches identical requests,
+    /// `off` disables the cache entirely).
+    pub cache_policy: CachePolicy,
+    /// Result-cache capacity in compact-result bytes (LRU bound; only
+    /// meaningful when `cache_policy` is `lru`).
+    pub cache_capacity_bytes: usize,
     /// Global RNG seed.
     pub seed: u64,
     /// Directory for experiment reports.
@@ -99,6 +134,8 @@ impl Default for Config {
             batch_wait_us: 200,
             artifacts_dir: PathBuf::from("artifacts"),
             engine: Engine::Native,
+            cache_policy: CachePolicy::Lru,
+            cache_capacity_bytes: 32 << 20,
             seed: 0,
             report_dir: PathBuf::from("reports"),
         }
@@ -171,6 +208,17 @@ impl Config {
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
             "report_dir" => self.report_dir = PathBuf::from(value),
             "engine" => self.engine = Engine::parse(value)?,
+            "cache_policy" => self.cache_policy = CachePolicy::parse(value)?,
+            "cache_capacity_bytes" => {
+                self.cache_capacity_bytes = parse_usize(value)?;
+                if self.cache_capacity_bytes == 0 {
+                    return Err(Error::Config(
+                        "cache_capacity_bytes must be ≥ 1 (use cache_policy = \"off\" to \
+                         disable caching)"
+                            .into(),
+                    ));
+                }
+            }
             "seed" => {
                 self.seed = value
                     .parse()
@@ -201,6 +249,8 @@ impl Config {
             "artifacts_dir",
             "report_dir",
             "engine",
+            "cache_policy",
+            "cache_capacity_bytes",
             "seed",
         ] {
             let env_key = format!("SQLSQ_{}", key.to_uppercase());
@@ -278,6 +328,20 @@ mod tests {
         let c0 = Config::parse_str("runtime_fanout = 0").unwrap();
         assert_eq!(c0.runtime_fanout, 1, "floored to 1");
         assert!(Config::parse_str("runtime_backend = \"tpu\"").is_err());
+    }
+
+    #[test]
+    fn cache_policy_and_capacity_parse() {
+        let c = Config::parse_str("cache_policy = \"off\"").unwrap();
+        assert_eq!(c.cache_policy, CachePolicy::Off);
+        let c = Config::parse_str("cache_capacity_bytes = 4096").unwrap();
+        assert_eq!(c.cache_capacity_bytes, 4096);
+        assert_eq!(c.cache_policy, CachePolicy::Lru, "LRU caching is on by default");
+        assert!(Config::default().cache_capacity_bytes >= 1 << 20);
+        assert!(Config::parse_str("cache_policy = \"fifo\"").is_err());
+        assert!(Config::parse_str("cache_capacity_bytes = 0").is_err());
+        assert_eq!(CachePolicy::parse("lru").unwrap().id(), "lru");
+        assert_eq!(CachePolicy::parse("off").unwrap().id(), "off");
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Cross-request result cache on the serve path.
+//!
+//! The coordinator keys every admitted single-vector job by a content
+//! [`Fingerprint`] of `(input bytes, precision lane, method, options)`.
+//! An exact hit returns the cached compact [`Item`] — bitwise-identical
+//! to a cold solve — straight into the submitter's respond channel,
+//! without the job ever entering a queue. A duplicate of an *in-flight*
+//! solve parks as a waiter and receives the leader's result when it
+//! finishes (single-flight: N concurrent identical submits run exactly
+//! one solve).
+//!
+//! Correctness before speed:
+//!
+//! * **Collision-proof.** The fingerprint only routes the lookup; every
+//!   hit additionally verifies the full key — payload element bit
+//!   patterns, method, and all option fields bit-for-bit
+//!   ([`crate::quant::api::opts_bits_eq`]). A 128-bit collision degrades
+//!   to a miss, never a wrong answer.
+//! * **Bitwise-invisible.** The cached value is the compact item the
+//!   engine's finalize built; a hit re-wraps it with the request's own
+//!   `levels_requested`, exactly as `server::finish` would. Only
+//!   [`JobResult::served_by`] (reported as [`ServedBy::Cache`]) and the
+//!   latency differ from a cold solve.
+//! * **Bounded.** Ready entries are LRU-evicted by their compact byte
+//!   cost once the configured capacity is exceeded. In-flight
+//!   reservations hold no bytes and are never evicted.
+//! * **Leader-abandonment safe.** The admission reservation is tied to a
+//!   [`CacheTicket`] carried by the job; if the leader never completes
+//!   (queue closed, load shed, worker panic) the ticket's `Drop` removes
+//!   the reservation and fails the parked waiters, so duplicates never
+//!   hang on a solve that will not happen.
+//!
+//! Errors are not cached: a failed solve drops the reservation (waiters
+//! receive the same error), and the next identical submit solves again.
+
+use super::job::{JobId, JobOutput, JobResult, Payload, ServedBy};
+use super::metrics::Metrics;
+use crate::quant::api::{opts_bits_eq, Fingerprint};
+use crate::quant::{Item, QuantMethod, QuantOptions};
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bit-exact payload equality (the hit-verification arm of the key):
+/// element bit patterns, so `-0.0` ≠ `0.0` and NaN payloads never alias.
+fn payload_bits_eq(a: &Payload, b: &Payload) -> bool {
+    match (a, b) {
+        (Payload::F64(x), Payload::F64(y)) => {
+            x.len() == y.len() && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Payload::F32(x), Payload::F32(y)) => {
+            x.len() == y.len() && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
+}
+
+/// The full admission key, retained per entry so hits verify it
+/// bit-for-bit. The payload is an `Arc` clone — no data copy.
+#[derive(Debug, Clone)]
+struct CacheKey {
+    data: Payload,
+    method: QuantMethod,
+    opts: QuantOptions,
+}
+
+impl CacheKey {
+    fn bits_eq(&self, data: &Payload, method: QuantMethod, opts: &QuantOptions) -> bool {
+        self.method == method && opts_bits_eq(&self.opts, opts) && payload_bits_eq(&self.data, data)
+    }
+}
+
+/// A parked duplicate submitter, delivered when the leader finishes.
+#[derive(Debug)]
+struct Waiter {
+    id: JobId,
+    respond: mpsc::Sender<JobResult>,
+    submitted: Instant,
+    levels_requested: usize,
+}
+
+#[derive(Debug)]
+enum Slot {
+    /// A solve for this key is in flight; duplicates park here.
+    InFlight { key: CacheKey, waiters: Vec<Waiter> },
+    /// A finished compact result.
+    Ready {
+        key: CacheKey,
+        item: Item,
+        solve_time: Duration,
+        cost_bytes: usize,
+        stamp: u64,
+    },
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<Fingerprint, Slot>,
+    /// Monotone LRU clock; touched on insert and on every hit.
+    clock: u64,
+    /// Total compact bytes held by `Ready` entries.
+    ready_bytes: usize,
+}
+
+/// The coordinator's serve-path result cache (see the module docs).
+#[derive(Debug)]
+pub struct ResultCache {
+    inner: Mutex<Inner>,
+    capacity_bytes: usize,
+}
+
+/// Admission verdict for one submitted job.
+#[derive(Debug)]
+pub enum Admit {
+    /// Miss: the caller is the leader. Attach the ticket (if any) to the
+    /// job; `server::finish` completes it. `None` means this request is
+    /// not cacheable right now (a live fingerprint collision) — solve
+    /// without publishing.
+    Solve(Option<CacheTicket>),
+    /// Exact hit: the cached result was already sent into the respond
+    /// channel. Do not enqueue.
+    Hit,
+    /// Duplicate of an in-flight solve: parked as a waiter; the result
+    /// arrives when the leader finishes. Do not enqueue.
+    Joined,
+}
+
+impl ResultCache {
+    /// New empty cache bounded to `capacity_bytes` of compact results.
+    pub fn new(capacity_bytes: usize) -> ResultCache {
+        ResultCache { inner: Mutex::new(Inner::default()), capacity_bytes }
+    }
+
+    /// Admission-time lookup, called with the job's identity before it is
+    /// queued. Exactly one of three things happens under the lock: the
+    /// hit is delivered, the duplicate parks, or the miss reserves the
+    /// key (single-flight) and returns the leader's ticket.
+    #[allow(clippy::too_many_arguments)]
+    pub fn admit(
+        self: &Arc<Self>,
+        metrics: &Arc<Metrics>,
+        id: JobId,
+        data: &Payload,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        respond: &mpsc::Sender<JobResult>,
+        submitted: Instant,
+    ) -> Admit {
+        let fp = match data {
+            Payload::F64(v) => Fingerprint::vector_f64(v, method, opts),
+            Payload::F32(v) => Fingerprint::vector_f32(v, method, opts),
+        };
+        // Classify under a short immutable borrow, then act: matching on
+        // `get_mut` would pin the map borrow across arms that need to
+        // insert (NLL problem case).
+        enum Lookup {
+            HitReady,
+            JoinInFlight,
+            CollideInFlight,
+            CollideReady,
+            Vacant,
+        }
+        let mut g = self.inner.lock().expect("cache lock");
+        g.clock += 1;
+        let now = g.clock;
+        let look = match g.map.get(&fp) {
+            Some(Slot::Ready { key, .. }) if key.bits_eq(data, method, opts) => Lookup::HitReady,
+            Some(Slot::Ready { .. }) => Lookup::CollideReady,
+            Some(Slot::InFlight { key, .. }) if key.bits_eq(data, method, opts) => {
+                Lookup::JoinInFlight
+            }
+            Some(Slot::InFlight { .. }) => Lookup::CollideInFlight,
+            None => Lookup::Vacant,
+        };
+        match look {
+            Lookup::HitReady => {
+                let (item, solve_saved, bytes_saved) = match g.map.get_mut(&fp) {
+                    Some(Slot::Ready { item, solve_time, cost_bytes, stamp, .. }) => {
+                        *stamp = now;
+                        (item.clone(), *solve_time, *cost_bytes)
+                    }
+                    _ => unreachable!("classified Ready under the same lock"),
+                };
+                drop(g);
+                let latency = submitted.elapsed();
+                metrics.on_cache_hit(bytes_saved, solve_saved, latency);
+                let _ = respond.send(JobResult {
+                    id,
+                    outcome: Ok(JobOutput::new(item, opts.target_values)),
+                    latency,
+                    served_by: ServedBy::Cache,
+                });
+                Admit::Hit
+            }
+            Lookup::JoinInFlight => {
+                if let Some(Slot::InFlight { waiters, .. }) = g.map.get_mut(&fp) {
+                    waiters.push(Waiter {
+                        id,
+                        respond: respond.clone(),
+                        submitted,
+                        levels_requested: opts.target_values,
+                    });
+                }
+                Admit::Joined
+            }
+            Lookup::CollideInFlight => {
+                // Live fingerprint collision with a different key: the
+                // slot is busy and its waiters must not be orphaned.
+                // Solve without caching (astronomically rare).
+                drop(g);
+                metrics.on_cache_miss();
+                Admit::Solve(None)
+            }
+            Lookup::CollideReady => {
+                // Ready entry under a colliding fingerprint: the new key
+                // takes the slot (it is about to be the hotter one).
+                if let Some(Slot::Ready { cost_bytes, .. }) = g.map.remove(&fp) {
+                    g.ready_bytes -= cost_bytes;
+                }
+                self.reserve(&mut g, fp, data, method, opts);
+                drop(g);
+                metrics.on_cache_miss();
+                Admit::Solve(Some(self.ticket(metrics, fp)))
+            }
+            Lookup::Vacant => {
+                self.reserve(&mut g, fp, data, method, opts);
+                drop(g);
+                metrics.on_cache_miss();
+                Admit::Solve(Some(self.ticket(metrics, fp)))
+            }
+        }
+    }
+
+    fn reserve(
+        &self,
+        g: &mut Inner,
+        fp: Fingerprint,
+        data: &Payload,
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) {
+        let key = CacheKey { data: data.clone(), method, opts: opts.clone() };
+        g.map.insert(fp, Slot::InFlight { key, waiters: Vec::new() });
+    }
+
+    fn ticket(self: &Arc<Self>, metrics: &Arc<Metrics>, fp: Fingerprint) -> CacheTicket {
+        CacheTicket { cache: Arc::clone(self), metrics: Arc::clone(metrics), fp, done: false }
+    }
+
+    /// (ready entries, in-flight reservations, ready compact bytes) —
+    /// test/diagnostic visibility.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let g = self.inner.lock().expect("cache lock");
+        let ready = g
+            .map
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count();
+        (ready, g.map.len() - ready, g.ready_bytes)
+    }
+}
+
+/// The leader's obligation to publish its outcome (held inside the job
+/// while it rides the queue). Completing on success inserts the compact
+/// result and drains waiters; completing on failure (or dropping the
+/// ticket without completing — queue closed, shed, panic) removes the
+/// reservation and fails the waiters, so duplicates never hang.
+#[derive(Debug)]
+pub struct CacheTicket {
+    cache: Arc<ResultCache>,
+    metrics: Arc<Metrics>,
+    fp: Fingerprint,
+    done: bool,
+}
+
+impl CacheTicket {
+    /// Publish the leader's outcome. Called by `server::finish` exactly
+    /// once per cached-leader job, before the leader's own respond.
+    pub(crate) fn complete(&mut self, outcome: &crate::Result<Item>, served_by: ServedBy) {
+        self.done = true;
+        let mut g = self.cache.inner.lock().expect("cache lock");
+        let (key, waiters) = match g.map.remove(&self.fp) {
+            Some(Slot::InFlight { key, waiters }) => (key, waiters),
+            Some(other) => {
+                // Not our reservation (collision replaced it) — restore.
+                g.map.insert(self.fp, other);
+                return;
+            }
+            None => return,
+        };
+        match outcome {
+            Ok(item) => {
+                let cost_bytes = item.compression(key.opts.target_values).compact_bytes;
+                let t = item.timings();
+                let solve_time = t.prepare + t.solve;
+                g.clock += 1;
+                let stamp = g.clock;
+                g.ready_bytes += cost_bytes;
+                g.map.insert(
+                    self.fp,
+                    Slot::Ready { key, item: item.clone(), solve_time, cost_bytes, stamp },
+                );
+                // LRU eviction by compact bytes; never the entry just
+                // inserted (a result larger than the whole capacity still
+                // serves its own waiters and is evicted by the next
+                // insert).
+                while g.ready_bytes > self.cache.capacity_bytes {
+                    let victim = g
+                        .map
+                        .iter()
+                        .filter_map(|(fp, s)| match s {
+                            Slot::Ready { stamp, .. } if *fp != self.fp => Some((*stamp, *fp)),
+                            _ => None,
+                        })
+                        .min_by_key(|(stamp, _)| *stamp)
+                        .map(|(_, fp)| fp);
+                    match victim {
+                        Some(fp) => {
+                            if let Some(Slot::Ready { cost_bytes, .. }) = g.map.remove(&fp) {
+                                g.ready_bytes -= cost_bytes;
+                            }
+                        }
+                        None => break,
+                    }
+                }
+                drop(g);
+                for w in waiters {
+                    let latency = w.submitted.elapsed();
+                    self.metrics.on_cache_hit(cost_bytes, solve_time, latency);
+                    let _ = w.respond.send(JobResult {
+                        id: w.id,
+                        outcome: Ok(JobOutput::new(item.clone(), w.levels_requested)),
+                        latency,
+                        served_by: ServedBy::Cache,
+                    });
+                }
+            }
+            Err(e) => {
+                drop(g);
+                let msg = e.to_string();
+                for w in waiters {
+                    let latency = w.submitted.elapsed();
+                    self.metrics.on_complete(false, latency, served_by == ServedBy::Runtime);
+                    let _ = w.respond.send(JobResult {
+                        id: w.id,
+                        outcome: Err(msg.clone()),
+                        latency,
+                        served_by,
+                    });
+                }
+            }
+        }
+    }
+}
+
+impl Drop for CacheTicket {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // Leader abandoned before solving: release the reservation and
+        // fail parked duplicates rather than leaving them waiting.
+        let Ok(mut g) = self.cache.inner.lock() else { return };
+        let waiters = match g.map.remove(&self.fp) {
+            Some(Slot::InFlight { waiters, .. }) => waiters,
+            Some(other) => {
+                g.map.insert(self.fp, other);
+                return;
+            }
+            None => return,
+        };
+        drop(g);
+        for w in waiters {
+            let latency = w.submitted.elapsed();
+            self.metrics.on_complete(false, latency, false);
+            let _ = w.respond.send(JobResult {
+                id: w.id,
+                outcome: Err("cache leader abandoned before solving".into()),
+                latency,
+                served_by: ServedBy::Cache,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QuantRequest, Quantizer};
+
+    fn solved(data: &[f64], method: QuantMethod, opts: &QuantOptions) -> Item {
+        let req = QuantRequest::vector(data.to_vec()).method(method).options(opts.clone());
+        Quantizer::new().run(&req).unwrap().into_single().unwrap()
+    }
+
+    fn payload(seed: u64) -> Payload {
+        let mut rng = crate::data::rng::Pcg32::seeded(seed);
+        Payload::F64((0..40).map(|_| rng.uniform(0.0, 1.0)).collect::<Vec<_>>().into())
+    }
+
+    fn admit(
+        cache: &Arc<ResultCache>,
+        metrics: &Arc<Metrics>,
+        id: JobId,
+        data: &Payload,
+        opts: &QuantOptions,
+    ) -> (Admit, mpsc::Receiver<JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        let verdict = cache.admit(
+            metrics,
+            id,
+            data,
+            QuantMethod::KMeans,
+            opts,
+            &tx,
+            Instant::now(),
+        );
+        (verdict, rx)
+    }
+
+    #[test]
+    fn miss_then_hit_round_trip_is_bitwise_and_counted() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(1);
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+
+        let (verdict, _rx1) = admit(&cache, &metrics, 1, &data, &opts);
+        let Admit::Solve(Some(mut ticket)) = verdict else {
+            panic!("first admit must be a leader miss")
+        };
+        let Payload::F64(v) = &data else { unreachable!() };
+        let item = solved(v, QuantMethod::KMeans, &opts);
+        ticket.complete(&Ok(item.clone()), ServedBy::Native);
+        assert_eq!(cache.stats().0, 1, "one ready entry");
+
+        let (verdict, rx2) = admit(&cache, &metrics, 2, &data, &opts);
+        assert!(matches!(verdict, Admit::Hit), "second identical admit hits");
+        let res = rx2.try_recv().expect("hit delivers synchronously");
+        assert_eq!(res.served_by, ServedBy::Cache);
+        let out = res.outcome.unwrap();
+        let got = out.item().as_f64().unwrap();
+        let want = item.as_f64().unwrap();
+        assert_eq!(got.codebook.levels, want.codebook.levels);
+        assert_eq!(got.codebook.indices, want.codebook.indices);
+        assert_eq!(got.l2_loss.to_bits(), want.l2_loss.to_bits());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        assert!(snap.cache_bytes_saved > 0);
+    }
+
+    #[test]
+    fn in_flight_duplicates_park_and_drain_single_flight() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(2);
+        let opts = QuantOptions { target_values: 3, ..Default::default() };
+
+        let (verdict, _rx_leader) = admit(&cache, &metrics, 1, &data, &opts);
+        let Admit::Solve(Some(mut ticket)) = verdict else { panic!("leader miss") };
+        let (v2, rx2) = admit(&cache, &metrics, 2, &data, &opts);
+        let (v3, rx3) = admit(&cache, &metrics, 3, &data, &opts);
+        assert!(matches!(v2, Admit::Joined) && matches!(v3, Admit::Joined));
+        assert!(rx2.try_recv().is_err(), "waiters get nothing until the leader finishes");
+
+        let Payload::F64(v) = &data else { unreachable!() };
+        let item = solved(v, QuantMethod::KMeans, &opts);
+        ticket.complete(&Ok(item.clone()), ServedBy::Native);
+        for (id, rx) in [(2u64, rx2), (3, rx3)] {
+            let res = rx.try_recv().expect("drained on complete");
+            assert_eq!(res.id, id);
+            assert_eq!(res.served_by, ServedBy::Cache);
+            let got = res.outcome.unwrap();
+            assert_eq!(
+                got.item().as_f64().unwrap().codebook.indices,
+                item.as_f64().unwrap().codebook.indices
+            );
+        }
+        assert_eq!(metrics.snapshot().cache_hits, 2, "both waiters count as hits");
+    }
+
+    #[test]
+    fn abandoned_leader_fails_waiters_and_releases_the_key() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(3);
+        let opts = QuantOptions::default();
+
+        let (verdict, _rx1) = admit(&cache, &metrics, 1, &data, &opts);
+        let Admit::Solve(Some(ticket)) = verdict else { panic!("leader miss") };
+        let (v2, rx2) = admit(&cache, &metrics, 2, &data, &opts);
+        assert!(matches!(v2, Admit::Joined));
+        drop(ticket); // queue closed / shed / panic
+        let res = rx2.try_recv().expect("waiter fails instead of hanging");
+        assert!(res.outcome.is_err());
+        assert_eq!(cache.stats(), (0, 0, 0), "reservation released");
+        // The key is free again: the next submit leads a fresh solve.
+        let (v3, _rx3) = admit(&cache, &metrics, 3, &data, &opts);
+        assert!(matches!(v3, Admit::Solve(Some(_))));
+    }
+
+    #[test]
+    fn failed_solves_are_not_cached_and_propagate_to_waiters() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(4);
+        let opts = QuantOptions::default();
+
+        let (verdict, _rx1) = admit(&cache, &metrics, 1, &data, &opts);
+        let Admit::Solve(Some(mut ticket)) = verdict else { panic!("leader miss") };
+        let (v2, rx2) = admit(&cache, &metrics, 2, &data, &opts);
+        assert!(matches!(v2, Admit::Joined));
+        ticket.complete(
+            &Err(crate::Error::InvalidInput("boom".into())),
+            ServedBy::Native,
+        );
+        let res = rx2.try_recv().expect("waiter gets the leader's error");
+        assert!(res.outcome.is_err());
+        assert_eq!(cache.stats(), (0, 0, 0), "errors are not cached");
+        let (v3, _rx3) = admit(&cache, &metrics, 3, &data, &opts);
+        assert!(matches!(v3, Admit::Solve(Some(_))), "next submit solves again");
+    }
+
+    #[test]
+    fn lru_eviction_is_bounded_by_compact_bytes_and_never_serves_evicted() {
+        let metrics = Arc::new(Metrics::new());
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        // Capacity for roughly one entry: each 40-element k≤4 compact
+        // item is 40 u32 packed at ≤2 bits + 4 levels ≈ 10 + 32 bytes.
+        let cache = Arc::new(ResultCache::new(64));
+        let a = payload(10);
+        let b = payload(11);
+        for (id, p) in [(1u64, &a), (2, &b)] {
+            let (verdict, _rx) = admit(&cache, &metrics, id, p, &opts);
+            let Admit::Solve(Some(mut t)) = verdict else { panic!("miss") };
+            let Payload::F64(v) = p else { unreachable!() };
+            t.complete(&Ok(solved(v, QuantMethod::KMeans, &opts)), ServedBy::Native);
+        }
+        let (ready, inflight, bytes) = cache.stats();
+        assert_eq!(inflight, 0);
+        assert!(ready <= 1 && bytes <= 64, "capacity churn evicted the older entry");
+        // The survivor (b, most recent) still hits; the evicted key (a)
+        // misses and re-reserves — an evicted entry is never served.
+        let (vb, _rxb) = admit(&cache, &metrics, 3, &b, &opts);
+        assert!(matches!(vb, Admit::Hit));
+        let (va, _rxa) = admit(&cache, &metrics, 4, &a, &opts);
+        assert!(matches!(va, Admit::Solve(Some(_))));
+    }
+
+    #[test]
+    fn near_identical_keys_do_not_alias() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(5);
+        let opts = QuantOptions { target_values: 4, seed: 1, ..Default::default() };
+        let (verdict, _rx) = admit(&cache, &metrics, 1, &data, &opts);
+        let Admit::Solve(Some(mut t)) = verdict else { panic!("miss") };
+        let Payload::F64(v) = &data else { unreachable!() };
+        t.complete(&Ok(solved(v, QuantMethod::KMeans, &opts)), ServedBy::Native);
+
+        // Same data, one option bit different ⇒ distinct key ⇒ miss.
+        let opts2 = QuantOptions { seed: 2, ..opts.clone() };
+        let (v2, _rx2) = admit(&cache, &metrics, 2, &data, &opts2);
+        assert!(matches!(v2, Admit::Solve(Some(_))));
+        // Same options, one payload bit different ⇒ miss.
+        let Payload::F64(v) = &data else { unreachable!() };
+        let mut flipped: Vec<f64> = v.to_vec();
+        flipped[0] = f64::from_bits(flipped[0].to_bits() ^ 1);
+        let (v3, _rx3) = admit(&cache, &metrics, 3, &Payload::F64(flipped.into()), &opts);
+        assert!(matches!(v3, Admit::Solve(Some(_))));
+    }
+}

@@ -107,6 +107,10 @@ pub enum ServedBy {
     Native,
     /// AOT artifact on the PJRT runtime.
     Runtime,
+    /// The serve-path result cache: no engine ran — a previously solved
+    /// identical request's compact item was returned
+    /// ([`super::cache::ResultCache`]).
+    Cache,
 }
 
 impl ServedBy {
@@ -115,6 +119,7 @@ impl ServedBy {
         match self {
             ServedBy::Native => "native",
             ServedBy::Runtime => "runtime",
+            ServedBy::Cache => "cache",
         }
     }
 }
@@ -134,6 +139,13 @@ pub struct Job {
     pub submitted: Instant,
     /// Response channel (capacity 1).
     pub respond: mpsc::Sender<JobResult>,
+    /// Result-cache leader ticket, when this job's admission reserved a
+    /// cache slot: `server::finish` completes it (publishing the compact
+    /// result and draining duplicate submitters); dropping the job
+    /// without finishing cancels the reservation so duplicates fail
+    /// instead of hanging. `None` when caching is off or the request
+    /// bypassed the cache.
+    pub cache: Option<super::cache::CacheTicket>,
 }
 
 /// A successful job's result payload: the compact lane-erased item the
@@ -259,6 +271,7 @@ mod tests {
     fn served_by_labels() {
         assert_eq!(ServedBy::Native.label(), "native");
         assert_eq!(ServedBy::Runtime.label(), "runtime");
+        assert_eq!(ServedBy::Cache.label(), "cache");
     }
 
     #[test]

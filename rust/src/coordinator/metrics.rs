@@ -15,6 +15,12 @@
 //!   histogram, native-vs-runtime engine), recorded by `finish` in
 //!   `server.rs` for every job exactly once;
 //! * batching — `on_batch` per drained batch (mean batch size falls out);
+//! * result cache — `on_cache_miss` at admission, `on_cache_hit` when a
+//!   request completes from the cache (exact hit at admission, or a
+//!   parked duplicate drained when its leader finishes) with the compact
+//!   bytes and prepare+solve time the hit saved; hits count toward
+//!   `completed` and the latency histogram but not `served_native` /
+//!   `served_runtime` — no engine ran;
 //! * pipeline stages — `on_stage` with the prepare/solve wall times the
 //!   compact finalize reports on each item (native lane only; the
 //!   runtime lane's phases are artifact calls, not prepare/solve);
@@ -42,6 +48,10 @@ pub struct Metrics {
     batches: AtomicU64,
     batch_jobs: AtomicU64,
     lanes_degraded: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_bytes_saved: AtomicU64,
+    cache_solve_saved_us: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     stage_prepare_ns: AtomicU64,
@@ -79,6 +89,20 @@ pub struct Snapshot {
     pub p95_us: u64,
     /// p99.
     pub p99_us: u64,
+    /// Requests served from the result cache (exact hits + drained
+    /// duplicate waiters) — completed without running a solve.
+    pub cache_hits: u64,
+    /// Requests that missed the result cache (includes admissions while
+    /// caching is on that later got shed; disabled caching records
+    /// neither hits nor misses).
+    pub cache_misses: u64,
+    /// Hit rate over cache-visible traffic: hits / (hits + misses).
+    pub cache_hit_rate: f64,
+    /// Compact result bytes served from cache instead of re-solved.
+    pub cache_bytes_saved: u64,
+    /// Prepare+solve wall time (µs) the cache saved — the original
+    /// solve's stage cost, credited once per hit.
+    pub cache_solve_saved_us: u64,
     /// Jobs with recorded per-stage (prepare/solve) timings.
     pub stage_samples: u64,
     /// Mean prepare-stage time (µs) across those jobs.
@@ -136,6 +160,29 @@ impl Metrics {
         } else {
             self.served_native.fetch_add(1, Ordering::Relaxed);
         }
+        self.record_latency(latency);
+    }
+
+    /// Count a request served from the result cache: a completion with
+    /// its own latency, plus the solve work it skipped (`bytes_saved` =
+    /// the compact result payload, `solve_saved` = the original solve's
+    /// prepare+solve wall time). Neither engine counter moves — no
+    /// engine ran.
+    pub fn on_cache_hit(&self, bytes_saved: usize, solve_saved: Duration, latency: Duration) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.cache_bytes_saved.fetch_add(bytes_saved as u64, Ordering::Relaxed);
+        let saved_us = solve_saved.as_micros().min(u64::MAX as u128) as u64;
+        self.cache_solve_saved_us.fetch_add(saved_us, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.record_latency(latency);
+    }
+
+    /// Count a request that missed the result cache (it will solve).
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn record_latency(&self, latency: Duration) {
         let us = latency.as_micros().min(u64::MAX as u128) as u64;
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
         let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
@@ -168,6 +215,8 @@ impl Metrics {
         }
         let batches = self.batches.load(Ordering::Relaxed);
         let batch_jobs = self.batch_jobs.load(Ordering::Relaxed);
+        let cache_hits = self.cache_hits.load(Ordering::Relaxed);
+        let cache_misses = self.cache_misses.load(Ordering::Relaxed);
         let stage_samples = self.stage_samples.load(Ordering::Relaxed);
         let stage_mean_us = |total_ns: &AtomicU64| {
             if stage_samples > 0 {
@@ -194,6 +243,15 @@ impl Metrics {
             p50_us: self.percentile(&counts, total, 0.50),
             p95_us: self.percentile(&counts, total, 0.95),
             p99_us: self.percentile(&counts, total, 0.99),
+            cache_hits,
+            cache_misses,
+            cache_hit_rate: if cache_hits + cache_misses > 0 {
+                cache_hits as f64 / (cache_hits + cache_misses) as f64
+            } else {
+                0.0
+            },
+            cache_bytes_saved: self.cache_bytes_saved.load(Ordering::Relaxed),
+            cache_solve_saved_us: self.cache_solve_saved_us.load(Ordering::Relaxed),
             stage_samples,
             mean_prepare_us: stage_mean_us(&self.stage_prepare_ns),
             mean_solve_us: stage_mean_us(&self.stage_solve_ns),
@@ -207,6 +265,7 @@ impl Snapshot {
         format!(
             "submitted={} completed={} failed={} rejected={} native={} runtime={} \
              batches={} mean_batch={:.1} degraded_lanes={} \
+             cache(hit/miss)={}/{} cache_rate={:.2} saved={}B/{}µs \
              lat(mean/p50/p95/p99 µs)={:.0}/{}/{}/{} \
              stages(prep/solve mean µs)={:.1}/{:.1}",
             self.submitted,
@@ -218,6 +277,11 @@ impl Snapshot {
             self.batches,
             self.mean_batch,
             self.lanes_degraded,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate,
+            self.cache_bytes_saved,
+            self.cache_solve_saved_us,
             self.mean_latency_us,
             self.p50_us,
             self.p95_us,
@@ -267,6 +331,29 @@ mod tests {
         assert!((s.mean_prepare_us - 20.0).abs() < 1e-9);
         assert!((s.mean_solve_us - 100.0).abs() < 1e-9);
         assert!(s.summary().contains("stages("));
+    }
+
+    #[test]
+    fn cache_counters_accumulate_without_touching_engine_counters() {
+        let m = Metrics::new();
+        m.on_cache_miss();
+        m.on_cache_hit(120, Duration::from_micros(900), Duration::from_micros(4));
+        m.on_cache_hit(120, Duration::from_micros(900), Duration::from_micros(6));
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert!((s.cache_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.cache_bytes_saved, 240);
+        assert_eq!(s.cache_solve_saved_us, 1800);
+        // Hits complete without an engine: completed moves, served_* do
+        // not, and the hit latencies land in the histogram.
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.served_native, 0);
+        assert_eq!(s.served_runtime, 0);
+        assert!((s.mean_latency_us - 5.0).abs() < 1e-9);
+        assert!(s.summary().contains("cache(hit/miss)=2/1"));
+        // Zero traffic ⇒ rate 0, not NaN.
+        assert_eq!(Metrics::new().snapshot().cache_hit_rate, 0.0);
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //! pool, native/runtime routing, metrics. See `server.rs` for the
 //! topology diagram.
 
+pub mod cache;
 pub mod job;
 pub mod metrics;
 pub mod queue;
 pub mod router;
 pub mod server;
 
+pub use cache::{Admit, CacheTicket, ResultCache};
 pub use job::{Job, JobId, JobOutput, JobResult, Payload, ServedBy};
 pub use metrics::{Metrics, Snapshot};
 pub use router::Router;

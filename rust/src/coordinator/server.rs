@@ -6,16 +6,26 @@
 //! ```text
 //!      submit_request()/try_submit_request()   (QuantRequest front door;
 //!                   │                            legacy submit*/try_submit*
-//!                   │  (bounded queue =          are shims over it)
-//!                   │   backpressure)
+//!            result cache ──► hit/joined         are shims over it)
+//!                   │         (respond directly;
+//!                   │  (bounded   never queued)
+//!                   │   queue = backpressure)
 //!        ┌──────────┴───────────┐
 //!   native queue           runtime queue        (router decides per job)
 //!        │                      │
 //!   N worker threads       R runtime-lane threads (each owns a PJRT
 //!        │                      │                   client + exe cache)
 //!        └──────────┬───────────┘
-//!              respond channels + metrics
+//!       finish(): cache insert ──► respond channels + metrics
 //! ```
+//!
+//! The result cache ([`super::cache::ResultCache`], `Config::cache_policy`)
+//! sits at admission: an exact content-fingerprint hit answers from the
+//! cached compact item without entering a queue (bitwise-identical to a
+//! cold solve; `ServedBy::Cache`), a duplicate of an in-flight solve
+//! parks until the leader's `finish` publishes (single-flight), and a
+//! miss carries a [`super::cache::CacheTicket`] through the queue so
+//! `finish` inserts the result.
 //!
 //! Results flow back **compact**: a worker's finalize builds the
 //! codebook (levels + `u32` indices) and [`JobResult`] carries exactly
@@ -36,11 +46,12 @@
 //! in [`Metrics`], and under `Engine::Auto` its pops are served natively
 //! instead of erroring job by job.
 
+use super::cache::{Admit, ResultCache};
 use super::job::{Job, JobId, JobOutput, JobResult, Payload, ServedBy};
 use super::metrics::{Metrics, Snapshot};
 use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
-use crate::config::{Config, Engine};
+use crate::config::{CachePolicy, Config, Engine};
 use crate::quant::api::{Plan, QuantRequest, RequestInput};
 use crate::quant::{Item, Precision, QuantMethod, QuantOptions};
 use crate::runtime::{open_backend, ExecutorBackend};
@@ -95,21 +106,37 @@ fn request_from_payload(data: Payload, method: QuantMethod, opts: QuantOptions) 
     req.method(method).options(opts)
 }
 
+/// Admission verdict: either the job must be queued, or the result cache
+/// already answered (exact hit) / will answer (parked duplicate of an
+/// in-flight solve) through the returned receiver.
+enum Admission<'a> {
+    /// Queue the job (a miss carries its leader ticket inside).
+    Enqueue(Job, mpsc::Receiver<JobResult>, &'a BoundedQueue<Job>),
+    /// Served (or adopted) by the cache — nothing to queue.
+    Served(JobId, mpsc::Receiver<JobResult>),
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     native_q: Arc<BoundedQueue<Job>>,
     runtime_q: Arc<BoundedQueue<Job>>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
+    cache: Option<Arc<ResultCache>>,
     next_id: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
     cfg: Config,
 }
 
-/// Complete a job: wrap the engine's **compact** item as the result
-/// payload (no materialization — full vectors are an edge concern), stamp
-/// metrics, and respond.
-fn finish(metrics: &Metrics, job: Job, outcome: Result<Item>, served_by: ServedBy) {
+/// Complete a job: publish to the result cache when the job carried a
+/// leader ticket (storing the compact item and draining duplicate
+/// submitters), then wrap the engine's **compact** item as the result
+/// payload (no materialization — full vectors are an edge concern),
+/// stamp metrics, and respond.
+fn finish(metrics: &Metrics, mut job: Job, outcome: Result<Item>, served_by: ServedBy) {
+    if let Some(mut ticket) = job.cache.take() {
+        ticket.complete(&outcome, served_by);
+    }
     let latency = job.submitted.elapsed();
     let levels_requested = job.opts.target_values;
     let outcome = outcome
@@ -385,11 +412,16 @@ impl Coordinator {
             }
         }
 
+        let cache = match cfg.cache_policy {
+            CachePolicy::Lru => Some(Arc::new(ResultCache::new(cfg.cache_capacity_bytes))),
+            CachePolicy::Off => None,
+        };
         Ok(Coordinator {
             native_q,
             runtime_q,
             router,
             metrics,
+            cache,
             next_id: AtomicU64::new(1),
             workers,
             cfg,
@@ -417,23 +449,39 @@ impl Coordinator {
                 .router
                 .routes_to_runtime(method, data.len().max(1), opts.target_values);
         (
-            Job { id, data, method, opts, submitted: Instant::now(), respond: tx },
+            Job { id, data, method, opts, submitted: Instant::now(), respond: tx, cache: None },
             rx,
             to_runtime,
         )
     }
 
     /// Shared admission path for both submit front doors: validate the
-    /// request shape, build the job, and pick its queue. The push
-    /// strategy (blocking vs shedding) stays at the call site.
-    fn admit_request(
-        &self,
-        req: QuantRequest,
-    ) -> Result<(Job, mpsc::Receiver<JobResult>, &BoundedQueue<Job>)> {
+    /// request shape, build the job, consult the result cache, and pick
+    /// the queue. The push strategy (blocking vs shedding) stays at the
+    /// call site; cache hits and joined duplicates never reach a queue.
+    fn admit_request(&self, req: QuantRequest) -> Result<Admission<'_>> {
         let (data, method, opts) = request_job_parts(req)?;
-        let (job, rx, to_runtime) = self.make_job(data, method, opts);
+        let (mut job, rx, to_runtime) = self.make_job(data, method, opts);
+        if let Some(cache) = &self.cache {
+            match cache.admit(
+                &self.metrics,
+                job.id,
+                &job.data,
+                job.method,
+                &job.opts,
+                &job.respond,
+                job.submitted,
+            ) {
+                // Hit: the result is already in the channel. Joined: it
+                // arrives when the in-flight leader finishes. Either way
+                // the job itself is dropped here (the waiter/hit holds
+                // its own sender clone).
+                Admit::Hit | Admit::Joined => return Ok(Admission::Served(job.id, rx)),
+                Admit::Solve(ticket) => job.cache = ticket,
+            }
+        }
         let q = if to_runtime { &self.runtime_q } else { &self.native_q };
-        Ok((job, rx, q.as_ref()))
+        Ok(Admission::Enqueue(job, rx, q.as_ref()))
     }
 
     /// **The typed front door**: blocking submit of a single-vector
@@ -447,13 +495,20 @@ impl Coordinator {
         &self,
         req: QuantRequest,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        let (job, rx, q) = self.admit_request(req)?;
-        let id = job.id;
-        if !q.push(job) {
-            return Err(Error::Coordinator("queue closed".into()));
+        match self.admit_request(req)? {
+            Admission::Served(id, rx) => {
+                self.metrics.on_submit();
+                Ok((id, rx))
+            }
+            Admission::Enqueue(job, rx, q) => {
+                let id = job.id;
+                if !q.push(job) {
+                    return Err(Error::Coordinator("queue closed".into()));
+                }
+                self.metrics.on_submit();
+                Ok((id, rx))
+            }
         }
-        self.metrics.on_submit();
-        Ok((id, rx))
     }
 
     /// Non-blocking typed submit; `Err` when the queue is full (load
@@ -462,18 +517,28 @@ impl Coordinator {
         &self,
         req: QuantRequest,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        let (job, rx, q) = self.admit_request(req)?;
-        let id = job.id;
-        match q.try_push(job) {
-            TryPush::Ok => {
+        match self.admit_request(req)? {
+            Admission::Served(id, rx) => {
                 self.metrics.on_submit();
                 Ok((id, rx))
             }
-            TryPush::Full(_) => {
-                self.metrics.on_reject();
-                Err(Error::Coordinator("queue full".into()))
+            Admission::Enqueue(job, rx, q) => {
+                let id = job.id;
+                match q.try_push(job) {
+                    TryPush::Ok => {
+                        self.metrics.on_submit();
+                        Ok((id, rx))
+                    }
+                    // The shed job drops here; its leader ticket's Drop
+                    // releases the cache reservation (parked duplicates
+                    // fail instead of hanging).
+                    TryPush::Full(_) => {
+                        self.metrics.on_reject();
+                        Err(Error::Coordinator("queue full".into()))
+                    }
+                    TryPush::Closed(_) => Err(Error::Coordinator("queue closed".into())),
+                }
             }
-            TryPush::Closed(_) => Err(Error::Coordinator("queue closed".into())),
         }
     }
 
@@ -864,6 +929,49 @@ mod tests {
         assert!(stats.levels_achieved <= 4);
         assert!(stats.byte_ratio > 1.0);
         c.shutdown();
+    }
+
+    #[test]
+    fn identical_resubmit_is_served_from_cache_bitwise() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(21);
+        let opts = QuantOptions { target_values: 4, seed: 7, ..Default::default() };
+        let cold = c
+            .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+            .unwrap();
+        assert_eq!(cold.served_by, ServedBy::Native);
+        let hit = c
+            .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+            .unwrap();
+        assert_eq!(hit.served_by, ServedBy::Cache, "identical resubmit must hit");
+        let (a, b) = (cold.outcome.unwrap(), hit.outcome.unwrap());
+        assert_eq!(a.materialize(), b.materialize(), "hit is bitwise-identical");
+        assert_eq!(a.l2_loss().to_bits(), b.l2_loss().to_bits());
+        assert_eq!(a.compression().compact_bytes, b.compression().compact_bytes);
+        let snap = c.shutdown();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        assert!(snap.cache_bytes_saved > 0);
+        assert_eq!(snap.completed, 2, "a hit still counts as a completed job");
+        assert_eq!(snap.stage_samples, 1, "exactly one engine solve ran");
+    }
+
+    #[test]
+    fn cache_off_policy_solves_every_submit() {
+        let cfg = Config { cache_policy: CachePolicy::Off, ..test_cfg() };
+        let c = Coordinator::start(cfg).unwrap();
+        let data = sample(22);
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        for _ in 0..2 {
+            let res = c
+                .quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone())
+                .unwrap();
+            assert_eq!(res.served_by, ServedBy::Native);
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.stage_samples, 2, "cache off: every submit solves");
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.cache_misses, 0);
     }
 
     #[test]

@@ -52,7 +52,12 @@
 //! ```
 //!
 //! * `levels` — as in the codebook form (sorted ascending, `k ≥ 1`).
-//! * `bits` — integer `1..=32`: fixed bits per index, `⌈log₂ k⌉`.
+//! * `bits` — integer `0..=32`: fixed bits per index, `⌈log₂ k⌉`. A
+//!   single-level plane (`k = 1`) carries no index information and is
+//!   emitted with `bits = 0` and an empty `packed_hex`; decoders also
+//!   accept the legacy `bits = 1` encoding for `k = 1`. `bits = 0` with
+//!   `k > 1` is rejected (it would silently decode everything to
+//!   `levels[0]`).
 //! * `len` — integer: number of encoded elements `n`.
 //! * `packed_hex` — lowercase hex string of exactly `⌈n·bits / 8⌉` bytes
 //!   (`2·⌈n·bits/8⌉` hex digits): the index plane packed LSB-first into
@@ -610,9 +615,10 @@ pub fn packed_codebook_to_json(cb: &PackedCodebook, extra: Vec<(&str, Json)>) ->
 
 /// Parse the wire's packed-codebook form back into a [`PackedCodebook`].
 /// Validates the protocol invariants — `levels` non-empty and sorted
-/// ascending, `bits ∈ 1..=32`, `packed_hex` exactly `⌈len·bits / 8⌉`
-/// bytes, every unpacked index `< levels.len()` — and ignores unknown
-/// fields.
+/// ascending, `bits ∈ 0..=32` with `bits = 0` only for a single-level
+/// plane (and `bits = 1` still accepted there: the legacy `k = 1`
+/// encoding), `packed_hex` exactly `⌈len·bits / 8⌉` bytes, every unpacked
+/// index `< levels.len()` — and ignores unknown fields.
 pub fn packed_codebook_from_json(j: &Json) -> Result<PackedCodebook> {
     let bad = |msg: &str| Error::InvalidInput(format!("packed codebook wire: {msg}"));
     let levels: Vec<f64> = j
@@ -641,8 +647,17 @@ pub fn packed_codebook_from_json(j: &Json) -> Result<PackedCodebook> {
         .and_then(Json::as_str)
         .ok_or_else(|| bad("missing string 'packed_hex'"))?;
     let bytes = hex_decode(hex)?;
-    if !(1..=32).contains(&bits) {
-        return Err(bad(&format!("'bits' must be in 1..=32, got {bits}")));
+    if bits > 32 {
+        return Err(bad(&format!("'bits' must be in 0..=32, got {bits}")));
+    }
+    if bits == 0 && levels.len() > 1 {
+        // A 0-bit plane decodes every element to levels[0]; accepting it
+        // for a multi-level codebook would silently discard information.
+        return Err(bad(&format!(
+            "'bits' is 0 but there are {} levels — a zero-bit plane is only \
+             valid for a single-level codebook",
+            levels.len()
+        )));
     }
     let want_bytes = (len * bits as usize).div_ceil(8);
     if bytes.len() != want_bytes {
@@ -971,13 +986,21 @@ mod tests {
             "unsorted levels"
         );
         assert!(
-            bad(r#"{"levels":[1.0],"bits":0,"len":0,"packed_hex":""}"#).is_err(),
-            "bits out of range"
-        );
-        assert!(
             bad(r#"{"levels":[1.0],"bits":33,"len":0,"packed_hex":""}"#).is_err(),
             "bits too wide"
         );
+        assert!(
+            bad(r#"{"levels":[1.0,2.0],"bits":0,"len":4,"packed_hex":""}"#).is_err(),
+            "zero-bit plane is only valid for a single level"
+        );
+        // The k=1 degenerate plane: bits=0 with no payload bytes parses
+        // (the modern encoding), as does the legacy 1-bit form.
+        let zero = bad(r#"{"levels":[1.5],"bits":0,"len":4,"packed_hex":""}"#).unwrap();
+        assert_eq!(zero.decode(), vec![1.5; 4]);
+        assert_eq!(zero.bits_per_index(), 0);
+        let legacy = bad(r#"{"levels":[1.5],"bits":1,"len":4,"packed_hex":"00"}"#).unwrap();
+        assert_eq!(legacy.decode(), vec![1.5; 4]);
+        assert_eq!(legacy.bits_per_index(), 1, "legacy width preserved as parsed");
         assert!(
             bad(r#"{"levels":[1.0],"bits":1,"len":9,"packed_hex":"00"}"#).is_err(),
             "plane too short"

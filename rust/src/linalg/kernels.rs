@@ -292,13 +292,32 @@ pub fn bits_per_index_for(k: usize) -> u32 {
     (usize::BITS - (k - 1).leading_zeros()).max(1)
 }
 
-/// Pack `bits`-wide indices (1 ≤ bits ≤ 32) into a tight little-endian
+/// Packed-plane bits per index for a `k`-level codebook: `⌈log₂ k⌉`, and
+/// **zero** when `k ≤ 1`. A single-level plane carries no information —
+/// every index is 0 — so its packed form needs no index bits at all;
+/// [`bits_per_index_for`]'s minimum of one bit is a dense-form
+/// convention, and using it for packed accounting overreported constant
+/// groups by one bit per element.
+#[inline]
+pub fn packed_bits_for(k: usize) -> u32 {
+    if k <= 1 {
+        0
+    } else {
+        usize::BITS - (k - 1).leading_zeros()
+    }
+}
+
+/// Pack `bits`-wide indices (0 ≤ bits ≤ 32) into a tight little-endian
 /// `u64` plane: index `i` occupies bits `[i·bits, (i+1)·bits)` counted
 /// LSB-first, straddling word boundaries. Values wider than `bits` are
 /// masked (callers derive `bits` from `k`, so in-range indices are
-/// unchanged).
+/// unchanged). `bits = 0` is the degenerate single-level plane: no words
+/// at all ([`packed_bits_for`]).
 pub fn pack_indices(indices: &[u32], bits: u32) -> Vec<u64> {
-    assert!((1..=32).contains(&bits), "pack_indices: bits must be in 1..=32, got {bits}");
+    assert!(bits <= 32, "pack_indices: bits must be in 0..=32, got {bits}");
+    if bits == 0 {
+        return Vec::new();
+    }
     let bits = bits as usize;
     let mask = (1u64 << bits) - 1;
     let total_bits = indices.len() * bits;
@@ -318,9 +337,13 @@ pub fn pack_indices(indices: &[u32], bits: u32) -> Vec<u64> {
 }
 
 /// Unpack `len` `bits`-wide indices from a plane produced by
-/// [`pack_indices`]. Exact inverse for in-range indices.
+/// [`pack_indices`]. Exact inverse for in-range indices; a `bits = 0`
+/// plane unpacks to `len` zeros (every element maps to the single level).
 pub fn unpack_indices(words: &[u64], bits: u32, len: usize) -> Vec<u32> {
-    assert!((1..=32).contains(&bits), "unpack_indices: bits must be in 1..=32, got {bits}");
+    assert!(bits <= 32, "unpack_indices: bits must be in 0..=32, got {bits}");
+    if bits == 0 {
+        return vec![0; len];
+    }
     let bits = bits as usize;
     let mask = (1u64 << bits) - 1;
     debug_assert!(
@@ -358,9 +381,10 @@ pub struct PackedIter<'a> {
 }
 
 impl<'a> PackedIter<'a> {
-    /// Cursor over the first `len` `bits`-wide indices of `words`.
+    /// Cursor over the first `len` `bits`-wide indices of `words`. A
+    /// `bits = 0` plane (single-level codebook) yields `len` zeros.
     pub fn new(words: &'a [u64], bits: u32, len: usize) -> PackedIter<'a> {
-        assert!((1..=32).contains(&bits), "PackedIter: bits must be in 1..=32, got {bits}");
+        assert!(bits <= 32, "PackedIter: bits must be in 0..=32, got {bits}");
         debug_assert!(
             words.len() * 64 >= len * bits as usize,
             "PackedIter: plane too short for {len} × {bits}-bit indices"
@@ -368,7 +392,7 @@ impl<'a> PackedIter<'a> {
         PackedIter {
             words,
             bits: bits as usize,
-            mask: (1u64 << bits) - 1,
+            mask: if bits == 0 { 0 } else { (1u64 << bits) - 1 },
             bitpos: 0,
             remaining: len,
         }
@@ -384,6 +408,9 @@ impl Iterator for PackedIter<'_> {
             return None;
         }
         self.remaining -= 1;
+        if self.bits == 0 {
+            return Some(0);
+        }
         let w = self.bitpos / 64;
         let off = self.bitpos % 64;
         let mut v = self.words[w] >> off;
@@ -621,6 +648,33 @@ mod tests {
         assert_eq!(bits_per_index_for(256), 8);
         assert_eq!(bits_per_index_for(257), 9);
         assert_eq!(bits_per_index_for(65536), 16);
+    }
+
+    #[test]
+    fn packed_bits_for_is_zero_at_k1_then_tracks_ceil_log2() {
+        // The honest packed width: a constant group needs no index bits.
+        assert_eq!(packed_bits_for(0), 0);
+        assert_eq!(packed_bits_for(1), 0);
+        assert_eq!(packed_bits_for(2), 1);
+        assert_eq!(packed_bits_for(3), 2);
+        assert_eq!(packed_bits_for(256), 8);
+        assert_eq!(packed_bits_for(257), 9);
+        for k in 2..=1024 {
+            assert_eq!(packed_bits_for(k), bits_per_index_for(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn zero_bit_plane_packs_to_nothing_and_unpacks_to_zeros() {
+        // k = 1 degenerate plane: no words stored, every index reads 0.
+        let words = pack_indices(&[0u32; 9], 0);
+        assert!(words.is_empty());
+        assert_eq!(unpack_indices(&words, 0, 9), vec![0u32; 9]);
+        let streamed: Vec<u32> = PackedIter::new(&words, 0, 9).collect();
+        assert_eq!(streamed, vec![0u32; 9]);
+        // Non-zero inputs are masked away, mirroring the bits>0 contract.
+        assert!(pack_indices(&[3u32, 1], 0).is_empty());
+        assert_eq!(unpack_indices(&[], 0, 0), Vec::<u32>::new());
     }
 
     #[test]

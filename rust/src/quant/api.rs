@@ -100,7 +100,8 @@ use crate::linalg::kernels;
 use crate::linalg::matrix::Matrix;
 use crate::linalg::scalar::Scalar;
 use crate::{Error, Result};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
@@ -628,15 +629,44 @@ impl QuantResponse {
 // ---------------------------------------------------------------------
 
 /// The quantization facade: one [`Quantizer::run`] for every request
-/// shape. Stateless today (the prepared-input and workspace reuse live
-/// per-run); constructed once and shared freely.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct Quantizer;
+/// shape. [`Quantizer::new`] is the historical stateless facade (the
+/// prepared-input and workspace reuse live per-run); [`Quantizer::caching`]
+/// adds bounded cross-run memos keyed by content [`Fingerprint`] —
+/// repeated vectors skip the prepare stage and warm λ sweeps extending a
+/// previously solved grid resume from the last solved point. Either way
+/// the facade is constructed once and shared freely (clones share memos).
+#[derive(Debug, Clone, Default)]
+pub struct Quantizer {
+    /// Cross-run memo tables ([`Quantizer::caching`]); `None` — the
+    /// default — is the stateless facade.
+    memo: Option<Arc<Mutex<QuantizerMemo>>>,
+}
 
 impl Quantizer {
-    /// A new facade.
+    /// A new stateless facade.
     pub fn new() -> Quantizer {
-        Quantizer
+        Quantizer { memo: None }
+    }
+
+    /// A memoizing facade: repeated single-vector requests skip the
+    /// sort/decomposition (the [`PreparedInput`] memo, keyed by the input
+    /// bytes + lane), and a warm λ sweep whose grid extends a previously
+    /// solved one resumes the chain from the nearest (last) solved point
+    /// instead of re-solving the shared prefix — a grid that is a prefix
+    /// of a solved chain replays entirely from the memo without solving.
+    ///
+    /// Results are **bitwise-identical** to the stateless facade: memo
+    /// keys are full content fingerprints verified bit-for-bit on every
+    /// hit (a hash collision degrades to a miss), and the resumed chain
+    /// state is exactly what the full-grid warm sweep would have carried
+    /// ([`SweepState::resume`]). Memoization covers single-vector one-shot
+    /// / target-count / warm-sweep plans on both lanes; batch, matrix,
+    /// cold-sweep and cascade plans run stateless. Each memo table is LRU
+    /// bounded to `max_entries`.
+    pub fn caching(max_entries: usize) -> Quantizer {
+        Quantizer {
+            memo: Some(Arc::new(Mutex::new(QuantizerMemo::new(max_entries.max(1))))),
+        }
     }
 
     /// Serve one request. Returns `Err` only for request-shape errors
@@ -650,6 +680,35 @@ impl Quantizer {
         let opts = req.effective_options();
         match (&req.input, &req.plan) {
             (RequestInput::VectorF64(w), Plan::Sweep { lambdas, warm_start }) => {
+                if let (Some(memo), true) = (&self.memo, *warm_start) {
+                    let items: Vec<Result<Item>> = match opts.precision {
+                        Precision::F64 => sweep_memo_lane::<f64>(
+                            memo,
+                            Arc::clone(w),
+                            req.method,
+                            lambdas,
+                            &opts,
+                            req.output,
+                            Duration::ZERO,
+                        )?
+                        .into_iter()
+                        .map(|i| Ok(Item::F64(i)))
+                        .collect(),
+                        Precision::F32 => {
+                            let t0 = Instant::now();
+                            let narrow: Arc<[f32]> =
+                                w.iter().map(|&x| x as f32).collect::<Vec<f32>>().into();
+                            let narrowing = t0.elapsed();
+                            sweep_memo_lane::<f32>(
+                                memo, narrow, req.method, lambdas, &opts, req.output, narrowing,
+                            )?
+                            .into_iter()
+                            .map(|i| Ok(Item::F32(i)))
+                            .collect()
+                        }
+                    };
+                    return Ok(QuantResponse::from_items(items));
+                }
                 let items = sweep_shared_f64(
                     Arc::clone(w),
                     req.method,
@@ -661,6 +720,20 @@ impl Quantizer {
                 Ok(QuantResponse::from_items(items.into_iter().map(Ok).collect()))
             }
             (RequestInput::VectorF32(w), Plan::Sweep { lambdas, warm_start }) => {
+                if let (Some(memo), true) = (&self.memo, *warm_start) {
+                    let items = sweep_memo_lane::<f32>(
+                        memo,
+                        Arc::clone(w),
+                        req.method,
+                        lambdas,
+                        &opts,
+                        req.output,
+                        Duration::ZERO,
+                    )?;
+                    return Ok(QuantResponse::from_items(
+                        items.into_iter().map(|i| Ok(Item::F32(i))).collect(),
+                    ));
+                }
                 let t0 = Instant::now();
                 let prep = PreparedInput::from_shared(Arc::clone(w))?;
                 let prepare = t0.elapsed();
@@ -786,10 +859,10 @@ impl Quantizer {
                 Ok(QuantResponse::from_items(flatten_cascade(per)))
             }
             (RequestInput::VectorF64(w), _) => Ok(QuantResponse::from_items(vec![
-                run_shared_f64(Arc::clone(w), req.method, &opts, req.output),
+                self.run_vec_f64(Arc::clone(w), req.method, &opts, req.output),
             ])),
             (RequestInput::VectorF32(w), _) => Ok(QuantResponse::from_items(vec![
-                run_shared_f32(Arc::clone(w), req.method, &opts, req.output).map(Item::F32),
+                self.run_vec_f32(Arc::clone(w), req.method, &opts, req.output).map(Item::F32),
             ])),
             (RequestInput::BatchF64(inputs), _) => Ok(QuantResponse::from_items(
                 batch_core_f64(inputs, req.method, &opts, req.output),
@@ -805,12 +878,580 @@ impl Quantizer {
             }
         }
     }
+
+    /// One-shot single f64-surface vector, consulting the prepare memo
+    /// when this facade is caching. The memo only short-circuits the
+    /// prepare stage, so results match [`run_shared_f64`] bitwise.
+    fn run_vec_f64(
+        &self,
+        w: Arc<[f64]>,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        form: OutputForm,
+    ) -> Result<Item> {
+        let Some(memo) = &self.memo else {
+            return run_shared_f64(w, method, opts, form);
+        };
+        match opts.precision {
+            Precision::F64 => {
+                let t0 = Instant::now();
+                let prep = memo_prep::<f64>(memo, &w)?;
+                let prepare = t0.elapsed();
+                run_prepared_core(&prep, method, opts, form, prepare).map(Item::F64)
+            }
+            Precision::F32 => {
+                let t0 = Instant::now();
+                let narrow: Arc<[f32]> = w.iter().map(|&x| x as f32).collect::<Vec<f32>>().into();
+                let prep = memo_prep::<f32>(memo, &narrow)?;
+                let prepare = t0.elapsed();
+                run_prepared_core(&prep, method, opts, form, prepare).map(Item::F32)
+            }
+        }
+    }
+
+    /// One-shot single f32 payload (native narrow lane), consulting the
+    /// prepare memo when this facade is caching.
+    fn run_vec_f32(
+        &self,
+        w: Arc<[f32]>,
+        method: QuantMethod,
+        opts: &QuantOptions,
+        form: OutputForm,
+    ) -> Result<QuantItem<f32>> {
+        let Some(memo) = &self.memo else {
+            return run_shared_f32(w, method, opts, form);
+        };
+        let t0 = Instant::now();
+        let prep = memo_prep::<f32>(memo, &w)?;
+        let prepare = t0.elapsed();
+        run_prepared_core(&prep, method, opts, form, prepare)
+    }
 }
 
-/// Duplicate an error for per-slot replication (the batch×sweep plan
-/// fills a failed group's K item slots with the same failure). `Error` is
-/// not `Clone` — every variant carries a `String` except `Io`, which is
-/// rebuilt from its kind + rendered message.
+// ---------------------------------------------------------------------
+// Content fingerprints — the cross-request cache key
+// ---------------------------------------------------------------------
+
+/// A 128-bit content fingerprint of `(input bytes, precision lane,
+/// method, plan, options)` — the key the coordinator's serve-path result
+/// cache and the [`Quantizer::caching`] memos dedup repeated work under.
+///
+/// Two requests share a fingerprint only when every bit that can
+/// influence the solve is identical: the payload's element bit patterns
+/// (`to_bits`, so `-0.0` ≠ `0.0` and NaN payloads never alias anything),
+/// the lane, the method id, the plan shape, and all twelve option fields.
+/// The hash is two parallel 64-bit FNV-1a streams over the same byte
+/// sequence with distinct offset bases; consumers that must be
+/// collision-proof additionally retain the full key and verify it
+/// bit-for-bit on every hit, so a collision degrades to a cache miss,
+/// never a wrong answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    hi: u64,
+    lo: u64,
+}
+
+impl Fingerprint {
+    /// Admission key for one f64 payload solved with `method` under
+    /// `opts` (the coordinator folds `Plan::TargetCount` into
+    /// `opts.target_values` before admission, so one-shot and
+    /// target-count requests that run the same solve share a key — which
+    /// is exactly the dedup the cache wants).
+    pub fn vector_f64(w: &[f64], method: QuantMethod, opts: &QuantOptions) -> Fingerprint {
+        let mut h = FpHasher::new();
+        h.elems::<f64>(w);
+        h.str(method.id());
+        h.opts(opts);
+        h.finish()
+    }
+
+    /// Admission key for one f32 payload (the native narrow lane).
+    pub fn vector_f32(w: &[f32], method: QuantMethod, opts: &QuantOptions) -> Fingerprint {
+        let mut h = FpHasher::new();
+        h.elems::<f32>(w);
+        h.str(method.id());
+        h.opts(opts);
+        h.finish()
+    }
+
+    /// Fingerprint of a full request: input bytes + lane + method +
+    /// effective options + plan. Defined for every input shape (batches
+    /// and matrices hash all their groups), so any request can be
+    /// dedup-keyed by content.
+    pub fn of_request(req: &QuantRequest) -> Fingerprint {
+        let mut h = FpHasher::new();
+        match &req.input {
+            RequestInput::VectorF64(w) => h.elems::<f64>(w),
+            RequestInput::VectorF32(w) => h.elems::<f32>(w),
+            RequestInput::BatchF64(vs) => {
+                h.byte(2);
+                h.usize(vs.len());
+                for v in vs {
+                    h.elems::<f64>(v);
+                }
+            }
+            RequestInput::BatchF32(vs) => {
+                h.byte(3);
+                h.usize(vs.len());
+                for v in vs {
+                    h.elems::<f32>(v);
+                }
+            }
+            RequestInput::Matrix(m, g) => {
+                h.byte(4);
+                h.usize(m.rows());
+                h.usize(m.cols());
+                h.elems::<f64>(m.data());
+                h.byte(match g {
+                    Grouping::PerTensor => 0,
+                    Grouping::PerRow => 1,
+                    Grouping::PerColumn => 2,
+                });
+            }
+        }
+        h.str(req.method.id());
+        h.opts(&req.effective_options());
+        match &req.plan {
+            // TargetCount folds into the effective options above, so it
+            // hashes identically to the equivalent one-shot — by design.
+            Plan::OneShot | Plan::TargetCount(_) => h.byte(0),
+            Plan::Sweep { lambdas, warm_start } => {
+                h.byte(1);
+                h.byte(u8::from(*warm_start));
+                h.elems::<f64>(lambdas);
+            }
+            Plan::Cascade { bits, norm_tol } => {
+                h.byte(2);
+                h.usize(bits.len());
+                for &b in bits {
+                    h.u64(u64::from(b));
+                }
+                h.u64(norm_tol.to_bits());
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Two parallel FNV-1a streams over one byte sequence, with distinct
+/// offset bases (the second stream also perturbs each byte) so the two
+/// 64-bit halves decorrelate.
+struct FpHasher {
+    hi: u64,
+    lo: u64,
+}
+
+impl FpHasher {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> FpHasher {
+        FpHasher { hi: 0xcbf2_9ce4_8422_2325, lo: 0x6c62_272e_07bb_0142 }
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.hi = (self.hi ^ u64::from(b)).wrapping_mul(Self::PRIME);
+        self.lo = (self.lo ^ u64::from(b ^ 0x5a)).wrapping_mul(Self::PRIME);
+    }
+
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        for &b in s.as_bytes() {
+            self.byte(b);
+        }
+    }
+
+    /// Lane tag + length + element bit patterns.
+    fn elems<T: MemoLane>(&mut self, xs: &[T]) {
+        self.byte(T::LANE_TAG);
+        self.usize(xs.len());
+        for &x in xs {
+            self.u64(T::elem_bits(x));
+        }
+    }
+
+    /// Every option field, in declaration order, bit patterns for floats.
+    fn opts(&mut self, o: &QuantOptions) {
+        self.u64(o.lambda1.to_bits());
+        self.u64(o.lambda2.to_bits());
+        self.usize(o.target_values);
+        self.usize(o.max_epochs);
+        self.u64(o.tol.to_bits());
+        self.usize(o.kmeans_restarts);
+        self.usize(o.max_iters);
+        self.u64(o.seed);
+        self.byte(u8::from(o.refit));
+        self.usize(o.max_lambda_steps);
+        match o.clamp {
+            None => self.byte(0),
+            Some((lo, hi)) => {
+                self.byte(1);
+                self.u64(lo.to_bits());
+                self.u64(hi.to_bits());
+            }
+        }
+        self.byte(match o.precision {
+            Precision::F64 => 0,
+            Precision::F32 => 1,
+        });
+    }
+
+    fn finish(self) -> Fingerprint {
+        Fingerprint { hi: self.hi, lo: self.lo }
+    }
+}
+
+/// Bit-exact option equality — the cache-key comparison. `PartialEq` on
+/// floats would conflate `-0.0`/`0.0` and un-equal NaN options; keys
+/// compare bit patterns so "identical request" means identical bits.
+pub(crate) fn opts_bits_eq(a: &QuantOptions, b: &QuantOptions) -> bool {
+    a.lambda1.to_bits() == b.lambda1.to_bits()
+        && a.lambda2.to_bits() == b.lambda2.to_bits()
+        && a.target_values == b.target_values
+        && a.max_epochs == b.max_epochs
+        && a.tol.to_bits() == b.tol.to_bits()
+        && a.kmeans_restarts == b.kmeans_restarts
+        && a.max_iters == b.max_iters
+        && a.seed == b.seed
+        && a.refit == b.refit
+        && a.max_lambda_steps == b.max_lambda_steps
+        && match (a.clamp, b.clamp) {
+            (None, None) => true,
+            (Some((al, ah)), Some((bl, bh))) => {
+                al.to_bits() == bl.to_bits() && ah.to_bits() == bh.to_bits()
+            }
+            _ => false,
+        }
+        && a.precision == b.precision
+}
+
+// ---------------------------------------------------------------------
+// Quantizer memos (Quantizer::caching)
+// ---------------------------------------------------------------------
+
+/// Lane plumbing for the memo tables, which are concrete per element
+/// type: the fingerprint lane tag, element bit patterns for hashing and
+/// hit verification, and the typed slots inside the shared memo.
+pub(crate) trait MemoLane: LaneSolve {
+    /// Fingerprint lane tag (0 = f64, 1 = f32).
+    const LANE_TAG: u8;
+    /// The element's bit pattern, widened to u64.
+    fn elem_bits(x: Self) -> u64;
+    /// This lane's prepared-input memo table.
+    fn prep_slot(m: &mut QuantizerMemo) -> &mut MemoTable<PreparedInput<Self>>;
+    /// Borrow this lane's chain out of the lane-erased slot.
+    fn chain_ref(c: &SweepChain) -> Option<&SweepChainT<Self>>;
+    /// Unwrap this lane's chain out of the lane-erased slot.
+    fn unwrap_chain(c: SweepChain) -> Option<SweepChainT<Self>>;
+    /// Wrap this lane's chain into the lane-erased slot.
+    fn wrap_chain(c: SweepChainT<Self>) -> SweepChain;
+}
+
+impl MemoLane for f64 {
+    const LANE_TAG: u8 = 0;
+    fn elem_bits(x: f64) -> u64 {
+        x.to_bits()
+    }
+    fn prep_slot(m: &mut QuantizerMemo) -> &mut MemoTable<PreparedInput<f64>> {
+        &mut m.prep64
+    }
+    fn chain_ref(c: &SweepChain) -> Option<&SweepChainT<f64>> {
+        match c {
+            SweepChain::F64(c) => Some(c),
+            SweepChain::F32(_) => None,
+        }
+    }
+    fn unwrap_chain(c: SweepChain) -> Option<SweepChainT<f64>> {
+        match c {
+            SweepChain::F64(c) => Some(c),
+            SweepChain::F32(_) => None,
+        }
+    }
+    fn wrap_chain(c: SweepChainT<f64>) -> SweepChain {
+        SweepChain::F64(c)
+    }
+}
+
+impl MemoLane for f32 {
+    const LANE_TAG: u8 = 1;
+    fn elem_bits(x: f32) -> u64 {
+        u64::from(x.to_bits())
+    }
+    fn prep_slot(m: &mut QuantizerMemo) -> &mut MemoTable<PreparedInput<f32>> {
+        &mut m.prep32
+    }
+    fn chain_ref(c: &SweepChain) -> Option<&SweepChainT<f32>> {
+        match c {
+            SweepChain::F64(_) => None,
+            SweepChain::F32(c) => Some(c),
+        }
+    }
+    fn unwrap_chain(c: SweepChain) -> Option<SweepChainT<f32>> {
+        match c {
+            SweepChain::F64(_) => None,
+            SweepChain::F32(c) => Some(c),
+        }
+    }
+    fn wrap_chain(c: SweepChainT<f32>) -> SweepChain {
+        SweepChain::F32(c)
+    }
+}
+
+/// Bit-exact slice equality on a lane (the memo's hit verification).
+fn bits_eq<T: MemoLane>(a: &[T], b: &[T]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| T::elem_bits(x) == T::elem_bits(y))
+}
+
+/// Input-only fingerprint (the prepared-input memo key — the
+/// decomposition depends only on the payload bits and the lane).
+fn input_fp<T: MemoLane>(w: &[T]) -> Fingerprint {
+    let mut h = FpHasher::new();
+    h.elems::<T>(w);
+    h.finish()
+}
+
+/// Chain-table key: input + method + base options with λ₁ canonicalized
+/// to zero (the grid overrides it per point, so the base value is inert),
+/// plus a domain separator so chain and prep keys never alias.
+fn chain_fp<T: MemoLane>(w: &[T], method: QuantMethod, canon: &QuantOptions) -> Fingerprint {
+    let mut h = FpHasher::new();
+    h.elems::<T>(w);
+    h.str(method.id());
+    h.opts(canon);
+    h.byte(0xca);
+    h.finish()
+}
+
+/// A tiny stamped LRU map: `put` beyond `max` entries evicts the least
+/// recently touched key (an O(n) scan — memo tables are small by
+/// construction).
+#[derive(Debug)]
+pub(crate) struct MemoTable<V> {
+    max: usize,
+    clock: u64,
+    map: HashMap<Fingerprint, (u64, V)>,
+}
+
+impl<V> MemoTable<V> {
+    fn new(max: usize) -> MemoTable<V> {
+        MemoTable { max, clock: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, k: Fingerprint) -> Option<&V> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(&k).map(|(stamp, v)| {
+            *stamp = clock;
+            &*v
+        })
+    }
+
+    fn take(&mut self, k: Fingerprint) -> Option<V> {
+        self.map.remove(&k).map(|(_, v)| v)
+    }
+
+    fn put(&mut self, k: Fingerprint, v: V) {
+        self.clock += 1;
+        self.map.insert(k, (self.clock, v));
+        while self.map.len() > self.max {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(&fp, _)| fp)
+                .expect("non-empty map over capacity");
+            self.map.remove(&oldest);
+        }
+    }
+}
+
+/// The caching facade's cross-run state: prepared inputs per lane and
+/// solved warm-sweep chains, each LRU-bounded.
+#[derive(Debug)]
+pub(crate) struct QuantizerMemo {
+    prep64: MemoTable<PreparedInput<f64>>,
+    prep32: MemoTable<PreparedInput<f32>>,
+    chains: MemoTable<SweepChain>,
+}
+
+impl QuantizerMemo {
+    fn new(max_entries: usize) -> QuantizerMemo {
+        QuantizerMemo {
+            prep64: MemoTable::new(max_entries),
+            prep32: MemoTable::new(max_entries),
+            chains: MemoTable::new(max_entries),
+        }
+    }
+}
+
+/// A solved warm-start λ chain, lane-erased for the shared memo table.
+#[derive(Debug)]
+pub(crate) enum SweepChain {
+    F64(SweepChainT<f64>),
+    F32(SweepChainT<f32>),
+}
+
+/// One lane's solved chain: the verified key (input + method + canonical
+/// options), the grid prefix solved so far with its compact items, and
+/// the warm-start coefficients an extension resumes from.
+#[derive(Debug)]
+pub(crate) struct SweepChainT<T: Scalar> {
+    original: Arc<[T]>,
+    method: QuantMethod,
+    /// Base options with λ₁ zeroed (the canonical chain key form).
+    opts: QuantOptions,
+    /// Solved λ grid prefix, as bit patterns in grid order.
+    lambdas: Vec<u64>,
+    /// One compact item per solved grid point (values stripped; cloned
+    /// out on reuse and re-formed per request).
+    items: Vec<QuantItem<T>>,
+    /// Chain state after the last solved point (both lane slots — the f32
+    /// lane's CD solvers warm through `warm_alpha32`).
+    warm_alpha: Option<Vec<f64>>,
+    warm_alpha32: Option<Vec<f32>>,
+}
+
+/// Prepare `w` through the memo: a verified hit skips the
+/// sort/decomposition entirely; a miss builds and stores. Either way the
+/// returned input's contents are identical (the build is deterministic),
+/// so downstream solves are bitwise-unchanged.
+fn memo_prep<T: MemoLane>(
+    memo: &Mutex<QuantizerMemo>,
+    w: &Arc<[T]>,
+) -> Result<PreparedInput<T>> {
+    let fp = input_fp::<T>(w);
+    {
+        let mut m = memo.lock().expect("quantizer memo poisoned");
+        if let Some(prep) = T::prep_slot(&mut m).get(fp) {
+            if bits_eq::<T>(prep.original(), w) {
+                return Ok(prep.clone());
+            }
+        }
+    }
+    let prep = PreparedInput::from_shared(Arc::clone(w))?;
+    let mut m = memo.lock().expect("quantizer memo poisoned");
+    T::prep_slot(&mut m).put(fp, prep.clone());
+    Ok(prep)
+}
+
+/// Re-form a memoized compact item for the requesting output form
+/// (decode is deterministic, so eager values match what a fresh
+/// `OutputForm::Values` run would have produced).
+fn with_form<T: Scalar>(mut item: QuantItem<T>, form: OutputForm) -> QuantItem<T> {
+    item.values = match form {
+        OutputForm::Values => Some(item.codebook.decode()),
+        OutputForm::Codebook => None,
+    };
+    item
+}
+
+/// A warm λ sweep through the chain memo. Three cases, all bitwise-equal
+/// to the stateless warm sweep of the full requested grid:
+///
+/// * the requested grid is a prefix of (or equal to) a solved chain —
+///   replay the memoized items, zero solves;
+/// * a solved chain is a proper prefix of the requested grid — resume
+///   from the chain's tail state ([`SweepState::resume`]) and solve only
+///   the extension;
+/// * no usable chain — solve the full grid fresh (through the prepare
+///   memo) and remember it.
+fn sweep_memo_lane<T: MemoLane>(
+    memo: &Mutex<QuantizerMemo>,
+    w: Arc<[T]>,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    form: OutputForm,
+    narrowing: Duration,
+) -> Result<Vec<QuantItem<T>>> {
+    let canon = QuantOptions { lambda1: 0.0, ..base.clone() };
+    let key = chain_fp::<T>(&w, method, &canon);
+    let grid: Vec<u64> = lambdas.iter().map(|l| l.to_bits()).collect();
+
+    // Probe under the lock: a covering chain answers immediately with
+    // zero solves; a proper prefix is taken out so its items and α move
+    // into the continuation; anything else (different grid head, failed
+    // verification) is a miss and gets replaced below.
+    enum Probe {
+        Cover(usize),
+        Extend,
+        Miss,
+    }
+    let resumed: Option<SweepChainT<T>> = {
+        let mut m = memo.lock().expect("quantizer memo poisoned");
+        let probe = match m.chains.get(key).and_then(T::chain_ref) {
+            Some(c)
+                if bits_eq::<T>(&c.original, &w)
+                    && c.method == method
+                    && opts_bits_eq(&c.opts, &canon) =>
+            {
+                if c.lambdas.len() >= grid.len() && c.lambdas[..grid.len()] == grid[..] {
+                    Probe::Cover(grid.len())
+                } else if c.lambdas.len() < grid.len()
+                    && grid[..c.lambdas.len()] == c.lambdas[..]
+                {
+                    Probe::Extend
+                } else {
+                    Probe::Miss
+                }
+            }
+            _ => Probe::Miss,
+        };
+        match probe {
+            Probe::Cover(k) => {
+                let c = m.chains.get(key).and_then(T::chain_ref).expect("probed above");
+                return Ok(c.items[..k].iter().map(|i| with_form(i.clone(), form)).collect());
+            }
+            Probe::Extend => m.chains.take(key).and_then(T::unwrap_chain),
+            Probe::Miss => None,
+        }
+    };
+
+    let (mut items, mut state, solved) = match resumed {
+        Some(chain) => {
+            let state = SweepState::resume(chain.warm_alpha, chain.warm_alpha32);
+            (chain.items, state, chain.lambdas.len())
+        }
+        None => (Vec::new(), SweepState::default(), 0),
+    };
+    let t0 = Instant::now();
+    let prep = memo_prep::<T>(memo, &w)?;
+    let prepare = narrowing + t0.elapsed();
+    sweep_steps(
+        &prep,
+        method,
+        &lambdas[solved..],
+        base,
+        true,
+        OutputForm::Codebook,
+        prepare,
+        &mut state,
+        &mut items,
+    )?;
+    // Remember the extended chain (tail α included) for the next
+    // extension, then shape the response for this request's output form.
+    let (warm_alpha, warm_alpha32) = state.into_warm();
+    let chain = SweepChainT {
+        original: Arc::clone(&w),
+        method,
+        opts: canon,
+        lambdas: grid,
+        items: items.clone(),
+        warm_alpha,
+        warm_alpha32,
+    };
+    memo.lock().expect("quantizer memo poisoned").chains.put(key, T::wrap_chain(chain));
+    Ok(items.into_iter().map(|i| with_form(i, form)).collect())
+}
 fn replicate_err(e: &Error) -> Error {
     match e {
         Error::InvalidInput(m) => Error::InvalidInput(m.clone()),
@@ -895,6 +1536,13 @@ pub(crate) fn finish_compact_parts<T: Scalar>(
             }
         }
     }
+    // A NaN level would panic the `partial_cmp().unwrap()` sort/search
+    // below (the same class of bug `Codebook::from_values` guards
+    // against); surface it as an error instead — the clamp above never
+    // moves a NaN (both range comparisons are false), so scan after it.
+    if lv.iter().any(|v| v.partial_cmp(v).is_none()) {
+        return Err(Error::InvalidInput("finish: NaN level value".into()));
+    }
     // Sorted distinct levels — the same construction the legacy finalize
     // uses, so the level table is identical.
     let mut levels = lv.clone();
@@ -958,14 +1606,37 @@ pub(crate) fn sweep_prepared_core<T: LaneSolve>(
     form: OutputForm,
     prepare: Duration,
 ) -> Result<Vec<QuantItem<T>>> {
-    let solver = solver_for(method);
     let mut state = SweepState::default();
     let mut items = Vec::with_capacity(lambdas.len());
-    for (i, &lambda) in lambdas.iter().enumerate() {
+    sweep_steps(prep, method, lambdas, base, warm_start, form, prepare, &mut state, &mut items)?;
+    Ok(items)
+}
+
+/// The λ-step loop over an explicit `(state, items)` pair, so callers can
+/// *resume* a previously solved chain ([`SweepState::resume`] — the
+/// memoizing facade's λ-grid extension) as well as start one cold. The
+/// chain state entering each step depends only on the preceding grid
+/// points, so a resumed extension is bitwise-identical to re-running the
+/// full grid warm. `prepare` is attributed to the first item pushed when
+/// `items` starts empty (i.e. only on a fresh chain).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_steps<T: LaneSolve>(
+    prep: &PreparedInput<T>,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+    form: OutputForm,
+    prepare: Duration,
+    state: &mut SweepState,
+    items: &mut Vec<QuantItem<T>>,
+) -> Result<()> {
+    let solver = solver_for(method);
+    for &lambda in lambdas {
         let opts = QuantOptions { lambda1: lambda, ..base.clone() };
         let t = Instant::now();
         let (lv, diag) = if warm_start {
-            T::lane_solve_path_step(solver, prep, &opts, &mut state)?
+            T::lane_solve_path_step(solver, prep, &opts, state)?
         } else {
             T::lane_solve(solver, prep, &opts)?
         };
@@ -974,12 +1645,12 @@ pub(crate) fn sweep_prepared_core<T: LaneSolve>(
             item.values = Some(item.codebook.decode());
         }
         item.timings = StageTimings {
-            prepare: if i == 0 { prepare } else { Duration::ZERO },
+            prepare: if items.is_empty() { prepare } else { Duration::ZERO },
             solve: t.elapsed(),
         };
         items.push(item);
     }
-    Ok(items)
+    Ok(())
 }
 
 /// Single-vector core on the f64 surface: honors `opts.precision` (the
@@ -1585,6 +2256,187 @@ mod tests {
         let resp = Quantizer::new().run(&req).unwrap();
         for item in resp.items.iter().flatten() {
             assert_eq!(item.precision(), Precision::F32);
+        }
+    }
+
+    #[test]
+    fn finish_compact_nan_level_is_an_error_not_a_panic_both_lanes() {
+        // Regression: a NaN level value used to panic the
+        // `partial_cmp().unwrap()` sort inside the compact finalize.
+        let data = clustered(50, 60);
+        let prep = PreparedInput::new(&data).unwrap();
+        let mut lv = vec![0.5f64; prep.m()];
+        lv[prep.m() / 2] = f64::NAN;
+        match finish_compact(&prep, &lv, None, QuantDiag::default()) {
+            Err(Error::InvalidInput(_)) => {}
+            other => panic!("expected InvalidInput for NaN level, got {other:?}"),
+        }
+        // Clamping must not mask the NaN (comparisons against it are false).
+        assert!(finish_compact(&prep, &lv, Some((0.0, 1.0)), QuantDiag::default()).is_err());
+
+        let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+        let prep32 = PreparedInput::new(&data32).unwrap();
+        let mut lv32 = vec![0.5f32; prep32.m()];
+        lv32[0] = f32::NAN;
+        match finish_compact(&prep32, &lv32, None, QuantDiag::default()) {
+            Err(Error::InvalidInput(_)) => {}
+            other => panic!("expected InvalidInput for f32 NaN level, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fingerprint_changes_with_every_key_component() {
+        let w = clustered(20, 61);
+        let opts = QuantOptions::default();
+        let base = Fingerprint::vector_f64(&w, QuantMethod::L1LeastSquare, &opts);
+        // Deterministic: same bytes, same key.
+        assert_eq!(base, Fingerprint::vector_f64(&w, QuantMethod::L1LeastSquare, &opts));
+        let mut seen = vec![base];
+        let mut check = |fp: Fingerprint| {
+            assert!(!seen.contains(&fp), "distinct keys collided");
+            seen.push(fp);
+        };
+        // Payload bits, method, and lane each perturb the key.
+        let mut w2 = w.clone();
+        w2[0] = -w2[0];
+        check(Fingerprint::vector_f64(&w2, QuantMethod::L1LeastSquare, &opts));
+        check(Fingerprint::vector_f64(&w, QuantMethod::KMeans, &opts));
+        let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        check(Fingerprint::vector_f32(&w32, QuantMethod::L1LeastSquare, &opts));
+        // Every option field perturbs both the key and the bit-exact
+        // comparison the cache verifies hits with.
+        for o in [
+            QuantOptions { lambda1: 0.5, ..opts.clone() },
+            QuantOptions { lambda2: 0.5, ..opts.clone() },
+            QuantOptions { target_values: 7, ..opts.clone() },
+            QuantOptions { max_epochs: 7, ..opts.clone() },
+            QuantOptions { tol: 0.5, ..opts.clone() },
+            QuantOptions { kmeans_restarts: 3, ..opts.clone() },
+            QuantOptions { max_iters: 7, ..opts.clone() },
+            QuantOptions { seed: 9, ..opts.clone() },
+            QuantOptions { refit: false, ..opts.clone() },
+            QuantOptions { max_lambda_steps: 7, ..opts.clone() },
+            QuantOptions { clamp: Some((0.0, 1.0)), ..opts.clone() },
+            QuantOptions { precision: Precision::F32, ..opts.clone() },
+        ] {
+            check(Fingerprint::vector_f64(&w, QuantMethod::L1LeastSquare, &o));
+            assert!(!opts_bits_eq(&o, &opts));
+        }
+        assert!(opts_bits_eq(&opts, &opts.clone()));
+        // Plans separate through the request key; a target-count request
+        // aliases the one-shot that runs the same solve — by design.
+        let one = Fingerprint::of_request(&QuantRequest::vector(w.clone()));
+        let tc = Fingerprint::of_request(&QuantRequest::vector(w.clone()).target_count(16));
+        assert_eq!(one, tc);
+        check(one);
+        check(Fingerprint::of_request(
+            &QuantRequest::vector(w.clone()).sweep(vec![1e-3, 1e-2]),
+        ));
+        check(Fingerprint::of_request(
+            &QuantRequest::vector(w.clone()).sweep(vec![1e-3, 1e-1]),
+        ));
+        check(Fingerprint::of_request(
+            &QuantRequest::vector(w.clone()).residual_levels(vec![2, 2], 0.0),
+        ));
+    }
+
+    fn assert_f64_bitwise(got: &Item, want: &Item, tag: &str) {
+        let (g, w) = (got.as_f64().unwrap(), want.as_f64().unwrap());
+        let bits = |q: &QuantItem<f64>| -> Vec<u64> {
+            q.codebook.levels.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(g), bits(w), "{tag}: levels");
+        assert_eq!(g.codebook.indices, w.codebook.indices, "{tag}: indices");
+        assert_eq!(g.l2_loss.to_bits(), w.l2_loss.to_bits(), "{tag}: loss");
+        assert_eq!(g.clamped, w.clamped, "{tag}: clamp count");
+    }
+
+    #[test]
+    fn caching_facade_one_shot_hits_match_stateless_bitwise() {
+        let q = Quantizer::caching(8);
+        for method in [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::ClusterLs] {
+            let data = clustered(60, 62);
+            let mk = || {
+                QuantRequest::vector(data.clone()).method(method).options(QuantOptions {
+                    lambda1: 0.02,
+                    target_values: 4,
+                    ..Default::default()
+                })
+            };
+            let want = Quantizer::new().run(&mk()).unwrap().into_single().unwrap();
+            let cold = q.run(&mk()).unwrap().into_single().unwrap();
+            let warm = q.run(&mk()).unwrap().into_single().unwrap();
+            assert_f64_bitwise(&cold, &want, "cold");
+            assert_f64_bitwise(&warm, &want, "prep-memo hit");
+        }
+        // f32 payloads ride the narrow-lane memo.
+        let data32: Vec<f32> = clustered(50, 63).iter().map(|&x| x as f32).collect();
+        let req32 = || QuantRequest::vector_f32(data32.clone()).lambda1(0.02);
+        let want32 = Quantizer::new().run(&req32()).unwrap().into_single().unwrap();
+        q.run(&req32()).unwrap();
+        let warm32 = q.run(&req32()).unwrap().into_single().unwrap();
+        let (g, w) = (warm32.as_f32().unwrap(), want32.as_f32().unwrap());
+        assert_eq!(
+            g.codebook.levels.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            w.codebook.levels.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        assert_eq!(g.codebook.indices, w.codebook.indices);
+        assert_eq!(g.l2_loss.to_bits(), w.l2_loss.to_bits());
+    }
+
+    #[test]
+    fn caching_facade_sweep_extension_matches_cold_full_grid() {
+        let data = clustered(60, 64);
+        let grid = [1e-4, 1e-3, 1e-2, 5e-2, 1e-1];
+        let q = Quantizer::caching(8);
+        let sweep =
+            |ls: &[f64]| QuantRequest::vector(data.clone()).method(QuantMethod::L1).sweep(ls.to_vec());
+        // Solve a prefix, then extend the grid: only the new points are
+        // solved, and the full response must be bitwise what a cold warm
+        // sweep of the whole grid produces.
+        q.run(&sweep(&grid[..2])).unwrap();
+        let extended = q.run(&sweep(&grid)).unwrap();
+        let cold = Quantizer::new().run(&sweep(&grid)).unwrap();
+        assert_eq!(extended.len(), cold.len());
+        for (i, (g, w)) in extended.items.iter().zip(&cold.items).enumerate() {
+            assert_f64_bitwise(g.as_ref().unwrap(), w.as_ref().unwrap(), &format!("extend λ#{i}"));
+        }
+        // A replay covered by the solved chain does zero solves and stays
+        // bitwise-identical, including eager-values re-forming.
+        let replay = q.run(&sweep(&grid[..3]).with_values()).unwrap();
+        let cold_vals = Quantizer::new().run(&sweep(&grid[..3]).with_values()).unwrap();
+        for (i, (g, w)) in replay.items.iter().zip(&cold_vals.items).enumerate() {
+            let (g, w) = (g.as_ref().unwrap(), w.as_ref().unwrap());
+            assert_f64_bitwise(g, w, &format!("replay λ#{i}"));
+            assert_eq!(
+                g.as_f64().unwrap().values(),
+                w.as_f64().unwrap().values(),
+                "replay λ#{i}: eager values"
+            );
+        }
+        // A grid with a different head is a miss, never a wrong answer.
+        let other = [2e-3, 1e-2];
+        let fresh = q.run(&sweep(&other)).unwrap();
+        let want = Quantizer::new().run(&sweep(&other)).unwrap();
+        for (i, (g, w)) in fresh.items.iter().zip(&want.items).enumerate() {
+            assert_f64_bitwise(g.as_ref().unwrap(), w.as_ref().unwrap(), &format!("miss λ#{i}"));
+        }
+    }
+
+    #[test]
+    fn caching_facade_eviction_churn_stays_correct() {
+        // Capacity 1: every alternating request evicts the other's entries;
+        // correctness must never depend on what the memo still holds.
+        let q = Quantizer::caching(1);
+        let (a, b) = (clustered(40, 65), clustered(40, 66));
+        let mk = |d: &[f64]| QuantRequest::vector(d.to_vec()).lambda1(0.02);
+        let want_a = Quantizer::new().run(&mk(&a)).unwrap().into_single().unwrap();
+        let want_b = Quantizer::new().run(&mk(&b)).unwrap().into_single().unwrap();
+        for round in 0..3 {
+            let ga = q.run(&mk(&a)).unwrap().into_single().unwrap();
+            let gb = q.run(&mk(&b)).unwrap().into_single().unwrap();
+            assert_f64_bitwise(&ga, &want_a, &format!("churn a#{round}"));
+            assert_f64_bitwise(&gb, &want_b, &format!("churn b#{round}"));
         }
     }
 }

@@ -96,10 +96,12 @@ impl<T: Scalar> Codebook<T> {
         kernels::bits_per_index_for(self.k())
     }
 
-    /// Total compressed bytes: fixed-width indices + the codebook stored
-    /// as f32 (the Deep-Compression wire convention, on both lanes).
+    /// Total compressed bytes: fixed-width indices at the packed width
+    /// ([`kernels::packed_bits_for`] — a single-level codebook pays zero
+    /// index bits, since every index is 0) + the codebook stored as f32
+    /// (the Deep-Compression wire convention, on both lanes).
     pub fn compressed_bytes(&self) -> usize {
-        let idx_bits = self.indices.len() * self.bits_per_index() as usize;
+        let idx_bits = self.indices.len() * kernels::packed_bits_for(self.k()) as usize;
         idx_bits.div_ceil(8) + self.k() * 4
     }
 
@@ -152,11 +154,13 @@ impl Codebook<f32> {
 }
 
 /// A tightly bit-packed index plane: `len` indices of `bits` bits each
-/// (`bits = ⌈log₂ k⌉`, 1..=32), laid out LSB-first in little-endian `u64`
-/// words, straddling word boundaries — index `i` occupies bits
-/// `[i·bits, (i+1)·bits)` of the plane. The storage actually *is* the
-/// packed width, so compression accounting over it is honest rather than
-/// hypothetical (`CompressionStats::bits_per_idx_stored` equals
+/// (`bits = ⌈log₂ k⌉`, 0..=32 — a single-level plane is the degenerate
+/// `bits = 0` case storing no words at all), laid out LSB-first in
+/// little-endian `u64` words, straddling word boundaries — index `i`
+/// occupies bits `[i·bits, (i+1)·bits)` of the plane. The storage
+/// actually *is* the packed width, so compression accounting over it is
+/// honest rather than hypothetical
+/// (`CompressionStats::bits_per_idx_stored` equals
 /// `bits_per_idx_packed`). Packing/unpacking run on the
 /// [`crate::linalg::kernels`] bit-plane kernels.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -168,11 +172,12 @@ pub struct PackedIndices {
 
 impl PackedIndices {
     /// Pack an index stream for a `k`-level codebook
-    /// (`bits = ⌈log₂ k⌉`, minimum 1). All indices must be `< k`, which
-    /// holds by construction for any [`Codebook`]; wider values would be
-    /// truncated by the bit mask, so this debug-asserts the range.
+    /// (`bits = ⌈log₂ k⌉`; `k ≤ 1` packs to the zero-bit degenerate
+    /// plane). All indices must be `< k`, which holds by construction for
+    /// any [`Codebook`]; wider values would be truncated by the bit mask,
+    /// so this debug-asserts the range.
     pub fn pack(indices: &[u32], k: usize) -> PackedIndices {
-        let bits = kernels::bits_per_index_for(k);
+        let bits = kernels::packed_bits_for(k);
         debug_assert!(
             indices.iter().all(|&i| (i as usize) < k.max(1)),
             "PackedIndices::pack: index out of range for k={k}"
@@ -181,12 +186,12 @@ impl PackedIndices {
     }
 
     /// Rebuild a plane from raw parts (the jsonio decode path), validating
-    /// shape: `bits ∈ 1..=32` and the word count exactly matches `len`
-    /// indices of `bits` bits.
+    /// shape: `bits ∈ 0..=32` (0 is the single-level degenerate plane) and
+    /// the word count exactly matches `len` indices of `bits` bits.
     pub fn from_raw(words: Vec<u64>, bits: u32, len: usize) -> Result<PackedIndices> {
-        if !(1..=32).contains(&bits) {
+        if bits > 32 {
             return Err(Error::InvalidInput(format!(
-                "packed indices: bits must be in 1..=32, got {bits}"
+                "packed indices: bits must be in 0..=32, got {bits}"
             )));
         }
         let want_words = (len * bits as usize).div_ceil(64);
@@ -205,9 +210,13 @@ impl PackedIndices {
         kernels::unpack_indices(&self.words, self.bits, self.len)
     }
 
-    /// The index at position `i` (random access without unpacking).
+    /// The index at position `i` (random access without unpacking). On a
+    /// zero-bit plane every position reads 0.
     pub fn get(&self, i: usize) -> u32 {
         assert!(i < self.len, "PackedIndices::get: {i} out of range (len {})", self.len);
+        if self.bits == 0 {
+            return 0;
+        }
         let bits = self.bits as usize;
         let bitpos = i * bits;
         let (w, off) = (bitpos / 64, bitpos % 64);
@@ -340,16 +349,21 @@ pub struct CompressionStats {
     /// Levels the request asked for (`QuantOptions::target_values`; for
     /// λ-driven methods this is the standing option, not a constraint).
     pub levels_requested: usize,
-    /// Fixed-width bits per index, `⌈log₂ k⌉` (minimum 1). Equal to
-    /// [`CompressionStats::bits_per_idx_packed`]; kept under its
-    /// historical name because the jsonio wire spec is normative.
+    /// Fixed-width bits per index, `⌈log₂ k⌉` (minimum 1 — the dense-form
+    /// convention). Equal to [`CompressionStats::bits_per_idx_packed`]
+    /// for every multi-level codebook; a single-level (`k = 1`) codebook
+    /// keeps the 1-bit minimum here while the packed accounting honestly
+    /// reports 0. Kept under its historical name because the jsonio wire
+    /// spec is normative.
     pub bits_per_index: u32,
     /// Bits per index as actually stored by the representation the stats
     /// were taken from: 32 for a dense [`Codebook`] (`Vec<u32>` plane),
-    /// `⌈log₂ k⌉` for a [`PackedCodebook`].
+    /// `⌈log₂ k⌉` (0 at `k = 1`) for a [`PackedCodebook`].
     pub bits_per_idx_stored: u32,
     /// Bits per index after ⌈log₂ k⌉-bit packing — what the compact wire
-    /// form pays per index regardless of in-memory storage.
+    /// form pays per index regardless of in-memory storage. Zero for a
+    /// single-level codebook: a constant group needs no index bits
+    /// ([`crate::linalg::kernels::packed_bits_for`]).
     pub bits_per_idx_packed: u32,
     /// Total compact bits (indices + codebook) amortized per element —
     /// the headline "bits/value" number.
@@ -483,9 +497,10 @@ impl<T: Scalar> Codebook<T> {
             levels_requested,
             bits_per_index: self.bits_per_index(),
             // The dense codebook stores its plane as Vec<u32>; only the
-            // packed representation actually pays ⌈log₂ k⌉.
+            // packed representation actually pays ⌈log₂ k⌉ — and a
+            // single-level codebook pays nothing at all.
             bits_per_idx_stored: 32,
-            bits_per_idx_packed: self.bits_per_index(),
+            bits_per_idx_packed: kernels::packed_bits_for(self.k()),
             bits_per_value: if self.is_empty() {
                 0.0
             } else {
@@ -696,7 +711,9 @@ mod tests {
             let values: Vec<f64> = (0..1000).map(|i| ((i * 7) % k) as f64).collect();
             let cb = Codebook::from_values(&values).unwrap();
             let packed = cb.pack();
-            assert_eq!(packed.bits_per_index(), cb.bits_per_index(), "k={k}");
+            // The packed width drops to 0 for the single-level plane; the
+            // dense form keeps its historical 1-bit minimum.
+            assert_eq!(packed.bits_per_index(), kernels::packed_bits_for(k), "k={k}");
             assert_eq!(packed.to_codebook(), cb, "k={k}");
             assert_eq!(packed.decode(), cb.decode(), "k={k}");
             assert_eq!(PackedCodebook::from_codebook(&cb), packed);
@@ -704,6 +721,34 @@ mod tests {
             assert_eq!(packed.len(), cb.len());
             assert!(!packed.is_empty());
         }
+    }
+
+    #[test]
+    fn constant_group_reports_zero_packed_index_bits() {
+        // Regression: k=1 used to report 1 bit/idx packed and pay index
+        // bytes it never needs — a constant group's compact payload is the
+        // level table alone.
+        let values = vec![0.25f64; 512];
+        let cb = Codebook::from_values(&values).unwrap();
+        assert_eq!(cb.k(), 1);
+        assert_eq!(cb.bits_per_index(), 1, "dense-form minimum is unchanged");
+        assert_eq!(cb.compressed_bytes(), 4, "one f32 level, zero index bytes");
+        let s = cb.stats(1);
+        assert_eq!(s.bits_per_idx_packed, 0);
+        assert_eq!(s.bits_per_index, 1);
+        assert_eq!(s.compact_bytes, 4);
+        assert!((s.bits_per_value - 4.0 * 8.0 / 512.0).abs() < 1e-12);
+        // The packed form stores exactly that: no words, all-zero reads.
+        let packed = cb.pack();
+        assert_eq!(packed.bits_per_index(), 0);
+        assert_eq!(packed.indices.words(), &[] as &[u64]);
+        assert_eq!(packed.indices.packed_bytes(), 0);
+        assert_eq!(packed.indices.get(100), 0);
+        assert_eq!(packed.decode(), values);
+        let ps = packed.stats(1);
+        assert_eq!(ps.bits_per_idx_stored, 0);
+        assert_eq!(ps.bits_per_idx_packed, 0);
+        assert_eq!(ps.compact_bytes, 4);
     }
 
     #[test]
@@ -722,8 +767,13 @@ mod tests {
         assert_eq!(rebuilt.unpack(), idx);
         // Shape validation on the raw path.
         assert!(PackedIndices::from_raw(vec![0; 3], 9, 97).is_err());
-        assert!(PackedIndices::from_raw(vec![], 0, 0).is_err());
         assert!(PackedIndices::from_raw(vec![], 33, 0).is_err());
+        // The zero-bit degenerate plane round-trips through raw parts:
+        // no words for any length, every index 0.
+        let zero = PackedIndices::from_raw(vec![], 0, 42).unwrap();
+        assert_eq!(zero.unpack(), vec![0u32; 42]);
+        assert_eq!(zero.packed_bytes(), 0);
+        assert!(PackedIndices::from_raw(vec![0], 0, 42).is_err(), "0-bit plane has no words");
     }
 
     #[test]

@@ -64,7 +64,9 @@ pub mod types;
 pub mod unique;
 pub mod vmatrix;
 
-pub use api::{Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer};
+pub use api::{
+    Fingerprint, Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer,
+};
 pub use codebook::{Codebook, CodebookF32, CompressionStats, PackedCodebook, PackedIndices};
 pub use qmatrix::{CascadeLevel, QMatrix};
 pub use pipeline::{

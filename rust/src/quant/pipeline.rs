@@ -265,6 +265,26 @@ pub struct SweepState {
     widened: Option<(Arc<[f32]>, PreparedInput<f64>)>,
 }
 
+impl SweepState {
+    /// Resume a λ path from coefficients captured at the end of an
+    /// earlier sweep over the same prepared input ([`SweepState::into_warm`]).
+    /// The chain state entering a grid point depends only on the points
+    /// before it, so a path continued from here is bitwise-identical to
+    /// re-running the whole extended grid warm from scratch — the
+    /// λ-grid-extension cache (`Quantizer::caching`) relies on exactly
+    /// this. The CD workspaces start empty (they are scratch buffers;
+    /// solver results never depend on their prior contents).
+    pub fn resume(warm_alpha: Option<Vec<f64>>, warm_alpha32: Option<Vec<f32>>) -> SweepState {
+        SweepState { warm_alpha, warm_alpha32, ..Default::default() }
+    }
+
+    /// Capture the chain state (both lane α slots) for a later
+    /// [`SweepState::resume`], consuming the state.
+    pub fn into_warm(self) -> (Option<Vec<f64>>, Option<Vec<f32>>) {
+        (self.warm_alpha, self.warm_alpha32)
+    }
+}
+
 /// Shared λ-path warm-start bookkeeping for the CD-family solvers: take
 /// the previous step's α out of its lane slot, solve with the lane's
 /// reusable workspace, and store the new α back. One point of change for

@@ -141,7 +141,12 @@ impl<T: Scalar> QMatrix<T> {
                         cb.len()
                     )));
                 }
-                if cb.indices.bits() != kernels::bits_per_index_for(cb.k()) {
+                // Accept the honest packed width (0 bits at k = 1) and,
+                // for backward compatibility, the legacy 1-bit
+                // single-level planes older wire payloads carry.
+                if cb.indices.bits() != kernels::packed_bits_for(cb.k())
+                    && !(cb.k() == 1 && cb.indices.bits() == 1)
+                {
                     return Err(Error::InvalidInput(format!(
                         "qmatrix: group {g} level {l} packs {} bits for k={}",
                         cb.indices.bits(),

@@ -3,7 +3,10 @@
 //! proves each one produces outputs identical to a direct
 //! `Quantizer::run` — values (`==`, which also pins the `-0.0`/`0.0`
 //! fold), levels, loss *bits*, clamp counts and diagnostics — plus the
-//! codebook round-trip property on both precision lanes.
+//! codebook round-trip property on both precision lanes. The ISSUE-8
+//! result-cache invisibility pin lives at the bottom: a memoizing
+//! [`Quantizer::caching`] facade must match the stateless facade bit for
+//! bit across every (method, plan, lane).
 
 use sqlsq::data::rng::Pcg32;
 use sqlsq::linalg::matrix::Matrix;
@@ -333,4 +336,63 @@ fn coordinator_legacy_submits_match_request_front_door() {
         .into_output64();
     assert_outputs_match(&via_request32, &legacy32, "f32 request submit");
     c.shutdown();
+}
+
+#[test]
+fn caching_facade_is_bitwise_invisible_for_every_method_plan_lane() {
+    // ISSUE-8 acceptance pin: a memoizing facade serving a repeated
+    // request must be indistinguishable — bit for bit — from the
+    // stateless facade, across every method, both precision lanes, and
+    // the three single-vector plans the memo covers (one-shot,
+    // target-count, warm sweep). Both the memo-fill run and the pure
+    // replay run are compared against a cold stateless solve.
+    let data = clustered(64, 20);
+    let plans: [(&str, fn(QuantRequest) -> QuantRequest); 3] = [
+        ("one-shot", |r| r),
+        ("target-count", |r| r.target_count(5)),
+        ("warm-sweep", |r| r.sweep(vec![0.02, 0.01, 0.005])),
+    ];
+    let bits = |v: Vec<f64>| -> Vec<u64> { v.into_iter().map(f64::to_bits).collect() };
+    for method in QuantMethod::ALL {
+        for lane in [Precision::F64, Precision::F32] {
+            for (plan_name, plan) in plans {
+                let ctx = format!("{method:?}/{lane:?}/{plan_name}");
+                let build = || {
+                    plan(
+                        QuantRequest::slice(&data)
+                            .method(method)
+                            .options(QuantOptions { precision: lane, ..test_opts() }),
+                    )
+                };
+                let cold = Quantizer::new().run(&build()).unwrap();
+                let memo = Quantizer::caching(64);
+                let fill = memo.run(&build()).unwrap();
+                let replay = memo.run(&build()).unwrap();
+                for (stage, got) in [("fill", &fill), ("replay", &replay)] {
+                    assert_eq!(got.items.len(), cold.items.len(), "{ctx}/{stage}: item count");
+                    for (i, (g, c)) in got.items.iter().zip(&cold.items).enumerate() {
+                        let g = g.as_ref().unwrap_or_else(|e| panic!("{ctx}/{stage}[{i}]: {e}"));
+                        let c = c.as_ref().unwrap_or_else(|e| panic!("{ctx}[{i}]: {e}"));
+                        assert_eq!(g.precision(), c.precision(), "{ctx}/{stage}[{i}]: lane");
+                        assert_eq!(
+                            bits(g.materialize_f64()),
+                            bits(c.materialize_f64()),
+                            "{ctx}/{stage}[{i}]: value bits"
+                        );
+                        assert_eq!(
+                            g.l2_loss().to_bits(),
+                            c.l2_loss().to_bits(),
+                            "{ctx}/{stage}[{i}]: loss bits"
+                        );
+                        assert_eq!(
+                            g.diag().iterations,
+                            c.diag().iterations,
+                            "{ctx}/{stage}[{i}]: iterations"
+                        );
+                        assert_eq!(g.diag().nnz, c.diag().nnz, "{ctx}/{stage}[{i}]: nnz");
+                    }
+                }
+            }
+        }
+    }
 }

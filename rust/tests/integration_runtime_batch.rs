@@ -61,7 +61,7 @@ fn raw_job(
     opts: QuantOptions,
 ) -> (Job, mpsc::Receiver<JobResult>) {
     let (tx, rx) = mpsc::channel();
-    (Job { id, data, method, opts, submitted: Instant::now(), respond: tx }, rx)
+    (Job { id, data, method, opts, submitted: Instant::now(), respond: tx, cache: None }, rx)
 }
 
 #[test]

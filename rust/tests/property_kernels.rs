@@ -259,7 +259,8 @@ fn packed_indices_roundtrip_at_bit_width_steps() {
     // The k values the satellite names: both sides of each ⌈log₂ k⌉ step,
     // plus the 16-bit plane.
     for k in [1usize, 2, 3, 255, 256, 257, 65536] {
-        let want_bits = kernels::bits_per_index_for(k);
+        // k = 1 packs to the zero-bit degenerate plane (no index bits).
+        let want_bits = kernels::packed_bits_for(k);
         for n in [0usize, 1, 7, 64, 71, 500] {
             let idx: Vec<u32> = (0..n).map(|i| ((i * 2654435761usize) % k) as u32).collect();
             let p = PackedIndices::pack(&idx, k);
@@ -286,9 +287,10 @@ fn packed_codebook_roundtrips_through_jsonio() {
                 .unwrap();
         assert_eq!(back, packed, "k={k}");
         assert_eq!(back.to_codebook(), cb, "k={k}");
-        // Honest accounting: the packed form stores exactly ⌈log₂ k⌉ bits.
+        // Honest accounting: the packed form stores exactly ⌈log₂ k⌉ bits
+        // (zero when a single level makes every index 0).
         let stats = packed.stats(k);
-        assert_eq!(stats.bits_per_idx_stored, kernels::bits_per_index_for(cb.k()));
+        assert_eq!(stats.bits_per_idx_stored, kernels::packed_bits_for(cb.k()));
         assert_eq!(stats.bits_per_idx_packed, stats.bits_per_idx_stored);
     }
 }

@@ -1,0 +1,198 @@
+//! Integration: the coordinator's serve-path result cache (ISSUE-8).
+//!
+//! Properties pinned here, end to end through the public submit surface:
+//!
+//! * a cache hit is **bitwise-identical** to a cold solve, for every
+//!   (method, lane) pair the coordinator serves, and is reported as
+//!   [`ServedBy::Cache`] with the hit counted in metrics;
+//! * N concurrent identical submits run **exactly one** engine solve
+//!   (single-flight), all N receive identical bits;
+//! * LRU eviction under a tiny byte budget never serves a stale entry —
+//!   an evicted key re-solves and reproduces the original bits;
+//! * with `CachePolicy::Off` every submit solves and no cache counters
+//!   move.
+//!
+//! The λ-grid-extension warm-start property (a sweep extending a cached
+//! grid resumes from the nearest solved point) lives at the quant layer:
+//! see the `caching_facade_*` tests in `quant::api` — the coordinator
+//! rejects sweep plans at admission.
+
+use sqlsq::config::{CachePolicy, Config, Engine};
+use sqlsq::coordinator::{Coordinator, ServedBy};
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{Precision, QuantMethod, QuantOptions};
+use std::sync::Barrier;
+
+fn sample(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| rng.uniform(0.0, 1.0)).collect()
+}
+
+fn native_cfg(policy: CachePolicy, capacity: usize) -> Config {
+    Config {
+        workers: 2,
+        queue_capacity: 128,
+        max_batch: 8,
+        batch_wait_us: 100,
+        engine: Engine::Native,
+        cache_policy: policy,
+        cache_capacity_bytes: capacity,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn hit_is_bitwise_identical_to_cold_solve_across_methods_and_lanes() {
+    let methods = [
+        QuantMethod::L1LeastSquare,
+        QuantMethod::KMeans,
+        QuantMethod::ClusterLs,
+        QuantMethod::L1,
+    ];
+    let c = Coordinator::start(native_cfg(CachePolicy::Lru, 1 << 20)).unwrap();
+    let mut expected_hits = 0u64;
+    for (mi, method) in methods.iter().enumerate() {
+        let opts = QuantOptions {
+            lambda1: 0.02,
+            target_values: 8,
+            seed: mi as u64,
+            ..Default::default()
+        };
+        for lane in [Precision::F64, Precision::F32] {
+            let data = sample(40 + mi as u64, 200);
+            let (cold, hit) = match lane {
+                Precision::F64 => (
+                    c.quantize_blocking(data.clone(), *method, opts.clone()).unwrap(),
+                    c.quantize_blocking(data.clone(), *method, opts.clone()).unwrap(),
+                ),
+                Precision::F32 => {
+                    let d32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+                    (
+                        c.quantize_blocking_f32(d32.clone(), *method, opts.clone()).unwrap(),
+                        c.quantize_blocking_f32(d32, *method, opts.clone()).unwrap(),
+                    )
+                }
+            };
+            expected_hits += 1;
+            assert_eq!(cold.served_by, ServedBy::Native, "{method:?}/{lane:?}");
+            assert_eq!(hit.served_by, ServedBy::Cache, "{method:?}/{lane:?} must hit");
+            let (a, b) = (cold.outcome.unwrap(), hit.outcome.unwrap());
+            assert_eq!(a.precision(), b.precision(), "{method:?}/{lane:?}: lane drift");
+            assert_eq!(
+                a.materialize(),
+                b.materialize(),
+                "{method:?}/{lane:?}: hit diverged from cold solve"
+            );
+            assert_eq!(a.l2_loss().to_bits(), b.l2_loss().to_bits(), "{method:?}/{lane:?}");
+            assert_eq!(a.codebook(), b.codebook(), "{method:?}/{lane:?}");
+            assert_eq!(a.diag().iterations, b.diag().iterations, "{method:?}/{lane:?}");
+        }
+    }
+    let snap = c.shutdown();
+    assert_eq!(snap.cache_hits, expected_hits);
+    assert_eq!(snap.cache_misses, expected_hits, "each pair: one miss, one hit");
+    assert!((snap.cache_hit_rate - 0.5).abs() < 1e-12);
+    assert!(snap.cache_bytes_saved > 0);
+    assert_eq!(
+        snap.stage_samples, expected_hits,
+        "every pair ran exactly one engine solve"
+    );
+}
+
+#[test]
+fn concurrent_identical_submits_run_exactly_one_solve() {
+    const N: usize = 8;
+    let c = Coordinator::start(native_cfg(CachePolicy::Lru, 1 << 20)).unwrap();
+    let data = sample(7, 500);
+    let opts = QuantOptions { lambda1: 0.01, target_values: 8, ..Default::default() };
+    let barrier = Barrier::new(N);
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let (c, data, opts, barrier) = (&c, &data, &opts, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    c.quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone()).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let outs: Vec<_> = results
+        .into_iter()
+        .map(|r| r.outcome.expect("every duplicate must succeed"))
+        .collect();
+    let reference = outs[0].materialize();
+    for out in &outs {
+        assert_eq!(out.materialize(), reference, "duplicates must receive identical bits");
+        assert_eq!(out.l2_loss().to_bits(), outs[0].l2_loss().to_bits());
+    }
+    let snap = c.shutdown();
+    assert_eq!(snap.stage_samples, 1, "exactly one engine solve across {N} duplicates");
+    assert_eq!(snap.cache_hits, N as u64 - 1, "everyone but the leader is a hit");
+    assert_eq!(snap.cache_misses, 1);
+    assert_eq!(snap.completed, N as u64);
+    assert_eq!(snap.failed, 0);
+}
+
+#[test]
+fn eviction_under_tiny_budget_re_solves_and_never_serves_stale() {
+    // A budget far below one compact result: every insert evicts its
+    // predecessor, so alternating keys miss every time — and each
+    // re-solve must reproduce the original bits (nothing stale, nothing
+    // corrupted by churn).
+    let c = Coordinator::start(native_cfg(CachePolicy::Lru, 64)).unwrap();
+    let opts = QuantOptions { target_values: 4, ..Default::default() };
+    let a = sample(100, 300);
+    let b = sample(101, 300);
+    let first_a = c
+        .quantize_blocking(a.clone(), QuantMethod::KMeans, opts.clone())
+        .unwrap()
+        .outcome
+        .unwrap();
+    let first_b = c
+        .quantize_blocking(b.clone(), QuantMethod::KMeans, opts.clone())
+        .unwrap()
+        .outcome
+        .unwrap();
+    for _ in 0..3 {
+        let ra = c.quantize_blocking(a.clone(), QuantMethod::KMeans, opts.clone()).unwrap();
+        let rb = c.quantize_blocking(b.clone(), QuantMethod::KMeans, opts.clone()).unwrap();
+        let (oa, ob) = (ra.outcome.unwrap(), rb.outcome.unwrap());
+        assert_eq!(oa.materialize(), first_a.materialize(), "churn changed a's result");
+        assert_eq!(ob.materialize(), first_b.materialize(), "churn changed b's result");
+        assert_eq!(oa.l2_loss().to_bits(), first_a.l2_loss().to_bits());
+        assert_eq!(ob.l2_loss().to_bits(), first_b.l2_loss().to_bits());
+    }
+    let snap = c.shutdown();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, 8);
+    // With a's and b's entries evicting each other, re-solves dominate:
+    // the cache must not have answered more often than physically
+    // possible (at most one survivor between any two submits).
+    assert!(
+        snap.cache_misses >= 7,
+        "a 64-byte budget cannot retain both keys (misses: {})",
+        snap.cache_misses
+    );
+}
+
+#[test]
+fn cache_off_control_solves_every_submit() {
+    let c = Coordinator::start(native_cfg(CachePolicy::Off, 1 << 20)).unwrap();
+    let data = sample(9, 200);
+    let opts = QuantOptions { target_values: 8, ..Default::default() };
+    let first = c.quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone()).unwrap();
+    let second = c.quantize_blocking(data.clone(), QuantMethod::KMeans, opts.clone()).unwrap();
+    assert_eq!(first.served_by, ServedBy::Native);
+    assert_eq!(second.served_by, ServedBy::Native, "cache off: no hits");
+    assert_eq!(
+        first.outcome.unwrap().materialize(),
+        second.outcome.unwrap().materialize(),
+        "determinism holds with the cache off"
+    );
+    let snap = c.shutdown();
+    assert_eq!(snap.stage_samples, 2, "both submits solved");
+    assert_eq!(snap.cache_hits, 0);
+    assert_eq!(snap.cache_misses, 0);
+}

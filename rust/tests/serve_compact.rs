@@ -113,7 +113,10 @@ fn bruteforce_stats(values: &[f64], requested: usize, dense_elem_bytes: usize) -
     levels.dedup();
     let k = levels.len();
     let bits_per_index = (usize::BITS - (k - 1).leading_zeros()).max(1);
-    let idx_bits = values.len() * bits_per_index as usize;
+    // The compact wire pays the honest packed width: zero index bits for
+    // a single-level (constant) payload, ⌈log₂ k⌉ otherwise.
+    let packed_bits = if k <= 1 { 0 } else { usize::BITS - (k - 1).leading_zeros() };
+    let idx_bits = values.len() * packed_bits as usize;
     let compact = idx_bits.div_ceil(8) + k * 4;
     let n = values.len() as f64;
     let entropy: f64 = levels
@@ -132,7 +135,7 @@ fn bruteforce_stats(values: &[f64], requested: usize, dense_elem_bytes: usize) -
         levels_requested: requested,
         bits_per_index,
         bits_per_idx_stored: 32,
-        bits_per_idx_packed: bits_per_index,
+        bits_per_idx_packed: packed_bits,
         bits_per_value: compact as f64 * 8.0 / n,
         index_entropy: entropy,
         compact_bytes: compact,
@@ -165,7 +168,7 @@ fn compression_stats_agree_with_bruteforce_recompute() {
         assert_eq!(got.levels_requested, want.levels_requested, "seed {seed}");
         assert_eq!(got.bits_per_index, want.bits_per_index, "seed {seed}");
         assert_eq!(got.bits_per_idx_stored, 32, "seed {seed}: dense plane stores u32");
-        assert_eq!(got.bits_per_idx_packed, want.bits_per_index, "seed {seed}");
+        assert_eq!(got.bits_per_idx_packed, want.bits_per_idx_packed, "seed {seed}");
         assert_eq!(got.compact_bytes, want.compact_bytes, "seed {seed}");
         assert_eq!(got.dense_bytes, want.dense_bytes, "seed {seed}");
         assert!((got.bits_per_value - want.bits_per_value).abs() < 1e-12, "seed {seed}");
