@@ -60,38 +60,49 @@ fn main() {
                 .expect("bench build");
             let tag = format!("{rows}x{cols}/b={bits}");
 
-            let packed = suite.case(&format!("qmatvec/packed/f64/{tag}"), || {
-                black_box(qm.matvec(black_box(&x)));
-            });
+            // Copy each median out immediately: `case` hands back a
+            // reference into the suite, which the next `case` call would
+            // invalidate.
+            let packed = suite
+                .case(&format!("qmatvec/packed/f64/{tag}"), || {
+                    black_box(qm.matvec(black_box(&x)));
+                })
+                .median;
 
             let q32 = qm.to_f32();
-            let packed32 = suite.case(&format!("qmatvec/packed/f32/{tag}"), || {
-                black_box(q32.matvec(black_box(&x32)));
-            });
+            let packed32 = suite
+                .case(&format!("qmatvec/packed/f32/{tag}"), || {
+                    black_box(q32.matvec(black_box(&x32)));
+                })
+                .median;
 
             let x_row = Matrix::from_vec(1, rows, x.clone()).unwrap();
-            let decode_dense = suite.case(&format!("qmatvec/decode_dense/f64/{tag}"), || {
-                let dense = qm.decode();
-                black_box(x_row.matmul(black_box(&dense)).unwrap());
-            });
+            let decode_dense = suite
+                .case(&format!("qmatvec/decode_dense/f64/{tag}"), || {
+                    let dense = qm.decode();
+                    black_box(x_row.matmul(black_box(&dense)).unwrap());
+                })
+                .median;
 
             let dense = qm.decode();
-            let dense_pre = suite.case(&format!("qmatvec/dense_pre/f64/{tag}"), || {
-                black_box(x_row.matmul(black_box(&dense)).unwrap());
-            });
+            let dense_pre = suite
+                .case(&format!("qmatvec/dense_pre/f64/{tag}"), || {
+                    black_box(x_row.matmul(black_box(&dense)).unwrap());
+                })
+                .median;
 
             let elems = (rows * cols) as f64;
             series.push(Json::obj(vec![
                 ("rows", Json::Num(rows as f64)),
                 ("cols", Json::Num(cols as f64)),
                 ("bits", Json::Num(f64::from(bits))),
-                ("packed_f64_median_s", Json::Num(packed.median)),
-                ("packed_f32_median_s", Json::Num(packed32.median)),
-                ("decode_dense_median_s", Json::Num(decode_dense.median)),
-                ("dense_pre_median_s", Json::Num(dense_pre.median)),
-                ("speedup_vs_decode", Json::Num(decode_dense.median / packed.median.max(1e-12))),
-                ("speedup_vs_dense_pre", Json::Num(dense_pre.median / packed.median.max(1e-12))),
-                ("packed_gelem_per_s", Json::Num(elems / packed.median.max(1e-12) / 1e9)),
+                ("packed_f64_median_s", Json::Num(packed)),
+                ("packed_f32_median_s", Json::Num(packed32)),
+                ("decode_dense_median_s", Json::Num(decode_dense)),
+                ("dense_pre_median_s", Json::Num(dense_pre)),
+                ("speedup_vs_decode", Json::Num(decode_dense / packed.max(1e-12))),
+                ("speedup_vs_dense_pre", Json::Num(dense_pre / packed.max(1e-12))),
+                ("packed_gelem_per_s", Json::Num(elems / packed.max(1e-12) / 1e9)),
             ]));
         }
     }

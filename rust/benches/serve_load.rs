@@ -1,0 +1,180 @@
+//! Network-serve bench (ISSUE-9 acceptance): a real [`Server`] on a
+//! loopback socket, measured four ways —
+//!
+//! * **round-trip** — single-client request latency per codec, on a
+//!   cache-warm request (isolates framing + codec + socket overhead
+//!   from solve time);
+//! * **load** — the deterministic loadgen mix per codec: throughput,
+//!   p50/p95/p99 latency, shed rate;
+//! * **shed** — a tiny queue (1 worker, capacity 1) under an 8-way
+//!   flood: how the admission path behaves at saturation;
+//! * **fairness** — tenant token buckets on, two equal tenants: the
+//!   per-tenant completion split.
+//!
+//! Emits `BENCH_serve_load.json` with the suite cases plus one `runs`
+//! entry per load run. `SQLSQ_BENCH_QUICK=1` shrinks job counts for CI.
+
+use sqlsq::bench_support::{active_config, black_box, Suite};
+use sqlsq::config::{Config, Engine};
+use sqlsq::coordinator::{Coordinator, Payload};
+use sqlsq::jsonio::Json;
+use sqlsq::quant::{QuantMethod, QuantOptions};
+use sqlsq::serve::{
+    run_load, Client, Codec, LoadReport, LoadSpec, ServeConfig, Server, WireReply, WireRequest,
+};
+
+fn start_server(workers: usize, queue_capacity: usize, tenant_rate: f64) -> Server {
+    let cfg = Config {
+        workers,
+        queue_capacity,
+        engine: Engine::parse("native").expect("native engine"),
+        ..Config::default()
+    };
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    Server::start(
+        coord,
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            tenant_rate,
+            tenant_burst: 2.0,
+            ..ServeConfig::default()
+        },
+    )
+    .expect("server")
+}
+
+fn small_request() -> WireRequest {
+    let data: Vec<f64> =
+        (0..64).map(|j| if j % 2 == 0 { 1.0 } else { -1.0 } + (j as f64) * 1e-3).collect();
+    WireRequest {
+        method: QuantMethod::KMeans,
+        opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
+        payload: Payload::F64(data.into()),
+    }
+}
+
+/// `report.to_json()` plus a `run` tag so the series are self-labelling.
+fn tagged(tag: &str, report: &LoadReport) -> Json {
+    match report.to_json() {
+        Json::Obj(mut m) => {
+            m.insert("run".into(), Json::Str(tag.into()));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+fn main() {
+    let mut suite = Suite::with_config("Serve load", active_config());
+    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
+    let jobs = if quick { 24 } else { 192 };
+    let n = if quick { 64 } else { 256 };
+    let mut runs: Vec<Json> = Vec::new();
+
+    // --- round-trip latency + steady-state load, per codec -------------
+    {
+        let server = start_server(2, Config::default().queue_capacity, 0.0);
+        let addr = server.addr().to_string();
+        for codec in [Codec::Json, Codec::Binary] {
+            let mut client =
+                Client::connect(&addr, codec, Some("bench")).expect("client connect");
+            let req = small_request();
+            // The identical request repeats, so after the first solve the
+            // server answers from its result cache: the case isolates
+            // frame + codec + socket overhead, which is what differs
+            // between the two codecs.
+            suite.case(&format!("serve/roundtrip_cached/{}", codec.id()), || {
+                match client.quant(&req).expect("round trip") {
+                    WireReply::Result(r) => {
+                        black_box(r.l2_loss);
+                    }
+                    other => panic!("unexpected reply: {other:?}"),
+                }
+            });
+            drop(client);
+
+            let report = run_load(&LoadSpec {
+                addr: addr.clone(),
+                jobs,
+                conns: 4,
+                tenants: 2,
+                codec,
+                distinct: 8,
+                n,
+                seed: 1,
+            })
+            .expect("load run");
+            println!("load/{}: {}", codec.id(), report.summary());
+            runs.push(tagged(&format!("load_{}", codec.id()), &report));
+        }
+        let snap = server.shutdown();
+        println!("steady-state server drained: {}", snap.summary());
+    }
+
+    // --- saturation: tiny queue, wide flood -----------------------------
+    {
+        let server = start_server(1, 1, 0.0);
+        let report = run_load(&LoadSpec {
+            addr: server.addr().to_string(),
+            jobs,
+            conns: 8,
+            tenants: 2,
+            codec: Codec::Binary,
+            distinct: jobs, // all distinct: every job is a real solve
+            n,
+            seed: 7,
+        })
+        .expect("shed run");
+        println!("shed: {}", report.summary());
+        runs.push(tagged("shed_tiny_queue", &report));
+        let snap = server.shutdown();
+        println!("tiny-queue server drained: {}", snap.summary());
+    }
+
+    // --- fairness: tenant buckets on, two equal tenants -----------------
+    {
+        let server = start_server(2, Config::default().queue_capacity, 200.0);
+        let report = run_load(&LoadSpec {
+            addr: server.addr().to_string(),
+            jobs,
+            conns: 4,
+            tenants: 2,
+            codec: Codec::Binary,
+            distinct: 8,
+            n,
+            seed: 3,
+        })
+        .expect("fairness run");
+        println!("fairness: {}", report.summary());
+        for (t, c) in &report.per_tenant_completed {
+            println!("  {t}: {c}");
+        }
+        runs.push(tagged("fairness_two_tenants", &report));
+        let snap = server.shutdown();
+        println!("fairness server drained: {}", snap.summary());
+    }
+
+    suite.write_csv(std::path::Path::new("reports")).ok();
+
+    let cases: Vec<Json> = suite
+        .rows()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("median_s", Json::Num(s.median)),
+                ("min_s", Json::Num(s.min)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serve_load".into())),
+        ("quick", Json::Bool(quick)),
+        ("runs", Json::Arr(runs)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    match std::fs::write("BENCH_serve_load.json", json.to_pretty()) {
+        Ok(()) => println!("[written BENCH_serve_load.json]"),
+        Err(e) => eprintln!("warning: could not write BENCH_serve_load.json: {e}"),
+    }
+}

@@ -97,6 +97,12 @@ USAGE:
                   [--runtime-backend pjrt|shadow] [--runtime-fanout N]
                   [--lanes N] [--cache lru|off] [--cache-bytes N]
                   [--distinct N]
+  sqlsq listen    [--addr HOST:PORT] [--workers N] [--engine native|runtime|auto]
+                  [--max-conns N] [--tenant-rate R] [--tenant-burst B]
+                  [--shed-retry-ms MS] [--cache lru|off] [--cache-bytes N]
+                  [--cache-shared true|false] [--duration-secs S]
+  sqlsq loadgen   [--addr HOST:PORT] [--jobs N] [--conns C] [--tenants T]
+                  [--codec json|binary] [--distinct D] [--n N] [--seed S]
   sqlsq selfcheck [--artifacts DIR]
   sqlsq version | help
 
@@ -128,6 +134,16 @@ CACHE:   the serve path keeps a result cache keyed by a content
          synthetic traffic cycles --distinct payload/option units across
          --jobs submits, so --jobs > --distinct is repeat-heavy and the
          metrics line shows the hit rate.
+
+NETWORK: sqlsq listen serves the coordinator over TCP (length-prefixed
+         frames, json or binary payloads, tenant id in the frame header;
+         see README \"Network serving\"). Backpressure answers SHED with a
+         retry-after hint instead of stalling; --tenant-rate/--tenant-burst
+         add per-tenant token-bucket fairness; --cache-shared false
+         partitions the result cache by tenant. --duration-secs S drains
+         gracefully after S seconds (0 = run until killed). sqlsq loadgen
+         offers a deterministic multi-tenant mix against a listener and
+         prints latency percentiles, throughput and shed rate.
 
 MATVEC: quantized-compute demo — builds a residual cascade (QMatrix) over
          a synthetic weight matrix, prints the per-level error-vs-bits
@@ -168,6 +184,8 @@ pub fn dispatch(raw: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "listen" => cmd_listen(&args),
+        "loadgen" => cmd_loadgen(&args),
         "selfcheck" => cmd_selfcheck(&args),
         other => Err(Error::Config(format!("unknown command '{other}' (try help)"))),
     }
@@ -442,7 +460,11 @@ fn cmd_matvec(args: &Args) -> Result<()> {
         println!("{l:>6} {:>6} {:>10} {:>14.6e}", lv.bits, lv.cum_bits, lv.rel_error);
     }
     if trace.len() < bits.len() {
-        println!("(stopped after {} of {} levels: norm tolerance reached)", trace.len(), bits.len());
+        println!(
+            "(stopped after {} of {} levels: norm tolerance reached)",
+            trace.len(),
+            bits.len()
+        );
     }
 
     // Cross-check the packed path against decode-then-dense on a
@@ -654,6 +676,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_listen(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+    let engine = Engine::parse(args.flag("engine").unwrap_or("native"))?;
+    let defaults = Config::default();
+    let cache_bytes = args.flag_usize("cache-bytes", defaults.cache_capacity_bytes)?;
+    if cache_bytes == 0 {
+        return Err(Error::Config(
+            "--cache-bytes must be ≥ 1 (use --cache off to disable caching)".into(),
+        ));
+    }
+    let cache_shared = match args.flag("cache-shared") {
+        None => defaults.cache_shared,
+        Some("true") => true,
+        Some("false") => false,
+        Some(v) => {
+            return Err(Error::Config(format!(
+                "--cache-shared wants true|false, got '{v}'"
+            )))
+        }
+    };
+    let cfg = Config {
+        workers: args.flag_usize("workers", defaults.workers)?,
+        engine,
+        queue_capacity: args.flag_usize("queue-capacity", defaults.queue_capacity)?,
+        cache_policy: CachePolicy::parse(args.flag("cache").unwrap_or(defaults.cache_policy.id()))?,
+        cache_capacity_bytes: cache_bytes,
+        cache_shared,
+        ..defaults
+    };
+    let scfg = crate::serve::ServeConfig {
+        addr: args.flag("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        max_conns: args.flag_usize("max-conns", 64)?.max(1),
+        tenant_rate: args.flag_f64("tenant-rate", 0.0)?,
+        tenant_burst: args.flag_f64("tenant-burst", 8.0)?,
+        shed_retry_ms: args.flag_usize("shed-retry-ms", 50)? as u64,
+    };
+    let duration_secs = args.flag_f64("duration-secs", 0.0)?;
+    let coord = Coordinator::start(cfg)?;
+    let server = crate::serve::Server::start(coord, scfg)?;
+    // The smoke job greps this line for the bound address, so flush it
+    // through any pipe buffering before we start (possibly) sleeping.
+    println!("listening on {}", server.addr());
+    std::io::stdout().flush().ok();
+    if duration_secs > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(duration_secs));
+        let snap = server.shutdown();
+        println!("drained: {}", snap.summary());
+        println!("{}", snap.to_json().to_string());
+        Ok(())
+    } else {
+        // No in-process signal handling (std-only): run until killed.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(1));
+        }
+    }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let defaults = crate::serve::LoadSpec::default();
+    let spec = crate::serve::LoadSpec {
+        addr: args.flag("addr").unwrap_or(&defaults.addr).to_string(),
+        jobs: args.flag_usize("jobs", defaults.jobs)?,
+        conns: args.flag_usize("conns", defaults.conns)?,
+        tenants: args.flag_usize("tenants", defaults.tenants)?,
+        codec: crate::serve::Codec::parse(args.flag("codec").unwrap_or(defaults.codec.id()))?,
+        distinct: args.flag_usize("distinct", defaults.distinct)?,
+        n: args.flag_usize("n", defaults.n)?,
+        seed: args.flag_usize("seed", defaults.seed as usize)? as u64,
+    };
+    let report = crate::serve::run_load(&spec)?;
+    println!("loadgen: {}", report.summary());
+    for (tenant, done) in &report.per_tenant_completed {
+        println!("  {tenant}: {done} completed");
+    }
+    println!("{}", report.to_json().to_string());
+    if report.completed == 0 {
+        return Err(Error::Runtime(
+            "loadgen: zero jobs completed (all shed or failed)".into(),
+        ));
+    }
+    Ok(())
+}
+
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
     check_artifacts(&dir)
@@ -859,6 +964,56 @@ mod tests {
         .unwrap();
         assert!(dispatch(&s(&["serve", "--cache", "fifo"])).is_err());
         assert!(dispatch(&s(&["serve", "--cache-bytes", "0"])).is_err());
+    }
+
+    #[test]
+    fn listen_binds_serves_for_a_beat_and_drains() {
+        dispatch(&s(&[
+            "listen", "--addr", "127.0.0.1:0", "--workers", "2", "--engine", "native",
+            "--duration-secs", "0.2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn listen_rejects_bad_flags() {
+        assert!(dispatch(&s(&["listen", "--addr", "not-an-addr", "--duration-secs", "0.1"]))
+            .is_err());
+        assert!(dispatch(&s(&["listen", "--cache-shared", "maybe"])).is_err());
+        assert!(dispatch(&s(&["listen", "--cache-bytes", "0"])).is_err());
+    }
+
+    #[test]
+    fn loadgen_rejects_bad_flags_and_dead_servers() {
+        assert!(dispatch(&s(&["loadgen", "--codec", "xml"])).is_err());
+        // A port nothing listens on: total transport failure is an error.
+        assert!(dispatch(&s(&[
+            "loadgen", "--addr", "127.0.0.1:9", "--jobs", "2", "--conns", "1",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn loadgen_completes_against_a_live_listener() {
+        let cfg = Config {
+            workers: 2,
+            engine: Engine::parse("native").unwrap(),
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        let server = crate::serve::Server::start(
+            coord,
+            crate::serve::ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        dispatch(&s(&[
+            "loadgen", "--addr", &addr, "--jobs", "8", "--conns", "2", "--tenants", "2",
+            "--codec", "json", "--n", "64",
+        ]))
+        .unwrap();
+        let snap = server.shutdown();
+        assert!(snap.completed >= 8, "all offered jobs completed: {}", snap.summary());
     }
 
     #[test]

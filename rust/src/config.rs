@@ -108,6 +108,12 @@ pub struct Config {
     /// Result-cache capacity in compact-result bytes (LRU bound; only
     /// meaningful when `cache_policy` is `lru`).
     pub cache_capacity_bytes: usize,
+    /// Whether the result cache is shared across tenants (`true`, the
+    /// default: any tenant's exact resubmit hits any other's entry) or
+    /// partitioned per tenant id (`false`: a tenant only ever hits its
+    /// own entries — the tenant id salts the cache fingerprint and the
+    /// full-key verification).
+    pub cache_shared: bool,
     /// Global RNG seed.
     pub seed: u64,
     /// Directory for experiment reports.
@@ -136,6 +142,7 @@ impl Default for Config {
             engine: Engine::Native,
             cache_policy: CachePolicy::Lru,
             cache_capacity_bytes: 32 << 20,
+            cache_shared: true,
             seed: 0,
             report_dir: PathBuf::from("reports"),
         }
@@ -219,6 +226,17 @@ impl Config {
                     ));
                 }
             }
+            "cache_shared" => {
+                self.cache_shared = match value {
+                    "true" => true,
+                    "false" => false,
+                    _ => {
+                        return Err(Error::Config(format!(
+                            "bad cache_shared '{value}' (true|false)"
+                        )))
+                    }
+                };
+            }
             "seed" => {
                 self.seed = value
                     .parse()
@@ -251,6 +269,7 @@ impl Config {
             "engine",
             "cache_policy",
             "cache_capacity_bytes",
+            "cache_shared",
             "seed",
         ] {
             let env_key = format!("SQLSQ_{}", key.to_uppercase());
@@ -342,6 +361,16 @@ mod tests {
         assert!(Config::parse_str("cache_capacity_bytes = 0").is_err());
         assert_eq!(CachePolicy::parse("lru").unwrap().id(), "lru");
         assert_eq!(CachePolicy::parse("off").unwrap().id(), "off");
+    }
+
+    #[test]
+    fn cache_shared_parse_and_default() {
+        assert!(Config::default().cache_shared, "cache is shared by default");
+        let c = Config::parse_str("cache_shared = false").unwrap();
+        assert!(!c.cache_shared);
+        let c = Config::parse_str("cache_shared = true").unwrap();
+        assert!(c.cache_shared);
+        assert!(Config::parse_str("cache_shared = maybe").is_err());
     }
 
     #[test]

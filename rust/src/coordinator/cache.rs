@@ -56,17 +56,31 @@ fn payload_bits_eq(a: &Payload, b: &Payload) -> bool {
 }
 
 /// The full admission key, retained per entry so hits verify it
-/// bit-for-bit. The payload is an `Arc` clone — no data copy.
+/// bit-for-bit. The payload is an `Arc` clone — no data copy. `tenant`
+/// is the cache-partition label (`None` under the default shared
+/// policy): it salts the fingerprint *and* participates in the
+/// verification arm, so partitioned tenants can never serve each
+/// other's entries even through a 128-bit collision.
 #[derive(Debug, Clone)]
 struct CacheKey {
+    tenant: Option<Box<str>>,
     data: Payload,
     method: QuantMethod,
     opts: QuantOptions,
 }
 
 impl CacheKey {
-    fn bits_eq(&self, data: &Payload, method: QuantMethod, opts: &QuantOptions) -> bool {
-        self.method == method && opts_bits_eq(&self.opts, opts) && payload_bits_eq(&self.data, data)
+    fn bits_eq(
+        &self,
+        tenant: Option<&str>,
+        data: &Payload,
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) -> bool {
+        self.tenant.as_deref() == tenant
+            && self.method == method
+            && opts_bits_eq(&self.opts, opts)
+            && payload_bits_eq(&self.data, data)
     }
 }
 
@@ -135,11 +149,17 @@ impl ResultCache {
     /// queued. Exactly one of three things happens under the lock: the
     /// hit is delivered, the duplicate parks, or the miss reserves the
     /// key (single-flight) and returns the leader's ticket.
+    ///
+    /// `tenant` is the cache-partition label (`None` = the shared
+    /// partition): the coordinator passes it only when
+    /// `Config::cache_shared` is off, so partitioned tenants fingerprint
+    /// — and verify — disjointly.
     #[allow(clippy::too_many_arguments)]
     pub fn admit(
         self: &Arc<Self>,
         metrics: &Arc<Metrics>,
         id: JobId,
+        tenant: Option<&str>,
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
@@ -149,6 +169,10 @@ impl ResultCache {
         let fp = match data {
             Payload::F64(v) => Fingerprint::vector_f64(v, method, opts),
             Payload::F32(v) => Fingerprint::vector_f32(v, method, opts),
+        };
+        let fp = match tenant {
+            Some(t) => fp.with_tenant(t),
+            None => fp,
         };
         // Classify under a short immutable borrow, then act: matching on
         // `get_mut` would pin the map borrow across arms that need to
@@ -164,9 +188,11 @@ impl ResultCache {
         g.clock += 1;
         let now = g.clock;
         let look = match g.map.get(&fp) {
-            Some(Slot::Ready { key, .. }) if key.bits_eq(data, method, opts) => Lookup::HitReady,
+            Some(Slot::Ready { key, .. }) if key.bits_eq(tenant, data, method, opts) => {
+                Lookup::HitReady
+            }
             Some(Slot::Ready { .. }) => Lookup::CollideReady,
-            Some(Slot::InFlight { key, .. }) if key.bits_eq(data, method, opts) => {
+            Some(Slot::InFlight { key, .. }) if key.bits_eq(tenant, data, method, opts) => {
                 Lookup::JoinInFlight
             }
             Some(Slot::InFlight { .. }) => Lookup::CollideInFlight,
@@ -217,13 +243,13 @@ impl ResultCache {
                 if let Some(Slot::Ready { cost_bytes, .. }) = g.map.remove(&fp) {
                     g.ready_bytes -= cost_bytes;
                 }
-                self.reserve(&mut g, fp, data, method, opts);
+                self.reserve(&mut g, fp, tenant, data, method, opts);
                 drop(g);
                 metrics.on_cache_miss();
                 Admit::Solve(Some(self.ticket(metrics, fp)))
             }
             Lookup::Vacant => {
-                self.reserve(&mut g, fp, data, method, opts);
+                self.reserve(&mut g, fp, tenant, data, method, opts);
                 drop(g);
                 metrics.on_cache_miss();
                 Admit::Solve(Some(self.ticket(metrics, fp)))
@@ -231,15 +257,22 @@ impl ResultCache {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn reserve(
         &self,
         g: &mut Inner,
         fp: Fingerprint,
+        tenant: Option<&str>,
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
     ) {
-        let key = CacheKey { data: data.clone(), method, opts: opts.clone() };
+        let key = CacheKey {
+            tenant: tenant.map(Box::from),
+            data: data.clone(),
+            method,
+            opts: opts.clone(),
+        };
         g.map.insert(fp, Slot::InFlight { key, waiters: Vec::new() });
     }
 
@@ -405,10 +438,22 @@ mod tests {
         data: &Payload,
         opts: &QuantOptions,
     ) -> (Admit, mpsc::Receiver<JobResult>) {
+        admit_as(cache, metrics, id, None, data, opts)
+    }
+
+    fn admit_as(
+        cache: &Arc<ResultCache>,
+        metrics: &Arc<Metrics>,
+        id: JobId,
+        tenant: Option<&str>,
+        data: &Payload,
+        opts: &QuantOptions,
+    ) -> (Admit, mpsc::Receiver<JobResult>) {
         let (tx, rx) = mpsc::channel();
         let verdict = cache.admit(
             metrics,
             id,
+            tenant,
             data,
             QuantMethod::KMeans,
             opts,
@@ -546,6 +591,30 @@ mod tests {
         assert!(matches!(vb, Admit::Hit));
         let (va, _rxa) = admit(&cache, &metrics, 4, &a, &opts);
         assert!(matches!(va, Admit::Solve(Some(_))));
+    }
+
+    #[test]
+    fn tenant_partitions_fingerprint_and_verify_disjointly() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(6);
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+
+        let (va, _rxa) = admit_as(&cache, &metrics, 1, Some("alice"), &data, &opts);
+        let Admit::Solve(Some(mut ta)) = va else { panic!("alice leads a miss") };
+        let Payload::F64(v) = &data else { unreachable!() };
+        ta.complete(&Ok(solved(v, QuantMethod::KMeans, &opts)), ServedBy::Native);
+
+        // Same bytes, other tenant: distinct partition ⇒ a fresh miss.
+        let (vb, _rxb) = admit_as(&cache, &metrics, 2, Some("bob"), &data, &opts);
+        assert!(matches!(vb, Admit::Solve(Some(_))), "bob must not see alice's entry");
+        // The shared (None) partition is distinct from both.
+        let (vs, _rxs) = admit_as(&cache, &metrics, 3, None, &data, &opts);
+        assert!(matches!(vs, Admit::Solve(Some(_))), "shared partition is its own");
+        // Alice herself still hits her own partition.
+        let (va2, rxa2) = admit_as(&cache, &metrics, 4, Some("alice"), &data, &opts);
+        assert!(matches!(va2, Admit::Hit));
+        assert_eq!(rxa2.try_recv().unwrap().served_by, ServedBy::Cache);
     }
 
     #[test]

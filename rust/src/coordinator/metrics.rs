@@ -260,6 +260,37 @@ impl Metrics {
 }
 
 impl Snapshot {
+    /// JSON form of the snapshot — the final-metrics payload the network
+    /// server emits on graceful drain, and the shape `BENCH_serve_load`
+    /// embeds. Counters become JSON numbers (all counters here fit f64's
+    /// 2⁵³ integer range in any realistic run).
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("served_native", Json::Num(self.served_native as f64)),
+            ("served_runtime", Json::Num(self.served_runtime as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("lanes_degraded", Json::Num(self.lanes_degraded as f64)),
+            ("mean_latency_us", Json::Num(self.mean_latency_us)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate)),
+            ("cache_bytes_saved", Json::Num(self.cache_bytes_saved as f64)),
+            ("cache_solve_saved_us", Json::Num(self.cache_solve_saved_us as f64)),
+            ("stage_samples", Json::Num(self.stage_samples as f64)),
+            ("mean_prepare_us", Json::Num(self.mean_prepare_us)),
+            ("mean_solve_us", Json::Num(self.mean_solve_us)),
+        ])
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
@@ -373,6 +404,22 @@ mod tests {
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.mean_latency_us, 0.0);
         assert!(!s.summary().is_empty());
+    }
+
+    #[test]
+    fn snapshot_to_json_round_trips_the_counters() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete(true, Duration::from_micros(100), false);
+        let s = m.snapshot();
+        let j = s.to_json();
+        let parsed = crate::jsonio::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("submitted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(parsed.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(
+            parsed.get("p50_us").and_then(|v| v.as_f64()),
+            Some(s.p50_us as f64)
+        );
     }
 
     #[test]

@@ -459,13 +459,19 @@ impl Coordinator {
     /// request shape, build the job, consult the result cache, and pick
     /// the queue. The push strategy (blocking vs shedding) stays at the
     /// call site; cache hits and joined duplicates never reach a queue.
-    fn admit_request(&self, req: QuantRequest) -> Result<Admission<'_>> {
+    ///
+    /// `tenant` partitions the result cache when `Config::cache_shared`
+    /// is off; under the default shared policy it is ignored at the
+    /// cache so all tenants benefit from each other's exact hits.
+    fn admit_request(&self, req: QuantRequest, tenant: Option<&str>) -> Result<Admission<'_>> {
         let (data, method, opts) = request_job_parts(req)?;
         let (mut job, rx, to_runtime) = self.make_job(data, method, opts);
         if let Some(cache) = &self.cache {
+            let cache_tenant = if self.cfg.cache_shared { None } else { tenant };
             match cache.admit(
                 &self.metrics,
                 job.id,
+                cache_tenant,
                 &job.data,
                 job.method,
                 &job.opts,
@@ -495,7 +501,20 @@ impl Coordinator {
         &self,
         req: QuantRequest,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        match self.admit_request(req)? {
+        self.submit_request_as(req, None)
+    }
+
+    /// [`Coordinator::submit_request`] on behalf of a named tenant — the
+    /// network front end's blocking door. The tenant id partitions the
+    /// result cache when `Config::cache_shared` is off; it never affects
+    /// routing or the solve itself. Errs with [`Error::Shutdown`] once
+    /// the queues are closed ([`Coordinator::begin_drain`] / shutdown).
+    pub fn submit_request_as(
+        &self,
+        req: QuantRequest,
+        tenant: Option<&str>,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        match self.admit_request(req, tenant)? {
             Admission::Served(id, rx) => {
                 self.metrics.on_submit();
                 Ok((id, rx))
@@ -503,7 +522,7 @@ impl Coordinator {
             Admission::Enqueue(job, rx, q) => {
                 let id = job.id;
                 if !q.push(job) {
-                    return Err(Error::Coordinator("queue closed".into()));
+                    return Err(Error::Shutdown("coordinator queues are closed".into()));
                 }
                 self.metrics.on_submit();
                 Ok((id, rx))
@@ -517,7 +536,25 @@ impl Coordinator {
         &self,
         req: QuantRequest,
     ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
-        match self.admit_request(req)? {
+        self.try_submit_request_as(req, None)
+    }
+
+    /// [`Coordinator::try_submit_request`] on behalf of a named tenant —
+    /// the network front end's shedding door. The error distinguishes the
+    /// two refusal modes so callers can react correctly:
+    ///
+    /// * [`Error::Saturated`] — the queue is full right now. Transient;
+    ///   retry after a backoff (the server maps this to a SHED response
+    ///   with a retry-after hint).
+    /// * [`Error::Shutdown`] — the queues are closed (draining or shut
+    ///   down). Permanent for this handle; the server maps this to
+    ///   connection refusal.
+    pub fn try_submit_request_as(
+        &self,
+        req: QuantRequest,
+        tenant: Option<&str>,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        match self.admit_request(req, tenant)? {
             Admission::Served(id, rx) => {
                 self.metrics.on_submit();
                 Ok((id, rx))
@@ -534,9 +571,11 @@ impl Coordinator {
                     // fail instead of hanging).
                     TryPush::Full(_) => {
                         self.metrics.on_reject();
-                        Err(Error::Coordinator("queue full".into()))
+                        Err(Error::Saturated("queue full".into()))
                     }
-                    TryPush::Closed(_) => Err(Error::Coordinator("queue closed".into())),
+                    TryPush::Closed(_) => {
+                        Err(Error::Shutdown("coordinator queues are closed".into()))
+                    }
                 }
             }
         }
@@ -652,6 +691,17 @@ impl Coordinator {
     /// Current queue depths (native, runtime).
     pub fn queue_depths(&self) -> (usize, usize) {
         (self.native_q.len(), self.runtime_q.len())
+    }
+
+    /// Begin graceful drain without consuming the handle: close both
+    /// queues so new submissions are refused with [`Error::Shutdown`],
+    /// while the workers keep draining everything already queued
+    /// (`BoundedQueue` drains-then-stops on close). Idempotent; call
+    /// [`Coordinator::shutdown`] afterwards to join the workers — every
+    /// job accepted before the drain still completes and responds.
+    pub fn begin_drain(&self) {
+        self.native_q.close();
+        self.runtime_q.close();
     }
 
     /// Graceful shutdown: close queues, drain, join workers.
@@ -798,6 +848,121 @@ mod tests {
         assert_eq!(snap.submitted, accepted);
         assert_eq!(snap.rejected, rejected);
         assert_eq!(snap.completed + snap.failed, accepted);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_saturated_error() {
+        // No workers draining? Can't do that — workers always start. Use
+        // capacity 1 with a single slow worker and flood: the refusals
+        // must be the *transient* variant, never Shutdown.
+        let cfg = Config {
+            workers: 1,
+            queue_capacity: 1,
+            max_batch: 1,
+            batch_wait_us: 0,
+            engine: Engine::Native,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg).unwrap();
+        let mut saw_saturated = false;
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            match c.try_submit(
+                sample(300 + i),
+                QuantMethod::IterativeL1,
+                QuantOptions { target_values: 3, lambda1: 1e-4, ..Default::default() },
+            ) {
+                Ok((_, rx)) => rxs.push(rx),
+                Err(Error::Saturated(_)) => saw_saturated = true,
+                Err(e) => panic!("full queue must shed with Saturated, got {e}"),
+            }
+        }
+        assert!(saw_saturated, "a 64-burst against capacity 1 must shed at least once");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn drained_coordinator_refuses_with_shutdown_error() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (_, rx) = c
+                .submit(
+                    sample(400 + i),
+                    QuantMethod::KMeans,
+                    QuantOptions { target_values: 3, ..Default::default() },
+                )
+                .unwrap();
+            rxs.push(rx);
+        }
+        c.begin_drain();
+        // Both doors must now refuse with the permanent variant. The
+        // blocking door must not block.
+        let opts = QuantOptions { target_values: 3, ..Default::default() };
+        match c.try_submit(sample(500), QuantMethod::KMeans, opts.clone()) {
+            Err(Error::Shutdown(_)) => {}
+            other => panic!("try_submit after drain must be Shutdown, got {other:?}"),
+        }
+        match c.submit(sample(501), QuantMethod::KMeans, opts) {
+            Err(Error::Shutdown(_)) => {}
+            other => panic!("submit after drain must be Shutdown, got {other:?}"),
+        }
+        // Everything accepted before the drain still completes.
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "drain must flush accepted jobs");
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.completed + snap.failed, 6);
+    }
+
+    #[test]
+    fn tenant_id_is_invisible_when_cache_is_shared() {
+        // Default cache_shared=true: two tenants share exact hits.
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(31);
+        let opts = QuantOptions { target_values: 4, seed: 9, ..Default::default() };
+        let req = |d: &Vec<f64>| {
+            QuantRequest::vector(d.clone()).method(QuantMethod::KMeans).options(opts.clone())
+        };
+        let (_, rx_a) = c.submit_request_as(req(&data), Some("alice")).unwrap();
+        let a = rx_a.recv().unwrap();
+        let (_, rx_b) = c.submit_request_as(req(&data), Some("bob")).unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(b.served_by, ServedBy::Cache, "shared cache serves across tenants");
+        assert_eq!(
+            a.outcome.unwrap().materialize(),
+            b.outcome.unwrap().materialize(),
+            "hit is bitwise"
+        );
+        let snap = c.shutdown();
+        assert_eq!(snap.cache_hits, 1);
+    }
+
+    #[test]
+    fn partitioned_tenants_never_share_cache_entries() {
+        let cfg = Config { cache_shared: false, ..test_cfg() };
+        let c = Coordinator::start(cfg).unwrap();
+        let data = sample(32);
+        let opts = QuantOptions { target_values: 4, seed: 9, ..Default::default() };
+        let req = |d: &Vec<f64>| {
+            QuantRequest::vector(d.clone()).method(QuantMethod::KMeans).options(opts.clone())
+        };
+        let (_, rx_a) = c.submit_request_as(req(&data), Some("alice")).unwrap();
+        assert!(rx_a.recv().unwrap().is_ok());
+        // Same bytes, different tenant: must solve again, not hit.
+        let (_, rx_b) = c.submit_request_as(req(&data), Some("bob")).unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(b.served_by, ServedBy::Native, "partitioned tenants must not share");
+        // Same tenant resubmits: now it hits its own partition.
+        let (_, rx_a2) = c.submit_request_as(req(&data), Some("alice")).unwrap();
+        let a2 = rx_a2.recv().unwrap();
+        assert_eq!(a2.served_by, ServedBy::Cache, "a tenant still hits its own entries");
+        let snap = c.shutdown();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.stage_samples, 2, "exactly two engine solves ran");
     }
 
     #[test]

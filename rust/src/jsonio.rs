@@ -146,6 +146,14 @@ impl Json {
         }
     }
 
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// As usize (must be a non-negative integer).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
@@ -834,6 +842,8 @@ mod tests {
         assert_eq!(Json::Num(3.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
         assert_eq!(Json::Str("x".into()).as_f64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Num(1.0).as_bool(), None);
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod linalg;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 
 /// Library-wide error type. Display/Error are implemented by hand —
@@ -55,8 +56,15 @@ pub enum Error {
     Linalg(String),
     /// PJRT / artifact runtime failure.
     Runtime(String),
-    /// Coordinator failure (queue closed, worker panicked, ...).
+    /// Coordinator failure (worker panicked, malformed request, ...).
     Coordinator(String),
+    /// Admission refused because a bounded queue is full — transient
+    /// backpressure. Retryable: the network front end maps this to a
+    /// SHED response with a retry-after hint, never a hard failure.
+    Saturated(String),
+    /// The coordinator is draining or closed — permanent for this
+    /// handle. The network front end maps this to connection refusal.
+    Shutdown(String),
     /// Configuration / CLI parsing failure.
     Config(String),
     /// I/O error.
@@ -72,6 +80,8 @@ impl std::fmt::Display for Error {
             Error::Linalg(m) => write!(f, "linear algebra failure: {m}"),
             Error::Runtime(m) => write!(f, "runtime failure: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator failure: {m}"),
+            Error::Saturated(m) => write!(f, "saturated: {m}"),
+            Error::Shutdown(m) => write!(f, "shutting down: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -974,6 +974,19 @@ impl Fingerprint {
         h.finish()
     }
 
+    /// Salt this fingerprint with a tenant id — the coordinator's
+    /// per-tenant cache partitioning (`Config::cache_shared = false`)
+    /// folds the tenant into the key so partitioned tenants can never
+    /// alias each other's entries, even before the full-key bit check.
+    /// Salting with distinct tenants yields distinct fingerprints with
+    /// the same collision bounds as the base hash; the un-salted
+    /// fingerprint is the shared-cache key.
+    pub fn with_tenant(self, tenant: &str) -> Fingerprint {
+        let mut h = FpHasher { hi: self.hi, lo: self.lo };
+        h.str(tenant);
+        h.finish()
+    }
+
     /// Fingerprint of a full request: input bytes + lane + method +
     /// effective options + plan. Defined for every input shape (batches
     /// and matrices hash all their groups), so any request can be
@@ -1460,6 +1473,8 @@ fn replicate_err(e: &Error) -> Error {
         Error::Linalg(m) => Error::Linalg(m.clone()),
         Error::Runtime(m) => Error::Runtime(m.clone()),
         Error::Coordinator(m) => Error::Coordinator(m.clone()),
+        Error::Saturated(m) => Error::Saturated(m.clone()),
+        Error::Shutdown(m) => Error::Shutdown(m.clone()),
         Error::Config(m) => Error::Config(m.clone()),
         Error::Io(io) => Error::Io(std::io::Error::new(io.kind(), io.to_string())),
     }

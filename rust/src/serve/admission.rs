@@ -1,0 +1,124 @@
+//! Per-tenant admission control: token buckets keyed by the tenant id
+//! carried in the frame header.
+//!
+//! Each tenant owns an independent bucket holding up to `burst` tokens,
+//! refilled continuously at `rate` tokens/second. Admitting a request
+//! costs one token; an empty bucket yields a SHED with a computed
+//! retry-after hint — the time until one full token accrues. This is
+//! fairness **before** the shared queue: a flooding tenant drains only
+//! its own bucket, so a polite tenant's requests keep flowing even while
+//! the flooder is being shed.
+//!
+//! `rate <= 0` disables limiting entirely (every acquire succeeds),
+//! which is the default for [`super::ServeConfig`].
+//!
+//! Buckets are created lazily on first sight of a tenant id; requests
+//! with no tenant header share the `""` bucket. State is a single
+//! mutex-guarded map — acquisition is two float ops under the lock, so
+//! contention is negligible next to a quantization solve.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One tenant's bucket: current balance and when it was last refilled.
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Lazily-populated per-tenant token buckets (see the module docs).
+pub struct TenantBuckets {
+    rate: f64,
+    burst: f64,
+    state: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TenantBuckets {
+    /// Build a bucket set refilling at `rate` tokens/second with
+    /// capacity `burst` (floored at 1.0 so a fresh bucket always admits
+    /// at least one request). `rate <= 0` means unlimited.
+    pub fn new(rate: f64, burst: f64) -> TenantBuckets {
+        TenantBuckets { rate, burst: burst.max(1.0), state: Mutex::new(HashMap::new()) }
+    }
+
+    /// Whether limiting is active at all.
+    pub fn enabled(&self) -> bool {
+        self.rate > 0.0
+    }
+
+    /// Try to admit one request for `tenant`. `Ok(())` admits;
+    /// `Err(wait)` sheds, with `wait` the time until a full token will
+    /// have accrued (the retry-after hint for the SHED frame).
+    pub fn try_acquire(&self, tenant: &str) -> std::result::Result<(), Duration> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let mut state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let b = state
+            .entry(tenant.to_string())
+            .or_insert_with(|| Bucket { tokens: self.burst, last: now });
+        let dt = now.saturating_duration_since(b.last).as_secs_f64();
+        b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+        b.last = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            let wait = (1.0 - b.tokens) / self.rate;
+            Err(Duration::from_secs_f64(wait.clamp(0.001, 3600.0)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_is_unlimited() {
+        let b = TenantBuckets::new(0.0, 8.0);
+        assert!(!b.enabled());
+        for _ in 0..10_000 {
+            assert!(b.try_acquire("anyone").is_ok());
+        }
+    }
+
+    #[test]
+    fn burst_is_honored_then_empty_bucket_sheds_with_a_real_hint() {
+        // Refill so slow it cannot matter within the test's runtime.
+        let b = TenantBuckets::new(0.001, 2.0);
+        assert!(b.try_acquire("t").is_ok());
+        assert!(b.try_acquire("t").is_ok());
+        let wait = b.try_acquire("t").expect_err("third request must shed");
+        // ~1 token / 0.001 tok/s = ~1000s, clamped to the 3600s ceiling.
+        assert!(wait >= Duration::from_secs(500), "hint was {wait:?}");
+        assert!(wait <= Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn buckets_are_independent_per_tenant() {
+        let b = TenantBuckets::new(0.001, 1.0);
+        assert!(b.try_acquire("flooder").is_ok());
+        assert!(b.try_acquire("flooder").is_err(), "flooder is out of tokens");
+        assert!(b.try_acquire("polite").is_ok(), "polite tenant is unaffected");
+    }
+
+    #[test]
+    fn fast_refill_recovers_quickly() {
+        let b = TenantBuckets::new(1e9, 1.0);
+        for _ in 0..100 {
+            // Any failed acquire would need a ~1ns wait; at 1e9 tok/s the
+            // bucket refills between iterations, so every call admits.
+            assert!(b.try_acquire("t").is_ok());
+        }
+    }
+
+    #[test]
+    fn burst_floor_admits_at_least_one() {
+        let b = TenantBuckets::new(0.001, 0.0);
+        assert!(b.try_acquire("t").is_ok(), "burst is floored at 1.0");
+        assert!(b.try_acquire("t").is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Blocking client for the serve protocol: one connection, one
+//! request/response in flight at a time (the server's per-connection
+//! contract). Run several clients for parallel load — that is what
+//! [`super::loadgen`] does.
+
+use super::frame::{read_frame, write_frame, Codec, Frame, FrameKind, ReadOutcome};
+use super::protocol::{
+    decode_error, decode_result, decode_shed, encode_request, WireRequest, WireResult,
+};
+use crate::{Error, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// What came back for one request: the three response modes a caller
+/// must handle distinctly.
+#[derive(Debug, Clone)]
+pub enum WireReply {
+    /// The job completed; here is its codebook.
+    Result(WireResult),
+    /// The server shed the request (admission or queue backpressure).
+    /// Retry after the hint — against this server for queue sheds, or
+    /// elsewhere if sheds persist.
+    Shed {
+        /// Server-suggested backoff before retrying, milliseconds.
+        retry_after_ms: u64,
+        /// Human-readable shed cause ("queue full", "tenant rate
+        /// limit", "connection limit reached").
+        reason: String,
+    },
+    /// The request failed (bad payload, solver failure, or the server
+    /// is draining — draining servers also close the connection).
+    Error(String),
+}
+
+/// A blocking connection to a [`super::Server`].
+pub struct Client {
+    stream: TcpStream,
+    codec: Codec,
+    tenant: Option<String>,
+}
+
+impl Client {
+    /// Connect to `addr`, speaking `codec`, optionally stamping every
+    /// frame with a tenant id (≤ 64 bytes, see
+    /// [`super::frame::MAX_TENANT`]).
+    pub fn connect<A: ToSocketAddrs>(
+        addr: A,
+        codec: Codec,
+        tenant: Option<&str>,
+    ) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, codec, tenant: tenant.map(str::to_string) })
+    }
+
+    /// Round-trip a liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let mut f = Frame::new(FrameKind::Ping, self.codec, Vec::new());
+        f.tenant = self.tenant.clone();
+        write_frame(&mut self.stream, &f)?;
+        match self.read_reply()? {
+            (FrameKind::Pong, _, _) => Ok(()),
+            (k, _, _) => Err(Error::InvalidInput(format!("expected Pong, got {k:?}"))),
+        }
+    }
+
+    /// Submit one quantization request under this client's tenant and
+    /// block for the reply.
+    pub fn quant(&mut self, req: &WireRequest) -> Result<WireReply> {
+        let tenant = self.tenant.clone();
+        self.quant_as(tenant.as_deref(), req)
+    }
+
+    /// [`Client::quant`] with an explicit per-request tenant override
+    /// (the tenant rides on each frame, not the connection).
+    pub fn quant_as(&mut self, tenant: Option<&str>, req: &WireRequest) -> Result<WireReply> {
+        let mut f =
+            Frame::new(FrameKind::Quant, self.codec, encode_request(req, self.codec));
+        f.tenant = tenant.map(str::to_string);
+        write_frame(&mut self.stream, &f)?;
+        let (kind, codec, payload) = self.read_reply()?;
+        match kind {
+            FrameKind::Result => Ok(WireReply::Result(decode_result(&payload, codec)?)),
+            FrameKind::Shed => {
+                let (retry_after_ms, reason) = decode_shed(&payload)?;
+                Ok(WireReply::Shed { retry_after_ms, reason })
+            }
+            FrameKind::Error => Ok(WireReply::Error(decode_error(&payload)?)),
+            k => Err(Error::InvalidInput(format!("unexpected reply kind {k:?}"))),
+        }
+    }
+
+    fn read_reply(&mut self) -> Result<(FrameKind, Codec, Vec<u8>)> {
+        match read_frame(&mut self.stream)? {
+            ReadOutcome::Frame(f) => Ok((f.kind, f.codec, f.payload)),
+            // A clean EOF mid-conversation means the server hung up —
+            // drain, connection-limit shed, or a protocol violation on
+            // our side.
+            ReadOutcome::Eof | ReadOutcome::IdleTimeout => {
+                Err(Error::Shutdown("server closed connection".into()))
+            }
+        }
+    }
+}

@@ -1,0 +1,439 @@
+//! Length-prefixed framing for the network serve protocol.
+//!
+//! Every message on a connection — request or response — is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"sqlq"
+//! 4       1     version (= 1)
+//! 5       1     kind    (FrameKind: requests 0x01/0x02, responses 0x8x)
+//! 6       1     codec   (0 = json, 1 = binary — how `payload` is encoded)
+//! 7       1     tenant_len (0..=64; responses always send 0)
+//! 8       4     payload_len, u32 little-endian (≤ 16 MiB)
+//! 12      t     tenant id, UTF-8 (t = tenant_len)
+//! 12+t    p     payload  (p = payload_len)
+//! ```
+//!
+//! The header is fixed-size so a reader can validate everything before
+//! allocating: bad magic, unknown version/kind, an over-long tenant, or
+//! an oversized payload are *protocol violations* ([`crate::Error::InvalidInput`])
+//! — after one, the stream position is untrustworthy, so the peer sends a
+//! best-effort error frame and closes. A payload that parses as a frame
+//! but fails codec validation is a *request error*: the connection
+//! survives and the error comes back in an [`FrameKind::Error`] response.
+//!
+//! SHED and error response payloads are always JSON regardless of the
+//! request codec — they are tiny and must stay debuggable from a hex
+//! dump (see [`super::protocol`]).
+
+use crate::{Error, Result};
+use std::io::{ErrorKind, Read, Write};
+
+/// Frame magic: the four bytes `b"sqlq"`.
+pub const MAGIC: [u8; 4] = *b"sqlq";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Hard cap on one frame's payload (16 MiB) — an admission-control
+/// backstop so a malicious length prefix cannot make the server allocate
+/// unboundedly.
+pub const MAX_PAYLOAD: usize = 16 << 20;
+/// Hard cap on the tenant-id header field.
+pub const MAX_TENANT: usize = 64;
+
+/// Frame header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// What a frame carries. Request kinds have the high bit clear, response
+/// kinds have it set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Request: quantize one vector (payload = wire request).
+    Quant,
+    /// Request: liveness probe (empty payload).
+    Ping,
+    /// Response: a completed quantization (payload = wire result).
+    Result,
+    /// Response: admission refused under load — retry later (payload =
+    /// JSON `{"retry_after_ms": .., "reason": ".."}`).
+    Shed,
+    /// Response: request failed (payload = JSON `{"error": ".."}`).
+    Error,
+    /// Response to [`FrameKind::Ping`] (empty payload).
+    Pong,
+}
+
+impl FrameKind {
+    /// Wire byte.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Quant => 0x01,
+            FrameKind::Ping => 0x02,
+            FrameKind::Result => 0x81,
+            FrameKind::Shed => 0x82,
+            FrameKind::Error => 0x83,
+            FrameKind::Pong => 0x84,
+        }
+    }
+
+    /// Parse the wire byte.
+    pub fn from_u8(b: u8) -> Result<FrameKind> {
+        match b {
+            0x01 => Ok(FrameKind::Quant),
+            0x02 => Ok(FrameKind::Ping),
+            0x81 => Ok(FrameKind::Result),
+            0x82 => Ok(FrameKind::Shed),
+            0x83 => Ok(FrameKind::Error),
+            0x84 => Ok(FrameKind::Pong),
+            _ => Err(Error::InvalidInput(format!("frame: unknown kind byte 0x{b:02x}"))),
+        }
+    }
+}
+
+/// How a frame's payload is encoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    /// The jsonio JSON forms — human-readable, for debugging.
+    #[default]
+    Json,
+    /// Compact little-endian binary — the production path.
+    Binary,
+}
+
+impl Codec {
+    /// Wire byte.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Codec::Json => 0,
+            Codec::Binary => 1,
+        }
+    }
+
+    /// Parse the wire byte.
+    pub fn from_u8(b: u8) -> Result<Codec> {
+        match b {
+            0 => Ok(Codec::Json),
+            1 => Ok(Codec::Binary),
+            _ => Err(Error::InvalidInput(format!("frame: unknown codec byte 0x{b:02x}"))),
+        }
+    }
+
+    /// Parse the CLI string form.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "json" => Ok(Codec::Json),
+            "binary" => Ok(Codec::Binary),
+            _ => Err(Error::Config(format!("unknown codec '{s}' (json|binary)"))),
+        }
+    }
+
+    /// Stable string id.
+    pub fn id(self) -> &'static str {
+        match self {
+            Codec::Json => "json",
+            Codec::Binary => "binary",
+        }
+    }
+}
+
+/// One parsed frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    /// What the payload is.
+    pub kind: FrameKind,
+    /// How the payload is encoded.
+    pub codec: Codec,
+    /// Request tenant id (responses carry `None`).
+    pub tenant: Option<String>,
+    /// The encoded payload bytes.
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A request/response frame without a tenant header.
+    pub fn new(kind: FrameKind, codec: Codec, payload: Vec<u8>) -> Frame {
+        Frame { kind, codec, tenant: None, payload }
+    }
+}
+
+/// What [`read_frame`] observed on the stream.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// The peer closed the connection cleanly (EOF on a frame boundary).
+    Eof,
+    /// A read timeout elapsed before the first header byte — the
+    /// connection is idle, not broken. Only produced on sockets with a
+    /// read timeout set; callers use it as a poll tick (e.g. to check a
+    /// drain flag) and call again.
+    IdleTimeout,
+}
+
+/// Serialize `frame` onto `w`. Errs ([`Error::InvalidInput`]) on frames
+/// that violate the protocol limits rather than emitting garbage.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let tenant = frame.tenant.as_deref().unwrap_or("");
+    if tenant.len() > MAX_TENANT {
+        return Err(Error::InvalidInput(format!(
+            "frame: tenant id is {} bytes, max {MAX_TENANT}",
+            tenant.len()
+        )));
+    }
+    if frame.payload.len() > MAX_PAYLOAD {
+        return Err(Error::InvalidInput(format!(
+            "frame: payload is {} bytes, max {MAX_PAYLOAD}",
+            frame.payload.len()
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[5] = frame.kind.as_u8();
+    header[6] = frame.codec.as_u8();
+    header[7] = tenant.len() as u8;
+    header[8..12].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(tenant.as_bytes())?;
+    w.write_all(&frame.payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// How a buffered read ended.
+enum Fill {
+    /// The buffer was filled completely.
+    Full,
+    /// Clean EOF before the first byte.
+    Eof,
+    /// Read timeout before the first byte (socket with a read timeout) —
+    /// the stream is idle at a safe boundary.
+    Idle,
+}
+
+/// Fill `buf` from `r`. EOF or a timeout *mid*-buffer is an I/O error
+/// (truncated frame / stalled peer — the stream position is lost); both
+/// are only benign before the first byte, where they become
+/// [`Fill::Eof`] / [`Fill::Idle`].
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<Fill> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(Fill::Eof);
+                }
+                return Err(Error::Io(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "truncated frame",
+                )));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if filled == 0 {
+                    return Ok(Fill::Idle);
+                }
+                return Err(Error::Io(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "peer stalled mid-frame",
+                )));
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(Fill::Full)
+}
+
+/// Read one frame. Distinguishes the three non-error stream states
+/// ([`ReadOutcome`]); protocol violations (bad magic/version/kind/codec,
+/// over-long tenant, oversized payload) are [`Error::InvalidInput`] and
+/// truncation mid-frame is an I/O error — after either, the stream
+/// cannot be resynchronized and should be closed.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome> {
+    let mut header = [0u8; HEADER_LEN];
+    match read_exact_or_eof(r, &mut header)? {
+        Fill::Eof => return Ok(ReadOutcome::Eof),
+        Fill::Idle => return Ok(ReadOutcome::IdleTimeout),
+        Fill::Full => {}
+    }
+    if header[0..4] != MAGIC {
+        return Err(Error::InvalidInput("frame: bad magic".into()));
+    }
+    if header[4] != VERSION {
+        return Err(Error::InvalidInput(format!(
+            "frame: unsupported version {} (this build speaks {VERSION})",
+            header[4]
+        )));
+    }
+    let kind = FrameKind::from_u8(header[5])?;
+    let codec = Codec::from_u8(header[6])?;
+    let tenant_len = header[7] as usize;
+    if tenant_len > MAX_TENANT {
+        return Err(Error::InvalidInput(format!(
+            "frame: tenant length {tenant_len} exceeds max {MAX_TENANT}"
+        )));
+    }
+    let payload_len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if payload_len > MAX_PAYLOAD {
+        return Err(Error::InvalidInput(format!(
+            "frame: payload length {payload_len} exceeds max {MAX_PAYLOAD}"
+        )));
+    }
+    // Past the header, EOF/idle at "the first byte" of the body is still
+    // mid-frame: truncation, not a clean boundary.
+    let read_body = |r: &mut R, buf: &mut [u8]| -> Result<()> {
+        match read_exact_or_eof(r, buf)? {
+            Fill::Full => Ok(()),
+            Fill::Eof | Fill::Idle => Err(Error::Io(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                "truncated frame body",
+            ))),
+        }
+    };
+    let mut tenant_bytes = vec![0u8; tenant_len];
+    read_body(r, &mut tenant_bytes)?;
+    let tenant = if tenant_len == 0 {
+        None
+    } else {
+        Some(
+            String::from_utf8(tenant_bytes)
+                .map_err(|_| Error::InvalidInput("frame: tenant id is not UTF-8".into()))?,
+        )
+    };
+    let mut payload = vec![0u8; payload_len];
+    read_body(r, &mut payload)?;
+    Ok(ReadOutcome::Frame(Frame { kind, codec, tenant, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            ReadOutcome::Frame(f) => f,
+            other => panic!("expected a frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_all_kinds_and_codecs() {
+        for kind in [
+            FrameKind::Quant,
+            FrameKind::Ping,
+            FrameKind::Result,
+            FrameKind::Shed,
+            FrameKind::Error,
+            FrameKind::Pong,
+        ] {
+            for codec in [Codec::Json, Codec::Binary] {
+                let f = Frame {
+                    kind,
+                    codec,
+                    tenant: Some("tenant-a".into()),
+                    payload: vec![1, 2, 3, 255, 0],
+                };
+                assert_eq!(roundtrip(&f), f);
+            }
+        }
+        // Empty payload, no tenant.
+        let f = Frame::new(FrameKind::Ping, Codec::Json, vec![]);
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean_but_truncation_is_an_error() {
+        assert!(matches!(read_frame(&mut [].as_slice()).unwrap(), ReadOutcome::Eof));
+        let mut buf = Vec::new();
+        let f = Frame::new(FrameKind::Quant, Codec::Binary, vec![9; 32]);
+        write_frame(&mut buf, &f).unwrap();
+        // Cut at every prefix: a frame boundary is clean EOF; anything
+        // else is a truncation error — never a bogus frame, never a
+        // panic.
+        for cut in 1..buf.len() {
+            match read_frame(&mut buf[..cut].as_slice()) {
+                Err(Error::Io(e)) => assert_eq!(e.kind(), ErrorKind::UnexpectedEof, "cut={cut}"),
+                other => panic!("cut={cut}: expected truncation error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn protocol_violations_are_rejected() {
+        let mut good = Vec::new();
+        write_frame(&mut good, &Frame::new(FrameKind::Ping, Codec::Json, vec![])).unwrap();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'x';
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+        // Unsupported version.
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[5] = 0x7f;
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+        // Unknown codec.
+        let mut bad = good.clone();
+        bad[6] = 7;
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+        // Over-long tenant claim.
+        let mut bad = good.clone();
+        bad[7] = 200;
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+        // Oversized payload claim: rejected from the header alone —
+        // nothing that large is ever allocated or read.
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_frame(&mut bad.as_slice()), Err(Error::InvalidInput(_))));
+    }
+
+    #[test]
+    fn writer_enforces_the_same_limits() {
+        let long_tenant = Frame {
+            kind: FrameKind::Quant,
+            codec: Codec::Json,
+            tenant: Some("t".repeat(MAX_TENANT + 1)),
+            payload: vec![],
+        };
+        assert!(write_frame(&mut Vec::new(), &long_tenant).is_err());
+    }
+
+    #[test]
+    fn two_frames_back_to_back_parse_in_order() {
+        let a = Frame::new(FrameKind::Quant, Codec::Binary, vec![1]);
+        let b = Frame::new(FrameKind::Result, Codec::Json, vec![2, 3]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &a).unwrap();
+        write_frame(&mut buf, &b).unwrap();
+        let mut r = buf.as_slice();
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadOutcome::Frame(f) if f == a));
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadOutcome::Frame(f) if f == b));
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn kind_and_codec_bytes_are_stable() {
+        // Wire compatibility pin: these bytes are the protocol.
+        for (kind, byte) in [
+            (FrameKind::Quant, 0x01),
+            (FrameKind::Ping, 0x02),
+            (FrameKind::Result, 0x81),
+            (FrameKind::Shed, 0x82),
+            (FrameKind::Error, 0x83),
+            (FrameKind::Pong, 0x84),
+        ] {
+            assert_eq!(kind.as_u8(), byte);
+            assert_eq!(FrameKind::from_u8(byte).unwrap(), kind);
+        }
+        assert_eq!(Codec::Json.as_u8(), 0);
+        assert_eq!(Codec::Binary.as_u8(), 1);
+        assert_eq!(Codec::parse("json").unwrap(), Codec::Json);
+        assert_eq!(Codec::parse("binary").unwrap(), Codec::Binary);
+        assert!(Codec::parse("protobuf").is_err());
+        assert_eq!(Codec::Binary.id(), "binary");
+    }
+}

@@ -1,0 +1,349 @@
+//! Closed-loop load generator for a running [`super::Server`]: N client
+//! connections, a deterministic multi-tenant job mix, and a latency /
+//! shed-rate report. Powers `sqlsq loadgen`, the serve bench, and the
+//! CI smoke job.
+//!
+//! The mix is fully seeded — job `i`'s tenant, method, lane and data
+//! depend only on `i` and [`LoadSpec::seed`] — so two runs against
+//! equivalent servers draw identical offered load. `distinct` bounds
+//! how many unique vectors the run cycles through, which makes it the
+//! cache-hit-rate knob: `distinct = jobs` means all misses, small
+//! `distinct` makes most jobs repeat submissions.
+
+use super::client::{Client, WireReply};
+use super::frame::Codec;
+use super::protocol::WireRequest;
+use crate::coordinator::Payload;
+use crate::data::rng::Pcg32;
+use crate::jsonio::Json;
+use crate::quant::{Precision, QuantMethod, QuantOptions};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// What load to offer (see the module docs for determinism notes).
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Server address, `host:port`.
+    pub addr: String,
+    /// Total jobs across all connections.
+    pub jobs: usize,
+    /// Concurrent client connections (each a thread).
+    pub conns: usize,
+    /// Tenant pool size; job `i` runs as `tenant-{i % tenants}`.
+    pub tenants: usize,
+    /// Payload codec for requests and results.
+    pub codec: Codec,
+    /// Unique vectors in the mix (the cache-hit knob).
+    pub distinct: usize,
+    /// Elements per vector.
+    pub n: usize,
+    /// Base seed for the deterministic mix.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            addr: "127.0.0.1:7878".into(),
+            jobs: 64,
+            conns: 4,
+            tenants: 2,
+            codec: Codec::Binary,
+            distinct: 8,
+            n: 256,
+            seed: 1,
+        }
+    }
+}
+
+/// What happened: counts, wall time, latency percentiles, per-tenant
+/// completion shares.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Jobs that returned a result.
+    pub completed: u64,
+    /// Jobs shed by admission control or queue backpressure.
+    pub shed: u64,
+    /// Jobs that returned an error payload or hit a transport failure.
+    pub errors: u64,
+    /// Whole-run wall time.
+    pub wall: Duration,
+    /// Completed jobs per second of wall time.
+    pub throughput: f64,
+    /// Median request latency, microseconds (completed jobs only).
+    pub p50_us: f64,
+    /// 95th-percentile request latency, microseconds.
+    pub p95_us: f64,
+    /// 99th-percentile request latency, microseconds.
+    pub p99_us: f64,
+    /// Mean request latency, microseconds.
+    pub mean_us: f64,
+    /// Completed-job count per tenant id, sorted by tenant.
+    pub per_tenant_completed: Vec<(String, u64)>,
+    /// `shed / (completed + shed + errors)`.
+    pub shed_rate: f64,
+}
+
+impl LoadReport {
+    /// JSON form for bench emission and the CLI.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::Num(self.completed as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("wall_ms", Json::Num(self.wall.as_secs_f64() * 1e3)),
+            ("throughput_jobs_per_s", Json::Num(self.throughput)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            (
+                "per_tenant_completed",
+                Json::Obj(
+                    self.per_tenant_completed
+                        .iter()
+                        .map(|(t, c)| (t.clone(), Json::Num(*c as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "completed {} | shed {} ({:.1}%) | errors {} | {:.1} jobs/s | \
+             p50 {:.0}us p95 {:.0}us p99 {:.0}us",
+            self.completed,
+            self.shed,
+            self.shed_rate * 100.0,
+            self.errors,
+            self.throughput,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us
+        )
+    }
+}
+
+/// The deterministic request for job `i` under `spec`.
+fn job_request(spec: &LoadSpec, i: usize) -> WireRequest {
+    let distinct = spec.distinct.max(1);
+    let mut rng = Pcg32::new(spec.seed.wrapping_add((i % distinct) as u64), 77);
+    let n = spec.n.max(4);
+    // Two clusters plus noise: structured enough that every method in
+    // the mix produces a non-trivial codebook.
+    let data: Vec<f64> = (0..n)
+        .map(|j| {
+            let base = if j % 2 == 0 { 1.0 } else { -1.0 };
+            base + rng.uniform(-0.25, 0.25)
+        })
+        .collect();
+    let (method, opts) = match i % 4 {
+        0 => (
+            QuantMethod::L1LeastSquare,
+            QuantOptions { lambda1: 0.05, ..Default::default() },
+        ),
+        1 => (QuantMethod::KMeans, QuantOptions { target_values: 4, ..Default::default() }),
+        2 => (
+            QuantMethod::ClusterLs,
+            QuantOptions { target_values: 8, ..Default::default() },
+        ),
+        _ => (QuantMethod::L1, QuantOptions { lambda1: 0.01, ..Default::default() }),
+    };
+    let lane_f32 = i % 3 == 2;
+    let opts = QuantOptions {
+        precision: if lane_f32 { Precision::F32 } else { Precision::F64 },
+        ..opts
+    };
+    let payload = if lane_f32 {
+        Payload::F32(data.iter().map(|&x| x as f32).collect::<Vec<_>>().into())
+    } else {
+        Payload::F64(data.into())
+    };
+    WireRequest { method, opts, payload }
+}
+
+/// Per-worker tallies, merged after the join.
+#[derive(Default)]
+struct Tally {
+    completed: u64,
+    shed: u64,
+    errors: u64,
+    latencies_us: Vec<f64>,
+    per_tenant: BTreeMap<String, u64>,
+}
+
+fn run_worker(spec: &LoadSpec, worker: usize) -> Tally {
+    let mut t = Tally::default();
+    let mut client = match Client::connect(&spec.addr, spec.codec, None) {
+        Ok(c) => c,
+        Err(_) => {
+            // Count every job this worker owned as a transport error.
+            t.errors = (worker..spec.jobs).step_by(spec.conns.max(1)).count() as u64;
+            return t;
+        }
+    };
+    let tenants = spec.tenants.max(1);
+    let mut i = worker;
+    while i < spec.jobs {
+        let tenant = format!("tenant-{}", i % tenants);
+        let req = job_request(spec, i);
+        let started = Instant::now();
+        match client.quant_as(Some(&tenant), &req) {
+            Ok(WireReply::Result(_)) => {
+                t.completed += 1;
+                t.latencies_us.push(started.elapsed().as_secs_f64() * 1e6);
+                *t.per_tenant.entry(tenant).or_insert(0) += 1;
+            }
+            Ok(WireReply::Shed { .. }) => t.shed += 1,
+            Ok(WireReply::Error(_)) => t.errors += 1,
+            Err(_) => {
+                // Transport failure (e.g. the server closed a draining
+                // connection). Reconnect once; if that fails, charge the
+                // remaining jobs as errors and stop.
+                t.errors += 1;
+                match Client::connect(&spec.addr, spec.codec, None) {
+                    Ok(c) => client = c,
+                    Err(_) => {
+                        let mut rest = i + spec.conns.max(1);
+                        while rest < spec.jobs {
+                            t.errors += 1;
+                            rest += spec.conns.max(1);
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        i += spec.conns.max(1);
+    }
+    t
+}
+
+/// Offer the whole mix and report. Errs only on total transport failure
+/// (zero jobs got any response at all); sheds and per-job errors are
+/// data, not failures — callers decide what rate is acceptable.
+pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
+    if spec.jobs == 0 {
+        return Err(Error::Config("loadgen: jobs must be > 0".into()));
+    }
+    let conns = spec.conns.clamp(1, spec.jobs);
+    let started = Instant::now();
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(conns);
+        for w in 0..conns {
+            let spec_ref = &*spec;
+            handles.push(s.spawn(move || run_worker(spec_ref, w)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let wall = started.elapsed();
+
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut errors = 0u64;
+    let mut lats: Vec<f64> = Vec::new();
+    let mut per_tenant: BTreeMap<String, u64> = BTreeMap::new();
+    for t in tallies {
+        completed += t.completed;
+        shed += t.shed;
+        errors += t.errors;
+        lats.extend(t.latencies_us);
+        for (k, v) in t.per_tenant {
+            *per_tenant.entry(k).or_insert(0) += v;
+        }
+    }
+    let answered = completed + shed + errors;
+    if completed + shed == 0 {
+        return Err(Error::Runtime(format!(
+            "loadgen: no job got a response from {} ({errors} transport errors)",
+            spec.addr
+        )));
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let pct = |p: f64| -> f64 {
+        if lats.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p * lats.len() as f64).ceil() as usize).saturating_sub(1);
+        lats[idx.min(lats.len() - 1)]
+    };
+    let mean = if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 };
+    Ok(LoadReport {
+        completed,
+        shed,
+        errors,
+        wall,
+        throughput: completed as f64 / wall.as_secs_f64().max(1e-9),
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        mean_us: mean,
+        per_tenant_completed: per_tenant.into_iter().collect(),
+        shed_rate: shed as f64 / answered.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_mix_is_deterministic_and_respects_distinct() {
+        let spec = LoadSpec { distinct: 2, ..Default::default() };
+        let a = job_request(&spec, 0);
+        let b = job_request(&spec, 0);
+        let (Payload::F64(av), Payload::F64(bv)) = (&a.payload, &b.payload) else {
+            panic!("job 0 is on the f64 lane");
+        };
+        assert_eq!(av.len(), bv.len());
+        for (x, y) in av.iter().zip(bv.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "same job, same bits");
+        }
+        // distinct=2: job 4 reuses job 0's vector seed (and both are
+        // method slot 0, f64 lane), while job 2 differs.
+        let c = job_request(&spec, 4);
+        let Payload::F64(cv) = &c.payload else { panic!("job 4 is on the f64 lane") };
+        for (x, y) in av.iter().zip(cv.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "distinct cycles the data");
+        }
+        assert_eq!(a.method, QuantMethod::L1LeastSquare);
+        assert_eq!(job_request(&spec, 1).method, QuantMethod::KMeans);
+        assert_eq!(job_request(&spec, 2).opts.precision, Precision::F32);
+    }
+
+    #[test]
+    fn report_json_has_the_series_the_bench_asserts_on() {
+        let r = LoadReport {
+            completed: 10,
+            shed: 2,
+            errors: 0,
+            wall: Duration::from_millis(100),
+            throughput: 100.0,
+            p50_us: 1.0,
+            p95_us: 2.0,
+            p99_us: 3.0,
+            mean_us: 1.5,
+            per_tenant_completed: vec![("tenant-0".into(), 6), ("tenant-1".into(), 4)],
+            shed_rate: 2.0 / 12.0,
+        };
+        let j = r.to_json();
+        for key in
+            ["completed", "shed", "throughput_jobs_per_s", "p50_us", "p99_us", "shed_rate"]
+        {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let per = j.get("per_tenant_completed").unwrap();
+        assert_eq!(per.get("tenant-0").and_then(Json::as_usize), Some(6));
+        assert!(!r.summary().is_empty());
+    }
+
+    #[test]
+    fn zero_jobs_is_a_config_error() {
+        let spec = LoadSpec { jobs: 0, ..Default::default() };
+        assert!(matches!(run(&spec), Err(Error::Config(_))));
+    }
+}

@@ -1,0 +1,43 @@
+//! Network serve front end: a socket server over the
+//! [`Coordinator`](crate::coordinator::Coordinator) with admission
+//! control, per-tenant fairness, and load shedding.
+//!
+//! The stack, bottom up:
+//!
+//! * [`frame`] — length-prefixed framing over a TCP stream: a fixed
+//!   12-byte header (magic, version, kind, codec, tenant length,
+//!   payload length), then the tenant id and payload. Malformed
+//!   headers are protocol violations (connection closes); oversized
+//!   claims are rejected before allocation.
+//! * [`protocol`] — the payload codecs: jsonio JSON (debuggable) and
+//!   compact little-endian binary (production). Both round-trip every
+//!   float bitwise; SHED/error payloads are always JSON.
+//! * [`admission`] — per-tenant token buckets; an empty bucket sheds
+//!   with a computed retry-after hint.
+//! * [`server`] — the accept loop, per-connection handlers, the three
+//!   shedding gates (connection cap, tenant bucket, queue
+//!   backpressure), and graceful drain.
+//! * [`client`] — the blocking client the loadgen, CLI and tests use.
+//! * [`loadgen`] — deterministic multi-tenant load with a latency /
+//!   shed-rate report.
+//!
+//! `sqlsq listen` and `sqlsq loadgen` are the CLI doors; the
+//! `serve_load` bench drives a server in-process and emits
+//! `BENCH_serve_load.json`.
+
+pub mod admission;
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use admission::TenantBuckets;
+pub use client::{Client, WireReply};
+pub use frame::{read_frame, write_frame, Codec, Frame, FrameKind, ReadOutcome};
+pub use loadgen::{run as run_load, LoadReport, LoadSpec};
+pub use protocol::{
+    decode_error, decode_request, decode_result, decode_shed, encode_error, encode_request,
+    encode_result, encode_shed, WireRequest, WireResult,
+};
+pub use server::{ServeConfig, Server};

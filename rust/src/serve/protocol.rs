@@ -1,0 +1,814 @@
+//! Payload codecs for the network serve protocol: the JSON wire forms
+//! (debugging) and the compact binary forms (production), plus the
+//! always-JSON SHED/error payloads.
+//!
+//! # JSON forms ([`Codec::Json`])
+//!
+//! Request (`FrameKind::Quant` payload):
+//!
+//! ```json
+//! {
+//!   "method": "kmeans",
+//!   "lane":   "f64",
+//!   "data":   [1.0, 2.5, 1.0],
+//!   "opts":   { "lambda1": 0.01, "target_values": 4, "seed": "0", ... }
+//! }
+//! ```
+//!
+//! `lane` picks the payload precision (`"f32"` data is narrowed from the
+//! JSON numbers — exact for values that originated as f32). Every
+//! [`QuantOptions`] field rides in `opts`; `seed` is a **decimal string**
+//! because a u64 exceeds the integer range a JSON number (f64) carries
+//! exactly. `clamp` is `[lo, hi]` or `null`. Omitted `opts` fields take
+//! their defaults; unknown fields are ignored.
+//!
+//! Result (`FrameKind::Result` payload): the compact codebook-native
+//! form — shared levels + one index per element, never a materialized
+//! vector:
+//!
+//! ```json
+//! {
+//!   "id": 7, "served_by": "native", "lane": "f64",
+//!   "levels_requested": 4, "l2_loss": 0.0125,
+//!   "levels": [0.1, 0.5], "indices": [0, 1, 0]
+//! }
+//! ```
+//!
+//! Levels are the f64 surface on both lanes (f32 levels widen exactly,
+//! so the round trip is lossless). JSON numbers round-trip f64 bitwise
+//! (Rust's shortest-roundtrip `Display`), with one documented exception:
+//! `-0.0` serializes as `0` — ship binary if negative-zero payload bits
+//! matter.
+//!
+//! # Binary forms ([`Codec::Binary`])
+//!
+//! All integers little-endian; floats are IEEE-754 bit patterns (exact
+//! by construction). Request:
+//!
+//! ```text
+//! lane u8 (0=f64 1=f32) | method_id_len u8 | method_id bytes
+//! | opts: lambda1 f64, lambda2 f64, target_values u64, max_epochs u64,
+//!         tol f64, kmeans_restarts u64, max_iters u64, seed u64,
+//!         refit u8, max_lambda_steps u64,
+//!         clamp_tag u8 (0|1) [, lo f64, hi f64],
+//!         precision u8 (0=f64 1=f32)
+//! | n u64 | data: n × (f64|f32 per lane)
+//! ```
+//!
+//! Result:
+//!
+//! ```text
+//! id u64 | served_by u8 (0=native 1=runtime 2=cache) | lane u8
+//! | levels_requested u64 | l2_loss f64
+//! | k u64 | levels: k × f64 | n u64 | indices: n × u32
+//! ```
+//!
+//! # SHED / error payloads
+//!
+//! Always JSON, regardless of the request codec — they are tiny, rare,
+//! and must stay readable in a hex dump:
+//! `{"retry_after_ms": 40, "reason": "queue full"}` /
+//! `{"error": "..."}`.
+//!
+//! Every decoder validates sizes/ids and rejects trailing bytes; a bad
+//! payload is a request-level error (the connection survives), unlike
+//! the frame-level violations of [`super::frame`].
+
+use super::frame::Codec;
+use crate::coordinator::Payload;
+use crate::jsonio::{self, Json};
+use crate::quant::{Precision, QuantMethod, QuantOptions};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A decoded quantization request as it crosses the wire: the payload in
+/// its submitted lane, the method, and the full option set.
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    /// Algorithm to run.
+    pub method: QuantMethod,
+    /// Full options (the target level count rides in
+    /// `opts.target_values`).
+    pub opts: QuantOptions,
+    /// The vector to quantize, in its lane.
+    pub payload: Payload,
+}
+
+/// A decoded quantization result: the compact codebook plus identity and
+/// accounting fields. Client-side mirror of the coordinator's
+/// `JobOutput` surface (levels on f64 — exact for both lanes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResult {
+    /// Server-side job id.
+    pub id: u64,
+    /// Which engine served it: "native" | "runtime" | "cache".
+    pub served_by: String,
+    /// The lane the job was solved on.
+    pub lane: Precision,
+    /// The level count the request asked for.
+    pub levels_requested: usize,
+    /// Squared-l2 information loss.
+    pub l2_loss: f64,
+    /// Distinct quantization levels, ascending, f64 surface.
+    pub levels: Vec<f64>,
+    /// One index per input element into `levels`.
+    pub indices: Vec<u32>,
+}
+
+impl WireResult {
+    /// Materialize the full-length quantized vector (edge decode).
+    pub fn decode(&self) -> Vec<f64> {
+        self.indices.iter().map(|&i| self.levels[i as usize]).collect()
+    }
+}
+
+fn bad(what: &str, msg: &str) -> Error {
+    Error::InvalidInput(format!("{what} wire: {msg}"))
+}
+
+// ---------------------------------------------------------------------
+// JSON codec
+// ---------------------------------------------------------------------
+
+fn opts_to_json(o: &QuantOptions) -> Json {
+    Json::obj(vec![
+        ("lambda1", Json::Num(o.lambda1)),
+        ("lambda2", Json::Num(o.lambda2)),
+        ("target_values", Json::Num(o.target_values as f64)),
+        ("max_epochs", Json::Num(o.max_epochs as f64)),
+        ("tol", Json::Num(o.tol)),
+        ("kmeans_restarts", Json::Num(o.kmeans_restarts as f64)),
+        ("max_iters", Json::Num(o.max_iters as f64)),
+        ("seed", Json::Str(o.seed.to_string())),
+        ("refit", Json::Bool(o.refit)),
+        ("max_lambda_steps", Json::Num(o.max_lambda_steps as f64)),
+        (
+            "clamp",
+            match o.clamp {
+                None => Json::Null,
+                Some((lo, hi)) => Json::Arr(vec![Json::Num(lo), Json::Num(hi)]),
+            },
+        ),
+        ("precision", Json::Str(o.precision.id().into())),
+    ])
+}
+
+fn opts_from_json(j: &Json) -> Result<QuantOptions> {
+    let mut o = QuantOptions::default();
+    let e = |m: &str| bad("request", m);
+    if let Some(v) = j.get("lambda1") {
+        o.lambda1 = v.as_f64().ok_or_else(|| e("'lambda1' must be a number"))?;
+    }
+    if let Some(v) = j.get("lambda2") {
+        o.lambda2 = v.as_f64().ok_or_else(|| e("'lambda2' must be a number"))?;
+    }
+    if let Some(v) = j.get("target_values") {
+        o.target_values = v.as_usize().ok_or_else(|| e("'target_values' must be an integer"))?;
+    }
+    if let Some(v) = j.get("max_epochs") {
+        o.max_epochs = v.as_usize().ok_or_else(|| e("'max_epochs' must be an integer"))?;
+    }
+    if let Some(v) = j.get("tol") {
+        o.tol = v.as_f64().ok_or_else(|| e("'tol' must be a number"))?;
+    }
+    if let Some(v) = j.get("kmeans_restarts") {
+        o.kmeans_restarts =
+            v.as_usize().ok_or_else(|| e("'kmeans_restarts' must be an integer"))?;
+    }
+    if let Some(v) = j.get("max_iters") {
+        o.max_iters = v.as_usize().ok_or_else(|| e("'max_iters' must be an integer"))?;
+    }
+    if let Some(v) = j.get("seed") {
+        let s = v.as_str().ok_or_else(|| e("'seed' must be a decimal string"))?;
+        o.seed = s.parse().map_err(|_| e("'seed' must be a decimal u64 string"))?;
+    }
+    if let Some(v) = j.get("refit") {
+        o.refit = v.as_bool().ok_or_else(|| e("'refit' must be a bool"))?;
+    }
+    if let Some(v) = j.get("max_lambda_steps") {
+        o.max_lambda_steps =
+            v.as_usize().ok_or_else(|| e("'max_lambda_steps' must be an integer"))?;
+    }
+    match j.get("clamp") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let arr = v.as_arr().ok_or_else(|| e("'clamp' must be [lo, hi] or null"))?;
+            if arr.len() != 2 {
+                return Err(e("'clamp' must have exactly two elements"));
+            }
+            let lo = arr[0].as_f64().ok_or_else(|| e("'clamp' elements must be numbers"))?;
+            let hi = arr[1].as_f64().ok_or_else(|| e("'clamp' elements must be numbers"))?;
+            o.clamp = Some((lo, hi));
+        }
+    }
+    if let Some(v) = j.get("precision") {
+        let s = v.as_str().ok_or_else(|| e("'precision' must be \"f64\" or \"f32\""))?;
+        o.precision =
+            Precision::from_id(s).ok_or_else(|| e("'precision' must be \"f64\" or \"f32\""))?;
+    }
+    Ok(o)
+}
+
+fn request_to_json(req: &WireRequest) -> Json {
+    let data = match &req.payload {
+        Payload::F64(v) => Json::Arr(v.iter().map(|&x| Json::Num(x)).collect()),
+        Payload::F32(v) => Json::Arr(v.iter().map(|&x| Json::Num(f64::from(x))).collect()),
+    };
+    Json::obj(vec![
+        ("method", Json::Str(req.method.id().into())),
+        ("lane", Json::Str(req.payload.precision().id().into())),
+        ("data", data),
+        ("opts", opts_to_json(&req.opts)),
+    ])
+}
+
+fn request_from_json(j: &Json) -> Result<WireRequest> {
+    let e = |m: &str| bad("request", m);
+    let method_id = j
+        .get("method")
+        .and_then(Json::as_str)
+        .ok_or_else(|| e("missing string 'method'"))?;
+    let method = QuantMethod::from_id(method_id)
+        .ok_or_else(|| e(&format!("unknown method '{method_id}'")))?;
+    let lane_id = j.get("lane").and_then(Json::as_str).unwrap_or("f64");
+    let lane = Precision::from_id(lane_id)
+        .ok_or_else(|| e(&format!("unknown lane '{lane_id}' (f64|f32)")))?;
+    let data = j.get("data").and_then(Json::as_arr).ok_or_else(|| e("missing 'data' array"))?;
+    let nums: Vec<f64> = data
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| e("non-numeric 'data' element")))
+        .collect::<Result<_>>()?;
+    let opts = match j.get("opts") {
+        Some(o) => opts_from_json(o)?,
+        None => QuantOptions::default(),
+    };
+    let payload = match lane {
+        Precision::F64 => Payload::F64(nums.into()),
+        Precision::F32 => {
+            Payload::F32(nums.iter().map(|&x| x as f32).collect::<Vec<_>>().into())
+        }
+    };
+    Ok(WireRequest { method, opts, payload })
+}
+
+fn result_to_json(res: &WireResult) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(res.id as f64)),
+        ("served_by", Json::Str(res.served_by.clone())),
+        ("lane", Json::Str(res.lane.id().into())),
+        ("levels_requested", Json::Num(res.levels_requested as f64)),
+        ("l2_loss", Json::Num(res.l2_loss)),
+        ("levels", Json::Arr(res.levels.iter().map(|&v| Json::Num(v)).collect())),
+        (
+            "indices",
+            Json::Arr(res.indices.iter().map(|&i| Json::Num(f64::from(i))).collect()),
+        ),
+    ])
+}
+
+fn result_from_json(j: &Json) -> Result<WireResult> {
+    let e = |m: &str| bad("result", m);
+    let levels: Vec<f64> = j
+        .get("levels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| e("missing 'levels' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| e("non-numeric level")))
+        .collect::<Result<_>>()?;
+    let indices: Vec<u32> = j
+        .get("indices")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| e("missing 'indices' array"))?
+        .iter()
+        .map(|v| {
+            let i = v.as_usize().ok_or_else(|| e("index not a non-negative integer"))?;
+            if i >= levels.len() {
+                return Err(e("index out of range of 'levels'"));
+            }
+            Ok(i as u32)
+        })
+        .collect::<Result<_>>()?;
+    let lane_id = j.get("lane").and_then(Json::as_str).unwrap_or("f64");
+    Ok(WireResult {
+        id: j.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        served_by: j
+            .get("served_by")
+            .and_then(Json::as_str)
+            .unwrap_or("native")
+            .to_string(),
+        lane: Precision::from_id(lane_id).ok_or_else(|| e("unknown 'lane'"))?,
+        levels_requested: j
+            .get("levels_requested")
+            .and_then(Json::as_usize)
+            .unwrap_or(levels.len()),
+        l2_loss: j.get("l2_loss").and_then(Json::as_f64).unwrap_or(0.0),
+        levels,
+        indices,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------
+
+/// Byte-stream writer helpers for the binary forms.
+struct Enc {
+    out: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { out: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.out.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+}
+
+/// Byte-stream reader over one payload; rejects short reads and (via
+/// [`Dec::finish`]) trailing bytes.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8], what: &'static str) -> Dec<'a> {
+        Dec { buf, pos: 0, what }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad(self.what, "payload truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    /// Length-prefix sanity: a claimed element count can never imply more
+    /// bytes than remain in the payload.
+    fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| bad(self.what, "length prefix overflows"))?;
+        if self.pos + need > self.buf.len() {
+            return Err(bad(self.what, "length prefix exceeds payload"));
+        }
+        Ok(n)
+    }
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad(self.what, "trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+fn opts_to_bin(e: &mut Enc, o: &QuantOptions) {
+    e.f64(o.lambda1);
+    e.f64(o.lambda2);
+    e.u64(o.target_values as u64);
+    e.u64(o.max_epochs as u64);
+    e.f64(o.tol);
+    e.u64(o.kmeans_restarts as u64);
+    e.u64(o.max_iters as u64);
+    e.u64(o.seed);
+    e.u8(u8::from(o.refit));
+    e.u64(o.max_lambda_steps as u64);
+    match o.clamp {
+        None => e.u8(0),
+        Some((lo, hi)) => {
+            e.u8(1);
+            e.f64(lo);
+            e.f64(hi);
+        }
+    }
+    e.u8(match o.precision {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+    });
+}
+
+fn opts_from_bin(d: &mut Dec<'_>) -> Result<QuantOptions> {
+    let lambda1 = d.f64()?;
+    let lambda2 = d.f64()?;
+    let target_values = d.u64()? as usize;
+    let max_epochs = d.u64()? as usize;
+    let tol = d.f64()?;
+    let kmeans_restarts = d.u64()? as usize;
+    let max_iters = d.u64()? as usize;
+    let seed = d.u64()?;
+    let refit = match d.u8()? {
+        0 => false,
+        1 => true,
+        b => return Err(bad(d.what, &format!("bad refit byte {b}"))),
+    };
+    let max_lambda_steps = d.u64()? as usize;
+    let clamp = match d.u8()? {
+        0 => None,
+        1 => Some((d.f64()?, d.f64()?)),
+        b => return Err(bad(d.what, &format!("bad clamp tag {b}"))),
+    };
+    let precision = match d.u8()? {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        b => return Err(bad(d.what, &format!("bad precision byte {b}"))),
+    };
+    Ok(QuantOptions {
+        lambda1,
+        lambda2,
+        target_values,
+        max_epochs,
+        tol,
+        kmeans_restarts,
+        max_iters,
+        seed,
+        refit,
+        max_lambda_steps,
+        clamp,
+        precision,
+    })
+}
+
+fn request_to_bin(req: &WireRequest) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u8(match req.payload.precision() {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+    });
+    let id = req.method.id();
+    e.u8(id.len() as u8);
+    e.out.extend_from_slice(id.as_bytes());
+    opts_to_bin(&mut e, &req.opts);
+    match &req.payload {
+        Payload::F64(v) => {
+            e.u64(v.len() as u64);
+            for &x in v.iter() {
+                e.f64(x);
+            }
+        }
+        Payload::F32(v) => {
+            e.u64(v.len() as u64);
+            for &x in v.iter() {
+                e.f32(x);
+            }
+        }
+    }
+    e.out
+}
+
+fn request_from_bin(buf: &[u8]) -> Result<WireRequest> {
+    let mut d = Dec::new(buf, "request");
+    let lane = match d.u8()? {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        b => return Err(bad("request", &format!("bad lane byte {b}"))),
+    };
+    let id_len = d.u8()? as usize;
+    let id_bytes = d.take(id_len)?;
+    let id = std::str::from_utf8(id_bytes)
+        .map_err(|_| bad("request", "method id is not UTF-8"))?;
+    let method =
+        QuantMethod::from_id(id).ok_or_else(|| bad("request", "unknown method id"))?;
+    let opts = opts_from_bin(&mut d)?;
+    let payload = match lane {
+        Precision::F64 => {
+            let n = d.len_prefix(8)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(d.f64()?);
+            }
+            Payload::F64(Arc::from(v))
+        }
+        Precision::F32 => {
+            let n = d.len_prefix(4)?;
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(d.f32()?);
+            }
+            Payload::F32(Arc::from(v))
+        }
+    };
+    d.finish()?;
+    Ok(WireRequest { method, opts, payload })
+}
+
+fn result_to_bin(res: &WireResult) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(res.id);
+    e.u8(match res.served_by.as_str() {
+        "runtime" => 1,
+        "cache" => 2,
+        _ => 0,
+    });
+    e.u8(match res.lane {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+    });
+    e.u64(res.levels_requested as u64);
+    e.f64(res.l2_loss);
+    e.u64(res.levels.len() as u64);
+    for &l in &res.levels {
+        e.f64(l);
+    }
+    e.u64(res.indices.len() as u64);
+    for &i in &res.indices {
+        e.u32(i);
+    }
+    e.out
+}
+
+fn result_from_bin(buf: &[u8]) -> Result<WireResult> {
+    let mut d = Dec::new(buf, "result");
+    let id = d.u64()?;
+    let served_by = match d.u8()? {
+        0 => "native",
+        1 => "runtime",
+        2 => "cache",
+        b => return Err(bad("result", &format!("bad served_by byte {b}"))),
+    }
+    .to_string();
+    let lane = match d.u8()? {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        b => return Err(bad("result", &format!("bad lane byte {b}"))),
+    };
+    let levels_requested = d.u64()? as usize;
+    let l2_loss = d.f64()?;
+    let k = d.len_prefix(8)?;
+    let mut levels = Vec::with_capacity(k);
+    for _ in 0..k {
+        levels.push(d.f64()?);
+    }
+    let n = d.len_prefix(4)?;
+    let mut indices = Vec::with_capacity(n);
+    for _ in 0..n {
+        let i = d.u32()?;
+        if i as usize >= levels.len() {
+            return Err(bad("result", "index out of range of levels"));
+        }
+        indices.push(i);
+    }
+    d.finish()?;
+    Ok(WireResult { id, served_by, lane, levels_requested, l2_loss, levels, indices })
+}
+
+// ---------------------------------------------------------------------
+// Public codec surface
+// ---------------------------------------------------------------------
+
+/// Encode a request payload under `codec`.
+pub fn encode_request(req: &WireRequest, codec: Codec) -> Vec<u8> {
+    match codec {
+        Codec::Json => request_to_json(req).to_string().into_bytes(),
+        Codec::Binary => request_to_bin(req),
+    }
+}
+
+/// Decode a request payload under `codec`. Errors are request-level
+/// ([`Error::InvalidInput`]): the connection survives them.
+pub fn decode_request(payload: &[u8], codec: Codec) -> Result<WireRequest> {
+    match codec {
+        Codec::Json => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| bad("request", "payload is not UTF-8"))?;
+            request_from_json(&jsonio::parse(text)?)
+        }
+        Codec::Binary => request_from_bin(payload),
+    }
+}
+
+/// Encode a result payload under `codec`.
+pub fn encode_result(res: &WireResult, codec: Codec) -> Vec<u8> {
+    match codec {
+        Codec::Json => result_to_json(res).to_string().into_bytes(),
+        Codec::Binary => result_to_bin(res),
+    }
+}
+
+/// Decode a result payload under `codec`.
+pub fn decode_result(payload: &[u8], codec: Codec) -> Result<WireResult> {
+    match codec {
+        Codec::Json => {
+            let text = std::str::from_utf8(payload)
+                .map_err(|_| bad("result", "payload is not UTF-8"))?;
+            result_from_json(&jsonio::parse(text)?)
+        }
+        Codec::Binary => result_from_bin(payload),
+    }
+}
+
+/// Encode a SHED payload (always JSON; see the module docs).
+pub fn encode_shed(retry_after_ms: u64, reason: &str) -> Vec<u8> {
+    Json::obj(vec![
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+        ("reason", Json::Str(reason.into())),
+    ])
+    .to_string()
+    .into_bytes()
+}
+
+/// Decode a SHED payload into `(retry_after_ms, reason)`.
+pub fn decode_shed(payload: &[u8]) -> Result<(u64, String)> {
+    let text =
+        std::str::from_utf8(payload).map_err(|_| bad("shed", "payload is not UTF-8"))?;
+    let j = jsonio::parse(text)?;
+    let retry = j
+        .get("retry_after_ms")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("shed", "missing integer 'retry_after_ms'"))? as u64;
+    let reason = j.get("reason").and_then(Json::as_str).unwrap_or("").to_string();
+    Ok((retry, reason))
+}
+
+/// Encode an error payload (always JSON; see the module docs).
+pub fn encode_error(msg: &str) -> Vec<u8> {
+    Json::obj(vec![("error", Json::Str(msg.into()))]).to_string().into_bytes()
+}
+
+/// Decode an error payload into its message.
+pub fn decode_error(payload: &[u8]) -> Result<String> {
+    let text =
+        std::str::from_utf8(payload).map_err(|_| bad("error", "payload is not UTF-8"))?;
+    let j = jsonio::parse(text)?;
+    Ok(j.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request(lane: Precision) -> WireRequest {
+        let opts = QuantOptions {
+            lambda1: 0.037,
+            target_values: 5,
+            seed: u64::MAX - 17, // exceeds f64's exact integer range on purpose
+            clamp: Some((-1.5, 2.5)),
+            precision: lane,
+            ..Default::default()
+        };
+        let payload = match lane {
+            Precision::F64 => {
+                Payload::F64(vec![1.25, -0.5, 3.75, 1.25, 0.1 + 0.2].into())
+            }
+            Precision::F32 => Payload::F32(vec![1.25f32, -0.5, 3.75, 0.3].into()),
+        };
+        WireRequest { method: QuantMethod::L1LeastSquare, opts, payload }
+    }
+
+    fn payload_bits(p: &Payload) -> Vec<u64> {
+        match p {
+            Payload::F64(v) => v.iter().map(|x| x.to_bits()).collect(),
+            Payload::F32(v) => v.iter().map(|x| u64::from(x.to_bits())).collect(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_is_bitwise_on_both_codecs_and_lanes() {
+        for codec in [Codec::Json, Codec::Binary] {
+            for lane in [Precision::F64, Precision::F32] {
+                let req = sample_request(lane);
+                let back = decode_request(&encode_request(&req, codec), codec).unwrap();
+                assert_eq!(back.method, req.method, "{codec:?}/{lane:?}");
+                assert_eq!(
+                    payload_bits(&back.payload),
+                    payload_bits(&req.payload),
+                    "{codec:?}/{lane:?}: payload bits"
+                );
+                assert!(
+                    crate::quant::api::opts_bits_eq(&back.opts, &req.opts),
+                    "{codec:?}/{lane:?}: option bits"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn result_roundtrip_is_bitwise_on_both_codecs() {
+        let res = WireResult {
+            id: 42,
+            served_by: "cache".into(),
+            lane: Precision::F32,
+            levels_requested: 4,
+            l2_loss: 0.1 + 0.2, // a value with a non-terminating binary tail
+            levels: vec![-2.5, 0.1 + 0.2, 7.0],
+            indices: vec![0, 2, 1, 1, 0],
+        };
+        for codec in [Codec::Json, Codec::Binary] {
+            let back = decode_result(&encode_result(&res, codec), codec).unwrap();
+            assert_eq!(back, res, "{codec:?}");
+            assert_eq!(back.l2_loss.to_bits(), res.l2_loss.to_bits());
+            for (a, b) in back.levels.iter().zip(&res.levels) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{codec:?}");
+            }
+            assert_eq!(back.decode().len(), 5);
+        }
+    }
+
+    #[test]
+    fn shed_and_error_payloads_roundtrip() {
+        let (ms, reason) = decode_shed(&encode_shed(40, "queue full")).unwrap();
+        assert_eq!(ms, 40);
+        assert_eq!(reason, "queue full");
+        assert_eq!(decode_error(&encode_error("boom")).unwrap(), "boom");
+        assert!(decode_shed(b"not json").is_err());
+        assert!(decode_shed(b"{}").is_err(), "retry_after_ms is mandatory");
+    }
+
+    #[test]
+    fn malformed_payloads_are_request_errors_not_panics() {
+        for codec in [Codec::Json, Codec::Binary] {
+            assert!(decode_request(&[], codec).is_err());
+            assert!(decode_request(&[0xff; 7], codec).is_err());
+            assert!(decode_result(&[], codec).is_err());
+            assert!(decode_result(&[0x01, 0x02], codec).is_err());
+        }
+        // JSON-specific: valid JSON, wrong shape.
+        assert!(decode_request(br#"{"data":[1]}"#, Codec::Json).is_err(), "missing method");
+        assert!(
+            decode_request(br#"{"method":"nope","data":[1]}"#, Codec::Json).is_err(),
+            "unknown method"
+        );
+        assert!(
+            decode_request(br#"{"method":"kmeans","lane":"f16","data":[1]}"#, Codec::Json)
+                .is_err(),
+            "unknown lane"
+        );
+        assert!(
+            decode_request(
+                br#"{"method":"kmeans","data":[1],"opts":{"seed":5}}"#,
+                Codec::Json
+            )
+            .is_err(),
+            "seed must be a decimal string"
+        );
+        // Binary-specific: a valid prefix with trailing garbage.
+        let mut good = encode_request(&sample_request(Precision::F64), Codec::Binary);
+        good.push(0);
+        assert!(decode_request(&good, Codec::Binary).is_err(), "trailing byte");
+        // Truncation at every prefix either errors or never panics.
+        let full = encode_request(&sample_request(Precision::F64), Codec::Binary);
+        for cut in 0..full.len() {
+            assert!(decode_request(&full[..cut], Codec::Binary).is_err(), "cut={cut}");
+        }
+        // A length prefix larger than the payload is rejected up front
+        // (no huge allocation attempt).
+        let res = WireResult {
+            id: 1,
+            served_by: "native".into(),
+            lane: Precision::F64,
+            levels_requested: 2,
+            l2_loss: 0.0,
+            levels: vec![1.0],
+            indices: vec![0],
+        };
+        let mut bin = encode_result(&res, Codec::Binary);
+        // levels count lives at offset 8+1+1+8+8 = 26.
+        bin[26..34].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_result(&bin, Codec::Binary).is_err());
+    }
+
+    #[test]
+    fn json_request_defaults_apply_for_omitted_fields() {
+        let req =
+            decode_request(br#"{"method":"kmeans","data":[1.0,2.0]}"#, Codec::Json).unwrap();
+        assert_eq!(req.method, QuantMethod::KMeans);
+        assert_eq!(req.payload.precision(), Precision::F64);
+        let d = QuantOptions::default();
+        assert_eq!(req.opts.target_values, d.target_values);
+        assert_eq!(req.opts.seed, d.seed);
+        assert_eq!(req.opts.refit, d.refit);
+    }
+}

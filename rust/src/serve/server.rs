@@ -1,0 +1,363 @@
+//! The socket server: accept loop, per-connection handlers, admission
+//! control, and graceful drain over a [`Coordinator`].
+//!
+//! # Lifecycle
+//!
+//! ```text
+//! accept ──▶ admit ──▶ queue ──▶ respond          (per request)
+//!   │          │          │         │
+//!   │ conn cap │ tenant   │ try_submit_request_as │ Result / Shed /
+//!   │ → SHED   │ bucket   │ Saturated → SHED      │ Error frame, same
+//!   │          │ → SHED   │ Shutdown  → close     │ codec as request
+//!   ▼
+//! drain: stop accepting ──▶ close queues ──▶ flush in-flight ──▶ join
+//! ```
+//!
+//! One OS thread per connection (bounded by `max_conns`); each handler
+//! loops `read_frame → decode → admit → submit → respond`. The handler
+//! blocks on the job's result channel — per-connection pipelining is
+//! one-at-a-time by design, matching the blocking [`super::Client`];
+//! parallelism comes from multiple connections.
+//!
+//! # Admission control and shedding
+//!
+//! Three gates, cheapest first, each mapping pressure to an explicit
+//! response rather than an open-ended stall:
+//!
+//! 1. **Connection cap** — over `max_conns`, the accept loop writes one
+//!    SHED frame and closes immediately.
+//! 2. **Tenant bucket** — [`super::TenantBuckets`] (off by default);
+//!    an empty bucket sheds with the bucket's computed retry-after.
+//! 3. **Queue backpressure** — [`Coordinator::try_submit_request_as`]
+//!    returning [`Error::Saturated`] sheds with the configured
+//!    `shed_retry_ms` hint. [`Error::Shutdown`] instead closes the
+//!    connection: the coordinator is draining and no retry against this
+//!    server can succeed.
+//!
+//! SHED and error payloads are always JSON ([`Codec::Json`] on the
+//! frame), whatever codec the request used — they are tiny and must
+//! stay readable in a packet dump.
+//!
+//! # Graceful drain
+//!
+//! [`Server::shutdown`] stops the accept loop, closes the coordinator
+//! queues via [`Coordinator::begin_drain`] (new submits refuse with
+//! [`Error::Shutdown`]; accepted jobs keep running), joins every
+//! handler once its in-flight result has been flushed, then joins the
+//! workers and returns the final [`Snapshot`]. Every job that was
+//! accepted before the drain gets its response.
+
+use super::admission::TenantBuckets;
+use super::frame::{read_frame, write_frame, Codec, Frame, FrameKind, ReadOutcome};
+use super::protocol::{decode_request, encode_error, encode_result, encode_shed, WireResult};
+use crate::coordinator::{Coordinator, Payload, Snapshot};
+use crate::quant::QuantRequest;
+use crate::{Error, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// How long a handler blocks in `read` before checking the drain flag.
+const READ_TICK: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval when no connection is pending.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// Network front-end configuration (the coordinator's own knobs ride in
+/// [`crate::Config`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, `host:port`. Port 0 picks an ephemeral port
+    /// (see [`Server::addr`]).
+    pub addr: String,
+    /// Connection cap; an accept beyond it is shed immediately.
+    pub max_conns: usize,
+    /// Per-tenant admission rate, tokens/second. `<= 0` disables
+    /// tenant fairness (the default).
+    pub tenant_rate: f64,
+    /// Per-tenant burst capacity (floored at 1).
+    pub tenant_burst: f64,
+    /// Retry-after hint on queue-backpressure SHEDs, milliseconds.
+    pub shed_retry_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_conns: 64,
+            tenant_rate: 0.0,
+            tenant_burst: 8.0,
+            shed_retry_ms: 50,
+        }
+    }
+}
+
+/// Shared state between the accept loop and the handlers.
+struct Shared {
+    coord: Coordinator,
+    buckets: TenantBuckets,
+    stop: AtomicBool,
+    conns: AtomicUsize,
+    shed_retry_ms: u64,
+}
+
+/// Decrements the live-connection count when a handler exits by any
+/// path, including a panic unwind.
+struct ConnGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running socket server owning its [`Coordinator`]. Dropping the
+/// handle without calling [`Server::shutdown`] aborts the accept loop
+/// but skips the graceful join; call `shutdown` for a clean drain.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind `scfg.addr` and start serving `coord`. The server takes
+    /// ownership of the coordinator; results, metrics and the final
+    /// drain all flow through this handle.
+    pub fn start(coord: Coordinator, scfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&scfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            coord,
+            buckets: TenantBuckets::new(scfg.tenant_rate, scfg.tenant_burst),
+            stop: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            shed_retry_ms: scfg.shed_retry_ms,
+        });
+        let handlers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            let max_conns = scfg.max_conns.max(1);
+            thread::Builder::new()
+                .name("sqlsq-accept".into())
+                .spawn(move || accept_loop(&listener, &shared, &handlers, max_conns))
+                .map_err(Error::Io)?
+        };
+        Ok(Server { shared, addr, accept: Some(accept), handlers })
+    }
+
+    /// The bound address (resolves port 0 binds to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live metrics snapshot of the underlying coordinator.
+    pub fn metrics(&self) -> Snapshot {
+        self.shared.coord.metrics()
+    }
+
+    /// Graceful drain (see the module docs): stop accepting, close the
+    /// queues, flush every in-flight job's response, join all threads,
+    /// and return the final metrics snapshot.
+    pub fn shutdown(mut self) -> Snapshot {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Close the queues now so handlers blocked in `read` refuse new
+        // work with `Shutdown` and exit at the next READ_TICK, while
+        // workers finish everything already accepted.
+        self.shared.coord.begin_drain();
+        let joins = {
+            let mut g = self.handlers.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *g)
+        };
+        for h in joins {
+            let _ = h.join();
+        }
+        // All clones are gone once the accept loop and the handlers have
+        // been joined, so the unwrap cannot fail; `shutdown` then joins
+        // the (already idle) workers for the final snapshot.
+        match Arc::try_unwrap(self.shared) {
+            Ok(s) => s.coord.shutdown(),
+            Err(arc) => arc.coord.metrics(),
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    handlers: &Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    max_conns: usize,
+) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if shared.conns.load(Ordering::SeqCst) >= max_conns {
+                    // Over capacity: one SHED frame, then hang up. The
+                    // stream is still nonblocking-inherited on some
+                    // platforms; a best-effort write is all we owe.
+                    let _ = stream.set_nonblocking(false);
+                    let mut f = Frame::new(
+                        FrameKind::Shed,
+                        Codec::Json,
+                        encode_shed(shared.shed_retry_ms, "connection limit reached"),
+                    );
+                    f.tenant = None;
+                    let _ = write_frame(&mut stream, &f);
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let conn_shared = Arc::clone(shared);
+                let spawned = thread::Builder::new()
+                    .name("sqlsq-conn".into())
+                    .spawn(move || {
+                        let _guard = ConnGuard(&conn_shared.conns);
+                        handle_conn(stream, &conn_shared);
+                    });
+                match spawned {
+                    Ok(h) => {
+                        let mut g = handlers.lock().unwrap_or_else(|e| e.into_inner());
+                        g.retain(|h| !h.is_finished());
+                        g.push(h);
+                    }
+                    Err(_) => {
+                        // Spawn failed; the guard never ran, undo here.
+                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_TICK);
+            }
+            Err(_) => thread::sleep(ACCEPT_TICK),
+        }
+    }
+}
+
+/// Per-connection handler: frames in, frames out, until EOF, a protocol
+/// violation, a write failure, or drain.
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            Ok(ReadOutcome::IdleTimeout) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Ok(ReadOutcome::Eof) => break,
+            Err(Error::InvalidInput(msg)) => {
+                // Protocol violation: the stream cannot be resynced.
+                // Best-effort error frame, then close.
+                let f = Frame::new(FrameKind::Error, Codec::Json, encode_error(&msg));
+                let _ = write_frame(&mut stream, &f);
+                break;
+            }
+            Err(_) => break, // truncated frame / hard I/O error
+        };
+        let (reply, close_after) = match frame.kind {
+            FrameKind::Ping => (Frame::new(FrameKind::Pong, frame.codec, Vec::new()), false),
+            FrameKind::Quant => handle_quant(shared, &frame),
+            // A client sending response kinds is violating the protocol.
+            FrameKind::Result | FrameKind::Shed | FrameKind::Error | FrameKind::Pong => (
+                Frame::new(
+                    FrameKind::Error,
+                    Codec::Json,
+                    encode_error("protocol violation: response kind from client"),
+                ),
+                true,
+            ),
+        };
+        if write_frame(&mut stream, &reply).is_err() || close_after {
+            break;
+        }
+    }
+}
+
+/// Serve one `Quant` frame: decode, admit, submit, wait, encode.
+/// Returns the reply and whether the connection must close afterwards
+/// (true only for the permanent [`Error::Shutdown`] refusal).
+fn handle_quant(shared: &Shared, frame: &Frame) -> (Frame, bool) {
+    let codec = frame.codec;
+    let wire = match decode_request(&frame.payload, codec) {
+        Ok(w) => w,
+        Err(e) => {
+            // Request-level error: the connection survives.
+            return (
+                Frame::new(FrameKind::Error, Codec::Json, encode_error(&e.to_string())),
+                false,
+            );
+        }
+    };
+    let tenant = frame.tenant.as_deref();
+    if let Err(wait) = shared.buckets.try_acquire(tenant.unwrap_or("")) {
+        let ms = (wait.as_millis() as u64).max(1);
+        return (
+            Frame::new(FrameKind::Shed, Codec::Json, encode_shed(ms, "tenant rate limit")),
+            false,
+        );
+    }
+    let req = match &wire.payload {
+        Payload::F64(v) => QuantRequest::shared(Arc::clone(v)),
+        Payload::F32(v) => QuantRequest::shared_f32(Arc::clone(v)),
+    }
+    .method(wire.method)
+    .options(wire.opts);
+    match shared.coord.try_submit_request_as(req, tenant) {
+        Ok((id, rx)) => match rx.recv() {
+            Ok(result) => match result.outcome {
+                Ok(out) => {
+                    let cb = out.codebook();
+                    let res = WireResult {
+                        id,
+                        served_by: result.served_by.label().to_string(),
+                        lane: out.precision(),
+                        levels_requested: out.levels_requested(),
+                        l2_loss: out.l2_loss(),
+                        levels: cb.levels,
+                        indices: cb.indices,
+                    };
+                    (Frame::new(FrameKind::Result, codec, encode_result(&res, codec)), false)
+                }
+                Err(msg) => {
+                    (Frame::new(FrameKind::Error, Codec::Json, encode_error(&msg)), false)
+                }
+            },
+            Err(_) => (
+                Frame::new(
+                    FrameKind::Error,
+                    Codec::Json,
+                    encode_error("result channel dropped before completion"),
+                ),
+                false,
+            ),
+        },
+        Err(Error::Saturated(m)) => (
+            Frame::new(FrameKind::Shed, Codec::Json, encode_shed(shared.shed_retry_ms, &m)),
+            false,
+        ),
+        // Permanent: the coordinator is draining. Report once, hang up.
+        Err(Error::Shutdown(m)) => (
+            Frame::new(
+                FrameKind::Error,
+                Codec::Json,
+                encode_error(&format!("shutting down: {m}")),
+            ),
+            true,
+        ),
+        Err(e) => {
+            (Frame::new(FrameKind::Error, Codec::Json, encode_error(&e.to_string())), false)
+        }
+    }
+}

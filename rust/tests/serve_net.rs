@@ -1,0 +1,362 @@
+//! Network serve front end, end to end over real loopback sockets
+//! (ISSUE-9 acceptance):
+//!
+//! * **loopback identity** — a quantization served over the wire is
+//!   bitwise-identical (level bits, indices, loss bits) to the same
+//!   request submitted to an in-process coordinator, on both codecs ×
+//!   both precision lanes;
+//! * **wire robustness** — malformed, truncated and oversized frames
+//!   never panic the server: protocol violations close one connection,
+//!   bad payloads in valid frames get an error reply and the
+//!   connection survives;
+//! * **saturation** — a tiny queue under flood sheds with retry-after
+//!   hints instead of hanging, and the graceful drain completes every
+//!   accepted job;
+//! * **fairness** — a flooding tenant exhausts only its own token
+//!   bucket; a polite tenant's requests all complete;
+//! * **tenant cache partitioning** — with `cache_shared false`, one
+//!   tenant's cached result is invisible to another over the wire.
+
+use sqlsq::config::{Config, Engine};
+use sqlsq::coordinator::{Coordinator, Payload};
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{Precision, QuantMethod, QuantOptions, QuantRequest};
+use sqlsq::serve::{
+    read_frame, write_frame, Client, Codec, Frame, FrameKind, ReadOutcome, ServeConfig,
+    Server, WireReply, WireRequest,
+};
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn native_config() -> Config {
+    Config { workers: 2, engine: Engine::parse("native").unwrap(), ..Config::default() }
+}
+
+fn start_server(cfg: Config, scfg: ServeConfig) -> Server {
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    Server::start(coord, ServeConfig { addr: "127.0.0.1:0".into(), ..scfg }).expect("server")
+}
+
+fn clustered(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
+        .map(|i| {
+            let center = [0.1, 0.35, 0.6, 0.9][i % 4];
+            ((center + rng.uniform(-0.02, 0.02)) * 200.0).round() / 200.0
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Loopback bitwise identity, both codecs × both lanes
+// ---------------------------------------------------------------------
+
+#[test]
+fn loopback_results_are_bitwise_identical_to_in_process_on_both_codecs_and_lanes() {
+    let baseline = Coordinator::start(native_config()).unwrap();
+    let server = start_server(native_config(), ServeConfig::default());
+    let addr = server.addr();
+
+    let data = clustered(96, 11);
+    let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    for method in [QuantMethod::L1LeastSquare, QuantMethod::KMeans] {
+        for lane in [Precision::F64, Precision::F32] {
+            let opts = QuantOptions {
+                lambda1: 0.03,
+                target_values: 4,
+                kmeans_restarts: 2,
+                seed: 5,
+                precision: lane,
+                ..Default::default()
+            };
+
+            // In-process reference result.
+            let req = match lane {
+                Precision::F64 => QuantRequest::vector(data.clone()),
+                Precision::F32 => QuantRequest::vector_f32(data32.clone()),
+            }
+            .method(method)
+            .options(opts.clone());
+            let (_, rx) = baseline.submit_request(req).unwrap();
+            let out = rx.recv().unwrap().outcome.expect("baseline solve");
+            let cb = out.codebook();
+
+            for codec in [Codec::Json, Codec::Binary] {
+                let mut client = Client::connect(addr, codec, Some("ident")).unwrap();
+                let wire_req = WireRequest {
+                    method,
+                    opts: opts.clone(),
+                    payload: match lane {
+                        Precision::F64 => Payload::F64(data.clone().into()),
+                        Precision::F32 => Payload::F32(data32.clone().into()),
+                    },
+                };
+                let tag = format!("{method:?}/{lane:?}/{codec:?}");
+                let WireReply::Result(r) = client.quant(&wire_req).unwrap() else {
+                    panic!("{tag}: expected a result");
+                };
+                assert_eq!(r.lane, lane, "{tag}");
+                assert_eq!(r.levels.len(), cb.levels.len(), "{tag}: level count");
+                for (a, b) in r.levels.iter().zip(&cb.levels) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag}: level bits");
+                }
+                assert_eq!(r.indices, cb.indices, "{tag}: indices");
+                assert_eq!(
+                    r.l2_loss.to_bits(),
+                    out.l2_loss().to_bits(),
+                    "{tag}: loss bits"
+                );
+            }
+        }
+    }
+    server.shutdown();
+    baseline.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 2. Wire robustness: malformed / truncated / oversized frames
+// ---------------------------------------------------------------------
+
+fn raw_conn(server: &Server) -> TcpStream {
+    let s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+fn assert_server_alive(server: &Server) {
+    let mut c = Client::connect(server.addr(), Codec::Binary, None).unwrap();
+    c.ping().expect("server must survive");
+}
+
+#[test]
+fn malformed_frames_close_one_connection_without_killing_the_server() {
+    let server = start_server(native_config(), ServeConfig::default());
+
+    // Garbage bytes: bad magic is a protocol violation — the server
+    // sends one error frame and hangs up.
+    let mut s = raw_conn(&server);
+    s.write_all(b"garbage-bytes-no-magic-here!").unwrap();
+    match read_frame(&mut s).unwrap() {
+        ReadOutcome::Frame(f) => assert_eq!(f.kind, FrameKind::Error),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    assert!(
+        matches!(read_frame(&mut s), Ok(ReadOutcome::Eof) | Err(_)),
+        "connection must be closed after a protocol violation"
+    );
+    assert_server_alive(&server);
+
+    // Oversized payload claim: rejected before allocation, same path.
+    let mut s = raw_conn(&server);
+    let mut header = Vec::new();
+    header.extend_from_slice(b"sqlq");
+    header.push(1); // version
+    header.push(0x01); // Quant
+    header.push(0); // json
+    header.push(0); // no tenant
+    header.extend_from_slice(&(64u32 << 20).to_le_bytes()); // 64 MiB claim
+    s.write_all(&header).unwrap();
+    match read_frame(&mut s).unwrap() {
+        ReadOutcome::Frame(f) => assert_eq!(f.kind, FrameKind::Error),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    assert_server_alive(&server);
+
+    // Truncated frame: a valid header whose body never arrives. The
+    // server times the stall out and drops the connection silently.
+    let mut s = raw_conn(&server);
+    let mut header = Vec::new();
+    header.extend_from_slice(b"sqlq");
+    header.push(1);
+    header.push(0x01);
+    header.push(0);
+    header.push(0);
+    header.extend_from_slice(&100u32.to_le_bytes());
+    s.write_all(&header).unwrap();
+    s.write_all(&[0u8; 10]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    assert!(
+        matches!(read_frame(&mut s), Ok(ReadOutcome::Eof) | Err(_)),
+        "truncated frame must close the connection, not hang"
+    );
+    assert_server_alive(&server);
+
+    server.shutdown();
+}
+
+#[test]
+fn bad_payload_in_a_valid_frame_errors_but_the_connection_survives() {
+    let server = start_server(native_config(), ServeConfig::default());
+    let mut s = raw_conn(&server);
+
+    let f = Frame::new(FrameKind::Quant, Codec::Json, b"this is not json".to_vec());
+    write_frame(&mut s, &f).unwrap();
+    match read_frame(&mut s).unwrap() {
+        ReadOutcome::Frame(f) => assert_eq!(f.kind, FrameKind::Error),
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+
+    // Same connection still serves: ping/pong round-trips.
+    let ping = Frame::new(FrameKind::Ping, Codec::Json, Vec::new());
+    write_frame(&mut s, &ping).unwrap();
+    match read_frame(&mut s).unwrap() {
+        ReadOutcome::Frame(f) => assert_eq!(f.kind, FrameKind::Pong),
+        other => panic!("expected a pong, got {other:?}"),
+    }
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 3. Saturation: tiny queue + flood → SHED, drain loses nothing
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiny_queue_flood_sheds_with_hints_and_drain_completes_every_accepted_job() {
+    let cfg = Config { workers: 1, queue_capacity: 1, ..native_config() };
+    let server = start_server(cfg, ServeConfig { shed_retry_ms: 40, ..Default::default() });
+    let addr = server.addr();
+
+    let flood = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            handles.push(scope.spawn(move || {
+                let mut client = Client::connect(addr, Codec::Binary, None).unwrap();
+                let mut completed = 0u64;
+                let mut shed = 0u64;
+                for i in 0..12u64 {
+                    // Distinct payloads: the cache can't absorb the flood.
+                    let data = clustered(512, 1000 + t * 100 + i);
+                    let req = WireRequest {
+                        method: QuantMethod::IterativeL1,
+                        opts: QuantOptions { target_values: 6, ..Default::default() },
+                        payload: Payload::F64(data.into()),
+                    };
+                    match client.quant(&req).expect("transport must stay up") {
+                        WireReply::Result(_) => completed += 1,
+                        WireReply::Shed { retry_after_ms, .. } => {
+                            assert!(retry_after_ms > 0, "shed must carry a hint");
+                            shed += 1;
+                        }
+                        WireReply::Error(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+                (completed, shed)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0u64, 0u64), |acc, r| (acc.0 + r.0, acc.1 + r.1))
+    });
+
+    let (completed, shed) = flood;
+    assert_eq!(completed + shed, 48, "every request got an explicit answer");
+    assert!(shed > 0, "a 1-deep queue under 4-way flood must shed");
+    assert!(completed > 0, "the queue still makes progress under flood");
+
+    let snap = server.shutdown();
+    assert_eq!(
+        snap.completed + snap.failed,
+        snap.submitted,
+        "drain must finish every accepted job: {}",
+        snap.summary()
+    );
+    assert_eq!(snap.completed, completed, "wire results match coordinator completions");
+}
+
+// ---------------------------------------------------------------------
+// 4. Fairness: a flooder cannot starve a polite tenant
+// ---------------------------------------------------------------------
+
+#[test]
+fn flooding_tenant_exhausts_only_its_own_bucket() {
+    // Slow refill, burst 4: the flooder's 24 rapid-fire requests mostly
+    // shed; the polite tenant's 3 (under its own burst) all complete.
+    let server = start_server(
+        native_config(),
+        ServeConfig { tenant_rate: 0.1, tenant_burst: 4.0, ..Default::default() },
+    );
+    let addr = server.addr();
+
+    let flooder = std::thread::spawn(move || {
+        let mut client = Client::connect(addr, Codec::Binary, Some("flooder")).unwrap();
+        let mut completed = 0u64;
+        let mut shed = 0u64;
+        for i in 0..24u64 {
+            let req = WireRequest {
+                method: QuantMethod::KMeans,
+                opts: QuantOptions {
+                    target_values: 4,
+                    kmeans_restarts: 1,
+                    ..Default::default()
+                },
+                payload: Payload::F64(clustered(64, 50 + i).into()),
+            };
+            match client.quant(&req).unwrap() {
+                WireReply::Result(_) => completed += 1,
+                WireReply::Shed { .. } => shed += 1,
+                WireReply::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        (completed, shed)
+    });
+
+    let mut polite = Client::connect(addr, Codec::Binary, Some("polite")).unwrap();
+    let mut polite_done = 0u64;
+    for i in 0..3u64 {
+        let req = WireRequest {
+            method: QuantMethod::KMeans,
+            opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
+            payload: Payload::F64(clustered(64, 900 + i).into()),
+        };
+        match polite.quant(&req).unwrap() {
+            WireReply::Result(_) => polite_done += 1,
+            other => panic!("polite tenant must never be shed: {other:?}"),
+        }
+    }
+    let (flooder_done, flooder_shed) = flooder.join().unwrap();
+
+    assert_eq!(polite_done, 3, "polite tenant completes everything");
+    assert!(flooder_shed > 0, "flooder runs out of tokens");
+    assert!(
+        flooder_done <= 6,
+        "flooder is capped near its burst, got {flooder_done} completions"
+    );
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 5. Tenant cache partitioning over the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn partitioned_cache_keeps_tenants_results_invisible_to_each_other_over_the_wire() {
+    let cfg = Config { cache_shared: false, ..native_config() };
+    let server = start_server(cfg, ServeConfig::default());
+    let addr = server.addr();
+
+    let req = WireRequest {
+        method: QuantMethod::KMeans,
+        opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
+        payload: Payload::F64(clustered(64, 3).into()),
+    };
+    let mut client = Client::connect(addr, Codec::Binary, None).unwrap();
+
+    let serve = |c: &mut Client, tenant: &str, req: &WireRequest| -> String {
+        match c.quant_as(Some(tenant), req).unwrap() {
+            WireReply::Result(r) => r.served_by,
+            other => panic!("expected result, got {other:?}"),
+        }
+    };
+
+    assert_eq!(serve(&mut client, "alice", &req), "native", "alice's first solve");
+    assert_eq!(
+        serve(&mut client, "bob", &req),
+        "native",
+        "identical payload, different tenant: partitioned cache must re-solve"
+    );
+    assert_eq!(serve(&mut client, "alice", &req), "cache", "alice's resubmit hits");
+    server.shutdown();
+}
