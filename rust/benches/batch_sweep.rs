@@ -12,8 +12,12 @@
 //! `lasso::solve` / `lasso::solve_dense` at fixed epoch budgets, and
 //! (ISSUE-8) repeat-heavy coordinator traffic with the serve-path result
 //! cache off vs on (hit rate, bytes saved, hit-path vs solve-path
-//! medians). Emits a `BENCH_batch_sweep.json` baseline (median seconds +
-//! speedups) for the perf trajectory.
+//! medians), and (ISSUE-10) an `nn-weights` scenario — an NN-like weight
+//! vector with importance concentrated on its salient tail, quantized
+//! with and without per-element weights, comparing both runtime and the
+//! weighted objective Σ wᵢ(xᵢ−qᵢ)² the weighted solve minimizes. Emits a
+//! `BENCH_batch_sweep.json` baseline (median seconds + speedups) for the
+//! perf trajectory.
 
 use sqlsq::bench_support::{active_config, black_box, Suite};
 use sqlsq::config::{CachePolicy, Config, Engine};
@@ -252,6 +256,7 @@ fn main() {
                 data: Payload::F64(data.clone().into()),
                 method: *method,
                 opts: rt_opts.clone(),
+                weights: None,
                 submitted: std::time::Instant::now(),
                 respond: tx,
                 cache: None,
@@ -314,12 +319,67 @@ fn main() {
         .median;
     let cache_snap = coord_on.shutdown();
 
+    // Importance-weighted quantization (ISSUE-10): an NN-like weight
+    // vector (clustered values + noise, the matvec demo's workload) where
+    // the salient high-magnitude tail carries 10x importance. KMeansExact
+    // is DP-optimal for the weighted 1-D objective, so the weighted solve
+    // can only match or beat the unweighted levels on weighted loss — the
+    // gain below measures how much the weights actually move the
+    // codebook on this data.
+    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
+    let nn_n: usize = if quick { 512 } else { 2048 };
+    let mut nn_rng = Pcg32::seeded(900);
+    let nn_data: Vec<f64> = (0..nn_n)
+        .map(|_| {
+            let c = [-0.6, -0.2, 0.1, 0.45, 0.8][(nn_rng.next_u32() % 5) as usize];
+            c + nn_rng.normal() * 0.03
+        })
+        .collect();
+    let nn_weights: Vec<f64> =
+        nn_data.iter().map(|&x| if x > 0.6 { 10.0 } else { 1.0 }).collect();
+    let nn_opts = QuantOptions { target_values: 4, seed: 9, ..Default::default() };
+    let run_nn = |weights: Option<Vec<f64>>| -> Vec<f64> {
+        let mut req = quant::QuantRequest::vector(nn_data.clone())
+            .method(QuantMethod::KMeansExact)
+            .options(nn_opts.clone());
+        if let Some(w) = weights {
+            req = req.weights(w);
+        }
+        quant::Quantizer::new()
+            .run(&req)
+            .unwrap()
+            .into_single()
+            .unwrap()
+            .materialize_f64()
+    };
+    let nn_unweighted_s = suite
+        .case(&format!("nn_weights_unweighted_solve/n={nn_n}/kmeans_exact"), || {
+            black_box(run_nn(None));
+        })
+        .median;
+    let nn_weighted_s = suite
+        .case(&format!("nn_weights_weighted_solve/n={nn_n}/kmeans_exact"), || {
+            black_box(run_nn(Some(nn_weights.clone())));
+        })
+        .median;
+    let weighted_loss = |q: &[f64]| -> f64 {
+        nn_data
+            .iter()
+            .zip(q)
+            .zip(&nn_weights)
+            .map(|((x, q), w)| w * (x - q) * (x - q))
+            .sum()
+    };
+    let weighted_loss_unweighted_solve = weighted_loss(&run_nn(None));
+    let weighted_loss_weighted_solve = weighted_loss(&run_nn(Some(nn_weights.clone())));
+    let weighted_gain =
+        weighted_loss_unweighted_solve / weighted_loss_weighted_solve.max(1e-18);
+
     // CD epochs before/after the kernel-layer restructure (ISSUE-6): the
     // in-bench pre-kernel copies above vs the current solvers, fixed
     // epoch budget on both sides (tol 0, support_patience 0 — no early
     // stop), f64 lane (the bitwise-reference lane the restructure must
     // not change).
-    let quick = std::env::var("SQLSQ_BENCH_QUICK").is_ok();
     let cd_epochs = 10usize;
     let cd_lambda = 0.02f64;
     let cd_cfg = lasso::LassoConfig {
@@ -401,6 +461,11 @@ fn main() {
         "f32 lane info-loss delta (total over grid): {f32_rel_loss_delta:.3e} \
          (f64 {f64_loss_total:.6e} vs f32 {f32_loss_total:.6e})"
     );
+    println!(
+        "nn-weights weighted-objective gain (unweighted / weighted solve): \
+         {weighted_gain:.3}x ({weighted_loss_unweighted_solve:.6e} vs \
+         {weighted_loss_weighted_solve:.6e})"
+    );
 
     let json = Json::obj(vec![
         ("bench", Json::Str("batch_sweep".into())),
@@ -430,6 +495,12 @@ fn main() {
         ("f64_loss_total", Json::Num(f64_loss_total)),
         ("f32_loss_total", Json::Num(f32_loss_total)),
         ("f32_rel_loss_delta", Json::Num(f32_rel_loss_delta)),
+        ("nn_weights_n", Json::Num(nn_n as f64)),
+        ("nn_weights_unweighted_median_s", Json::Num(nn_unweighted_s)),
+        ("nn_weights_weighted_median_s", Json::Num(nn_weighted_s)),
+        ("weighted_loss_unweighted_solve", Json::Num(weighted_loss_unweighted_solve)),
+        ("weighted_loss_weighted_solve", Json::Num(weighted_loss_weighted_solve)),
+        ("weighted_gain", Json::Num(weighted_gain)),
         ("cd_epoch_series_quick", Json::Bool(quick)),
         ("cd_epoch_series", Json::Arr(cd_rows)),
     ]);

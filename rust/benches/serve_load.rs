@@ -50,6 +50,7 @@ fn small_request() -> WireRequest {
         method: QuantMethod::KMeans,
         opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
         payload: Payload::F64(data.into()),
+        weights: None,
     }
 }
 

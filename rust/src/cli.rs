@@ -82,6 +82,7 @@ sqlsq — Scalar Quantization as Sparse Least Square Optimization (full-system r
 USAGE:
   sqlsq quantize  --method <id> [--values K] [--lambda1 X] [--lambda2 Y]
                   [--input FILE | --demo] [--clamp lo,hi] [--seed N]
+                  [--weights FILE] [--entropy-budget BITS]
                   [--precision f32|f64] [--output codebook|values|FILE]
   sqlsq sweep     --method <id> [--steps N] [--lambda-min X] [--lambda-max Y]
                   [--values K] [--cold] [--input FILE | --demo]
@@ -120,6 +121,14 @@ OUTPUT: --output codebook emits the compact wire format as JSON (a few
          emits the full-length vector(s). On quantize, any other value
          is treated as a file path and written in the historical values
          format (the default prints only the summary, exactly as before).
+
+WEIGHTS: --weights FILE supplies one non-negative importance weight per
+         input element (same text format as --input); the solve then
+         minimizes the weighted objective Σ wᵢ(xᵢ−qᵢ)². Uniform weights
+         reproduce the unweighted result bitwise. --entropy-budget BITS
+         greedily merges codebook levels until the index entropy fits
+         the budget (entropy-constrained quantization); the stats block
+         reports the entropy-coded size either way.
 
 BACKENDS: --runtime-backend pjrt executes AOT artifacts (make artifacts);
          shadow replays the kernels natively with runtime semantics — no
@@ -199,25 +208,44 @@ fn parse_precision(args: &Args) -> Result<quant::Precision> {
     }
 }
 
+/// Parse a text file of numbers: comma/space/tab separated, `#` comments.
+/// Shared by `--input` and `--weights`.
+fn parse_number_file(path: &str) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut data = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        for tok in t.split([',', ' ', '\t']).filter(|s| !s.is_empty()) {
+            data.push(tok.parse().map_err(|_| {
+                Error::InvalidInput(format!("{path}:{}: bad number '{tok}'", ln + 1))
+            })?);
+        }
+    }
+    Ok(data)
+}
+
 fn load_input(args: &Args) -> Result<Vec<f64>> {
     if let Some(path) = args.flag("input") {
-        let text = std::fs::read_to_string(path)?;
-        let mut data = Vec::new();
-        for (ln, line) in text.lines().enumerate() {
-            let t = line.trim();
-            if t.is_empty() || t.starts_with('#') {
-                continue;
-            }
-            for tok in t.split([',', ' ', '\t']).filter(|s| !s.is_empty()) {
-                data.push(tok.parse().map_err(|_| {
-                    Error::InvalidInput(format!("{path}:{}: bad number '{tok}'", ln + 1))
-                })?);
-            }
-        }
-        Ok(data)
+        parse_number_file(path)
     } else {
         // --demo (default): the Figure-5 digit image.
         Ok(workloads::digit_image())
+    }
+}
+
+/// `--entropy-budget BITS` as an `Option<f64>` (validation of the value
+/// itself lives in `quant::validate_entropy_budget`, shared with the
+/// serve path).
+fn parse_entropy_budget(args: &Args) -> Result<Option<f64>> {
+    match args.flag("entropy-budget") {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| Error::Config(format!("--entropy-budget: bad number '{v}'"))),
     }
 }
 
@@ -245,8 +273,10 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         seed: args.flag_usize("seed", 0)? as u64,
         clamp,
         precision: parse_precision(args)?,
+        entropy_budget: parse_entropy_budget(args)?,
         ..Default::default()
     };
+    let weights = args.flag("weights").map(parse_number_file).transpose()?;
     let n = data.len();
     let distinct_in = crate::linalg::stats::distinct_count_exact(&data);
     let precision = opts.precision;
@@ -256,7 +286,10 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     // response is codebook-first (full values only materialize below if
     // the output mode needs them).
     let t0 = std::time::Instant::now();
-    let req = quant::QuantRequest::vector(data).method(method).options(opts);
+    let mut req = quant::QuantRequest::vector(data).method(method).options(opts);
+    if let Some(w) = weights {
+        req = req.weights(w);
+    }
     let item = quant::Quantizer::new().run(&req)?.into_single()?;
     let dt = t0.elapsed();
     let stats = item.compression(requested);
@@ -280,6 +313,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         "compact vs dense  : {} B vs {} B ({:.2}x)",
         stats.compact_bytes, stats.dense_bytes, stats.byte_ratio
     );
+    println!("entropy-coded     : {} B (size model at H(index))", stats.entropy_coded_bytes);
     println!("time              : {:?}", dt);
     match args.flag("output") {
         Some("codebook") => {
@@ -823,6 +857,38 @@ mod tests {
     #[test]
     fn quantize_rejects_bad_method() {
         assert!(dispatch(&s(&["quantize", "--method", "nope"])).is_err());
+    }
+
+    #[test]
+    fn quantize_with_weights_and_entropy_budget_runs() {
+        let dir = std::env::temp_dir().join("sqlsq_cli_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("in.txt");
+        let wfile = dir.join("w.txt");
+        let data: Vec<String> = (0..32).map(|i| format!("{:.3}", (i % 5) as f64 * 0.2)).collect();
+        std::fs::write(&input, data.join("\n")).unwrap();
+        let wts: Vec<String> = (0..32).map(|i| format!("{:.3}", 0.5 + (i % 3) as f64)).collect();
+        std::fs::write(&wfile, wts.join("\n")).unwrap();
+        dispatch(&s(&[
+            "quantize", "--method", "kmeans", "--values", "4", "--input",
+            input.to_str().unwrap(), "--weights", wfile.to_str().unwrap(),
+        ]))
+        .unwrap();
+        dispatch(&s(&[
+            "quantize", "--method", "kmeans", "--values", "8", "--input",
+            input.to_str().unwrap(), "--entropy-budget", "1.0", "--output", "codebook",
+        ]))
+        .unwrap();
+        // Length mismatch / malformed budget are input errors, not panics.
+        std::fs::write(&wfile, "1.0 2.0").unwrap();
+        assert!(dispatch(&s(&[
+            "quantize", "--method", "kmeans", "--input", input.to_str().unwrap(),
+            "--weights", wfile.to_str().unwrap(),
+        ]))
+        .is_err());
+        assert!(dispatch(&s(&["quantize", "--entropy-budget", "nope"])).is_err());
+        assert!(dispatch(&s(&["quantize", "--entropy-budget", "-1"])).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

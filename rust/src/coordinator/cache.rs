@@ -1,7 +1,10 @@
 //! Cross-request result cache on the serve path.
 //!
 //! The coordinator keys every admitted single-vector job by a content
-//! [`Fingerprint`] of `(input bytes, precision lane, method, options)`.
+//! [`Fingerprint`] of `(input bytes, precision lane, method, options,
+//! importance weights)` — weights arrive admission-normalized, so a
+//! uniform-weighted submit shares the unweighted key it solves
+//! identically to.
 //! An exact hit returns the cached compact [`Item`] — bitwise-identical
 //! to a cold solve — straight into the submitter's respond channel,
 //! without the job ever entering a queue. A duplicate of an *in-flight*
@@ -55,18 +58,34 @@ fn payload_bits_eq(a: &Payload, b: &Payload) -> bool {
     }
 }
 
+/// Bit-exact importance-weight equality (same contract as
+/// [`payload_bits_eq`]): admission hands the cache *normalized* weights
+/// (uniform dropped to `None`), so an unweighted submit and a
+/// uniform-weighted submit share one key — exactly mirroring the solve
+/// path, which serves them bitwise-identically.
+fn weights_bits_eq(a: Option<&[f64]>, b: Option<&[f64]>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => {
+            x.len() == y.len() && x.iter().zip(y.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
+}
+
 /// The full admission key, retained per entry so hits verify it
-/// bit-for-bit. The payload is an `Arc` clone — no data copy. `tenant`
-/// is the cache-partition label (`None` under the default shared
-/// policy): it salts the fingerprint *and* participates in the
-/// verification arm, so partitioned tenants can never serve each
-/// other's entries even through a 128-bit collision.
+/// bit-for-bit. The payload (and any weight vector) is an `Arc` clone —
+/// no data copy. `tenant` is the cache-partition label (`None` under
+/// the default shared policy): it salts the fingerprint *and*
+/// participates in the verification arm, so partitioned tenants can
+/// never serve each other's entries even through a 128-bit collision.
 #[derive(Debug, Clone)]
 struct CacheKey {
     tenant: Option<Box<str>>,
     data: Payload,
     method: QuantMethod,
     opts: QuantOptions,
+    weights: Option<Arc<[f64]>>,
 }
 
 impl CacheKey {
@@ -76,11 +95,13 @@ impl CacheKey {
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
+        weights: Option<&[f64]>,
     ) -> bool {
         self.tenant.as_deref() == tenant
             && self.method == method
             && opts_bits_eq(&self.opts, opts)
             && payload_bits_eq(&self.data, data)
+            && weights_bits_eq(self.weights.as_deref(), weights)
     }
 }
 
@@ -163,12 +184,13 @@ impl ResultCache {
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
+        weights: Option<&[f64]>,
         respond: &mpsc::Sender<JobResult>,
         submitted: Instant,
     ) -> Admit {
         let fp = match data {
-            Payload::F64(v) => Fingerprint::vector_f64(v, method, opts),
-            Payload::F32(v) => Fingerprint::vector_f32(v, method, opts),
+            Payload::F64(v) => Fingerprint::vector_f64_weighted(v, weights, method, opts),
+            Payload::F32(v) => Fingerprint::vector_f32_weighted(v, weights, method, opts),
         };
         let fp = match tenant {
             Some(t) => fp.with_tenant(t),
@@ -188,11 +210,15 @@ impl ResultCache {
         g.clock += 1;
         let now = g.clock;
         let look = match g.map.get(&fp) {
-            Some(Slot::Ready { key, .. }) if key.bits_eq(tenant, data, method, opts) => {
+            Some(Slot::Ready { key, .. })
+                if key.bits_eq(tenant, data, method, opts, weights) =>
+            {
                 Lookup::HitReady
             }
             Some(Slot::Ready { .. }) => Lookup::CollideReady,
-            Some(Slot::InFlight { key, .. }) if key.bits_eq(tenant, data, method, opts) => {
+            Some(Slot::InFlight { key, .. })
+                if key.bits_eq(tenant, data, method, opts, weights) =>
+            {
                 Lookup::JoinInFlight
             }
             Some(Slot::InFlight { .. }) => Lookup::CollideInFlight,
@@ -243,13 +269,13 @@ impl ResultCache {
                 if let Some(Slot::Ready { cost_bytes, .. }) = g.map.remove(&fp) {
                     g.ready_bytes -= cost_bytes;
                 }
-                self.reserve(&mut g, fp, tenant, data, method, opts);
+                self.reserve(&mut g, fp, tenant, data, method, opts, weights);
                 drop(g);
                 metrics.on_cache_miss();
                 Admit::Solve(Some(self.ticket(metrics, fp)))
             }
             Lookup::Vacant => {
-                self.reserve(&mut g, fp, tenant, data, method, opts);
+                self.reserve(&mut g, fp, tenant, data, method, opts, weights);
                 drop(g);
                 metrics.on_cache_miss();
                 Admit::Solve(Some(self.ticket(metrics, fp)))
@@ -266,12 +292,14 @@ impl ResultCache {
         data: &Payload,
         method: QuantMethod,
         opts: &QuantOptions,
+        weights: Option<&[f64]>,
     ) {
         let key = CacheKey {
             tenant: tenant.map(Box::from),
             data: data.clone(),
             method,
             opts: opts.clone(),
+            weights: weights.map(Arc::from),
         };
         g.map.insert(fp, Slot::InFlight { key, waiters: Vec::new() });
     }
@@ -457,6 +485,30 @@ mod tests {
             data,
             QuantMethod::KMeans,
             opts,
+            None,
+            &tx,
+            Instant::now(),
+        );
+        (verdict, rx)
+    }
+
+    fn admit_weighted(
+        cache: &Arc<ResultCache>,
+        metrics: &Arc<Metrics>,
+        id: JobId,
+        data: &Payload,
+        weights: Option<&[f64]>,
+        opts: &QuantOptions,
+    ) -> (Admit, mpsc::Receiver<JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        let verdict = cache.admit(
+            metrics,
+            id,
+            None,
+            data,
+            QuantMethod::KMeans,
+            opts,
+            weights,
             &tx,
             Instant::now(),
         );
@@ -615,6 +667,44 @@ mod tests {
         let (va2, rxa2) = admit_as(&cache, &metrics, 4, Some("alice"), &data, &opts);
         assert!(matches!(va2, Admit::Hit));
         assert_eq!(rxa2.try_recv().unwrap().served_by, ServedBy::Cache);
+    }
+
+    #[test]
+    fn weighted_requests_key_disjointly_from_unweighted_and_from_other_weights() {
+        let cache = Arc::new(ResultCache::new(1 << 20));
+        let metrics = Arc::new(Metrics::new());
+        let data = payload(7);
+        let opts = QuantOptions { target_values: 4, ..Default::default() };
+        let wn: Vec<f64> = (0..data.len()).map(|i| 0.5 + (i % 5) as f64).collect();
+
+        // Unweighted solve lands in the cache.
+        let (v1, _rx1) = admit_weighted(&cache, &metrics, 1, &data, None, &opts);
+        let Admit::Solve(Some(mut t1)) = v1 else { panic!("unweighted leader miss") };
+        let Payload::F64(v) = &data else { unreachable!() };
+        t1.complete(&Ok(solved(v, QuantMethod::KMeans, &opts)), ServedBy::Native);
+
+        // Same bytes with non-uniform weights: a distinct key ⇒ miss.
+        let (v2, _rx2) = admit_weighted(&cache, &metrics, 2, &data, Some(&wn), &opts);
+        let Admit::Solve(Some(mut t2)) = v2 else {
+            panic!("weighted submit must not hit the unweighted entry")
+        };
+        t2.complete(&Ok(solved(v, QuantMethod::KMeans, &opts)), ServedBy::Native);
+
+        // Exact weighted resubmit hits its own entry.
+        let (v3, rx3) = admit_weighted(&cache, &metrics, 3, &data, Some(&wn), &opts);
+        assert!(matches!(v3, Admit::Hit), "identical weighted resubmit hits");
+        assert_eq!(rx3.try_recv().unwrap().served_by, ServedBy::Cache);
+
+        // One weight bit different ⇒ miss.
+        let mut wn2 = wn.clone();
+        wn2[0] = f64::from_bits(wn2[0].to_bits() ^ 1);
+        let (v4, _rx4) = admit_weighted(&cache, &metrics, 4, &data, Some(&wn2), &opts);
+        assert!(matches!(v4, Admit::Solve(Some(_))), "weight bits are part of the key");
+
+        // The unweighted entry is still intact and hit separately.
+        let (v5, rx5) = admit_weighted(&cache, &metrics, 5, &data, None, &opts);
+        assert!(matches!(v5, Admit::Hit));
+        assert_eq!(rx5.try_recv().unwrap().served_by, ServedBy::Cache);
     }
 
     #[test]

@@ -135,6 +135,11 @@ pub struct Job {
     pub method: QuantMethod,
     /// Algorithm options.
     pub opts: QuantOptions,
+    /// Per-element importance weights, already normalized by admission
+    /// (validated against the payload length; uniform vectors dropped to
+    /// `None` so they serve — and cache — exactly as unweighted jobs).
+    /// Weighted jobs always run on the native lane.
+    pub weights: Option<Arc<[f64]>>,
     /// Submission timestamp (for queue + service latency).
     pub submitted: Instant,
     /// Response channel (capacity 1).

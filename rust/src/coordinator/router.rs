@@ -123,23 +123,28 @@ impl Router {
     /// the lane (f32 payloads run the single-precision fast path and stay
     /// narrow in the result). Payloads are shared, so dispatch clones an
     /// `Arc`, never the data — the prepare stage reads the submitted
-    /// buffer. The result is the **compact** lane-erased item (codebook +
-    /// indices); edges materialize full vectors lazily.
+    /// buffer. `weights` are admission-normalized per-element importance
+    /// weights (`None` = unweighted, the common path). The result is the
+    /// **compact** lane-erased item (codebook + indices); edges
+    /// materialize full vectors lazily.
     pub fn dispatch_native(
         &self,
         data: &Payload,
+        weights: Option<&[f64]>,
         method: QuantMethod,
         opts: &QuantOptions,
     ) -> Result<quant::Item> {
         match data {
-            Payload::F64(v) => quant::api::run_shared_f64(
+            Payload::F64(v) => quant::api::run_shared_f64_weighted(
                 Arc::clone(v),
+                weights,
                 method,
                 opts,
                 quant::OutputForm::Codebook,
             ),
-            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32(
+            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32_weighted(
                 Arc::clone(v),
+                weights,
                 method,
                 opts,
                 quant::OutputForm::Codebook,
@@ -154,15 +159,21 @@ impl Router {
     pub fn dispatch_native_timed_owned(
         &self,
         data: Payload,
+        weights: Option<&[f64]>,
         method: QuantMethod,
         opts: &QuantOptions,
     ) -> Result<quant::Item> {
         match data {
-            Payload::F64(v) => {
-                quant::api::run_shared_f64(v, method, opts, quant::OutputForm::Codebook)
-            }
-            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32(
+            Payload::F64(v) => quant::api::run_shared_f64_weighted(
                 v,
+                weights,
+                method,
+                opts,
+                quant::OutputForm::Codebook,
+            ),
+            Payload::F32(v) => Ok(quant::Item::F32(quant::api::run_shared_f32_weighted(
+                v,
+                weights,
                 method,
                 opts,
                 quant::OutputForm::Codebook,
@@ -377,6 +388,7 @@ mod tests {
         let out = r
             .dispatch_native(
                 &data.into(),
+                None,
                 QuantMethod::KMeans,
                 &QuantOptions { target_values: 2, ..Default::default() },
             )
@@ -390,7 +402,7 @@ mod tests {
         let data32 = vec![0.1f32, 0.2, 0.3, 0.2, 0.1, 0.9];
         let opts = QuantOptions { lambda1: 0.05, ..Default::default() };
         let via_router = r
-            .dispatch_native(&data32.clone().into(), QuantMethod::L1LeastSquare, &opts)
+            .dispatch_native(&data32.clone().into(), None, QuantMethod::L1LeastSquare, &opts)
             .unwrap();
         assert_eq!(via_router.precision(), quant::Precision::F32, "stays narrow");
         let direct =

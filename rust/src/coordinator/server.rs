@@ -52,7 +52,7 @@ use super::metrics::{Metrics, Snapshot};
 use super::queue::{BoundedQueue, TryPush};
 use super::router::Router;
 use crate::config::{CachePolicy, Config, Engine};
-use crate::quant::api::{Plan, QuantRequest, RequestInput};
+use crate::quant::api::{self, NormWeights, Plan, QuantRequest, RequestInput};
 use crate::quant::{Item, Precision, QuantMethod, QuantOptions};
 use crate::runtime::{open_backend, ExecutorBackend};
 use crate::{Error, Result};
@@ -74,13 +74,33 @@ pub type BackendFactory =
 /// individual requests, or run them in-process via
 /// [`crate::quant::Quantizer`] (which serves sweep, batch and the
 /// combined batch×sweep plan with scoped-thread fan-out).
-fn request_job_parts(req: QuantRequest) -> Result<(Payload, QuantMethod, QuantOptions)> {
+fn request_job_parts(
+    req: QuantRequest,
+) -> Result<(Payload, QuantMethod, QuantOptions, Option<Arc<[f64]>>)> {
     if matches!(req.plan, Plan::Sweep { .. }) {
         return Err(Error::Coordinator(
             "coordinator jobs are one-shot; run λ sweeps in-process via quant::Quantizer".into(),
         ));
     }
     let opts = req.effective_options();
+    api::validate_entropy_budget(&opts)?;
+    // Weight validation happens at admission — a malformed weighted
+    // request is refused before a job id or queue slot exists. Cascade
+    // plans reject weights exactly as the in-process facade does.
+    let weights = match req.normalized_weights()? {
+        None => None,
+        Some(_) if matches!(req.plan, Plan::Cascade { .. }) => {
+            return Err(Error::InvalidInput(
+                "cascade: per-element importance weights are not supported (cascade levels \
+                 re-quantize residuals, which have no per-element identity)"
+                    .into(),
+            ))
+        }
+        Some(NormWeights::Vector(w)) => Some(w),
+        // Batch-form weights only pair with batch inputs, which the
+        // shape check below rejects.
+        Some(NormWeights::Batch(_)) => None,
+    };
     let payload = match req.input {
         RequestInput::VectorF64(w) => Payload::F64(w),
         RequestInput::VectorF32(w) => Payload::F32(w),
@@ -92,7 +112,7 @@ fn request_job_parts(req: QuantRequest) -> Result<(Payload, QuantMethod, QuantOp
             ))
         }
     };
-    Ok((payload, req.method, opts))
+    Ok((payload, req.method, opts, weights))
 }
 
 /// Wrap a legacy (payload, method, opts) submission as a typed request —
@@ -152,7 +172,13 @@ fn finish(metrics: &Metrics, mut job: Job, outcome: Result<Item>, served_by: Ser
 /// (no second copy of the input); the payload's precision picks the lane.
 fn serve_one_native(router: &Router, metrics: &Metrics, mut job: Job) {
     let data = std::mem::take(&mut job.data);
-    let outcome = match router.dispatch_native_timed_owned(data, job.method, &job.opts) {
+    let weights = job.weights.take();
+    let outcome = match router.dispatch_native_timed_owned(
+        data,
+        weights.as_deref(),
+        job.method,
+        &job.opts,
+    ) {
         Ok(item) => {
             let t = item.timings();
             metrics.on_stage(t.prepare, t.solve);
@@ -248,7 +274,12 @@ fn serve_one_runtime(
         Ok(out) => finish(metrics, job, Ok(Item::F64(out)), ServedBy::Runtime),
         Err(e) => {
             if router.policy() == Engine::Auto {
-                let outcome = router.dispatch_native(&job.data, job.method, &job.opts);
+                let outcome = router.dispatch_native(
+                    &job.data,
+                    job.weights.as_deref(),
+                    job.method,
+                    &job.opts,
+                );
                 finish(metrics, job, outcome, ServedBy::Native);
             } else {
                 finish(metrics, job, Err(e), ServedBy::Runtime);
@@ -433,6 +464,7 @@ impl Coordinator {
         data: Payload,
         method: QuantMethod,
         opts: QuantOptions,
+        weights: Option<Arc<[f64]>>,
     ) -> (Job, mpsc::Receiver<JobResult>, bool) {
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -442,14 +474,27 @@ impl Coordinator {
         // f32 or the caller asked for the f32 lane via opts.precision —
         // because the PJRT boundary is f64 and the native f32 lane *is*
         // their fast path (runtime dispatch never consults precision).
+        // Weighted and entropy-budgeted jobs also stay native: the AOT
+        // artifacts bake the unweighted objective and no merge pass.
         let to_runtime = self.cfg.engine != Engine::Native
             && matches!(data, Payload::F64(_))
             && opts.precision == Precision::F64
+            && weights.is_none()
+            && opts.entropy_budget.is_none()
             && self
                 .router
                 .routes_to_runtime(method, data.len().max(1), opts.target_values);
         (
-            Job { id, data, method, opts, submitted: Instant::now(), respond: tx, cache: None },
+            Job {
+                id,
+                data,
+                method,
+                opts,
+                weights,
+                submitted: Instant::now(),
+                respond: tx,
+                cache: None,
+            },
             rx,
             to_runtime,
         )
@@ -464,8 +509,8 @@ impl Coordinator {
     /// is off; under the default shared policy it is ignored at the
     /// cache so all tenants benefit from each other's exact hits.
     fn admit_request(&self, req: QuantRequest, tenant: Option<&str>) -> Result<Admission<'_>> {
-        let (data, method, opts) = request_job_parts(req)?;
-        let (mut job, rx, to_runtime) = self.make_job(data, method, opts);
+        let (data, method, opts, weights) = request_job_parts(req)?;
+        let (mut job, rx, to_runtime) = self.make_job(data, method, opts, weights);
         if let Some(cache) = &self.cache {
             let cache_tenant = if self.cfg.cache_shared { None } else { tenant };
             match cache.admit(
@@ -475,6 +520,7 @@ impl Coordinator {
                 &job.data,
                 job.method,
                 &job.opts,
+                job.weights.as_deref(),
                 &job.respond,
                 job.submitted,
             ) {
@@ -1137,6 +1183,114 @@ mod tests {
         assert_eq!(snap.stage_samples, 2, "cache off: every submit solves");
         assert_eq!(snap.cache_hits, 0);
         assert_eq!(snap.cache_misses, 0);
+    }
+
+    #[test]
+    fn weighted_requests_serve_natively_and_match_the_facade() {
+        use crate::quant::Quantizer;
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(60);
+        let wts: Vec<f64> = (0..data.len()).map(|i| 0.5 + (i % 7) as f64).collect();
+        let opts = QuantOptions { target_values: 4, seed: 3, ..Default::default() };
+        let mk = || {
+            QuantRequest::vector(data.clone())
+                .method(QuantMethod::KMeans)
+                .options(opts.clone())
+                .weights(wts.clone())
+        };
+        let via_coord = c.quantize_blocking_request(mk()).unwrap();
+        assert_eq!(via_coord.served_by, ServedBy::Native);
+        let got = via_coord.outcome.unwrap();
+        let direct = Quantizer::new().run(&mk()).unwrap().into_single().unwrap();
+        assert_eq!(got.materialize(), direct.materialize_f64(), "weighted serve is bitwise");
+        assert_eq!(got.l2_loss().to_bits(), direct.l2_loss().to_bits());
+
+        // An identical weighted resubmit hits the cache.
+        let hit = c.quantize_blocking_request(mk()).unwrap();
+        assert_eq!(hit.served_by, ServedBy::Cache, "weighted resubmit must hit");
+        assert_eq!(hit.outcome.unwrap().materialize(), got.materialize());
+
+        // A uniform-weighted submit is normalized away at admission: it
+        // runs — and caches — exactly as the unweighted job.
+        let plain = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .options(opts.clone());
+        let cold = c.quantize_blocking_request(plain).unwrap();
+        assert_eq!(cold.served_by, ServedBy::Native);
+        let uniform = QuantRequest::vector(data.clone())
+            .method(QuantMethod::KMeans)
+            .options(opts.clone())
+            .weights(vec![2.5; data.len()]);
+        let aliased = c.quantize_blocking_request(uniform).unwrap();
+        assert_eq!(
+            aliased.served_by,
+            ServedBy::Cache,
+            "uniform weights must share the unweighted cache entry"
+        );
+        assert_eq!(
+            aliased.outcome.unwrap().materialize(),
+            cold.outcome.unwrap().materialize()
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn malformed_weighted_requests_are_refused_at_admission() {
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(61);
+        let base = || QuantRequest::vector(data.clone()).method(QuantMethod::KMeans);
+        // Length mismatch, NaN, negative, zero-sum: all refused before a
+        // job exists (no queue slot, no id burned into the metrics).
+        for bad in [
+            vec![1.0; data.len() - 1],
+            {
+                let mut w = vec![1.0; data.len()];
+                w[3] = f64::NAN;
+                w
+            },
+            {
+                let mut w = vec![1.0; data.len()];
+                w[0] = -1.0;
+                w
+            },
+            vec![0.0; data.len()],
+        ] {
+            match c.submit_request(base().weights(bad)) {
+                Err(Error::InvalidInput(_)) => {}
+                other => panic!("malformed weights must refuse with InvalidInput, got {other:?}"),
+            }
+        }
+        // A bad entropy budget is refused the same way.
+        match c.submit_request(base().entropy_budget(f64::NAN)) {
+            Err(Error::InvalidParam(_)) => {}
+            other => panic!("NaN entropy budget must refuse with InvalidParam, got {other:?}"),
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.submitted, 0, "refused requests never count as submissions");
+    }
+
+    #[test]
+    fn entropy_budget_requests_match_the_facade_through_the_coordinator() {
+        use crate::quant::Quantizer;
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let data = sample(62);
+        let mk = || {
+            QuantRequest::vector(data.clone())
+                .method(QuantMethod::KMeans)
+                .target_count(6)
+                .entropy_budget(1.0)
+        };
+        let via_coord = c.quantize_blocking_request(mk()).unwrap().outcome.unwrap();
+        let direct = Quantizer::new().run(&mk()).unwrap().into_single().unwrap();
+        assert_eq!(via_coord.materialize(), direct.materialize_f64());
+        assert_eq!(via_coord.l2_loss().to_bits(), direct.l2_loss().to_bits());
+        let stats = via_coord.compression();
+        assert!(
+            stats.index_entropy <= 1.0 + 1e-9,
+            "budget respected through the serve path: {}",
+            stats.index_entropy
+        );
+        c.shutdown();
     }
 
     #[test]

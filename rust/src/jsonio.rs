@@ -563,6 +563,7 @@ pub fn stats_to_json(s: &CompressionStats) -> Json {
         ("bits_per_idx_packed", Json::Num(s.bits_per_idx_packed as f64)),
         ("bits_per_value", Json::Num(s.bits_per_value)),
         ("index_entropy", Json::Num(s.index_entropy)),
+        ("entropy_coded_bytes", Json::Num(s.entropy_coded_bytes as f64)),
         ("compact_bytes", Json::Num(s.compact_bytes as f64)),
         ("dense_bytes", Json::Num(s.dense_bytes as f64)),
         ("byte_ratio", Json::Num(s.byte_ratio)),
@@ -896,6 +897,13 @@ mod tests {
         assert_eq!(j.get("bits_per_idx_stored").unwrap().as_usize(), Some(32));
         assert_eq!(j.get("bits_per_idx_packed").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("bits_per_index").unwrap().as_usize(), Some(2));
+        // The entropy-coded size model rides along (achievable coded
+        // bytes from the index entropy; never above the packed size).
+        assert_eq!(
+            j.get("entropy_coded_bytes").unwrap().as_usize(),
+            Some(s.entropy_coded_bytes)
+        );
+        assert!(s.entropy_coded_bytes <= s.compact_bytes);
         // Round-trips through text.
         assert!(parse(&j.to_string()).is_ok());
     }

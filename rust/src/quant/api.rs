@@ -88,6 +88,7 @@
 //! ```
 
 use super::codebook::{Codebook, CompressionStats};
+use super::merge;
 use super::pipeline::{
     batch_map, solver_for, LaneSolve, PreparedInput, StageTimings, SweepState,
 };
@@ -186,7 +187,21 @@ pub enum RequestInput {
     Matrix(Matrix, Grouping),
 }
 
-/// A quantization request: input + method + options + plan + output form.
+/// Per-element importance weights attached to a request
+/// ([`QuantRequest::weights`] / [`QuantRequest::batch_weights`]). Held
+/// behind `Arc` like the inputs, so cloning a request never copies the
+/// weight buffers.
+#[derive(Debug, Clone)]
+pub enum RequestWeights {
+    /// One weight per element of a vector or matrix input (matrix
+    /// weights are row-major and split per group like the data).
+    Vector(Arc<[f64]>),
+    /// One weight vector per batch slot, zipped with the batch inputs.
+    Batch(Vec<Arc<[f64]>>),
+}
+
+/// A quantization request: input + method + options + plan + output form,
+/// optionally weighted per element ([`QuantRequest::weights`]).
 ///
 /// Build with one of the input constructors ([`QuantRequest::vector`],
 /// [`QuantRequest::shared`], [`QuantRequest::batch`],
@@ -200,6 +215,7 @@ pub struct QuantRequest {
     pub(crate) opts: QuantOptions,
     pub(crate) plan: Plan,
     pub(crate) output: OutputForm,
+    pub(crate) weights: Option<RequestWeights>,
 }
 
 impl QuantRequest {
@@ -210,6 +226,7 @@ impl QuantRequest {
             opts: QuantOptions::default(),
             plan: Plan::OneShot,
             output: OutputForm::default(),
+            weights: None,
         }
     }
 
@@ -323,6 +340,68 @@ impl QuantRequest {
         self
     }
 
+    /// Attach per-element importance weights: the solve minimizes
+    /// `Σᵢ wᵢ·(xᵢ − qᵢ)²` instead of the plain squared error, on both
+    /// precision lanes. Applies to vector and matrix inputs (matrix
+    /// weights are row-major and split per group exactly like the
+    /// data); use [`QuantRequest::batch_weights`] for batches. Weights
+    /// must be finite, non-negative, sum to a positive total, and match
+    /// the input length. A uniform weight vector (all entries
+    /// bit-identical) only scales the objective, so it is dropped to
+    /// the unweighted path — uniform-weight results are
+    /// **bitwise-identical** to unweighted ones. [`Plan::Cascade`] does
+    /// not compose with weights (residuals have no per-element
+    /// identity), and [`QuantMethod::L0`] / [`QuantMethod::TvExact`]
+    /// reject weighted inputs (their DP recurrences are count-based).
+    ///
+    /// ```
+    /// use sqlsq::quant::{QuantMethod, QuantRequest, Quantizer};
+    ///
+    /// let data = vec![0.0, 0.55, 1.0];
+    /// let wts = vec![1.0, 10.0, 1.0]; // the middle value matters 10x
+    /// let run = |req: QuantRequest| {
+    ///     Quantizer::new().run(&req).unwrap().into_single().unwrap().materialize_f64()
+    /// };
+    /// let base = || {
+    ///     QuantRequest::vector(data.clone())
+    ///         .method(QuantMethod::KMeansExact)
+    ///         .target_count(2)
+    /// };
+    /// let plain = run(base());
+    /// let weighted = run(base().weights(wts.clone()));
+    /// let wloss = |q: &[f64]| -> f64 {
+    ///     data.iter().zip(q).zip(&wts).map(|((x, q), w)| w * (x - q) * (x - q)).sum()
+    /// };
+    /// // On the weighted objective, the weighted solve strictly wins here.
+    /// assert!(wloss(&weighted) < wloss(&plain));
+    /// ```
+    pub fn weights(mut self, w: Vec<f64>) -> QuantRequest {
+        self.weights = Some(RequestWeights::Vector(Arc::from(w)));
+        self
+    }
+
+    /// Attach one importance-weight vector per batch slot (zipped with
+    /// the batch inputs in order; lengths must match slot for slot).
+    /// Slots whose weights are uniform run the unweighted path, exactly
+    /// as [`QuantRequest::weights`] does for a single vector.
+    pub fn batch_weights(mut self, ws: Vec<Vec<f64>>) -> QuantRequest {
+        self.weights = Some(RequestWeights::Batch(ws.into_iter().map(Arc::from).collect()));
+        self
+    }
+
+    /// Opt into the entropy-constrained level-merge pass (sets
+    /// `QuantOptions::entropy_budget`): after the solve, codebook
+    /// levels are greedily merged — minimum (weighted) distortion
+    /// increase per coded bit saved — until the index entropy fits
+    /// `bits_per_value` bits per element. Composes with every plan and
+    /// method; a result already inside the budget is returned
+    /// bitwise-untouched. `CompressionStats::entropy_coded_bytes`
+    /// reports the achievable coded size.
+    pub fn entropy_budget(mut self, bits_per_value: f64) -> QuantRequest {
+        self.opts.entropy_budget = Some(bits_per_value);
+        self
+    }
+
     /// Choose the output form.
     pub fn output(mut self, form: OutputForm) -> QuantRequest {
         self.output = form;
@@ -351,6 +430,128 @@ impl QuantRequest {
         }
         opts
     }
+
+    /// The request's weights, validated against the input shape, with
+    /// uniform vectors dropped to `None` — the normalization that pins
+    /// uniform-weight requests bitwise-identical to unweighted ones (the
+    /// weighted solver's arithmetic differs bitwise even at `w ≡ 1`, so
+    /// the drop must happen before dispatch, not inside the solver).
+    pub(crate) fn normalized_weights(&self) -> Result<Option<NormWeights>> {
+        let Some(weights) = &self.weights else {
+            return Ok(None);
+        };
+        match (weights, &self.input) {
+            (RequestWeights::Vector(uw), RequestInput::VectorF64(w)) => {
+                validate_weights(uw, w.len())?;
+                Ok(nonuniform(uw).map(NormWeights::Vector))
+            }
+            (RequestWeights::Vector(uw), RequestInput::VectorF32(w)) => {
+                validate_weights(uw, w.len())?;
+                Ok(nonuniform(uw).map(NormWeights::Vector))
+            }
+            (RequestWeights::Vector(uw), RequestInput::Matrix(m, _)) => {
+                validate_weights(uw, m.rows() * m.cols())?;
+                Ok(nonuniform(uw).map(NormWeights::Vector))
+            }
+            (RequestWeights::Batch(ws), RequestInput::BatchF64(vs)) => {
+                normalize_batch_weights(ws, vs.iter().map(Vec::len))
+            }
+            (RequestWeights::Batch(ws), RequestInput::BatchF32(vs)) => {
+                normalize_batch_weights(ws, vs.iter().map(Vec::len))
+            }
+            _ => Err(Error::InvalidInput(
+                "weights: form does not match the input shape (use `weights` for \
+                 vector/matrix inputs, `batch_weights` for batches)"
+                    .into(),
+            )),
+        }
+    }
+}
+
+/// The request's weights after validation and uniform-drop
+/// normalization: per-slot `None` marks a batch slot whose weights were
+/// uniform (it runs the unweighted path bitwise).
+#[derive(Debug, Clone)]
+pub(crate) enum NormWeights {
+    Vector(Arc<[f64]>),
+    Batch(Vec<Option<Arc<[f64]>>>),
+}
+
+/// Validate one importance-weight vector against its input length:
+/// every weight finite and non-negative, at least one strictly
+/// positive. The [`Error::InvalidInput`] shapes here are what malformed
+/// weighted requests surface everywhere (facade, coordinator, wire).
+pub fn validate_weights(w: &[f64], n: usize) -> Result<()> {
+    if w.len() != n {
+        return Err(Error::InvalidInput(format!(
+            "weights: expected {n} entries, got {}",
+            w.len()
+        )));
+    }
+    if let Some(bad) = w.iter().find(|x| !x.is_finite() || **x < 0.0) {
+        return Err(Error::InvalidInput(format!(
+            "weights: entries must be finite and non-negative, got {bad}"
+        )));
+    }
+    if !w.iter().any(|&x| x > 0.0) {
+        return Err(Error::InvalidInput(
+            "weights: at least one entry must be positive".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Validate `QuantOptions::entropy_budget`: `None` or a finite
+/// non-negative bits-per-value number. Shared by the facade
+/// ([`Quantizer::run`]) and the coordinator's admission path, so the
+/// error shape is identical wherever a bad budget enters.
+pub fn validate_entropy_budget(opts: &QuantOptions) -> Result<()> {
+    if let Some(b) = opts.entropy_budget {
+        if !(b.is_finite() && b >= 0.0) {
+            return Err(Error::InvalidParam(format!(
+                "entropy_budget: bits per value must be a non-negative number, got {b}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// True when every weight shares one bit pattern — the uniform case the
+/// facade drops to the unweighted path (a uniform vector scales the
+/// weighted objective by a positive constant, which has the same
+/// minimizer; dropping it is what makes uniform ≡ unweighted bitwise).
+pub fn weights_are_uniform(w: &[f64]) -> bool {
+    w.windows(2).all(|p| p[0].to_bits() == p[1].to_bits())
+}
+
+/// `Some(w)` when the (already validated) weights are non-uniform.
+fn nonuniform(w: &Arc<[f64]>) -> Option<Arc<[f64]>> {
+    (!weights_are_uniform(w)).then(|| Arc::clone(w))
+}
+
+/// Validate + normalize one batch's weight vectors against the slot
+/// lengths (count must match, then each slot validates independently).
+fn normalize_batch_weights(
+    ws: &[Arc<[f64]>],
+    lens: impl ExactSizeIterator<Item = usize>,
+) -> Result<Option<NormWeights>> {
+    if ws.len() != lens.len() {
+        return Err(Error::InvalidInput(format!(
+            "weights: expected {} weight vectors (one per batch slot), got {}",
+            lens.len(),
+            ws.len()
+        )));
+    }
+    let mut slots = Vec::with_capacity(ws.len());
+    for (uw, n) in ws.iter().zip(lens) {
+        validate_weights(uw, n)?;
+        slots.push(nonuniform(uw));
+    }
+    // A batch whose every slot is uniform is an unweighted batch.
+    if slots.iter().all(Option::is_none) {
+        return Ok(None);
+    }
+    Ok(Some(NormWeights::Batch(slots)))
 }
 
 // ---------------------------------------------------------------------
@@ -678,6 +879,10 @@ impl Quantizer {
     /// executor.
     pub fn run(&self, req: &QuantRequest) -> Result<QuantResponse> {
         let opts = req.effective_options();
+        validate_entropy_budget(&opts)?;
+        if let Some(weights) = req.normalized_weights()? {
+            return run_weighted(req, &opts, &weights);
+        }
         match (&req.input, &req.plan) {
             (RequestInput::VectorF64(w), Plan::Sweep { lambdas, warm_start }) => {
                 if let (Some(memo), true) = (&self.memo, *warm_start) {
@@ -928,6 +1133,184 @@ impl Quantizer {
     }
 }
 
+/// Weighted dispatch: every plan except the cascade, always on the
+/// stateless path — weights are not part of the memo keys, so the
+/// caching facade's prepare/chain memos are bypassed and a weighted
+/// request is solved fresh every time (uniform weights never reach
+/// here; [`QuantRequest::normalized_weights`] drops them upstream).
+fn run_weighted(
+    req: &QuantRequest,
+    opts: &QuantOptions,
+    weights: &NormWeights,
+) -> Result<QuantResponse> {
+    if let Plan::Cascade { .. } = req.plan {
+        return Err(Error::InvalidInput(
+            "cascade: per-element importance weights are not supported (cascade levels \
+             re-quantize residuals, which have no per-element identity)"
+                .into(),
+        ));
+    }
+    match (&req.input, weights) {
+        (RequestInput::VectorF64(w), NormWeights::Vector(uw)) => match &req.plan {
+            Plan::Sweep { lambdas, warm_start } => {
+                let items = sweep_shared_f64_weighted(
+                    Arc::clone(w),
+                    Some(uw.as_ref()),
+                    req.method,
+                    lambdas,
+                    opts,
+                    *warm_start,
+                    req.output,
+                )?;
+                Ok(QuantResponse::from_items(items.into_iter().map(Ok).collect()))
+            }
+            _ => Ok(QuantResponse::from_items(vec![run_shared_f64_weighted(
+                Arc::clone(w),
+                Some(uw.as_ref()),
+                req.method,
+                opts,
+                req.output,
+            )])),
+        },
+        (RequestInput::VectorF32(w), NormWeights::Vector(uw)) => match &req.plan {
+            Plan::Sweep { lambdas, warm_start } => {
+                let t0 = Instant::now();
+                let prep =
+                    PreparedInput::from_shared(Arc::clone(w))?.with_user_weights(uw)?;
+                let prepare = t0.elapsed();
+                let items = sweep_prepared_core(
+                    &prep, req.method, lambdas, opts, *warm_start, req.output, prepare,
+                )?;
+                Ok(QuantResponse::from_items(
+                    items.into_iter().map(|i| Ok(Item::F32(i))).collect(),
+                ))
+            }
+            _ => Ok(QuantResponse::from_items(vec![run_shared_f32_weighted(
+                Arc::clone(w),
+                Some(uw.as_ref()),
+                req.method,
+                opts,
+                req.output,
+            )
+            .map(Item::F32)])),
+        },
+        (RequestInput::BatchF64(inputs), NormWeights::Batch(ws)) => {
+            let slots: Vec<(&[f64], Option<&[f64]>)> = inputs
+                .iter()
+                .zip(ws)
+                .map(|(v, u)| (v.as_slice(), u.as_deref()))
+                .collect();
+            match &req.plan {
+                Plan::Sweep { lambdas, warm_start } => {
+                    let per = batch_map(&slots, |&(v, u)| {
+                        sweep_shared_f64_weighted(
+                            Arc::from(v),
+                            u,
+                            req.method,
+                            lambdas,
+                            opts,
+                            *warm_start,
+                            req.output,
+                        )
+                    });
+                    Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+                }
+                _ => Ok(QuantResponse::from_items(batch_map(&slots, |&(v, u)| {
+                    run_shared_f64_weighted(Arc::from(v), u, req.method, opts, req.output)
+                }))),
+            }
+        }
+        (RequestInput::BatchF32(inputs), NormWeights::Batch(ws)) => {
+            let slots: Vec<(&[f32], Option<&[f64]>)> = inputs
+                .iter()
+                .zip(ws)
+                .map(|(v, u)| (v.as_slice(), u.as_deref()))
+                .collect();
+            match &req.plan {
+                Plan::Sweep { lambdas, warm_start } => {
+                    let per = batch_map(&slots, |&(v, u)| -> Result<Vec<Item>> {
+                        let t0 = Instant::now();
+                        let mut prep = PreparedInput::from_shared(Arc::from(v))?;
+                        if let Some(u) = u {
+                            prep = prep.with_user_weights(u)?;
+                        }
+                        let prepare = t0.elapsed();
+                        Ok(sweep_prepared_core(
+                            &prep, req.method, lambdas, opts, *warm_start, req.output,
+                            prepare,
+                        )?
+                        .into_iter()
+                        .map(Item::F32)
+                        .collect())
+                    });
+                    Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+                }
+                _ => Ok(QuantResponse::from_items(batch_map(&slots, |&(v, u)| {
+                    run_shared_f32_weighted(Arc::from(v), u, req.method, opts, req.output)
+                        .map(Item::F32)
+                }))),
+            }
+        }
+        (RequestInput::Matrix(m, grouping), NormWeights::Vector(uw)) => {
+            let groups = matrix_groups(m, *grouping)?;
+            let wgroups = matrix_weight_groups(m.rows(), m.cols(), *grouping, uw);
+            // Per-group validation (a group must carry positive weight on
+            // its own) and per-group uniform drop, mirroring the batch
+            // slots: a uniformly weighted row/column runs unweighted.
+            let mut slots: Vec<(&Arc<[f64]>, Option<&[f64]>)> =
+                Vec::with_capacity(groups.len());
+            for (g, wg) in groups.iter().zip(&wgroups) {
+                validate_weights(wg, g.len())?;
+                slots.push((g, (!weights_are_uniform(wg)).then(|| wg.as_slice())));
+            }
+            match &req.plan {
+                Plan::Sweep { lambdas, warm_start } => {
+                    let per = batch_map(&slots, |&(g, u)| {
+                        sweep_shared_f64_weighted(
+                            Arc::clone(g),
+                            u,
+                            req.method,
+                            lambdas,
+                            opts,
+                            *warm_start,
+                            req.output,
+                        )
+                    });
+                    Ok(QuantResponse::from_items(flatten_sweep(per, lambdas.len())))
+                }
+                _ => Ok(QuantResponse::from_items(batch_map(&slots, |&(g, u)| {
+                    run_shared_f64_weighted(Arc::clone(g), u, req.method, opts, req.output)
+                }))),
+            }
+        }
+        // normalized_weights only produces shape-matched pairs; anything
+        // else is a logic error surfaced as a request error, not a panic.
+        _ => Err(Error::InvalidInput(
+            "weights: form does not match the input shape".into(),
+        )),
+    }
+}
+
+/// Split a matrix's per-element (row-major) weight vector into the same
+/// groups [`matrix_groups`] splits the data into, so every weight
+/// follows its element through the fan-out.
+fn matrix_weight_groups(
+    rows: usize,
+    cols: usize,
+    grouping: Grouping,
+    w: &[f64],
+) -> Vec<Vec<f64>> {
+    match grouping {
+        Grouping::PerTensor => vec![w.to_vec()],
+        Grouping::PerRow => {
+            (0..rows).map(|i| w[i * cols..(i + 1) * cols].to_vec()).collect()
+        }
+        Grouping::PerColumn => (0..cols)
+            .map(|j| (0..rows).map(|i| w[i * cols + j]).collect())
+            .collect(),
+    }
+}
+
 // ---------------------------------------------------------------------
 // Content fingerprints — the cross-request cache key
 // ---------------------------------------------------------------------
@@ -939,7 +1322,9 @@ impl Quantizer {
 /// Two requests share a fingerprint only when every bit that can
 /// influence the solve is identical: the payload's element bit patterns
 /// (`to_bits`, so `-0.0` ≠ `0.0` and NaN payloads never alias anything),
-/// the lane, the method id, the plan shape, and all twelve option fields.
+/// the lane, the method id, the plan shape, any per-element importance
+/// weights (uniform weights hash as unweighted — they run the identical
+/// solve), and all thirteen option fields.
 /// The hash is two parallel 64-bit FNV-1a streams over the same byte
 /// sequence with distinct offset bases; consumers that must be
 /// collision-proof additionally retain the full key and verify it
@@ -958,17 +1343,45 @@ impl Fingerprint {
     /// target-count requests that run the same solve share a key — which
     /// is exactly the dedup the cache wants).
     pub fn vector_f64(w: &[f64], method: QuantMethod, opts: &QuantOptions) -> Fingerprint {
+        Self::vector_f64_weighted(w, None, method, opts)
+    }
+
+    /// Admission key for one f32 payload (the native narrow lane).
+    pub fn vector_f32(w: &[f32], method: QuantMethod, opts: &QuantOptions) -> Fingerprint {
+        Self::vector_f32_weighted(w, None, method, opts)
+    }
+
+    /// [`Fingerprint::vector_f64`] for an importance-weighted payload:
+    /// non-uniform weights salt the key (behind a domain tag, so a
+    /// weighted request can never alias an unweighted one), while `None`
+    /// or uniform weights hash exactly as the unweighted key — mirroring
+    /// the facade, which runs uniform weights down the unweighted path
+    /// bitwise.
+    pub fn vector_f64_weighted(
+        w: &[f64],
+        weights: Option<&[f64]>,
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) -> Fingerprint {
         let mut h = FpHasher::new();
         h.elems::<f64>(w);
+        h.weights(weights);
         h.str(method.id());
         h.opts(opts);
         h.finish()
     }
 
-    /// Admission key for one f32 payload (the native narrow lane).
-    pub fn vector_f32(w: &[f32], method: QuantMethod, opts: &QuantOptions) -> Fingerprint {
+    /// [`Fingerprint::vector_f64_weighted`] for the native f32 lane
+    /// (weights stay f64 — the wire carries them double-precision).
+    pub fn vector_f32_weighted(
+        w: &[f32],
+        weights: Option<&[f64]>,
+        method: QuantMethod,
+        opts: &QuantOptions,
+    ) -> Fingerprint {
         let mut h = FpHasher::new();
         h.elems::<f32>(w);
+        h.weights(weights);
         h.str(method.id());
         h.opts(opts);
         h.finish()
@@ -1042,6 +1455,27 @@ impl Fingerprint {
                 h.u64(norm_tol.to_bits());
             }
         }
+        // Importance weights, normalized first so uniform-weight
+        // requests alias the unweighted key they bitwise-reproduce
+        // (malformed weights hash as unweighted — they error before any
+        // cache could be consulted).
+        match req.normalized_weights().ok().flatten() {
+            None => {}
+            Some(NormWeights::Vector(w)) => h.weights(Some(w.as_ref())),
+            Some(NormWeights::Batch(ws)) => {
+                h.byte(0x57);
+                h.usize(ws.len());
+                for slot in &ws {
+                    match slot {
+                        None => h.byte(0),
+                        Some(w) => {
+                            h.byte(1);
+                            h.elems::<f64>(w);
+                        }
+                    }
+                }
+            }
+        }
         h.finish()
     }
 }
@@ -1092,6 +1526,16 @@ impl FpHasher {
         }
     }
 
+    /// Optional importance weights. Nothing is hashed for `None` or a
+    /// uniform vector — those run (and must alias) the unweighted solve;
+    /// non-uniform weights append a domain tag plus their bit patterns.
+    fn weights(&mut self, w: Option<&[f64]>) {
+        if let Some(w) = w.filter(|w| !weights_are_uniform(w)) {
+            self.byte(0x57); // 'W' — weighted keys never alias unweighted ones
+            self.elems::<f64>(w);
+        }
+    }
+
     /// Every option field, in declaration order, bit patterns for floats.
     fn opts(&mut self, o: &QuantOptions) {
         self.u64(o.lambda1.to_bits());
@@ -1116,6 +1560,13 @@ impl FpHasher {
             Precision::F64 => 0,
             Precision::F32 => 1,
         });
+        match o.entropy_budget {
+            None => self.byte(0),
+            Some(b) => {
+                self.byte(1);
+                self.u64(b.to_bits());
+            }
+        }
     }
 
     fn finish(self) -> Fingerprint {
@@ -1145,6 +1596,11 @@ pub(crate) fn opts_bits_eq(a: &QuantOptions, b: &QuantOptions) -> bool {
             _ => false,
         }
         && a.precision == b.precision
+        && match (a.entropy_budget, b.entropy_budget) {
+            (None, None) => true,
+            (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+            _ => false,
+        }
 }
 
 // ---------------------------------------------------------------------
@@ -1592,6 +2048,30 @@ pub(crate) fn finish_compact_parts<T: Scalar>(
     })
 }
 
+/// Post-solve hook for `QuantOptions::entropy_budget`: greedily merge
+/// levels until the index entropy fits the budget
+/// ([`merge::merge_to_entropy_budget`]). Distortion costs use the
+/// prepared input's level weights — folded importance when the request
+/// is weighted, multiplicities otherwise — so the merge trades off the
+/// same weighted objective the solve minimized. No budget, or a result
+/// already inside it, returns the levels bitwise-untouched.
+fn apply_entropy_budget<T: LaneSolve>(
+    prep: &PreparedInput<T>,
+    lv: Vec<T>,
+    opts: &QuantOptions,
+) -> Vec<T> {
+    match opts.entropy_budget {
+        None => lv,
+        Some(budget) => merge::merge_to_entropy_budget(
+            &prep.unique().values,
+            &lv,
+            prep.level_weights(),
+            &prep.unique().counts,
+            budget,
+        ),
+    }
+}
+
 /// Solve one prepared input on its lane and finalize compactly.
 pub(crate) fn run_prepared_core<T: LaneSolve>(
     prep: &PreparedInput<T>,
@@ -1602,6 +2082,7 @@ pub(crate) fn run_prepared_core<T: LaneSolve>(
 ) -> Result<QuantItem<T>> {
     let t = Instant::now();
     let (lv, diag) = T::lane_solve(solver_for(method), prep, opts)?;
+    let lv = apply_entropy_budget(prep, lv, opts);
     let mut item = finish_compact(prep, &lv, opts.clamp, diag)?;
     if form == OutputForm::Values {
         item.values = Some(item.codebook.decode());
@@ -1655,6 +2136,9 @@ pub(crate) fn sweep_steps<T: LaneSolve>(
         } else {
             T::lane_solve(solver, prep, &opts)?
         };
+        // The entropy merge shapes only this grid point's output; the
+        // warm-start chain state carries the unmerged coefficients.
+        let lv = apply_entropy_budget(prep, lv, &opts);
         let mut item = finish_compact(prep, &lv, opts.clamp, diag)?;
         if form == OutputForm::Values {
             item.values = Some(item.codebook.decode());
@@ -1678,10 +2162,27 @@ pub(crate) fn run_shared_f64(
     opts: &QuantOptions,
     form: OutputForm,
 ) -> Result<Item> {
+    run_shared_f64_weighted(w, None, method, opts, form)
+}
+
+/// [`run_shared_f64`] with optional per-element importance weights
+/// folded into the prepared input. `None` runs exactly the unweighted
+/// code path (same operations, same bits) — the weighted facade only
+/// dispatches here with `Some` for non-uniform weights.
+pub(crate) fn run_shared_f64_weighted(
+    w: Arc<[f64]>,
+    user_weights: Option<&[f64]>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Result<Item> {
     match opts.precision {
         Precision::F64 => {
             let t0 = Instant::now();
-            let prep = PreparedInput::from_shared(w)?;
+            let mut prep = PreparedInput::from_shared(w)?;
+            if let Some(u) = user_weights {
+                prep = prep.with_user_weights(u)?;
+            }
             let prepare = t0.elapsed();
             run_prepared_core(&prep, method, opts, form, prepare).map(Item::F64)
         }
@@ -1689,7 +2190,10 @@ pub(crate) fn run_shared_f64(
             // The one-time lane narrowing is part of the prepare stage.
             let t0 = Instant::now();
             let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
-            let prep = PreparedInput::from_vec(narrow)?;
+            let mut prep = PreparedInput::from_vec(narrow)?;
+            if let Some(u) = user_weights {
+                prep = prep.with_user_weights(u)?;
+            }
             let prepare = t0.elapsed();
             run_prepared_core(&prep, method, opts, form, prepare).map(Item::F32)
         }
@@ -1705,8 +2209,23 @@ pub(crate) fn run_shared_f32(
     opts: &QuantOptions,
     form: OutputForm,
 ) -> Result<QuantItem<f32>> {
+    run_shared_f32_weighted(w, None, method, opts, form)
+}
+
+/// [`run_shared_f32`] with optional importance weights; `None` is
+/// exactly the unweighted path.
+pub(crate) fn run_shared_f32_weighted(
+    w: Arc<[f32]>,
+    user_weights: Option<&[f64]>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+    form: OutputForm,
+) -> Result<QuantItem<f32>> {
     let t0 = Instant::now();
-    let prep = PreparedInput::from_shared(w)?;
+    let mut prep = PreparedInput::from_shared(w)?;
+    if let Some(u) = user_weights {
+        prep = prep.with_user_weights(u)?;
+    }
     let prepare = t0.elapsed();
     run_prepared_core(&prep, method, opts, form, prepare)
 }
@@ -1721,10 +2240,29 @@ fn sweep_shared_f64(
     warm_start: bool,
     form: OutputForm,
 ) -> Result<Vec<Item>> {
+    sweep_shared_f64_weighted(w, None, method, lambdas, base, warm_start, form)
+}
+
+/// [`sweep_shared_f64`] with optional importance weights attached to the
+/// prepared input before the λ path runs; `None` is exactly the
+/// unweighted path.
+#[allow(clippy::too_many_arguments)]
+fn sweep_shared_f64_weighted(
+    w: Arc<[f64]>,
+    user_weights: Option<&[f64]>,
+    method: QuantMethod,
+    lambdas: &[f64],
+    base: &QuantOptions,
+    warm_start: bool,
+    form: OutputForm,
+) -> Result<Vec<Item>> {
     match base.precision {
         Precision::F64 => {
             let t0 = Instant::now();
-            let prep = PreparedInput::from_shared(w)?;
+            let mut prep = PreparedInput::from_shared(w)?;
+            if let Some(u) = user_weights {
+                prep = prep.with_user_weights(u)?;
+            }
             let prepare = t0.elapsed();
             Ok(sweep_prepared_core(&prep, method, lambdas, base, warm_start, form, prepare)?
                 .into_iter()
@@ -1734,7 +2272,10 @@ fn sweep_shared_f64(
         Precision::F32 => {
             let t0 = Instant::now();
             let narrow: Vec<f32> = w.iter().map(|&x| x as f32).collect();
-            let prep = PreparedInput::from_vec(narrow)?;
+            let mut prep = PreparedInput::from_vec(narrow)?;
+            if let Some(u) = user_weights {
+                prep = prep.with_user_weights(u)?;
+            }
             let prepare = t0.elapsed();
             Ok(sweep_prepared_core(&prep, method, lambdas, base, warm_start, form, prepare)?
                 .into_iter()
@@ -2333,11 +2874,46 @@ mod tests {
             QuantOptions { max_lambda_steps: 7, ..opts.clone() },
             QuantOptions { clamp: Some((0.0, 1.0)), ..opts.clone() },
             QuantOptions { precision: Precision::F32, ..opts.clone() },
+            QuantOptions { entropy_budget: Some(2.0), ..opts.clone() },
         ] {
             check(Fingerprint::vector_f64(&w, QuantMethod::L1LeastSquare, &o));
             assert!(!opts_bits_eq(&o, &opts));
         }
         assert!(opts_bits_eq(&opts, &opts.clone()));
+        // Non-uniform importance weights salt the key; distinct weight
+        // vectors are distinct keys.
+        let wn: Vec<f64> = (0..w.len()).map(|i| 1.0 + (i % 3) as f64).collect();
+        let mut wn2 = wn.clone();
+        wn2[0] += 1.0;
+        check(Fingerprint::vector_f64_weighted(
+            &w,
+            Some(wn.as_slice()),
+            QuantMethod::L1LeastSquare,
+            &opts,
+        ));
+        check(Fingerprint::vector_f64_weighted(
+            &w,
+            Some(wn2.as_slice()),
+            QuantMethod::L1LeastSquare,
+            &opts,
+        ));
+        // Uniform weights alias the unweighted key — they run (and must
+        // cache as) the identical solve.
+        let uniform = vec![3.0; w.len()];
+        assert_eq!(
+            Fingerprint::vector_f64_weighted(
+                &w,
+                Some(uniform.as_slice()),
+                QuantMethod::L1LeastSquare,
+                &opts,
+            ),
+            Fingerprint::vector_f64(&w, QuantMethod::L1LeastSquare, &opts),
+        );
+        assert_eq!(
+            Fingerprint::of_request(&QuantRequest::vector(w.clone()).weights(uniform)),
+            Fingerprint::of_request(&QuantRequest::vector(w.clone())),
+        );
+        check(Fingerprint::of_request(&QuantRequest::vector(w.clone()).weights(wn)));
         // Plans separate through the request key; a target-count request
         // aliases the one-shot that runs the same solve — by design.
         let one = Fingerprint::of_request(&QuantRequest::vector(w.clone()));
@@ -2452,6 +3028,255 @@ mod tests {
             let gb = q.run(&mk(&b)).unwrap().into_single().unwrap();
             assert_f64_bitwise(&ga, &want_a, &format!("churn a#{round}"));
             assert_f64_bitwise(&gb, &want_b, &format!("churn b#{round}"));
+        }
+    }
+
+    /// A deterministic non-uniform weight vector for the weighted tests.
+    fn ramp_weights(n: usize) -> Vec<f64> {
+        (0..n).map(|i| 0.5 + (i % 5) as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights_run_the_unweighted_path_bitwise() {
+        let data = clustered(70, 80);
+        for method in [QuantMethod::L1LeastSquare, QuantMethod::KMeans, QuantMethod::ClusterLs] {
+            let plain = QuantRequest::vector(data.clone()).method(method).target_count(4);
+            let weighted = plain.clone().weights(vec![2.5; data.len()]);
+            let want = Quantizer::new().run(&plain).unwrap().into_single().unwrap();
+            let got = Quantizer::new().run(&weighted).unwrap().into_single().unwrap();
+            assert_f64_bitwise(&got, &want, &format!("{method:?} uniform"));
+        }
+    }
+
+    #[test]
+    fn weighted_requests_reject_malformed_weights() {
+        let data = clustered(40, 81);
+        let q = Quantizer::new();
+        let base = || QuantRequest::vector(data.clone());
+        let expect_invalid = |req: QuantRequest, tag: &str| match q.run(&req) {
+            Err(Error::InvalidInput(_)) => {}
+            other => panic!("{tag}: expected InvalidInput, got {other:?}"),
+        };
+        expect_invalid(base().weights(vec![1.0; data.len() - 1]), "length mismatch");
+        let mut w = vec![1.0; data.len()];
+        w[3] = f64::NAN;
+        expect_invalid(base().weights(w), "NaN weight");
+        let mut w = vec![1.0; data.len()];
+        w[3] = -0.5;
+        expect_invalid(base().weights(w), "negative weight");
+        let mut w = vec![1.0; data.len()];
+        w[3] = f64::INFINITY;
+        expect_invalid(base().weights(w), "infinite weight");
+        expect_invalid(base().weights(vec![0.0; data.len()]), "zero-sum weights");
+        expect_invalid(base().batch_weights(vec![vec![1.0; data.len()]]), "batch form on vector");
+        expect_invalid(
+            QuantRequest::batch(vec![data.clone()]).weights(ramp_weights(data.len())),
+            "vector form on batch",
+        );
+        expect_invalid(
+            base().weights(ramp_weights(data.len())).residual_levels(vec![2, 2], 0.0),
+            "cascade with weights",
+        );
+        // The entropy budget must be a non-negative finite number.
+        for bad in [f64::NAN, -1.0, f64::INFINITY] {
+            match q.run(&base().entropy_budget(bad)) {
+                Err(Error::InvalidParam(_)) => {}
+                other => panic!("budget {bad}: expected InvalidParam, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_one_shot_runs_every_shape_and_lane() {
+        let data = clustered(60, 82);
+        let uw = ramp_weights(data.len());
+
+        // Vector, both lanes.
+        for precision in [Precision::F64, Precision::F32] {
+            let item = Quantizer::new()
+                .run(
+                    &QuantRequest::vector(data.clone())
+                        .method(QuantMethod::KMeans)
+                        .target_count(4)
+                        .precision(precision)
+                        .weights(uw.clone()),
+                )
+                .unwrap()
+                .into_single()
+                .unwrap();
+            assert_eq!(item.precision(), precision);
+            assert!(item.distinct_values() <= 4);
+        }
+
+        // Native f32 payload.
+        let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+        let item = Quantizer::new()
+            .run(
+                &QuantRequest::vector_f32(data32)
+                    .method(QuantMethod::KMeans)
+                    .target_count(4)
+                    .weights(uw.clone()),
+            )
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_eq!(item.precision(), Precision::F32);
+
+        // Batch: a uniform slot runs the unweighted path bitwise while a
+        // non-uniform sibling runs weighted in the same request.
+        let other = clustered(50, 83);
+        let resp = Quantizer::new()
+            .run(
+                &QuantRequest::batch(vec![data.clone(), other.clone()])
+                    .method(QuantMethod::KMeans)
+                    .target_count(4)
+                    .batch_weights(vec![uw.clone(), vec![1.0; other.len()]]),
+            )
+            .unwrap();
+        assert_eq!(resp.len(), 2);
+        let want_other = Quantizer::new()
+            .run(&QuantRequest::vector(other).method(QuantMethod::KMeans).target_count(4))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_f64_bitwise(
+            resp.items[1].as_ref().unwrap(),
+            &want_other,
+            "uniform batch slot",
+        );
+
+        // Matrix per-row: row-major weights split like the data, and a
+        // weighted row matches the same row as a weighted vector request.
+        let m = Matrix::from_fn(3, 20, |i, j| ((i * 20 + j) % 7) as f64 / 7.0);
+        let mw: Vec<f64> = (0..60).map(|i| 0.5 + (i % 4) as f64).collect();
+        let resp = Quantizer::new()
+            .run(
+                &QuantRequest::matrix(m.clone(), Grouping::PerRow)
+                    .method(QuantMethod::KMeans)
+                    .target_count(3)
+                    .weights(mw.clone()),
+            )
+            .unwrap();
+        assert_eq!(resp.len(), 3);
+        let want_row = Quantizer::new()
+            .run(
+                &QuantRequest::vector(m.row(1).to_vec())
+                    .method(QuantMethod::KMeans)
+                    .target_count(3)
+                    .weights(mw[20..40].to_vec()),
+            )
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_f64_bitwise(resp.items[1].as_ref().unwrap(), &want_row, "matrix row 1");
+    }
+
+    #[test]
+    fn weighted_cold_sweep_matches_per_lambda_one_shots_bitwise() {
+        let data = clustered(60, 84);
+        let uw = ramp_weights(data.len());
+        let lambdas = vec![1e-3, 1e-2, 1e-1];
+        let resp = Quantizer::new()
+            .run(
+                &QuantRequest::vector(data.clone())
+                    .method(QuantMethod::L1LeastSquare)
+                    .weights(uw.clone())
+                    .sweep_cold(lambdas.clone()),
+            )
+            .unwrap();
+        assert_eq!(resp.len(), lambdas.len());
+        for (k, &l) in lambdas.iter().enumerate() {
+            let want = Quantizer::new()
+                .run(
+                    &QuantRequest::vector(data.clone())
+                        .method(QuantMethod::L1LeastSquare)
+                        .lambda1(l)
+                        .weights(uw.clone()),
+                )
+                .unwrap()
+                .into_single()
+                .unwrap();
+            assert_f64_bitwise(resp.items[k].as_ref().unwrap(), &want, &format!("λ#{k}"));
+        }
+        // The warm sweep yields the same item count and λ tagging.
+        let warm = Quantizer::new()
+            .run(
+                &QuantRequest::vector(data)
+                    .method(QuantMethod::L1LeastSquare)
+                    .weights(uw)
+                    .sweep(lambdas.clone()),
+            )
+            .unwrap();
+        assert_eq!(warm.len(), lambdas.len());
+        for (r, &l) in warm.items.iter().zip(&lambdas) {
+            assert_eq!(r.as_ref().unwrap().diag().lambda1, l);
+        }
+    }
+
+    #[test]
+    fn entropy_budget_merges_into_the_budget_and_nops_when_generous() {
+        let data = clustered(200, 85);
+        let mk = || {
+            QuantRequest::vector(data.clone()).method(QuantMethod::KMeans).target_count(8)
+        };
+        let plain = Quantizer::new().run(&mk()).unwrap().into_single().unwrap();
+        // A tight budget forces merges until the index entropy fits.
+        let tight = Quantizer::new()
+            .run(&mk().entropy_budget(1.0))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        let stats = tight.compression(8);
+        assert!(
+            stats.index_entropy <= 1.0 + 1e-9,
+            "index entropy {} exceeds the 1.0-bit budget",
+            stats.index_entropy
+        );
+        assert!(tight.distinct_values() < plain.distinct_values());
+        assert!(stats.entropy_coded_bytes <= stats.compact_bytes);
+        // A generous budget is a bitwise no-op relative to no budget.
+        let generous = Quantizer::new()
+            .run(&mk().entropy_budget(64.0))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_f64_bitwise(&generous, &plain, "generous budget");
+        // Budget zero collapses to a single level on every method that
+        // reaches the finalize.
+        let one = Quantizer::new()
+            .run(&mk().entropy_budget(0.0))
+            .unwrap()
+            .into_single()
+            .unwrap();
+        assert_eq!(one.distinct_values(), 1);
+    }
+
+    #[test]
+    fn caching_facade_bypasses_memos_for_weighted_requests() {
+        let data = clustered(60, 86);
+        let uw = ramp_weights(data.len());
+        let q = Quantizer::caching(8);
+        let weighted = || {
+            QuantRequest::vector(data.clone())
+                .method(QuantMethod::L1LeastSquare)
+                .lambda1(0.02)
+                .weights(uw.clone())
+        };
+        let plain = || {
+            QuantRequest::vector(data.clone())
+                .method(QuantMethod::L1LeastSquare)
+                .lambda1(0.02)
+        };
+        let want_w = Quantizer::new().run(&weighted()).unwrap().into_single().unwrap();
+        let want_p = Quantizer::new().run(&plain()).unwrap().into_single().unwrap();
+        // Interleave: weighted results never pollute the unweighted memo
+        // and vice versa; every run is bitwise what the stateless facade
+        // produces.
+        for round in 0..2 {
+            let gw = q.run(&weighted()).unwrap().into_single().unwrap();
+            let gp = q.run(&plain()).unwrap().into_single().unwrap();
+            assert_f64_bitwise(&gw, &want_w, &format!("weighted #{round}"));
+            assert_f64_bitwise(&gp, &want_p, &format!("plain #{round}"));
         }
     }
 }

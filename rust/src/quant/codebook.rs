@@ -333,6 +333,8 @@ impl<T: Scalar> PackedCodebook<T> {
 /// assert!(stats.levels_achieved <= stats.levels_requested);
 /// assert!(stats.bits_per_value < 64.0, "compact beats dense f64");
 /// assert!(stats.index_entropy <= stats.bits_per_index as f64 + 1e-9);
+/// assert!(stats.entropy_coded_bytes <= stats.compact_bytes,
+///         "the Shannon bound can only undercut fixed-width packing");
 /// assert!(stats.byte_ratio > 1.0, "{} compact vs {} dense bytes",
 ///         stats.compact_bytes, stats.dense_bytes);
 /// // Dense codebooks store u32 indices; the packed width is what the
@@ -372,6 +374,14 @@ pub struct CompressionStats {
     /// bound a variable-length coder could still reach below
     /// `bits_per_index`.
     pub index_entropy: f64,
+    /// Achievable entropy-coded size in bytes: `⌈n·H/8⌉` for the index
+    /// stream (first-order Shannon bound, the coded-size model of
+    /// "Towards the Limit of Network Quantization") plus the f32 codebook.
+    /// Always ≤ `compact_bytes` — the gap is what a variable-length coder
+    /// would still recover over ⌈log₂ k⌉-bit packing. Sums under
+    /// [`CompressionStats::aggregate`] and per-plane under
+    /// [`CompressionStats::stack`].
+    pub entropy_coded_bytes: usize,
     /// Compact wire bytes: fixed-width indices + the codebook stored as
     /// f32 (the Deep-Compression convention, on both lanes).
     pub compact_bytes: usize,
@@ -396,6 +406,7 @@ impl CompressionStats {
         let mut n = 0usize;
         let mut compact = 0usize;
         let mut dense = 0usize;
+        let mut entropy_coded = 0usize;
         let mut entropy_weighted = 0.0f64;
         let mut levels_achieved = 0usize;
         let mut levels_requested = 0usize;
@@ -408,6 +419,7 @@ impl CompressionStats {
             n += s.n;
             compact += s.compact_bytes;
             dense += s.dense_bytes;
+            entropy_coded += s.entropy_coded_bytes;
             entropy_weighted += s.index_entropy * s.n as f64;
             levels_achieved = levels_achieved.max(s.levels_achieved);
             levels_requested = levels_requested.max(s.levels_requested);
@@ -427,6 +439,7 @@ impl CompressionStats {
             bits_per_idx_packed,
             bits_per_value: if n > 0 { compact as f64 * 8.0 / n as f64 } else { 0.0 },
             index_entropy: if n > 0 { entropy_weighted / n as f64 } else { 0.0 },
+            entropy_coded_bytes: entropy_coded,
             compact_bytes: compact,
             dense_bytes: dense,
             byte_ratio: if compact > 0 { dense as f64 / compact as f64 } else { 0.0 },
@@ -459,6 +472,9 @@ impl CompressionStats {
             bits_per_idx_packed: self.bits_per_idx_packed + next.bits_per_idx_packed,
             bits_per_value: if self.n > 0 { compact as f64 * 8.0 / self.n as f64 } else { 0.0 },
             index_entropy: self.index_entropy + next.index_entropy,
+            // Each plane codes its own index stream and ships its own
+            // codebook, so the achievable coded sizes add.
+            entropy_coded_bytes: self.entropy_coded_bytes + next.entropy_coded_bytes,
             compact_bytes: compact,
             dense_bytes: self.dense_bytes,
             byte_ratio: if compact > 0 { self.dense_bytes as f64 / compact as f64 } else { 0.0 },
@@ -469,7 +485,7 @@ impl CompressionStats {
     pub fn summary(&self) -> String {
         format!(
             "levels={}/{} bits/value={:.3} entropy={:.3} bits/idx \
-             idx-bits={}→{} (stored→packed) compact={}B dense={}B ratio={:.2}x",
+             idx-bits={}→{} (stored→packed) compact={}B coded≤{}B dense={}B ratio={:.2}x",
             self.levels_achieved,
             self.levels_requested,
             self.bits_per_value,
@@ -477,6 +493,7 @@ impl CompressionStats {
             self.bits_per_idx_stored,
             self.bits_per_idx_packed,
             self.compact_bytes,
+            self.entropy_coded_bytes,
             self.dense_bytes,
             self.byte_ratio
         )
@@ -491,6 +508,11 @@ impl<T: Scalar> Codebook<T> {
     pub fn stats(&self, levels_requested: usize) -> CompressionStats {
         let compact = self.compressed_bytes();
         let dense = self.len() * std::mem::size_of::<T>();
+        let entropy = self.index_entropy();
+        // Achievable coded bytes: Shannon bound on the index stream plus
+        // the same f32 codebook the compact form ships.
+        let entropy_coded =
+            (self.len() as f64 * entropy / 8.0).ceil() as usize + self.k() * 4;
         CompressionStats {
             n: self.len(),
             levels_achieved: self.k(),
@@ -506,7 +528,8 @@ impl<T: Scalar> Codebook<T> {
             } else {
                 compact as f64 * 8.0 / self.len() as f64
             },
-            index_entropy: self.index_entropy(),
+            index_entropy: entropy,
+            entropy_coded_bytes: entropy_coded,
             compact_bytes: compact,
             dense_bytes: dense,
             byte_ratio: if compact > 0 { dense as f64 / compact as f64 } else { 0.0 },
@@ -632,6 +655,32 @@ mod tests {
         assert!((s.bits_per_value - (266.0 * 8.0 / 1000.0)).abs() < 1e-12);
         assert!((s.index_entropy - 2.0).abs() < 1e-9, "uniform 4 levels = 2 bits");
         assert!((s.byte_ratio - 8000.0 / 266.0).abs() < 1e-12);
+        // Uniform indices: the entropy bound equals fixed-width packing,
+        // ⌈1000·2/8⌉ + 16 codebook bytes.
+        assert_eq!(s.entropy_coded_bytes, 250 + 16);
+        assert_eq!(s.entropy_coded_bytes, s.compact_bytes);
+    }
+
+    #[test]
+    fn entropy_coded_bytes_undercut_packing_on_skew() {
+        // 990 of one level, 10 spread over three more: H ≈ 0.1 bits, far
+        // under the 2-bit packed width — the coded-size model shows the
+        // win a Huffman pass would deliver.
+        let mut skewed = vec![0.0f64; 990];
+        skewed.extend([1.0, 2.0, 3.0].iter().cycle().take(10).cloned());
+        let s = Codebook::from_values(&skewed).unwrap().stats(4);
+        assert!(s.entropy_coded_bytes < s.compact_bytes);
+        let idx_bytes = s.entropy_coded_bytes - 4 * 4;
+        assert!(
+            idx_bytes <= 20,
+            "≈0.1 bits × 1000 elements should code in ≲15 bytes, got {idx_bytes}"
+        );
+        // Aggregate sums the coded sizes; stack adds them per plane.
+        let agg = CompressionStats::aggregate([&s, &s]).unwrap();
+        assert_eq!(agg.entropy_coded_bytes, 2 * s.entropy_coded_bytes);
+        let stacked = s.stack(&s);
+        assert_eq!(stacked.entropy_coded_bytes, 2 * s.entropy_coded_bytes);
+        assert!(s.summary().contains("coded≤"), "{}", s.summary());
     }
 
     #[test]

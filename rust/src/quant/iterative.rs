@@ -101,6 +101,22 @@ pub fn solve_iterative_ws<T: Scalar>(
     warm_init: Option<&[T]>,
     ws: &mut lasso::Workspace<T>,
 ) -> Result<IterativeSolution<T>> {
+    solve_iterative_weighted_ws(basis, w, None, cfg, warm_init, ws)
+}
+
+/// [`solve_iterative_ws`] generalized to an optional per-level importance
+/// vector: every inner CD solve and every refit minimizes the weighted
+/// objective Σⱼ Wⱼ(ŵⱼ − (Vα)ⱼ)². `importance = None` takes the *exact*
+/// unweighted code path ([`lasso::solve_ws`] / unweighted refit), so the
+/// unweighted ladder stays bitwise-identical to every prior release.
+pub fn solve_iterative_weighted_ws<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    importance: Option<&[T]>,
+    cfg: &IterativeConfig,
+    warm_init: Option<&[T]>,
+    ws: &mut lasso::Workspace<T>,
+) -> Result<IterativeSolution<T>> {
     if w.len() != basis.m() {
         return Err(Error::InvalidInput(format!(
             "iterative: basis dim {} vs target dim {}",
@@ -144,7 +160,10 @@ pub fn solve_iterative_ws<T: Scalar>(
     while steps < cfg.max_steps {
         steps += 1;
         let cd_cfg = LassoConfig { lambda1: lambda, ..cfg.cd.clone() };
-        let sol = lasso::solve_ws(basis, w, &cd_cfg, warm.as_deref(), ws)?;
+        let sol = match importance {
+            Some(imp) => lasso::solve_ws_weighted(basis, w, imp, &cd_cfg, warm.as_deref(), ws)?,
+            None => lasso::solve_ws(basis, w, &cd_cfg, warm.as_deref(), ws)?,
+        };
         epochs += sol.epochs;
 
         // Steps 7–9: refit on the support, put α* back (eq 10), and carry
@@ -153,7 +172,7 @@ pub fn solve_iterative_ws<T: Scalar>(
         let refitted = if support.is_empty() {
             sol.alpha.clone()
         } else {
-            refit::refit_fast(basis, w, &support, None)?.alpha
+            refit::refit_fast(basis, w, &support, importance)?.alpha
         };
         let nnz = refitted.iter().filter(|&&a| a != T::ZERO).count();
         // Distinct OUTPUT levels (includes the implicit 0-prefix when
@@ -315,6 +334,44 @@ mod tests {
         assert_eq!(plain.alpha, warm.alpha);
         assert_eq!(plain.steps, warm.steps);
         assert_eq!(plain.epochs, warm.epochs);
+    }
+
+    #[test]
+    fn weighted_none_is_identical_to_plain() {
+        let (basis, v) = random_basis(48, 9);
+        let cfg = IterativeConfig { target_nnz: 6, ..Default::default() };
+        let plain = solve_iterative(&basis, &v, &cfg).unwrap();
+        let mut ws = lasso::Workspace::default();
+        let weighted = solve_iterative_weighted_ws(&basis, &v, None, &cfg, None, &mut ws).unwrap();
+        assert_eq!(plain.alpha, weighted.alpha);
+        assert_eq!(plain.steps, weighted.steps);
+        assert_eq!(plain.epochs, weighted.epochs);
+    }
+
+    #[test]
+    fn weighted_ladder_reaches_target_and_refits_weighted() {
+        let (basis, v) = random_basis(64, 10);
+        let mut rng = Pcg32::seeded(110);
+        let imp: Vec<f64> = (0..basis.m()).map(|_| rng.uniform(0.1, 4.0)).collect();
+        let cfg = IterativeConfig { target_nnz: 8, ..Default::default() };
+        let mut ws = lasso::Workspace::default();
+        let sol =
+            solve_iterative_weighted_ws(&basis, &v, Some(&imp), &cfg, None, &mut ws).unwrap();
+        assert!(sol.reached_target);
+        assert!(sol.nnz <= 8 && sol.nnz > 0);
+        // The returned α must coincide with the *weighted* refit of its own
+        // support — the ladder's inner refit is importance-aware.
+        let support: Vec<usize> = sol
+            .alpha
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a != 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        let re = crate::quant::refit::refit_fast(&basis, &v, &support, Some(&imp)).unwrap();
+        for (a, b2) in sol.alpha.iter().zip(&re.alpha) {
+            assert!((a - b2).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -176,6 +176,10 @@ pub struct Workspace<T: Scalar = f64> {
     /// per solve ([`VBasis::col_norms_into`]) instead of recomputed per
     /// coordinate per epoch.
     c: Vec<T>,
+    /// Suffix-weight sums `Σ_{i≥j} W_i` for the weighted solvers
+    /// ([`solve_ws_weighted`]); untouched (and unsized) on the unweighted
+    /// path so the hot unweighted reset stays three buffers.
+    sw: Vec<T>,
 }
 
 impl<T: Scalar> Workspace<T> {
@@ -191,6 +195,15 @@ impl<T: Scalar> Workspace<T> {
         self.r.resize(m, T::ZERO);
         self.c.clear();
         self.c.resize(m, T::ZERO);
+    }
+
+    /// [`Workspace::reset`] plus the suffix-weight buffer used only by the
+    /// weighted solvers — kept separate so unweighted solves never pay for
+    /// (or allocate) the fourth buffer.
+    fn reset_weighted(&mut self, m: usize) {
+        self.reset(m);
+        self.sw.clear();
+        self.sw.resize(m, T::ZERO);
     }
 
     /// Buffer capacities `(rec, r, c)` — exposed for the no-reallocation
@@ -215,6 +228,49 @@ pub fn objective<T: Scalar>(basis: &VBasis<T>, w: &[T], alpha: &[T], cfg: &Lasso
     let l1: f64 = alpha.iter().map(|a| a.abs().to_f64()).sum();
     let l2: f64 = alpha.iter().map(|a| (*a * *a).to_f64()).sum();
     0.5 * ls + cfg.lambda1 * l1 - cfg.lambda2 * l2
+}
+
+/// Importance-weighted objective ½Σⱼ Wⱼ(ŵⱼ − (Vα)ⱼ)² + λ₁‖α‖₁ − λ₂‖α‖₂²,
+/// accumulated in f64. With `W ≡ 𝟙` this equals [`objective`] exactly.
+pub fn objective_weighted<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    importance: &[T],
+    alpha: &[T],
+    cfg: &LassoConfig,
+) -> f64 {
+    let rec = basis.apply(alpha);
+    let ls: f64 = w
+        .iter()
+        .zip(&rec)
+        .zip(importance)
+        .map(|((a, b), wi)| {
+            let d = (*a - *b).to_f64();
+            wi.to_f64() * d * d
+        })
+        .sum();
+    let l1: f64 = alpha.iter().map(|a| a.abs().to_f64()).sum();
+    let l2: f64 = alpha.iter().map(|a| (*a * *a).to_f64()).sum();
+    0.5 * ls + cfg.lambda1 * l1 - cfg.lambda2 * l2
+}
+
+/// Per-level importance weights must align with the basis and be finite
+/// and non-negative (the api layer validates *user* weights; folding
+/// preserves both properties, so this is a cheap internal invariant check).
+fn validate_importance<T: Scalar>(basis: &VBasis<T>, importance: &[T]) -> Result<()> {
+    if importance.len() != basis.m() {
+        return Err(Error::InvalidInput(format!(
+            "lasso: importance dim {} vs basis dim {}",
+            importance.len(),
+            basis.m()
+        )));
+    }
+    if let Some(bad) = importance.iter().find(|x| !x.is_finite() || **x < T::ZERO) {
+        return Err(Error::InvalidInput(format!(
+            "lasso: importance weights must be finite and non-negative (got {bad})"
+        )));
+    }
+    Ok(())
 }
 
 fn validate<T: Scalar>(basis: &VBasis<T>, w: &[T], cfg: &LassoConfig) -> Result<()> {
@@ -301,7 +357,7 @@ pub fn solve_ws<T: Scalar>(
     // norms cached once per solve (pure per-entry expression — bitwise
     // neutral vs recomputing inside the loop).
     ws.reset(m);
-    let Workspace { rec, r, c } = ws;
+    let Workspace { rec, r, c, .. } = ws;
     basis.col_norms_into(c);
     let mut unstable = false;
     let mut epochs = 0;
@@ -376,6 +432,150 @@ pub fn solve_ws<T: Scalar>(
     }
 
     let objective = objective(basis, w, &alpha, cfg);
+    Ok(LassoSolution { alpha, epochs, converged, objective, unstable })
+}
+
+/// Importance-weighted structured CD solve — allocating wrapper over
+/// [`solve_ws_weighted`].
+pub fn solve_weighted<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    importance: &[T],
+    cfg: &LassoConfig,
+    warm: Option<&[T]>,
+) -> Result<LassoSolution<T>> {
+    let mut ws = Workspace::default();
+    solve_ws_weighted(basis, w, importance, cfg, warm, &mut ws)
+}
+
+/// Importance-weighted structured CD solve — O(m) per epoch, minimizing
+///
+/// ```text
+/// ½ Σⱼ Wⱼ(ŵⱼ − (Vα)ⱼ)² + λ₁‖α‖₁ − λ₂‖α‖₂²
+/// ```
+///
+/// for per-level weights `W` (folded user importance, or multiplicities).
+/// The diagonal-weighted normal equations keep the same suffix structure as
+/// the unweighted solve: the weighted column norm is
+/// `c_j = d_j²·SW_j` with `SW_j = Σ_{i≥j} W_i`
+/// ([`VBasis::col_norm_sq_weighted`]), and the lazy scalar becomes the
+/// *weighted* residual suffix `s = Σ_{i≥j} W_i r_i`, so
+/// `ρ_j = V_{·j}ᵀ diag(W) (r + V_{·j}α_j) = d_j·s + c_j·α_j` and an update
+/// at `j` shifts the scalar by `SW_j·d_j·δ`. One epoch is still O(m).
+///
+/// Coordinates whose *entire* weight suffix is zero (`c_j = 0`) cannot
+/// affect the weighted loss; their α is forced to 0 (the λ₁-minimal
+/// choice) instead of dividing by zero.
+///
+/// With `W ≡ 𝟙` every intermediate equals the unweighted solver's
+/// bit-for-bit **except** the column norms (`d_j²·Σ1 = d_j²·(m−j)` by a
+/// different summation order) — callers wanting the pinned unweighted path
+/// must call [`solve_ws`] directly, which is why the pipeline drops
+/// uniform weights to `None` upstream.
+pub fn solve_ws_weighted<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    importance: &[T],
+    cfg: &LassoConfig,
+    warm: Option<&[T]>,
+    ws: &mut Workspace<T>,
+) -> Result<LassoSolution<T>> {
+    validate(basis, w, cfg)?;
+    validate_importance(basis, importance)?;
+    let m = basis.m();
+    let d = basis.diffs();
+    let mut alpha = init_alpha(basis, warm, "lasso (weighted)")?;
+
+    let lambda1 = T::from_f64(cfg.lambda1);
+    let two_lambda2 = T::from_f64(2.0 * cfg.lambda2);
+    let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
+
+    ws.reset_weighted(m);
+    let Workspace { rec, r, c, sw } = ws;
+    // Suffix-weight sums SW_j = Σ_{i≥j} W_i, descending accumulation in
+    // lane precision (deterministic), then the weighted column norms.
+    let mut acc = T::ZERO;
+    for j in (0..m).rev() {
+        acc += importance[j];
+        sw[j] = acc;
+    }
+    for (j, cj) in c.iter_mut().enumerate() {
+        *cj = basis.col_norm_sq_weighted(j, sw);
+    }
+
+    let mut unstable = false;
+    let mut epochs = 0;
+    let mut converged = false;
+    let mut last_sig = 0u64;
+    let mut stable_epochs = 0usize;
+
+    for _ in 0..cfg.max_epochs {
+        epochs += 1;
+        basis.apply_into(&alpha, rec);
+        kernels::sub(w, rec, r);
+
+        // Descending pass with the *weighted* lazy suffix scalar.
+        let mut s = T::ZERO; // Σ_{i≥j} W_i·r_i
+        let mut max_move = T::ZERO;
+        for j in (0..m).rev() {
+            s += importance[j] * r[j];
+            let dj = d[j];
+            if dj == T::ZERO {
+                continue;
+            }
+            let cj = c[j];
+            if cj == T::ZERO {
+                // Zero-weight suffix: the coordinate is invisible to the
+                // weighted loss. α_j = 0 minimizes the λ₁ term; the scalar
+                // shift SW_j·d_j·δ is exactly zero, so s stays valid.
+                alpha[j] = T::ZERO;
+                continue;
+            }
+            let mut denom = cj - two_lambda2;
+            if denom <= T::EPSILON * cj.max(T::ONE) {
+                match cfg.on_instability {
+                    Instability::Skip => {
+                        unstable = true;
+                        denom = cj;
+                    }
+                    Instability::Error => {
+                        return Err(Error::InvalidParam(format!(
+                            "lasso: λ2={} makes coordinate {} non-convex (c={})",
+                            cfg.lambda2, j, cj
+                        )));
+                    }
+                }
+            }
+            let rho = dj * s + cj * alpha[j];
+            let new = shrink(rho, lambda1) / denom;
+            let delta = new - alpha[j];
+            if delta != T::ZERO {
+                alpha[j] = new;
+                s -= sw[j] * dj * delta;
+                max_move = max_move.max((dj * delta).abs());
+            }
+        }
+
+        if max_move < tol {
+            converged = true;
+            break;
+        }
+        if cfg.support_patience > 0 {
+            let sig = support_signature(&alpha);
+            if sig == last_sig {
+                stable_epochs += 1;
+                if stable_epochs >= cfg.support_patience {
+                    converged = true;
+                    break;
+                }
+            } else {
+                last_sig = sig;
+                stable_epochs = 0;
+            }
+        }
+    }
+
+    let objective = objective_weighted(basis, w, importance, &alpha, cfg);
     Ok(LassoSolution { alpha, epochs, converged, objective, unstable })
 }
 
@@ -475,6 +675,119 @@ pub fn solve_dense<T: Scalar>(
     }
 
     let objective = objective(basis, w, &alpha, cfg);
+    Ok(LassoSolution { alpha, epochs, converged, objective, unstable })
+}
+
+/// Dense (naïve) importance-weighted CD solve — O(m²) per epoch, the
+/// correctness oracle for [`solve_ws_weighted`]. Recomputes the weighted
+/// column correlation `V_{·j}ᵀ diag(W) r = d_j Σ_{i≥j} W_i r_i` by an
+/// explicit suffix loop each coordinate and maintains the residual
+/// incrementally, so it shares no structure with the fast path beyond the
+/// update rule itself.
+pub fn solve_dense_weighted<T: Scalar>(
+    basis: &VBasis<T>,
+    w: &[T],
+    importance: &[T],
+    cfg: &LassoConfig,
+    warm: Option<&[T]>,
+) -> Result<LassoSolution<T>> {
+    validate(basis, w, cfg)?;
+    validate_importance(basis, importance)?;
+    let m = basis.m();
+    let d = basis.diffs();
+    let mut alpha = init_alpha(basis, warm, "lasso (dense weighted)")?;
+
+    let lambda1 = T::from_f64(cfg.lambda1);
+    let two_lambda2 = T::from_f64(2.0 * cfg.lambda2);
+    let tol = T::from_f64(cfg.tol.max(T::TOL_FLOOR));
+
+    let mut r: Vec<T> = Vec::with_capacity(m);
+    for (i, wi) in w.iter().enumerate() {
+        r.push(*wi - kernels::dot(&d[..=i], &alpha[..=i]));
+    }
+
+    // Weighted column norms c_j = d_j² Σ_{i≥j} W_i.
+    let mut col_norms = vec![T::ZERO; m];
+    let mut acc = T::ZERO;
+    for j in (0..m).rev() {
+        acc += importance[j];
+        col_norms[j] = d[j] * d[j] * acc;
+    }
+
+    let mut unstable = false;
+    let mut epochs = 0;
+    let mut converged = false;
+    let mut last_sig = 0u64;
+    let mut stable_epochs = 0usize;
+
+    for _ in 0..cfg.max_epochs {
+        epochs += 1;
+        let mut max_move = T::ZERO;
+        for j in (0..m).rev() {
+            let dj = d[j];
+            if dj == T::ZERO {
+                continue;
+            }
+            let cj = col_norms[j];
+            if cj == T::ZERO {
+                // Zero-weight suffix (see solve_ws_weighted): force α_j = 0
+                // and keep the residual exact.
+                let delta = T::ZERO - alpha[j];
+                if delta != T::ZERO {
+                    alpha[j] = T::ZERO;
+                    for ri in &mut r[j..] {
+                        *ri = *ri - dj * delta;
+                    }
+                }
+                continue;
+            }
+            let mut denom = cj - two_lambda2;
+            if denom <= T::EPSILON * cj.max(T::ONE) {
+                match cfg.on_instability {
+                    Instability::Skip => {
+                        unstable = true;
+                        denom = cj;
+                    }
+                    Instability::Error => {
+                        return Err(Error::InvalidParam("lasso: unstable λ2".into()));
+                    }
+                }
+            }
+            let mut sj = T::ZERO;
+            for (ri, wi) in r[j..].iter().zip(&importance[j..]) {
+                sj += *wi * *ri;
+            }
+            let rho = dj * sj + cj * alpha[j];
+            let new = shrink(rho, lambda1) / denom;
+            let delta = new - alpha[j];
+            if delta != T::ZERO {
+                alpha[j] = new;
+                for ri in &mut r[j..] {
+                    *ri = *ri - dj * delta;
+                }
+                max_move = max_move.max((dj * delta).abs());
+            }
+        }
+        if max_move < tol {
+            converged = true;
+            break;
+        }
+        if cfg.support_patience > 0 {
+            let sig = support_signature(&alpha);
+            if sig == last_sig {
+                stable_epochs += 1;
+                if stable_epochs >= cfg.support_patience {
+                    converged = true;
+                    break;
+                }
+            } else {
+                last_sig = sig;
+                stable_epochs = 0;
+            }
+        }
+    }
+
+    let objective = objective_weighted(basis, w, importance, &alpha, cfg);
     Ok(LassoSolution { alpha, epochs, converged, objective, unstable })
 }
 
@@ -728,6 +1041,162 @@ mod tests {
         assert!(solve_dense(&b, &w, &cfg, Some(&[1.0])).is_err());
         assert!(solve_dense(&b, &w, &cfg, Some(&[1.0, 1.0, 1.0, 1.0])).is_err());
         assert!(solve_dense(&b, &w, &cfg, Some(&[1.0, 1.0, 1.0])).is_ok());
+    }
+
+    fn random_weights(m: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..m).map(|_| rng.uniform(0.1, 4.0)).collect()
+    }
+
+    #[test]
+    fn unit_weights_match_unweighted_objective() {
+        // W ≡ 𝟙 is the same optimization problem as the unweighted solve;
+        // the paths differ only in summation order of the column norms, so
+        // compare objectives and supports, not bits (the pipeline handles
+        // the bitwise pin by dropping uniform weights upstream).
+        for seed in [21u64, 22, 23] {
+            let v = random_values(48, seed);
+            let b = VBasis::new(&v);
+            let ones = vec![1.0; b.m()];
+            let cfg = LassoConfig { lambda1: 0.2, max_epochs: 5000, ..Default::default() };
+            let plain = solve(&b, &v, &cfg, None).unwrap();
+            let weighted = solve_weighted(&b, &v, &ones, &cfg, None).unwrap();
+            assert!(
+                (plain.objective - weighted.objective).abs() < 1e-8,
+                "objective mismatch: {} vs {}",
+                plain.objective,
+                weighted.objective
+            );
+            assert_eq!(plain.support(), weighted.support(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn weighted_structured_matches_weighted_dense() {
+        for seed in [31u64, 32, 33] {
+            let v = random_values(40, seed);
+            let b = VBasis::new(&v);
+            let imp = random_weights(b.m(), seed + 100);
+            let cfg = LassoConfig { lambda1: 0.3, max_epochs: 5000, ..Default::default() };
+            let fast = solve_weighted(&b, &v, &imp, &cfg, None).unwrap();
+            let slow = solve_dense_weighted(&b, &v, &imp, &cfg, None).unwrap();
+            assert!(
+                (fast.objective - slow.objective).abs() < 1e-8,
+                "objective mismatch: {} vs {}",
+                fast.objective,
+                slow.objective
+            );
+            for (a, b2) in fast.alpha.iter().zip(&slow.alpha) {
+                assert!((a - b2).abs() < 1e-6, "{a} vs {b2}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_beats_unweighted_on_weighted_objective() {
+        // The weighted solver minimizes the weighted objective directly, so
+        // at equal λ its weighted objective can't lose to evaluating the
+        // unweighted solution under the same weights (up to CD tolerance).
+        for seed in [41u64, 42, 43] {
+            let v = random_values(64, seed);
+            let b = VBasis::new(&v);
+            let imp = random_weights(b.m(), seed + 200);
+            let cfg = LassoConfig { lambda1: 0.5, max_epochs: 5000, ..Default::default() };
+            let weighted = solve_weighted(&b, &v, &imp, &cfg, None).unwrap();
+            let plain = solve(&b, &v, &cfg, None).unwrap();
+            let plain_under_w = objective_weighted(&b, &v, &imp, &plain.alpha, &cfg);
+            assert!(
+                weighted.objective <= plain_under_w + 1e-7,
+                "seed {seed}: weighted {} vs unweighted-under-W {}",
+                weighted.objective,
+                plain_under_w
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_objective_monotone_over_epochs() {
+        let v = random_values(40, 44);
+        let b = VBasis::new(&v);
+        let imp = random_weights(b.m(), 244);
+        let cfg = LassoConfig { lambda1: 0.4, ..Default::default() };
+        let mut prev = f64::INFINITY;
+        let mut alpha: Option<Vec<f64>> = None;
+        for _ in 0..20 {
+            let one = LassoConfig { max_epochs: 1, tol: 0.0, ..cfg.clone() };
+            let sol = solve_weighted(&b, &v, &imp, &one, alpha.as_deref()).unwrap();
+            assert!(sol.objective <= prev + 1e-9, "objective rose: {prev} -> {}", sol.objective);
+            prev = sol.objective;
+            alpha = Some(sol.alpha);
+        }
+    }
+
+    #[test]
+    fn zero_weight_suffix_zeroes_coordinates() {
+        // Give the top two levels zero importance: every coordinate whose
+        // suffix is all-zero must end at α = 0, and the weighted loss only
+        // sees the prefix.
+        let v = random_values(16, 45);
+        let b = VBasis::new(&v);
+        let m = b.m();
+        let mut imp = vec![1.0; m];
+        imp[m - 1] = 0.0;
+        imp[m - 2] = 0.0;
+        let cfg = LassoConfig { lambda1: 0.05, max_epochs: 5000, ..Default::default() };
+        let sol = solve_weighted(&b, &v, &imp, &cfg, None).unwrap();
+        assert_eq!(sol.alpha[m - 1], 0.0);
+        assert_eq!(sol.alpha[m - 2], 0.0);
+        assert!(sol.objective.is_finite());
+        let dense = solve_dense_weighted(&b, &v, &imp, &cfg, None).unwrap();
+        assert_eq!(dense.alpha[m - 1], 0.0);
+        assert_eq!(dense.alpha[m - 2], 0.0);
+    }
+
+    #[test]
+    fn weighted_rejects_bad_importance() {
+        let b = VBasis::new(&[1.0, 2.0, 4.0]);
+        let w = [1.0, 2.0, 4.0];
+        let cfg = LassoConfig::default();
+        assert!(solve_weighted(&b, &w, &[1.0, 1.0], &cfg, None).is_err());
+        assert!(solve_weighted(&b, &w, &[1.0, -1.0, 1.0], &cfg, None).is_err());
+        assert!(solve_weighted(&b, &w, &[1.0, f64::NAN, 1.0], &cfg, None).is_err());
+        assert!(solve_dense_weighted(&b, &w, &[1.0, f64::INFINITY, 1.0], &cfg, None).is_err());
+    }
+
+    #[test]
+    fn weighted_workspace_reuse_is_bitwise_identical() {
+        let v = random_values(64, 46);
+        let b = VBasis::new(&v);
+        let imp = random_weights(b.m(), 246);
+        let mut ws = Workspace::default();
+        for lambda in [0.01, 0.1, 1.0] {
+            let cfg = LassoConfig { lambda1: lambda, ..Default::default() };
+            let fresh = solve_weighted(&b, &v, &imp, &cfg, None).unwrap();
+            let reused = solve_ws_weighted(&b, &v, &imp, &cfg, None, &mut ws).unwrap();
+            assert_eq!(fresh.alpha, reused.alpha, "λ={lambda}");
+            assert_eq!(fresh.objective.to_bits(), reused.objective.to_bits(), "λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn weighted_f32_lane_tracks_f64() {
+        let v = random_values(48, 47);
+        let mut v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        v32.dedup();
+        let b = VBasis::new(&v);
+        let b32 = VBasis::new(&v32);
+        let imp = random_weights(b.m(), 247);
+        let imp32: Vec<f32> = imp.iter().take(b32.m()).map(|&x| x as f32).collect();
+        let cfg = LassoConfig { lambda1: 0.3, max_epochs: 5000, ..Default::default() };
+        let s64 = solve_weighted(&b, &v, &imp[..b.m()], &cfg, None).unwrap();
+        let s32 = solve_weighted(&b32, &v32, &imp32, &cfg, None).unwrap();
+        let denom = s64.objective.abs().max(1e-9);
+        assert!(
+            (s32.objective - s64.objective).abs() / denom < 2e-3,
+            "f32 weighted objective {} vs f64 {}",
+            s32.objective,
+            s64.objective
+        );
     }
 
     #[test]

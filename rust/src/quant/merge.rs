@@ -6,6 +6,12 @@
 //! reconstruction are merged — cheapest weighted-SSE increase first —
 //! until the count bound holds. Also exposed as a standalone agglomerative
 //! quantizer building block (cf. Xiang & Joy 1994, the paper's ref [11]).
+//!
+//! [`merge_to_entropy_budget`] is the entropy-constrained variant (ECSQ,
+//! after "Towards the Limit of Network Quantization", arXiv 1612.01543):
+//! instead of a level-count bound it enforces a *coded-size* bound — merge
+//! the pair with the smallest weighted-distortion increase **per coded bit
+//! saved** until the index entropy drops to the requested bits/element.
 
 use crate::linalg::scalar::Scalar;
 
@@ -68,6 +74,178 @@ pub fn merge_to_target<T: Scalar>(
     for &(s, e, _, mean) in &segs {
         for o in &mut out[s..e] {
             *o = mean;
+        }
+    }
+    out
+}
+
+/// Index entropy of a per-level reconstruction in **bits per element**:
+/// runs of equal reconstructed values form the codebook entries, and each
+/// original element (level multiplicities `counts`) draws one index, so
+/// `H = −Σ_k p_k log₂ p_k` with `p_k = n_k / n`. This is the first-order
+/// achievable coded size of the index stream and the quantity
+/// [`merge_to_entropy_budget`] constrains. Accumulated in f64 on both
+/// lanes.
+pub fn index_entropy_bits<T: Scalar>(reconstruction: &[T], counts: &[usize]) -> f64 {
+    debug_assert_eq!(reconstruction.len(), counts.len());
+    let m = reconstruction.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let n: f64 = counts.iter().map(|&c| c as f64).sum();
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    let mut start = 0usize;
+    for i in 1..=m {
+        if i == m || reconstruction[i] != reconstruction[start] {
+            let nk: f64 = counts[start..i].iter().map(|&c| c as f64).sum();
+            if nk > 0.0 {
+                let p = nk / n;
+                h -= p * p.log2();
+            }
+            start = i;
+        }
+    }
+    h
+}
+
+/// Entropy-constrained level merge (ECSQ greedy, arXiv 1612.01543 §3).
+///
+/// Merges adjacent levels of a piecewise-constant reconstruction over the
+/// sorted unique values `values` until the index entropy
+/// ([`index_entropy_bits`]) is at most `budget_bits` bits/element. The
+/// merge order is distortion-rate greedy: at each step the adjacent pair
+/// with the smallest **weighted-SSE increase per coded bit saved** merges,
+/// and the merged segment is re-represented by its weighted mean (the
+/// distortion-optimal representative). Distortion is measured against
+/// `values` under `level_weights` (importance or multiplicities); coded
+/// size uses the element multiplicities `counts`.
+///
+/// Properties the test suite pins:
+/// * if the current entropy already meets the budget the input is returned
+///   **unchanged** (bitwise) — the pass is a no-op for generous budgets;
+/// * every merge strictly reduces the total coded size (log-sum
+///   concavity), so the greedy terminates and the result's entropy never
+///   exceeds the budget (a single level has entropy 0, the floor);
+/// * the merge sequence does not depend on the budget — a tighter budget
+///   runs a longer prefix of the *same* sequence, so the achieved entropy
+///   is monotone in the budget.
+///
+/// All cost/rate arithmetic is f64 on both lanes (the f32 lane narrows the
+/// representatives once at the end), so the two lanes walk the same merge
+/// sequence.
+pub fn merge_to_entropy_budget<T: Scalar>(
+    values: &[T],
+    reconstruction: &[T],
+    level_weights: &[T],
+    counts: &[usize],
+    budget_bits: f64,
+) -> Vec<T> {
+    let m = reconstruction.len();
+    debug_assert_eq!(values.len(), m);
+    debug_assert_eq!(level_weights.len(), m);
+    debug_assert_eq!(counts.len(), m);
+    if m == 0 {
+        return Vec::new();
+    }
+    if index_entropy_bits(reconstruction, counts) <= budget_bits {
+        return reconstruction.to_vec();
+    }
+
+    // Segment list over runs of equal reconstructed values:
+    // (start, end_exclusive, n elements, W=Σw, M1=Σw·v, M2=Σw·v², rep q).
+    // Distortion of a segment at representative q is the exact weighted
+    // SSE against the data: D(q) = M2 − 2q·M1 + q²·W.
+    struct Seg {
+        start: usize,
+        end: usize,
+        n: f64,
+        w: f64,
+        m1: f64,
+        m2: f64,
+        rep: f64,
+    }
+    let mut segs: Vec<Seg> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=m {
+        if i == m || reconstruction[i] != reconstruction[start] {
+            let (mut n, mut w, mut m1, mut m2) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for j in start..i {
+                let wj = level_weights[j].to_f64();
+                let vj = values[j].to_f64();
+                n += counts[j] as f64;
+                w += wj;
+                m1 += wj * vj;
+                m2 += wj * vj * vj;
+            }
+            segs.push(Seg { start, end: i, n, w, m1, m2, rep: reconstruction[start].to_f64() });
+            start = i;
+        }
+    }
+    let n_total: f64 = segs.iter().map(|s| s.n).sum();
+
+    let entropy = |segs: &[Seg]| -> f64 {
+        if n_total <= 0.0 {
+            return 0.0;
+        }
+        segs.iter()
+            .filter(|s| s.n > 0.0)
+            .map(|s| {
+                let p = s.n / n_total;
+                -p * p.log2()
+            })
+            .sum()
+    };
+    let seg_distortion = |s: &Seg| s.m2 - 2.0 * s.rep * s.m1 + s.rep * s.rep * s.w;
+    // Merged representative: the weighted mean (falls back to the
+    // element-count mean of the two reps for zero-importance pairs).
+    let merged_rep = |a: &Seg, b: &Seg| -> f64 {
+        let w = a.w + b.w;
+        if w > 0.0 {
+            (a.m1 + b.m1) / w
+        } else if a.n + b.n > 0.0 {
+            (a.n * a.rep + b.n * b.rep) / (a.n + b.n)
+        } else {
+            a.rep
+        }
+    };
+
+    while segs.len() > 1 && entropy(&segs) > budget_bits {
+        // ΔD / ΔR over adjacent pairs: ΔD from the exact moments, ΔR the
+        // coded bits saved n₁log₂(n/n₁) + n₂log₂(n/n₂) − n₁₂log₂(n/n₁₂)
+        // (> 0 whenever both sides carry elements).
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for i in 0..segs.len() - 1 {
+            let (a, b) = (&segs[i], &segs[i + 1]);
+            let q = merged_rep(a, b);
+            let d_new = (a.m2 + b.m2) - 2.0 * q * (a.m1 + b.m1) + q * q * (a.w + b.w);
+            let dd = d_new - seg_distortion(a) - seg_distortion(b);
+            let bits = |n: f64| if n > 0.0 { n * (n_total / n).log2() } else { 0.0 };
+            let dr = bits(a.n) + bits(b.n) - bits(a.n + b.n);
+            let score = if dr > 0.0 { dd / dr } else { dd };
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        let b = segs.remove(best + 1);
+        let a = &mut segs[best];
+        a.rep = merged_rep(a, &b);
+        a.end = b.end;
+        a.n += b.n;
+        a.w += b.w;
+        a.m1 += b.m1;
+        a.m2 += b.m2;
+    }
+
+    let mut out = vec![T::ZERO; m];
+    for s in &segs {
+        let rep = T::from_f64(s.rep);
+        for o in &mut out[s.start..s.end] {
+            *o = rep;
         }
     }
     out
@@ -136,5 +314,120 @@ mod tests {
         assert_eq!(merged[3], 10.0);
         assert_eq!(merged[1], merged[2]);
         assert!((merged[1] - 1.025).abs() < 1e-5);
+    }
+
+    #[test]
+    fn entropy_of_uniform_four_levels_is_two_bits() {
+        let rec = vec![1.0, 2.0, 3.0, 4.0];
+        let h = index_entropy_bits(&rec, &[5, 5, 5, 5]);
+        assert!((h - 2.0).abs() < 1e-12);
+        // One level = zero bits; skewed distribution < log2(m).
+        assert_eq!(index_entropy_bits(&[7.0, 7.0], &[3, 9]), 0.0);
+        let skew = index_entropy_bits(&rec, &[97, 1, 1, 1]);
+        assert!(skew < 2.0 && skew > 0.0);
+    }
+
+    #[test]
+    fn generous_budget_is_bitwise_identity() {
+        let values = vec![0.0, 1.0, 2.5, 7.0];
+        let rec = vec![0.1, 1.1, 2.4, 6.9];
+        let w = vec![1.0, 2.0, 1.0, 3.0];
+        let counts = vec![1usize, 2, 1, 4];
+        let h = index_entropy_bits(&rec, &counts);
+        let out = merge_to_entropy_budget(&values, &rec, &w, &counts, h + 0.01);
+        assert_eq!(out, rec);
+        let out2 = merge_to_entropy_budget(&values, &rec, &w, &counts, 64.0);
+        assert_eq!(out2, rec);
+    }
+
+    #[test]
+    fn zero_budget_collapses_to_one_level() {
+        let values = vec![1.0, 2.0, 3.0, 6.0];
+        let rec = values.clone();
+        let w = vec![1.0; 4];
+        let counts = vec![1usize; 4];
+        let out = merge_to_entropy_budget(&values, &rec, &w, &counts, 0.0);
+        assert_eq!(index_entropy_bits(&out, &counts), 0.0);
+        // Single representative = the weighted mean of the data.
+        for v in &out {
+            assert!((v - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn budget_is_respected_and_monotone() {
+        // Deterministic pseudo-random input; budgets descending. The
+        // achieved entropy must stay under each budget and be monotone
+        // non-increasing as the budget tightens (nested greedy prefix).
+        let mut rng = crate::data::rng::Pcg32::seeded(42);
+        let mut values: Vec<f64> = (0..24).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rec = values.clone();
+        let w: Vec<f64> = (0..24).map(|_| rng.uniform(0.1, 3.0)).collect();
+        let counts: Vec<usize> = (0..24).map(|_| rng.uniform(1.0, 9.0) as usize + 1).collect();
+        let full = index_entropy_bits(&rec, &counts);
+        assert!(full > 3.0);
+        let mut prev_h = f64::INFINITY;
+        let mut prev_levels = usize::MAX;
+        for budget in [4.0, 3.0, 2.0, 1.0, 0.5, 0.0] {
+            let out = merge_to_entropy_budget(&values, &rec, &w, &counts, budget);
+            let h = index_entropy_bits(&out, &counts);
+            assert!(h <= budget + 1e-9, "budget {budget}: entropy {h}");
+            assert!(h <= prev_h + 1e-12, "entropy rose as budget tightened");
+            let levels = distinct_count_exact(&out);
+            assert!(levels <= prev_levels, "levels rose as budget tightened");
+            prev_h = h;
+            prev_levels = levels;
+        }
+    }
+
+    #[test]
+    fn heavy_importance_pins_the_merged_representative() {
+        // Two close levels with lopsided importance: the merged rep sits at
+        // the importance-weighted mean, not the midpoint.
+        let values = vec![0.0, 1.0, 50.0];
+        let rec = values.clone();
+        let w = vec![99.0, 1.0, 1.0];
+        let counts = vec![1usize, 1, 1];
+        // log2(3) ≈ 1.585; force exactly one merge.
+        let out = merge_to_entropy_budget(&values, &rec, &w, &counts, 1.0);
+        assert_eq!(out[2], 50.0, "far level must survive");
+        assert_eq!(out[0], out[1]);
+        assert!((out[0] - 0.01).abs() < 1e-12, "rep {} should be the weighted mean", out[0]);
+    }
+
+    #[test]
+    fn weighted_distortion_drives_merge_order() {
+        // Pair (0,1) is closer in value than (10,13), but carries enormous
+        // importance — merging it is costlier per bit, so the wide
+        // low-importance pair merges first.
+        let values = vec![0.0, 1.0, 10.0, 13.0];
+        let rec = values.clone();
+        let w = vec![500.0, 500.0, 0.1, 0.1];
+        let counts = vec![1usize, 1, 1, 1];
+        let out = merge_to_entropy_budget(&values, &rec, &w, &counts, 1.6);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 1.0);
+        assert_eq!(out[2], out[3]);
+    }
+
+    #[test]
+    fn entropy_merge_f32_lane_walks_the_f64_sequence() {
+        let values64 = vec![0.0f64, 1.0, 1.05, 10.0, 11.0];
+        let values32: Vec<f32> = values64.iter().map(|&x| x as f32).collect();
+        let w64 = vec![1.0f64, 2.0, 1.0, 1.0, 3.0];
+        let w32: Vec<f32> = w64.iter().map(|&x| x as f32).collect();
+        let counts = vec![2usize, 1, 1, 3, 1];
+        let out64 = merge_to_entropy_budget(&values64, &values64, &w64, &counts, 1.2);
+        let out32 = merge_to_entropy_budget(&values32, &values32, &w32, &counts, 1.2);
+        assert_eq!(distinct_count_exact(&out64), distinct_count_exact(&out32));
+        for (a, b) in out64.iter().zip(&out32) {
+            assert!((*a - f64::from(*b)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn entropy_merge_empty_input() {
+        assert!(merge_to_entropy_budget::<f64>(&[], &[], &[], &[], 1.0).is_empty());
     }
 }

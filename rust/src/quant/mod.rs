@@ -65,8 +65,10 @@ pub mod unique;
 pub mod vmatrix;
 
 pub use api::{
-    Fingerprint, Item, OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer,
+    validate_entropy_budget, validate_weights, weights_are_uniform, Fingerprint, Item,
+    OutputForm, Plan, QuantItem, QuantRequest, QuantResponse, Quantizer, RequestWeights,
 };
+pub use merge::index_entropy_bits;
 pub use codebook::{Codebook, CodebookF32, CompressionStats, PackedCodebook, PackedIndices};
 pub use qmatrix::{CascadeLevel, QMatrix};
 pub use pipeline::{

@@ -97,6 +97,12 @@ pub struct PreparedInput<T: Scalar = f64> {
     weight_suffix: Vec<T>,
     /// `value_prefix[j] = Σ_{i<j} ŵ_i` (m+1 entries, first 0).
     value_prefix: Vec<T>,
+    /// Per-level importance: user-supplied per-element weights folded into
+    /// the unique decomposition (`importance[j] = Σ user[i]` over the
+    /// elements of level `j`). `None` for unweighted requests — the
+    /// multiplicity `weights` above then play that role, keeping the
+    /// unweighted path bitwise-unchanged.
+    importance: Option<Vec<T>>,
 }
 
 /// The single-precision prepared input (the f32 fast lane).
@@ -117,7 +123,15 @@ impl<T: Scalar> PreparedInput<T> {
         for j in 0..m {
             value_prefix[j + 1] = value_prefix[j] + unique.values[j];
         }
-        PreparedInput { original, unique, basis, weights, weight_suffix, value_prefix }
+        PreparedInput {
+            original,
+            unique,
+            basis,
+            weights,
+            weight_suffix,
+            value_prefix,
+            importance: None,
+        }
     }
 
     fn build(original: Arc<[T]>) -> Result<PreparedInput<T>> {
@@ -160,6 +174,29 @@ impl<T: Scalar> PreparedInput<T> {
     /// Multiplicity weights (lane precision) per unique value.
     pub fn weights(&self) -> &[T] {
         &self.weights
+    }
+
+    /// Attach per-element importance weights (folded into per-level sums —
+    /// see [`UniqueDecomp::fold_importance`]). Weighted solvers then
+    /// minimize `Σᵢ userᵢ(xᵢ − qᵢ)²` instead of plain MSE. Length must
+    /// match the original vector; content validation (finite, ≥ 0,
+    /// positive sum) is the request layer's job.
+    pub fn with_user_weights(mut self, user: &[f64]) -> Result<Self> {
+        self.importance = Some(self.unique.fold_importance(user)?);
+        Ok(self)
+    }
+
+    /// The folded per-level importance, when this input is weighted.
+    pub fn importance(&self) -> Option<&[T]> {
+        self.importance.as_deref()
+    }
+
+    /// The per-level weights the cluster-family solvers should minimize
+    /// against: folded importance when present, multiplicity counts
+    /// otherwise (with `importance == None` this is exactly
+    /// [`PreparedInput::weights`], keeping unweighted runs bitwise-stable).
+    pub fn level_weights(&self) -> &[T] {
+        self.importance.as_deref().unwrap_or(&self.weights)
     }
 
     /// Cached suffix weight `Σ_{i≥j} counts[i]` in O(1).
@@ -236,7 +273,15 @@ impl PreparedInput<f32> {
         };
         let original: Arc<[f64]> =
             self.original.iter().map(|&x| f64::from(x)).collect::<Vec<f64>>().into();
-        PreparedInput::from_parts(original, unique)
+        let mut wide = PreparedInput::from_parts(original, unique);
+        // Importance carries over exactly: the f32-accumulated per-level
+        // sums widen losslessly, so the f64 fallback solvers see the same
+        // weighting the f32 lane folded.
+        wide.importance = self
+            .importance
+            .as_ref()
+            .map(|imp| imp.iter().map(|&x| f64::from(x)).collect());
+        wide
     }
 }
 
@@ -455,7 +500,10 @@ impl L1Solver {
     ) -> Result<(Vec<T>, QuantDiag, Vec<T>)> {
         let basis = prep.basis();
         let w = &prep.unique().values;
-        let sol = lasso::solve_ws(basis, w, &lasso_cfg(opts), warm, ws)?;
+        let sol = match prep.importance() {
+            Some(imp) => lasso::solve_ws_weighted(basis, w, imp, &lasso_cfg(opts), warm, ws)?,
+            None => lasso::solve_ws(basis, w, &lasso_cfg(opts), warm, ws)?,
+        };
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.converged,
@@ -466,7 +514,7 @@ impl L1Solver {
         };
         let levels = if self.with_refit {
             let support = sol.support();
-            refit::refit_fast(basis, w, &support, None)?.reconstruction
+            refit::refit_fast(basis, w, &support, prep.importance())?.reconstruction
         } else {
             basis.apply(&sol.alpha)
         };
@@ -535,7 +583,10 @@ impl L1L2Solver {
         let basis = prep.basis();
         let w = &prep.unique().values;
         let cfg = lasso::LassoConfig { lambda2: opts.lambda2, ..lasso_cfg(opts) };
-        let sol = lasso::solve_ws(basis, w, &cfg, warm, ws)?;
+        let sol = match prep.importance() {
+            Some(imp) => lasso::solve_ws_weighted(basis, w, imp, &cfg, warm, ws)?,
+            None => lasso::solve_ws(basis, w, &cfg, warm, ws)?,
+        };
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.converged,
@@ -547,7 +598,7 @@ impl L1L2Solver {
         // Fig 4 compares l1 vs l1+l2 without the LS refit; honor opts.refit
         // for users who want Algorithm-1 style output.
         let levels = if opts.refit {
-            refit::refit_fast(basis, w, &sol.support(), None)?.reconstruction
+            refit::refit_fast(basis, w, &sol.support(), prep.importance())?.reconstruction
         } else {
             basis.apply(&sol.alpha)
         };
@@ -611,6 +662,12 @@ impl QuantSolver for L0Solver {
     }
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        if prep.importance().is_some() {
+            return Err(crate::Error::InvalidInput(
+                "l0: importance weights are not supported (best-subset search is unweighted)"
+                    .into(),
+            ));
+        }
         let basis = prep.basis();
         let cfg = l0::L0Config {
             max_nnz: opts.target_values,
@@ -653,7 +710,14 @@ impl IterativeSolver {
             cd: lasso_cfg(opts),
             accelerate: 1.0,
         };
-        let sol = iterative::solve_iterative_ws(basis, &prep.unique().values, &cfg, warm, ws)?;
+        let sol = iterative::solve_iterative_weighted_ws(
+            basis,
+            &prep.unique().values,
+            prep.importance(),
+            &cfg,
+            warm,
+            ws,
+        )?;
         let diag = QuantDiag {
             iterations: sol.epochs,
             converged: sol.reached_target,
@@ -667,7 +731,7 @@ impl IterativeSolver {
             // The λ path can jump past the requested count (paper: "might
             // fail to optimize to exact l values"). Enforce the library's
             // contract with a Ward merge of the surplus levels.
-            rec = merge::merge_to_target(&rec, None, opts.target_values);
+            rec = merge::merge_to_target(&rec, prep.importance(), opts.target_values);
         }
         Ok((rec, diag, sol.alpha))
     }
@@ -751,7 +815,7 @@ impl QuantSolver for ClusterLsSolver {
         let sol = cluster_ls::solve_cluster_ls(
             basis,
             &prep.unique().values,
-            Some(prep.weights()),
+            Some(prep.level_weights()),
             &cfg,
         )?;
         let diag = QuantDiag {
@@ -783,7 +847,7 @@ impl QuantSolver for KMeansSolver {
             ..Default::default()
         };
         let (rec, iters, empty) =
-            cluster_ls::kmeans_quantize_levels(prep.basis(), Some(prep.weights()), &cfg)?;
+            cluster_ls::kmeans_quantize_levels(prep.basis(), Some(prep.level_weights()), &cfg)?;
         let diag = QuantDiag {
             iterations: iters,
             converged: true,
@@ -807,7 +871,7 @@ impl QuantSolver for KMeansExactSolver {
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
         let basis = prep.basis();
-        let r = kmeans_dp(basis.values(), Some(prep.weights()), opts.target_values)?;
+        let r = kmeans_dp(basis.values(), Some(prep.level_weights()), opts.target_values)?;
         let rec: Vec<f64> = basis
             .values()
             .iter()
@@ -840,7 +904,7 @@ impl QuantSolver for GmmSolver {
             tol: 1e-9,
             seed: opts.seed,
         };
-        let r = gmm_1d(prep.basis().values(), Some(prep.weights()), &cfg)?;
+        let r = gmm_1d(prep.basis().values(), Some(prep.level_weights()), &cfg)?;
         let rec: Vec<f64> = r.assignment.iter().map(|&a| r.means[a]).collect();
         let diag = QuantDiag {
             iterations: r.iterations,
@@ -870,7 +934,7 @@ impl QuantSolver for DataTransformSolver {
             seed: opts.seed,
             ..Default::default()
         };
-        let r = data_transform_cluster(basis.values(), Some(prep.weights()), &cfg)?;
+        let r = data_transform_cluster(basis.values(), Some(prep.level_weights()), &cfg)?;
         let rec: Vec<f64> = basis
             .values()
             .iter()
@@ -896,6 +960,13 @@ impl QuantSolver for TvExactSolver {
     }
 
     fn solve(&self, prep: &PreparedInput, opts: &QuantOptions) -> Result<(Vec<f64>, QuantDiag)> {
+        if prep.importance().is_some() {
+            return Err(crate::Error::InvalidInput(
+                "tv_exact: importance weights are not supported (the fused-lasso DP is \
+                 unweighted)"
+                    .into(),
+            ));
+        }
         let basis = prep.basis();
         let rec = tv_exact::solve_tv_exact(basis, &prep.unique().values, opts.lambda1)?;
         let nnz = {
@@ -933,7 +1004,7 @@ impl QuantSolver for AgglomerativeSolver {
         let basis = prep.basis();
         let r = crate::cluster::agglomerative::agglomerative_1d(
             basis.values(),
-            Some(prep.weights()),
+            Some(prep.level_weights()),
             opts.target_values,
         )?;
         let rec: Vec<f64> = basis
@@ -970,7 +1041,7 @@ impl QuantSolver for FcmSolver {
         };
         let r = crate::cluster::fuzzy_cmeans::fuzzy_cmeans_1d(
             prep.basis().values(),
-            Some(prep.weights()),
+            Some(prep.level_weights()),
             &cfg,
         )?;
         let rec: Vec<f64> = r.assignment.iter().map(|&a| r.centroids[a]).collect();

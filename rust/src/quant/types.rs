@@ -189,6 +189,12 @@ pub struct QuantOptions {
     /// own type instead, and payload-typed coordinator submissions by the
     /// payload's). See [`Precision`].
     pub precision: Precision,
+    /// Optional entropy budget in bits per value: after the solve, adjacent
+    /// output levels are greedily merged (trading importance-weighted
+    /// distortion against coded bits, per "Towards the Limit of Network
+    /// Quantization") until the index entropy of the result is at or below
+    /// this many bits. `None` (the default) disables the pass entirely.
+    pub entropy_budget: Option<f64>,
 }
 
 impl Default for QuantOptions {
@@ -206,6 +212,7 @@ impl Default for QuantOptions {
             max_lambda_steps: 5000,
             clamp: None,
             precision: Precision::F64,
+            entropy_budget: None,
         }
     }
 }

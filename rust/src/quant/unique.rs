@@ -96,6 +96,27 @@ impl<T: Scalar> UniqueDecomp<T> {
     pub fn weights(&self) -> Vec<T> {
         self.counts.iter().map(|&c| T::from_usize(c)).collect()
     }
+
+    /// Fold per-element importance weights into per-level weights: level
+    /// `j` receives `Σ user[i]` over the elements that map to it. The
+    /// accumulation runs in original element order and in lane precision,
+    /// so both lanes are deterministic. Replaces the multiplicity counts
+    /// in every weighted solver — with `user ≡ 1` the result equals
+    /// [`UniqueDecomp::weights`].
+    pub fn fold_importance(&self, user: &[f64]) -> Result<Vec<T>> {
+        if user.len() != self.len() {
+            return Err(Error::InvalidInput(format!(
+                "importance weights: expected {} entries, got {}",
+                self.len(),
+                user.len()
+            )));
+        }
+        let mut folded = vec![T::ZERO; self.m()];
+        for (i, &level) in self.inverse.iter().enumerate() {
+            folded[level] = folded[level] + T::from_f64(user[i]);
+        }
+        Ok(folded)
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +191,17 @@ mod tests {
             assert!(pair[0] < pair[1]);
         }
         assert_eq!(u.counts.iter().sum::<usize>(), w.len());
+    }
+
+    #[test]
+    fn fold_importance_sums_per_level_and_matches_counts_for_unit_weights() {
+        let w = [3.0, 1.0, 2.0, 1.0, 3.0];
+        let u = UniqueDecomp::new(&w).unwrap();
+        let folded = u.fold_importance(&[0.5, 2.0, 1.0, 3.0, 0.25]).unwrap();
+        assert_eq!(folded, vec![5.0, 1.0, 0.75]);
+        let unit = u.fold_importance(&[1.0; 5]).unwrap();
+        assert_eq!(unit, u.weights());
+        assert!(u.fold_importance(&[1.0; 4]).is_err());
     }
 
     #[test]

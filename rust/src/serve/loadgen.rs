@@ -153,6 +153,12 @@ fn job_request(spec: &LoadSpec, i: usize) -> WireRequest {
         ),
         _ => (QuantMethod::L1, QuantOptions { lambda1: 0.01, ..Default::default() }),
     };
+    // Slot 3 carries non-uniform importance weights, exercising the
+    // weighted native lane and the weight-salted cache keys. Drawing
+    // them after `data` from the same rng keeps slots 0..2 bit-identical
+    // to the unweighted mix.
+    let weights: Option<Vec<f64>> =
+        if i % 4 == 3 { Some((0..n).map(|_| rng.uniform(0.5, 2.0)).collect()) } else { None };
     let lane_f32 = i % 3 == 2;
     let opts = QuantOptions {
         precision: if lane_f32 { Precision::F32 } else { Precision::F64 },
@@ -163,7 +169,7 @@ fn job_request(spec: &LoadSpec, i: usize) -> WireRequest {
     } else {
         Payload::F64(data.into())
     };
-    WireRequest { method, opts, payload }
+    WireRequest { method, opts, payload, weights }
 }
 
 /// Per-worker tallies, merged after the join.
@@ -313,6 +319,26 @@ mod tests {
         assert_eq!(a.method, QuantMethod::L1LeastSquare);
         assert_eq!(job_request(&spec, 1).method, QuantMethod::KMeans);
         assert_eq!(job_request(&spec, 2).opts.precision, Precision::F32);
+    }
+
+    #[test]
+    fn slot_three_jobs_carry_deterministic_non_uniform_weights() {
+        let spec = LoadSpec::default();
+        for i in 0..4 {
+            let req = job_request(&spec, i);
+            assert_eq!(req.weights.is_some(), i % 4 == 3, "only slot 3 is weighted (job {i})");
+        }
+        let a = job_request(&spec, 3);
+        let b = job_request(&spec, 3);
+        let (wa, wb) = (a.weights.unwrap(), b.weights.unwrap());
+        assert_eq!(wa.len(), spec.n.max(4));
+        for (x, y) in wa.iter().zip(wb.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "weights are deterministic");
+        }
+        // Non-uniform, so the server's uniform-drop normalization keeps
+        // them: these jobs genuinely exercise the weighted lane.
+        assert!(wa.iter().any(|w| w.to_bits() != wa[0].to_bits()));
+        assert!(wa.iter().all(|w| w.is_finite() && *w > 0.0));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   "method": "kmeans",
 //!   "lane":   "f64",
 //!   "data":   [1.0, 2.5, 1.0],
+//!   "weights": [1.0, 3.0, 1.0],
 //!   "opts":   { "lambda1": 0.01, "target_values": 4, "seed": "0", ... }
 //! }
 //! ```
@@ -19,8 +20,11 @@
 //! JSON numbers — exact for values that originated as f32). Every
 //! [`QuantOptions`] field rides in `opts`; `seed` is a **decimal string**
 //! because a u64 exceeds the integer range a JSON number (f64) carries
-//! exactly. `clamp` is `[lo, hi]` or `null`. Omitted `opts` fields take
-//! their defaults; unknown fields are ignored.
+//! exactly. `clamp` is `[lo, hi]` or `null`; `entropy_budget` is a number
+//! (bits per value) or `null`. Omitted `opts` fields take their defaults;
+//! unknown fields are ignored. `weights` is an optional per-element
+//! importance array (always f64, one entry per `data` element) — omitted
+//! or `null` means unweighted.
 //!
 //! Result (`FrameKind::Result` payload): the compact codebook-native
 //! form — shared levels + one index per element, never a materialized
@@ -51,9 +55,15 @@
 //!         tol f64, kmeans_restarts u64, max_iters u64, seed u64,
 //!         refit u8, max_lambda_steps u64,
 //!         clamp_tag u8 (0|1) [, lo f64, hi f64],
-//!         precision u8 (0=f64 1=f32)
+//!         precision u8 (0=f64 1=f32),
+//!         entropy_budget_tag u8 (0|1) [, bits f64]
 //! | n u64 | data: n × (f64|f32 per lane)
+//! | weights_tag u8 (0|1) [, n × f64]
 //! ```
+//!
+//! The importance weights ride after the data section (always f64 — the
+//! weighted objective accumulates in the lane but the weights themselves
+//! are exact on the wire); their count must equal `n`.
 //!
 //! Result:
 //!
@@ -92,6 +102,9 @@ pub struct WireRequest {
     pub opts: QuantOptions,
     /// The vector to quantize, in its lane.
     pub payload: Payload,
+    /// Optional per-element importance weights (always f64, one entry
+    /// per payload element). `None` means unweighted.
+    pub weights: Option<Vec<f64>>,
 }
 
 /// A decoded quantization result: the compact codebook plus identity and
@@ -150,6 +163,13 @@ fn opts_to_json(o: &QuantOptions) -> Json {
             },
         ),
         ("precision", Json::Str(o.precision.id().into())),
+        (
+            "entropy_budget",
+            match o.entropy_budget {
+                None => Json::Null,
+                Some(b) => Json::Num(b),
+            },
+        ),
     ])
 }
 
@@ -206,6 +226,13 @@ fn opts_from_json(j: &Json) -> Result<QuantOptions> {
         o.precision =
             Precision::from_id(s).ok_or_else(|| e("'precision' must be \"f64\" or \"f32\""))?;
     }
+    match j.get("entropy_budget") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            o.entropy_budget =
+                Some(v.as_f64().ok_or_else(|| e("'entropy_budget' must be a number or null"))?);
+        }
+    }
     Ok(o)
 }
 
@@ -214,12 +241,16 @@ fn request_to_json(req: &WireRequest) -> Json {
         Payload::F64(v) => Json::Arr(v.iter().map(|&x| Json::Num(x)).collect()),
         Payload::F32(v) => Json::Arr(v.iter().map(|&x| Json::Num(f64::from(x))).collect()),
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("method", Json::Str(req.method.id().into())),
         ("lane", Json::Str(req.payload.precision().id().into())),
         ("data", data),
         ("opts", opts_to_json(&req.opts)),
-    ])
+    ];
+    if let Some(w) = &req.weights {
+        fields.push(("weights", Json::Arr(w.iter().map(|&x| Json::Num(x)).collect())));
+    }
+    Json::obj(fields)
 }
 
 fn request_from_json(j: &Json) -> Result<WireRequest> {
@@ -242,13 +273,24 @@ fn request_from_json(j: &Json) -> Result<WireRequest> {
         Some(o) => opts_from_json(o)?,
         None => QuantOptions::default(),
     };
+    let weights = match j.get("weights") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let arr = v.as_arr().ok_or_else(|| e("'weights' must be an array or null"))?;
+            Some(
+                arr.iter()
+                    .map(|w| w.as_f64().ok_or_else(|| e("non-numeric 'weights' element")))
+                    .collect::<Result<Vec<f64>>>()?,
+            )
+        }
+    };
     let payload = match lane {
         Precision::F64 => Payload::F64(nums.into()),
         Precision::F32 => {
             Payload::F32(nums.iter().map(|&x| x as f32).collect::<Vec<_>>().into())
         }
     };
-    Ok(WireRequest { method, opts, payload })
+    Ok(WireRequest { method, opts, payload, weights })
 }
 
 fn result_to_json(res: &WireResult) -> Json {
@@ -419,6 +461,13 @@ fn opts_to_bin(e: &mut Enc, o: &QuantOptions) {
         Precision::F64 => 0,
         Precision::F32 => 1,
     });
+    match o.entropy_budget {
+        None => e.u8(0),
+        Some(b) => {
+            e.u8(1);
+            e.f64(b);
+        }
+    }
 }
 
 fn opts_from_bin(d: &mut Dec<'_>) -> Result<QuantOptions> {
@@ -446,6 +495,11 @@ fn opts_from_bin(d: &mut Dec<'_>) -> Result<QuantOptions> {
         1 => Precision::F32,
         b => return Err(bad(d.what, &format!("bad precision byte {b}"))),
     };
+    let entropy_budget = match d.u8()? {
+        0 => None,
+        1 => Some(d.f64()?),
+        b => return Err(bad(d.what, &format!("bad entropy_budget tag {b}"))),
+    };
     Ok(QuantOptions {
         lambda1,
         lambda2,
@@ -459,6 +513,7 @@ fn opts_from_bin(d: &mut Dec<'_>) -> Result<QuantOptions> {
         max_lambda_steps,
         clamp,
         precision,
+        entropy_budget,
     })
 }
 
@@ -483,6 +538,15 @@ fn request_to_bin(req: &WireRequest) -> Vec<u8> {
             e.u64(v.len() as u64);
             for &x in v.iter() {
                 e.f32(x);
+            }
+        }
+    }
+    match &req.weights {
+        None => e.u8(0),
+        Some(w) => {
+            e.u8(1);
+            for &x in w {
+                e.f64(x);
             }
         }
     }
@@ -521,8 +585,26 @@ fn request_from_bin(buf: &[u8]) -> Result<WireRequest> {
             Payload::F32(Arc::from(v))
         }
     };
+    let weights = match d.u8()? {
+        0 => None,
+        1 => {
+            // The count is pinned to the payload length; no separate
+            // length prefix to keep mismatched weights unrepresentable
+            // on the binary wire.
+            let n = payload.len();
+            if d.pos + n * 8 > d.buf.len() {
+                return Err(bad("request", "weights section exceeds payload"));
+            }
+            let mut w = Vec::with_capacity(n);
+            for _ in 0..n {
+                w.push(d.f64()?);
+            }
+            Some(w)
+        }
+        b => return Err(bad("request", &format!("bad weights tag {b}"))),
+    };
     d.finish()?;
-    Ok(WireRequest { method, opts, payload })
+    Ok(WireRequest { method, opts, payload, weights })
 }
 
 fn result_to_bin(res: &WireResult) -> Vec<u8> {
@@ -677,6 +759,7 @@ mod tests {
             seed: u64::MAX - 17, // exceeds f64's exact integer range on purpose
             clamp: Some((-1.5, 2.5)),
             precision: lane,
+            entropy_budget: Some(1.5 + 0.1), // non-terminating binary tail
             ..Default::default()
         };
         let payload = match lane {
@@ -685,7 +768,8 @@ mod tests {
             }
             Precision::F32 => Payload::F32(vec![1.25f32, -0.5, 3.75, 0.3].into()),
         };
-        WireRequest { method: QuantMethod::L1LeastSquare, opts, payload }
+        let weights = Some((0..payload.len()).map(|i| 0.5 + 0.1 * i as f64).collect());
+        WireRequest { method: QuantMethod::L1LeastSquare, opts, payload, weights }
     }
 
     fn payload_bits(p: &Payload) -> Vec<u64> {
@@ -711,8 +795,34 @@ mod tests {
                     crate::quant::api::opts_bits_eq(&back.opts, &req.opts),
                     "{codec:?}/{lane:?}: option bits"
                 );
+                let (wa, wb) = (back.weights.as_ref().unwrap(), req.weights.as_ref().unwrap());
+                assert_eq!(
+                    wa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    wb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{codec:?}/{lane:?}: weight bits"
+                );
             }
         }
+    }
+
+    #[test]
+    fn unweighted_requests_carry_no_weights_section() {
+        for codec in [Codec::Json, Codec::Binary] {
+            let mut req = sample_request(Precision::F64);
+            req.weights = None;
+            req.opts.entropy_budget = None;
+            let back = decode_request(&encode_request(&req, codec), codec).unwrap();
+            assert!(back.weights.is_none(), "{codec:?}");
+            assert!(back.opts.entropy_budget.is_none(), "{codec:?}");
+        }
+        // JSON also tolerates explicit nulls.
+        let req = decode_request(
+            br#"{"method":"kmeans","data":[1.0,2.0],"weights":null,"opts":{"entropy_budget":null}}"#,
+            Codec::Json,
+        )
+        .unwrap();
+        assert!(req.weights.is_none());
+        assert!(req.opts.entropy_budget.is_none());
     }
 
     #[test]
@@ -774,10 +884,26 @@ mod tests {
             .is_err(),
             "seed must be a decimal string"
         );
+        assert!(
+            decode_request(br#"{"method":"kmeans","data":[1],"weights":["x"]}"#, Codec::Json)
+                .is_err(),
+            "non-numeric weight"
+        );
+        assert!(
+            decode_request(br#"{"method":"kmeans","data":[1],"weights":3}"#, Codec::Json)
+                .is_err(),
+            "weights must be an array"
+        );
         // Binary-specific: a valid prefix with trailing garbage.
         let mut good = encode_request(&sample_request(Precision::F64), Codec::Binary);
         good.push(0);
         assert!(decode_request(&good, Codec::Binary).is_err(), "trailing byte");
+        // A bad weights tag (the final byte of an unweighted request).
+        let mut unweighted = sample_request(Precision::F64);
+        unweighted.weights = None;
+        let mut bin_req = encode_request(&unweighted, Codec::Binary);
+        *bin_req.last_mut().unwrap() = 2;
+        assert!(decode_request(&bin_req, Codec::Binary).is_err(), "bad weights tag");
         // Truncation at every prefix either errors or never panics.
         let full = encode_request(&sample_request(Precision::F64), Codec::Binary);
         for cut in 0..full.len() {

@@ -308,12 +308,18 @@ fn handle_quant(shared: &Shared, frame: &Frame) -> (Frame, bool) {
             false,
         );
     }
-    let req = match &wire.payload {
+    let mut req = match &wire.payload {
         Payload::F64(v) => QuantRequest::shared(Arc::clone(v)),
         Payload::F32(v) => QuantRequest::shared_f32(Arc::clone(v)),
     }
     .method(wire.method)
     .options(wire.opts);
+    if let Some(w) = wire.weights {
+        // Malformed weights (length mismatch, NaN, negative, zero-sum)
+        // surface as an admission-time InvalidInput below — a
+        // request-level error frame; the connection survives.
+        req = req.weights(w);
+    }
     match shared.coord.try_submit_request_as(req, tenant) {
         Ok((id, rx)) => match rx.recv() {
             Ok(result) => match result.outcome {

@@ -6,7 +6,10 @@
 //! codebook round-trip property on both precision lanes. The ISSUE-8
 //! result-cache invisibility pin lives at the bottom: a memoizing
 //! [`Quantizer::caching`] facade must match the stateless facade bit for
-//! bit across every (method, plan, lane).
+//! bit across every (method, plan, lane). The ISSUE-10 pin sits beside
+//! it: a uniform importance vector through the weighted front door is
+//! bitwise-identical to the unweighted solve for every (method, plan,
+//! lane).
 
 use sqlsq::data::rng::Pcg32;
 use sqlsq::linalg::matrix::Matrix;
@@ -336,6 +339,61 @@ fn coordinator_legacy_submits_match_request_front_door() {
         .into_output64();
     assert_outputs_match(&via_request32, &legacy32, "f32 request submit");
     c.shutdown();
+}
+
+#[test]
+fn uniform_weights_are_bitwise_identical_to_unweighted_for_every_method_plan_lane() {
+    // ISSUE-10 acceptance pin: a uniform importance vector (any constant,
+    // not just 1.0) is normalized away before dispatch, so the weighted
+    // front door must reproduce the unweighted solve bit for bit — for
+    // every method (including L0/TvExact, which reject *non-uniform*
+    // weights), both precision lanes, and the single-vector plans.
+    let data = clustered(64, 21);
+    let plans: [(&str, fn(QuantRequest) -> QuantRequest); 3] = [
+        ("one-shot", |r| r),
+        ("target-count", |r| r.target_count(5)),
+        ("warm-sweep", |r| r.sweep(vec![0.02, 0.01, 0.005])),
+    ];
+    let bits = |v: Vec<f64>| -> Vec<u64> { v.into_iter().map(f64::to_bits).collect() };
+    for method in QuantMethod::ALL {
+        for lane in [Precision::F64, Precision::F32] {
+            for (plan_name, plan) in plans {
+                let ctx = format!("{method:?}/{lane:?}/{plan_name}");
+                let build = || {
+                    plan(
+                        QuantRequest::slice(&data)
+                            .method(method)
+                            .options(QuantOptions { precision: lane, ..test_opts() }),
+                    )
+                };
+                let plain = Quantizer::new().run(&build()).unwrap();
+                let uniform =
+                    Quantizer::new().run(&build().weights(vec![2.5; data.len()])).unwrap();
+                assert_eq!(uniform.items.len(), plain.items.len(), "{ctx}: item count");
+                for (i, (g, c)) in uniform.items.iter().zip(&plain.items).enumerate() {
+                    let g = g.as_ref().unwrap_or_else(|e| panic!("{ctx}[{i}] weighted: {e}"));
+                    let c = c.as_ref().unwrap_or_else(|e| panic!("{ctx}[{i}]: {e}"));
+                    assert_eq!(g.precision(), c.precision(), "{ctx}[{i}]: lane");
+                    assert_eq!(
+                        bits(g.materialize_f64()),
+                        bits(c.materialize_f64()),
+                        "{ctx}[{i}]: value bits"
+                    );
+                    assert_eq!(
+                        g.l2_loss().to_bits(),
+                        c.l2_loss().to_bits(),
+                        "{ctx}[{i}]: loss bits"
+                    );
+                    assert_eq!(
+                        g.diag().iterations,
+                        c.diag().iterations,
+                        "{ctx}[{i}]: iterations"
+                    );
+                    assert_eq!(g.diag().nnz, c.diag().nnz, "{ctx}[{i}]: nnz");
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -61,7 +61,19 @@ fn raw_job(
     opts: QuantOptions,
 ) -> (Job, mpsc::Receiver<JobResult>) {
     let (tx, rx) = mpsc::channel();
-    (Job { id, data, method, opts, submitted: Instant::now(), respond: tx, cache: None }, rx)
+    (
+        Job {
+            id,
+            data,
+            method,
+            opts,
+            weights: None,
+            submitted: Instant::now(),
+            respond: tx,
+            cache: None,
+        },
+        rx,
+    )
 }
 
 #[test]

@@ -1,0 +1,356 @@
+//! Weighted-objective differential suite (ISSUE-10 acceptance): the
+//! importance-weighted solvers are pinned against brute-force references
+//! of the weighted objective Σ wᵢ(xᵢ−qᵢ)²:
+//!
+//! * **DP optimality** — weighted `KMeansExact` matches an independent
+//!   exhaustive search over contiguous partitions of the sorted distinct
+//!   values, across seeds × both precision lanes;
+//! * **weights help** — on the weighted objective, the weighted solve
+//!   never loses to the unweighted solve, and strictly wins on a
+//!   constructed skewed instance;
+//! * **weighted refit fixed point** — every level of a weighted
+//!   `L1LeastSquare` / `KMeansExact` solution equals the weighted mean
+//!   of the elements assigned to it;
+//! * **zero weights are free** — zero-weight elements never constrain
+//!   the codebook;
+//! * **entropy-constrained merge** — `entropy_budget` is respected for
+//!   every budget, monotone in the budget, and a bitwise no-op when the
+//!   budget already holds;
+//! * **unsupported methods refuse** — `L0` / `TvExact` reject weights
+//!   with `InvalidInput` instead of silently ignoring them.
+
+use sqlsq::data::rng::Pcg32;
+use sqlsq::quant::{QuantMethod, QuantOptions, QuantRequest, Quantizer};
+use sqlsq::Error;
+
+fn weighted_loss(data: &[f64], w: &[f64], q: &[f64]) -> f64 {
+    data.iter()
+        .zip(q)
+        .zip(w)
+        .map(|((x, q), w)| w * (x - q) * (x - q))
+        .sum()
+}
+
+/// Exhaustive reference for the optimal k-level weighted quantizer.
+/// With non-negative weights the optimal 1-D clusters are contiguous on
+/// the sorted distinct values, so the search enumerates every way to cut
+/// them into at most `k` groups and prices each group at its weighted
+/// mean. Deliberately naive — independent of the production DP.
+fn brute_force_optimum(data: &[f64], w: &[f64], k: usize) -> f64 {
+    let mut pts: Vec<(f64, f64)> = data.iter().copied().zip(w.iter().copied()).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut agg: Vec<(f64, f64)> = Vec::new();
+    for (v, wi) in pts {
+        match agg.last_mut() {
+            Some(last) if last.0 == v => last.1 += wi,
+            _ => agg.push((v, wi)),
+        }
+    }
+    fn group_cost(g: &[(f64, f64)]) -> f64 {
+        let tw: f64 = g.iter().map(|p| p.1).sum();
+        if tw <= 0.0 {
+            return 0.0;
+        }
+        let mu = g.iter().map(|p| p.0 * p.1).sum::<f64>() / tw;
+        g.iter().map(|p| p.1 * (p.0 - mu) * (p.0 - mu)).sum()
+    }
+    fn best(agg: &[(f64, f64)], k: usize) -> f64 {
+        if agg.len() <= k {
+            return 0.0;
+        }
+        if k == 1 {
+            return group_cost(agg);
+        }
+        let mut best_cost = f64::INFINITY;
+        for cut in 1..agg.len() {
+            let c = group_cost(&agg[..cut]) + best(&agg[cut..], k - 1);
+            if c < best_cost {
+                best_cost = c;
+            }
+        }
+        best_cost
+    }
+    best(&agg, k.max(1))
+}
+
+/// A small weighted instance: `m` well-separated distinct values, some
+/// duplicated, with positive weights (and one zero weight per instance).
+fn small_instance(seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg32::seeded(seed);
+    let m = 6 + (seed as usize % 4); // 6..=9 distinct values
+    let mut values: Vec<f64> = (0..m).map(|j| j as f64 + rng.uniform(0.05, 0.45)).collect();
+    // Duplicate a few values so multiplicity counts fold with weights.
+    for _ in 0..3 {
+        let pick = values[(rng.next_u32() as usize) % m];
+        values.push(pick);
+    }
+    let weights: Vec<f64> = (0..values.len())
+        .map(|i| if i == 2 { 0.0 } else { rng.uniform(0.1, 4.0) })
+        .collect();
+    (values, weights)
+}
+
+fn run_weighted(
+    data: &[f64],
+    weights: Option<&[f64]>,
+    method: QuantMethod,
+    opts: &QuantOptions,
+) -> Vec<f64> {
+    let mut req = QuantRequest::vector(data.to_vec()).method(method).options(opts.clone());
+    if let Some(w) = weights {
+        req = req.weights(w.to_vec());
+    }
+    Quantizer::new()
+        .run(&req)
+        .expect("weighted solve")
+        .into_single()
+        .expect("single item")
+        .materialize_f64()
+}
+
+// ---------------------------------------------------------------------
+// DP optimality vs brute force, both lanes
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_kmeans_exact_matches_the_brute_force_optimum_f64() {
+    for seed in 0..6u64 {
+        let (data, wts) = small_instance(seed);
+        for k in [2usize, 3] {
+            let opts = QuantOptions { target_values: k, ..Default::default() };
+            let q = run_weighted(&data, Some(&wts), QuantMethod::KMeansExact, &opts);
+            let got = weighted_loss(&data, &wts, &q);
+            let want = brute_force_optimum(&data, &wts, k);
+            assert!(
+                (got - want).abs() <= 1e-8 * want.max(1.0),
+                "seed {seed} k={k}: DP {got:.12e} vs brute force {want:.12e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn weighted_kmeans_exact_matches_the_brute_force_optimum_f32_lane() {
+    use sqlsq::quant::Precision;
+    for seed in 0..4u64 {
+        let (data, wts) = small_instance(100 + seed);
+        // The f32 lane narrows the data first; the reference must see the
+        // exact values the solver sees.
+        let narrowed: Vec<f64> = data.iter().map(|&x| x as f32 as f64).collect();
+        let opts = QuantOptions {
+            target_values: 3,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        let mut req = QuantRequest::vector_f32(data.iter().map(|&x| x as f32).collect())
+            .method(QuantMethod::KMeansExact)
+            .options(opts);
+        req = req.weights(wts.clone());
+        let item = Quantizer::new().run(&req).unwrap().into_single().unwrap();
+        let q = item.materialize_f64();
+        let got = weighted_loss(&narrowed, &wts, &q);
+        let want = brute_force_optimum(&narrowed, &wts, 3);
+        // f32 arithmetic in the fold + DP: near-optimal, not bit-exact.
+        assert!(
+            (got - want).abs() <= 1e-3 * want.max(1e-6),
+            "seed {seed}: f32 DP {got:.9e} vs brute force {want:.9e}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Weights help on the weighted objective
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_solve_never_loses_to_unweighted_on_the_weighted_objective() {
+    for seed in 0..6u64 {
+        let (data, wts) = small_instance(200 + seed);
+        let opts = QuantOptions { target_values: 2, ..Default::default() };
+        let q_w = run_weighted(&data, Some(&wts), QuantMethod::KMeansExact, &opts);
+        let q_u = run_weighted(&data, None, QuantMethod::KMeansExact, &opts);
+        let lw = weighted_loss(&data, &wts, &q_w);
+        let lu = weighted_loss(&data, &wts, &q_u);
+        assert!(
+            lw <= lu + 1e-10 * lu.max(1.0),
+            "seed {seed}: weighted DP must not lose on its own objective \
+             ({lw:.9e} vs {lu:.9e})"
+        );
+    }
+}
+
+#[test]
+fn skewed_importance_strictly_beats_the_unweighted_codebook() {
+    // Partition {0}, {0.55, 1.0} is optimal both ways, but the weighted
+    // level of the second group sits at the weighted mean — upweighting
+    // 0.55 by 10x drags it from 0.775 toward 0.55, a strict win.
+    let data = vec![0.0, 0.55, 1.0];
+    let wts = vec![1.0, 10.0, 1.0];
+    let opts = QuantOptions { target_values: 2, ..Default::default() };
+    let q_w = run_weighted(&data, Some(&wts), QuantMethod::KMeansExact, &opts);
+    let q_u = run_weighted(&data, None, QuantMethod::KMeansExact, &opts);
+    let lw = weighted_loss(&data, &wts, &q_w);
+    let lu = weighted_loss(&data, &wts, &q_u);
+    assert!(
+        lw < lu * 0.9,
+        "10x importance on the mid value must strictly improve the weighted \
+         objective: weighted {lw:.6e} vs unweighted {lu:.6e}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Weighted refit fixed point: levels sit at weighted means
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_levels_are_the_weighted_means_of_their_elements() {
+    for (method, opts) in [
+        (QuantMethod::KMeansExact, QuantOptions { target_values: 3, ..Default::default() }),
+        (
+            QuantMethod::L1LeastSquare,
+            QuantOptions { lambda1: 0.3, target_values: 64, ..Default::default() },
+        ),
+    ] {
+        for seed in 0..4u64 {
+            let (data, wts) = small_instance(300 + seed);
+            let q = run_weighted(&data, Some(&wts), method, &opts);
+            // Group elements by their assigned level.
+            let mut groups: Vec<(f64, f64, f64)> = Vec::new(); // (level, Σwx, Σw)
+            for ((x, qi), w) in data.iter().zip(&q).zip(&wts) {
+                match groups.iter_mut().find(|g| g.0.to_bits() == qi.to_bits()) {
+                    Some(g) => {
+                        g.1 += w * x;
+                        g.2 += w;
+                    }
+                    None => groups.push((*qi, w * x, *w)),
+                }
+            }
+            for (level, swx, sw) in groups {
+                if sw <= 0.0 {
+                    continue; // zero-mass level: unconstrained
+                }
+                let mean = swx / sw;
+                assert!(
+                    (level - mean).abs() <= 1e-8 * mean.abs().max(1.0),
+                    "{method:?} seed {seed}: level {level:.12} vs weighted mean {mean:.12}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_weight_elements_do_not_constrain_the_codebook() {
+    // An enormous outlier with zero importance: the two levels serve the
+    // weighted elements exactly, and the weighted loss is zero.
+    let data = vec![0.0, 0.0, 1.0, 1.0, 100.0];
+    let wts = vec![1.0, 1.0, 1.0, 1.0, 0.0];
+    let opts = QuantOptions { target_values: 2, ..Default::default() };
+    let q = run_weighted(&data, Some(&wts), QuantMethod::KMeansExact, &opts);
+    assert!(
+        weighted_loss(&data, &wts, &q) <= 1e-18,
+        "zero-weight outlier must not displace the levels: {q:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Entropy-constrained merge through the facade
+// ---------------------------------------------------------------------
+
+/// Skewed data: 8 distinct values with very unequal multiplicities, so
+/// the index entropy is well below log2(8) and merges have real choices.
+fn skewed_data() -> Vec<f64> {
+    let mut data = Vec::new();
+    for (j, count) in [40usize, 20, 10, 8, 4, 2, 1, 1].iter().enumerate() {
+        data.extend(std::iter::repeat(j as f64 * 0.7).take(*count));
+    }
+    data
+}
+
+fn run_with_budget(budget: Option<f64>) -> sqlsq::quant::Item {
+    let mut req = QuantRequest::vector(skewed_data())
+        .method(QuantMethod::KMeans)
+        .options(QuantOptions { target_values: 8, seed: 4, ..Default::default() });
+    if let Some(b) = budget {
+        req = req.entropy_budget(b);
+    }
+    Quantizer::new().run(&req).unwrap().into_single().unwrap()
+}
+
+#[test]
+fn entropy_budget_is_respected_for_every_budget() {
+    for budget in [0.0, 0.5, 1.0, 1.5, 2.0] {
+        let item = run_with_budget(Some(budget));
+        let stats = item.compression(8);
+        assert!(
+            stats.index_entropy <= budget + 1e-9,
+            "budget {budget}: entropy {:.6} over budget ({} levels)",
+            stats.index_entropy,
+            item.distinct_values()
+        );
+    }
+    // Budget 0 forces a single level.
+    assert_eq!(run_with_budget(Some(0.0)).distinct_values(), 1);
+}
+
+#[test]
+fn entropy_merge_is_monotone_in_the_budget() {
+    let budgets = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0];
+    let mut prev_loss = f64::INFINITY;
+    let mut prev_levels = 0usize;
+    for &b in &budgets {
+        let item = run_with_budget(Some(b));
+        let loss = item.l2_loss();
+        assert!(
+            loss <= prev_loss + 1e-12,
+            "budget {b}: loss {loss:.9e} must not exceed tighter-budget loss {prev_loss:.9e}"
+        );
+        assert!(
+            item.distinct_values() >= prev_levels,
+            "budget {b}: level count must not shrink as the budget loosens"
+        );
+        prev_loss = loss;
+        prev_levels = item.distinct_values();
+    }
+}
+
+#[test]
+fn a_loose_budget_is_a_bitwise_no_op() {
+    let plain = run_with_budget(None);
+    let loose = run_with_budget(Some(64.0));
+    let (a, b) = (plain.materialize_f64(), loose.materialize_f64());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "loose budget must not touch the solution");
+    }
+    assert_eq!(plain.l2_loss().to_bits(), loose.l2_loss().to_bits());
+}
+
+// ---------------------------------------------------------------------
+// Unsupported methods refuse weights
+// ---------------------------------------------------------------------
+
+#[test]
+fn l0_and_tv_exact_reject_importance_weights() {
+    let (data, wts) = small_instance(400);
+    for method in [QuantMethod::L0, QuantMethod::TvExact] {
+        let req = QuantRequest::vector(data.clone())
+            .method(method)
+            .options(QuantOptions { target_values: 3, ..Default::default() })
+            .weights(wts.clone());
+        // The rejection happens inside the solve, so it surfaces as the
+        // (single) item's error, not as a request-level error.
+        let err = Quantizer::new()
+            .run(&req)
+            .expect("request shape is valid")
+            .into_single()
+            .err()
+            .unwrap_or_else(|| panic!("{method:?} must refuse weights"));
+        match err {
+            Error::InvalidInput(msg) => {
+                assert!(msg.contains("weights"), "{method:?}: unexpected message {msg}")
+            }
+            other => panic!("{method:?}: wrong error kind {other:?}"),
+        }
+    }
+}

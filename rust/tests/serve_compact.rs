@@ -138,6 +138,7 @@ fn bruteforce_stats(values: &[f64], requested: usize, dense_elem_bytes: usize) -
         bits_per_idx_packed: packed_bits,
         bits_per_value: compact as f64 * 8.0 / n,
         index_entropy: entropy,
+        entropy_coded_bytes: (n * entropy / 8.0).ceil() as usize + k * 4,
         compact_bytes: compact,
         dense_bytes: dense,
         byte_ratio: dense as f64 / compact as f64,

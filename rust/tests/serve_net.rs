@@ -15,7 +15,11 @@
 //! * **fairness** — a flooding tenant exhausts only its own token
 //!   bucket; a polite tenant's requests all complete;
 //! * **tenant cache partitioning** — with `cache_shared false`, one
-//!   tenant's cached result is invisible to another over the wire.
+//!   tenant's cached result is invisible to another over the wire;
+//! * **weighted requests** (ISSUE-10) — per-element importance weights
+//!   round-trip bitwise on both codecs, malformed weights get an error
+//!   reply without killing the connection, and weighted results cache
+//!   under their own fingerprint (uniform weights alias unweighted).
 
 use sqlsq::config::{Config, Engine};
 use sqlsq::coordinator::{Coordinator, Payload};
@@ -91,6 +95,7 @@ fn loopback_results_are_bitwise_identical_to_in_process_on_both_codecs_and_lanes
                         Precision::F64 => Payload::F64(data.clone().into()),
                         Precision::F32 => Payload::F32(data32.clone().into()),
                     },
+                    weights: None,
                 };
                 let tag = format!("{method:?}/{lane:?}/{codec:?}");
                 let WireReply::Result(r) = client.quant(&wire_req).unwrap() else {
@@ -232,6 +237,7 @@ fn tiny_queue_flood_sheds_with_hints_and_drain_completes_every_accepted_job() {
                         method: QuantMethod::IterativeL1,
                         opts: QuantOptions { target_values: 6, ..Default::default() },
                         payload: Payload::F64(data.into()),
+                        weights: None,
                     };
                     match client.quant(&req).expect("transport must stay up") {
                         WireReply::Result(_) => completed += 1,
@@ -293,6 +299,7 @@ fn flooding_tenant_exhausts_only_its_own_bucket() {
                     ..Default::default()
                 },
                 payload: Payload::F64(clustered(64, 50 + i).into()),
+                weights: None,
             };
             match client.quant(&req).unwrap() {
                 WireReply::Result(_) => completed += 1,
@@ -310,6 +317,7 @@ fn flooding_tenant_exhausts_only_its_own_bucket() {
             method: QuantMethod::KMeans,
             opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
             payload: Payload::F64(clustered(64, 900 + i).into()),
+            weights: None,
         };
         match polite.quant(&req).unwrap() {
             WireReply::Result(_) => polite_done += 1,
@@ -341,6 +349,7 @@ fn partitioned_cache_keeps_tenants_results_invisible_to_each_other_over_the_wire
         method: QuantMethod::KMeans,
         opts: QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() },
         payload: Payload::F64(clustered(64, 3).into()),
+        weights: None,
     };
     let mut client = Client::connect(addr, Codec::Binary, None).unwrap();
 
@@ -358,5 +367,165 @@ fn partitioned_cache_keeps_tenants_results_invisible_to_each_other_over_the_wire
         "identical payload, different tenant: partitioned cache must re-solve"
     );
     assert_eq!(serve(&mut client, "alice", &req), "cache", "alice's resubmit hits");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// 6. Weighted requests over the wire (ISSUE-10)
+// ---------------------------------------------------------------------
+
+fn importance(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 0.25 + (i % 9) as f64 * 0.5).collect()
+}
+
+#[test]
+fn weighted_requests_round_trip_bitwise_on_both_codecs_and_lanes() {
+    let baseline = Coordinator::start(native_config()).unwrap();
+    let server = start_server(native_config(), ServeConfig::default());
+    let addr = server.addr();
+
+    let data = clustered(96, 21);
+    let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    let wts = importance(data.len());
+    for lane in [Precision::F64, Precision::F32] {
+        let opts = QuantOptions {
+            target_values: 4,
+            kmeans_restarts: 2,
+            seed: 7,
+            precision: lane,
+            ..Default::default()
+        };
+
+        // In-process weighted reference result.
+        let req = match lane {
+            Precision::F64 => QuantRequest::vector(data.clone()),
+            Precision::F32 => QuantRequest::vector_f32(data32.clone()),
+        }
+        .method(QuantMethod::KMeans)
+        .options(opts.clone())
+        .weights(wts.clone());
+        let (_, rx) = baseline.submit_request(req).unwrap();
+        let out = rx.recv().unwrap().outcome.expect("baseline weighted solve");
+        let cb = out.codebook();
+
+        for codec in [Codec::Json, Codec::Binary] {
+            let mut client = Client::connect(addr, codec, Some("wident")).unwrap();
+            let wire_req = WireRequest {
+                method: QuantMethod::KMeans,
+                opts: opts.clone(),
+                payload: match lane {
+                    Precision::F64 => Payload::F64(data.clone().into()),
+                    Precision::F32 => Payload::F32(data32.clone().into()),
+                },
+                weights: Some(wts.clone()),
+            };
+            let tag = format!("weighted/{lane:?}/{codec:?}");
+            let WireReply::Result(r) = client.quant(&wire_req).unwrap() else {
+                panic!("{tag}: expected a result");
+            };
+            assert_eq!(r.lane, lane, "{tag}");
+            assert_eq!(r.levels.len(), cb.levels.len(), "{tag}: level count");
+            for (a, b) in r.levels.iter().zip(&cb.levels) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: level bits");
+            }
+            assert_eq!(r.indices, cb.indices, "{tag}: indices");
+            assert_eq!(r.l2_loss.to_bits(), out.l2_loss().to_bits(), "{tag}: loss bits");
+        }
+    }
+    server.shutdown();
+    baseline.shutdown();
+}
+
+#[test]
+fn malformed_weights_error_over_the_wire_and_the_connection_survives() {
+    let server = start_server(native_config(), ServeConfig::default());
+    let mut client = Client::connect(server.addr(), Codec::Binary, None).unwrap();
+
+    let data = clustered(64, 31);
+    let opts = QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() };
+    let mk = |weights: Option<Vec<f64>>| WireRequest {
+        method: QuantMethod::KMeans,
+        opts: opts.clone(),
+        payload: Payload::F64(data.clone().into()),
+        weights,
+    };
+
+    // JSON codec can express a length mismatch (binary pins the count
+    // to the payload length, making it unrepresentable on the wire).
+    let mut jclient = Client::connect(server.addr(), Codec::Json, None).unwrap();
+    let short = mk(Some(vec![1.0; data.len() - 1]));
+    match jclient.quant(&short).unwrap() {
+        WireReply::Error(e) => assert!(e.contains("weights"), "unexpected message: {e}"),
+        other => panic!("length-mismatched weights must error, got {other:?}"),
+    }
+
+    // NaN, negative, and all-zero weights are admission errors on any
+    // codec: an error frame, not a dropped connection.
+    for bad in [
+        {
+            let mut w = vec![1.0; data.len()];
+            w[5] = f64::NAN;
+            w
+        },
+        {
+            let mut w = vec![1.0; data.len()];
+            w[0] = -2.0;
+            w
+        },
+        vec![0.0; data.len()],
+    ] {
+        match client.quant(&mk(Some(bad))).unwrap() {
+            WireReply::Error(e) => assert!(e.contains("weights"), "unexpected message: {e}"),
+            other => panic!("malformed weights must error, got {other:?}"),
+        }
+    }
+
+    // Both connections still serve a valid request afterwards.
+    for c in [&mut client, &mut jclient] {
+        match c.quant(&mk(None)).unwrap() {
+            WireReply::Result(_) => {}
+            other => panic!("connection must survive malformed weights: {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn weighted_results_cache_under_their_own_fingerprint_over_the_wire() {
+    let server = start_server(native_config(), ServeConfig::default());
+    let mut client = Client::connect(server.addr(), Codec::Binary, None).unwrap();
+
+    let data = clustered(64, 41);
+    let opts = QuantOptions { target_values: 4, kmeans_restarts: 1, ..Default::default() };
+    let mk = |weights: Option<Vec<f64>>| WireRequest {
+        method: QuantMethod::KMeans,
+        opts: opts.clone(),
+        payload: Payload::F64(data.clone().into()),
+        weights,
+    };
+    let serve = |c: &mut Client, req: &WireRequest| -> String {
+        match c.quant(req).unwrap() {
+            WireReply::Result(r) => r.served_by,
+            other => panic!("expected result, got {other:?}"),
+        }
+    };
+
+    assert_eq!(serve(&mut client, &mk(None)), "native", "unweighted cold solve");
+    assert_eq!(
+        serve(&mut client, &mk(Some(importance(data.len())))),
+        "native",
+        "same payload with weights is a different job: cache must miss"
+    );
+    assert_eq!(
+        serve(&mut client, &mk(Some(importance(data.len())))),
+        "cache",
+        "identical weighted resubmit hits"
+    );
+    assert_eq!(serve(&mut client, &mk(None)), "cache", "unweighted entry is untouched");
+    assert_eq!(
+        serve(&mut client, &mk(Some(vec![3.0; data.len()]))),
+        "cache",
+        "uniform weights alias the unweighted cache entry"
+    );
     server.shutdown();
 }
